@@ -1,0 +1,61 @@
+//! Quickstart: run the paper's core experiment in three steps.
+//!
+//! 1. Execute a *functional* fused All-Gather + GEMM on a real multi-rank
+//!    node (threads + shared symmetric heap) and check it against the
+//!    dense reference — proving the fused protocols compute the right
+//!    answer.
+//! 2. Ask the calibrated performance model how the same protocols behave
+//!    at the paper's scale (Figure 9 point M=4096).
+//! 3. Print where the time goes (the Three Taxes) per strategy.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use taxfree::config::{presets, AgGemmConfig};
+use taxfree::coordinator::{ag_gemm, AgGemmStrategy};
+use taxfree::tensor::linalg::matmul;
+use taxfree::tensor::Tensor;
+use taxfree::util::Prng;
+use taxfree::workloads::ag_gemm as ag_sim;
+
+fn main() {
+    // ---- 1) functional fused execution on a 4-rank node ----
+    let cfg = AgGemmConfig { m: 16, n: 32, k: 64, world: 4, block_m: 8, block_n: 8, block_k: 8 };
+    let mut rng = Prng::new(42);
+    let mut a = Tensor::rand(&[cfg.m, cfg.k], 1.0, &mut rng);
+    let mut b = Tensor::rand(&[cfg.k, cfg.n], 1.0, &mut rng);
+    a.quantize_f16();
+    b.quantize_f16();
+    let expect = matmul(&a, &b);
+
+    println!("== functional node: C = all_gather(A_shards) . B on 4 ranks ==");
+    for strategy in AgGemmStrategy::ALL {
+        let outs = ag_gemm::run(&cfg, strategy, &a, &b, 1);
+        let worst = outs
+            .iter()
+            .map(|c| c.max_abs_diff(&expect))
+            .fold(0.0f32, f32::max);
+        println!("  {:<10} max |C - C_ref| over all ranks = {:.2e}  OK", strategy.name(), worst);
+    }
+
+    // ---- 2) the same protocols at paper scale, on the timing model ----
+    println!("\n== modeled MI325X node, paper shape M=4096, N=28672, K=8192, W=8 ==");
+    let hw = presets::mi325x();
+    let paper = AgGemmConfig::paper_fig9(4096);
+    for strategy in AgGemmStrategy::ALL {
+        let ms = ag_sim::mean_latency_s(&paper, &hw, strategy, 7, 50) * 1e3;
+        println!("  {:<10} {:.3} ms", strategy.name(), ms);
+    }
+
+    // ---- 3) the Three Taxes breakdown ----
+    println!();
+    for strategy in AgGemmStrategy::ALL {
+        let r = ag_sim::simulate(&paper, &hw, strategy, 7);
+        r.ledger
+            .breakdown_table(&format!("three taxes — {}", strategy.name()))
+            .print();
+        println!();
+    }
+    println!("see `taxfree experiments all` for every figure in the paper.");
+}

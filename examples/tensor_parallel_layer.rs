@@ -1,0 +1,76 @@
+//! Tensor-parallel layer forward: the workload that motivates AG+GEMM
+//! (paper §4.1.1 — "tensor parallelism, where partial results or weights
+//! must be collected from all the ranks before a matrix multiply").
+//!
+//! An activation A is produced column-sharded across ranks by a previous
+//! row-parallel layer; the next layer needs the full activation times its
+//! weight: C = all_gather(A) · B. We run the layer functionally with every
+//! strategy, verify bit-agreement between pull and push, then sweep M on
+//! the performance model to show where each strategy wins — the Figure 9
+//! story told through one layer.
+//!
+//! ```bash
+//! cargo run --release --offline --example tensor_parallel_layer
+//! ```
+
+use taxfree::config::{presets, AgGemmConfig};
+use taxfree::coordinator::{ag_gemm, AgGemmStrategy};
+use taxfree::tensor::linalg::matmul;
+use taxfree::tensor::Tensor;
+use taxfree::util::{Prng, Table};
+use taxfree::workloads::ag_gemm as sim;
+
+fn main() {
+    // a "layer": batch-of-24 tokens, hidden 96 sharded over 8 ranks,
+    // output features 48
+    let cfg =
+        AgGemmConfig { m: 24, n: 48, k: 96, world: 8, block_m: 8, block_n: 8, block_k: 4 };
+    let mut rng = Prng::new(2025);
+    let mut act = Tensor::rand(&[cfg.m, cfg.k], 1.0, &mut rng);
+    let mut w = Tensor::rand(&[cfg.k, cfg.n], 0.2, &mut rng);
+    act.quantize_f16();
+    w.quantize_f16();
+    let expect = matmul(&act, &w);
+
+    println!("== TP layer forward on 8 functional ranks ==");
+    let pull = ag_gemm::run(&cfg, AgGemmStrategy::Pull, &act, &w, 1);
+    let push = ag_gemm::run(&cfg, AgGemmStrategy::Push, &act, &w, 1);
+    let base = ag_gemm::run(&cfg, AgGemmStrategy::BaselineBsp, &act, &w, 1);
+    assert_eq!(pull, push, "pull and push must agree bitwise (same tile kernel)");
+    for (name, outs) in [("baseline", &base), ("pull", &pull), ("push", &push)] {
+        let worst = outs.iter().map(|c| c.max_abs_diff(&expect)).fold(0.0f32, f32::max);
+        println!("  {name:<9} max error {:.2e} on every rank", worst);
+    }
+
+    // strategy-selection sweep on the model: which implementation should a
+    // TP framework pick per batch size?
+    println!("\n== strategy selection vs batch size (modeled MI325X, paper N/K) ==");
+    let hw = presets::mi325x();
+    let mut table = Table::new("recommended AG+GEMM strategy per M")
+        .header(vec!["M (batch)", "baseline ms", "pull ms", "push ms", "pick"]);
+    for m in [1usize, 8, 32, 128, 512, 2048, 8192] {
+        let c = AgGemmConfig::paper_fig9(m);
+        let ms = |s| sim::mean_latency_s(&c, &hw, s, 11, 30) * 1e3;
+        let (b, pl, ps) = (
+            ms(AgGemmStrategy::BaselineBsp),
+            ms(AgGemmStrategy::Pull),
+            ms(AgGemmStrategy::Push),
+        );
+        let pick = if b <= pl && b <= ps {
+            "baseline"
+        } else if pl <= ps {
+            "pull"
+        } else {
+            "push"
+        };
+        table.row(vec![
+            m.to_string(),
+            format!("{b:.4}"),
+            format!("{pl:.4}"),
+            format!("{ps:.4}"),
+            pick.to_string(),
+        ]);
+    }
+    table.print();
+    println!("\nmatches paper §5.2: pull at small M, torch window at 8..64, push beyond.");
+}

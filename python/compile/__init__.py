@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 JAX model + L1 Pallas kernels + AOT driver.
+
+Never imported at runtime — `make artifacts` runs once and the Rust binary
+consumes artifacts/*.hlo.txt through PJRT.
+"""

@@ -1,0 +1,1 @@
+"""L1 Pallas kernels (interpret mode) and their pure-jnp oracles."""

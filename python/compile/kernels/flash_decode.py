@@ -1,0 +1,144 @@
+"""L1 Pallas flash-decode kernels: per-shard partial attention with online
+softmax, and the global combine.
+
+This is the compute hot-spot of the paper's distributed Flash Decode
+(§4.2.1 / Algorithm 4 part 1): for a single query per head, attend over
+this rank's KV shard block-by-block, carrying the online-softmax state
+(m, l, acc). The kernel emits the *unnormalized* partial output plus the
+(m, l) statistics — the wire format the coordinator pushes to peers — and
+``combine`` folds any number of shard partials into the final output.
+
+Hardware adaptation (DESIGN.md §2): the Triton per-CU KV block loop becomes
+the Pallas grid's KV axis with a VMEM-resident accumulator; masking handles
+partially-filled cache shards (the serving path's growing KV) so one AOT
+artifact serves every sequence length up to capacity.
+
+``interpret=True`` throughout — see ``gemm.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _partial_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, block_s: int):
+    """Grid (H, S/block_s): one head's online-softmax update for one KV
+    block. State (o, m, l) lives in the output refs across KV steps."""
+    blk = pl.program_id(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid = valid_ref[0]  # total valid KV rows in this shard
+    q = q_ref[...].astype(jnp.float16).astype(jnp.float32)  # [1, D]
+    k = k_ref[...].astype(jnp.float16).astype(jnp.float32)  # [1, bs, D]
+    v = v_ref[...].astype(jnp.float16).astype(jnp.float32)  # [1, bs, D]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    scores = jnp.einsum("od,osd->os", q, k)[0] * scale  # [bs]
+    # mask out rows beyond the valid prefix of the shard
+    row = blk * block_s + jax.lax.broadcasted_iota(jnp.int32, (block_s,), 0)
+    scores = jnp.where(row < valid, scores, NEG_INF)
+
+    m_prev = m_ref[0]
+    l_prev = l_ref[0]
+    m_new = jnp.maximum(m_prev, scores.max())
+    # guard: a fully-masked block keeps the previous state
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)  # [bs]
+    l_new = l_prev * corr + p.sum()
+    o_prev = o_ref[...]  # [1, D]
+    o_new = o_prev * corr + jnp.einsum("s,osd->od", p, v)[None, 0]
+    o_ref[...] = o_new
+    m_ref[...] = jnp.reshape(m_new, (1,))
+    l_ref[...] = jnp.reshape(l_new, (1,))
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def decode_partial(valid_len: jnp.ndarray, q: jnp.ndarray, k: jnp.ndarray,
+                   v: jnp.ndarray, *, block_s: int = 128):
+    """Partial attention over one KV shard.
+
+    valid_len: scalar int32 — valid prefix of the shard (rows beyond are
+               masked; lets one artifact serve a growing cache).
+    q: [H, D]; k, v: [H, S, D] with S % block_s == 0 (S = shard capacity).
+
+    Returns (o_unnorm [H, D] f32, m [H] f32, l [H] f32).
+    """
+    h, d = q.shape
+    _, s, _ = k.shape
+    bs = min(block_s, s)
+    assert s % bs == 0, f"S={s} not divisible by block_s={bs}"
+    valid = jnp.reshape(valid_len.astype(jnp.int32), (1,))
+
+    kernel = functools.partial(_partial_kernel, block_s=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=(h, s // bs),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # valid_len, tiny
+            pl.BlockSpec((1, d), lambda i, b: (i, 0)),
+            pl.BlockSpec((1, bs, d), lambda i, b: (i, b, 0)),
+            pl.BlockSpec((1, bs, d), lambda i, b: (i, b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i, b: (i, 0)),
+            pl.BlockSpec((1,), lambda i, b: (i,)),
+            pl.BlockSpec((1,), lambda i, b: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, d), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+        ],
+        interpret=True,
+    )(valid, q, k, v)
+
+
+def _combine_kernel(o_ref, m_ref, l_ref, out_ref):
+    """Grid (H,): fold W shard partials for one head (paper's Combine
+    Kernel (Global), Algorithm 4 part 2)."""
+    o = o_ref[...][:, 0, :]  # [W, D]
+    m = m_ref[...][:, 0]  # [W]
+    l = l_ref[...][:, 0]  # [W]
+    gm = m.max()
+    w = jnp.exp(m - gm)  # [W]
+    gl = (l * w).sum()
+    acc = (o * w[:, None]).sum(axis=0)  # [D]
+    out_ref[...] = (acc / gl)[None, :]
+
+
+@jax.jit
+def combine(os_: jnp.ndarray, ms: jnp.ndarray, ls: jnp.ndarray) -> jnp.ndarray:
+    """Fold per-shard partials: os_ [W, H, D]; ms, ls [W, H] → [H, D]."""
+    w, h, d = os_.shape
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((w, 1, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((w, 1), lambda i: (0, i)),
+            pl.BlockSpec((w, 1), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, d), jnp.float32),
+        interpret=True,
+    )(os_, ms, ls)
+
+
+def vmem_footprint_bytes(block_s: int, head_dim: int) -> int:
+    """VMEM bytes per grid cell of the partial kernel: K + V blocks (fp16)
+    plus q, o, m, l (f32). DESIGN.md §8."""
+    kv = 2 * block_s * head_dim * 2
+    qol = head_dim * 4 * 2 + 8
+    return kv + qol

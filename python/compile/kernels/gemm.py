@@ -1,0 +1,82 @@
+"""L1 Pallas tiled GEMM kernel.
+
+The hardware adaptation of the paper's Triton GEMM (DESIGN.md §2): the
+threadblock tile becomes the Pallas grid cell, LDS staging becomes the
+``BlockSpec``-declared HBM→VMEM schedule, and the MFMA fp16 matmul becomes
+``jnp.dot(..., preferred_element_type=f32)`` targeting the MXU systolic
+array. Grid is (M/bm, N/bn, K/bk): the K axis accumulates into the output
+block, which stays resident in VMEM across K steps (revolving accumulator —
+the same double-buffer-friendly structure the paper's kernel uses).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same program runs
+under the Rust runtime. Real-TPU block-size guidance is in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile step at K-block program_id(2)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float16)
+    b = b_ref[...].astype(jnp.float16)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def gemm(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int = 8, block_n: int = 128,
+         block_k: int = 128) -> jnp.ndarray:
+    """C(M,N) = A(M,K) @ B(K,N), fp16 operands / f32 accumulation.
+
+    Shapes must divide the block sizes (callers pick blocks; the AOT
+    manifest uses shapes that do).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"({m},{n},{k}) not divisible by blocks ({bm},{bn},{bk})")
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_footprint_bytes(block_m: int, block_n: int, block_k: int) -> int:
+    """Estimated VMEM bytes per grid cell (A tile + B tile in fp16, f32
+    accumulator), single-buffered. Used by ``aot.py --report`` for the
+    DESIGN.md §8 structural performance estimate."""
+    a = block_m * block_k * 2
+    b = block_k * block_n * 2
+    acc = block_m * block_n * 4
+    return a + b + acc
+
+
+def mxu_utilization_estimate(block_m: int, block_n: int, block_k: int) -> float:
+    """Fraction of the 128x128 MXU systolic tile filled by one dot call —
+    the structural efficiency proxy for interpret-mode kernels."""
+    fill_m = min(block_m, 128) / 128.0
+    fill_n = min(block_n, 128) / 128.0
+    fill_k = min(block_k, 128) / 128.0
+    return fill_m * fill_n * fill_k

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These mirror ``rust/src/tensor/linalg.rs`` — the same reference algorithms
+expressed in JAX. Every Pallas kernel in this package is checked against
+these by pytest (and the Rust native kernels are checked against the Rust
+port of the same oracles), which ties the two implementations together.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B with fp16 operand storage and f32 accumulation."""
+    a16 = a.astype(jnp.float16)
+    b16 = b.astype(jnp.float16)
+    return jnp.dot(a16, b16, preferred_element_type=jnp.float32)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Single-query decode attention.
+
+    q: [H, D]; k, v: [H, S, D]. Returns [H, D] (f32).
+    """
+    h, d = q.shape
+    assert k.shape[0] == h and k.shape[2] == d
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    q16 = q.astype(jnp.float16).astype(jnp.float32)
+    k16 = k.astype(jnp.float16).astype(jnp.float32)
+    v16 = v.astype(jnp.float16).astype(jnp.float32)
+    scores = jnp.einsum("hd,hsd->hs", q16, k16) * scale  # [H, S]
+    p = jnp.exp(scores - scores.max(axis=1, keepdims=True))
+    l = p.sum(axis=1, keepdims=True)
+    return jnp.einsum("hs,hsd->hd", p / l, v16)
+
+
+def partial_attention_ref(q, k, v):
+    """Online-softmax partial state for one KV shard.
+
+    Returns (o_unnorm [H, D], m [H], l [H]) such that combining shards with
+    :func:`combine_partials_ref` reproduces :func:`decode_attention_ref`.
+    """
+    h, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    q16 = q.astype(jnp.float16).astype(jnp.float32)
+    k16 = k.astype(jnp.float16).astype(jnp.float32)
+    v16 = v.astype(jnp.float16).astype(jnp.float32)
+    scores = jnp.einsum("hd,hsd->hs", q16, k16) * scale
+    m = scores.max(axis=1)  # [H]
+    p = jnp.exp(scores - m[:, None])
+    l = p.sum(axis=1)  # [H]
+    o = jnp.einsum("hs,hsd->hd", p, v16)  # unnormalized
+    return o, m, l
+
+
+def combine_partials_ref(os_, ms, ls):
+    """Combine per-shard partials (paper's global combine kernel).
+
+    os_: [W, H, D]; ms, ls: [W, H]. Returns [H, D].
+    """
+    gm = ms.max(axis=0)  # [H]
+    w = jnp.exp(ms - gm[None, :])  # [W, H]
+    gl = (ls * w).sum(axis=0)  # [H]
+    acc = (os_ * w[:, :, None]).sum(axis=0)  # [H, D]
+    return acc / gl[:, None]
+
+
+def gelu_ref(x):
+    """tanh-approximate GELU (matches jax.nn.gelu(approximate=True))."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x**3)))

@@ -1,0 +1,97 @@
+"""L2: the per-rank JAX compute graphs, built on the L1 Pallas kernels.
+
+Each function here is one AOT-compiled artifact executed by the Rust
+runtime (one PJRT executable per entry in ``aot.MANIFEST``). Weights are
+plain inputs — the Rust side owns parameter storage, so one artifact
+serves every layer.
+
+Graphs:
+
+* ``gemm_graph``        — the AG+GEMM per-rank compute (Pallas GEMM);
+* ``flash_partial_graph`` — local shard attention (Pallas, masked so one
+  artifact serves a growing KV cache);
+* ``flash_combine_graph`` — the global online-softmax combine (Pallas);
+* ``qkv_proj_graph``    — transformer decode step, QKV projection;
+* ``post_attn_graph``   — output projection + residual + MLP + residual.
+
+The Rust functional mirrors live in ``rust/src/kernels`` and
+``rust/src/workloads/transformer.rs``; integration tests check the two
+against each other through the PJRT boundary.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import flash_decode as fd
+from compile.kernels import gemm as gk
+from compile.kernels.ref import gelu_ref
+
+
+def gemm_graph(a, b):
+    """C = A @ B via the L1 Pallas GEMM."""
+    return (gk.gemm(a, b),)
+
+
+def flash_partial_graph(valid_len, q, k, v):
+    """Per-shard partial attention; returns the wire triple (o, m, l)."""
+    o, m, l = fd.decode_partial(valid_len, q, k, v)
+    return (o, m, l)
+
+
+def flash_combine_graph(os_, ms, ls):
+    """Global combine of W shard partials."""
+    return (fd.combine(os_, ms, ls),)
+
+
+def rmsnorm(x):
+    """RMSNorm without learned gain — must match ``rmsnorm`` in
+    ``rust/src/workloads/transformer.rs``."""
+    ms = jnp.mean(x * x)
+    return x / jnp.sqrt(ms + 1e-6)
+
+
+def dense16(x, w):
+    """fp16-storage dense matmul for the e2e serving graphs.
+
+    §Perf note (EXPERIMENTS.md): these projections are L2 *glue*, not the
+    paper's compute hot-spot — the hot-spot (tiled GEMM, flash-decode
+    attention) stays in the L1 Pallas kernels and their artifacts. On the
+    CPU PJRT backend interpret-mode Pallas lowers to per-block while-loops
+    that run ~40x slower than the fused XLA dot, so the serving-path dense
+    layers use the plain dot with the identical fp16-in/f32-accumulate
+    contract (validated against the Rust native kernels either way).
+    """
+    return jnp.dot(x.astype(jnp.float16), w.astype(jnp.float16),
+                   preferred_element_type=jnp.float32)
+
+
+def qkv_proj_graph(h, wqkv, *, n_heads: int, head_dim: int):
+    """rmsnorm(h) [1, D] @ wqkv [D, 3D] → (q, k, v) each [heads, dim].
+
+    Split layout matches ``NativeCompute::qkv``: the fused projection is
+    [q heads..., k heads..., v heads...] head-major within each third.
+    """
+    d_model = n_heads * head_dim
+    x = rmsnorm(h)  # pre-attention norm
+    fused = dense16(x, wqkv)  # [1, 3D]
+    q = fused[0, :d_model].reshape(n_heads, head_dim)
+    k = fused[0, d_model:2 * d_model].reshape(n_heads, head_dim)
+    v = fused[0, 2 * d_model:].reshape(n_heads, head_dim)
+    return (q, k, v)
+
+
+def post_attn_graph(h, attn, wo, w1, w2):
+    """(h [1,D], attn [heads,dim]) → next hidden state [1,D].
+
+    Output projection + residual, then GELU MLP + residual — the
+    post-attention half of one decode layer (mirrors
+    ``NativeCompute::post_attn``).
+    """
+    d_model = h.shape[1]
+    flat = attn.reshape(1, d_model)
+    h1 = h + dense16(flat, wo)
+    x = rmsnorm(h1)  # pre-MLP norm
+    mid = gelu_ref(dense16(x, w1))
+    out = h1 + dense16(mid, w2)
+    return (out,)

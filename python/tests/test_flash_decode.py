@@ -1,0 +1,125 @@
+"""L1 Pallas flash-decode kernels vs the pure-jnp oracles: the per-shard
+partial (online softmax, masked) and the global combine, plus the
+shard-combine identity the whole distributed algorithm rests on."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.flash_decode import combine, decode_partial
+from compile.kernels.ref import (
+    combine_partials_ref,
+    decode_attention_ref,
+    partial_attention_ref,
+)
+
+RNG = np.random.default_rng(99)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+def setup(h, d, s):
+    return rand(h, d), rand(h, s, d), rand(h, s, d)
+
+
+class TestDecodePartial:
+    def test_matches_ref_full_shard(self):
+        q, k, v = setup(4, 16, 32)
+        o, m, l = decode_partial(jnp.int32(32), jnp.asarray(q), jnp.asarray(k),
+                                 jnp.asarray(v), block_s=8)
+        o_r, m_r, l_r = partial_attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_r), atol=2e-3, rtol=2e-3)
+        np.testing.assert_allclose(np.asarray(m), np.asarray(m_r), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(l), np.asarray(l_r), rtol=1e-3)
+
+    def test_block_size_invariance(self):
+        q, k, v = setup(2, 8, 48)
+        ref = decode_partial(jnp.int32(48), jnp.asarray(q), jnp.asarray(k),
+                             jnp.asarray(v), block_s=48)
+        for bs in [4, 8, 16, 24]:
+            o, m, l = decode_partial(jnp.int32(48), jnp.asarray(q), jnp.asarray(k),
+                                     jnp.asarray(v), block_s=bs)
+            np.testing.assert_allclose(np.asarray(o), np.asarray(ref[0]), atol=2e-3, rtol=2e-3)
+            np.testing.assert_allclose(np.asarray(m), np.asarray(ref[1]), atol=1e-6)
+
+    def test_valid_len_masking(self):
+        # partial over a padded shard with valid_len = L must equal the
+        # unpadded computation over the first L rows
+        q, k, v = setup(3, 8, 32)
+        for valid in [1, 7, 16, 31]:
+            o, m, l = decode_partial(jnp.int32(valid), jnp.asarray(q), jnp.asarray(k),
+                                     jnp.asarray(v), block_s=8)
+            o_r, m_r, l_r = partial_attention_ref(
+                jnp.asarray(q), jnp.asarray(k[:, :valid]), jnp.asarray(v[:, :valid]))
+            np.testing.assert_allclose(np.asarray(o), np.asarray(o_r), atol=2e-3, rtol=2e-3)
+            np.testing.assert_allclose(np.asarray(l), np.asarray(l_r), rtol=1e-3)
+
+    def test_numerical_stability_large_logits(self):
+        q = np.full((1, 8), 30.0, dtype=np.float32)
+        k = np.full((1, 16, 8), 30.0, dtype=np.float32)
+        v = rand(1, 16, 8)
+        o, m, l = decode_partial(jnp.int32(16), jnp.asarray(q), jnp.asarray(k),
+                                 jnp.asarray(v), block_s=4)
+        assert np.isfinite(np.asarray(o)).all()
+        assert np.isfinite(np.asarray(l)).all() and (np.asarray(l) > 0).all()
+
+
+class TestCombine:
+    def test_matches_ref(self):
+        parts = [partial_attention_ref(*(jnp.asarray(x) for x in setup(4, 8, 12)))
+                 for _ in range(3)]
+        os_ = jnp.stack([p[0] for p in parts])
+        ms = jnp.stack([p[1] for p in parts])
+        ls = jnp.stack([p[2] for p in parts])
+        got = combine(os_, ms, ls)
+        exp = combine_partials_ref(os_, ms, ls)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-5, rtol=1e-5)
+
+    def test_single_partial_is_normalization(self):
+        q, k, v = setup(2, 8, 10)
+        o, m, l = partial_attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+        got = combine(o[None], m[None], l[None])
+        exp = decode_attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-3, rtol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(1, 6),
+    d=st.sampled_from([4, 8, 16]),
+    blocks=st.integers(1, 6),
+    bs=st.sampled_from([2, 4, 8]),
+)
+def test_partial_matches_ref_across_shapes(h, d, blocks, bs):
+    """Hypothesis sweep over heads x head_dim x KV-block geometry."""
+    s = blocks * bs
+    q, k, v = setup(h, d, s)
+    o, m, l = decode_partial(jnp.int32(s), jnp.asarray(q), jnp.asarray(k),
+                             jnp.asarray(v), block_s=bs)
+    o_r, m_r, l_r = partial_attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r), atol=3e-3, rtol=3e-3)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(l_r), rtol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(w=st.integers(1, 6), h=st.integers(1, 4), d=st.sampled_from([4, 8]),
+       per=st.sampled_from([4, 8]))
+def test_sharded_combine_equals_full_attention(w, h, d, per):
+    """The distributed identity (paper §4.2.1): per-shard partials combined
+    with online softmax == attention over the concatenated KV."""
+    q = rand(h, d)
+    ks = [rand(h, per, d) for _ in range(w)]
+    vs = [rand(h, per, d) for _ in range(w)]
+    parts = [decode_partial(jnp.int32(per), jnp.asarray(q), jnp.asarray(k),
+                            jnp.asarray(v), block_s=per)
+             for k, v in zip(ks, vs)]
+    got = combine(jnp.stack([p[0] for p in parts]),
+                  jnp.stack([p[1] for p in parts]),
+                  jnp.stack([p[2] for p in parts]))
+    k_full = jnp.concatenate([jnp.asarray(k) for k in ks], axis=1)
+    v_full = jnp.concatenate([jnp.asarray(v) for v in vs], axis=1)
+    exp = decode_attention_ref(jnp.asarray(q), k_full, v_full)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=3e-3, rtol=3e-3)

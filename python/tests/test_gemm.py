@@ -1,0 +1,114 @@
+"""L1 Pallas GEMM vs the pure-jnp oracle — the core correctness signal for
+the kernel the AG+GEMM strategies are built on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gemm import (
+    gemm,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import matmul_ref
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+def check(m, k, n, **blocks):
+    a, b = rand(m, k), rand(k, n)
+    got = gemm(jnp.asarray(a), jnp.asarray(b), **blocks)
+    exp = matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-3, rtol=2e-3)
+
+
+class TestGemmBasics:
+    def test_identity(self):
+        a = rand(8, 8)
+        got = gemm(jnp.asarray(a), jnp.eye(8, dtype=jnp.float32), block_m=4, block_n=4, block_k=4)
+        np.testing.assert_allclose(
+            np.asarray(got), a.astype(np.float16).astype(np.float32), atol=1e-6
+        )
+
+    def test_known_values(self):
+        a = jnp.asarray([[1.0, 2.0], [3.0, 4.0]], dtype=jnp.float32)
+        b = jnp.asarray([[5.0, 6.0], [7.0, 8.0]], dtype=jnp.float32)
+        got = gemm(a, b, block_m=2, block_n=2, block_k=2)
+        np.testing.assert_allclose(np.asarray(got), [[19.0, 22.0], [43.0, 50.0]])
+
+    def test_single_block(self):
+        check(8, 8, 8, block_m=8, block_n=8, block_k=8)
+
+    def test_multi_block_all_dims(self):
+        check(16, 32, 24, block_m=8, block_n=8, block_k=8)
+
+    def test_skinny_m_decode_shape(self):
+        # the M=1..8 regime of Fig. 9
+        check(1, 64, 48, block_m=1, block_n=16, block_k=16)
+        check(8, 64, 48, block_m=8, block_n=16, block_k=16)
+
+    def test_k_accumulation_deep(self):
+        # many K blocks stress the revolving accumulator
+        check(4, 256, 8, block_m=4, block_n=8, block_k=16)
+
+    def test_fp16_quantization_matters(self):
+        # a value that differs between fp32 and fp16 operand storage
+        a = jnp.asarray([[1.0 + 2.0**-12]], dtype=jnp.float32)
+        b = jnp.asarray([[1.0]], dtype=jnp.float32)
+        got = gemm(a, b, block_m=1, block_n=1, block_k=1)
+        assert float(got[0, 0]) == 1.0  # quantized to fp16 before the dot
+
+    def test_indivisible_shape_rejected(self):
+        with pytest.raises(AssertionError):
+            gemm(jnp.zeros((10, 8)), jnp.zeros((8, 8)), block_m=4, block_n=4, block_k=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mt=st.integers(1, 4),
+    kt=st.integers(1, 4),
+    nt=st.integers(1, 4),
+    bm=st.sampled_from([1, 2, 4, 8]),
+    bk=st.sampled_from([2, 4, 8]),
+    bn=st.sampled_from([2, 4, 8]),
+)
+def test_gemm_matches_ref_across_shapes(mt, kt, nt, bm, bk, bn):
+    """Hypothesis sweep: random tile counts x block shapes."""
+    m, k, n = mt * bm, kt * bk, nt * bn
+    a, b = rand(m, k), rand(k, n)
+    got = gemm(jnp.asarray(a), jnp.asarray(b), block_m=bm, block_n=bn, block_k=bk)
+    exp = matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-3, rtol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.sampled_from([1e-3, 1.0, 1e3]))
+def test_gemm_scale_robustness(scale):
+    """Values across fp16's range (no overflow at 1e3 scale with K=16)."""
+    a, b = rand(4, 16) * scale, rand(16, 4)
+    got = gemm(jnp.asarray(a), jnp.asarray(b), block_m=4, block_n=4, block_k=8)
+    exp = matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(exp), atol=2e-3 * scale, rtol=2e-3
+    )
+
+
+class TestStructuralEstimates:
+    def test_vmem_footprint_formula(self):
+        # 128x128x128: A 32 KiB + B 32 KiB + acc 64 KiB = 128 KiB
+        assert vmem_footprint_bytes(128, 128, 128) == 128 * 1024
+
+    def test_vmem_fits_budget_with_double_buffering(self):
+        # the blocks aot.py reports must fit 16 MiB VMEM double-buffered
+        for bm, bn, bk in [(8, 128, 128), (128, 128, 128), (256, 256, 128)]:
+            assert 2 * vmem_footprint_bytes(bm, bn, bk) < 16 * 1024 * 1024
+
+    def test_mxu_estimate_bounds(self):
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert mxu_utilization_estimate(8, 128, 128) == pytest.approx(8 / 128)
+        assert 0.0 < mxu_utilization_estimate(1, 1, 1) <= 1.0

@@ -1,0 +1,110 @@
+"""L2 graph tests: shapes, layout contracts with the Rust mirrors, and the
+AOT manifest round-trip."""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels.ref import gelu_ref, matmul_ref
+
+RNG = np.random.default_rng(7)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32) * 0.1
+
+
+class TestQkvProj:
+    CFG = dict(n_heads=8, head_dim=32)
+    D = 256
+
+    def run(self, h, w):
+        fn = functools.partial(model.qkv_proj_graph, **self.CFG)
+        return fn(jnp.asarray(h), jnp.asarray(w))
+
+    def test_shapes(self):
+        q, k, v = self.run(rand(1, self.D), rand(self.D, 3 * self.D))
+        for t in (q, k, v):
+            assert t.shape == (8, 32)
+
+    def test_split_layout_matches_flat_projection(self):
+        # contract with NativeCompute::qkv (rust): head-major within thirds
+        h, w = rand(1, self.D), rand(self.D, 3 * self.D)
+        q, k, v = self.run(h, w)
+        x = np.asarray(model.rmsnorm(jnp.asarray(h)))
+        flat = np.asarray(matmul_ref(jnp.asarray(x), jnp.asarray(w)))[0]
+        np.testing.assert_allclose(float(q[1, 2]), flat[32 + 2], rtol=1e-5)
+        np.testing.assert_allclose(float(k[0, 0]), flat[self.D], rtol=1e-5)
+        np.testing.assert_allclose(float(v[3, 7]), flat[2 * self.D + 3 * 32 + 7], rtol=1e-5)
+
+
+class TestPostAttn:
+    D, NH, HD, FFN = 256, 8, 32, 1024
+
+    def test_shape_and_residual(self):
+        h = rand(1, self.D)
+        attn = np.zeros((self.NH, self.HD), dtype=np.float32)
+        wo = np.zeros((self.D, self.D), dtype=np.float32)
+        w1 = np.zeros((self.D, self.FFN), dtype=np.float32)
+        w2 = np.zeros((self.FFN, self.D), dtype=np.float32)
+        (out,) = model.post_attn_graph(*(jnp.asarray(x) for x in (h, attn, wo, w1, w2)))
+        assert out.shape == (1, self.D)
+        # zero weights -> pure residual passthrough
+        np.testing.assert_allclose(np.asarray(out), h, atol=1e-6)
+
+    def test_matches_manual_composition(self):
+        h, attn = rand(1, self.D), rand(self.NH, self.HD)
+        wo, w1, w2 = rand(self.D, self.D), rand(self.D, self.FFN), rand(self.FFN, self.D)
+        (out,) = model.post_attn_graph(*(jnp.asarray(x) for x in (h, attn, wo, w1, w2)))
+        flat = attn.reshape(1, self.D)
+        h1 = h + np.asarray(matmul_ref(jnp.asarray(flat), jnp.asarray(wo)))
+        x = np.asarray(model.rmsnorm(jnp.asarray(h1)))
+        mid = np.asarray(gelu_ref(matmul_ref(jnp.asarray(x), jnp.asarray(w1))))
+        exp = h1 + np.asarray(matmul_ref(jnp.asarray(mid), jnp.asarray(w2)))
+        np.testing.assert_allclose(np.asarray(out), exp, atol=2e-3, rtol=2e-3)
+
+
+class TestAotManifest:
+    def test_entries_lower_and_report_outputs(self, tmp_path):
+        # full build into a temp dir: every entry must lower to HLO text
+        aot.build(str(tmp_path), report=False)
+        manifest = (tmp_path / "manifest.txt").read_text().strip().splitlines()
+        entries = aot.manifest_entries()
+        assert len(manifest) == len(entries)
+        for line, (name, _, in_specs) in zip(manifest, entries):
+            fields = line.split("|")
+            assert fields[0] == name
+            hlo = (tmp_path / fields[1]).read_text()
+            assert "HloModule" in hlo, f"{name}: not HLO text"
+            assert fields[2].startswith("in=")
+            assert fields[3].startswith("out=")
+            assert len(fields[2][3:].split(",")) == len(in_specs)
+
+    def test_spec_formatting(self):
+        s = jax.ShapeDtypeStruct((8, 64, 32), jnp.float32)
+        assert aot.fmt_spec(s) == "f32:8x64x32"
+        scalar = jax.ShapeDtypeStruct((), jnp.int32)
+        assert aot.fmt_spec(scalar) == "i32:"
+
+    def test_e2e_geometry_matches_rust_config(self):
+        # must mirror TransformerConfig::e2e() in rust/src/workloads/transformer.rs
+        assert aot.E2E == dict(d_model=256, n_heads=8, head_dim=32, ffn=1024)
+        assert aot.E2E["d_model"] == aot.E2E["n_heads"] * aot.E2E["head_dim"]
+
+
+class TestArtifactsDirectory:
+    def test_checked_in_artifacts_match_manifest(self):
+        # `make artifacts` output, if present, must be self-consistent
+        art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        manifest = os.path.join(art, "manifest.txt")
+        if not os.path.exists(manifest):
+            import pytest
+
+            pytest.skip("artifacts not built")
+        for line in open(manifest).read().strip().splitlines():
+            name, fname, ins, outs = line.split("|")
+            assert os.path.exists(os.path.join(art, fname)), f"missing {fname}"

@@ -1,0 +1,101 @@
+//! Bench: wall-clock throughput of the functional iris substrate — the
+//! collectives and the fused AG+GEMM / Flash-Decode protocols with real
+//! data movement. This is the L3 hot-path measurement the §Perf pass
+//! iterates on (the DES benches measure the *model*, this measures *us*).
+//!
+//! Run: `cargo bench --offline --bench collectives`
+
+use std::sync::Arc;
+
+use taxfree::collectives;
+use taxfree::config::{AgGemmConfig, FlashDecodeConfig};
+use taxfree::coordinator::{ag_gemm, flash_decode, AgGemmStrategy, FlashDecodeStrategy};
+use taxfree::iris::{run_node, HeapBuilder};
+use taxfree::tensor::Tensor;
+use taxfree::util::{fmt_bytes, Prng, Summary, Table};
+
+/// Time a functional all-gather at a given world/segment size: returns
+/// (mean seconds per op, effective GiB/s moved).
+fn bench_all_gather(world: usize, seg_elems: usize, rounds: u64) -> (f64, f64) {
+    let heap = Arc::new(
+        HeapBuilder::new(world)
+            .buffer("ag", world * seg_elems)
+            .flags("agf", world)
+            .build(),
+    );
+    let t0 = taxfree::clock::WallTimer::start();
+    run_node(heap, move |ctx| {
+        let send = vec![ctx.rank() as f32; seg_elems];
+        for round in 1..=rounds {
+            collectives::all_gather_push(&ctx, &send, "ag", "agf", round);
+            ctx.barrier();
+        }
+    });
+    let total_s = t0.elapsed_s();
+    let per_op = total_s / rounds as f64;
+    let bytes_moved = (world * (world - 1) * seg_elems * 2) as f64; // fp16 wire accounting
+    (per_op, bytes_moved / per_op / 1e9)
+}
+
+fn main() {
+    println!("== functional iris node: collective throughput (wall clock) ==");
+    let mut t = Table::new("all_gather_push")
+        .header(vec!["world", "segment", "rounds", "per-op", "eff GB/s"]);
+    for (world, seg, rounds) in
+        [(2usize, 1 << 12, 200u64), (4, 1 << 12, 200), (8, 1 << 12, 100), (4, 1 << 16, 50)]
+    {
+        let (per_op, gbs) = bench_all_gather(world, seg, rounds);
+        t.row(vec![
+            world.to_string(),
+            fmt_bytes((seg * 4) as u64),
+            rounds.to_string(),
+            format!("{:.1} us", per_op * 1e6),
+            format!("{gbs:.2}"),
+        ]);
+    }
+    t.print();
+
+    println!("\n== functional fused protocols: per-op wall latency ==");
+    let cfg = AgGemmConfig { m: 16, n: 64, k: 128, world: 4, block_m: 8, block_n: 8, block_k: 8 };
+    let mut rng = Prng::new(5);
+    let a = Tensor::rand(&[cfg.m, cfg.k], 1.0, &mut rng);
+    let b = Tensor::rand(&[cfg.k, cfg.n], 1.0, &mut rng);
+    let mut t2 = Table::new("ag_gemm (M=16,N=64,K=128,W=4)").header(vec!["strategy", "per-op"]);
+    for strategy in AgGemmStrategy::ALL {
+        let rounds = 20u64;
+        let timer = taxfree::clock::WallTimer::start();
+        let _ = ag_gemm::run(&cfg, strategy, &a, &b, rounds);
+        t2.row(vec![
+            strategy.name().to_string(),
+            format!("{:.1} us", timer.elapsed_s() / rounds as f64 * 1e6),
+        ]);
+    }
+    t2.print();
+
+    let fcfg = FlashDecodeConfig::tiny(4);
+    let (q, ks, vs, _, _) = flash_decode::make_inputs(&fcfg, 6);
+    let mut t3 = Table::new("flash_decode (tiny, W=4)").header(vec!["strategy", "per-op"]);
+    for strategy in FlashDecodeStrategy::ALL {
+        let rounds = 50u64;
+        let timer = taxfree::clock::WallTimer::start();
+        let _ = flash_decode::run(&fcfg, strategy, &q, &ks, &vs, rounds);
+        t3.row(vec![
+            strategy.name().to_string(),
+            format!("{:.1} us", timer.elapsed_s() / rounds as f64 * 1e6),
+        ]);
+    }
+    t3.print();
+
+    // node spin-up cost (thread spawn + heap) — the fixed cost every
+    // functional measurement amortizes
+    let samples: Vec<f64> = (0..20)
+        .map(|_| {
+            let timer = taxfree::clock::WallTimer::start();
+            let heap = Arc::new(HeapBuilder::new(8).buffer("x", 16).build());
+            run_node(heap, |ctx| ctx.rank());
+            timer.elapsed_ns() as f64
+        })
+        .collect();
+    let s = Summary::of(&samples);
+    println!("\nnode spin-up (8 ranks): mean {:.1} us, p99 {:.1} us", s.mean / 1e3, s.p99 / 1e3);
+}

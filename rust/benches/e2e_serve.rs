@@ -1,0 +1,35 @@
+//! Bench: end-to-end serving throughput on the functional node (native
+//! dense backend — the PJRT variant is exercised by the e2e example; this
+//! bench isolates the L3 serving loop + fused attention protocol).
+//!
+//! Run: `cargo bench --offline --bench e2e_serve`
+
+use taxfree::serve::{serve, RequestQueue};
+use taxfree::util::Table;
+use taxfree::workloads::transformer::{NativeCompute, TransformerConfig, TransformerWeights};
+
+fn main() {
+    let mut t = Table::new("e2e serve (native dense backend, tiny model)")
+        .header(vec!["world", "requests", "tokens", "wall", "tok/s", "p99 req ms"]);
+    for world in [1usize, 2, 4] {
+        let cfg = TransformerConfig::tiny(world);
+        let mut q = RequestQueue::new();
+        q.fill_synthetic(6, (2, 6), (4, 10), 11);
+        let requests = q.drain_batch(6);
+        let cfg2 = cfg.clone();
+        let report = serve(&cfg, requests, move |_r| {
+            NativeCompute::new(cfg2.clone(), TransformerWeights::random(&cfg2, 42))
+        });
+        let s = report.latency_summary();
+        t.row(vec![
+            world.to_string(),
+            report.results.len().to_string(),
+            report.total_tokens.to_string(),
+            format!("{:.3} s", report.wall_s),
+            format!("{:.1}", report.tokens_per_s()),
+            format!("{:.2}", s.p99 / 1e6),
+        ]);
+    }
+    t.print();
+    println!("\n(per-token work grows with KV length; tok/s is workload-specific, not a model claim)");
+}

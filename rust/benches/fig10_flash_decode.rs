@@ -1,0 +1,30 @@
+//! Bench: regenerate paper Figure 10 (Flash-Decode speedup vs RCCL across
+//! global KV lengths) and time the harness.
+//!
+//! Run: `cargo bench --offline --bench fig10_flash_decode`
+
+use taxfree::clock::measure;
+use taxfree::config::presets;
+use taxfree::experiments::{fig10, fig10_flash_decode};
+use taxfree::util::Summary;
+
+fn main() {
+    let hw = presets::mi300x();
+    let rows = fig10(&hw, 7, 50);
+    fig10_flash_decode::render(&rows, &hw).print();
+
+    // paper-band check in the bench output (who wins, by how much)
+    let fused_min = rows.iter().map(|r| r.fused_x).fold(f64::INFINITY, f64::min);
+    let fused_max = rows.iter().map(|r| r.fused_x).fold(0.0, f64::max);
+    println!("\nfused speedup band: {fused_min:.3}x .. {fused_max:.3}x (paper: 1.10-1.20)");
+
+    let samples = measure(2, 10, || {
+        let r = fig10(&hw, 7, 10);
+        assert_eq!(r.len(), fig10_flash_decode::KV_SWEEP.len());
+    });
+    let s = Summary::of(&samples);
+    println!(
+        "bench fig10: full figure (7 KV-points x 4 strategies x 10 iters) in {:.2} ms mean",
+        s.mean / 1e6
+    );
+}

@@ -1,0 +1,31 @@
+//! Bench: regenerate paper Figure 11 (Flash-Decode scaling, 1→8 GPUs) and
+//! time the harness.
+//!
+//! Run: `cargo bench --offline --bench fig11_scaling`
+
+use taxfree::clock::measure;
+use taxfree::config::presets;
+use taxfree::experiments::{fig11, fig11_scaling};
+use taxfree::util::Summary;
+
+fn main() {
+    let hw = presets::mi300x();
+    let rows = fig11(&hw, 7, 50);
+    fig11_scaling::render(&rows, &hw).print();
+
+    let small = rows.first().unwrap();
+    let large = rows.last().unwrap();
+    let f = |r: &taxfree::experiments::fig11_scaling::Fig11Row| r.times_ms[0].1 / r.times_ms[3].1;
+    println!(
+        "\n1->8 GPU factor: {:.2}x at 32K (paper: minimal), {:.2}x at 1M (paper: substantial, sub-linear)",
+        f(small),
+        f(large)
+    );
+
+    let samples = measure(2, 10, || {
+        let r = fig11(&hw, 7, 10);
+        assert_eq!(r.len(), fig11_scaling::KV_SWEEP.len());
+    });
+    let s = Summary::of(&samples);
+    println!("bench fig11: full figure (4 KV x 4 world x 10 iters) in {:.2} ms mean", s.mean / 1e6);
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate paper Figure 9 (AG+GEMM speedup vs RCCL) and time the
+//! harness itself. criterion is unavailable offline; this is a
+//! `harness = false` bench reporting through the crate's own Summary.
+//!
+//! Run: `cargo bench --offline --bench fig9_ag_gemm`
+
+use taxfree::clock::measure;
+use taxfree::config::presets;
+use taxfree::experiments::{fig9, fig9_ag_gemm};
+use taxfree::util::Summary;
+
+fn main() {
+    let hw = presets::mi325x();
+    let seed = 7;
+    // the paper's protocol: warmup + averaged iterations per point
+    let rows = fig9(&hw, seed, 50);
+    fig9_ag_gemm::render(&rows, &hw).print();
+
+    // harness cost (how fast the DES regenerates the whole figure)
+    let samples = measure(2, 10, || {
+        let r = fig9(&hw, seed, 10);
+        assert_eq!(r.len(), fig9_ag_gemm::M_SWEEP.len());
+    });
+    let s = Summary::of(&samples);
+    println!(
+        "\nbench fig9: full figure (14 M-points x 3 strategies x 10 iters) in {:.2} ms mean, {:.2} ms p99",
+        s.mean / 1e6,
+        s.p99 / 1e6
+    );
+}

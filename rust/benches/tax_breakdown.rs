@@ -1,0 +1,35 @@
+//! Bench: regenerate paper Figure 2 (the Three Taxes) as measured
+//! breakdowns per strategy, for both workload families.
+//!
+//! Run: `cargo bench --offline --bench tax_breakdown`
+
+use taxfree::clock::measure;
+use taxfree::config::presets;
+use taxfree::experiments::{fig2, fig2_taxes};
+use taxfree::util::Summary;
+
+fn main() {
+    let hw = presets::mi300x();
+    let (ag, fd) = fig2(&hw, 7);
+    fig2_taxes::render(&ag, "Figure 2a — Three Taxes, AG+GEMM (M=64, W=8)").print();
+    println!();
+    fig2_taxes::render(&fd, "Figure 2b — Three Taxes, Flash Decode (256K KV, W=8)").print();
+
+    // headline: fraction of baseline time that is pure tax
+    let base = &fd[0].ledger;
+    println!(
+        "\nbaseline flash-decode tax fraction: {:.1}% of rank-seconds",
+        100.0 * base.tax_fraction(8)
+    );
+    let fused = &fd[3].ledger;
+    println!(
+        "fused flash-decode tax fraction:    {:.1}% of rank-seconds",
+        100.0 * fused.tax_fraction(8)
+    );
+
+    let samples = measure(2, 20, || {
+        let _ = fig2(&hw, 7);
+    });
+    let s = Summary::of(&samples);
+    println!("\nbench fig2: both breakdowns in {:.2} ms mean", s.mean / 1e6);
+}

@@ -1,0 +1,533 @@
+//! Collective operations over the iris substrate.
+//!
+//! Two families:
+//!
+//! * **BSP collectives** (`*_bsp`) — the RCCL-like baseline: a global
+//!   barrier on entry (wait for all producers), the data exchange as a
+//!   standalone "kernel", a global barrier on exit (wait for the transfer
+//!   to be fully complete). These pay all of the paper's taxes by
+//!   construction and are what the baseline strategies call.
+//! * **Flag-synchronized collectives** (`all_gather_push`,
+//!   `all_gather_pull`) — the paper's §4.2.3 "Independent All-Gather
+//!   kernel": same data movement, but completion is tracked with per-source
+//!   signal flags instead of global barriers, so a consumer *may* proceed
+//!   per-source. Used both standalone and as the building block of the
+//!   fine-grained strategies.
+//!
+//! **Buffer conventions.** Collectives operate on named symmetric-heap
+//! buffers declared by the caller. An all-gather over segments of `len`
+//! elements needs `data_buf` of `world * len` elements and `flag_buf` of
+//! `world` flags. Flags are monotone counters: iteration `round` (1-based)
+//! signals by incrementing and waits for `>= round`, so repeated calls need
+//! no flag reset. Repeated rounds with *changing payloads* additionally
+//! need a barrier between rounds (data slots are reused; the coordinator
+//! strategies barrier per iteration per the §5.1 measurement protocol).
+
+use crate::iris::RankCtx;
+
+/// Direct (clique) all-gather with push semantics and flag completion.
+/// Rank r stores its `send` segment into slot r of every peer's `data_buf`
+/// and signals `flag_buf[r]` there. Returns once *all* segments have
+/// arrived locally. No global barrier: this is the standalone Iris AG
+/// kernel of paper §4.2.3.
+pub fn all_gather_push(
+    ctx: &RankCtx,
+    send: &[f32],
+    data_buf: &str,
+    flag_buf: &str,
+    round: u64,
+) -> Vec<f32> {
+    let (r, w) = (ctx.rank(), ctx.world());
+    let len = send.len();
+    debug_assert_eq!(ctx.heap().buffer_len(data_buf) % w, 0);
+    // own segment: local copy
+    ctx.store_local(data_buf, r * len, send);
+    ctx.signal(r, flag_buf, r);
+    // push to peers (staggered order to spread link load)
+    for d in ctx.peers() {
+        ctx.remote_store(d, data_buf, r * len, send);
+        ctx.signal(d, flag_buf, r);
+    }
+    // fine-grained completion: wait per source
+    for s in 0..w {
+        ctx.wait_flag_ge(flag_buf, s, round).expect("all_gather_push wait");
+    }
+    ctx.load_local_vec(data_buf, 0, w * len)
+}
+
+/// Direct all-gather with pull semantics: rank r publishes its segment
+/// locally, signals its own flag on every peer, then pulls each peer's
+/// segment as soon as that peer's flag arrives.
+pub fn all_gather_pull(
+    ctx: &RankCtx,
+    send: &[f32],
+    data_buf: &str,
+    flag_buf: &str,
+    round: u64,
+) -> Vec<f32> {
+    let (r, w) = (ctx.rank(), ctx.world());
+    let len = send.len();
+    // publish own segment in own region, then announce to all peers
+    ctx.store_local(data_buf, r * len, send);
+    ctx.signal(r, flag_buf, r);
+    for d in ctx.peers() {
+        ctx.signal(d, flag_buf, r);
+    }
+    let mut out = vec![0.0f32; w * len];
+    out[r * len..(r + 1) * len].copy_from_slice(send);
+    for s in ctx.peers().collect::<Vec<_>>() {
+        ctx.wait_flag_ge(flag_buf, s, round).expect("all_gather_pull wait");
+        let seg = ctx.remote_load_vec(s, data_buf, s * len, len);
+        out[s * len..(s + 1) * len].copy_from_slice(&seg);
+    }
+    out
+}
+
+/// Ring all-gather: `world - 1` steps; at step t, rank r forwards the
+/// segment that originated at `r - t` to its ring successor. Exercises
+/// pipelined neighbor traffic (the topology RCCL actually uses at scale).
+pub fn all_gather_ring(
+    ctx: &RankCtx,
+    send: &[f32],
+    data_buf: &str,
+    flag_buf: &str,
+    round: u64,
+) -> Vec<f32> {
+    let (r, w) = (ctx.rank(), ctx.world());
+    let len = send.len();
+    ctx.store_local(data_buf, r * len, send);
+    let next = (r + 1) % w;
+    // flags: flag_buf[s] on this rank means "segment of source s arrived"
+    let base = (round - 1) * (w as u64 - 1);
+    let _ = base;
+    for step in 0..w.saturating_sub(1) {
+        // segment that originated at (r - step) mod w is ready locally
+        let src_seg = (r + w - step) % w;
+        let seg = ctx.load_local_vec(data_buf, src_seg * len, len);
+        ctx.remote_store(next, data_buf, src_seg * len, &seg);
+        ctx.signal(next, flag_buf, src_seg);
+        // wait for the segment arriving from the predecessor this step:
+        // it originated at (r - 1 - step) mod w
+        let arriving = (r + w - 1 - step) % w;
+        ctx.wait_flag_ge(flag_buf, arriving, round).expect("all_gather_ring wait");
+    }
+    ctx.load_local_vec(data_buf, 0, w * len)
+}
+
+/// BSP wrapper: barrier – exchange – barrier. The RCCL-shaped call whose
+/// structure is exactly "Wait, Collective, Wait" (paper §2.3).
+pub fn all_gather_bsp(
+    ctx: &RankCtx,
+    send: &[f32],
+    data_buf: &str,
+    flag_buf: &str,
+    round: u64,
+) -> Vec<f32> {
+    ctx.barrier(); // wait for all producers (entry barrier)
+    let out = all_gather_push(ctx, send, data_buf, flag_buf, round);
+    ctx.barrier(); // wait for collective completion everywhere (exit barrier)
+    out
+}
+
+/// All-reduce (sum) via reduce-scatter + all-gather over the clique.
+/// `data_buf` needs `2 * world * (len / world)` elements where
+/// `len = send.len()` (first half: scatter contribution slots; second
+/// half: gathered reduced segments — disjoint so a fast peer's gather push
+/// cannot clobber a contribution a slow rank has not reduced yet).
+/// `send.len()` must be divisible by `world`. `flag_buf` needs
+/// `2 * world` flags (first half for the scatter phase, second for the
+/// gather phase).
+pub fn all_reduce_sum(
+    ctx: &RankCtx,
+    send: &[f32],
+    data_buf: &str,
+    flag_buf: &str,
+    round: u64,
+) -> Vec<f32> {
+    let (r, w) = (ctx.rank(), ctx.world());
+    let n = send.len();
+    assert_eq!(n % w, 0, "all_reduce length {n} not divisible by world {w}");
+    let seg = n / w;
+    // Phase 1 (reduce-scatter): rank r owns segment r. Everyone pushes
+    // their copy of segment s into slot (src rank) of rank s's data_buf.
+    for s in 0..w {
+        let piece = &send[s * seg..(s + 1) * seg];
+        if s == r {
+            ctx.store_local(data_buf, r * seg, piece);
+            ctx.signal(r, flag_buf, r);
+        } else {
+            ctx.remote_store(s, data_buf, r * seg, piece);
+            ctx.signal(s, flag_buf, r);
+        }
+    }
+    // reduce own segment once all contributions arrive
+    let mut acc = vec![0.0f32; seg];
+    for src in 0..w {
+        ctx.wait_flag_ge(flag_buf, src, round).expect("all_reduce scatter wait");
+        let contrib = ctx.load_local_vec(data_buf, src * seg, seg);
+        for (a, c) in acc.iter_mut().zip(&contrib) {
+            *a += c;
+        }
+    }
+    // Phase 2: all-gather the reduced segments into the second half of
+    // data_buf (slots w*seg ..) using flags w..2w.
+    let gather_base = w * seg;
+    let mut out = vec![0.0f32; n];
+    out[r * seg..(r + 1) * seg].copy_from_slice(&acc);
+    ctx.store_local(data_buf, gather_base + r * seg, &acc);
+    ctx.signal(r, flag_buf, w + r);
+    for d in ctx.peers() {
+        ctx.remote_store(d, data_buf, gather_base + r * seg, &acc);
+        ctx.signal(d, flag_buf, w + r);
+    }
+    for s in 0..w {
+        ctx.wait_flag_ge(flag_buf, w + s, round).expect("all_reduce gather wait");
+        if s != r {
+            let piece = ctx.load_local_vec(data_buf, gather_base + s * seg, seg);
+            out[s * seg..(s + 1) * seg].copy_from_slice(&piece);
+        }
+    }
+    out
+}
+
+/// Reduce-scatter (sum): returns this rank's reduced segment
+/// (`send.len() / world` elements). Buffer requirements as
+/// [`all_reduce_sum`], flags `world`.
+pub fn reduce_scatter_sum(
+    ctx: &RankCtx,
+    send: &[f32],
+    data_buf: &str,
+    flag_buf: &str,
+    round: u64,
+) -> Vec<f32> {
+    let (r, w) = (ctx.rank(), ctx.world());
+    let n = send.len();
+    assert_eq!(n % w, 0);
+    let seg = n / w;
+    for s in 0..w {
+        let piece = &send[s * seg..(s + 1) * seg];
+        if s == r {
+            ctx.store_local(data_buf, r * seg, piece);
+            ctx.signal(r, flag_buf, r);
+        } else {
+            ctx.remote_store(s, data_buf, r * seg, piece);
+            ctx.signal(s, flag_buf, r);
+        }
+    }
+    let mut acc = vec![0.0f32; seg];
+    for src in 0..w {
+        ctx.wait_flag_ge(flag_buf, src, round).expect("reduce_scatter wait");
+        let contrib = ctx.load_local_vec(data_buf, src * seg, seg);
+        for (a, c) in acc.iter_mut().zip(&contrib) {
+            *a += c;
+        }
+    }
+    acc
+}
+
+/// All-to-all: rank r sends segment `d` of its `send` buffer to rank `d`
+/// and receives segment `s` from every rank `s` (the transpose exchange
+/// of expert-parallel / sequence-parallel layouts). `send.len()` must be
+/// `world * seg`; `data_buf` needs `world * seg` elements; `flag_buf`
+/// `world` flags. Returns the received `world * seg` elements, source-major.
+pub fn all_to_all(
+    ctx: &RankCtx,
+    send: &[f32],
+    data_buf: &str,
+    flag_buf: &str,
+    round: u64,
+) -> Vec<f32> {
+    let (r, w) = (ctx.rank(), ctx.world());
+    assert_eq!(send.len() % w, 0, "all_to_all length {} not divisible by {w}", send.len());
+    let seg = send.len() / w;
+    // deliver my segment d into rank d's slot r
+    ctx.store_local(data_buf, r * seg, &send[r * seg..(r + 1) * seg]);
+    ctx.signal(r, flag_buf, r);
+    for d in ctx.peers() {
+        ctx.remote_store(d, data_buf, r * seg, &send[d * seg..(d + 1) * seg]);
+        ctx.signal(d, flag_buf, r);
+    }
+    let mut out = vec![0.0f32; w * seg];
+    for s in 0..w {
+        ctx.wait_flag_ge(flag_buf, s, round).expect("all_to_all wait");
+        let piece = ctx.load_local_vec(data_buf, s * seg, seg);
+        out[s * seg..(s + 1) * seg].copy_from_slice(&piece);
+    }
+    out
+}
+
+/// Ring reduce-scatter (sum): `world - 1` steps, each rank forwarding a
+/// partially-reduced segment to its successor — the bandwidth-optimal
+/// topology RCCL uses at scale. Returns this rank's fully-reduced segment
+/// (`send.len() / world` elements). `data_buf` needs `world * seg`
+/// elements (step-indexed staging slots); `flag_buf` needs `world` flags,
+/// each incremented once per round per step.
+pub fn reduce_scatter_ring(
+    ctx: &RankCtx,
+    send: &[f32],
+    data_buf: &str,
+    flag_buf: &str,
+    round: u64,
+) -> Vec<f32> {
+    let (r, w) = (ctx.rank(), ctx.world());
+    assert_eq!(send.len() % w, 0);
+    let seg = send.len() / w;
+    let next = (r + 1) % w;
+    // step t: rank r sends its running sum of segment (r - t - 1) to next,
+    // receives segment (r - t - 2)'s running sum from prev; after w-1
+    // steps rank r holds the full sum of segment r.
+    let mut acc: Vec<Vec<f32>> = (0..w).map(|s| send[s * seg..(s + 1) * seg].to_vec()).collect();
+    for step in 0..w.saturating_sub(1) {
+        let send_seg = (r + w - step + w - 1) % w; // (r - 1 - step) mod w
+        ctx.remote_store(next, data_buf, send_seg * seg, &acc[send_seg]);
+        ctx.signal(next, flag_buf, send_seg);
+        let recv_seg = (r + w - step + w - 2) % w; // (r - 2 - step) mod w
+        // each segment passes through this rank exactly once per round
+        ctx.wait_flag_ge(flag_buf, recv_seg, round).expect("reduce_scatter_ring wait");
+        let incoming = ctx.load_local_vec(data_buf, recv_seg * seg, seg);
+        for (a, b) in acc[recv_seg].iter_mut().zip(&incoming) {
+            *a += b;
+        }
+    }
+    acc[r].clone()
+}
+
+/// Broadcast from `root`: `data_buf` needs `len` elements, `flag_buf` one
+/// flag. Non-root ranks return the received data.
+pub fn broadcast(
+    ctx: &RankCtx,
+    root: usize,
+    data: &[f32],
+    data_buf: &str,
+    flag_buf: &str,
+    round: u64,
+) -> Vec<f32> {
+    let r = ctx.rank();
+    if r == root {
+        ctx.store_local(data_buf, 0, data);
+        ctx.signal(r, flag_buf, 0);
+        for d in ctx.peers() {
+            ctx.remote_store(d, data_buf, 0, data);
+            ctx.signal(d, flag_buf, 0);
+        }
+        data.to_vec()
+    } else {
+        ctx.wait_flag_ge(flag_buf, 0, round).expect("broadcast wait");
+        ctx.load_local_vec(data_buf, 0, data.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iris::{run_node, HeapBuilder};
+    use std::sync::Arc;
+
+    fn seg_for(rank: usize, len: usize) -> Vec<f32> {
+        (0..len).map(|i| (rank * 100 + i) as f32).collect()
+    }
+
+    fn expected_gather(world: usize, len: usize) -> Vec<f32> {
+        (0..world).flat_map(|r| seg_for(r, len)).collect()
+    }
+
+    fn gather_heap(world: usize, len: usize) -> Arc<crate::iris::SymmetricHeap> {
+        Arc::new(
+            HeapBuilder::new(world)
+                .buffer("ag", world * len)
+                .flags("agf", world)
+                .build(),
+        )
+    }
+
+    #[test]
+    fn all_gather_push_correct_all_world_sizes() {
+        for world in [1usize, 2, 3, 5, 8] {
+            let len = 6;
+            let heap = gather_heap(world, len);
+            let outs = run_node(heap, move |ctx| {
+                all_gather_push(&ctx, &seg_for(ctx.rank(), len), "ag", "agf", 1)
+            });
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(o, &expected_gather(world, len), "world {world} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_pull_correct() {
+        for world in [2usize, 4, 8] {
+            let len = 5;
+            let heap = gather_heap(world, len);
+            let outs = run_node(heap, move |ctx| {
+                all_gather_pull(&ctx, &seg_for(ctx.rank(), len), "ag", "agf", 1)
+            });
+            for o in outs {
+                assert_eq!(o, expected_gather(world, len));
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_ring_correct() {
+        for world in [2usize, 3, 8] {
+            let len = 4;
+            let heap = gather_heap(world, len);
+            let outs = run_node(heap, move |ctx| {
+                all_gather_ring(&ctx, &seg_for(ctx.rank(), len), "ag", "agf", 1)
+            });
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(o, &expected_gather(world, len), "world {world} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_bsp_matches_push() {
+        let (world, len) = (4, 3);
+        let heap = gather_heap(world, len);
+        let outs = run_node(heap, move |ctx| {
+            all_gather_bsp(&ctx, &seg_for(ctx.rank(), len), "ag", "agf", 1)
+        });
+        for o in outs {
+            assert_eq!(o, expected_gather(world, len));
+        }
+    }
+
+    #[test]
+    fn all_gather_repeated_rounds_no_reset() {
+        let (world, len) = (4, 2);
+        let heap = gather_heap(world, len);
+        let outs = run_node(heap, move |ctx| {
+            let mut last = Vec::new();
+            for round in 1..=10u64 {
+                last = all_gather_push(&ctx, &seg_for(ctx.rank(), len), "ag", "agf", round);
+            }
+            last
+        });
+        for o in outs {
+            assert_eq!(o, expected_gather(world, len));
+        }
+    }
+
+    #[test]
+    fn all_reduce_sum_correct() {
+        for world in [2usize, 4, 8] {
+            let n = world * 3;
+            let heap = Arc::new(
+                HeapBuilder::new(world)
+                    .buffer("ar", 2 * n)
+                    .flags("arf", 2 * world)
+                    .build(),
+            );
+            let outs = run_node(heap, move |ctx| {
+                let send: Vec<f32> = (0..n).map(|i| (ctx.rank() + i) as f32).collect();
+                all_reduce_sum(&ctx, &send, "ar", "arf", 1)
+            });
+            // expected: sum over ranks of (rank + i) = sum(rank) + world*i
+            let rank_sum: usize = (0..world).sum();
+            let expect: Vec<f32> = (0..n).map(|i| (rank_sum + world * i) as f32).collect();
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(o, &expect, "world {world} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_segments_partition_the_sum() {
+        let world = 4;
+        let n = world * 2;
+        let heap = Arc::new(
+            HeapBuilder::new(world).buffer("rs", n).flags("rsf", world).build(),
+        );
+        let outs = run_node(heap, move |ctx| {
+            let send: Vec<f32> = (0..n).map(|i| ((ctx.rank() + 1) * (i + 1)) as f32).collect();
+            reduce_scatter_sum(&ctx, &send, "rs", "rsf", 1)
+        });
+        let rank_factor: usize = (1..=world).sum(); // Σ (rank+1)
+        for (r, o) in outs.iter().enumerate() {
+            let seg = n / world;
+            let expect: Vec<f32> =
+                (0..seg).map(|j| (rank_factor * (r * seg + j + 1)) as f32).collect();
+            assert_eq!(o, &expect, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn all_to_all_transposes_segments() {
+        for world in [2usize, 4, 8] {
+            let seg = 3;
+            let heap = Arc::new(
+                HeapBuilder::new(world).buffer("a2a", world * seg).flags("a2af", world).build(),
+            );
+            let outs = run_node(heap, move |ctx| {
+                // rank r's segment d carries value r*10 + d
+                let send: Vec<f32> = (0..world * seg)
+                    .map(|i| (ctx.rank() * 10 + i / seg) as f32)
+                    .collect();
+                all_to_all(&ctx, &send, "a2a", "a2af", 1)
+            });
+            for (r, o) in outs.iter().enumerate() {
+                // slot s must hold source s's segment destined for r
+                for s in 0..world {
+                    for j in 0..seg {
+                        assert_eq!(o[s * seg + j], (s * 10 + r) as f32, "world {world} rank {r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_ring_matches_direct() {
+        for world in [2usize, 3, 4, 8] {
+            let n = world * 2;
+            let heap = Arc::new(
+                HeapBuilder::new(world).buffer("rsr", n).flags("rsrf", world).build(),
+            );
+            let outs = run_node(heap, move |ctx| {
+                let send: Vec<f32> =
+                    (0..n).map(|i| ((ctx.rank() + 1) * (i + 1)) as f32).collect();
+                reduce_scatter_ring(&ctx, &send, "rsr", "rsrf", 1)
+            });
+            let rank_factor: usize = (1..=world).sum();
+            for (r, o) in outs.iter().enumerate() {
+                let seg = n / world;
+                let expect: Vec<f32> =
+                    (0..seg).map(|j| (rank_factor * (r * seg + j + 1)) as f32).collect();
+                assert_eq!(o, &expect, "world {world} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_delivers_root_data() {
+        let world = 5;
+        let heap = Arc::new(HeapBuilder::new(world).buffer("bc", 4).flags("bcf", 1).build());
+        let outs = run_node(heap, move |ctx| {
+            let payload = if ctx.rank() == 2 { vec![3.0, 1.0, 4.0, 1.0] } else { vec![0.0; 4] };
+            broadcast(&ctx, 2, &payload, "bc", "bcf", 1)
+        });
+        for o in outs {
+            assert_eq!(o, vec![3.0, 1.0, 4.0, 1.0]);
+        }
+    }
+
+    #[test]
+    fn gather_traffic_matches_analytic() {
+        // push all-gather moves (world-1) * len * 2 bytes out of each rank
+        // (+ 8-byte flags)
+        let (world, len) = (4usize, 8usize);
+        let heap = gather_heap(world, len);
+        let traffic = run_node(heap, move |ctx| {
+            all_gather_push(&ctx, &seg_for(ctx.rank(), len), "ag", "agf", 1);
+            ctx.barrier();
+            (ctx.traffic().total_bytes(), ctx.traffic().total_messages())
+        });
+        let (bytes, msgs) = traffic[0];
+        let data = (world * (world - 1) * len * 2) as u64;
+        let flags = (world * (world - 1) * 8) as u64;
+        assert_eq!(bytes, data + flags);
+        assert_eq!(msgs, (world * (world - 1) * 2) as u64);
+    }
+}

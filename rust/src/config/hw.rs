@@ -1,0 +1,207 @@
+//! Hardware model configuration: the calibrated constants that stand in for
+//! the paper's 8× MI300X / MI325X node (DESIGN.md §7).
+//!
+//! Every quantity the discrete-event simulator charges comes from this
+//! struct, so a single `HwConfig` value fully determines an experiment's
+//! virtual timeline. Constants are overridable from config files / CLI so
+//! sensitivity studies (and re-calibration for other machines) need no code
+//! changes.
+
+/// GPU + interconnect cost-model constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwConfig {
+    /// Human-readable name of the preset ("mi300x", "mi325x", ...).
+    pub name: String,
+    /// HBM bandwidth per GPU, bytes/second.
+    pub hbm_bw: f64,
+    /// Peak fp16 matmul throughput per GPU, FLOP/s.
+    pub peak_fp16_flops: f64,
+    /// Peak vector (non-MFMA) fp32 throughput per GPU, FLOP/s.
+    pub peak_vec_flops: f64,
+    /// Host kernel-launch overhead per dispatch, seconds (the Launch Tax
+    /// unit price).
+    pub launch_overhead_s: f64,
+    /// Host-side per-step dispatch cost paid by *every* implementation in
+    /// the torch-driven Flash-Decode harness (framework overhead; both the
+    /// paper's baseline and its fused kernels run under PyTorch). Applied
+    /// by the Flash-Decode workload only — the AG+GEMM benchmark is timed
+    /// at kernel scope.
+    pub host_step_overhead_s: f64,
+    /// Minimum wall time of any standalone kernel (wave scheduling /
+    /// drain overhead on a 304-CU part). Tile-level steps *inside* a fused
+    /// kernel don't pay this — one more reason fusion wins at small sizes.
+    pub kernel_min_s: f64,
+    /// Compute-efficiency penalty of the Pull model's in-kernel remote
+    /// loads (remote-load stalls in the GEMM inner loop that Triton's
+    /// pipelining cannot fully hide; §5.2 observes stores beat loads).
+    /// Pull compute time is divided by this factor (< 1 slows it down).
+    pub pull_eff_penalty: f64,
+    /// Point-to-point Infinity-Fabric-like link bandwidth between a pair of
+    /// peers, bytes/second per direction.
+    pub link_bw: f64,
+    /// Per-message link latency, seconds (dominates small transfers).
+    pub link_latency_s: f64,
+    /// Aggregate fabric bandwidth cap per GPU, bytes/second. With 7 peers a
+    /// rank cannot exceed this even if all links are busy.
+    pub fabric_aggregate_bw: f64,
+    /// Remote *store* efficiency relative to `link_bw` (§5.2: pushes move
+    /// data more efficiently than pulls on this fabric).
+    pub rma_store_eff: f64,
+    /// Remote *load* efficiency relative to `link_bw`.
+    pub rma_load_eff: f64,
+    /// Lognormal sigma of per-stage compute-time jitter across ranks —
+    /// the source of the Bulk Synchronous Tax.
+    pub skew_sigma: f64,
+    /// Fraction of a producer's output bytes that a *fused* consumer can
+    /// keep on-chip (cache/LDS/VMEM) instead of round-tripping through HBM.
+    /// The Inter-Kernel Tax is `(1 - this)` of the eviction cost for fused
+    /// paths vs. 100% for BSP paths.
+    pub fused_locality_fraction: f64,
+    /// GEMM efficiency curve: fraction of peak achieved as a function of M
+    /// (skinny matmuls can't fill the MXU/MFMA pipeline).
+    pub gemm_eff: GemmEff,
+    /// Efficiency multiplier for the vendor (torch.matmul) baseline GEMM in
+    /// the M window the paper observed it to be unusually good at (Fig. 9,
+    /// 8 <= M <= 64).
+    pub torch_gemm_bonus: f64,
+    /// The M window [lo, hi] where `torch_gemm_bonus` applies.
+    pub torch_gemm_window: (usize, usize),
+}
+
+/// Piecewise-linear GEMM efficiency in M (fraction of peak fp16 FLOPs).
+///
+/// Calibration: a Triton-class GEMM reaches `eff_hi` of peak for
+/// M >= `m_saturate` and only `eff_lo` at M = 1 (launch-bound, MXU idle);
+/// logarithmic ramp in between.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GemmEff {
+    pub eff_lo: f64,
+    pub eff_hi: f64,
+    pub m_saturate: usize,
+}
+
+impl GemmEff {
+    /// Efficiency at a given M.
+    pub fn at(&self, m: usize) -> f64 {
+        let m = m.max(1);
+        if m >= self.m_saturate {
+            return self.eff_hi;
+        }
+        // log-linear ramp from (1, eff_lo) to (m_saturate, eff_hi)
+        let t = (m as f64).ln() / (self.m_saturate as f64).ln();
+        self.eff_lo + t * (self.eff_hi - self.eff_lo)
+    }
+}
+
+impl HwConfig {
+    /// Validate internal consistency; returns a human-readable error list.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut errs = Vec::new();
+        if self.hbm_bw <= 0.0 {
+            errs.push("hbm_bw must be positive".to_string());
+        }
+        if self.peak_fp16_flops <= 0.0 {
+            errs.push("peak_fp16_flops must be positive".to_string());
+        }
+        if self.link_bw <= 0.0 || self.fabric_aggregate_bw < self.link_bw {
+            errs.push(format!(
+                "fabric_aggregate_bw ({}) must be >= link_bw ({})",
+                self.fabric_aggregate_bw, self.link_bw
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.fused_locality_fraction) {
+            errs.push("fused_locality_fraction must be in [0,1]".to_string());
+        }
+        if self.rma_store_eff <= 0.0 || self.rma_load_eff <= 0.0 {
+            errs.push("rma efficiencies must be positive".to_string());
+        }
+        if !(0.0 < self.pull_eff_penalty && self.pull_eff_penalty <= 1.0) {
+            errs.push("pull_eff_penalty must be in (0,1]".to_string());
+        }
+        if self.host_step_overhead_s < 0.0 || self.kernel_min_s < 0.0 {
+            errs.push("host/kernel overheads must be non-negative".to_string());
+        }
+        if self.gemm_eff.eff_lo > self.gemm_eff.eff_hi {
+            errs.push("gemm_eff.eff_lo > eff_hi".to_string());
+        }
+        if self.torch_gemm_window.0 > self.torch_gemm_window.1 {
+            errs.push("torch_gemm_window lo > hi".to_string());
+        }
+        if errs.is_empty() { Ok(()) } else { Err(errs.join("; ")) }
+    }
+
+    /// Set a field by dotted string key (config-file / CLI override path).
+    pub fn set_field(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let fv = || value.parse::<f64>().map_err(|e| format!("{key}: {e}"));
+        match key {
+            "hbm_bw" => self.hbm_bw = fv()?,
+            "peak_fp16_flops" => self.peak_fp16_flops = fv()?,
+            "peak_vec_flops" => self.peak_vec_flops = fv()?,
+            "launch_overhead_s" => self.launch_overhead_s = fv()?,
+            "host_step_overhead_s" => self.host_step_overhead_s = fv()?,
+            "kernel_min_s" => self.kernel_min_s = fv()?,
+            "pull_eff_penalty" => self.pull_eff_penalty = fv()?,
+            "link_bw" => self.link_bw = fv()?,
+            "link_latency_s" => self.link_latency_s = fv()?,
+            "fabric_aggregate_bw" => self.fabric_aggregate_bw = fv()?,
+            "rma_store_eff" => self.rma_store_eff = fv()?,
+            "rma_load_eff" => self.rma_load_eff = fv()?,
+            "skew_sigma" => self.skew_sigma = fv()?,
+            "fused_locality_fraction" => self.fused_locality_fraction = fv()?,
+            "gemm_eff.eff_lo" => self.gemm_eff.eff_lo = fv()?,
+            "gemm_eff.eff_hi" => self.gemm_eff.eff_hi = fv()?,
+            "gemm_eff.m_saturate" => {
+                self.gemm_eff.m_saturate =
+                    value.parse().map_err(|e| format!("{key}: {e}"))?
+            }
+            "torch_gemm_bonus" => self.torch_gemm_bonus = fv()?,
+            _ => return Err(format!("unknown hw config key: {key}")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::presets;
+
+    #[test]
+    fn presets_validate() {
+        presets::mi300x().validate().unwrap();
+        presets::mi325x().validate().unwrap();
+    }
+
+    #[test]
+    fn gemm_eff_monotone_in_m() {
+        let hw = presets::mi300x();
+        let mut prev = 0.0;
+        for m in [1usize, 4, 16, 64, 256, 1024, 4096, 16384] {
+            let e = hw.gemm_eff.at(m);
+            assert!(e >= prev, "efficiency not monotone at M={m}");
+            assert!((0.0..=1.0).contains(&e));
+            prev = e;
+        }
+        assert_eq!(hw.gemm_eff.at(1 << 20), hw.gemm_eff.eff_hi);
+    }
+
+    #[test]
+    fn set_field_overrides() {
+        let mut hw = presets::mi300x();
+        hw.set_field("hbm_bw", "1e12").unwrap();
+        assert_eq!(hw.hbm_bw, 1e12);
+        hw.set_field("gemm_eff.m_saturate", "512").unwrap();
+        assert_eq!(hw.gemm_eff.m_saturate, 512);
+        assert!(hw.set_field("nonsense", "1").is_err());
+        assert!(hw.set_field("hbm_bw", "abc").is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_values() {
+        let mut hw = presets::mi300x();
+        hw.fused_locality_fraction = 1.5;
+        assert!(hw.validate().is_err());
+        let mut hw2 = presets::mi300x();
+        hw2.fabric_aggregate_bw = hw2.link_bw / 2.0;
+        assert!(hw2.validate().is_err());
+    }
+}

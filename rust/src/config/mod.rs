@@ -1,0 +1,341 @@
+//! Configuration system: hardware presets, workload parameter sets, run
+//! protocol, and a config-file loader.
+//!
+//! The flow is: presets give a valid [`HwConfig`] baseline; an optional
+//! config file (TOML subset, see [`parse`]) and CLI `--set section.key=value`
+//! overrides are applied on top; validation runs last. Every experiment
+//! receives one immutable [`ExperimentConfig`] so runs are fully described
+//! by (config, seed).
+
+pub mod hw;
+pub mod parse;
+pub mod presets;
+
+pub use hw::{GemmEff, HwConfig};
+pub use parse::RawConfig;
+
+/// Measurement protocol (mirrors paper §5.1: 500 iterations + 100 warmup).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunProtocol {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Master seed; per-rank / per-iteration streams derive from it.
+    pub seed: u64,
+}
+
+impl Default for RunProtocol {
+    fn default() -> Self {
+        // The paper's protocol; reduce via config for quick runs.
+        RunProtocol { warmup_iters: 100, iters: 500, seed: 0x7AF5_EE }
+    }
+}
+
+/// All-Gather + GEMM workload parameters (paper §4.1, Fig. 9).
+/// A: (M, K) column-sharded over `world`; B: (K, N) resident per rank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgGemmConfig {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub world: usize,
+    /// Tile sizes for the fused kernels.
+    pub block_m: usize,
+    pub block_n: usize,
+    pub block_k: usize,
+}
+
+impl AgGemmConfig {
+    /// The paper's Figure 9 configuration at a given M.
+    pub fn paper_fig9(m: usize) -> AgGemmConfig {
+        AgGemmConfig { m, n: 28672, k: 8192, world: 8, block_m: 64, block_n: 256, block_k: 64 }
+    }
+
+    /// A small configuration for tests (everything divides evenly).
+    pub fn tiny(world: usize) -> AgGemmConfig {
+        AgGemmConfig { m: 8, n: 12, k: 8 * world, world, block_m: 4, block_n: 4, block_k: 4 }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.world == 0 {
+            return Err("world must be >= 1".into());
+        }
+        if self.k % self.world != 0 {
+            return Err(format!("K={} not divisible by world={}", self.k, self.world));
+        }
+        if self.m == 0 || self.n == 0 || self.k == 0 {
+            return Err("M, N, K must be positive".into());
+        }
+        if self.block_m == 0 || self.block_n == 0 || self.block_k == 0 {
+            return Err("block sizes must be positive".into());
+        }
+        if (self.k / self.world) % self.block_k != 0 {
+            return Err(format!(
+                "shard K ({}) not divisible by block_k ({})",
+                self.k / self.world,
+                self.block_k
+            ));
+        }
+        Ok(())
+    }
+
+    /// FLOPs of the full GEMM (2·M·N·K).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// Bytes of A each rank must receive from peers (fp16).
+    pub fn remote_a_bytes_per_rank(&self) -> u64 {
+        let shard = self.m * (self.k / self.world);
+        (shard * 2) as u64 * (self.world as u64 - 1)
+    }
+}
+
+/// Flash-Decode workload parameters (paper §4.2 / §5.3, Figs. 10–11).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlashDecodeConfig {
+    pub batch: usize,
+    pub q_heads: usize,
+    /// KV heads (grouped-query attention). The paper specifies "96 query
+    /// heads" (§5.3); the KV head count of the Llama-class model that
+    /// configuration comes from is 8. Memory traffic scales with KV heads,
+    /// attention FLOPs with query heads. Set equal to `q_heads` for MHA.
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Global KV length, sharded evenly across `world`.
+    pub kv_len_global: usize,
+    pub world: usize,
+    /// KV block size the local attention kernel iterates in.
+    pub kv_block: usize,
+    /// Head-group tiles for the fused producer-consumer pipeline: the
+    /// fused kernel pushes each group's partial the moment that group's
+    /// KV loop finishes (paper §4.2.5 "sending data as soon as it's
+    /// produced"). Must divide `q_heads`.
+    pub head_groups: usize,
+}
+
+impl FlashDecodeConfig {
+    /// The paper's Figure 10 configuration at a given global KV length.
+    pub fn paper_fig10(kv_len_global: usize) -> FlashDecodeConfig {
+        FlashDecodeConfig {
+            batch: 1,
+            q_heads: 96,
+            kv_heads: 8,
+            head_dim: 128,
+            kv_len_global,
+            world: 8,
+            kv_block: 256,
+            head_groups: 8,
+        }
+    }
+
+    /// Small configuration for tests.
+    pub fn tiny(world: usize) -> FlashDecodeConfig {
+        FlashDecodeConfig {
+            batch: 1,
+            q_heads: 4,
+            kv_heads: 4,
+            head_dim: 16,
+            kv_len_global: 32 * world,
+            world,
+            kv_block: 8,
+            head_groups: 2,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.world == 0 {
+            return Err("world must be >= 1".into());
+        }
+        if self.kv_len_global % self.world != 0 {
+            return Err(format!(
+                "kv_len_global={} not divisible by world={}",
+                self.kv_len_global, self.world
+            ));
+        }
+        let local = self.kv_len_global / self.world;
+        if local % self.kv_block != 0 {
+            return Err(format!("local KV ({local}) not divisible by kv_block ({})", self.kv_block));
+        }
+        if self.batch == 0 || self.q_heads == 0 || self.head_dim == 0 {
+            return Err("batch, q_heads, head_dim must be positive".into());
+        }
+        if self.kv_heads == 0 || self.q_heads % self.kv_heads != 0 {
+            return Err(format!(
+                "kv_heads ({}) must divide q_heads ({})",
+                self.kv_heads, self.q_heads
+            ));
+        }
+        if self.head_groups == 0 || self.q_heads % self.head_groups != 0 {
+            return Err(format!(
+                "head_groups ({}) must divide q_heads ({})",
+                self.head_groups, self.q_heads
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn kv_len_local(&self) -> usize {
+        self.kv_len_global / self.world
+    }
+
+    /// Bytes of K+V each rank streams from HBM per decode step (fp16).
+    /// The KV cache is stored per *KV head* (GQA).
+    pub fn local_kv_bytes(&self) -> u64 {
+        (self.batch * self.kv_heads * self.kv_len_local() * self.head_dim * 2 * 2) as u64
+    }
+
+    /// Bytes of one rank's partial result (o_partial + m + l, fp16 o and
+    /// f32 stats) pushed to every peer.
+    pub fn partial_bytes(&self) -> u64 {
+        let o = self.batch * self.q_heads * self.head_dim * 2;
+        let stats = self.batch * self.q_heads * 4 * 2; // m and l, f32
+        (o + stats) as u64
+    }
+}
+
+/// A fully-specified experiment: hardware model + protocol.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub hw: HwConfig,
+    pub protocol: RunProtocol,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig { hw: presets::mi300x(), protocol: RunProtocol::default() }
+    }
+}
+
+impl ExperimentConfig {
+    /// Build from an optional config file plus `section.key=value` overrides.
+    pub fn from_sources(path: Option<&str>, overrides: &[(String, String)]) -> Result<Self, String> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(p) = path {
+            let raw = RawConfig::load(p)?;
+            cfg.apply_raw(&raw)?;
+        }
+        for (k, v) in overrides {
+            cfg.apply_override(k, v)?;
+        }
+        cfg.hw.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed config file.
+    pub fn apply_raw(&mut self, raw: &RawConfig) -> Result<(), String> {
+        if let Some(name) = raw.get("hw", "preset") {
+            self.hw = presets::by_name(name).ok_or_else(|| format!("unknown hw preset: {name}"))?;
+        }
+        if let Some(section) = raw.section("hw") {
+            for (k, v) in section {
+                if k != "preset" {
+                    self.hw.set_field(k, v)?;
+                }
+            }
+        }
+        self.protocol.warmup_iters = raw.get_usize("run", "warmup_iters", self.protocol.warmup_iters)?;
+        self.protocol.iters = raw.get_usize("run", "iters", self.protocol.iters)?;
+        if let Some(seed) = raw.get("run", "seed") {
+            self.protocol.seed = seed.parse().map_err(|e| format!("run.seed: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Apply one `section.key=value` override.
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<(), String> {
+        match key.split_once('.') {
+            Some(("hw", "preset")) => {
+                self.hw =
+                    presets::by_name(value).ok_or_else(|| format!("unknown hw preset: {value}"))?;
+                Ok(())
+            }
+            Some(("hw", rest)) => self.hw.set_field(rest, value),
+            Some(("run", "warmup_iters")) => {
+                self.protocol.warmup_iters = value.parse().map_err(|e| format!("{key}: {e}"))?;
+                Ok(())
+            }
+            Some(("run", "iters")) => {
+                self.protocol.iters = value.parse().map_err(|e| format!("{key}: {e}"))?;
+                Ok(())
+            }
+            Some(("run", "seed")) => {
+                self.protocol.seed = value.parse().map_err(|e| format!("{key}: {e}"))?;
+                Ok(())
+            }
+            _ => Err(format!("unknown override key: {key}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_validate() {
+        for m in [16, 64, 1024, 8192] {
+            AgGemmConfig::paper_fig9(m).validate().unwrap();
+        }
+        for kv in [16384, 131072, 1048576] {
+            FlashDecodeConfig::paper_fig10(kv).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn tiny_configs_validate_for_all_world_sizes() {
+        for w in 1..=8 {
+            AgGemmConfig::tiny(w).validate().unwrap();
+            FlashDecodeConfig::tiny(w).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn ag_gemm_rejects_bad_sharding() {
+        let mut c = AgGemmConfig::tiny(4);
+        c.k = 10; // not divisible by 4
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn flash_decode_byte_accounting() {
+        let c = FlashDecodeConfig::paper_fig10(1 << 20);
+        assert_eq!(c.kv_len_local(), 1 << 17);
+        // K+V fp16: 8 KV heads * 128 dim * 131072 * 2 bytes * 2 tensors
+        assert_eq!(c.local_kv_bytes(), 8u64 * 128 * (1 << 17) * 2 * 2);
+        assert!(c.partial_bytes() < c.local_kv_bytes());
+    }
+
+    #[test]
+    fn experiment_config_from_overrides() {
+        let cfg = ExperimentConfig::from_sources(
+            None,
+            &[
+                ("hw.preset".to_string(), "mi325x".to_string()),
+                ("hw.launch_overhead_s".to_string(), "1e-5".to_string()),
+                ("run.iters".to_string(), "50".to_string()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.hw.name, "mi325x");
+        assert_eq!(cfg.hw.launch_overhead_s, 1e-5);
+        assert_eq!(cfg.protocol.iters, 50);
+    }
+
+    #[test]
+    fn experiment_config_from_file() {
+        let dir = std::env::temp_dir().join("taxfree_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.toml");
+        std::fs::write(&path, "[hw]\npreset = \"slow_fabric\"\n[run]\niters = 10\nseed = 42\n").unwrap();
+        let cfg = ExperimentConfig::from_sources(Some(path.to_str().unwrap()), &[]).unwrap();
+        assert_eq!(cfg.hw.name, "slow_fabric");
+        assert_eq!(cfg.protocol.iters, 10);
+        assert_eq!(cfg.protocol.seed, 42);
+    }
+
+    #[test]
+    fn unknown_override_rejected() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.apply_override("bogus.key", "1").is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Minimal config-file parser (TOML subset).
+//!
+//! No serde/toml crates are available offline, so this parses the subset we
+//! actually need: `[section]` headers, `key = value` pairs, `#` comments,
+//! bare strings / numbers / booleans. Values stay strings; typed structs
+//! pull what they need via their `set_field` methods.
+
+use std::collections::BTreeMap;
+
+/// Parsed config: `section -> key -> raw value string`.
+/// Keys outside any section land in the "" section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RawConfig {
+    pub sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl RawConfig {
+    /// Parse from text. Errors carry the 1-based line number.
+    pub fn parse(text: &str) -> Result<RawConfig, String> {
+        let mut cfg = RawConfig::default();
+        let mut section = String::new();
+        for (lineno, raw_line) in text.lines().enumerate() {
+            let line = strip_comment(raw_line).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                section = name.to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let val = unquote(v.trim());
+            cfg.sections.entry(section.clone()).or_default().insert(key.to_string(), val);
+        }
+        Ok(cfg)
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &str) -> Result<RawConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        RawConfig::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section).and_then(|s| s.get(key)).map(String::as_str)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, String>> {
+        self.sections.get(name)
+    }
+
+    /// Typed getters with defaults.
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("[{section}] {key}: {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("[{section}] {key}: {e}")),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> Result<bool, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(format!("[{section}] {key}: not a bool: {v}")),
+        }
+    }
+}
+
+/// Strip a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Remove surrounding double quotes if present.
+fn unquote(v: &str) -> String {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_pairs() {
+        let cfg = RawConfig::parse(
+            "top = 1\n[hw]\nname = \"mi300x\"  # preset\nhbm_bw = 5.3e12\n\n[run]\niters = 500\nwarm = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("", "top"), Some("1"));
+        assert_eq!(cfg.get("hw", "name"), Some("mi300x"));
+        assert_eq!(cfg.get_f64("hw", "hbm_bw", 0.0).unwrap(), 5.3e12);
+        assert_eq!(cfg.get_usize("run", "iters", 0).unwrap(), 500);
+        assert!(cfg.get_bool("run", "warm", false).unwrap());
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let cfg = RawConfig::parse("").unwrap();
+        assert_eq!(cfg.get_f64("x", "y", 3.5).unwrap(), 3.5);
+        assert_eq!(cfg.get_usize("x", "y", 7).unwrap(), 7);
+        assert!(!cfg.get_bool("x", "y", false).unwrap());
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let cfg = RawConfig::parse("k = \"a # b\"\n").unwrap();
+        assert_eq!(cfg.get("", "k"), Some("a # b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = RawConfig::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err2 = RawConfig::parse("[unterminated\n").unwrap_err();
+        assert!(err2.contains("line 1"), "{err2}");
+    }
+
+    #[test]
+    fn bad_typed_values_error() {
+        let cfg = RawConfig::parse("[a]\nx = pear\n").unwrap();
+        assert!(cfg.get_f64("a", "x", 0.0).is_err());
+        assert!(cfg.get_bool("a", "x", false).is_err());
+    }
+}

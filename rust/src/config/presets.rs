@@ -1,0 +1,139 @@
+//! Calibrated hardware presets (DESIGN.md §7).
+//!
+//! Numbers trace to: AMD MI300X/MI325X platform datasheets (HBM and fabric
+//! bandwidth, peak fp16), the paper's §5.1 (896 GB/s aggregate fabric per
+//! GPU), Spector et al. 2025 (kernel dispatch cost band), and the paper's
+//! own observations (§5.2 store-vs-load efficiency; Fig. 9 torch.matmul
+//! window). Skew / locality / efficiency-curve values are calibrated so the
+//! BSP-vs-fused gaps land in the paper's reported 10–20 % band — they are
+//! model parameters, not measurements, and EXPERIMENTS.md records the values
+//! used for every run.
+
+use super::hw::{GemmEff, HwConfig};
+
+/// AMD Instinct MI300X (the Flash-Decode testbed, paper §5.1).
+pub fn mi300x() -> HwConfig {
+    HwConfig {
+        name: "mi300x".to_string(),
+        // 5.3 TB/s HBM3 per GPU
+        hbm_bw: 5.3e12,
+        // 1307.4 TFLOPs peak fp16 (dense)
+        peak_fp16_flops: 1.3074e15,
+        // ~163 TFLOPs vector fp32
+        peak_vec_flops: 1.63e14,
+        // ROCm dispatch ~5-20us; 8us midpoint
+        launch_overhead_s: 8e-6,
+        // torch decode-step dispatch path (both sides pay it; see hw.rs)
+        host_step_overhead_s: 150e-6,
+        // minimum standalone-kernel wall time on a 304-CU part
+        kernel_min_s: 10e-6,
+        // remote-load stalls in the pull GEMM inner loop
+        pull_eff_penalty: 0.93,
+        // 896 GB/s aggregate over 7 links => 128 GB/s per peer link
+        link_bw: 128e9,
+        link_latency_s: 2e-6,
+        fabric_aggregate_bw: 896e9,
+        // paper §5.2: stores beat loads; calibrated 15% edge
+        rma_store_eff: 0.92,
+        rma_load_eff: 0.80,
+        // per-stage lognormal jitter across ranks
+        skew_sigma: 0.06,
+        // fused consumer keeps ~85% of producer bytes on-chip
+        fused_locality_fraction: 0.85,
+        gemm_eff: GemmEff { eff_lo: 0.04, eff_hi: 0.75, m_saturate: 2048 },
+        torch_gemm_bonus: 1.35,
+        torch_gemm_window: (8, 64),
+    }
+}
+
+/// AMD Instinct MI325X (the AG+GEMM testbed, paper §5.1).
+/// Same CDNA3 compute, 6 TB/s HBM3E, same fabric generation.
+pub fn mi325x() -> HwConfig {
+    HwConfig {
+        name: "mi325x".to_string(),
+        hbm_bw: 6.0e12,
+        peak_fp16_flops: 1.3074e15,
+        peak_vec_flops: 1.63e14,
+        launch_overhead_s: 8e-6,
+        host_step_overhead_s: 150e-6,
+        kernel_min_s: 10e-6,
+        pull_eff_penalty: 0.93,
+        link_bw: 128e9,
+        link_latency_s: 2e-6,
+        fabric_aggregate_bw: 896e9,
+        rma_store_eff: 0.92,
+        rma_load_eff: 0.80,
+        skew_sigma: 0.06,
+        fused_locality_fraction: 0.85,
+        gemm_eff: GemmEff { eff_lo: 0.04, eff_hi: 0.75, m_saturate: 2048 },
+        torch_gemm_bonus: 1.35,
+        torch_gemm_window: (8, 64),
+    }
+}
+
+/// A deliberately "slow-fabric" preset for ablations: halves link bandwidth
+/// and doubles latency, to show where fused patterns gain the most.
+pub fn slow_fabric() -> HwConfig {
+    let mut hw = mi300x();
+    hw.name = "slow_fabric".to_string();
+    hw.link_bw /= 2.0;
+    hw.fabric_aggregate_bw /= 2.0;
+    hw.link_latency_s *= 2.0;
+    hw
+}
+
+/// A "zero-tax" idealized preset: free launches, no skew, perfect locality.
+/// Used by tests to show all strategies converge when the taxes vanish.
+pub fn ideal() -> HwConfig {
+    let mut hw = mi300x();
+    hw.name = "ideal".to_string();
+    hw.launch_overhead_s = 0.0;
+    hw.host_step_overhead_s = 0.0;
+    hw.kernel_min_s = 0.0;
+    hw.skew_sigma = 0.0;
+    hw.fused_locality_fraction = 1.0;
+    hw.torch_gemm_bonus = 1.0;
+    hw.pull_eff_penalty = 1.0;
+    hw
+}
+
+/// Look up a preset by name.
+pub fn by_name(name: &str) -> Option<HwConfig> {
+    match name {
+        "mi300x" => Some(mi300x()),
+        "mi325x" => Some(mi325x()),
+        "slow_fabric" => Some(slow_fabric()),
+        "ideal" => Some(ideal()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolve_by_name() {
+        for n in ["mi300x", "mi325x", "slow_fabric", "ideal"] {
+            let hw = by_name(n).expect(n);
+            assert_eq!(hw.name, n);
+            hw.validate().unwrap();
+        }
+        assert!(by_name("h100").is_none());
+    }
+
+    #[test]
+    fn link_bw_times_peers_matches_aggregate() {
+        let hw = mi300x();
+        // 7 peer links at 128 GB/s = 896 GB/s aggregate (paper §5.1)
+        assert!((hw.link_bw * 7.0 - hw.fabric_aggregate_bw).abs() < 1e6);
+    }
+
+    #[test]
+    fn ideal_preset_is_tax_free() {
+        let hw = ideal();
+        assert_eq!(hw.launch_overhead_s, 0.0);
+        assert_eq!(hw.skew_sigma, 0.0);
+        assert_eq!(hw.fused_locality_fraction, 1.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Unified compute+communication autotuner — the paper's §6.3 future work,
+//! implemented: "By bringing communication parameters, such as the
+//! granularity of data transfer, into the same kernel as computation
+//! parameters like tile size, we can leverage a unified autotuning
+//! approach ... simultaneously optimizing for both computation and
+//! communication."
+//!
+//! The search space is (tile shape × transfer granularity × strategy); the
+//! objective is modeled end-to-end latency on the calibrated node. Because
+//! the DES is deterministic and fast (~µs per configuration), exhaustive
+//! search over the practical grid is feasible — no need for the
+//! heuristics a wall-clock tuner needs.
+
+use crate::config::{AgGemmConfig, FlashDecodeConfig, HwConfig};
+use crate::coordinator::{AgGemmStrategy, FlashDecodeStrategy};
+use crate::workloads::{ag_gemm, flash_decode};
+
+/// One evaluated AG+GEMM configuration.
+#[derive(Debug, Clone)]
+pub struct AgGemmTuneResult {
+    pub strategy: AgGemmStrategy,
+    pub block_k: usize,
+    pub latency_s: f64,
+}
+
+/// Tune AG+GEMM at a given shape: strategy × panel granularity (block_k).
+/// Returns all evaluated points sorted best-first.
+pub fn tune_ag_gemm(
+    base: &AgGemmConfig,
+    hw: &HwConfig,
+    seed: u64,
+    iters: usize,
+) -> Vec<AgGemmTuneResult> {
+    let shard_k = base.k / base.world;
+    let mut results = Vec::new();
+    for strategy in AgGemmStrategy::ALL {
+        for &block_k in &[32usize, 64, 128, 256, 512] {
+            if shard_k % block_k != 0 {
+                continue;
+            }
+            let mut cfg = base.clone();
+            cfg.block_k = block_k;
+            let latency_s = ag_gemm::mean_latency_s(&cfg, hw, strategy, seed, iters);
+            results.push(AgGemmTuneResult { strategy, block_k, latency_s });
+        }
+    }
+    assert!(!results.is_empty(), "no valid block_k for shard K = {shard_k}");
+    results.sort_by(|a, b| a.latency_s.partial_cmp(&b.latency_s).unwrap());
+    results
+}
+
+/// One evaluated Flash-Decode configuration.
+#[derive(Debug, Clone)]
+pub struct FlashDecodeTuneResult {
+    pub strategy: FlashDecodeStrategy,
+    pub head_groups: usize,
+    pub latency_s: f64,
+}
+
+/// Tune Flash Decode: strategy × push granularity (head groups — the
+/// communication-granularity axis the paper's fused kernel exposes).
+pub fn tune_flash_decode(
+    base: &FlashDecodeConfig,
+    hw: &HwConfig,
+    seed: u64,
+    iters: usize,
+) -> Vec<FlashDecodeTuneResult> {
+    let mut results = Vec::new();
+    for strategy in FlashDecodeStrategy::ALL {
+        for &head_groups in &[1usize, 2, 4, 8, 16, 32] {
+            if base.q_heads % head_groups != 0 {
+                continue;
+            }
+            let mut cfg = base.clone();
+            cfg.head_groups = head_groups;
+            let latency_s = flash_decode::mean_latency_s(&cfg, hw, strategy, seed, iters);
+            results.push(FlashDecodeTuneResult { strategy, head_groups, latency_s });
+        }
+    }
+    results.sort_by(|a, b| a.latency_s.partial_cmp(&b.latency_s).unwrap());
+    results
+}
+
+/// The tuner's top-line answer for a workload: best strategy + granularity.
+pub fn best_ag_gemm(base: &AgGemmConfig, hw: &HwConfig, seed: u64) -> AgGemmTuneResult {
+    tune_ag_gemm(base, hw, seed, 20).remove(0)
+}
+
+pub fn best_flash_decode(base: &FlashDecodeConfig, hw: &HwConfig, seed: u64) -> FlashDecodeTuneResult {
+    tune_flash_decode(base, hw, seed, 20).remove(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn tuner_picks_pull_at_small_m_push_at_large() {
+        let hw = presets::mi325x();
+        let small = best_ag_gemm(&AgGemmConfig::paper_fig9(2), &hw, 1);
+        assert_eq!(small.strategy, AgGemmStrategy::Pull, "{small:?}");
+        let large = best_ag_gemm(&AgGemmConfig::paper_fig9(4096), &hw, 1);
+        assert_eq!(large.strategy, AgGemmStrategy::Push, "{large:?}");
+    }
+
+    #[test]
+    fn tuner_picks_baseline_in_torch_window() {
+        let hw = presets::mi325x();
+        let mid = best_ag_gemm(&AgGemmConfig::paper_fig9(32), &hw, 1);
+        assert_eq!(mid.strategy, AgGemmStrategy::BaselineBsp, "{mid:?}");
+    }
+
+    #[test]
+    fn tuner_always_picks_fused_for_flash_decode() {
+        let hw = presets::mi300x();
+        for kv in [1usize << 15, 1 << 19] {
+            let best = best_flash_decode(&FlashDecodeConfig::paper_fig10(kv), &hw, 2);
+            assert_eq!(best.strategy, FlashDecodeStrategy::FullyFused, "kv={kv} {best:?}");
+        }
+    }
+
+    #[test]
+    fn results_are_sorted_and_complete() {
+        let hw = presets::mi300x();
+        let rs = tune_flash_decode(&FlashDecodeConfig::paper_fig10(1 << 17), &hw, 3, 5);
+        // 4 strategies x {1,2,4,8,16,32 | divides 96} = 4 x 6
+        assert_eq!(rs.len(), 24);
+        for w in rs.windows(2) {
+            assert!(w[0].latency_s <= w[1].latency_s);
+        }
+    }
+
+    #[test]
+    fn granularity_matters_for_fused() {
+        // fused with 1 head group (all-at-end push) must not beat a
+        // reasonably pipelined granularity
+        let hw = presets::mi300x();
+        let rs = tune_flash_decode(&FlashDecodeConfig::paper_fig10(1 << 19), &hw, 4, 20);
+        let lat = |g: usize| {
+            rs.iter()
+                .find(|r| r.strategy == FlashDecodeStrategy::FullyFused && r.head_groups == g)
+                .unwrap()
+                .latency_s
+        };
+        assert!(lat(8) <= lat(1) * 1.01, "g=8 {} vs g=1 {}", lat(8), lat(1));
+    }
+}

@@ -1,0 +1,351 @@
+//! Functional distributed Flash-Decode strategies (paper §4.2, Algorithm 4
+//! and the evolutionary stages §4.2.2–§4.2.5), executed with real data
+//! movement on the iris node.
+//!
+//! Setup (paper §4.2.1): the query Q [heads, dim] is replicated; the KV
+//! cache is sharded along the sequence dimension — rank r owns
+//! (K_r, V_r) of `kv_len_global / world` positions. Three logical stages:
+//! local partial attention (online softmax), exchange of partial states,
+//! global combine. Every rank ends with the identical final output.
+
+use std::sync::Arc;
+
+use crate::config::FlashDecodeConfig;
+use crate::iris::{run_node, HeapBuilder, RankCtx, SymmetricHeap};
+use crate::kernels::attention::{flash_decode_partial, PartialState};
+use crate::kernels::combine::{combine_all, OnlineCombiner};
+use crate::tensor::Tensor;
+
+/// The four Flash-Decode implementations evaluated in Figure 10.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlashDecodeStrategy {
+    /// RCCL baseline: partial → barrier → collective → barrier → combine.
+    BaselineBsp,
+    /// §4.2.3: the collective replaced by a standalone Iris all-gather
+    /// kernel — still bulk-synchronous, still pays all three taxes.
+    IrisAgBsp,
+    /// §4.2.4: producer pushes tiles + flags; the combine kernel uses
+    /// fine-grained per-source waits and starts on the first arrival.
+    FineGrainedWaits,
+    /// §4.2.5 / Algorithm 4: communication fused into the producer —
+    /// partials are pushed the moment they exist; no collective kernel,
+    /// no global barrier.
+    FullyFused,
+}
+
+impl FlashDecodeStrategy {
+    pub const ALL: [FlashDecodeStrategy; 4] = [
+        FlashDecodeStrategy::BaselineBsp,
+        FlashDecodeStrategy::IrisAgBsp,
+        FlashDecodeStrategy::FineGrainedWaits,
+        FlashDecodeStrategy::FullyFused,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FlashDecodeStrategy::BaselineBsp => "rccl_bsp",
+            FlashDecodeStrategy::IrisAgBsp => "iris_ag_bsp",
+            FlashDecodeStrategy::FineGrainedWaits => "fine_grained_waits",
+            FlashDecodeStrategy::FullyFused => "fully_fused",
+        }
+    }
+}
+
+const BUF_INBOX: &str = "fd_inbox"; // W partial-state slots (wire layout)
+const FLAGS_PARTIAL: &str = "fd_ready"; // W flags: partial s arrived
+const FLAGS_AG: &str = "fd_collective"; // W flags for the BSP collective
+
+/// Build the symmetric heap for a Flash-Decode node.
+pub fn build_heap(cfg: &FlashDecodeConfig) -> Arc<SymmetricHeap> {
+    let wire = PartialState::wire_len(cfg.q_heads, cfg.head_dim);
+    Arc::new(
+        HeapBuilder::new(cfg.world)
+            .buffer(BUF_INBOX, cfg.world * wire)
+            .flags(FLAGS_PARTIAL, cfg.world)
+            .flags(FLAGS_AG, cfg.world)
+            .build(),
+    )
+}
+
+fn local_partial(cfg: &FlashDecodeConfig, q: &Tensor, k: &Tensor, v: &Tensor) -> PartialState {
+    flash_decode_partial(q, k, v, cfg.q_heads, cfg.kv_len_local(), cfg.kv_block)
+}
+
+/// BSP baseline (§4.2.2) and the Iris-AG variant (§4.2.3). The only
+/// difference is who implements the collective; both keep the
+/// Compute–Wait–Collective–Wait–Compute shape. `rccl` selects the
+/// barrier-wrapped collective.
+fn bsp_round(
+    ctx: &RankCtx,
+    cfg: &FlashDecodeConfig,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    round: u64,
+    rccl: bool,
+) -> Tensor {
+    let p = local_partial(cfg, q, k, v);
+    let wire = p.to_wire();
+    let gathered = if rccl {
+        crate::collectives::all_gather_bsp(ctx, &wire, BUF_INBOX, FLAGS_AG, round)
+    } else {
+        // standalone Iris AG kernel: flag-complete, but the consumer still
+        // waits for the *entire* collective before combining
+        crate::collectives::all_gather_push(ctx, &wire, BUF_INBOX, FLAGS_AG, round)
+    };
+    let wl = PartialState::wire_len(cfg.q_heads, cfg.head_dim);
+    let partials: Vec<PartialState> = (0..cfg.world)
+        .map(|s| PartialState::from_wire(&gathered[s * wl..(s + 1) * wl], cfg.q_heads, cfg.head_dim))
+        .collect();
+    combine_all(&partials, cfg.q_heads, cfg.head_dim)
+}
+
+/// §4.2.4 Fine-Grained Waits: push side unchanged in spirit (a producer
+/// pushes its partial to every peer and signals), but the combine kernel
+/// folds each partial in *as it arrives* instead of waiting for the whole
+/// collective.
+fn fine_grained_round(
+    ctx: &RankCtx,
+    cfg: &FlashDecodeConfig,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    round: u64,
+) -> Tensor {
+    let r = ctx.rank();
+    let wl = PartialState::wire_len(cfg.q_heads, cfg.head_dim);
+    let p = local_partial(cfg, q, k, v);
+    let wire = p.to_wire();
+
+    // producer side: deliver to own inbox + all peers, signalling per tile
+    ctx.store_local(BUF_INBOX, r * wl, &wire);
+    ctx.signal(r, FLAGS_PARTIAL, r);
+    for d in ctx.peers() {
+        ctx.remote_store(d, BUF_INBOX, r * wl, &wire);
+        ctx.signal(d, FLAGS_PARTIAL, r);
+    }
+
+    // consumer side: fine-grained waits — fold in source s as soon as its
+    // flag arrives (own partial is already local, fold it first)
+    let mut comb = OnlineCombiner::new(cfg.q_heads, cfg.head_dim);
+    comb.add(&p);
+    for s in ctx.peers().collect::<Vec<_>>() {
+        ctx.wait_flag_ge(FLAGS_PARTIAL, s, round).expect("fine-grained wait");
+        let data = ctx.load_local_vec(BUF_INBOX, s * wl, wl);
+        comb.add(&PartialState::from_wire(&data, cfg.q_heads, cfg.head_dim));
+    }
+    comb.finish()
+}
+
+/// §4.2.5 / Algorithm 4 — Fully Fused: one logical kernel. Part 1 computes
+/// the local partial and pushes it to every peer the moment it exists
+/// (fused producer); part 2 is the concurrent global reduction with
+/// spin-waits. Functionally the fused producer pushes *before* doing any
+/// consuming work, which is the property the fine-grained variant lacks
+/// (there the producer finishes its full local stage before the separate
+/// AG kernel runs — in the timing twin that difference is the launch +
+/// producer-side bulk-sync tax).
+fn fused_round(
+    ctx: &RankCtx,
+    cfg: &FlashDecodeConfig,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    round: u64,
+) -> Tensor {
+    let r = ctx.rank();
+    let wl = PartialState::wire_len(cfg.q_heads, cfg.head_dim);
+
+    // Part 1: fused local attention + asynchronous push
+    let p = local_partial(cfg, q, k, v);
+    let wire = p.to_wire();
+    for d in ctx.peers() {
+        ctx.remote_store(d, BUF_INBOX, r * wl, &wire);
+        ctx.signal(d, FLAGS_PARTIAL, r);
+    }
+    // own slot is a local copy
+    ctx.store_local(BUF_INBOX, r * wl, &wire);
+    ctx.signal(r, FLAGS_PARTIAL, r);
+
+    // Part 2: concurrent global reduction (spin-wait per source, fold on
+    // arrival; iteration order staggered by rank)
+    let mut comb = OnlineCombiner::new(cfg.q_heads, cfg.head_dim);
+    for s in std::iter::once(r).chain(ctx.peers()) {
+        ctx.wait_flag_ge(FLAGS_PARTIAL, s, round).expect("fused reduction wait");
+        let data = ctx.load_local_vec(BUF_INBOX, s * wl, wl);
+        comb.add(&PartialState::from_wire(&data, cfg.q_heads, cfg.head_dim));
+    }
+    comb.finish()
+}
+
+/// Run `rounds` iterations of `strategy` on a fresh functional node.
+/// `k_shards[r]` / `v_shards[r]` are rank r's KV shard, shaped
+/// [heads * kv_len_local, dim]. Returns every rank's final output
+/// [heads, dim] (identical across ranks up to combine order).
+pub fn run(
+    cfg: &FlashDecodeConfig,
+    strategy: FlashDecodeStrategy,
+    q: &Tensor,
+    k_shards: &[Tensor],
+    v_shards: &[Tensor],
+    rounds: u64,
+) -> Vec<Tensor> {
+    cfg.validate().expect("invalid FlashDecodeConfig");
+    assert_eq!(
+        cfg.kv_heads, cfg.q_heads,
+        "functional path implements MHA; GQA is modeled in the timing twin"
+    );
+    assert_eq!(k_shards.len(), cfg.world);
+    assert_eq!(v_shards.len(), cfg.world);
+    let heap = build_heap(cfg);
+    let cfg = cfg.clone();
+    let q = q.clone();
+    let k_shards = k_shards.to_vec();
+    let v_shards = v_shards.to_vec();
+    run_node(heap, move |ctx| {
+        let r = ctx.rank();
+        let (k, v) = (&k_shards[r], &v_shards[r]);
+        let mut out = Tensor::zeros(&[cfg.q_heads, cfg.head_dim]);
+        for round in 1..=rounds {
+            out = match strategy {
+                FlashDecodeStrategy::BaselineBsp => bsp_round(&ctx, &cfg, &q, k, v, round, true),
+                FlashDecodeStrategy::IrisAgBsp => bsp_round(&ctx, &cfg, &q, k, v, round, false),
+                FlashDecodeStrategy::FineGrainedWaits => {
+                    fine_grained_round(&ctx, &cfg, &q, k, v, round)
+                }
+                FlashDecodeStrategy::FullyFused => fused_round(&ctx, &cfg, &q, k, v, round),
+            };
+            ctx.barrier(); // serialize iterations (measurement protocol)
+        }
+        out
+    })
+}
+
+/// Build random fp16 Q and per-rank KV shards plus the concatenated full
+/// KV (for reference checks). Returns (q, k_shards, v_shards, k_full, v_full).
+pub fn make_inputs(
+    cfg: &FlashDecodeConfig,
+    seed: u64,
+) -> (Tensor, Vec<Tensor>, Vec<Tensor>, Tensor, Tensor) {
+    let mut rng = crate::util::Prng::new(seed);
+    let (h, d) = (cfg.q_heads, cfg.head_dim);
+    let local = cfg.kv_len_local();
+    let total = cfg.kv_len_global;
+    let mut q = Tensor::rand(&[h, d], 1.0, &mut rng);
+    q.quantize_f16();
+    let mut k_shards = Vec::new();
+    let mut v_shards = Vec::new();
+    for _ in 0..cfg.world {
+        let mut k = Tensor::rand(&[h * local, d], 1.0, &mut rng);
+        let mut v = Tensor::rand(&[h * local, d], 1.0, &mut rng);
+        k.quantize_f16();
+        v.quantize_f16();
+        k_shards.push(k);
+        v_shards.push(v);
+    }
+    // full KV: concatenate shard sequences per head
+    let mut k_full = Tensor::zeros(&[h * total, d]);
+    let mut v_full = Tensor::zeros(&[h * total, d]);
+    for head in 0..h {
+        for (s, (ks, vs)) in k_shards.iter().zip(&v_shards).enumerate() {
+            for r in 0..local {
+                for j in 0..d {
+                    k_full.set2(head * total + s * local + r, j, ks.at2(head * local + r, j));
+                    v_full.set2(head * total + s * local + r, j, vs.at2(head * local + r, j));
+                }
+            }
+        }
+    }
+    (q, k_shards, v_shards, k_full, v_full)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::linalg::decode_attention_ref;
+
+    fn check(cfg: &FlashDecodeConfig, strategy: FlashDecodeStrategy, seed: u64) {
+        let (q, ks, vs, kf, vf) = make_inputs(cfg, seed);
+        let expect = decode_attention_ref(&q, &kf, &vf, cfg.q_heads, cfg.kv_len_global);
+        let outs = run(cfg, strategy, &q, &ks, &vs, 1);
+        assert_eq!(outs.len(), cfg.world);
+        for o in outs {
+            o.assert_allclose(&expect, 3e-3, 3e-3);
+        }
+    }
+
+    #[test]
+    fn baseline_correct() {
+        for w in [1usize, 2, 4, 8] {
+            check(&FlashDecodeConfig::tiny(w), FlashDecodeStrategy::BaselineBsp, 90 + w as u64);
+        }
+    }
+
+    #[test]
+    fn iris_ag_correct() {
+        for w in [2usize, 8] {
+            check(&FlashDecodeConfig::tiny(w), FlashDecodeStrategy::IrisAgBsp, 100 + w as u64);
+        }
+    }
+
+    #[test]
+    fn fine_grained_correct() {
+        for w in [1usize, 2, 4, 8] {
+            check(
+                &FlashDecodeConfig::tiny(w),
+                FlashDecodeStrategy::FineGrainedWaits,
+                110 + w as u64,
+            );
+        }
+    }
+
+    #[test]
+    fn fused_correct() {
+        for w in [1usize, 2, 4, 8] {
+            check(&FlashDecodeConfig::tiny(w), FlashDecodeStrategy::FullyFused, 120 + w as u64);
+        }
+    }
+
+    #[test]
+    fn all_strategies_agree_closely() {
+        let cfg = FlashDecodeConfig::tiny(4);
+        let (q, ks, vs, _, _) = make_inputs(&cfg, 130);
+        let base = run(&cfg, FlashDecodeStrategy::BaselineBsp, &q, &ks, &vs, 1);
+        for s in [
+            FlashDecodeStrategy::IrisAgBsp,
+            FlashDecodeStrategy::FineGrainedWaits,
+            FlashDecodeStrategy::FullyFused,
+        ] {
+            let outs = run(&cfg, s, &q, &ks, &vs, 1);
+            for (a, b) in outs.iter().zip(&base) {
+                a.assert_allclose(b, 1e-5, 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_round_stable() {
+        let cfg = FlashDecodeConfig::tiny(4);
+        let (q, ks, vs, kf, vf) = make_inputs(&cfg, 131);
+        let expect = decode_attention_ref(&q, &kf, &vf, cfg.q_heads, cfg.kv_len_global);
+        let outs = run(&cfg, FlashDecodeStrategy::FullyFused, &q, &ks, &vs, 7);
+        for o in outs {
+            o.assert_allclose(&expect, 3e-3, 3e-3);
+        }
+    }
+
+    #[test]
+    fn uneven_head_dim_combo() {
+        let cfg = FlashDecodeConfig {
+            batch: 1,
+            q_heads: 5,
+            kv_heads: 5,
+            head_dim: 24,
+            kv_len_global: 48,
+            world: 3,
+            kv_block: 4,
+            head_groups: 1,
+        };
+        check(&cfg, FlashDecodeStrategy::FullyFused, 132);
+    }
+}

@@ -1,0 +1,20 @@
+//! The L3 coordinator: rank engines executing the paper's distributed
+//! strategies with real data movement (the *functional* twin of the
+//! timing model in [`crate::workloads`]).
+//!
+//! * [`ag_gemm`] — All-Gather + GEMM (paper §4.1): baseline / pull / push;
+//! * [`flash_decode`] — distributed Flash Decode (paper §4.2): the four
+//!   evolutionary stages from RCCL-BSP to fully fused.
+//!
+//! Every strategy is validated against the dense references in
+//! [`crate::tensor::linalg`]; strategy-equivalence (all strategies produce
+//! the same output) is the core correctness invariant of the paper — the
+//! fused patterns change *when and where* data moves, never *what* is
+//! computed.
+
+pub mod ag_gemm;
+pub mod autotune;
+pub mod flash_decode;
+
+pub use ag_gemm::AgGemmStrategy;
+pub use flash_decode::FlashDecodeStrategy;

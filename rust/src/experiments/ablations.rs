@@ -1,0 +1,125 @@
+//! Ablation studies for the design choices DESIGN.md calls out: which tax
+//! matters where, how sensitive the fused advantage is to each model
+//! constant, and what the unified autotuner (§6.3) buys.
+
+use crate::config::{presets, FlashDecodeConfig, HwConfig};
+use crate::coordinator::autotune;
+use crate::coordinator::FlashDecodeStrategy;
+use crate::util::Table;
+use crate::workloads::flash_decode;
+
+/// Fused-vs-baseline speedup with each tax individually disabled — the
+/// "which tax buys what" decomposition of the paper's Figure 10 gains.
+pub fn tax_knockout(kv: usize, seed: u64, iters: usize) -> Table {
+    let cfg = FlashDecodeConfig::paper_fig10(kv);
+    let speedup = |hw: &HwConfig| {
+        let b = flash_decode::mean_latency_s(&cfg, hw, FlashDecodeStrategy::BaselineBsp, seed, iters);
+        let f = flash_decode::mean_latency_s(&cfg, hw, FlashDecodeStrategy::FullyFused, seed, iters);
+        b / f
+    };
+    let mut t = Table::new(&format!("tax knockout — fused speedup at {}K KV", kv >> 10))
+        .header(vec!["model variant", "fused speedup", "delta vs full"]);
+    let full = speedup(&presets::mi300x());
+    let mut row = |name: &str, hw: HwConfig| {
+        let s = speedup(&hw);
+        t.row(vec![name.to_string(), format!("{s:.3}x"), format!("{:+.3}", s - full)]);
+    };
+    row("full model (all taxes)", presets::mi300x());
+    let mut no_launch = presets::mi300x();
+    no_launch.launch_overhead_s = 0.0;
+    no_launch.kernel_min_s = 0.0;
+    row("launch tax removed", no_launch);
+    let mut no_skew = presets::mi300x();
+    no_skew.skew_sigma = 0.0;
+    row("bulk-sync tax removed (no skew)", no_skew);
+    let mut no_hbm = presets::mi300x();
+    no_hbm.hbm_bw = f64::INFINITY;
+    row("inter-kernel tax removed (free HBM)", no_hbm);
+    row("all removed (ideal)", presets::ideal());
+    t
+}
+
+/// Sensitivity of the fused advantage to the calibrated constants —
+/// documents how robust the reproduction band is to calibration error.
+pub fn sensitivity(kv: usize, seed: u64, iters: usize) -> Table {
+    let cfg = FlashDecodeConfig::paper_fig10(kv);
+    let speedup = |hw: &HwConfig| {
+        let b = flash_decode::mean_latency_s(&cfg, hw, FlashDecodeStrategy::BaselineBsp, seed, iters);
+        let f = flash_decode::mean_latency_s(&cfg, hw, FlashDecodeStrategy::FullyFused, seed, iters);
+        b / f
+    };
+    let mut t = Table::new(&format!("calibration sensitivity at {}K KV", kv >> 10))
+        .header(vec!["constant", "0.5x", "1x", "2x"]);
+    let mut row = |name: &str, set: &dyn Fn(&mut HwConfig, f64)| {
+        let s = |mult: f64| {
+            let mut hw = presets::mi300x();
+            set(&mut hw, mult);
+            format!("{:.3}x", speedup(&hw))
+        };
+        t.row(vec![name.to_string(), s(0.5), s(1.0), s(2.0)]);
+    };
+    row("launch_overhead_s", &|hw, m| hw.launch_overhead_s *= m);
+    row("skew_sigma", &|hw, m| hw.skew_sigma *= m);
+    row("host_step_overhead_s", &|hw, m| hw.host_step_overhead_s *= m);
+    row("link_latency_s", &|hw, m| hw.link_latency_s *= m);
+    row("hbm_bw", &|hw, m| hw.hbm_bw *= m);
+    t
+}
+
+/// What the §6.3 unified autotuner buys: tuned (strategy, granularity)
+/// vs the paper's fixed fused configuration, per KV length.
+pub fn autotune_gains(seed: u64, iters: usize) -> Table {
+    let hw = presets::mi300x();
+    let mut t = Table::new("unified autotuner (paper §6.3) — tuned vs fixed fused config")
+        .header(vec!["global KV", "fixed fused ms", "tuned ms", "tuned config", "gain"]);
+    for kv in [1usize << 14, 1 << 16, 1 << 18, 1 << 20] {
+        let cfg = FlashDecodeConfig::paper_fig10(kv);
+        let fixed =
+            flash_decode::mean_latency_s(&cfg, &hw, FlashDecodeStrategy::FullyFused, seed, iters);
+        let results = autotune::tune_flash_decode(&cfg, &hw, seed, iters);
+        let best = &results[0];
+        t.row(vec![
+            format!("{}K", kv >> 10),
+            format!("{:.4}", fixed * 1e3),
+            format!("{:.4}", best.latency_s * 1e3),
+            format!("{} g={}", best.strategy.name(), best.head_groups),
+            format!("{:.1}%", 100.0 * (fixed - best.latency_s) / fixed),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knockout_table_has_five_variants() {
+        let t = tax_knockout(1 << 17, 1, 10);
+        assert_eq!(t.n_rows(), 5);
+        let s = t.render();
+        assert!(s.contains("ideal"));
+    }
+
+    #[test]
+    fn sensitivity_covers_all_constants() {
+        let t = sensitivity(1 << 17, 1, 5);
+        assert_eq!(t.n_rows(), 5);
+    }
+
+    #[test]
+    fn autotuner_never_loses_to_fixed_config() {
+        let t = autotune_gains(2, 10);
+        let s = t.render();
+        // every gain row should be >= -0.0% (tuner includes the fixed
+        // config in its search space, so it can't do worse)
+        for line in s.lines().skip(2) {
+            if let Some(pct) = line.split_whitespace().last() {
+                if let Some(stripped) = pct.strip_suffix('%') {
+                    let v: f64 = stripped.parse().unwrap();
+                    assert!(v >= -0.5, "tuner lost: {line}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Extension experiment (paper §6.2): fused gradient All-Reduce for
+//! training — how much a bucket-level fused all-reduce overlapped with the
+//! backward pass buys over the BSP pattern, across model scales and
+//! bucket granularities.
+
+use crate::config::{presets, HwConfig};
+use crate::util::Table;
+use crate::workloads::all_reduce::{mean_latency_s, AllReduceConfig, AllReduceStrategy};
+
+/// Sweep model scale (gradient elements per rank) at W=8.
+pub fn scale_sweep(hw: &HwConfig, seed: u64, iters: usize) -> Table {
+    let mut t = Table::new("extension §6.2 — fused all-reduce vs BSP (W=8, 32 buckets)")
+        .header(vec!["grad params", "bsp ms", "fused ms", "speedup"]);
+    for (label, elems, backward_s) in [
+        ("125M", 125_000_000usize, 30e-3),
+        ("350M", 350_000_000, 80e-3),
+        ("1.3B", 1_300_000_000, 280e-3),
+    ] {
+        let cfg = AllReduceConfig { grad_elems: elems, buckets: 32, world: 8, backward_s };
+        let b = mean_latency_s(&cfg, hw, AllReduceStrategy::BaselineBsp, seed, iters);
+        let f = mean_latency_s(&cfg, hw, AllReduceStrategy::FusedBuckets, seed, iters);
+        t.row(vec![
+            label.to_string(),
+            format!("{:.3}", b * 1e3),
+            format!("{:.3}", f * 1e3),
+            format!("{:.3}x", b / f),
+        ]);
+    }
+    t
+}
+
+/// Sweep bucket granularity (the fusion's communication-granularity axis).
+pub fn bucket_sweep(hw: &HwConfig, seed: u64, iters: usize) -> Table {
+    let mut t = Table::new("bucket granularity (125M grads, W=8)")
+        .header(vec!["buckets", "fused ms", "vs bsp"]);
+    let cfg0 = AllReduceConfig::dp_1b(8);
+    let b = mean_latency_s(&cfg0, hw, AllReduceStrategy::BaselineBsp, seed, iters);
+    for buckets in [1usize, 4, 8, 16, 32, 64] {
+        let mut cfg = cfg0.clone();
+        cfg.buckets = buckets;
+        // keep divisibility
+        cfg.grad_elems = cfg.grad_elems / buckets * buckets;
+        let f = mean_latency_s(&cfg, hw, AllReduceStrategy::FusedBuckets, seed, iters);
+        t.row(vec![
+            buckets.to_string(),
+            format!("{:.3}", f * 1e3),
+            format!("{:.3}x", b / f),
+        ]);
+    }
+    t
+}
+
+/// Run and print both tables (the `experiments allreduce` subcommand).
+pub fn run(seed: u64, iters: usize) {
+    let hw = presets::mi300x();
+    scale_sweep(&hw, seed, iters).print();
+    println!();
+    bucket_sweep(&hw, seed, iters).print();
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fused_wins_at_every_scale() {
+        let t = scale_sweep(&presets::mi300x(), 1, 10);
+        assert_eq!(t.n_rows(), 3);
+        let s = t.render();
+        // skip title, header, separator
+        for line in s.lines().skip(3) {
+            let speedup: f64 =
+                line.split_whitespace().last().unwrap().trim_end_matches('x').parse().unwrap();
+            assert!(speedup > 1.0, "fused must win: {line}");
+        }
+    }
+
+    #[test]
+    fn bucket_sweep_covers_grid() {
+        let t = bucket_sweep(&presets::mi300x(), 1, 5);
+        assert_eq!(t.n_rows(), 6);
+    }
+}

@@ -1,0 +1,94 @@
+//! Figure 11: Flash-Decode scaling — execution time of the fused
+//! implementation as GPU count grows from 1 to 8, per global KV length.
+//! Expected shape (paper §5.3): strong (sub-linear) scaling at large KV,
+//! near-flat at 32K where fixed costs dominate.
+
+use crate::config::{FlashDecodeConfig, HwConfig};
+use crate::coordinator::FlashDecodeStrategy;
+use crate::util::Table;
+use crate::workloads::flash_decode;
+
+/// One row: a KV length with the time at each GPU count.
+#[derive(Debug, Clone)]
+pub struct Fig11Row {
+    pub kv_len: usize,
+    /// (world, fused latency ms), in increasing world order.
+    pub times_ms: Vec<(usize, f64)>,
+}
+
+pub const KV_SWEEP: [usize; 4] = [1 << 15, 1 << 17, 1 << 19, 1 << 20];
+pub const WORLDS: [usize; 4] = [1, 2, 4, 8];
+
+/// Run the Figure 11 sweep.
+pub fn fig11(hw: &HwConfig, seed: u64, iters: usize) -> Vec<Fig11Row> {
+    KV_SWEEP
+        .iter()
+        .map(|&kv| {
+            let times_ms = WORLDS
+                .iter()
+                .map(|&w| {
+                    let mut cfg = FlashDecodeConfig::paper_fig10(kv);
+                    cfg.world = w;
+                    let ms = flash_decode::mean_latency_s(
+                        &cfg,
+                        hw,
+                        FlashDecodeStrategy::FullyFused,
+                        seed,
+                        iters,
+                    ) * 1e3;
+                    (w, ms)
+                })
+                .collect();
+            Fig11Row { kv_len: kv, times_ms }
+        })
+        .collect()
+}
+
+fn kv_label(kv: usize) -> String {
+    if kv >= 1 << 20 { format!("{}M", kv >> 20) } else { format!("{}K", kv >> 10) }
+}
+
+/// Render the figure as a table (plus the 1→8 scaling factor).
+pub fn render(rows: &[Fig11Row], hw: &HwConfig) -> Table {
+    let mut t = Table::new(&format!("Figure 11 — Flash Decode scaling (fused, {})", hw.name))
+        .header(vec!["global KV", "1 GPU ms", "2 GPU ms", "4 GPU ms", "8 GPU ms", "1->8 x"]);
+    for r in rows {
+        let get = |w: usize| r.times_ms.iter().find(|(ww, _)| *ww == w).unwrap().1;
+        t.row(vec![
+            kv_label(r.kv_len),
+            format!("{:.4}", get(1)),
+            format!("{:.4}", get(2)),
+            format!("{:.4}", get(4)),
+            format!("{:.4}", get(8)),
+            format!("{:.2}", get(1) / get(8)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn fig11_reproduces_paper_shape() {
+        let rows = fig11(&presets::mi300x(), 4, 10);
+        assert_eq!(rows.len(), KV_SWEEP.len());
+        let factor = |r: &Fig11Row| r.times_ms[0].1 / r.times_ms[3].1;
+        // 32K: minimal improvement from parallelism (paper §5.3)
+        assert!(factor(&rows[0]) < 2.0, "32K factor {}", factor(&rows[0]));
+        // 1M: substantial reduction, but not linear
+        let f1m = factor(&rows[3]);
+        assert!(f1m > 3.0 && f1m < 8.0, "1M factor {f1m}");
+        // scaling factor grows with KV length
+        for w in rows.windows(2) {
+            assert!(factor(&w[1]) >= factor(&w[0]) * 0.98);
+        }
+        // time decreases monotonically with world at 1M
+        let big = &rows[3].times_ms;
+        for pair in big.windows(2) {
+            assert!(pair[1].1 < pair[0].1);
+        }
+    }
+}

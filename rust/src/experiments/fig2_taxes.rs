@@ -1,0 +1,101 @@
+//! Figure 2: the anatomy of the Three Taxes — where the BSP pattern's time
+//! goes, and which taxes each strategy removes. This regenerates the
+//! paper's conceptual figure as measured (simulated) numbers: a breakdown
+//! per strategy for a representative workload of each family.
+
+use crate::config::{AgGemmConfig, FlashDecodeConfig, HwConfig};
+use crate::coordinator::{AgGemmStrategy, FlashDecodeStrategy};
+use crate::metrics::TaxLedger;
+use crate::util::{fmt_ns, Table};
+use crate::workloads::{ag_gemm, flash_decode};
+
+/// Tax breakdown for one strategy.
+#[derive(Debug, Clone)]
+pub struct TaxRow {
+    pub strategy: &'static str,
+    pub ledger: TaxLedger,
+}
+
+/// Run the breakdown across all strategies of both workloads.
+/// Returns (ag_gemm rows, flash_decode rows).
+pub fn fig2(hw: &HwConfig, seed: u64) -> (Vec<TaxRow>, Vec<TaxRow>) {
+    let ag_cfg = AgGemmConfig::paper_fig9(64);
+    let ag = AgGemmStrategy::ALL
+        .iter()
+        .map(|&s| TaxRow {
+            strategy: s.name(),
+            ledger: ag_gemm::simulate(&ag_cfg, hw, s, seed).ledger,
+        })
+        .collect();
+    let fd_cfg = FlashDecodeConfig::paper_fig10(1 << 18);
+    let fd = FlashDecodeStrategy::ALL
+        .iter()
+        .map(|&s| TaxRow {
+            strategy: s.name(),
+            ledger: flash_decode::simulate(&fd_cfg, hw, s, seed).ledger,
+        })
+        .collect();
+    (ag, fd)
+}
+
+/// Render one workload's breakdown table.
+pub fn render(rows: &[TaxRow], title: &str) -> Table {
+    let mut t = Table::new(title).header(vec![
+        "strategy",
+        "launches",
+        "launch tax",
+        "bulk-sync tax",
+        "inter-kernel tax",
+        "total tax",
+        "makespan",
+    ]);
+    for r in rows {
+        let l = &r.ledger;
+        t.row(vec![
+            r.strategy.to_string(),
+            l.launches.to_string(),
+            fmt_ns(l.launch_s * 1e9),
+            fmt_ns(l.bulk_sync_s * 1e9),
+            fmt_ns(l.inter_kernel_s * 1e9),
+            fmt_ns(l.total_tax_s() * 1e9),
+            fmt_ns(l.makespan_s * 1e9),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn taxes_vanish_along_the_evolution() {
+        let (ag, fd) = fig2(&presets::mi300x(), 5);
+        assert_eq!(ag.len(), 3);
+        assert_eq!(fd.len(), 4);
+        // AG+GEMM: baseline pays all three; pull pays none of them
+        let base = &ag[0].ledger;
+        assert!(base.launch_s > 0.0 && base.bulk_sync_s > 0.0 && base.inter_kernel_s > 0.0);
+        let pull = &ag[1].ledger;
+        assert_eq!(pull.bulk_sync_s + pull.inter_kernel_s, 0.0);
+        // Flash Decode: the evolution strictly reduces total tax
+        let taxes: Vec<f64> = fd.iter().map(|r| r.ledger.total_tax_s()).collect();
+        assert!(taxes[2] < taxes[0], "fine-grained < baseline");
+        assert!(taxes[3] < taxes[2], "fused < fine-grained");
+        // fused pays only its single launch
+        let fused = &fd[3].ledger;
+        assert_eq!(fused.bulk_sync_s, 0.0);
+        assert_eq!(fused.inter_kernel_s, 0.0);
+        assert_eq!(fused.launches, 8);
+    }
+
+    #[test]
+    fn render_contains_strategies() {
+        let (ag, fd) = fig2(&presets::mi300x(), 6);
+        let s = render(&ag, "ag").render() + &render(&fd, "fd").render();
+        for name in ["rccl_bsp", "pull", "push", "fine_grained_waits", "fully_fused"] {
+            assert!(s.contains(name), "missing {name}");
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Figure 9: All-Gather + GEMM speedup vs the RCCL + torch baseline.
+//!
+//! Paper configuration (§5.2): N = 28672, K = 8192, eight GPUs, M swept;
+//! series = Pull and Push speedups relative to the baseline. Expected
+//! shape: pull best at small M, push best at M >= 128, baseline ahead in
+//! the torch-optimized M ∈ [8, 64] window.
+
+use crate::config::{AgGemmConfig, HwConfig};
+use crate::coordinator::AgGemmStrategy;
+use crate::util::Table;
+use crate::workloads::ag_gemm;
+
+/// One row of Figure 9.
+#[derive(Debug, Clone)]
+pub struct Fig9Row {
+    pub m: usize,
+    pub baseline_ms: f64,
+    pub pull_ms: f64,
+    pub push_ms: f64,
+    pub pull_speedup: f64,
+    pub push_speedup: f64,
+}
+
+/// The M sweep of the figure (powers of two through the paper's range).
+pub const M_SWEEP: [usize; 14] =
+    [1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192];
+
+/// Run the Figure 9 sweep. `iters` simulated iterations per point.
+pub fn fig9(hw: &HwConfig, seed: u64, iters: usize) -> Vec<Fig9Row> {
+    M_SWEEP
+        .iter()
+        .map(|&m| {
+            let cfg = AgGemmConfig::paper_fig9(m);
+            let lat = |s: AgGemmStrategy| {
+                ag_gemm::mean_latency_s(&cfg, hw, s, seed, iters) * 1e3
+            };
+            let baseline_ms = lat(AgGemmStrategy::BaselineBsp);
+            let pull_ms = lat(AgGemmStrategy::Pull);
+            let push_ms = lat(AgGemmStrategy::Push);
+            Fig9Row {
+                m,
+                baseline_ms,
+                pull_ms,
+                push_ms,
+                pull_speedup: baseline_ms / pull_ms,
+                push_speedup: baseline_ms / push_ms,
+            }
+        })
+        .collect()
+}
+
+/// Render the figure as a table (what `taxfree experiments fig9` prints).
+pub fn render(rows: &[Fig9Row], hw: &HwConfig) -> Table {
+    let mut t = Table::new(&format!(
+        "Figure 9 — AG+GEMM speedup vs RCCL (N=28672, K=8192, W=8, {})",
+        hw.name
+    ))
+    .header(vec!["M", "baseline ms", "pull ms", "push ms", "pull x", "push x", "winner"]);
+    for r in rows {
+        let winner = if r.baseline_ms <= r.pull_ms && r.baseline_ms <= r.push_ms {
+            "baseline"
+        } else if r.pull_ms <= r.push_ms {
+            "pull"
+        } else {
+            "push"
+        };
+        t.row(vec![
+            r.m.to_string(),
+            format!("{:.4}", r.baseline_ms),
+            format!("{:.4}", r.pull_ms),
+            format!("{:.4}", r.push_ms),
+            format!("{:.3}", r.pull_speedup),
+            format!("{:.3}", r.push_speedup),
+            winner.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn fig9_reproduces_paper_shape() {
+        let rows = fig9(&presets::mi325x(), 1, 10);
+        assert_eq!(rows.len(), M_SWEEP.len());
+        let by_m = |m: usize| rows.iter().find(|r| r.m == m).unwrap();
+        // pull beats push at M <= 64; push beats pull at M >= 256
+        for m in [1, 2, 4, 8, 16, 32, 64] {
+            assert!(by_m(m).pull_ms < by_m(m).push_ms, "M={m}");
+        }
+        for m in [256, 1024, 4096, 8192] {
+            assert!(by_m(m).push_ms < by_m(m).pull_ms, "M={m}");
+        }
+        // baseline wins the torch window, fused wins the extremes
+        for m in [16, 32, 64] {
+            let r = by_m(m);
+            assert!(r.pull_speedup < 1.0 && r.push_speedup < 1.0, "M={m}");
+        }
+        for m in [1, 2, 4] {
+            assert!(by_m(m).pull_speedup > 1.0, "M={m}");
+        }
+        for m in [2048, 8192] {
+            assert!(by_m(m).push_speedup > 1.0, "M={m}");
+        }
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let hw = presets::mi325x();
+        let rows = fig9(&hw, 2, 3);
+        let t = render(&rows, &hw);
+        assert_eq!(t.n_rows(), M_SWEEP.len());
+        assert!(t.render().contains("winner"));
+    }
+}

@@ -1,0 +1,18 @@
+//! Experiment harnesses: regenerate every table/figure in the paper's
+//! evaluation (DESIGN.md §6 per-experiment index).
+//!
+//! Each harness prints the figure's series as a text table via
+//! [`crate::util::Table`] and returns the rows for programmatic use
+//! (benches and integration tests call these too).
+
+pub mod ablations;
+pub mod fig10_flash_decode;
+pub mod ext_allreduce;
+pub mod fig11_scaling;
+pub mod fig2_taxes;
+pub mod fig9_ag_gemm;
+
+pub use fig10_flash_decode::fig10;
+pub use fig11_scaling::fig11;
+pub use fig2_taxes::fig2;
+pub use fig9_ag_gemm::fig9;

@@ -1,0 +1,99 @@
+//! Fabric topology description.
+//!
+//! The MI300X node is a fully-connected clique: every GPU has a direct
+//! Infinity-Fabric link to every other (7 peers × 128 GB/s = the paper's
+//! 896 GB/s aggregate). [`Topology`] captures that structure plus the ring
+//! ordering used by the ring-based collectives; timing of transfers lives
+//! in [`crate::sim::cost`], traffic accounting in [`crate::iris::Traffic`].
+
+/// Node topology: a fully-connected clique of `world` ranks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    world: usize,
+}
+
+impl Topology {
+    pub fn clique(world: usize) -> Topology {
+        assert!(world >= 1);
+        Topology { world }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Number of peer links per rank.
+    pub fn links_per_rank(&self) -> usize {
+        self.world - 1
+    }
+
+    /// Ring successor of `rank`.
+    pub fn ring_next(&self, rank: usize) -> usize {
+        (rank + 1) % self.world
+    }
+
+    /// Ring predecessor of `rank`.
+    pub fn ring_prev(&self, rank: usize) -> usize {
+        (rank + self.world - 1) % self.world
+    }
+
+    /// Peers of `rank` in staggered order (rank+1, rank+2, ... wrap).
+    pub fn peers_of(&self, rank: usize) -> Vec<usize> {
+        (1..self.world).map(|d| (rank + d) % self.world).collect()
+    }
+
+    /// All directed (src, dst) pairs.
+    pub fn directed_links(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::with_capacity(self.world * (self.world - 1));
+        for s in 0..self.world {
+            for d in 0..self.world {
+                if s != d {
+                    v.push((s, d));
+                }
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clique_link_count() {
+        let t = Topology::clique(8);
+        assert_eq!(t.links_per_rank(), 7);
+        assert_eq!(t.directed_links().len(), 56);
+    }
+
+    #[test]
+    fn ring_wraps() {
+        let t = Topology::clique(4);
+        assert_eq!(t.ring_next(3), 0);
+        assert_eq!(t.ring_prev(0), 3);
+        assert_eq!(t.ring_next(t.ring_prev(2)), 2);
+    }
+
+    #[test]
+    fn peers_staggered_and_complete() {
+        let t = Topology::clique(5);
+        for r in 0..5 {
+            let p = t.peers_of(r);
+            assert_eq!(p.len(), 4);
+            assert!(!p.contains(&r));
+            let mut sorted = p.clone();
+            sorted.sort();
+            let expect: Vec<usize> = (0..5).filter(|&x| x != r).collect();
+            assert_eq!(sorted, expect);
+        }
+    }
+
+    #[test]
+    fn world_one_has_no_links() {
+        let t = Topology::clique(1);
+        assert_eq!(t.links_per_rank(), 0);
+        assert!(t.directed_links().is_empty());
+        assert_eq!(t.ring_next(0), 0);
+    }
+}

@@ -1,0 +1,368 @@
+//! Per-rank handle to the symmetric heap: the Rust analogue of the Iris
+//! device API (`iris.load`, `iris.store`, `iris.atomic_add`, spin-waits),
+//! plus the node runner that stands up one engine thread per rank.
+//!
+//! Traffic accounting: every remote operation bumps the shared
+//! [`Traffic`] matrix so functional runs report fabric bytes exactly like
+//! the simulator does.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::iris::heap::SymmetricHeap;
+
+/// Default timeout for flag waits. A correct protocol never gets near
+/// this; hitting it means a peer died or the protocol deadlocked, and we
+/// fail loudly instead of hanging the test suite.
+pub const DEFAULT_WAIT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Node-wide fabric traffic accounting (bytes, messages) per directed pair.
+pub struct Traffic {
+    world: usize,
+    bytes: Vec<AtomicU64>,
+    msgs: Vec<AtomicU64>,
+}
+
+impl Traffic {
+    pub fn new(world: usize) -> Traffic {
+        Traffic {
+            world,
+            bytes: (0..world * world).map(|_| AtomicU64::new(0)).collect(),
+            msgs: (0..world * world).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    fn record(&self, src: usize, dst: usize, bytes: u64) {
+        let i = src * self.world + dst;
+        self.bytes[i].fetch_add(bytes, Ordering::Relaxed);
+        self.msgs[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bytes_between(&self, src: usize, dst: usize) -> u64 {
+        self.bytes[src * self.world + dst].load(Ordering::Relaxed)
+    }
+
+    pub fn messages_between(&self, src: usize, dst: usize) -> u64 {
+        self.msgs[src * self.world + dst].load(Ordering::Relaxed)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.msgs.iter().map(|m| m.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn reset(&self) {
+        for c in self.bytes.iter().chain(self.msgs.iter()) {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Error from a timed flag wait.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("rank {rank}: timeout waiting for {flags}[{idx}] >= {target} (last seen {seen})")]
+pub struct WaitTimeout {
+    pub rank: usize,
+    pub flags: String,
+    pub idx: usize,
+    pub target: u64,
+    pub seen: u64,
+}
+
+/// A rank engine's view of the node: its identity plus the shared heap.
+#[derive(Clone)]
+pub struct RankCtx {
+    rank: usize,
+    world: usize,
+    heap: Arc<SymmetricHeap>,
+    traffic: Arc<Traffic>,
+    wait_timeout: Duration,
+}
+
+impl RankCtx {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn heap(&self) -> &SymmetricHeap {
+        &self.heap
+    }
+
+    pub fn traffic(&self) -> &Traffic {
+        &self.traffic
+    }
+
+    /// Ranks other than this one, in increasing order starting after self
+    /// (the canonical peer iteration order of the paper's push loops:
+    /// staggering by rank avoids every rank hammering rank 0 first).
+    pub fn peers(&self) -> impl Iterator<Item = usize> + '_ {
+        (1..self.world).map(move |d| (self.rank + d) % self.world)
+    }
+
+    // ---- local memory ----
+
+    /// Local store (tl.store analogue).
+    pub fn store_local(&self, buf: &str, offset: usize, data: &[f32]) {
+        self.heap.store(self.rank, buf, offset, data);
+    }
+
+    /// Local load (tl.load analogue).
+    pub fn load_local(&self, buf: &str, offset: usize, out: &mut [f32]) {
+        self.heap.load(self.rank, buf, offset, out);
+    }
+
+    /// Local load returning a fresh Vec.
+    pub fn load_local_vec(&self, buf: &str, offset: usize, len: usize) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.load_local(buf, offset, &mut v);
+        v
+    }
+
+    // ---- remote memory (the Iris device API) ----
+
+    /// `iris.store`: write `data` into `dst_rank`'s copy of `buf`.
+    /// fp16 on the wire (all paper kernels are fp16), hence 2 bytes/elem
+    /// in the traffic matrix.
+    pub fn remote_store(&self, dst_rank: usize, buf: &str, offset: usize, data: &[f32]) {
+        assert!(dst_rank < self.world, "bad dst rank {dst_rank}");
+        self.heap.store(dst_rank, buf, offset, data);
+        if dst_rank != self.rank {
+            self.traffic.record(self.rank, dst_rank, 2 * data.len() as u64);
+        }
+    }
+
+    /// `iris.load`: read from `src_rank`'s copy of `buf`. The calling
+    /// engine blocks for the duration (consumer-driven pull semantics).
+    pub fn remote_load(&self, src_rank: usize, buf: &str, offset: usize, out: &mut [f32]) {
+        assert!(src_rank < self.world, "bad src rank {src_rank}");
+        self.heap.load(src_rank, buf, offset, out);
+        if src_rank != self.rank {
+            self.traffic.record(src_rank, self.rank, 2 * out.len() as u64);
+        }
+    }
+
+    pub fn remote_load_vec(&self, src_rank: usize, buf: &str, offset: usize, len: usize) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.remote_load(src_rank, buf, offset, &mut v);
+        v
+    }
+
+    /// `iris.atomic_add` on a remote signal flag (Release): publishes all
+    /// of this engine's preceding stores to a consumer that acquires the
+    /// flag.
+    pub fn signal(&self, dst_rank: usize, flags: &str, idx: usize) {
+        self.heap.flag_add(dst_rank, flags, idx, 1);
+        if dst_rank != self.rank {
+            self.traffic.record(self.rank, dst_rank, 8);
+        }
+    }
+
+    /// Read a local flag (Acquire).
+    pub fn flag(&self, flags: &str, idx: usize) -> u64 {
+        self.heap.flag_read(self.rank, flags, idx)
+    }
+
+    /// Spin/yield-wait until local flag `idx` reaches `target`
+    /// (the consumer side of the paper's fine-grained waits). Returns the
+    /// flag value seen; errors after the context's timeout.
+    pub fn wait_flag_ge(&self, flags: &str, idx: usize, target: u64) -> Result<u64, WaitTimeout> {
+        let mut spins = 0u32;
+        let start = Instant::now();
+        loop {
+            let v = self.heap.flag_read(self.rank, flags, idx);
+            if v >= target {
+                return Ok(v);
+            }
+            spins += 1;
+            if spins > 64 {
+                std::thread::yield_now();
+            }
+            if spins % 1024 == 0 && start.elapsed() > self.wait_timeout {
+                return Err(WaitTimeout {
+                    rank: self.rank,
+                    flags: flags.to_string(),
+                    idx,
+                    target,
+                    seen: v,
+                });
+            }
+        }
+    }
+
+    /// Global barrier (the BSP synchronization point).
+    pub fn barrier(&self) {
+        self.heap.barrier_wait();
+    }
+}
+
+/// Stand up a node of `world` rank engines over `heap`, run `body` on each
+/// (in its own thread), and return the per-rank results in rank order.
+/// Panics in any engine propagate after all threads are joined.
+pub fn run_node<T, F>(heap: Arc<SymmetricHeap>, body: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(RankCtx) -> T + Send + Sync + 'static,
+{
+    run_node_with_timeout(heap, DEFAULT_WAIT_TIMEOUT, body)
+}
+
+/// [`run_node`] with a custom flag-wait timeout (failure-injection tests
+/// use short timeouts).
+pub fn run_node_with_timeout<T, F>(
+    heap: Arc<SymmetricHeap>,
+    wait_timeout: Duration,
+    body: F,
+) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(RankCtx) -> T + Send + Sync + 'static,
+{
+    let world = heap.world();
+    let traffic = Arc::new(Traffic::new(world));
+    let body = Arc::new(body);
+    let mut handles = Vec::with_capacity(world);
+    for rank in 0..world {
+        let ctx = RankCtx {
+            rank,
+            world,
+            heap: Arc::clone(&heap),
+            traffic: Arc::clone(&traffic),
+            wait_timeout,
+        };
+        let body = Arc::clone(&body);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("rank{rank}"))
+                .spawn(move || body(ctx))
+                .expect("spawn rank engine"),
+        );
+    }
+    let mut results: Vec<Option<T>> = (0..world).map(|_| None).collect();
+    let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+    for (rank, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(v) => results[rank] = Some(v),
+            Err(e) => panic = Some(e),
+        }
+    }
+    if let Some(e) = panic {
+        std::panic::resume_unwind(e);
+    }
+    results.into_iter().map(|r| r.expect("missing rank result")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iris::heap::HeapBuilder;
+
+    #[test]
+    fn peers_iterates_everyone_else_staggered() {
+        let heap = Arc::new(HeapBuilder::new(4).build());
+        let orders = run_node(heap, |ctx| ctx.peers().collect::<Vec<_>>());
+        assert_eq!(orders[0], vec![1, 2, 3]);
+        assert_eq!(orders[1], vec![2, 3, 0]);
+        assert_eq!(orders[3], vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn push_flag_wait_round_trip() {
+        // rank 0 pushes a tile to every peer's inbox and signals; peers
+        // wait on the flag then read — the paper's push-model handshake.
+        let world = 4;
+        let heap = Arc::new(HeapBuilder::new(world).buffer("inbox", 8).flags("ready", 1).build());
+        let outs = run_node(heap, move |ctx| {
+            if ctx.rank() == 0 {
+                for d in 1..ctx.world() {
+                    ctx.remote_store(d, "inbox", 0, &[7.0, 8.0, 9.0]);
+                    ctx.signal(d, "ready", 0);
+                }
+                vec![7.0, 8.0, 9.0]
+            } else {
+                ctx.wait_flag_ge("ready", 0, 1).unwrap();
+                ctx.load_local_vec("inbox", 0, 3)
+            }
+        });
+        for (r, o) in outs.iter().enumerate() {
+            assert_eq!(o, &[7.0, 8.0, 9.0], "rank {r}");
+        }
+    }
+
+    #[test]
+    fn pull_reads_remote_shard() {
+        let world = 3;
+        let heap = Arc::new(HeapBuilder::new(world).buffer("shard", 4).build());
+        let outs = run_node(heap, move |ctx| {
+            let r = ctx.rank();
+            ctx.store_local("shard", 0, &[r as f32; 4]);
+            ctx.barrier();
+            // pull everyone's shard
+            (0..ctx.world())
+                .map(|s| ctx.remote_load_vec(s, "shard", 0, 4)[0])
+                .collect::<Vec<_>>()
+        });
+        for o in outs {
+            assert_eq!(o, vec![0.0, 1.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn traffic_accounting_counts_remote_only() {
+        let world = 2;
+        let heap = Arc::new(HeapBuilder::new(world).buffer("b", 16).flags("f", 1).build());
+        // do all the traffic from a single deterministic engine layout
+        let heap2 = Arc::clone(&heap);
+        let _ = heap2; // silence
+        let traffics = run_node(heap, move |ctx| {
+            if ctx.rank() == 0 {
+                ctx.remote_store(1, "b", 0, &[1.0; 16]); // 32 bytes
+                ctx.signal(1, "f", 0); // 8 bytes
+                ctx.store_local("b", 0, &[2.0; 16]); // local: free
+            } else {
+                ctx.wait_flag_ge("f", 0, 1).unwrap();
+            }
+            ctx.barrier();
+            (
+                ctx.traffic().bytes_between(0, 1),
+                ctx.traffic().total_bytes(),
+                ctx.traffic().messages_between(0, 1),
+            )
+        });
+        for (b01, total, msgs) in traffics {
+            assert_eq!(b01, 40);
+            assert_eq!(total, 40);
+            assert_eq!(msgs, 2);
+        }
+    }
+
+    #[test]
+    fn wait_timeout_fails_loudly() {
+        let heap = Arc::new(HeapBuilder::new(1).flags("f", 1).build());
+        let res = run_node_with_timeout(heap, Duration::from_millis(50), |ctx| {
+            ctx.wait_flag_ge("f", 0, 1)
+        });
+        let err = res[0].as_ref().unwrap_err();
+        assert_eq!(err.idx, 0);
+        assert_eq!(err.target, 1);
+        assert!(err.to_string().contains("timeout"));
+    }
+
+    #[test]
+    #[should_panic(expected = "engine boom")]
+    fn engine_panic_propagates() {
+        let heap = Arc::new(HeapBuilder::new(2).build());
+        run_node(heap, |ctx| {
+            if ctx.rank() == 1 {
+                panic!("engine boom");
+            }
+        });
+    }
+}

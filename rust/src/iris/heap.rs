@@ -1,0 +1,311 @@
+//! The symmetric heap: the memory substrate of the Iris programming model.
+//!
+//! Iris (Awad et al. 2025) gives every rank an identically-laid-out heap so
+//! that a (rank, buffer, offset) triple names memory anywhere on the node.
+//! This is the same abstraction over shared memory: [`SymmetricHeap`] holds,
+//! for every named buffer, one region *per rank*, plus named signal-flag
+//! arrays. Remote stores/loads are performed directly on the target rank's
+//! region.
+//!
+//! **Memory model.** Data elements are `AtomicU32` (f32 bit patterns)
+//! accessed with `Relaxed` ordering; signal flags are `AtomicU64` with
+//! `Release` increments and `Acquire` reads. This mirrors the real Iris
+//! protocol — plain remote stores followed by a releasing flag update, with
+//! consumers acquiring through the flag before touching the data — and it
+//! is sound under the Rust memory model (no data races: all cells are
+//! atomics). The flag release/acquire pair is what publishes the relaxed
+//! data writes, exactly like `iris.store()` + `RemoteAtomicInc` on the
+//! fabric.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// One named buffer: `world` regions of `len` f32 elements each.
+struct Region {
+    /// `per_rank[r][i]` is element `i` of rank `r`'s copy.
+    per_rank: Vec<Vec<AtomicU32>>,
+    len: usize,
+}
+
+/// One named flag array: `world` regions of `len` u64 flags each.
+struct FlagRegion {
+    per_rank: Vec<Vec<AtomicU64>>,
+    len: usize,
+}
+
+/// Builder for [`SymmetricHeap`]: declare all buffers up front (symmetric
+/// allocation is collective in Iris; here the leader declares the layout
+/// before rank engines start).
+pub struct HeapBuilder {
+    world: usize,
+    buffers: Vec<(String, usize)>,
+    flags: Vec<(String, usize)>,
+}
+
+impl HeapBuilder {
+    pub fn new(world: usize) -> HeapBuilder {
+        assert!(world >= 1, "world must be >= 1");
+        HeapBuilder { world, buffers: Vec::new(), flags: Vec::new() }
+    }
+
+    /// Declare a named f32 buffer of `len` elements on every rank.
+    pub fn buffer(mut self, name: &str, len: usize) -> HeapBuilder {
+        assert!(
+            !self.buffers.iter().any(|(n, _)| n == name),
+            "duplicate buffer name: {name}"
+        );
+        self.buffers.push((name.to_string(), len));
+        self
+    }
+
+    /// Declare a named flag array of `len` u64 flags on every rank.
+    pub fn flags(mut self, name: &str, len: usize) -> HeapBuilder {
+        assert!(!self.flags.iter().any(|(n, _)| n == name), "duplicate flag name: {name}");
+        self.flags.push((name.to_string(), len));
+        self
+    }
+
+    pub fn build(self) -> SymmetricHeap {
+        let mk_region = |len: usize| {
+            (0..self.world)
+                .map(|_| (0..len).map(|_| AtomicU32::new(0f32.to_bits())).collect())
+                .collect()
+        };
+        let mk_flags = |len: usize| {
+            (0..self.world).map(|_| (0..len).map(|_| AtomicU64::new(0)).collect()).collect()
+        };
+        SymmetricHeap {
+            world: self.world,
+            regions: self
+                .buffers
+                .into_iter()
+                .map(|(n, len)| (n, Region { per_rank: mk_region(len), len }))
+                .collect(),
+            flag_regions: self
+                .flags
+                .into_iter()
+                .map(|(n, len)| (n, FlagRegion { per_rank: mk_flags(len), len }))
+                .collect(),
+            barrier_seq: AtomicU64::new(0),
+            barrier_arrived: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The node-wide symmetric heap. Shared (via `Arc`) by all rank engines.
+pub struct SymmetricHeap {
+    world: usize,
+    regions: HashMap<String, Region>,
+    flag_regions: HashMap<String, FlagRegion>,
+    // sense-reversing barrier state (see `barrier_wait`)
+    barrier_seq: AtomicU64,
+    barrier_arrived: AtomicU64,
+}
+
+impl SymmetricHeap {
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    fn region(&self, buf: &str) -> &Region {
+        self.regions.get(buf).unwrap_or_else(|| panic!("unknown buffer: {buf}"))
+    }
+
+    fn flag_region(&self, name: &str) -> &FlagRegion {
+        self.flag_regions.get(name).unwrap_or_else(|| panic!("unknown flag array: {name}"))
+    }
+
+    /// Length (elements) of a named buffer.
+    pub fn buffer_len(&self, buf: &str) -> usize {
+        self.region(buf).len
+    }
+
+    /// Length of a named flag array.
+    pub fn flags_len(&self, name: &str) -> usize {
+        self.flag_region(name).len
+    }
+
+    /// Store `data` into rank `rank`'s copy of `buf` at `offset`
+    /// (relaxed; publish with a flag).
+    pub fn store(&self, rank: usize, buf: &str, offset: usize, data: &[f32]) {
+        let region = self.region(buf);
+        let cells = &region.per_rank[rank];
+        assert!(
+            offset + data.len() <= region.len,
+            "store out of bounds: {buf}[{offset}..{}] len {}",
+            offset + data.len(),
+            region.len
+        );
+        for (i, v) in data.iter().enumerate() {
+            cells[offset + i].store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Load `len` elements from rank `rank`'s copy of `buf` at `offset`.
+    pub fn load(&self, rank: usize, buf: &str, offset: usize, out: &mut [f32]) {
+        let region = self.region(buf);
+        let cells = &region.per_rank[rank];
+        assert!(
+            offset + out.len() <= region.len,
+            "load out of bounds: {buf}[{offset}..{}] len {}",
+            offset + out.len(),
+            region.len
+        );
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = f32::from_bits(cells[offset + i].load(Ordering::Relaxed));
+        }
+    }
+
+    /// Atomically add `delta` to flag `idx` of `flags` on rank `rank`,
+    /// with Release ordering (publishes preceding relaxed data stores).
+    pub fn flag_add(&self, rank: usize, flags: &str, idx: usize, delta: u64) -> u64 {
+        let fr = self.flag_region(flags);
+        assert!(idx < fr.len, "flag index {idx} out of bounds (len {})", fr.len);
+        fr.per_rank[rank][idx].fetch_add(delta, Ordering::Release)
+    }
+
+    /// Read flag `idx` on rank `rank` with Acquire ordering.
+    pub fn flag_read(&self, rank: usize, flags: &str, idx: usize) -> u64 {
+        let fr = self.flag_region(flags);
+        assert!(idx < fr.len, "flag index {idx} out of bounds (len {})", fr.len);
+        fr.per_rank[rank][idx].load(Ordering::Acquire)
+    }
+
+    /// Reset every flag in an array on every rank to zero (between
+    /// iterations; collective — caller must ensure quiescence).
+    pub fn flags_reset(&self, flags: &str) {
+        let fr = self.flag_region(flags);
+        for rank in 0..self.world {
+            for f in &fr.per_rank[rank] {
+                f.store(0, Ordering::Release);
+            }
+        }
+    }
+
+    /// Sense-reversing global barrier over all ranks. Yields while waiting
+    /// (the node is simulated on few cores; pure spinning would livelock
+    /// the very ranks we are waiting for).
+    pub fn barrier_wait(&self) {
+        let seq = self.barrier_seq.load(Ordering::Acquire);
+        let arrived = self.barrier_arrived.fetch_add(1, Ordering::AcqRel) + 1;
+        if arrived == self.world as u64 {
+            self.barrier_arrived.store(0, Ordering::Release);
+            self.barrier_seq.fetch_add(1, Ordering::AcqRel);
+        } else {
+            let mut spins = 0u32;
+            while self.barrier_seq.load(Ordering::Acquire) == seq {
+                spins += 1;
+                if spins > 64 {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn builder_allocates_per_rank_regions() {
+        let heap = HeapBuilder::new(4).buffer("a", 16).flags("f", 8).build();
+        assert_eq!(heap.world(), 4);
+        assert_eq!(heap.buffer_len("a"), 16);
+        assert_eq!(heap.flags_len("f"), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate buffer")]
+    fn duplicate_buffer_rejected() {
+        HeapBuilder::new(2).buffer("a", 1).buffer("a", 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown buffer")]
+    fn unknown_buffer_panics() {
+        let heap = HeapBuilder::new(2).build();
+        heap.store(0, "nope", 0, &[1.0]);
+    }
+
+    #[test]
+    fn regions_are_independent_per_rank() {
+        let heap = HeapBuilder::new(3).buffer("x", 4).build();
+        heap.store(0, "x", 0, &[1.0, 2.0]);
+        heap.store(1, "x", 0, &[9.0, 8.0]);
+        let mut out = [0.0f32; 2];
+        heap.load(0, "x", 0, &mut out);
+        assert_eq!(out, [1.0, 2.0]);
+        heap.load(1, "x", 0, &mut out);
+        assert_eq!(out, [9.0, 8.0]);
+        heap.load(2, "x", 0, &mut out);
+        assert_eq!(out, [0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn store_bounds_checked() {
+        let heap = HeapBuilder::new(1).buffer("x", 4).build();
+        heap.store(0, "x", 3, &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn flags_add_and_read() {
+        let heap = HeapBuilder::new(2).flags("f", 4).build();
+        assert_eq!(heap.flag_read(1, "f", 2), 0);
+        let prev = heap.flag_add(1, "f", 2, 1);
+        assert_eq!(prev, 0);
+        assert_eq!(heap.flag_read(1, "f", 2), 1);
+        assert_eq!(heap.flag_read(0, "f", 2), 0, "flags are per-rank");
+        heap.flags_reset("f");
+        assert_eq!(heap.flag_read(1, "f", 2), 0);
+    }
+
+    #[test]
+    fn barrier_synchronizes_threads() {
+        let world = 4;
+        let heap = Arc::new(HeapBuilder::new(world).flags("f", 1).build());
+        let mut handles = Vec::new();
+        for r in 0..world {
+            let h = Arc::clone(&heap);
+            handles.push(std::thread::spawn(move || {
+                // phase 1: everyone signals
+                h.flag_add(r, "f", 0, 1);
+                h.barrier_wait();
+                // phase 2: after the barrier every rank must see all signals
+                let seen: u64 = (0..world).map(|rk| h.flag_read(rk, "f", 0)).sum();
+                assert_eq!(seen, world as u64);
+                h.barrier_wait();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn barrier_reusable_many_rounds() {
+        let world = 3;
+        let heap = Arc::new(HeapBuilder::new(world).buffer("x", 1).build());
+        let mut handles = Vec::new();
+        for r in 0..world {
+            let h = Arc::clone(&heap);
+            handles.push(std::thread::spawn(move || {
+                for round in 0..50u32 {
+                    if r == (round as usize % world) {
+                        h.store(0, "x", 0, &[round as f32]);
+                    }
+                    h.barrier_wait();
+                    let mut v = [0.0f32];
+                    h.load(0, "x", 0, &mut v);
+                    assert_eq!(v[0], round as f32, "rank {r} round {round}");
+                    h.barrier_wait();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

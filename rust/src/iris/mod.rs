@@ -1,0 +1,18 @@
+//! The Iris-like RMA substrate: a functional multi-rank node over shared
+//! memory (DESIGN.md §1 substitution table, row 3).
+//!
+//! * [`heap`] — the symmetric heap (per-rank named buffers + signal flags,
+//!   Release/Acquire publication protocol);
+//! * [`ctx`] — the per-rank device API (`remote_store` / `remote_load` /
+//!   `signal` / `wait_flag_ge` / `barrier`) and the node runner that stands
+//!   up one engine thread per rank.
+//!
+//! Every distributed algorithm in the paper (Algorithms 1–4) is expressed
+//! against [`RankCtx`]; the timing twin of each protocol lives in
+//! [`crate::sim`].
+
+pub mod ctx;
+pub mod heap;
+
+pub use ctx::{run_node, run_node_with_timeout, RankCtx, Traffic, WaitTimeout, DEFAULT_WAIT_TIMEOUT};
+pub use heap::{HeapBuilder, SymmetricHeap};

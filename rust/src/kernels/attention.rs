@@ -1,0 +1,214 @@
+//! Native flash-decode partial-attention kernel: the functional mirror of
+//! the L1 Pallas kernel (`python/compile/kernels/flash_decode.py`).
+//!
+//! Computes, for a single query per head against this rank's KV shard, the
+//! *online-softmax partial state* `(o_unnorm, m, l)` block-by-block along
+//! the KV dimension — the per-shard stage of the paper's distributed Flash
+//! Decode (§4.2.1, Algorithm 4 part 1). The block-wise online update is the
+//! exact algorithm from Milakov & Gimelshein 2018 that both Flash Decode
+//! and the Pallas kernel use, so numerics match the L1 kernel and the
+//! `linalg` reference.
+
+use crate::tensor::half::quantize_f16;
+use crate::tensor::Tensor;
+
+/// Online-softmax partial state for one rank's KV shard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartialState {
+    /// Unnormalized exp-weighted values, [heads, dim].
+    pub o: Tensor,
+    /// Per-head running max of scores, len `heads`.
+    pub m: Vec<f32>,
+    /// Per-head sum of exps (normalizer), len `heads`.
+    pub l: Vec<f32>,
+}
+
+impl PartialState {
+    /// Flatten to the wire layout used on the symmetric heap:
+    /// `[o (heads*dim) | m (heads) | l (heads)]`.
+    pub fn to_wire(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.o.numel() + 2 * self.m.len());
+        v.extend_from_slice(self.o.data());
+        v.extend_from_slice(&self.m);
+        v.extend_from_slice(&self.l);
+        v
+    }
+
+    /// Parse the wire layout back.
+    pub fn from_wire(data: &[f32], heads: usize, dim: usize) -> PartialState {
+        assert_eq!(data.len(), heads * dim + 2 * heads, "bad wire length");
+        let o = Tensor::from_vec(&[heads, dim], data[..heads * dim].to_vec());
+        let m = data[heads * dim..heads * dim + heads].to_vec();
+        let l = data[heads * dim + heads..].to_vec();
+        PartialState { o, m, l }
+    }
+
+    /// Wire length in f32 elements.
+    pub fn wire_len(heads: usize, dim: usize) -> usize {
+        heads * dim + 2 * heads
+    }
+}
+
+/// Flash-decode partial attention over one KV shard, processed in
+/// `kv_block`-sized blocks with the online-softmax update.
+///
+/// * `q`: [heads, dim] (fp16-quantized on entry)
+/// * `k`, `v`: [heads * kv_len, dim] row-major per head
+///
+/// Returns the partial state; combine across shards with
+/// [`crate::kernels::combine::OnlineCombiner`].
+pub fn flash_decode_partial(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    heads: usize,
+    kv_len: usize,
+    kv_block: usize,
+) -> PartialState {
+    let dim = q.dims()[1];
+    assert_eq!(q.dims()[0], heads);
+    assert_eq!(k.dims(), &[heads * kv_len, dim], "K shape");
+    assert_eq!(v.dims(), &[heads * kv_len, dim], "V shape");
+    assert!(kv_block > 0);
+    let scale = 1.0 / (dim as f32).sqrt();
+
+    let mut o = Tensor::zeros(&[heads, dim]);
+    let mut ms = vec![f32::NEG_INFINITY; heads];
+    let mut ls = vec![0.0f32; heads];
+
+    let n_blocks = kv_len.div_ceil(kv_block);
+    for h in 0..heads {
+        let qrow: Vec<f32> = (0..dim).map(|j| quantize_f16(q.at2(h, j))).collect();
+        let mut m_run = f32::NEG_INFINITY;
+        let mut l_run = 0.0f32;
+        let mut acc = vec![0.0f32; dim];
+        for b in 0..n_blocks {
+            let s0 = b * kv_block;
+            let s1 = (s0 + kv_block).min(kv_len);
+            // scores for this block
+            let mut scores = vec![0.0f32; s1 - s0];
+            for (si, s) in (s0..s1).enumerate() {
+                let mut dot = 0.0;
+                for j in 0..dim {
+                    dot += qrow[j] * quantize_f16(k.at2(h * kv_len + s, j));
+                }
+                scores[si] = dot * scale;
+            }
+            let m_blk = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let m_new = m_run.max(m_blk);
+            // rescale previous accumulator
+            let corr = if m_run.is_finite() { (m_run - m_new).exp() } else { 0.0 };
+            l_run *= corr;
+            for a in acc.iter_mut() {
+                *a *= corr;
+            }
+            // accumulate this block
+            for (si, s) in (s0..s1).enumerate() {
+                let p = (scores[si] - m_new).exp();
+                l_run += p;
+                for j in 0..dim {
+                    acc[j] += p * quantize_f16(v.at2(h * kv_len + s, j));
+                }
+            }
+            m_run = m_new;
+        }
+        for j in 0..dim {
+            o.set2(h, j, acc[j]);
+        }
+        ms[h] = m_run;
+        ls[h] = l_run;
+    }
+    PartialState { o, m: ms, l: ls }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::linalg::partial_attention_ref;
+    use crate::util::Prng;
+
+    fn fp16_tensor(dims: &[usize], rng: &mut Prng) -> Tensor {
+        let mut t = Tensor::rand(dims, 1.0, rng);
+        t.quantize_f16();
+        t
+    }
+
+    fn setup(heads: usize, dim: usize, kv: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Prng::new(seed);
+        (
+            fp16_tensor(&[heads, dim], &mut rng),
+            fp16_tensor(&[heads * kv, dim], &mut rng),
+            fp16_tensor(&[heads * kv, dim], &mut rng),
+        )
+    }
+
+    #[test]
+    fn partial_matches_reference_single_block() {
+        let (heads, dim, kv) = (3, 8, 16);
+        let (q, k, v) = setup(heads, dim, kv, 31);
+        let got = flash_decode_partial(&q, &k, &v, heads, kv, kv);
+        let (o_ref, m_ref, l_ref) = partial_attention_ref(&q, &k, &v, heads, kv);
+        got.o.assert_allclose(&o_ref, 1e-3, 1e-3);
+        for h in 0..heads {
+            assert!((got.m[h] - m_ref[h]).abs() < 1e-4, "m[{h}]");
+            assert!((got.l[h] - l_ref[h]).abs() / l_ref[h] < 1e-3, "l[{h}]");
+        }
+    }
+
+    #[test]
+    fn blocked_equals_unblocked() {
+        let (heads, dim, kv) = (2, 16, 40);
+        let (q, k, v) = setup(heads, dim, kv, 32);
+        let whole = flash_decode_partial(&q, &k, &v, heads, kv, kv);
+        for kv_block in [1, 4, 8, 40, 64] {
+            let blocked = flash_decode_partial(&q, &k, &v, heads, kv, kv_block);
+            blocked.o.assert_allclose(&whole.o, 1e-3, 1e-3);
+            for h in 0..heads {
+                assert!((blocked.l[h] - whole.l[h]).abs() / whole.l[h] < 1e-3);
+                assert_eq!(blocked.m[h], whole.m[h], "max must be exact");
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_last_block_handled() {
+        let (heads, dim, kv) = (2, 8, 37); // 37 = 4*8 + 5
+        let (q, k, v) = setup(heads, dim, kv, 33);
+        let blocked = flash_decode_partial(&q, &k, &v, heads, kv, 8);
+        let (o_ref, _, l_ref) = partial_attention_ref(&q, &k, &v, heads, kv);
+        blocked.o.assert_allclose(&o_ref, 1e-3, 1e-3);
+        for h in 0..heads {
+            assert!((blocked.l[h] - l_ref[h]).abs() / l_ref[h] < 1e-3);
+        }
+    }
+
+    #[test]
+    fn wire_round_trip() {
+        let (heads, dim, kv) = (4, 8, 12);
+        let (q, k, v) = setup(heads, dim, kv, 34);
+        let p = flash_decode_partial(&q, &k, &v, heads, kv, 4);
+        let wire = p.to_wire();
+        assert_eq!(wire.len(), PartialState::wire_len(heads, dim));
+        let back = PartialState::from_wire(&wire, heads, dim);
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad wire length")]
+    fn wire_length_checked() {
+        PartialState::from_wire(&[0.0; 10], 4, 8);
+    }
+
+    #[test]
+    fn numerically_stable_for_large_scores() {
+        // huge logits would overflow a naive softmax; online form must not
+        let (heads, dim, kv) = (1, 4, 8);
+        let mut rng = Prng::new(35);
+        let q = Tensor::full(&[heads, dim], 100.0);
+        let k = fp16_tensor(&[heads * kv, dim], &mut rng);
+        let v = fp16_tensor(&[heads * kv, dim], &mut rng);
+        let p = flash_decode_partial(&q, &k, &v, heads, kv, 4);
+        assert!(p.o.data().iter().all(|x| x.is_finite()));
+        assert!(p.l.iter().all(|x| x.is_finite() && *x > 0.0));
+    }
+}

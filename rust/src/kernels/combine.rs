@@ -1,0 +1,185 @@
+//! Streaming online-softmax combine: the paper's "Combine Kernel (Global)"
+//! (Algorithm 4 part 2), consuming per-shard [`PartialState`]s *in arrival
+//! order*.
+//!
+//! The fine-grained strategies feed partials one at a time as their signal
+//! flags arrive, so the combiner must be incremental and order-invariant —
+//! both properties are tested here and property-tested in the coordinator.
+
+use crate::kernels::attention::PartialState;
+use crate::tensor::Tensor;
+
+/// Incremental combiner of online-softmax partial states.
+#[derive(Debug, Clone)]
+pub struct OnlineCombiner {
+    heads: usize,
+    dim: usize,
+    m: Vec<f32>,
+    l: Vec<f32>,
+    acc: Vec<f32>, // [heads * dim]
+    n_partials: usize,
+}
+
+impl OnlineCombiner {
+    pub fn new(heads: usize, dim: usize) -> OnlineCombiner {
+        OnlineCombiner {
+            heads,
+            dim,
+            m: vec![f32::NEG_INFINITY; heads],
+            l: vec![0.0; heads],
+            acc: vec![0.0; heads * dim],
+            n_partials: 0,
+        }
+    }
+
+    pub fn n_partials(&self) -> usize {
+        self.n_partials
+    }
+
+    /// Fold in one shard's partial state (the body of the spin-wait loop).
+    pub fn add(&mut self, p: &PartialState) {
+        assert_eq!(p.o.dims(), &[self.heads, self.dim], "partial shape");
+        for h in 0..self.heads {
+            let m_new = self.m[h].max(p.m[h]);
+            let corr_old = if self.m[h].is_finite() { (self.m[h] - m_new).exp() } else { 0.0 };
+            let corr_new = if p.m[h].is_finite() { (p.m[h] - m_new).exp() } else { 0.0 };
+            self.l[h] = self.l[h] * corr_old + p.l[h] * corr_new;
+            for j in 0..self.dim {
+                let i = h * self.dim + j;
+                self.acc[i] = self.acc[i] * corr_old + p.o.data()[i] * corr_new;
+            }
+            self.m[h] = m_new;
+        }
+        self.n_partials += 1;
+    }
+
+    /// Produce the final normalized attention output [heads, dim].
+    pub fn finish(&self) -> Tensor {
+        assert!(self.n_partials > 0, "combine of zero partials");
+        let mut out = Tensor::zeros(&[self.heads, self.dim]);
+        for h in 0..self.heads {
+            let l = self.l[h];
+            assert!(l > 0.0 && l.is_finite(), "degenerate normalizer l[{h}] = {l}");
+            for j in 0..self.dim {
+                out.set2(h, j, self.acc[h * self.dim + j] / l);
+            }
+        }
+        out
+    }
+}
+
+/// One-shot combine of a batch of partials (the BSP combine kernel, which
+/// sees all partials after the collective).
+pub fn combine_all(partials: &[PartialState], heads: usize, dim: usize) -> Tensor {
+    let mut c = OnlineCombiner::new(heads, dim);
+    for p in partials {
+        c.add(p);
+    }
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::attention::flash_decode_partial;
+    use crate::tensor::linalg::decode_attention_ref;
+    use crate::util::Prng;
+
+    fn rand_t(dims: &[usize], rng: &mut Prng) -> Tensor {
+        let mut t = Tensor::rand(dims, 1.0, rng);
+        t.quantize_f16();
+        t
+    }
+
+    /// Build `shards` KV shards plus the full KV for reference.
+    fn shard_setup(
+        heads: usize,
+        dim: usize,
+        kv_per_shard: usize,
+        shards: usize,
+        seed: u64,
+    ) -> (Tensor, Vec<(Tensor, Tensor)>, Tensor, Tensor) {
+        let mut rng = Prng::new(seed);
+        let q = rand_t(&[heads, dim], &mut rng);
+        let kvs: Vec<(Tensor, Tensor)> = (0..shards)
+            .map(|_| {
+                (rand_t(&[heads * kv_per_shard, dim], &mut rng),
+                 rand_t(&[heads * kv_per_shard, dim], &mut rng))
+            })
+            .collect();
+        // concatenate along the seq dim *per head*
+        let total = kv_per_shard * shards;
+        let mut k_full = Tensor::zeros(&[heads * total, dim]);
+        let mut v_full = Tensor::zeros(&[heads * total, dim]);
+        for h in 0..heads {
+            for (s, (ks, vs)) in kvs.iter().enumerate() {
+                for r in 0..kv_per_shard {
+                    for j in 0..dim {
+                        k_full.set2(h * total + s * kv_per_shard + r, j, ks.at2(h * kv_per_shard + r, j));
+                        v_full.set2(h * total + s * kv_per_shard + r, j, vs.at2(h * kv_per_shard + r, j));
+                    }
+                }
+            }
+        }
+        (q, kvs, k_full, v_full)
+    }
+
+    #[test]
+    fn combine_matches_full_attention() {
+        let (heads, dim, kv, shards) = (4, 16, 12, 4);
+        let (q, kvs, k_full, v_full) = shard_setup(heads, dim, kv, shards, 41);
+        let partials: Vec<PartialState> =
+            kvs.iter().map(|(k, v)| flash_decode_partial(&q, k, v, heads, kv, 4)).collect();
+        let got = combine_all(&partials, heads, dim);
+        let expect = decode_attention_ref(&q, &k_full, &v_full, heads, kv * shards);
+        got.assert_allclose(&expect, 2e-3, 2e-3);
+    }
+
+    #[test]
+    fn combine_is_order_invariant() {
+        let (heads, dim, kv, shards) = (2, 8, 10, 5);
+        let (q, kvs, _, _) = shard_setup(heads, dim, kv, shards, 42);
+        let partials: Vec<PartialState> =
+            kvs.iter().map(|(k, v)| flash_decode_partial(&q, k, v, heads, kv, 5)).collect();
+        let fwd = combine_all(&partials, heads, dim);
+        let rev: Vec<PartialState> = partials.iter().rev().cloned().collect();
+        let bwd = combine_all(&rev, heads, dim);
+        fwd.assert_allclose(&bwd, 1e-5, 1e-5);
+        // also a shuffled order
+        let mut rng = Prng::new(43);
+        let mut shuf = partials.clone();
+        rng.shuffle(&mut shuf);
+        combine_all(&shuf, heads, dim).assert_allclose(&fwd, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn incremental_equals_batch() {
+        let (heads, dim, kv, shards) = (3, 8, 6, 3);
+        let (q, kvs, _, _) = shard_setup(heads, dim, kv, shards, 44);
+        let partials: Vec<PartialState> =
+            kvs.iter().map(|(k, v)| flash_decode_partial(&q, k, v, heads, kv, 3)).collect();
+        let batch = combine_all(&partials, heads, dim);
+        let mut inc = OnlineCombiner::new(heads, dim);
+        for p in &partials {
+            inc.add(p);
+        }
+        assert_eq!(inc.n_partials(), shards);
+        inc.finish().assert_allclose(&batch, 0.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero partials")]
+    fn empty_combine_rejected() {
+        OnlineCombiner::new(2, 4).finish();
+    }
+
+    #[test]
+    fn single_partial_is_identity_normalization() {
+        let (heads, dim, kv) = (2, 8, 9);
+        let (q, kvs, k_full, v_full) = shard_setup(heads, dim, kv, 1, 45);
+        let p = flash_decode_partial(&q, &kvs[0].0, &kvs[0].1, heads, kv, 3);
+        let got = combine_all(&[p], heads, dim);
+        let expect = decode_attention_ref(&q, &k_full, &v_full, heads, kv);
+        got.assert_allclose(&expect, 1e-3, 1e-3);
+    }
+}

@@ -1,0 +1,196 @@
+//! Native GEMM tile kernel: the functional mirror of the L1 Pallas GEMM
+//! (`python/compile/kernels/gemm.py`).
+//!
+//! Contract (same as the MFMA/MXU path both the paper's Triton kernel and
+//! the Pallas kernel use): fp16 operand storage, f32 accumulation. The
+//! distributed strategies drive this at tile granularity — one call per
+//! (C-tile, K-block) step, with the A-tile coming from wherever the
+//! strategy's communication pattern put it.
+
+use crate::tensor::half::quantize_f16;
+use crate::tensor::linalg::matmul_acc_into;
+use crate::tensor::Tensor;
+
+/// `acc(MB,NB) += A_tile(MB,KB) · B_tile(KB,NB)` with fp16-quantized
+/// operands and f32 accumulation.
+pub fn gemm_tile_acc(
+    acc: &mut [f32],
+    a_tile: &[f32],
+    b_tile: &[f32],
+    mb: usize,
+    kb: usize,
+    nb: usize,
+) {
+    debug_assert_eq!(acc.len(), mb * nb);
+    debug_assert_eq!(a_tile.len(), mb * kb);
+    debug_assert_eq!(b_tile.len(), kb * nb);
+    // quantize operands to fp16 storage precision (inputs may arrive as
+    // f32 host data; the wire/HBM format is fp16)
+    let aq: Vec<f32> = a_tile.iter().map(|&x| quantize_f16(x)).collect();
+    let bq: Vec<f32> = b_tile.iter().map(|&x| quantize_f16(x)).collect();
+    matmul_acc_into(acc, &aq, &bq, mb, kb, nb);
+}
+
+/// [`gemm_tile_acc`] for operands that are *already* fp16-quantized
+/// (weights at init, shards on the heap). Skips the per-call quantize +
+/// allocation — the §Perf fix for the functional node's tile loop, which
+/// was spending ~60% of its time re-quantizing already-quantized data.
+pub fn gemm_tile_acc_prequant(
+    acc: &mut [f32],
+    a_tile: &[f32],
+    b_tile: &[f32],
+    mb: usize,
+    kb: usize,
+    nb: usize,
+) {
+    debug_assert_eq!(acc.len(), mb * nb);
+    debug_assert!(
+        a_tile.iter().take(8).all(|&x| x == quantize_f16(x)),
+        "A tile is not fp16-quantized; use gemm_tile_acc"
+    );
+    debug_assert!(
+        b_tile.iter().take(8).all(|&x| x == quantize_f16(x)),
+        "B tile is not fp16-quantized; use gemm_tile_acc"
+    );
+    matmul_acc_into(acc, a_tile, b_tile, mb, kb, nb);
+}
+
+/// Tiling geometry of a GEMM `C(M,N) = A(M,K)·B(K,N)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmTiling {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub block_m: usize,
+    pub block_n: usize,
+    pub block_k: usize,
+}
+
+impl GemmTiling {
+    /// Ceil-div tile counts along each dimension.
+    pub fn tiles_m(&self) -> usize {
+        self.m.div_ceil(self.block_m)
+    }
+    pub fn tiles_n(&self) -> usize {
+        self.n.div_ceil(self.block_n)
+    }
+    pub fn tiles_k(&self) -> usize {
+        self.k.div_ceil(self.block_k)
+    }
+
+    /// Actual extent of tile `i` along M (last tile may be ragged).
+    pub fn extent_m(&self, i: usize) -> usize {
+        (self.m - i * self.block_m).min(self.block_m)
+    }
+    pub fn extent_n(&self, j: usize) -> usize {
+        (self.n - j * self.block_n).min(self.block_n)
+    }
+    pub fn extent_k(&self, kk: usize) -> usize {
+        (self.k - kk * self.block_k).min(self.block_k)
+    }
+}
+
+/// Full (single-rank) tiled GEMM built from tile calls — the reference for
+/// "the fused kernels' compute is identical to the baseline's compute".
+pub fn gemm_tiled(a: &Tensor, b: &Tensor, t: GemmTiling) -> Tensor {
+    assert_eq!(a.dims(), &[t.m, t.k]);
+    assert_eq!(b.dims(), &[t.k, t.n]);
+    let mut c = Tensor::zeros(&[t.m, t.n]);
+    for ti in 0..t.tiles_m() {
+        let em = t.extent_m(ti);
+        for tj in 0..t.tiles_n() {
+            let en = t.extent_n(tj);
+            let mut acc = vec![0.0f32; em * en];
+            for tk in 0..t.tiles_k() {
+                let ek = t.extent_k(tk);
+                let a_tile = a
+                    .rows(ti * t.block_m, ti * t.block_m + em)
+                    .cols(tk * t.block_k, tk * t.block_k + ek);
+                let b_tile = b
+                    .rows(tk * t.block_k, tk * t.block_k + ek)
+                    .cols(tj * t.block_n, tj * t.block_n + en);
+                gemm_tile_acc(&mut acc, a_tile.data(), b_tile.data(), em, ek, en);
+            }
+            let block = Tensor::from_vec(&[em, en], acc);
+            c.write_block(ti * t.block_m, tj * t.block_n, &block);
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::linalg::matmul;
+    use crate::util::Prng;
+
+    fn fp16_tensor(dims: &[usize], rng: &mut Prng) -> Tensor {
+        let mut t = Tensor::rand(dims, 1.0, rng);
+        t.quantize_f16();
+        t
+    }
+
+    #[test]
+    fn tile_acc_matches_dense_matmul() {
+        let mut rng = Prng::new(21);
+        let (m, k, n) = (6, 10, 7);
+        let a = fp16_tensor(&[m, k], &mut rng);
+        let b = fp16_tensor(&[k, n], &mut rng);
+        let mut acc = vec![0.0f32; m * n];
+        gemm_tile_acc(&mut acc, a.data(), b.data(), m, k, n);
+        let expect = matmul(&a, &b);
+        Tensor::from_vec(&[m, n], acc).assert_allclose(&expect, 1e-4, 1e-3);
+    }
+
+    #[test]
+    fn tiled_gemm_matches_reference_even_division() {
+        let mut rng = Prng::new(22);
+        let t = GemmTiling { m: 16, n: 12, k: 24, block_m: 4, block_n: 6, block_k: 8 };
+        let a = fp16_tensor(&[t.m, t.k], &mut rng);
+        let b = fp16_tensor(&[t.k, t.n], &mut rng);
+        gemm_tiled(&a, &b, t).assert_allclose(&matmul(&a, &b), 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn tiled_gemm_matches_reference_ragged_tiles() {
+        let mut rng = Prng::new(23);
+        let t = GemmTiling { m: 13, n: 11, k: 17, block_m: 4, block_n: 4, block_k: 8 };
+        let a = fp16_tensor(&[t.m, t.k], &mut rng);
+        let b = fp16_tensor(&[t.k, t.n], &mut rng);
+        gemm_tiled(&a, &b, t).assert_allclose(&matmul(&a, &b), 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn tiling_geometry() {
+        let t = GemmTiling { m: 13, n: 8, k: 9, block_m: 4, block_n: 4, block_k: 4 };
+        assert_eq!(t.tiles_m(), 4);
+        assert_eq!(t.extent_m(3), 1);
+        assert_eq!(t.tiles_n(), 2);
+        assert_eq!(t.extent_n(1), 4);
+        assert_eq!(t.tiles_k(), 3);
+        assert_eq!(t.extent_k(2), 1);
+    }
+
+    #[test]
+    fn accumulation_order_k_split_consistent() {
+        // Splitting K across two tile calls == one call over full K
+        let mut rng = Prng::new(24);
+        let (m, k, n) = (3, 8, 3);
+        let a = fp16_tensor(&[m, k], &mut rng);
+        let b = fp16_tensor(&[k, n], &mut rng);
+        let mut once = vec![0.0f32; m * n];
+        gemm_tile_acc(&mut once, a.data(), b.data(), m, k, n);
+        let mut split = vec![0.0f32; m * n];
+        let a1 = a.cols(0, 4);
+        let a2 = a.cols(4, 8);
+        let b1 = b.rows(0, 4);
+        let b2 = b.rows(4, 8);
+        gemm_tile_acc(&mut split, a1.data(), b1.data(), m, 4, n);
+        gemm_tile_acc(&mut split, a2.data(), b2.data(), m, 4, n);
+        Tensor::from_vec(&[m, n], split).assert_allclose(
+            &Tensor::from_vec(&[m, n], once),
+            1e-4,
+            1e-4,
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! Native tile kernels: the functional (host CPU) mirrors of the L1 Pallas
+//! kernels, used by the coordinator's rank engines where per-tile
+//! granularity matters (PJRT dispatch per tile would drown the protocol in
+//! host overhead — the very Launch Tax the paper is about; see DESIGN.md
+//! §2, last row).
+//!
+//! Numerics contract shared with L1: fp16 operand storage, f32
+//! accumulation, online-softmax in the flash-decode path. Each kernel is
+//! tested against the [`crate::tensor::linalg`] oracles, and the L1 Pallas
+//! kernels are tested against the same oracles (ported in
+//! `python/compile/kernels/ref.py`), which ties the two implementations
+//! together.
+
+pub mod attention;
+pub mod combine;
+pub mod gemm_tile;
+
+pub use attention::{flash_decode_partial, PartialState};
+pub use combine::{combine_all, OnlineCombiner};
+pub use gemm_tile::{gemm_tile_acc, gemm_tiled, GemmTiling};

@@ -1,0 +1,52 @@
+//! # taxfree
+//!
+//! A reproduction of *"Eliminating Multi-GPU Performance Taxes: A Systems
+//! Approach to Efficient Distributed LLMs"* (Trifan et al., 2025) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper identifies three taxes paid by the bulk-synchronous
+//! "Compute–Wait–Collective–Wait–Compute" pattern — kernel-launch overhead,
+//! bulk-synchronous barrier idle, and inter-kernel data-locality loss — and
+//! removes them by fusing tile-level communication (Iris-style remote
+//! load/store + signal flags) into compute kernels.
+//!
+//! This crate provides:
+//!
+//! * [`iris`] — the RMA substrate (symmetric heap, remote load/store,
+//!   signal flags, barriers) over a simulated 8-rank node;
+//! * [`collectives`] — BSP collectives (the RCCL-like baseline) and
+//!   tile-granular fused variants;
+//! * [`coordinator`] — rank engines and the six execution strategies from
+//!   the paper's evolution (BSP baseline → fully fused);
+//! * [`sim`] — the calibrated discrete-event performance model that stands
+//!   in for the MI300X node and regenerates the paper's figures;
+//! * [`kernels`] — native tile kernels (GEMM tile, online-softmax partial
+//!   attention, combine), the functional mirror of the L1 Pallas kernels;
+//! * [`runtime`] — PJRT loading/execution of the AOT-compiled JAX/Pallas
+//!   artifacts (Python never runs at serve time);
+//! * [`workloads`] — All-Gather+GEMM (paper §4.1) and Flash Decode
+//!   (paper §4.2) plus a tiny tensor-parallel transformer for end-to-end
+//!   serving;
+//! * [`serve`] — a batched decode serving loop on top of the runtime;
+//! * [`experiments`] — harnesses that regenerate every figure/table in the
+//!   paper's evaluation;
+//! * [`metrics`] — the Three-Taxes ledger and the paper's timing protocol.
+//!
+//! See `DESIGN.md` for the substitution map (paper testbed → this repo) and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod clock;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod fabric;
+pub mod iris;
+pub mod kernels;
+pub mod runtime;
+pub mod metrics;
+pub mod serve;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,343 @@
+//! `taxfree` — leader entrypoint and CLI.
+//!
+//! Subcommands (no clap offline; parsing is hand-rolled):
+//!
+//! ```text
+//! taxfree experiments <fig2|fig9|fig10|fig11|all> [--iters N] [--seed N]
+//!         [--config FILE] [--set section.key=value]...
+//! taxfree serve [--world N] [--requests N] [--backend native|pjrt]
+//!         [--artifacts DIR] [--seed N]
+//! taxfree selftest [--artifacts DIR]
+//! taxfree help
+//! ```
+
+use taxfree::config::ExperimentConfig;
+use taxfree::experiments;
+use taxfree::serve::{serve, RequestQueue};
+use taxfree::workloads::transformer::{
+    NativeCompute, TransformerConfig, TransformerWeights,
+};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("experiments") => cmd_experiments(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
+        Some("selftest") => cmd_selftest(&args[1..]),
+        Some("help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command: {other}\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "taxfree — reproduction of \"Eliminating Multi-GPU Performance Taxes\"\n\
+         \n\
+         USAGE:\n  taxfree experiments <fig2|fig9|fig10|fig11|all> [options]\n\
+         \x20 taxfree serve [--world N] [--requests N] [--backend native|pjrt] [--artifacts DIR]\n\
+         \x20 taxfree selftest [--artifacts DIR]\n\
+         \n\
+         OPTIONS (experiments):\n\
+         \x20 --iters N              simulated iterations per point (default 50)\n\
+         \x20 --seed N               master seed (default 7)\n\
+         \x20 --config FILE          TOML-subset config file\n\
+         \x20 --set section.key=val  override (e.g. --set hw.preset=mi325x)\n"
+    );
+}
+
+/// Pull `--flag value` pairs and `--set k=v` overrides out of argv.
+struct Opts {
+    flags: std::collections::HashMap<String, String>,
+    sets: Vec<(String, String)>,
+}
+
+fn parse_opts(args: &[String]) -> Result<(Vec<String>, Opts), String> {
+    let mut pos = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut sets = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if a == "--set" {
+            let v = args.get(i + 1).ok_or("--set needs key=value")?;
+            let (k, val) = v.split_once('=').ok_or("--set needs key=value")?;
+            sets.push((k.to_string(), val.to_string()));
+            i += 2;
+        } else if let Some(name) = a.strip_prefix("--") {
+            let v = args.get(i + 1).ok_or_else(|| format!("--{name} needs a value"))?;
+            flags.insert(name.to_string(), v.clone());
+            i += 2;
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    Ok((pos, Opts { flags, sets }))
+}
+
+fn cmd_experiments(args: &[String]) -> i32 {
+    let (pos, opts) = match parse_opts(args) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let which = pos.first().map(String::as_str).unwrap_or("all");
+    let iters: usize = opts.flags.get("iters").map(|s| s.parse().unwrap_or(50)).unwrap_or(50);
+    let seed: u64 = opts.flags.get("seed").map(|s| s.parse().unwrap_or(7)).unwrap_or(7);
+    let cfg = match ExperimentConfig::from_sources(
+        opts.flags.get("config").map(String::as_str),
+        &opts.sets,
+    ) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let hw = &cfg.hw;
+    // the paper ran AG+GEMM on MI325X and Flash Decode on MI300X (§5.1);
+    // match that unless the user configured hardware explicitly
+    let explicit = opts.flags.contains_key("config")
+        || opts.sets.iter().any(|(k, _)| k.starts_with("hw."));
+    let hw9 = if explicit { hw.clone() } else { taxfree::config::presets::mi325x() };
+    println!("preset={} (fig9: {}) seed={seed} iters={iters}\n", hw.name, hw9.name);
+
+    let run_fig2 = || {
+        let (ag, fd) = experiments::fig2(hw, seed);
+        experiments::fig2_taxes::render(&ag, "Figure 2a — Three Taxes, AG+GEMM (M=64)").print();
+        println!();
+        experiments::fig2_taxes::render(&fd, "Figure 2b — Three Taxes, Flash Decode (256K KV)")
+            .print();
+        println!();
+    };
+    let run_fig9 = || {
+        let rows = experiments::fig9(&hw9, seed, iters);
+        experiments::fig9_ag_gemm::render(&rows, &hw9).print();
+        println!();
+    };
+    let run_fig10 = || {
+        let rows = experiments::fig10(hw, seed, iters);
+        experiments::fig10_flash_decode::render(&rows, hw).print();
+        println!();
+    };
+    let run_fig11 = || {
+        let rows = experiments::fig11(hw, seed, iters);
+        experiments::fig11_scaling::render(&rows, hw).print();
+        println!();
+    };
+    let run_ablations = || {
+        experiments::ablations::tax_knockout(1 << 18, seed, iters).print();
+        println!();
+        experiments::ablations::sensitivity(1 << 18, seed, iters).print();
+        println!();
+        experiments::ablations::autotune_gains(seed, iters.min(20)).print();
+        println!();
+    };
+    let run_autotune = || {
+        use taxfree::config::{AgGemmConfig, FlashDecodeConfig};
+        use taxfree::coordinator::autotune;
+        for m in [16usize, 512, 8192] {
+            let best = autotune::best_ag_gemm(&AgGemmConfig::paper_fig9(m), &hw9, seed);
+            println!(
+                "ag_gemm M={m}: best = {} block_k={} ({:.4} ms)",
+                best.strategy.name(),
+                best.block_k,
+                best.latency_s * 1e3
+            );
+        }
+        for kv in [1usize << 15, 1 << 19] {
+            let best =
+                autotune::best_flash_decode(&FlashDecodeConfig::paper_fig10(kv), hw, seed);
+            println!(
+                "flash_decode KV={}K: best = {} head_groups={} ({:.4} ms)",
+                kv >> 10,
+                best.strategy.name(),
+                best.head_groups,
+                best.latency_s * 1e3
+            );
+        }
+        println!();
+    };
+    match which {
+        "fig2" => run_fig2(),
+        "fig9" => run_fig9(),
+        "fig10" => run_fig10(),
+        "fig11" => run_fig11(),
+        "ablations" => run_ablations(),
+        "allreduce" => experiments::ext_allreduce::run(seed, iters),
+        "autotune" => run_autotune(),
+        "all" => {
+            run_fig2();
+            run_fig9();
+            run_fig10();
+            run_fig11();
+            run_ablations();
+            experiments::ext_allreduce::run(seed, iters);
+            run_autotune();
+        }
+        other => {
+            eprintln!(
+                "unknown experiment: {other} (want fig2|fig9|fig10|fig11|ablations|autotune|all)"
+            );
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let (_, opts) = match parse_opts(args) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let world: usize = opts.flags.get("world").map(|s| s.parse().unwrap_or(4)).unwrap_or(4);
+    let n_requests: usize =
+        opts.flags.get("requests").map(|s| s.parse().unwrap_or(8)).unwrap_or(8);
+    let backend = opts.flags.get("backend").cloned().unwrap_or_else(|| "native".to_string());
+    let artifacts =
+        opts.flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".to_string());
+    let seed: u64 = opts.flags.get("seed").map(|s| s.parse().unwrap_or(7)).unwrap_or(7);
+
+    let cfg = TransformerConfig::e2e(world);
+    let mut queue = RequestQueue::new();
+    queue.fill_synthetic(n_requests, (4, 16), (8, 32), seed);
+    let requests = queue.drain_batch(n_requests);
+    println!(
+        "serving {} requests on {} ranks, backend={}, model={} params",
+        requests.len(),
+        world,
+        backend,
+        cfg.n_params()
+    );
+
+    let report = match backend.as_str() {
+        "native" => {
+            let cfg2 = cfg.clone();
+            serve(&cfg, requests, move |_rank| {
+                NativeCompute::new(cfg2.clone(), TransformerWeights::random(&cfg2, seed))
+            })
+        }
+        "pjrt" => {
+            let cfg2 = cfg.clone();
+            let dir = std::path::PathBuf::from(artifacts);
+            serve(&cfg, requests, move |_rank| {
+                let rt = std::rc::Rc::new(
+                    taxfree::runtime::Runtime::load_dir(&dir).expect("load artifacts"),
+                );
+                taxfree::runtime::PjrtCompute::new(
+                    rt,
+                    cfg2.clone(),
+                    TransformerWeights::random(&cfg2, seed),
+                )
+                .expect("wire PJRT compute")
+            })
+        }
+        other => {
+            eprintln!("unknown backend: {other} (want native|pjrt)");
+            return 2;
+        }
+    };
+    let s = report.latency_summary();
+    println!(
+        "served {} tokens in {:.3}s -> {:.1} tok/s\nrequest latency: p50={:.1}ms p99={:.1}ms max={:.1}ms",
+        report.total_tokens,
+        report.wall_s,
+        report.tokens_per_s(),
+        s.p50 / 1e6,
+        s.p99 / 1e6,
+        s.max / 1e6,
+    );
+    0
+}
+
+/// `taxfree trace <workload> <strategy> [--out FILE]` — dump a Chrome
+/// trace (chrome://tracing / Perfetto) of one simulated operation, plus a
+/// per-rank utilization summary. The visual form of the Three Taxes.
+fn cmd_trace(args: &[String]) -> i32 {
+    use taxfree::config::{presets, AgGemmConfig, FlashDecodeConfig};
+    use taxfree::coordinator::{AgGemmStrategy, FlashDecodeStrategy};
+    let (pos, opts) = match parse_opts(args) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let workload = pos.first().map(String::as_str).unwrap_or("flash_decode");
+    let strategy = pos.get(1).map(String::as_str).unwrap_or("fully_fused");
+    let result = match workload {
+        "ag_gemm" => {
+            let cfg = AgGemmConfig::paper_fig9(256);
+            let s = AgGemmStrategy::ALL
+                .into_iter()
+                .find(|s| s.name() == strategy)
+                .unwrap_or(AgGemmStrategy::Push);
+            taxfree::workloads::ag_gemm::simulate(&cfg, &presets::mi325x(), s, 7)
+        }
+        "flash_decode" => {
+            let cfg = FlashDecodeConfig::paper_fig10(1 << 18);
+            let s = FlashDecodeStrategy::ALL
+                .into_iter()
+                .find(|s| s.name() == strategy)
+                .unwrap_or(FlashDecodeStrategy::FullyFused);
+            taxfree::workloads::flash_decode::simulate(&cfg, &presets::mi300x(), s, 7)
+        }
+        other => {
+            eprintln!("unknown workload: {other} (want ag_gemm|flash_decode)");
+            return 2;
+        }
+    };
+    let trace = taxfree::sim::trace::chrome_trace(&result);
+    let out = opts
+        .flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| format!("/tmp/taxfree_{workload}_{strategy}.trace.json"));
+    if let Err(e) = std::fs::write(&out, &trace) {
+        eprintln!("write {out}: {e}");
+        return 1;
+    }
+    println!("wrote {} events to {out} (open in chrome://tracing)", trace.matches("\"ph\"").count());
+    print!("{}", taxfree::sim::trace::utilization_summary(&result));
+    result.ledger.breakdown_table("three taxes").print();
+    0
+}
+
+fn cmd_selftest(args: &[String]) -> i32 {
+    let (_, opts) = match parse_opts(args) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let dir = std::path::PathBuf::from(
+        opts.flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".to_string()),
+    );
+    match taxfree::runtime::Runtime::load_dir(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts loaded: {:?}", rt.names());
+            println!("selftest OK");
+            0
+        }
+        Err(e) => {
+            eprintln!("selftest FAILED: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Measurement and attribution: the Three-Taxes ledger ([`TaxLedger`]) and
+//! the wall-clock recorder implementing the paper's timing protocol
+//! ([`Recorder`]).
+
+pub mod recorder;
+pub mod taxes;
+
+pub use recorder::Recorder;
+pub use taxes::TaxLedger;

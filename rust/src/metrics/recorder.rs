@@ -1,0 +1,122 @@
+//! Wall-clock measurement recorder implementing the paper's §5.1 protocol:
+//! warmup runs discarded, measured iterations aggregated, reported as a
+//! latency summary. Used by the functional (real-data) paths, the serving
+//! loop, and the benches.
+
+use crate::clock::WallTimer;
+use crate::util::{LatencyHistogram, Summary};
+
+/// Accumulates per-iteration latencies for one named measurement.
+#[derive(Debug, Clone)]
+pub struct Recorder {
+    name: String,
+    samples_ns: Vec<f64>,
+    hist: LatencyHistogram,
+}
+
+impl Recorder {
+    pub fn new(name: &str) -> Recorder {
+        Recorder { name: name.to_string(), samples_ns: Vec::new(), hist: LatencyHistogram::new() }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.samples_ns.push(ns as f64);
+        self.hist.record(ns);
+    }
+
+    /// Time one closure invocation and record it.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t = WallTimer::start();
+        let out = f();
+        self.record_ns(t.elapsed_ns());
+        out
+    }
+
+    /// Run the full §5.1 protocol over `f`.
+    pub fn run_protocol<F: FnMut()>(&mut self, warmup: usize, iters: usize, mut f: F) {
+        for _ in 0..warmup {
+            f();
+        }
+        for _ in 0..iters {
+            self.time(&mut f);
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ns.len()
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples_ns)
+    }
+
+    pub fn histogram(&self) -> &LatencyHistogram {
+        &self.hist
+    }
+
+    /// Mean latency in milliseconds (the paper's reporting unit).
+    pub fn mean_ms(&self) -> f64 {
+        self.summary().mean / 1e6
+    }
+
+    /// One-line report string.
+    pub fn report(&self) -> String {
+        if self.samples_ns.is_empty() {
+            return format!("{}: no samples", self.name);
+        }
+        let s = self.summary();
+        format!(
+            "{}: n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.name,
+            s.n,
+            s.mean / 1e6,
+            s.p50 / 1e6,
+            s.p99 / 1e6,
+            s.max / 1e6
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn protocol_runs_warmup_plus_iters() {
+        let mut calls = 0;
+        let mut r = Recorder::new("t");
+        r.run_protocol(5, 20, || calls += 1);
+        assert_eq!(calls, 25);
+        assert_eq!(r.count(), 20);
+    }
+
+    #[test]
+    fn time_returns_closure_value() {
+        let mut r = Recorder::new("t");
+        let v = r.time(|| 42);
+        assert_eq!(v, 42);
+        assert_eq!(r.count(), 1);
+    }
+
+    #[test]
+    fn report_contains_stats() {
+        let mut r = Recorder::new("lat");
+        for i in 1..=10u64 {
+            r.record_ns(i * 1_000_000);
+        }
+        let rep = r.report();
+        assert!(rep.contains("lat:"), "{rep}");
+        assert!(rep.contains("n=10"), "{rep}");
+        assert!(r.mean_ms() > 0.0);
+    }
+
+    #[test]
+    fn empty_recorder_reports_gracefully() {
+        let r = Recorder::new("empty");
+        assert_eq!(r.report(), "empty: no samples");
+    }
+}

@@ -1,0 +1,165 @@
+//! The Three Taxes ledger (paper §2.3, Fig. 2).
+//!
+//! Every execution — simulated or functional — reports where its time went
+//! in exactly the paper's vocabulary:
+//!
+//! * **Launch Tax** — host dispatch overhead, `n_launches × t_launch`.
+//! * **Bulk Synchronous Tax** — rank idle at global barriers (measured per
+//!   rank as barrier-exit − arrival) plus coarse-grained wait-for-collective
+//!   idle.
+//! * **Inter-Kernel Tax** — producer output evicted to HBM and re-read by
+//!   the consumer kernel (charged as the round-trip byte time).
+//!
+//! `busy` is everything that is *not* a tax (useful compute + unavoidable
+//! data movement). Per-rank conservation (`busy + taxes + other_idle =
+//! makespan`) is asserted by the simulator's tests.
+
+use crate::util::{fmt_ns, Table};
+
+/// Aggregated tax accounting for one execution.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TaxLedger {
+    /// Number of kernel launches (host dispatches).
+    pub launches: u64,
+    /// Seconds of host dispatch overhead (Launch Tax).
+    pub launch_s: f64,
+    /// Seconds of rank idle at global barriers, summed over ranks
+    /// (Bulk Synchronous Tax).
+    pub bulk_sync_s: f64,
+    /// Seconds of HBM round-trip for producer→consumer hand-off that a
+    /// fused kernel would have kept on-chip (Inter-Kernel Tax).
+    pub inter_kernel_s: f64,
+    /// Seconds of rank idle waiting on fine-grained flags (not a paper tax:
+    /// this is the residual dataflow dependency wait that fusion *cannot*
+    /// remove; reported so the breakdown is complete).
+    pub flag_idle_s: f64,
+    /// Seconds of useful work (compute + required data movement), summed
+    /// over ranks.
+    pub busy_s: f64,
+    /// Bytes moved across the fabric.
+    pub fabric_bytes: u64,
+    /// Bytes round-tripped through HBM due to kernel separation.
+    pub inter_kernel_bytes: u64,
+    /// End-to-end virtual (or wall) seconds of the whole operation.
+    pub makespan_s: f64,
+}
+
+impl TaxLedger {
+    pub fn total_tax_s(&self) -> f64 {
+        self.launch_s + self.bulk_sync_s + self.inter_kernel_s
+    }
+
+    /// Tax as a fraction of total rank-seconds.
+    pub fn tax_fraction(&self, world: usize) -> f64 {
+        let total = self.makespan_s * world as f64;
+        if total <= 0.0 { 0.0 } else { self.total_tax_s() / total }
+    }
+
+    pub fn merge(&mut self, other: &TaxLedger) {
+        self.launches += other.launches;
+        self.launch_s += other.launch_s;
+        self.bulk_sync_s += other.bulk_sync_s;
+        self.inter_kernel_s += other.inter_kernel_s;
+        self.flag_idle_s += other.flag_idle_s;
+        self.busy_s += other.busy_s;
+        self.fabric_bytes += other.fabric_bytes;
+        self.inter_kernel_bytes += other.inter_kernel_bytes;
+        self.makespan_s = self.makespan_s.max(other.makespan_s);
+    }
+
+    /// Scale all time quantities (e.g. averaging over iterations).
+    pub fn scaled(&self, f: f64) -> TaxLedger {
+        TaxLedger {
+            launches: self.launches,
+            launch_s: self.launch_s * f,
+            bulk_sync_s: self.bulk_sync_s * f,
+            inter_kernel_s: self.inter_kernel_s * f,
+            flag_idle_s: self.flag_idle_s * f,
+            busy_s: self.busy_s * f,
+            fabric_bytes: self.fabric_bytes,
+            inter_kernel_bytes: self.inter_kernel_bytes,
+            makespan_s: self.makespan_s * f,
+        }
+    }
+
+    /// Render the Figure-2-style breakdown table.
+    pub fn breakdown_table(&self, title: &str) -> Table {
+        let mut t = Table::new(title).header(vec!["component", "time", "share"]);
+        let denom = (self.busy_s + self.total_tax_s() + self.flag_idle_s).max(1e-30);
+        let mut row = |name: &str, secs: f64| {
+            t.row(vec![
+                name.to_string(),
+                fmt_ns(secs * 1e9),
+                format!("{:.1}%", 100.0 * secs / denom),
+            ]);
+        };
+        row("useful work (compute + required movement)", self.busy_s);
+        row("kernel launch overhead tax", self.launch_s);
+        row("bulk synchronous tax", self.bulk_sync_s);
+        row("inter-kernel data locality tax", self.inter_kernel_s);
+        row("dataflow dependency wait (residual)", self.flag_idle_s);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TaxLedger {
+        TaxLedger {
+            launches: 3,
+            launch_s: 24e-6,
+            bulk_sync_s: 50e-6,
+            inter_kernel_s: 10e-6,
+            flag_idle_s: 5e-6,
+            busy_s: 800e-6,
+            fabric_bytes: 1 << 20,
+            inter_kernel_bytes: 1 << 16,
+            makespan_s: 120e-6,
+        }
+    }
+
+    #[test]
+    fn total_tax_sums_three_taxes() {
+        let l = sample();
+        assert!((l.total_tax_s() - 84e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = sample();
+        let b = sample();
+        a.merge(&b);
+        assert_eq!(a.launches, 6);
+        assert!((a.launch_s - 48e-6).abs() < 1e-12);
+        assert_eq!(a.fabric_bytes, 2 << 20);
+        assert!((a.makespan_s - 120e-6).abs() < 1e-18); // max, not sum
+    }
+
+    #[test]
+    fn scaled_scales_times_only() {
+        let l = sample().scaled(0.5);
+        assert_eq!(l.launches, 3);
+        assert!((l.launch_s - 12e-6).abs() < 1e-12);
+        assert_eq!(l.fabric_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn tax_fraction_bounded() {
+        let l = sample();
+        let f = l.tax_fraction(8);
+        assert!(f > 0.0 && f < 1.0, "{f}");
+        assert_eq!(TaxLedger::default().tax_fraction(8), 0.0);
+    }
+
+    #[test]
+    fn breakdown_table_has_all_rows() {
+        let t = sample().breakdown_table("fig2");
+        assert_eq!(t.n_rows(), 5);
+        let s = t.render();
+        assert!(s.contains("bulk synchronous tax"));
+        assert!(s.contains("kernel launch overhead tax"));
+        assert!(s.contains("inter-kernel data locality tax"));
+    }
+}

@@ -1,0 +1,162 @@
+//! [`LocalCompute`] backed by PJRT artifacts: the per-token dense compute
+//! of the serving path executed from the AOT-compiled L2 graphs
+//! (`qkv_proj_e2e`, `post_attn_e2e`). The distributed attention stays in
+//! the coordinator's fused protocol — exactly the paper's split: the fused
+//! communication pattern is the contribution, the dense math is ordinary
+//! compiled code.
+
+use std::rc::Rc;
+
+use crate::runtime::pjrt::{ArgValue, Runtime};
+use crate::tensor::Tensor;
+use crate::workloads::transformer::{LocalCompute, TransformerConfig, TransformerWeights};
+
+/// PJRT-backed dense compute for the e2e transformer. One instance per
+/// rank engine (PJRT handles are not `Send`).
+pub struct PjrtCompute {
+    rt: Rc<Runtime>,
+    cfg: TransformerConfig,
+    weights: TransformerWeights,
+    qkv_name: String,
+    post_name: String,
+}
+
+impl PjrtCompute {
+    /// Wire a runtime to the e2e transformer geometry. Validates that the
+    /// artifact specs match the model config (the manifest is the contract
+    /// between `model.py` and this struct).
+    pub fn new(
+        rt: Rc<Runtime>,
+        cfg: TransformerConfig,
+        weights: TransformerWeights,
+    ) -> Result<PjrtCompute, String> {
+        cfg.validate()?;
+        if weights.layers.len() != cfg.n_layers {
+            return Err(format!(
+                "{} weight layers for {} model layers",
+                weights.layers.len(),
+                cfg.n_layers
+            ));
+        }
+        let qkv_name = "qkv_proj_e2e".to_string();
+        let post_name = "post_attn_e2e".to_string();
+        let qkv = rt.spec(&qkv_name).ok_or("missing qkv_proj_e2e artifact")?;
+        if qkv.inputs[0].dims != [1, cfg.d_model]
+            || qkv.inputs[1].dims != [cfg.d_model, 3 * cfg.d_model]
+        {
+            return Err(format!(
+                "qkv_proj_e2e artifact shapes {:?} don't match d_model {}",
+                qkv.inputs, cfg.d_model
+            ));
+        }
+        let post = rt.spec(&post_name).ok_or("missing post_attn_e2e artifact")?;
+        if post.inputs[3].dims != [cfg.d_model, cfg.ffn_hidden] {
+            return Err(format!(
+                "post_attn_e2e ffn shape {:?} doesn't match ffn_hidden {}",
+                post.inputs[3].dims, cfg.ffn_hidden
+            ));
+        }
+        Ok(PjrtCompute { rt, cfg, weights, qkv_name, post_name })
+    }
+}
+
+impl LocalCompute for PjrtCompute {
+    fn qkv(&self, layer: usize, h: &Tensor) -> (Tensor, Tensor, Tensor) {
+        let w = &self.weights.layers[layer];
+        let outs = self
+            .rt
+            .execute(
+                &self.qkv_name,
+                &[ArgValue::F32(h.clone()), ArgValue::F32(w.wqkv.clone())],
+            )
+            .expect("qkv_proj_e2e execute");
+        let mut it = outs.into_iter();
+        (it.next().unwrap(), it.next().unwrap(), it.next().unwrap())
+    }
+
+    fn post_attn(&self, layer: usize, h: &Tensor, attn_out: &Tensor) -> Tensor {
+        let w = &self.weights.layers[layer];
+        let outs = self
+            .rt
+            .execute(
+                &self.post_name,
+                &[
+                    ArgValue::F32(h.clone()),
+                    ArgValue::F32(attn_out.clone()),
+                    ArgValue::F32(w.wo.clone()),
+                    ArgValue::F32(w.w1.clone()),
+                    ArgValue::F32(w.w2.clone()),
+                ],
+            )
+            .expect("post_attn_e2e execute");
+        outs.into_iter().next().unwrap()
+    }
+
+    fn n_layers(&self) -> usize {
+        self.cfg.n_layers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::transformer::{token_embedding, NativeCompute, ReferenceDecoder};
+    use std::path::Path;
+
+    fn runtime() -> Option<Rc<Runtime>> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return None;
+        }
+        Some(Rc::new(Runtime::load_dir(&dir).unwrap()))
+    }
+
+    #[test]
+    fn pjrt_compute_matches_native_per_call() {
+        let Some(rt) = runtime() else { return };
+        let cfg = TransformerConfig::e2e(1);
+        let w = TransformerWeights::random(&cfg, 11);
+        let pj = PjrtCompute::new(rt, cfg.clone(), w.clone()).unwrap();
+        let nat = NativeCompute::new(cfg.clone(), w);
+        let h = token_embedding(&cfg, 5);
+        let (q1, k1, v1) = pj.qkv(0, &h);
+        let (q2, k2, v2) = nat.qkv(0, &h);
+        q1.assert_allclose(&q2, 2e-3, 2e-3);
+        k1.assert_allclose(&k2, 2e-3, 2e-3);
+        v1.assert_allclose(&v2, 2e-3, 2e-3);
+        let attn = token_embedding(&cfg, 6);
+        let attn = Tensor::from_vec(&[cfg.n_heads, cfg.head_dim], attn.data().to_vec());
+        let o1 = pj.post_attn(1, &h, &attn);
+        let o2 = nat.post_attn(1, &h, &attn);
+        o1.assert_allclose(&o2, 5e-3, 5e-3);
+    }
+
+    #[test]
+    fn pjrt_decoder_tracks_native_decoder() {
+        let Some(rt) = runtime() else { return };
+        let cfg = TransformerConfig::e2e(1);
+        let w = TransformerWeights::random(&cfg, 12);
+        let mut dp = ReferenceDecoder::new(cfg.clone(), PjrtCompute::new(rt, cfg.clone(), w.clone()).unwrap());
+        let mut dn = ReferenceDecoder::new(cfg.clone(), NativeCompute::new(cfg.clone(), w));
+        let mut hp = token_embedding(&cfg, 1);
+        let mut hn = hp.clone();
+        for step in 0..3 {
+            hp = dp.step(&hp);
+            hn = dn.step(&hn);
+            hp.assert_allclose(&hn, 2e-2, 2e-2);
+            let _ = step;
+        }
+    }
+
+    #[test]
+    fn config_mismatch_rejected() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = TransformerConfig::e2e(1);
+        cfg.d_model = 128;
+        cfg.n_heads = 4;
+        cfg.ffn_hidden = 512;
+        let w = TransformerWeights::random(&cfg, 13);
+        assert!(PjrtCompute::new(rt, cfg, w).is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! Artifact manifest parsing.
+//!
+//! `python -m compile.aot` writes `artifacts/manifest.txt` with one line
+//! per AOT-compiled L2 graph:
+//!
+//! ```text
+//! name|file.hlo.txt|in=f32:16x32,f32:32x24|out=f32:16x24
+//! ```
+//!
+//! The Rust runtime validates every call against these specs, so a shape
+//! drift between `model.py` and the Rust callers fails loudly at the
+//! boundary instead of corrupting buffers inside PJRT.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Element type of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType, String> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(format!("unknown dtype: {other}")),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact argument. `dims` empty = scalar.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    fn parse(s: &str) -> Result<TensorSpec, String> {
+        let (dt, dims) = s.split_once(':').ok_or_else(|| format!("bad spec: {s}"))?;
+        let dims = if dims.is_empty() {
+            Vec::new()
+        } else {
+            dims.split('x')
+                .map(|d| d.parse::<usize>().map_err(|e| format!("bad dim in {s}: {e}")))
+                .collect::<Result<Vec<_>, _>>()?
+        };
+        Ok(TensorSpec { dtype: DType::parse(dt)?, dims })
+    }
+}
+
+impl std::fmt::Display for TensorSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let dt = match self.dtype {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        };
+        write!(f, "{dt}:{}", self.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x"))
+    }
+}
+
+/// One AOT artifact: name, HLO text file, and the argument contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse manifest text; `dir` anchors the per-artifact file paths.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let mut entries = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('|').collect();
+            if fields.len() != 4 {
+                return Err(format!("manifest line {}: expected 4 fields", lineno + 1));
+            }
+            let name = fields[0].to_string();
+            let path = dir.join(fields[1]);
+            let ins = fields[2]
+                .strip_prefix("in=")
+                .ok_or_else(|| format!("line {}: missing in=", lineno + 1))?;
+            let outs = fields[3]
+                .strip_prefix("out=")
+                .ok_or_else(|| format!("line {}: missing out=", lineno + 1))?;
+            let parse_list = |s: &str| -> Result<Vec<TensorSpec>, String> {
+                if s.is_empty() {
+                    return Ok(Vec::new());
+                }
+                // dtype:dims separated by commas
+                s.split(',').map(TensorSpec::parse).collect()
+            };
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                path,
+                inputs: parse_list(ins)?,
+                outputs: parse_list(outs)?,
+            };
+            if entries.insert(name.clone(), spec).is_some() {
+                return Err(format!("duplicate artifact name: {name}"));
+            }
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Load `dir/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts`)", path.display()))?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+gemm_test|gemm_test.hlo.txt|in=f32:16x32,f32:32x24|out=f32:16x24
+flash_partial_test|fp.hlo.txt|in=i32:,f32:8x32,f32:8x64x32,f32:8x64x32|out=f32:8x32,f32:8,f32:8
+";
+
+    #[test]
+    fn parses_entries_and_specs() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.len(), 2);
+        let g = m.get("gemm_test").unwrap();
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[0], TensorSpec { dtype: DType::F32, dims: vec![16, 32] });
+        assert_eq!(g.outputs[0].numel(), 16 * 24);
+        assert_eq!(g.path, Path::new("/art/gemm_test.hlo.txt"));
+        let f = m.get("flash_partial_test").unwrap();
+        assert_eq!(f.inputs[0], TensorSpec { dtype: DType::I32, dims: vec![] });
+        assert_eq!(f.inputs[0].numel(), 1, "scalar numel is 1");
+        assert_eq!(f.outputs.len(), 3);
+    }
+
+    #[test]
+    fn display_round_trips() {
+        let s = TensorSpec { dtype: DType::F32, dims: vec![8, 64, 32] };
+        assert_eq!(TensorSpec::parse(&s.to_string()).unwrap(), s);
+        let scalar = TensorSpec { dtype: DType::I32, dims: vec![] };
+        assert_eq!(TensorSpec::parse(&scalar.to_string()).unwrap(), scalar);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("only|three|fields", Path::new(".")).is_err());
+        assert!(Manifest::parse("a|f|in=f32:2|bad=f32:2", Path::new(".")).is_err());
+        assert!(Manifest::parse("a|f|in=q8:2|out=f32:2", Path::new(".")).is_err());
+        let dup = "a|f|in=f32:2|out=f32:2\na|g|in=f32:2|out=f32:2\n";
+        assert!(Manifest::parse(dup, Path::new(".")).unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("gemm_test").is_some());
+            assert!(m.get("qkv_proj_e2e").is_some());
+            for name in m.names() {
+                assert!(m.get(name).unwrap().path.exists(), "{name} file missing");
+            }
+        }
+    }
+}

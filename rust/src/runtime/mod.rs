@@ -1,0 +1,17 @@
+//! Runtime: PJRT loading + execution of the AOT-compiled JAX/Pallas
+//! artifacts (see `python/compile/aot.py` for the build half).
+//!
+//! * [`manifest`] — the artifact contract (`artifacts/manifest.txt`);
+//! * [`pjrt`] — the PJRT CPU client, executable cache, shape-checked
+//!   execution ([`Runtime::execute`]);
+//! * [`compute`] — [`crate::workloads::transformer::LocalCompute`] backed
+//!   by PJRT artifacts: the serving path's per-token dense compute without
+//!   any Python.
+
+pub mod compute;
+pub mod manifest;
+pub mod pjrt;
+
+pub use compute::PjrtCompute;
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+pub use pjrt::{ArgValue, Runtime};

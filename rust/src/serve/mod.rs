@@ -1,0 +1,282 @@
+//! Batched decode serving on the distributed node — the end-to-end system
+//! driver (DESIGN.md §6, row "E2E").
+//!
+//! The serving node stands up `world` rank engines over the iris heap. Each
+//! engine owns its KV-cache shard and its own [`LocalCompute`] (native tile
+//! kernels or PJRT artifacts — PJRT handles are not `Send`, so each engine
+//! builds its own via the [`ComputeFactory`]). Per layer and token:
+//!
+//! 1. every rank runs the dense QKV projection (replicated);
+//! 2. the owning rank (token `t % world`) appends the new K/V to its shard;
+//! 3. **distributed flash decode with the paper's fully-fused pattern**:
+//!    local partial → immediate push + signal to all peers → concurrent
+//!    online-softmax reduction behind flags (Algorithm 4);
+//! 4. every rank runs the post-attention dense block (replicated).
+//!
+//! Requests are processed from a FIFO queue; the report carries the
+//! paper-style latency summary plus tokens/s.
+
+pub mod continuous;
+pub mod queue;
+
+use std::sync::Arc;
+
+use crate::iris::{run_node, HeapBuilder, RankCtx};
+use crate::kernels::attention::PartialState;
+use crate::kernels::combine::OnlineCombiner;
+use crate::metrics::Recorder;
+use crate::tensor::Tensor;
+use crate::workloads::transformer::{
+    token_embedding, KvShard, LocalCompute, TransformerConfig,
+};
+
+pub use queue::{Request, RequestQueue, RequestResult};
+
+/// Per-rank constructor for the dense-compute backend.
+pub type ComputeFactory<C> = dyn Fn(usize) -> C + Send + Sync;
+
+/// Serving report: per-request results plus aggregate throughput.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub results: Vec<RequestResult>,
+    pub total_tokens: usize,
+    pub wall_s: f64,
+}
+
+impl ServeReport {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 { 0.0 } else { self.total_tokens as f64 / self.wall_s }
+    }
+
+    pub fn latency_summary(&self) -> crate::util::Summary {
+        let ns: Vec<f64> = self.results.iter().map(|r| r.latency_ns as f64).collect();
+        crate::util::Summary::of(&ns)
+    }
+}
+
+pub(crate) const BUF_INBOX: &str = "serve_inbox";
+pub(crate) const FLAGS_PARTIAL: &str = "serve_ready";
+
+/// Serve a queue of requests on a fresh distributed node. `factory` builds
+/// each rank's [`LocalCompute`]; all ranks must be given identical weights
+/// (replicated model).
+pub fn serve<C, F>(
+    cfg: &TransformerConfig,
+    requests: Vec<Request>,
+    factory: F,
+) -> ServeReport
+where
+    C: LocalCompute,
+    F: Fn(usize) -> C + Send + Sync + 'static,
+{
+    cfg.validate().expect("invalid TransformerConfig");
+    let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
+    // inbox is double-buffered by round parity: a producer may run one
+    // layer ahead of a slow consumer, so slot (parity, source) guarantees
+    // it never overwrites data still being read (see decode_step_fused)
+    let heap = Arc::new(
+        HeapBuilder::new(cfg.world)
+            .buffer(BUF_INBOX, 2 * cfg.world * wire)
+            .flags(FLAGS_PARTIAL, cfg.world)
+            .build(),
+    );
+    let cfg2 = cfg.clone();
+    let t0 = crate::clock::WallTimer::start();
+    let mut outs = run_node(heap, move |ctx| {
+        let compute = factory(ctx.rank());
+        engine_body(&ctx, &cfg2, &compute, &requests)
+    });
+    let wall_s = t0.elapsed_s();
+    // rank 0's view is authoritative (all ranks produce identical results)
+    let results = outs.swap_remove(0);
+    let total_tokens = results.iter().map(|r| r.tokens).sum();
+    ServeReport { results, total_tokens, wall_s }
+}
+
+/// The per-rank serving engine: processes every request in order, running
+/// the fused decode protocol per token.
+fn engine_body<C: LocalCompute>(
+    ctx: &RankCtx,
+    cfg: &TransformerConfig,
+    compute: &C,
+    requests: &[Request],
+) -> Vec<RequestResult> {
+    let mut results = Vec::with_capacity(requests.len());
+    // monotone flag round counter across the whole session
+    let mut round: u64 = 0;
+    let mut recorder = Recorder::new("decode_step");
+
+    for req in requests {
+        let timer = crate::clock::WallTimer::start();
+        let mut shard = KvShard::new(cfg);
+        let mut h = token_embedding(cfg, req.id as u64);
+        let total_tokens = req.prompt_len + req.gen_len;
+        let mut last_hidden = h.clone();
+        for t in 0..total_tokens {
+            let owner = t % cfg.world;
+            h = recorder.time(|| {
+                decode_step_fused(ctx, cfg, compute, &mut shard, &h, owner, &mut round)
+            });
+            last_hidden = h.clone();
+        }
+        // next-step input for a "generated" token would come from sampling;
+        // we feed the hidden state back (synthetic workload)
+        let _ = last_hidden;
+        results.push(RequestResult {
+            id: req.id,
+            tokens: total_tokens,
+            latency_ns: timer.elapsed_ns(),
+        });
+        ctx.barrier(); // requests are serialized across the node
+    }
+    results
+}
+
+/// One decode step with the paper's fully-fused attention exchange
+/// (Algorithm 4) per layer.
+pub(crate) fn decode_step_fused<C: LocalCompute>(
+    ctx: &RankCtx,
+    cfg: &TransformerConfig,
+    compute: &C,
+    shard: &mut KvShard,
+    h: &Tensor,
+    owner: usize,
+    round: &mut u64,
+) -> Tensor {
+    let r = ctx.rank();
+    let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
+    let mut h = h.clone();
+    for layer in 0..cfg.n_layers {
+        *round += 1;
+        // 1) dense QKV (replicated compute — same inputs, same outputs)
+        let (q, k_new, v_new) = compute.qkv(layer, &h);
+        // 2) owner appends this token's KV to its shard
+        if r == owner {
+            shard.append(layer, &k_new, &v_new);
+        }
+        // 3) fused distributed flash decode (Algorithm 4):
+        //    part 1 — local partial + immediate push to every peer
+        let partial = shard.partial(layer, &q);
+        let wire_data = match &partial {
+            Some(p) => p.to_wire(),
+            // empty shard: identity partial (m = -inf, l = 0)
+            None => {
+                let mut v = vec![0.0f32; wire];
+                let hd = cfg.n_heads * cfg.head_dim;
+                for m in v[hd..hd + cfg.n_heads].iter_mut() {
+                    *m = f32::NEG_INFINITY;
+                }
+                v
+            }
+        };
+        // double-buffer parity: producers are at most one round ahead of
+        // any consumer (a rank must combine round N before producing
+        // round N+1), so alternating slots cannot collide
+        let base = ((*round % 2) as usize) * cfg.world * wire;
+        for d in ctx.peers() {
+            ctx.remote_store(d, BUF_INBOX, base + r * wire, &wire_data);
+            ctx.signal(d, FLAGS_PARTIAL, r);
+        }
+        ctx.store_local(BUF_INBOX, base + r * wire, &wire_data);
+        ctx.signal(r, FLAGS_PARTIAL, r);
+        //    part 2 — concurrent reduction behind flags
+        let mut comb = OnlineCombiner::new(cfg.n_heads, cfg.head_dim);
+        for s in std::iter::once(r).chain(ctx.peers()) {
+            ctx.wait_flag_ge(FLAGS_PARTIAL, s, *round).expect("serve reduction wait");
+            let data = ctx.load_local_vec(BUF_INBOX, base + s * wire, wire);
+            comb.add(&PartialState::from_wire(&data, cfg.n_heads, cfg.head_dim));
+        }
+        let attn = comb.finish();
+        // 4) dense post-attention block
+        h = compute.post_attn(layer, &h, &attn);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::transformer::{NativeCompute, ReferenceDecoder, TransformerWeights};
+
+    fn native_factory(
+        cfg: &TransformerConfig,
+        seed: u64,
+    ) -> impl Fn(usize) -> NativeCompute + Send + Sync + 'static {
+        let cfg = cfg.clone();
+        move |_rank| {
+            let w = TransformerWeights::random(&cfg, seed);
+            NativeCompute::new(cfg.clone(), w)
+        }
+    }
+
+    #[test]
+    fn distributed_serve_matches_single_rank_reference() {
+        let seed = 77;
+        for world in [1usize, 2, 4] {
+            let cfg = TransformerConfig::tiny(world);
+            let reqs = vec![Request { id: 0, prompt_len: 3, gen_len: 2 }];
+            let report = serve(&cfg, reqs, native_factory(&cfg, seed));
+            assert_eq!(report.results.len(), 1);
+            assert_eq!(report.results[0].tokens, 5);
+            assert_eq!(report.total_tokens, 5);
+            assert!(report.tokens_per_s() > 0.0);
+        }
+    }
+
+    #[test]
+    fn distributed_hidden_state_equals_reference_decoder() {
+        // run the same token stream through the distributed node (world=3)
+        // and the single-process reference; outputs must match.
+        let seed = 78;
+        let world = 3;
+        let cfg = TransformerConfig::tiny(world);
+        // distributed: capture final hidden by re-running a single request
+        // through a custom body — reuse serve() and compare reference token
+        // counts; for state equality we drive decode_step_fused directly.
+        let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
+        let heap = Arc::new(
+            HeapBuilder::new(world)
+                .buffer(BUF_INBOX, 2 * world * wire)
+                .flags(FLAGS_PARTIAL, world)
+                .build(),
+        );
+        let cfg2 = cfg.clone();
+        let outs = run_node(heap, move |ctx| {
+            let w = TransformerWeights::random(&cfg2, seed);
+            let compute = NativeCompute::new(cfg2.clone(), w);
+            let mut shard = KvShard::new(&cfg2);
+            let mut h = token_embedding(&cfg2, 0);
+            let mut round = 0u64;
+            for t in 0..6 {
+                h = decode_step_fused(&ctx, &cfg2, &compute, &mut shard, &h, t % cfg2.world, &mut round);
+            }
+            h
+        });
+        // reference
+        let w = TransformerWeights::random(&cfg, seed);
+        let mut refdec = ReferenceDecoder::new(cfg.clone(), NativeCompute::new(cfg.clone(), w));
+        let mut h = token_embedding(&cfg, 0);
+        for _ in 0..6 {
+            h = refdec.step(&h);
+        }
+        for (rk, out) in outs.iter().enumerate() {
+            out.assert_allclose(&h, 1e-4, 1e-4);
+            let _ = rk;
+        }
+    }
+
+    #[test]
+    fn multiple_requests_fresh_cache_each() {
+        let cfg = TransformerConfig::tiny(2);
+        let reqs = vec![
+            Request { id: 0, prompt_len: 2, gen_len: 1 },
+            Request { id: 1, prompt_len: 1, gen_len: 2 },
+            Request { id: 2, prompt_len: 4, gen_len: 0 },
+        ];
+        let report = serve(&cfg, reqs, native_factory(&cfg, 79));
+        assert_eq!(report.results.len(), 3);
+        assert_eq!(report.total_tokens, 3 + 3 + 4);
+        let s = report.latency_summary();
+        assert!(s.min > 0.0);
+    }
+}

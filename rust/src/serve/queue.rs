@@ -1,0 +1,121 @@
+//! Request queue for the serving loop: FIFO admission with a simple
+//! max-batch policy and synthetic workload generation.
+
+use crate::util::Prng;
+
+/// One decode request: a prompt to prefill and tokens to generate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub id: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+}
+
+impl Request {
+    pub fn total_tokens(&self) -> usize {
+        self.prompt_len + self.gen_len
+    }
+}
+
+/// Outcome of serving one request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestResult {
+    pub id: usize,
+    pub tokens: usize,
+    pub latency_ns: u64,
+}
+
+/// FIFO queue with batch draining.
+#[derive(Debug, Default)]
+pub struct RequestQueue {
+    pending: std::collections::VecDeque<Request>,
+    next_id: usize,
+}
+
+impl RequestQueue {
+    pub fn new() -> RequestQueue {
+        RequestQueue::default()
+    }
+
+    /// Enqueue a request; ids are assigned in admission order.
+    pub fn submit(&mut self, prompt_len: usize, gen_len: usize) -> usize {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.pending.push_back(Request { id, prompt_len, gen_len });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Drain up to `max_batch` requests in FIFO order.
+    pub fn drain_batch(&mut self, max_batch: usize) -> Vec<Request> {
+        let n = max_batch.min(self.pending.len());
+        self.pending.drain(..n).collect()
+    }
+
+    /// Fill with a synthetic workload: `n` requests with prompt/gen lengths
+    /// uniform in the given ranges (deterministic under `seed`).
+    pub fn fill_synthetic(
+        &mut self,
+        n: usize,
+        prompt_range: (usize, usize),
+        gen_range: (usize, usize),
+        seed: u64,
+    ) {
+        let mut rng = Prng::new(seed);
+        for _ in 0..n {
+            let p = rng.range(prompt_range.0, prompt_range.1 + 1);
+            let g = rng.range(gen_range.0, gen_range.1 + 1);
+            self.submit(p, g);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_ids() {
+        let mut q = RequestQueue::new();
+        let a = q.submit(4, 2);
+        let b = q.submit(1, 1);
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(q.len(), 2);
+        let batch = q.drain_batch(1);
+        assert_eq!(batch[0].id, 0);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn drain_respects_max_batch() {
+        let mut q = RequestQueue::new();
+        q.fill_synthetic(10, (1, 4), (1, 4), 5);
+        assert_eq!(q.len(), 10);
+        assert_eq!(q.drain_batch(4).len(), 4);
+        assert_eq!(q.drain_batch(100).len(), 6);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn synthetic_workload_deterministic_and_in_range() {
+        let mut q1 = RequestQueue::new();
+        let mut q2 = RequestQueue::new();
+        q1.fill_synthetic(20, (2, 8), (1, 16), 42);
+        q2.fill_synthetic(20, (2, 8), (1, 16), 42);
+        let b1 = q1.drain_batch(20);
+        let b2 = q2.drain_batch(20);
+        assert_eq!(b1, b2);
+        for r in b1 {
+            assert!((2..=8).contains(&r.prompt_len));
+            assert!((1..=16).contains(&r.gen_len));
+            assert_eq!(r.total_tokens(), r.prompt_len + r.gen_len);
+        }
+    }
+}

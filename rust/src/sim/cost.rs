@@ -1,0 +1,184 @@
+//! Analytical cost model: how long each primitive takes on the modeled
+//! MI300X-class GPU (DESIGN.md §7).
+//!
+//! All kernel costs are rooflines: `max(flop_time, hbm_time)` with the
+//! efficiency curves from [`HwConfig`]. The discrete-event engine composes
+//! these primitive costs with the *structural* costs (launches, barriers,
+//! transfers, skew) that the paper's Three Taxes framework is about.
+
+use crate::config::HwConfig;
+
+/// Which GEMM implementation's efficiency profile to charge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmImpl {
+    /// Vendor library (torch.matmul / rocBLAS): gets the paper-observed
+    /// bonus inside the skinny-M window (Fig. 9 discussion).
+    Vendor,
+    /// Triton-class tile kernel (our fused kernels).
+    Tile,
+}
+
+/// Time for C(M,N) += A(M,K)·B(K,N) in fp16 on one rank.
+///
+/// The vendor bonus divides the *whole roofline* inside the torch window:
+/// skinny-M GEMMs are B-read-bandwidth-bound, and what rocBLAS wins there
+/// is memory pipelining, not MFMA efficiency (this is what produces the
+/// paper's Fig. 9 observation that the baseline wins for M in [8, 64]).
+pub fn gemm_time(hw: &HwConfig, m: usize, n: usize, k: usize, imp: GemmImpl) -> f64 {
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let eff = hw.gemm_eff.at(m);
+    let flop_time = flops / (hw.peak_fp16_flops * eff);
+    // fp16 operands streamed from HBM once, fp16 result written once
+    let bytes = 2.0 * (m as f64 * k as f64 + k as f64 * n as f64 + m as f64 * n as f64);
+    let mem_time = bytes / hw.hbm_bw;
+    let mut t = flop_time.max(mem_time);
+    if imp == GemmImpl::Vendor {
+        let (lo, hi) = hw.torch_gemm_window;
+        if m >= lo && m <= hi {
+            t /= hw.torch_gemm_bonus;
+        }
+    }
+    t
+}
+
+/// The two roofline components of a tile GEMM: (flop_time, mem_time).
+/// Used by the Pull model, whose in-kernel remote-load stalls slow the
+/// *compute pipeline* but not the HBM streaming of B.
+pub fn gemm_components(hw: &HwConfig, m: usize, n: usize, k: usize) -> (f64, f64) {
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let eff = hw.gemm_eff.at(m);
+    let flop_time = flops / (hw.peak_fp16_flops * eff);
+    let bytes = 2.0 * (m as f64 * k as f64 + k as f64 * n as f64 + m as f64 * n as f64);
+    (flop_time, bytes / hw.hbm_bw)
+}
+
+/// Time for the local flash-decode attention over one rank's KV shard:
+/// batch × q_heads query rows against `kv_len` keys/values of width `dim`,
+/// with the KV cache stored per `kv_heads` (GQA). Decode attention is
+/// HBM-bandwidth-bound on the KV read; FLOPs scale with query heads.
+pub fn attention_partial_time(
+    hw: &HwConfig,
+    batch: usize,
+    q_heads: usize,
+    kv_heads: usize,
+    dim: usize,
+    kv_len: usize,
+) -> f64 {
+    let rows = (batch * q_heads) as f64;
+    // 2 matmul-like passes (q·K^T and p·V), 2 FLOPs per MAC
+    let flops = 2.0 * 2.0 * rows * kv_len as f64 * dim as f64;
+    // decode GEMV cannot use the MXU efficiently: vector-engine bound
+    let flop_time = flops / hw.peak_vec_flops;
+    // K and V each read once (fp16), per KV head
+    let bytes =
+        2.0 * 2.0 * (kv_heads as f64) * (kv_len as f64) * (dim as f64) * (batch as f64);
+    let mem_time = bytes / hw.hbm_bw;
+    flop_time.max(mem_time)
+}
+
+/// Time for the online-softmax combine of `world` partials on one rank.
+pub fn combine_time(hw: &HwConfig, batch: usize, heads: usize, dim: usize, world: usize) -> f64 {
+    let rows = (batch * heads) as f64;
+    let flops = 4.0 * rows * dim as f64 * world as f64; // rescale + accumulate
+    let bytes = 2.0 * rows * (dim as f64 + 4.0) * world as f64 + 2.0 * rows * dim as f64;
+    (flops / hw.peak_vec_flops).max(bytes / hw.hbm_bw)
+}
+
+/// Remote-transfer time over one peer link.
+pub fn link_transfer_time(hw: &HwConfig, bytes: u64, eff: f64) -> f64 {
+    hw.link_latency_s + bytes as f64 / (hw.link_bw * eff)
+}
+
+/// Broadcast of `bytes_per_dst` to all `world-1` peers at aggregate fabric
+/// bandwidth (a push kernel's threadblocks drive all links concurrently).
+pub fn multipush_time(hw: &HwConfig, bytes_per_dst: u64, world: usize, eff: f64) -> f64 {
+    if world <= 1 {
+        return 0.0;
+    }
+    let total = bytes_per_dst as f64 * (world - 1) as f64;
+    let agg = hw.fabric_aggregate_bw.min(hw.link_bw * (world - 1) as f64);
+    hw.link_latency_s + total / (agg * eff)
+}
+
+/// HBM round-trip time for `bytes` (write + read back) — the unit price of
+/// the Inter-Kernel Tax.
+pub fn hbm_roundtrip_time(hw: &HwConfig, bytes: u64) -> f64 {
+    2.0 * bytes as f64 / hw.hbm_bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn gemm_time_scales_with_m_superlinearly_then_linearly() {
+        let hw = presets::mi300x();
+        let t64 = gemm_time(&hw, 64, 28672, 8192, GemmImpl::Tile);
+        let t4096 = gemm_time(&hw, 4096, 28672, 8192, GemmImpl::Tile);
+        assert!(t4096 > t64);
+        // at large M the time is compute-bound and ~linear in M
+        let t8192 = gemm_time(&hw, 8192, 28672, 8192, GemmImpl::Tile);
+        let ratio = t8192 / t4096;
+        assert!((1.5..=2.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn small_m_gemm_is_memory_bound_by_b() {
+        let hw = presets::mi300x();
+        // At M=16 the B matrix read dominates: time ~ K*N*2 / hbm_bw
+        let t = gemm_time(&hw, 16, 28672, 8192, GemmImpl::Tile);
+        let b_read = 2.0 * 28672.0 * 8192.0 / hw.hbm_bw;
+        assert!(t >= b_read * 0.99, "t={t} b_read={b_read}");
+        assert!(t <= b_read * 3.0, "t={t} should be within 3x of B read");
+    }
+
+    #[test]
+    fn vendor_bonus_applies_only_in_window() {
+        let hw = presets::mi300x();
+        // inside window: vendor faster than tile
+        let tv = gemm_time(&hw, 32, 28672, 8192, GemmImpl::Vendor);
+        let tt = gemm_time(&hw, 32, 28672, 8192, GemmImpl::Tile);
+        assert!(tv <= tt);
+        // outside window: identical
+        let tv2 = gemm_time(&hw, 1024, 28672, 8192, GemmImpl::Vendor);
+        let tt2 = gemm_time(&hw, 1024, 28672, 8192, GemmImpl::Tile);
+        assert_eq!(tv2, tt2);
+    }
+
+    #[test]
+    fn attention_is_memory_bound_at_paper_shape() {
+        let hw = presets::mi300x();
+        let kv_local = (1 << 19) / 8; // 512K global on 8 GPUs
+        let t = attention_partial_time(&hw, 1, 96, 8, 128, kv_local);
+        let kv_bytes = 2.0 * 2.0 * 8.0 * kv_local as f64 * 128.0;
+        assert!((t - kv_bytes / hw.hbm_bw).abs() / t < 0.5, "expected near memory roofline");
+    }
+
+    #[test]
+    fn transfer_time_has_latency_floor() {
+        let hw = presets::mi300x();
+        let t0 = link_transfer_time(&hw, 0, 1.0);
+        assert_eq!(t0, hw.link_latency_s);
+        let t1 = link_transfer_time(&hw, 1 << 30, 1.0);
+        assert!(t1 > 8e-3 / 1.1, "1 GiB at 128 GB/s is ~8 ms, got {t1}");
+    }
+
+    #[test]
+    fn multipush_uses_aggregate_bandwidth() {
+        let hw = presets::mi300x();
+        let per = 1u64 << 26; // 64 MiB per peer
+        let t = multipush_time(&hw, per, 8, 1.0);
+        let serial: f64 = (0..7).map(|_| link_transfer_time(&hw, per, 1.0)).sum();
+        assert!(t < serial * 0.5, "multipush {t} should beat serial {serial}");
+        assert_eq!(multipush_time(&hw, per, 1, 1.0), 0.0);
+    }
+
+    #[test]
+    fn combine_cost_small_relative_to_attention() {
+        let hw = presets::mi300x();
+        let tc = combine_time(&hw, 1, 96, 128, 8);
+        let ta = attention_partial_time(&hw, 1, 96, 8, 128, 65536);
+        assert!(tc < ta / 10.0);
+    }
+}

@@ -1,0 +1,641 @@
+//! Discrete-event engine over rank streams and fabric links.
+//!
+//! Execution model (DESIGN.md §1): each rank is a single in-order stream
+//! (one GPU HW queue); fabric links are directed per-pair resources;
+//! cross-rank dependencies (signal flags) are plain task dependencies.
+//! A task starts at `max(dep completion, resource availability)`, runs for
+//! its modeled duration, and frees its resources. The engine is
+//! single-threaded, deterministic given (program, seed), and attributes
+//! every second of rank-stream time to the Three-Taxes ledger.
+//!
+//! Strategies build a program through the builder methods
+//! ([`Sim::launch`], [`Sim::compute`], [`Sim::push`], [`Sim::pull`],
+//! [`Sim::multipush`], [`Sim::barrier`], [`Sim::hbm_roundtrip`]) and then
+//! call [`Sim::run`].
+
+use std::collections::BinaryHeap;
+
+use crate::clock::VTime;
+use crate::config::HwConfig;
+use crate::metrics::TaxLedger;
+use crate::sim::cost;
+use crate::util::Prng;
+
+/// Index of a task in the program.
+pub type TaskId = usize;
+
+/// Fraction of a push-transfer's duration that occupies the issuing rank's
+/// stream (store-instruction issue occupancy). The remaining (1 - x) of the
+/// transfer proceeds on the link concurrently with the issuer's next work —
+/// this is exactly the compute/communication overlap the fused patterns
+/// exploit.
+const PUSH_ISSUER_OCCUPANCY: f64 = 0.15;
+
+#[derive(Debug, Clone, PartialEq)]
+enum Kind {
+    /// Host dispatch: occupies the rank stream for the launch overhead.
+    Launch,
+    /// Kernel / tile compute on the rank stream.
+    Compute,
+    /// Producer→consumer hand-off through HBM (Inter-Kernel Tax carrier).
+    HbmRoundTrip { bytes: u64 },
+    /// Remote store: issuer stream partially occupied, link fully occupied.
+    Push { src: usize, dst: usize, bytes: u64 },
+    /// Remote load: consumer stream fully occupied (stalled), link occupied.
+    Pull { src: usize, dst: usize, bytes: u64 },
+    /// Broadcast push to all peers at aggregate fabric bandwidth.
+    MultiPush { src: usize, bytes_total: u64 },
+    /// Zero-duration arrival marker on the rank stream.
+    BarrierArrive,
+    /// Join node (no resources): completes when all arrivals complete.
+    BarrierJoin,
+    /// Resumption on the rank stream; its wait is the Bulk Synchronous Tax.
+    BarrierExit,
+}
+
+/// Streams per rank: a real GPU runs concurrent kernels (e.g. the push
+/// kernel next to the GEMM kernel, paper §4.1.4). Stream 0 is the default
+/// compute queue; stream 1 hosts concurrent communication kernels.
+pub const STREAMS_PER_RANK: usize = 2;
+
+#[derive(Debug, Clone)]
+struct Task {
+    kind: Kind,
+    /// Rank whose stream this task occupies (None for BarrierJoin).
+    rank: Option<usize>,
+    /// Stream within the rank (0 = compute queue, 1 = comm kernel queue).
+    stream: usize,
+    dur: VTime,
+    deps: Vec<TaskId>,
+    label: &'static str,
+}
+
+/// Completed-run timing for one task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskTime {
+    pub start: VTime,
+    pub end: VTime,
+}
+
+/// Result of simulating a program.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Per-task labels (index-aligned with `times`), for trace dumps.
+    pub labels: Vec<&'static str>,
+    /// Per-task rank (None for barrier-join nodes), for trace dumps.
+    pub ranks: Vec<Option<usize>>,
+    /// End-to-end virtual seconds.
+    pub makespan_s: VTime,
+    /// Three-taxes attribution (summed over ranks).
+    pub ledger: TaxLedger,
+    /// Per-task (start, end).
+    pub times: Vec<TaskTime>,
+    /// Per-rank time of last task completion.
+    pub rank_end: Vec<VTime>,
+    /// Per-rank busy seconds (useful work only).
+    pub rank_busy: Vec<VTime>,
+    /// Per-rank idle attributed per category [launch, bulk_sync, flag].
+    pub rank_idle: Vec<[VTime; 3]>,
+}
+
+/// Program builder + engine.
+pub struct Sim {
+    hw: HwConfig,
+    world: usize,
+    tasks: Vec<Task>,
+    rng: Prng,
+}
+
+impl Sim {
+    pub fn new(hw: &HwConfig, world: usize, seed: u64) -> Sim {
+        assert!(world >= 1);
+        Sim { hw: hw.clone(), world, tasks: Vec::new(), rng: Prng::new(seed) }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn hw(&self) -> &HwConfig {
+        &self.hw
+    }
+
+    /// Apply per-stage lognormal jitter to a modeled duration (the compute
+    /// skew that produces the Bulk Synchronous Tax at barriers).
+    pub fn jittered(&mut self, dur: VTime) -> VTime {
+        if self.hw.skew_sigma <= 0.0 {
+            dur
+        } else {
+            dur * self.rng.next_lognormal(self.hw.skew_sigma)
+        }
+    }
+
+    fn add(&mut self, kind: Kind, rank: Option<usize>, dur: VTime, deps: &[TaskId], label: &'static str) -> TaskId {
+        self.add_on(kind, rank, 0, dur, deps, label)
+    }
+
+    fn add_on(
+        &mut self,
+        kind: Kind,
+        rank: Option<usize>,
+        stream: usize,
+        dur: VTime,
+        deps: &[TaskId],
+        label: &'static str,
+    ) -> TaskId {
+        for &d in deps {
+            assert!(d < self.tasks.len(), "dep {d} not yet defined (cycle?)");
+        }
+        if let Some(r) = rank {
+            assert!(r < self.world, "rank {r} out of range");
+        }
+        assert!(stream < STREAMS_PER_RANK, "stream {stream} out of range");
+        self.tasks.push(Task { kind, rank, stream, dur, deps: deps.to_vec(), label });
+        self.tasks.len() - 1
+    }
+
+    /// Host kernel dispatch (Launch Tax carrier).
+    pub fn launch(&mut self, rank: usize, label: &'static str, deps: &[TaskId]) -> TaskId {
+        let dur = self.hw.launch_overhead_s;
+        self.add(Kind::Launch, Some(rank), dur, deps, label)
+    }
+
+    /// Compute on the rank's default stream for `dur` seconds.
+    pub fn compute(&mut self, rank: usize, label: &'static str, dur: VTime, deps: &[TaskId]) -> TaskId {
+        assert!(dur >= 0.0 && dur.is_finite(), "bad duration {dur}");
+        self.add(Kind::Compute, Some(rank), dur, deps, label)
+    }
+
+    /// Compute on an explicit stream of the rank (stream 1 = a concurrent
+    /// communication kernel, e.g. the push kernel of paper §4.1.4).
+    pub fn compute_on(
+        &mut self,
+        rank: usize,
+        stream: usize,
+        label: &'static str,
+        dur: VTime,
+        deps: &[TaskId],
+    ) -> TaskId {
+        assert!(dur >= 0.0 && dur.is_finite(), "bad duration {dur}");
+        self.add_on(Kind::Compute, Some(rank), stream, dur, deps, label)
+    }
+
+    /// Producer→consumer hand-off through HBM (write + read back).
+    pub fn hbm_roundtrip(&mut self, rank: usize, bytes: u64, deps: &[TaskId]) -> TaskId {
+        let dur = cost::hbm_roundtrip_time(&self.hw, bytes);
+        self.add(Kind::HbmRoundTrip { bytes }, Some(rank), dur, deps, "hbm_roundtrip")
+    }
+
+    /// Remote store of `bytes` from `src` to `dst` (store efficiency).
+    /// Completion = data + flag visible at `dst`.
+    pub fn push(&mut self, src: usize, dst: usize, bytes: u64, deps: &[TaskId]) -> TaskId {
+        assert_ne!(src, dst, "push to self");
+        let dur = cost::link_transfer_time(&self.hw, bytes, self.hw.rma_store_eff);
+        self.add(Kind::Push { src, dst, bytes }, Some(src), dur, deps, "push")
+    }
+
+    /// Remote load of `bytes` by `dst` from `src` (load efficiency).
+    /// The consumer stream stalls for the full duration.
+    pub fn pull(&mut self, dst: usize, src: usize, bytes: u64, deps: &[TaskId]) -> TaskId {
+        assert_ne!(src, dst, "pull from self");
+        let dur = cost::link_transfer_time(&self.hw, bytes, self.hw.rma_load_eff);
+        self.add(Kind::Pull { src, dst, bytes }, Some(dst), dur, deps, "pull")
+    }
+
+    /// Broadcast `bytes_per_dst` from `src` to every peer at aggregate
+    /// fabric bandwidth (a dedicated push kernel's behaviour).
+    pub fn multipush(&mut self, src: usize, bytes_per_dst: u64, deps: &[TaskId]) -> TaskId {
+        self.multipush_on(src, 0, bytes_per_dst, deps)
+    }
+
+    /// [`Sim::multipush`] on an explicit stream (stream 1 = the dedicated
+    /// push kernel running concurrently with compute).
+    pub fn multipush_on(
+        &mut self,
+        src: usize,
+        stream: usize,
+        bytes_per_dst: u64,
+        deps: &[TaskId],
+    ) -> TaskId {
+        let dur = cost::multipush_time(&self.hw, bytes_per_dst, self.world, self.hw.rma_store_eff);
+        let total = bytes_per_dst * (self.world.saturating_sub(1)) as u64;
+        self.add_on(Kind::MultiPush { src, bytes_total: total }, Some(src), stream, dur, deps, "multipush")
+    }
+
+    /// Global barrier: rank `r` arrives after `arrivals[r]`; returns the
+    /// per-rank exit tasks. Idle between arrival and exit is charged to the
+    /// Bulk Synchronous Tax.
+    pub fn barrier(&mut self, arrivals: &[TaskId]) -> Vec<TaskId> {
+        assert_eq!(arrivals.len(), self.world, "one arrival per rank");
+        let arrive: Vec<TaskId> = (0..self.world)
+            .map(|r| self.add(Kind::BarrierArrive, Some(r), 0.0, &[arrivals[r]], "barrier_arrive"))
+            .collect();
+        let join = self.add(Kind::BarrierJoin, None, 0.0, &arrive, "barrier_join");
+        (0..self.world)
+            .map(|r| self.add(Kind::BarrierExit, Some(r), 0.0, &[join], "barrier_exit"))
+            .collect()
+    }
+
+    /// Number of tasks currently in the program.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Execute the program; see [`SimResult`].
+    pub fn run(self) -> SimResult {
+        let n = self.tasks.len();
+        let world = self.world;
+        let mut times = vec![TaskTime { start: 0.0, end: 0.0 }; n];
+        let mut done = vec![false; n];
+        let mut unmet = vec![0usize; n];
+        let mut rdeps: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        for (id, t) in self.tasks.iter().enumerate() {
+            unmet[id] = t.deps.len();
+            for &d in &t.deps {
+                rdeps[d].push(id);
+            }
+        }
+
+        // resource free-times; one entry per (rank, stream)
+        let mut rank_free = vec![0.0f64; world * STREAMS_PER_RANK];
+        let sk = |r: usize, stream: usize| r * STREAMS_PER_RANK + stream;
+        let mut link_free = std::collections::HashMap::<(usize, usize), f64>::new();
+
+        // attribution
+        let mut ledger = TaxLedger::default();
+        let mut rank_busy = vec![0.0f64; world];
+        let mut rank_idle = vec![[0.0f64; 3]; world];
+        let mut rank_end = vec![0.0f64; world];
+
+        // ready heap: (ready_time, id), min-order. f64 keys via bits trick
+        // would be overkill; wrap in ordered struct.
+        #[derive(PartialEq)]
+        struct Ready(f64, usize);
+        impl Eq for Ready {}
+        impl PartialOrd for Ready {
+            fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for Ready {
+            fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                // reversed for min-heap; tie-break on id for determinism
+                o.0.partial_cmp(&self.0).unwrap().then(o.1.cmp(&self.1))
+            }
+        }
+        let mut heap = BinaryHeap::new();
+        for id in 0..n {
+            if unmet[id] == 0 {
+                heap.push(Ready(0.0, id));
+            }
+        }
+
+        let mut completed = 0usize;
+        while let Some(Ready(ready, id)) = heap.pop() {
+            debug_assert!(!done[id]);
+            let task = &self.tasks[id];
+
+            // resource availability
+            let res_free = match (&task.kind, task.rank) {
+                (Kind::Push { src, dst, .. }, _) => {
+                    let lf = *link_free.get(&(*src, *dst)).unwrap_or(&0.0);
+                    rank_free[sk(*src, task.stream)].max(lf)
+                }
+                (Kind::Pull { src, dst, .. }, _) => {
+                    let lf = *link_free.get(&(*src, *dst)).unwrap_or(&0.0);
+                    rank_free[sk(*dst, task.stream)].max(lf)
+                }
+                (Kind::BarrierJoin, _) => 0.0,
+                (_, Some(r)) => rank_free[sk(r, task.stream)],
+                (_, None) => 0.0,
+            };
+            let start = ready.max(res_free);
+            let end = start + task.dur;
+            times[id] = TaskTime { start, end };
+
+            // idle attribution on the rank stream: the gap between the
+            // stream being free and this task starting is idle caused by
+            // waiting on something remote.
+            if let Some(r) = task.rank {
+                let gap = (start - rank_free[sk(r, task.stream)]).max(0.0);
+                if gap > 0.0 {
+                    match task.kind {
+                        Kind::BarrierExit => {
+                            ledger.bulk_sync_s += gap;
+                            rank_idle[r][1] += gap;
+                        }
+                        _ => {
+                            ledger.flag_idle_s += gap;
+                            rank_idle[r][2] += gap;
+                        }
+                    }
+                }
+            }
+
+            // busy / tax attribution of the task body + resource updates
+            match &task.kind {
+                Kind::Launch => {
+                    ledger.launches += 1;
+                    ledger.launch_s += task.dur;
+                    if let Some(r) = task.rank {
+                        rank_idle[r][0] += task.dur;
+                        rank_free[sk(r, task.stream)] = end;
+                    }
+                }
+                Kind::Compute | Kind::BarrierArrive | Kind::BarrierExit => {
+                    if let Some(r) = task.rank {
+                        rank_busy[r] += task.dur;
+                        ledger.busy_s += task.dur;
+                        rank_free[sk(r, task.stream)] = end;
+                    }
+                }
+                Kind::HbmRoundTrip { bytes } => {
+                    ledger.inter_kernel_s += task.dur;
+                    ledger.inter_kernel_bytes += bytes;
+                    if let Some(r) = task.rank {
+                        rank_free[sk(r, task.stream)] = end;
+                    }
+                }
+                Kind::Push { src, dst, bytes } => {
+                    ledger.fabric_bytes += bytes;
+                    // the per-message latency pipelines: it delays the
+                    // consumer-visible completion (`end`) but occupies
+                    // neither the issuer nor the link wire-time beyond the
+                    // serialization (bytes/bw) component
+                    let wire = (task.dur - self.hw.link_latency_s).max(0.0);
+                    let issue = wire * PUSH_ISSUER_OCCUPANCY;
+                    rank_busy[*src] += issue;
+                    ledger.busy_s += issue;
+                    rank_free[sk(*src, task.stream)] = start + issue;
+                    link_free.insert((*src, *dst), start + wire);
+                }
+                Kind::Pull { src, dst, bytes } => {
+                    ledger.fabric_bytes += bytes;
+                    // the consumer stalls for the full round trip; the link
+                    // is occupied for the wire time only
+                    let wire = (task.dur - self.hw.link_latency_s).max(0.0);
+                    rank_busy[*dst] += task.dur;
+                    ledger.busy_s += task.dur;
+                    rank_free[sk(*dst, task.stream)] = end;
+                    link_free.insert((*src, *dst), start + wire);
+                }
+                Kind::MultiPush { src, bytes_total } => {
+                    ledger.fabric_bytes += bytes_total;
+                    let wire = (task.dur - self.hw.link_latency_s).max(0.0);
+                    rank_busy[*src] += wire;
+                    ledger.busy_s += wire;
+                    rank_free[sk(*src, task.stream)] = start + wire;
+                    // all out-links of src busy for the wire time
+                    for d in 0..world {
+                        if d != *src {
+                            link_free.insert((*src, d), start + wire);
+                        }
+                    }
+                }
+                Kind::BarrierJoin => {}
+            }
+
+            if let Some(r) = task.rank {
+                rank_end[r] = rank_end[r].max(end);
+            }
+            done[id] = true;
+            completed += 1;
+            for &succ in &rdeps[id] {
+                unmet[succ] -= 1;
+                if unmet[succ] == 0 {
+                    let dep_ready = self.tasks[succ]
+                        .deps
+                        .iter()
+                        .map(|&d| times[d].end)
+                        .fold(0.0f64, f64::max);
+                    heap.push(Ready(dep_ready, succ));
+                }
+            }
+        }
+        assert_eq!(completed, n, "cycle in sim program: {} tasks never ready", n - completed);
+
+        ledger.makespan_s = times.iter().map(|t| t.end).fold(0.0, f64::max);
+        SimResult {
+            labels: self.tasks.iter().map(|t| t.label).collect(),
+            ranks: self.tasks.iter().map(|t| t.rank).collect(),
+            makespan_s: ledger.makespan_s,
+            ledger,
+            times,
+            rank_end,
+            rank_busy,
+            rank_idle,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn sim(world: usize) -> Sim {
+        Sim::new(&presets::ideal(), world, 1)
+    }
+
+    #[test]
+    fn sequential_tasks_on_one_rank_serialize() {
+        let mut s = sim(1);
+        let a = s.compute(0, "a", 1.0, &[]);
+        let b = s.compute(0, "b", 2.0, &[a]);
+        let r = s.run();
+        assert_eq!(r.times[a].end, 1.0);
+        assert_eq!(r.times[b].start, 1.0);
+        assert_eq!(r.makespan_s, 3.0);
+        assert_eq!(r.rank_busy[0], 3.0);
+    }
+
+    #[test]
+    fn independent_ranks_run_in_parallel() {
+        let mut s = sim(2);
+        s.compute(0, "a", 5.0, &[]);
+        s.compute(1, "b", 3.0, &[]);
+        let r = s.run();
+        assert_eq!(r.makespan_s, 5.0);
+    }
+
+    #[test]
+    fn rank_stream_is_in_order_even_without_deps() {
+        let mut s = sim(1);
+        let a = s.compute(0, "a", 2.0, &[]);
+        let b = s.compute(0, "b", 1.0, &[]);
+        let r = s.run();
+        // b has no dep on a but shares the stream
+        assert_eq!(r.times[b].start, r.times[a].end);
+    }
+
+    #[test]
+    fn barrier_charges_bulk_sync_to_fast_rank() {
+        let mut s = sim(2);
+        let a = s.compute(0, "fast", 1.0, &[]);
+        let b = s.compute(1, "slow", 4.0, &[]);
+        let exits = s.barrier(&[a, b]);
+        assert_eq!(exits.len(), 2);
+        let r = s.run();
+        assert_eq!(r.times[exits[0]].start, 4.0);
+        assert!((r.ledger.bulk_sync_s - 3.0).abs() < 1e-12, "{}", r.ledger.bulk_sync_s);
+        assert_eq!(r.rank_idle[0][1], 3.0);
+        assert_eq!(r.rank_idle[1][1], 0.0);
+    }
+
+    #[test]
+    fn launch_counts_and_tax() {
+        let hw = presets::mi300x();
+        let mut s = Sim::new(&hw, 1, 1);
+        let l = s.launch(0, "k", &[]);
+        s.compute(0, "k_body", 1e-3, &[l]);
+        let r = s.run();
+        assert_eq!(r.ledger.launches, 1);
+        assert!((r.ledger.launch_s - hw.launch_overhead_s).abs() < 1e-15);
+        assert!((r.makespan_s - (hw.launch_overhead_s + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn push_overlaps_with_issuer_compute() {
+        let hw = presets::mi300x();
+        let mut s = Sim::new(&hw, 2, 1);
+        let bytes = 1u64 << 26; // 64 MiB: transfer ~0.57ms
+        let p = s.push(0, 1, bytes, &[]);
+        let c = s.compute(0, "next_tile", 1e-3, &[]);
+        let r = s.run();
+        let push_dur = r.times[p].end - r.times[p].start;
+        // issuer's next compute starts long before the push completes
+        assert!(r.times[c].start < r.times[p].end, "no overlap");
+        assert!(r.times[c].start <= push_dur * PUSH_ISSUER_OCCUPANCY + 1e-12);
+    }
+
+    #[test]
+    fn pull_stalls_the_consumer() {
+        let hw = presets::mi300x();
+        let mut s = Sim::new(&hw, 2, 1);
+        let bytes = 1u64 << 26;
+        let p = s.pull(1, 0, bytes, &[]);
+        let c = s.compute(1, "after", 1e-6, &[]);
+        let r = s.run();
+        assert_eq!(r.times[c].start, r.times[p].end);
+    }
+
+    #[test]
+    fn link_contention_serializes_same_link() {
+        let hw = presets::mi300x();
+        let mut s = Sim::new(&hw, 3, 1);
+        // two pulls by rank 2 over different links may interleave on the
+        // consumer stream but two pushes 0->1 share one link
+        let bytes = 1u64 << 26;
+        let p1 = s.push(0, 1, bytes, &[]);
+        let p2 = s.push(0, 1, bytes, &[]);
+        let r = s.run();
+        // the wire (bytes/bw) component serializes; the per-message
+        // latency pipelines, so p2 may start one latency early
+        assert!(
+            r.times[p2].start >= r.times[p1].end - hw.link_latency_s - 1e-12,
+            "same link must serialize wire time: p1 end {} p2 start {}",
+            r.times[p1].end,
+            r.times[p2].start
+        );
+    }
+
+    #[test]
+    fn flag_wait_idle_attributed() {
+        let mut s = sim(2);
+        let slow = s.compute(0, "produce", 5.0, &[]);
+        let fast = s.compute(1, "own", 1.0, &[]);
+        let consume = s.compute(1, "consume", 1.0, &[slow, fast]);
+        let r = s.run();
+        assert_eq!(r.times[consume].start, 5.0);
+        assert!((r.ledger.flag_idle_s - 4.0).abs() < 1e-12);
+        assert_eq!(r.rank_idle[1][2], 4.0);
+    }
+
+    #[test]
+    fn conservation_per_rank() {
+        // busy + idle(categories) + tail == makespan for every rank
+        let hw = presets::mi300x();
+        let mut s = Sim::new(&hw, 4, 7);
+        let mut arrivals = Vec::new();
+        for rk in 0..4 {
+            let l = s.launch(rk, "k", &[]);
+            let dur = 1e-3 * (rk + 1) as f64;
+            let c = s.compute(rk, "c", dur, &[l]);
+            arrivals.push(c);
+        }
+        let exits = s.barrier(&arrivals);
+        for (rk, &e) in exits.iter().enumerate() {
+            let p = s.push(rk, (rk + 1) % 4, 1 << 20, &[e]);
+            s.compute(rk, "final", 1e-4, &[p]);
+        }
+        let r = s.run();
+        for rk in 0..4 {
+            let accounted = r.rank_busy[rk]
+                + r.rank_idle[rk][0]
+                + r.rank_idle[rk][1]
+                + r.rank_idle[rk][2];
+            let tail = r.makespan_s - r.rank_end[rk];
+            assert!(
+                (accounted + tail - r.makespan_s).abs() < 1e-9,
+                "rank {rk}: accounted {accounted} + tail {tail} != makespan {}",
+                r.makespan_s
+            );
+        }
+    }
+
+    #[test]
+    fn determinism_under_seed() {
+        let build = |seed| {
+            let hw = presets::mi300x();
+            let mut s = Sim::new(&hw, 8, seed);
+            let mut arr = Vec::new();
+            for rk in 0..8 {
+                let d = s.jittered(1e-3);
+                arr.push(s.compute(rk, "c", d, &[]));
+            }
+            s.barrier(&arr);
+            s.run().makespan_s
+        };
+        assert_eq!(build(42), build(42));
+        assert_ne!(build(42), build(43));
+    }
+
+    #[test]
+    fn jitter_disabled_on_ideal_preset() {
+        let mut s = sim(1);
+        assert_eq!(s.jittered(1.0), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "dep")]
+    fn forward_dep_rejected() {
+        let mut s = sim(1);
+        s.compute(0, "x", 1.0, &[5]);
+    }
+
+    #[test]
+    fn streams_overlap_on_same_rank() {
+        // a comm kernel on stream 1 runs concurrently with compute on
+        // stream 0 of the same rank (the push-model concurrency)
+        let mut s = sim(2);
+        let c = s.compute(0, "gemm", 3.0, &[]);
+        let p = s.compute_on(0, 1, "push_kernel", 3.0, &[]);
+        let r = s.run();
+        assert_eq!(r.times[c].start, 0.0);
+        assert_eq!(r.times[p].start, 0.0, "streams must not serialize");
+        assert_eq!(r.makespan_s, 3.0);
+    }
+
+    #[test]
+    fn same_stream_still_serializes() {
+        let mut s = sim(1);
+        let a = s.compute_on(0, 1, "a", 2.0, &[]);
+        let b = s.compute_on(0, 1, "b", 2.0, &[]);
+        let r = s.run();
+        assert_eq!(r.times[b].start, r.times[a].end);
+    }
+}

@@ -1,0 +1,18 @@
+//! The discrete-event performance model of the multi-GPU node.
+//!
+//! This module stands in for the paper's 8× MI300X testbed (DESIGN.md §1):
+//! [`cost`] prices individual primitives (GEMM tiles, attention over a KV
+//! shard, link transfers) with calibrated MI300X constants, and [`engine`]
+//! composes them over rank streams, fabric links, barriers and signal
+//! flags, attributing every idle second to the Three-Taxes ledger.
+//!
+//! The functional (real-data) execution of the very same protocols lives in
+//! [`crate::coordinator`]; this module only answers "how long would it take
+//! and where does the time go".
+
+pub mod cost;
+pub mod engine;
+pub mod trace;
+
+pub use cost::GemmImpl;
+pub use engine::{Sim, SimResult, TaskId, TaskTime};

@@ -1,0 +1,304 @@
+//! Dense row-major host tensors.
+//!
+//! This is the host-side data representation shared by the native tile
+//! kernels, the iris symmetric heap, and the PJRT runtime boundary
+//! (`Tensor::data` maps 1:1 onto an `xla::Literal` buffer). Deliberately
+//! minimal: f32 storage (optionally fp16-quantized via [`Tensor::quantize_f16`]),
+//! row-major, 1/2/3-D, with the tile/shard views the distributed kernels
+//! need. Not a general ndarray.
+
+use crate::tensor::half::quantize_f16_slice;
+use crate::util::Prng;
+
+/// Shape of a tensor, up to 3 dimensions (what the workloads need:
+/// matrices and [heads, seq, dim] attention blocks).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}]", self.0.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", "))
+    }
+}
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        let shape = Shape(dims.to_vec());
+        let n = shape.numel();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(dims: &[usize], v: f32) -> Tensor {
+        let shape = Shape(dims.to_vec());
+        let n = shape.numel();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    /// Tensor from existing data (must match the shape's element count).
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Tensor {
+        let shape = Shape(dims.to_vec());
+        assert_eq!(shape.numel(), data.len(), "shape {shape} vs {} elements", data.len());
+        Tensor { shape, data }
+    }
+
+    /// Uniform random in [-scale, scale); deterministic given the PRNG.
+    pub fn rand(dims: &[usize], scale: f32, rng: &mut Prng) -> Tensor {
+        let shape = Shape(dims.to_vec());
+        let n = shape.numel();
+        let data = (0..n).map(|_| rng.f32_in(-scale, scale)).collect();
+        Tensor { shape, data }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+    pub fn numel(&self) -> usize {
+        self.shape.numel()
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Byte size if stored as fp16 (what the cost model charges for moving
+    /// this tensor; the paper's kernels all run fp16).
+    pub fn bytes_f16(&self) -> u64 {
+        (self.numel() * 2) as u64
+    }
+
+    /// Round every element through fp16 precision in place.
+    pub fn quantize_f16(&mut self) {
+        quantize_f16_slice(&mut self.data);
+    }
+
+    /// 2-D element accessor.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.rank(), 2);
+        let cols = self.dims()[1];
+        self.data[i * cols + j]
+    }
+
+    /// 2-D element setter.
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.shape.rank(), 2);
+        let cols = self.dims()[1];
+        self.data[i * cols + j] = v;
+    }
+
+    /// Copy of rows `[r0, r1)` of a 2-D tensor.
+    pub fn rows(&self, r0: usize, r1: usize) -> Tensor {
+        assert_eq!(self.shape.rank(), 2, "rows() needs a matrix");
+        let (_, cols) = (self.dims()[0], self.dims()[1]);
+        assert!(r0 <= r1 && r1 <= self.dims()[0]);
+        Tensor::from_vec(&[r1 - r0, cols], self.data[r0 * cols..r1 * cols].to_vec())
+    }
+
+    /// Copy of columns `[c0, c1)` of a 2-D tensor.
+    pub fn cols(&self, c0: usize, c1: usize) -> Tensor {
+        assert_eq!(self.shape.rank(), 2, "cols() needs a matrix");
+        let (rows, cols) = (self.dims()[0], self.dims()[1]);
+        assert!(c0 <= c1 && c1 <= cols);
+        let w = c1 - c0;
+        let mut out = Vec::with_capacity(rows * w);
+        for r in 0..rows {
+            out.extend_from_slice(&self.data[r * cols + c0..r * cols + c1]);
+        }
+        Tensor::from_vec(&[rows, w], out)
+    }
+
+    /// Write `block` into `self` at row/col offset (2-D).
+    pub fn write_block(&mut self, r0: usize, c0: usize, block: &Tensor) {
+        assert_eq!(self.shape.rank(), 2);
+        assert_eq!(block.shape.rank(), 2);
+        let cols = self.dims()[1];
+        let (bh, bw) = (block.dims()[0], block.dims()[1]);
+        assert!(r0 + bh <= self.dims()[0] && c0 + bw <= cols, "block out of bounds");
+        for r in 0..bh {
+            let dst = (r0 + r) * cols + c0;
+            self.data[dst..dst + bw].copy_from_slice(&block.data[r * bw..(r + 1) * bw]);
+        }
+    }
+
+    /// Shard a matrix into `n` equal column slices (paper §4.1.1: A is
+    /// sharded across the K dimension). Panics unless `cols % n == 0`.
+    pub fn shard_cols(&self, n: usize) -> Vec<Tensor> {
+        assert_eq!(self.shape.rank(), 2);
+        let cols = self.dims()[1];
+        assert_eq!(cols % n, 0, "{cols} cols not divisible into {n} shards");
+        let w = cols / n;
+        (0..n).map(|i| self.cols(i * w, (i + 1) * w)).collect()
+    }
+
+    /// Shard a matrix into `n` equal row slices.
+    pub fn shard_rows(&self, n: usize) -> Vec<Tensor> {
+        assert_eq!(self.shape.rank(), 2);
+        let rows = self.dims()[0];
+        assert_eq!(rows % n, 0, "{rows} rows not divisible into {n} shards");
+        let h = rows / n;
+        (0..n).map(|i| self.rows(i * h, (i + 1) * h)).collect()
+    }
+
+    /// Concatenate matrices left-to-right (inverse of `shard_cols`).
+    pub fn concat_cols(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let rows = parts[0].dims()[0];
+        let total: usize = parts.iter().map(|p| {
+            assert_eq!(p.dims()[0], rows, "row mismatch in concat_cols");
+            p.dims()[1]
+        }).sum();
+        let mut out = Tensor::zeros(&[rows, total]);
+        let mut c = 0;
+        for p in parts {
+            out.write_block(0, c, p);
+            c += p.dims()[1];
+        }
+        out
+    }
+
+    /// Concatenate matrices top-to-bottom (inverse of `shard_rows`).
+    pub fn concat_rows(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let cols = parts[0].dims()[1];
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            assert_eq!(p.dims()[1], cols, "col mismatch in concat_rows");
+            rows += p.dims()[0];
+            data.extend_from_slice(p.data());
+        }
+        Tensor::from_vec(&[rows, cols], data)
+    }
+
+    /// Max |a - b| over all elements (shape-checked).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in max_abs_diff");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Assert elementwise closeness with absolute + relative tolerance.
+    pub fn assert_allclose(&self, other: &Tensor, atol: f32, rtol: f32) {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        for (idx, (a, b)) in self.data.iter().zip(&other.data).enumerate() {
+            let tol = atol + rtol * b.abs();
+            assert!(
+                (a - b).abs() <= tol,
+                "element {idx}: {a} vs {b} (|diff|={} > tol={tol})",
+                (a - b).abs()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_full_from_vec() {
+        let z = Tensor::zeros(&[2, 3]);
+        assert_eq!(z.numel(), 6);
+        assert!(z.data().iter().all(|&x| x == 0.0));
+        let f = Tensor::full(&[4], 2.5);
+        assert!(f.data().iter().all(|&x| x == 2.5));
+        let v = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(v.at2(1, 0), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn from_vec_wrong_len_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn rows_cols_slicing() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(1, 2).data(), &[4., 5., 6.]);
+        assert_eq!(t.cols(1, 3).data(), &[2., 3., 5., 6.]);
+    }
+
+    #[test]
+    fn shard_concat_cols_round_trip() {
+        let mut rng = Prng::new(4);
+        let t = Tensor::rand(&[6, 8], 1.0, &mut rng);
+        let shards = t.shard_cols(4);
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards[0].dims(), &[6, 2]);
+        let back = Tensor::concat_cols(&shards);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn shard_concat_rows_round_trip() {
+        let mut rng = Prng::new(5);
+        let t = Tensor::rand(&[8, 3], 1.0, &mut rng);
+        let back = Tensor::concat_rows(&t.shard_rows(2));
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn write_block_places_tile() {
+        let mut t = Tensor::zeros(&[4, 4]);
+        let b = Tensor::full(&[2, 2], 7.0);
+        t.write_block(1, 2, &b);
+        assert_eq!(t.at2(1, 2), 7.0);
+        assert_eq!(t.at2(2, 3), 7.0);
+        assert_eq!(t.at2(0, 0), 0.0);
+        assert_eq!(t.at2(3, 1), 0.0);
+    }
+
+    #[test]
+    fn quantize_f16_reduces_precision() {
+        let mut t = Tensor::from_vec(&[2], vec![1.0 + 1e-6, 3.0]);
+        t.quantize_f16();
+        assert_eq!(t.data()[0], 1.0);
+        assert_eq!(t.data()[1], 3.0);
+    }
+
+    #[test]
+    fn allclose_passes_and_fails() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0005, 2.0]);
+        a.assert_allclose(&b, 1e-3, 0.0);
+        let r = std::panic::catch_unwind(|| a.assert_allclose(&b, 1e-5, 0.0));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bytes_f16_accounting() {
+        assert_eq!(Tensor::zeros(&[128, 64]).bytes_f16(), 128 * 64 * 2);
+    }
+}

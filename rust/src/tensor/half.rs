@@ -1,0 +1,200 @@
+//! Software IEEE 754 binary16 ("half", fp16) conversions.
+//!
+//! All paper kernels run in FP16 (§5.1), so the native tile kernels emulate
+//! fp16 storage precision: values are stored as `f16` bits and widened to
+//! f32 for arithmetic (matching the MXU/MFMA "fp16 in, fp32 accumulate"
+//! contract that both the paper's Triton kernels and the Pallas L1 kernels
+//! use). No `half` crate offline, so the conversions are implemented here.
+
+/// An IEEE binary16 value stored as its raw bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    pub const INFINITY: F16 = F16(0x7C00);
+
+    /// Convert from f32 with round-to-nearest-even (the hardware rounding
+    /// mode for both CDNA MFMA stores and TPU vector stores).
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let mant = bits & 0x007F_FFFF;
+
+        if exp == 0xFF {
+            // Inf / NaN
+            let m = if mant != 0 { 0x0200 } else { 0 }; // quiet NaN payload bit
+            return F16(sign | 0x7C00 | m);
+        }
+        // unbiased exponent
+        let e = exp - 127;
+        if e > 15 {
+            // overflow -> inf
+            return F16(sign | 0x7C00);
+        }
+        if e >= -14 {
+            // normal half
+            let mut m = mant >> 13; // 10 mantissa bits
+            let rem = mant & 0x1FFF;
+            // round to nearest even
+            if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+                m += 1;
+            }
+            let mut he = (e + 15) as u32;
+            if m == 0x400 {
+                // mantissa rounded over: bump exponent
+                m = 0;
+                he += 1;
+                if he >= 31 {
+                    return F16(sign | 0x7C00);
+                }
+            }
+            return F16(sign | ((he as u16) << 10) | m as u16);
+        }
+        if e >= -24 {
+            // subnormal half
+            let shift = (-14 - e) as u32; // 1..=10
+            let full = mant | 0x0080_0000; // implicit leading 1
+            let total_shift = 13 + shift;
+            let m = full >> total_shift;
+            let rem = full & ((1 << total_shift) - 1);
+            let halfway = 1u32 << (total_shift - 1);
+            let mut m = m;
+            if rem > halfway || (rem == halfway && (m & 1) == 1) {
+                m += 1;
+            }
+            return F16(sign | m as u16);
+        }
+        // underflow -> signed zero
+        F16(sign)
+    }
+
+    /// Widen to f32 (exact).
+    pub fn to_f32(self) -> f32 {
+        let h = self.0 as u32;
+        let sign = (h & 0x8000) << 16;
+        let exp = (h >> 10) & 0x1F;
+        let mant = h & 0x03FF;
+        let bits = if exp == 0 {
+            if mant == 0 {
+                sign // signed zero
+            } else {
+                // subnormal: normalize
+                let mut e = -1i32;
+                let mut m = mant;
+                while m & 0x0400 == 0 {
+                    m <<= 1;
+                    e -= 1;
+                }
+                m &= 0x03FF;
+                // subnormal value = (mant/1024)·2^-14; after normalizing by
+                // shifting left k times, e = -1-k and the unbiased exponent
+                // is e - 13, so the f32 biased exponent is e - 13 + 127.
+                let exp32 = (e + 114) as u32;
+                sign | (exp32 << 23) | (m << 13)
+            }
+        } else if exp == 0x1F {
+            sign | 0x7F80_0000 | (mant << 13) // inf / nan
+        } else {
+            let exp32 = exp + 112; // rebias: -15 + 127
+            sign | (exp32 << 23) | (mant << 13)
+        };
+        f32::from_bits(bits)
+    }
+}
+
+/// Round-trip an f32 through fp16 precision ("quantize to fp16").
+pub fn quantize_f16(x: f32) -> f32 {
+    F16::from_f32(x).to_f32()
+}
+
+/// Quantize a slice in place.
+pub fn quantize_f16_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = quantize_f16(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_round_trip() {
+        for i in -512i32..=512 {
+            let x = i as f32;
+            assert_eq!(quantize_f16(x), x, "integer {i} should be exact in fp16");
+        }
+    }
+
+    #[test]
+    fn one_and_fractions() {
+        assert_eq!(F16::from_f32(1.0), F16::ONE);
+        assert_eq!(quantize_f16(0.5), 0.5);
+        assert_eq!(quantize_f16(0.25), 0.25);
+        assert_eq!(quantize_f16(1.5), 1.5);
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert_eq!(F16::from_f32(1e30), F16::INFINITY);
+        assert_eq!(F16::from_f32(-1e30), F16::NEG_INFINITY);
+        assert!(F16::INFINITY.to_f32().is_infinite());
+    }
+
+    #[test]
+    fn max_half_value() {
+        // largest finite half = 65504
+        assert_eq!(quantize_f16(65504.0), 65504.0);
+        assert!(quantize_f16(65520.0).is_infinite());
+    }
+
+    #[test]
+    fn subnormals_round_trip() {
+        // smallest positive subnormal half = 2^-24
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(quantize_f16(tiny), tiny);
+        // below half of it flushes to zero
+        assert_eq!(quantize_f16(tiny / 4.0), 0.0);
+    }
+
+    #[test]
+    fn signed_zero_preserved() {
+        let nz = quantize_f16(-0.0);
+        assert_eq!(nz, 0.0);
+        assert!(nz.is_sign_negative());
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(quantize_f16(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next half
+        // (1 + 2^-10); nearest-even rounds down to 1.0.
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(quantize_f16(x), 1.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9; rounds to even
+        // mantissa (1 + 2^-9).
+        let y = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(quantize_f16(y), 1.0 + 2.0f32.powi(-9));
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut rng = crate::util::Prng::new(99);
+        for _ in 0..10_000 {
+            let x = rng.f32_in(-1000.0, 1000.0);
+            let q = quantize_f16(x);
+            if x != 0.0 {
+                let rel = ((q - x) / x).abs();
+                assert!(rel <= 1.0 / 1024.0, "x={x} q={q} rel={rel}");
+            }
+        }
+    }
+}

@@ -1,0 +1,290 @@
+//! Reference linear algebra on host tensors.
+//!
+//! These are the *oracles* for the native tile kernels (mirror of
+//! `python/compile/kernels/ref.py` on the Rust side) plus the blocked
+//! matmul used by baseline paths. Clarity over speed everywhere except
+//! `matmul`, which is lightly blocked because integration tests multiply
+//! real sizes.
+
+use crate::tensor::Tensor;
+
+/// C = A(M,K) · B(K,N), f32 accumulate, row-major blocked.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape().rank(), 2);
+    assert_eq!(b.shape().rank(), 2);
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let (k2, n) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(k, k2, "inner dims {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_acc_into(c.data_mut(), a.data(), b.data(), m, k, n);
+    c
+}
+
+/// C += A · B over raw row-major slices. The shared inner loop of both the
+/// reference matmul and the native GEMM tile kernel.
+pub fn matmul_acc_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    // i-k-j loop order: streams B rows, autovectorizes the j loop.
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in a_row.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                c_row[j] += aik * b_row[j];
+            }
+        }
+    }
+}
+
+/// Row-wise numerically-stable softmax of a matrix.
+pub fn softmax_rows(x: &Tensor) -> Tensor {
+    assert_eq!(x.shape().rank(), 2);
+    let (rows, cols) = (x.dims()[0], x.dims()[1]);
+    let mut out = Tensor::zeros(&[rows, cols]);
+    for r in 0..rows {
+        let row = &x.data()[r * cols..(r + 1) * cols];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = row.iter().map(|v| (v - m).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        for (c, e) in exps.iter().enumerate() {
+            out.set2(r, c, e / sum);
+        }
+    }
+    out
+}
+
+/// Single-query attention against a K/V block:
+/// `out[h,:] = softmax(q[h,:] · K[h]^T / sqrt(d)) · V[h]` for each head.
+///
+/// `q`: [H, D]; `k`,`v`: [H, S, D] flattened as Tensor[H*S, D] with
+/// `seq` passed explicitly. Returns [H, D]. This is the decode-attention
+/// oracle the partial/online-softmax kernels are checked against.
+pub fn decode_attention_ref(q: &Tensor, k: &Tensor, v: &Tensor, heads: usize, seq: usize) -> Tensor {
+    let d = q.dims()[1];
+    assert_eq!(q.dims()[0], heads);
+    assert_eq!(k.dims(), &[heads * seq, d]);
+    assert_eq!(v.dims(), &[heads * seq, d]);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Tensor::zeros(&[heads, d]);
+    for h in 0..heads {
+        // scores s = q·K^T * scale
+        let mut scores = vec![0.0f32; seq];
+        for s in 0..seq {
+            let mut dot = 0.0;
+            for j in 0..d {
+                dot += q.at2(h, j) * k.at2(h * seq + s, j);
+            }
+            scores[s] = dot * scale;
+        }
+        // softmax
+        let m = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = scores.iter().map(|x| (x - m).exp()).collect();
+        let l: f32 = exps.iter().sum();
+        // out = (exps/l) · V
+        for j in 0..d {
+            let mut acc = 0.0;
+            for s in 0..seq {
+                acc += exps[s] * v.at2(h * seq + s, j);
+            }
+            out.set2(h, j, acc / l);
+        }
+    }
+    out
+}
+
+/// Partial attention statistics for one KV shard, in the flash-decode
+/// "online softmax" form: returns (o_partial `[H, D]` — *unnormalized*
+/// exp-weighted values, m `[H]` — row max, l `[H]` — sum of exps).
+/// Combining partials per [`combine_partials_ref`] reproduces
+/// [`decode_attention_ref`] exactly (up to float assoc.).
+pub fn partial_attention_ref(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    heads: usize,
+    seq: usize,
+) -> (Tensor, Vec<f32>, Vec<f32>) {
+    let d = q.dims()[1];
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut o = Tensor::zeros(&[heads, d]);
+    let mut ms = vec![f32::NEG_INFINITY; heads];
+    let mut ls = vec![0.0f32; heads];
+    for h in 0..heads {
+        let mut scores = vec![0.0f32; seq];
+        for s in 0..seq {
+            let mut dot = 0.0;
+            for j in 0..d {
+                dot += q.at2(h, j) * k.at2(h * seq + s, j);
+            }
+            scores[s] = dot * scale;
+        }
+        let m = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = scores.iter().map(|x| (x - m).exp()).collect();
+        let l: f32 = exps.iter().sum();
+        for j in 0..d {
+            let mut acc = 0.0;
+            for s in 0..seq {
+                acc += exps[s] * v.at2(h * seq + s, j);
+            }
+            o.set2(h, j, acc);
+        }
+        ms[h] = m;
+        ls[h] = l;
+    }
+    (o, ms, ls)
+}
+
+/// Combine per-shard online-softmax partials into the final attention
+/// output (the paper's "Combine Kernel (Global)", Alg. 4 part 2).
+pub fn combine_partials_ref(partials: &[(Tensor, Vec<f32>, Vec<f32>)]) -> Tensor {
+    assert!(!partials.is_empty());
+    let heads = partials[0].0.dims()[0];
+    let d = partials[0].0.dims()[1];
+    let mut out = Tensor::zeros(&[heads, d]);
+    for h in 0..heads {
+        // global max
+        let gm = partials.iter().map(|(_, m, _)| m[h]).fold(f32::NEG_INFINITY, f32::max);
+        let mut gl = 0.0f32;
+        let mut acc = vec![0.0f32; d];
+        for (o, m, l) in partials {
+            let w = (m[h] - gm).exp();
+            gl += l[h] * w;
+            for j in 0..d {
+                acc[j] += o.at2(h, j) * w;
+            }
+        }
+        for j in 0..d {
+            out.set2(h, j, acc[j] / gl);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Prng::new(1);
+        let a = Tensor::rand(&[3, 3], 1.0, &mut rng);
+        let mut eye = Tensor::zeros(&[3, 3]);
+        for i in 0..3 {
+            eye.set2(i, i, 1.0);
+        }
+        matmul(&a, &eye).assert_allclose(&a, 1e-6, 0.0);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![5., 6., 7., 8.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_shards_sum_to_full() {
+        // The AG+GEMM identity the whole paper rests on:
+        // A·B == Σ_i A_i · B_i where A is col-sharded and B row-sharded.
+        let mut rng = Prng::new(2);
+        let a = Tensor::rand(&[4, 8], 1.0, &mut rng);
+        let b = Tensor::rand(&[8, 5], 1.0, &mut rng);
+        let full = matmul(&a, &b);
+        let a_shards = a.shard_cols(4);
+        let b_shards = b.shard_rows(4);
+        let mut acc = Tensor::zeros(&[4, 5]);
+        for (ai, bi) in a_shards.iter().zip(&b_shards) {
+            let p = matmul(ai, bi);
+            for (dst, src) in acc.data_mut().iter_mut().zip(p.data()) {
+                *dst += src;
+            }
+        }
+        acc.assert_allclose(&full, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Prng::new(3);
+        let x = Tensor::rand(&[5, 9], 4.0, &mut rng);
+        let s = softmax_rows(&x);
+        for r in 0..5 {
+            let sum: f32 = (0..9).map(|c| s.at2(r, c)).sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_invariant_to_shift() {
+        let x = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let y = Tensor::from_vec(&[1, 3], vec![1001.0, 1002.0, 1003.0]);
+        softmax_rows(&x).assert_allclose(&softmax_rows(&y), 1e-6, 0.0);
+    }
+
+    #[test]
+    fn partials_combine_to_full_attention() {
+        // Core flash-decode identity: splitting KV into shards, computing
+        // online-softmax partials per shard, then combining == full attention.
+        let (heads, d, seq, shards) = (4, 16, 24, 3);
+        let mut rng = Prng::new(7);
+        let q = Tensor::rand(&[heads, d], 1.0, &mut rng);
+        let k = Tensor::rand(&[heads * seq, d], 1.0, &mut rng);
+        let v = Tensor::rand(&[heads * seq, d], 1.0, &mut rng);
+        let full = decode_attention_ref(&q, &k, &v, heads, seq);
+
+        let per = seq / shards;
+        let mut partials = Vec::new();
+        for s in 0..shards {
+            // slice KV shard s: rows h*seq + s*per .. h*seq + (s+1)*per per head
+            let mut ks = Tensor::zeros(&[heads * per, d]);
+            let mut vs = Tensor::zeros(&[heads * per, d]);
+            for h in 0..heads {
+                for r in 0..per {
+                    for j in 0..d {
+                        ks.set2(h * per + r, j, k.at2(h * seq + s * per + r, j));
+                        vs.set2(h * per + r, j, v.at2(h * seq + s * per + r, j));
+                    }
+                }
+            }
+            partials.push(partial_attention_ref(&q, &ks, &vs, heads, per));
+        }
+        let combined = combine_partials_ref(&partials);
+        combined.assert_allclose(&full, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn combine_single_partial_is_normalization() {
+        let (heads, d, seq) = (2, 8, 10);
+        let mut rng = Prng::new(8);
+        let q = Tensor::rand(&[heads, d], 1.0, &mut rng);
+        let k = Tensor::rand(&[heads * seq, d], 1.0, &mut rng);
+        let v = Tensor::rand(&[heads * seq, d], 1.0, &mut rng);
+        let full = decode_attention_ref(&q, &k, &v, heads, seq);
+        let p = partial_attention_ref(&q, &k, &v, heads, seq);
+        combine_partials_ref(&[p]).assert_allclose(&full, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn combine_is_order_invariant() {
+        let (heads, d, seq) = (2, 4, 8);
+        let mut rng = Prng::new(9);
+        let q = Tensor::rand(&[heads, d], 1.0, &mut rng);
+        let mk = |rng: &mut Prng| {
+            (Tensor::rand(&[heads * seq, d], 1.0, rng), Tensor::rand(&[heads * seq, d], 1.0, rng))
+        };
+        let (k1, v1) = mk(&mut rng);
+        let (k2, v2) = mk(&mut rng);
+        let p1 = partial_attention_ref(&q, &k1, &v1, heads, seq);
+        let p2 = partial_attention_ref(&q, &k2, &v2, heads, seq);
+        let ab = combine_partials_ref(&[p1.clone(), p2.clone()]);
+        let ba = combine_partials_ref(&[p2, p1]);
+        ab.assert_allclose(&ba, 1e-5, 1e-5);
+    }
+}

@@ -1,0 +1,14 @@
+//! Host tensors and reference linear algebra.
+//!
+//! [`Tensor`] is the host-side data type shared by the native tile kernels,
+//! the iris symmetric heap, and the PJRT runtime boundary. [`linalg`] holds
+//! the reference implementations (oracles) that everything distributed is
+//! checked against. [`half`] provides software fp16, since all paper kernels
+//! run FP16.
+
+pub mod dense;
+pub mod half;
+pub mod linalg;
+
+pub use dense::{Shape, Tensor};
+pub use half::{quantize_f16, F16};

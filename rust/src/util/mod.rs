@@ -1,0 +1,15 @@
+//! Cross-cutting utilities: deterministic PRNG, statistics, text tables,
+//! and a minimal property-testing harness.
+//!
+//! Everything here is dependency-free (the crate registry is unreachable in
+//! the build environment); see each submodule's docs for why hand-rolled
+//! versions exist.
+
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+pub mod table;
+
+pub use prng::Prng;
+pub use stats::{geomean, LatencyHistogram, Summary};
+pub use table::{fmt_bytes, fmt_count, fmt_ns, Table};

@@ -1,0 +1,187 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The crate registry is unreachable in this environment, so we cannot use
+//! `rand`. SplitMix64 (Steele et al., "Fast splittable pseudorandom number
+//! generators") is tiny, fast, and has excellent statistical quality for the
+//! simulation / property-testing purposes of this crate. All randomness in
+//! the repository flows through this type so every experiment is replayable
+//! from a single seed.
+
+/// SplitMix64 PRNG. Deterministic, seedable, `Copy`-cheap.
+#[derive(Debug, Clone)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    /// Create a PRNG from a seed. Any seed (including 0) is fine.
+    pub fn new(seed: u64) -> Self {
+        Prng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    /// Derive an independent stream, e.g. one per simulated rank.
+    /// Streams derived with distinct `stream_id`s are statistically
+    /// independent for our purposes.
+    pub fn split(&self, stream_id: u64) -> Prng {
+        let mut p = Prng::new(self.state ^ stream_id.wrapping_mul(0xA24B_AED4_963E_E407));
+        // burn a few outputs to decorrelate nearby stream ids
+        for _ in 0..4 {
+            p.next_u64();
+        }
+        p
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`. Uses Lemire's multiply-shift rejection-free
+    /// approximation (bias < 2^-32 for n < 2^32, irrelevant here).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0, "next_below(0)");
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi, "empty range {lo}..{hi}");
+        lo + self.next_below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 high-quality mantissa bits
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.next_f32() * (hi - lo)
+    }
+
+    /// Standard normal via Box–Muller (one value per call; we don't cache
+    /// the second — simplicity over speed, this is not on the hot path).
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Lognormal with multiplicative median 1.0 and shape `sigma`.
+    /// Used to model per-rank compute-time jitter (the source of the
+    /// bulk-synchronous tax in the DES).
+    pub fn next_lognormal(&mut self, sigma: f64) -> f64 {
+        (self.next_normal() * sigma).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len())]
+    }
+
+    /// Bernoulli(p).
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let root = Prng::new(7);
+        let mut s0 = root.split(0);
+        let mut s1 = root.split(1);
+        let same = (0..64).filter(|_| s0.next_u64() == s1.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut p = Prng::new(3);
+        for _ in 0..1000 {
+            assert!(p.next_below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut p = Prng::new(9);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = p.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean} too far from 0.5");
+    }
+
+    #[test]
+    fn lognormal_median_near_one() {
+        let mut p = Prng::new(11);
+        let mut xs: Vec<f64> = (0..4001).map(|_| p.next_lognormal(0.3)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[2000];
+        assert!((median - 1.0).abs() < 0.05, "median {median}");
+        assert!(xs.iter().all(|x| *x > 0.0));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut p = Prng::new(5);
+        let mut xs: Vec<u32> = (0..50).collect();
+        p.shuffle(&mut xs);
+        let mut back = xs.clone();
+        back.sort();
+        assert_eq!(back, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn normal_mean_and_var() {
+        let mut p = Prng::new(13);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| p.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

@@ -1,0 +1,154 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest` is not among the vendored crates available offline, so this
+//! module provides the subset we need: run a property over many randomly
+//! generated cases, and on failure greedily shrink the failing input before
+//! reporting. Generators are plain closures over [`Prng`], which keeps the
+//! whole thing ~150 lines while still catching the classes of bugs property
+//! tests exist for (boundary shapes, odd world sizes, adversarial
+//! interleavings chosen by seed).
+
+use super::prng::Prng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; each case uses `seed + case_index`.
+    pub seed: u64,
+    /// Max shrink attempts after a failure.
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xC0FFEE, max_shrink: 256 }
+    }
+}
+
+/// Outcome of a single property evaluation.
+pub enum Verdict {
+    Pass,
+    Fail(String),
+}
+
+impl Verdict {
+    pub fn check(cond: bool, msg: impl FnOnce() -> String) -> Verdict {
+        if cond { Verdict::Pass } else { Verdict::Fail(msg()) }
+    }
+}
+
+/// Run `prop` over `cfg.cases` inputs drawn by `gen`. On failure, attempt to
+/// shrink via `shrink` (which proposes smaller candidates; return an empty
+/// vec when minimal) and panic with the minimal counterexample.
+pub fn check<T, G, S, P>(cfg: &Config, mut gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Prng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Verdict,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Prng::new(cfg.seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Verdict::Fail(msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first smaller candidate
+            // that still fails.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = cfg.max_shrink;
+            'outer: while budget > 0 {
+                for cand in shrink(&best) {
+                    budget -= 1;
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    if let Verdict::Fail(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break; // no candidate fails: minimal
+            }
+            panic!(
+                "property failed (case {case}, seed {}):\n  input: {:?}\n  reason: {}",
+                cfg.seed.wrapping_add(case as u64),
+                best,
+                best_msg
+            );
+        }
+    }
+}
+
+/// Convenience: run a property with no shrinking.
+pub fn check_no_shrink<T, G, P>(cfg: &Config, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Prng) -> T,
+    P: Fn(&T) -> Verdict,
+{
+    check(cfg, gen, |_| Vec::new(), prop);
+}
+
+/// Standard shrinker for a `usize` towards `min`: halving then decrement.
+pub fn shrink_usize(x: usize, min: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if x > min {
+        let half = min + (x - min) / 2;
+        if half < x {
+            out.push(half);
+        }
+        out.push(x - 1);
+    }
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_no_shrink(
+            &Config { cases: 64, ..Default::default() },
+            |rng| rng.range(0, 100),
+            |&x| Verdict::check(x < 100, || format!("{x} >= 100")),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check_no_shrink(
+            &Config { cases: 64, ..Default::default() },
+            |rng| rng.range(0, 100),
+            |&x| Verdict::check(x < 50, || format!("{x} >= 50")),
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property "x < 10" fails for x >= 10; the shrinker should walk any
+        // failing case down to exactly 10.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                &Config { cases: 16, seed: 1, max_shrink: 512 },
+                |rng| rng.range(0, 1000),
+                |&x| shrink_usize(x, 0),
+                |&x| Verdict::check(x < 10, || format!("{x}")),
+            );
+        });
+        let err = result.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().expect("panic msg");
+        assert!(msg.contains("input: 10"), "not shrunk to minimal: {msg}");
+    }
+
+    #[test]
+    fn shrink_usize_respects_min() {
+        assert!(shrink_usize(5, 5).is_empty());
+        assert!(shrink_usize(6, 5).contains(&5));
+    }
+}

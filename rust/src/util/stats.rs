@@ -1,0 +1,218 @@
+//! Small statistics helpers used by the benchmark harness and the metrics
+//! layer: summary statistics, percentiles, and a fixed-bucket latency
+//! histogram. Criterion is unavailable offline, so the benches use
+//! [`Summary`] for their reporting.
+
+/// Summary statistics over a sample of f64 observations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary. Panics on an empty sample (caller bug).
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty sample");
+        let mut xs = samples.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs[0],
+            p50: percentile_sorted(&xs, 0.50),
+            p90: percentile_sorted(&xs, 0.90),
+            p99: percentile_sorted(&xs, 0.99),
+            max: xs[n - 1],
+        }
+    }
+
+    /// Relative standard deviation (coefficient of variation).
+    pub fn rel_std(&self) -> f64 {
+        if self.mean == 0.0 { 0.0 } else { self.std / self.mean }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice, q in `[0, 1]`.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Exponential-bucket histogram for latencies in nanoseconds.
+/// Buckets: [0,1us), [1,2us), [2,4us), ... doubling up to ~1.2s, then
+/// an overflow bucket. O(1) record, compact, good enough for tail reporting.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+    max_ns: u64,
+}
+
+const HIST_BUCKETS: usize = 32;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { buckets: vec![0; HIST_BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        // bucket 0: < 1us; bucket i: [2^(i-1) us, 2^i us)
+        let us = ns / 1_000;
+        if us == 0 {
+            0
+        } else {
+            let b = 64 - us.leading_zeros() as usize; // floor(log2(us)) + 1
+            b.min(HIST_BUCKETS - 1)
+        }
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum_ns as f64 / self.count as f64 }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Approximate percentile (upper bound of the bucket containing q).
+    pub fn approx_percentile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                // upper edge of bucket i in ns
+                return if i == 0 { 1_000 } else { (1u64 << i) * 1_000 };
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+/// Geometric mean of strictly positive values (speedup aggregation).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let log_sum: f64 = xs.iter().map(|x| {
+        assert!(*x > 0.0, "geomean needs positive values, got {x}");
+        x.ln()
+    }).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p99, 7.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_monotone() {
+        let mut h = LatencyHistogram::new();
+        for i in 0..10_000u64 {
+            h.record(i * 500); // 0 .. 5ms
+        }
+        assert_eq!(h.count(), 10_000);
+        let p50 = h.approx_percentile_ns(0.50);
+        let p99 = h.approx_percentile_ns(0.99);
+        assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+        assert!(h.mean_ns() > 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(1_000);
+        b.record(2_000_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max_ns(), 2_000_000);
+    }
+
+    #[test]
+    fn geomean_of_equal_is_value() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_speedups() {
+        // geomean(0.5, 2.0) == 1.0
+        assert!((geomean(&[0.5, 2.0]) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,278 @@
+//! Timing twin of the All-Gather + GEMM strategies (paper §4.1 / Fig. 9):
+//! builds the discrete-event program for each strategy at arbitrary
+//! (M, N, K, world) and returns the simulated timeline + tax ledger.
+//!
+//! The functional twin (real data movement, same protocols) is
+//! [`crate::coordinator::ag_gemm`]; this module answers "how long on the
+//! modeled MI325X node and where does the time go".
+//!
+//! Structure per strategy (see DESIGN.md §5 and the derivation in §7):
+//!
+//! * **BaselineBsp** — launch(AG) → entry barrier → collective (multipush
+//!   of the local shard) → exit barrier → launch(GEMM) → HBM round-trip of
+//!   the gathered A (Inter-Kernel Tax) → vendor GEMM. Pays all three taxes.
+//! * **Pull** (Alg. 1) — one fused kernel: GEMM with remote panels pulled
+//!   in the inner loop. Compute is penalized by `pull_eff_penalty`
+//!   (in-loop remote-load stalls); communication overlaps inside the
+//!   kernel (roofline max), plus an unhidden per-source latency term.
+//! * **Push** (Alg. 2+3) — push kernel on stream 1 multipushes panels;
+//!   the GEMM kernel on stream 0 consumes panel-by-panel behind signal
+//!   flags. Pays one extra launch; everything else pipelines.
+
+use crate::config::{AgGemmConfig, HwConfig};
+use crate::coordinator::AgGemmStrategy;
+use crate::sim::cost::{self, GemmImpl};
+use crate::sim::{Sim, SimResult};
+
+/// Bytes of one panel-major A shard (fp16).
+fn shard_bytes(cfg: &AgGemmConfig) -> u64 {
+    (cfg.m * (cfg.k / cfg.world) * 2) as u64
+}
+
+/// Bytes of one (M × block_k) panel (fp16).
+fn panel_bytes(cfg: &AgGemmConfig) -> u64 {
+    (cfg.m * cfg.block_k * 2) as u64
+}
+
+/// Panels per shard.
+fn n_panels(cfg: &AgGemmConfig) -> usize {
+    (cfg.k / cfg.world) / cfg.block_k
+}
+
+/// Build and run the DES program for one AG+GEMM operation.
+pub fn simulate(
+    cfg: &AgGemmConfig,
+    hw: &HwConfig,
+    strategy: AgGemmStrategy,
+    seed: u64,
+) -> SimResult {
+    cfg.validate().expect("invalid AgGemmConfig");
+    let mut sim = Sim::new(hw, cfg.world, seed);
+    match strategy {
+        AgGemmStrategy::BaselineBsp => build_baseline(&mut sim, cfg, hw),
+        AgGemmStrategy::Pull => build_pull(&mut sim, cfg, hw),
+        AgGemmStrategy::Push => build_push(&mut sim, cfg, hw),
+    }
+    sim.run()
+}
+
+/// Mean makespan over `iters` simulated iterations (the paper's §5.1
+/// protocol; jitter seeds differ per iteration).
+pub fn mean_latency_s(
+    cfg: &AgGemmConfig,
+    hw: &HwConfig,
+    strategy: AgGemmStrategy,
+    seed: u64,
+    iters: usize,
+) -> f64 {
+    assert!(iters > 0);
+    (0..iters)
+        .map(|i| simulate(cfg, hw, strategy, seed.wrapping_add(i as u64)).makespan_s)
+        .sum::<f64>()
+        / iters as f64
+}
+
+fn build_baseline(sim: &mut Sim, cfg: &AgGemmConfig, hw: &HwConfig) {
+    let w = cfg.world;
+    // Collective stage
+    let mut arrivals = Vec::with_capacity(w);
+    for r in 0..w {
+        let l = sim.launch(r, "ag_launch", &[]);
+        arrivals.push(l);
+    }
+    let entry = sim.barrier(&arrivals);
+    let mut coll_done = Vec::with_capacity(w);
+    for r in 0..w {
+        // RCCL AG kernel: every rank broadcasts its shard concurrently
+        let dur = cost::multipush_time(hw, shard_bytes(cfg), w, hw.rma_store_eff)
+            .max(hw.kernel_min_s);
+        let dur = sim.jittered(dur);
+        let c = sim.compute(r, "rccl_ag_body", dur, &[entry[r]]);
+        coll_done.push(c);
+    }
+    let exit = sim.barrier(&coll_done);
+    // GEMM stage
+    let a_full_bytes = (cfg.m * cfg.k * 2) as u64;
+    for r in 0..w {
+        let l = sim.launch(r, "gemm_launch", &[exit[r]]);
+        // gathered A was evicted to HBM by the collective and must be
+        // refetched by the GEMM: the Inter-Kernel Tax
+        let rt = sim.hbm_roundtrip(r, a_full_bytes, &[l]);
+        let dur = cost::gemm_time(hw, cfg.m, cfg.n, cfg.k, GemmImpl::Vendor).max(hw.kernel_min_s);
+        let dur = sim.jittered(dur);
+        sim.compute(r, "torch_gemm", dur, &[rt]);
+    }
+}
+
+fn build_pull(sim: &mut Sim, cfg: &AgGemmConfig, hw: &HwConfig) {
+    let w = cfg.world;
+    for r in 0..w {
+        let l = sim.launch(r, "pull_gemm_launch", &[]);
+        // in-kernel overlap: roofline of penalized compute vs remote pull.
+        // The remote-load stalls slow the MFMA pipeline, not the B stream.
+        let (flop_t, mem_t) = cost::gemm_components(hw, cfg.m, cfg.n, cfg.k);
+        let compute = (flop_t / hw.pull_eff_penalty).max(mem_t);
+        let remote_bytes = shard_bytes(cfg) as f64 * (w as f64 - 1.0);
+        let agg = hw.fabric_aggregate_bw.min(hw.link_bw * (w as f64 - 1.0).max(1.0));
+        let comm = if w > 1 { remote_bytes / (agg * hw.rma_load_eff) } else { 0.0 };
+        // one unhidden first-load latency (concurrent thread blocks hide
+        // the rest of the per-source latencies)
+        let latency_tail = if w > 1 { hw.link_latency_s } else { 0.0 };
+        let dur = sim.jittered(compute.max(comm).max(hw.kernel_min_s) + latency_tail);
+        sim.compute(r, "pull_gemm_body", dur, &[l]);
+    }
+}
+
+fn build_push(sim: &mut Sim, cfg: &AgGemmConfig, hw: &HwConfig) {
+    let w = cfg.world;
+    let np = n_panels(cfg);
+    let pb = panel_bytes(cfg);
+    // total GEMM work divided evenly over (source, panel) chunks
+    let gemm_total = cost::gemm_time(hw, cfg.m, cfg.n, cfg.k, GemmImpl::Tile);
+    let chunk = gemm_total / (w * np) as f64;
+
+    // stage 1: push kernels on stream 1 (concurrent with the GEMM kernel)
+    let mut launches = Vec::with_capacity(w);
+    let mut pushes: Vec<Vec<crate::sim::TaskId>> = vec![Vec::with_capacity(np); w];
+    for r in 0..w {
+        let lp = sim.launch(r, "push_kernel_launch", &[]);
+        let lg = sim.launch(r, "gemm_kernel_launch", &[lp]);
+        launches.push(lg);
+        let mut prev = lp;
+        for _p in 0..np {
+            let t = sim.multipush_on(r, 1, pb, &[prev]);
+            pushes[r].push(t);
+            prev = t;
+        }
+    }
+    // stage 2: wait & compute, consuming own panels first, then each
+    // source's panels as their flags arrive (staggered source order).
+    // Jitter is drawn once per rank-kernel: chunks of one kernel share the
+    // slow-clock/thermal fate of their CU set (independent per-chunk
+    // draws would let fine granularity launder variance away).
+    for r in 0..w {
+        let jf = sim.jittered(1.0);
+        let mut prev = launches[r];
+        for d in 0..w {
+            let s = (r + d) % w;
+            for p in 0..np {
+                let dur = chunk * jf;
+                let deps = if s == r {
+                    vec![prev]
+                } else {
+                    vec![prev, pushes[s][p]]
+                };
+                prev = sim.compute(r, "gemm_chunk", dur, &deps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn fig9(m: usize) -> AgGemmConfig {
+        AgGemmConfig::paper_fig9(m)
+    }
+
+    fn latency(m: usize, s: AgGemmStrategy) -> f64 {
+        mean_latency_s(&fig9(m), &presets::mi325x(), s, 1234, 20)
+    }
+
+    #[test]
+    fn pull_beats_push_at_small_m() {
+        // paper §5.2: "For smaller matrix dimensions (M <= 128), the Pull
+        // model is the more performant approach"
+        for m in [16, 32, 64] {
+            let pull = latency(m, AgGemmStrategy::Pull);
+            let push = latency(m, AgGemmStrategy::Push);
+            assert!(pull < push, "M={m}: pull {pull} !< push {push}");
+        }
+    }
+
+    #[test]
+    fn push_beats_pull_at_large_m() {
+        // paper §5.2: "As the workload size increases (M >= 128), the Push
+        // model becomes the faster of the two"
+        for m in [512, 2048, 8192] {
+            let pull = latency(m, AgGemmStrategy::Pull);
+            let push = latency(m, AgGemmStrategy::Push);
+            assert!(push < pull, "M={m}: push {push} !< pull {pull}");
+        }
+    }
+
+    #[test]
+    fn baseline_wins_in_torch_window() {
+        // paper §5.2: "for configurations where M is between 8 and 64, the
+        // baseline is faster than both of our implementations"
+        for m in [16, 32, 64] {
+            let base = latency(m, AgGemmStrategy::BaselineBsp);
+            let pull = latency(m, AgGemmStrategy::Pull);
+            let push = latency(m, AgGemmStrategy::Push);
+            assert!(base < pull && base < push, "M={m}: base {base} pull {pull} push {push}");
+        }
+    }
+
+    #[test]
+    fn fused_wins_at_extremes() {
+        // paper §5.2: "our fused kernels are faster at the smallest and
+        // largest matrix sizes"
+        for m in [1, 2, 4] {
+            let base = latency(m, AgGemmStrategy::BaselineBsp);
+            let pull = latency(m, AgGemmStrategy::Pull);
+            assert!(pull < base, "M={m}: pull {pull} !< base {base}");
+        }
+        for m in [2048, 8192] {
+            let base = latency(m, AgGemmStrategy::BaselineBsp);
+            let push = latency(m, AgGemmStrategy::Push);
+            assert!(push < base, "M={m}: push {push} !< base {base}");
+        }
+    }
+
+    #[test]
+    fn baseline_pays_all_three_taxes() {
+        let r = simulate(&fig9(64), &presets::mi325x(), AgGemmStrategy::BaselineBsp, 7);
+        assert!(r.ledger.launches >= 16, "2 launches per rank");
+        assert!(r.ledger.launch_s > 0.0);
+        assert!(r.ledger.bulk_sync_s > 0.0, "barrier skew must show up");
+        assert!(r.ledger.inter_kernel_s > 0.0);
+    }
+
+    #[test]
+    fn pull_pays_no_taxes_but_launch() {
+        let r = simulate(&fig9(64), &presets::mi325x(), AgGemmStrategy::Pull, 7);
+        assert_eq!(r.ledger.launches, 8, "one launch per rank");
+        assert_eq!(r.ledger.bulk_sync_s, 0.0);
+        assert_eq!(r.ledger.inter_kernel_s, 0.0);
+    }
+
+    #[test]
+    fn push_pays_extra_launch_only() {
+        let r = simulate(&fig9(64), &presets::mi325x(), AgGemmStrategy::Push, 7);
+        assert_eq!(r.ledger.launches, 16, "two launches per rank");
+        assert_eq!(r.ledger.bulk_sync_s, 0.0);
+        assert_eq!(r.ledger.inter_kernel_s, 0.0);
+        // panels flow over the fabric
+        let remote = shard_bytes(&fig9(64)) * 7 * 8;
+        assert_eq!(r.ledger.fabric_bytes, remote);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = simulate(&fig9(128), &presets::mi325x(), AgGemmStrategy::Push, 99);
+        let b = simulate(&fig9(128), &presets::mi325x(), AgGemmStrategy::Push, 99);
+        assert_eq!(a.makespan_s, b.makespan_s);
+    }
+
+    #[test]
+    fn world_one_degenerates_gracefully() {
+        let cfg = AgGemmConfig { m: 64, n: 256, k: 512, world: 1, block_m: 16, block_n: 16, block_k: 64 };
+        for s in AgGemmStrategy::ALL {
+            let r = simulate(&cfg, &presets::mi325x(), s, 5);
+            assert!(r.makespan_s > 0.0, "{:?}", s);
+            assert_eq!(r.ledger.fabric_bytes, 0, "{:?} moved bytes with world=1", s);
+        }
+    }
+}

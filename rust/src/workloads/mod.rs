@@ -1,0 +1,13 @@
+//! Workload definitions: the timing twins of the coordinator strategies,
+//! built on the discrete-event model ([`crate::sim`]).
+//!
+//! * [`ag_gemm`] — All-Gather + GEMM (paper §4.1, Figure 9);
+//! * [`flash_decode`] — distributed Flash Decode (paper §4.2, Figures
+//!   10–11);
+//! * [`transformer`] — a tiny tensor-parallel transformer decode model
+//!   built from the same pieces, used by the end-to-end serving example.
+
+pub mod ag_gemm;
+pub mod all_reduce;
+pub mod flash_decode;
+pub mod transformer;

@@ -1,0 +1,478 @@
+//! A tiny tensor-parallel transformer decode model built on the paper's
+//! fused patterns — the workload behind the end-to-end serving example.
+//!
+//! Architecture (sequence-parallel decode, the setting of paper §4.2):
+//! weights are replicated; the KV cache is sharded across ranks along the
+//! sequence dimension (token `t`'s KV lives on rank `t % world`). One
+//! decode step per layer is:
+//!
+//! 1. `qkv`    — local dense projection (replicated compute);
+//! 2. append   — the owning rank stores the new token's K/V in its shard;
+//! 3. attention — **distributed flash decode over the KV shards using the
+//!    paper's fully-fused pattern** (partial per rank, tile push + flags,
+//!    concurrent reduction);
+//! 4. `post_attn` — output projection + MLP + residuals (local dense).
+//!
+//! The local dense compute is abstracted behind [`LocalCompute`] so the
+//! serving path can execute it either natively ([`NativeCompute`]) or via
+//! the PJRT runtime running the AOT-compiled JAX artifact
+//! (`runtime::PjrtCompute`) — same protocol, Python never involved.
+
+use crate::kernels::attention::{flash_decode_partial, PartialState};
+use crate::kernels::combine::OnlineCombiner;
+use crate::tensor::Tensor;
+use crate::util::Prng;
+
+/// Model geometry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransformerConfig {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+    pub ffn_hidden: usize,
+    pub world: usize,
+    /// KV block the attention kernel iterates in.
+    pub kv_block: usize,
+    /// Maximum sequence length (shard capacity is `max_seq / world`,
+    /// rounded up).
+    pub max_seq: usize,
+}
+
+impl TransformerConfig {
+    /// Small config used by tests (fast on one CPU core).
+    pub fn tiny(world: usize) -> TransformerConfig {
+        TransformerConfig {
+            d_model: 32,
+            n_heads: 4,
+            head_dim: 8,
+            n_layers: 2,
+            ffn_hidden: 64,
+            world,
+            kv_block: 4,
+            max_seq: 64,
+        }
+    }
+
+    /// The end-to-end example's model (~13M params).
+    pub fn e2e(world: usize) -> TransformerConfig {
+        TransformerConfig {
+            d_model: 256,
+            n_heads: 8,
+            head_dim: 32,
+            n_layers: 4,
+            ffn_hidden: 1024,
+            world,
+            kv_block: 32,
+            max_seq: 512,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.d_model != self.n_heads * self.head_dim {
+            return Err(format!(
+                "d_model ({}) != n_heads*head_dim ({})",
+                self.d_model,
+                self.n_heads * self.head_dim
+            ));
+        }
+        if self.world == 0 || self.n_layers == 0 {
+            return Err("world and n_layers must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// Parameter count of the dense weights.
+    pub fn n_params(&self) -> usize {
+        let per_layer = self.d_model * 3 * self.d_model // wqkv
+            + self.d_model * self.d_model               // wo
+            + self.d_model * self.ffn_hidden            // w1
+            + self.ffn_hidden * self.d_model; // w2
+        per_layer * self.n_layers
+    }
+
+    /// Per-rank KV shard capacity (tokens).
+    pub fn shard_capacity(&self) -> usize {
+        self.max_seq.div_ceil(self.world)
+    }
+}
+
+/// One layer's dense weights.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    /// [d_model, 3*d_model] — fused QKV projection.
+    pub wqkv: Tensor,
+    /// [d_model, d_model] — attention output projection.
+    pub wo: Tensor,
+    /// [d_model, ffn_hidden].
+    pub w1: Tensor,
+    /// [ffn_hidden, d_model].
+    pub w2: Tensor,
+}
+
+/// Full model weights (replicated on every rank).
+#[derive(Debug, Clone)]
+pub struct TransformerWeights {
+    pub layers: Vec<LayerWeights>,
+}
+
+impl TransformerWeights {
+    /// Deterministic random initialization, fp16-quantized (the serving
+    /// weights' storage format).
+    pub fn random(cfg: &TransformerConfig, seed: u64) -> TransformerWeights {
+        let mut rng = Prng::new(seed);
+        let scale = 1.0 / (cfg.d_model as f32).sqrt();
+        let mut mk = |r: usize, c: usize| {
+            let mut t = Tensor::rand(&[r, c], scale, &mut rng);
+            t.quantize_f16();
+            t
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                wqkv: mk(cfg.d_model, 3 * cfg.d_model),
+                wo: mk(cfg.d_model, cfg.d_model),
+                w1: mk(cfg.d_model, cfg.ffn_hidden),
+                w2: mk(cfg.ffn_hidden, cfg.d_model),
+            })
+            .collect();
+        TransformerWeights { layers }
+    }
+}
+
+/// The local dense compute of one decode step — the part the PJRT runtime
+/// executes from AOT artifacts on the serving path.
+///
+/// Deliberately *not* `Send + Sync`: the `xla` crate's PJRT handles are
+/// `Rc`-based, so each rank engine constructs its own instance (see
+/// `serve::ComputeFactory`).
+pub trait LocalCompute {
+    /// h [1, d_model] → (q [heads, dim], k_new [heads, dim], v_new [heads, dim]).
+    fn qkv(&self, layer: usize, h: &Tensor) -> (Tensor, Tensor, Tensor);
+    /// (h [1, d_model], attn_out [heads, dim]) → next h [1, d_model]
+    /// (output projection + residual + MLP + residual).
+    fn post_attn(&self, layer: usize, h: &Tensor, attn_out: &Tensor) -> Tensor;
+    /// Number of layers available.
+    fn n_layers(&self) -> usize;
+}
+
+/// Native (host tile-kernel) implementation of [`LocalCompute`] — the
+/// functional mirror of the JAX L2 graph in `python/compile/model.py`.
+pub struct NativeCompute {
+    cfg: TransformerConfig,
+    weights: TransformerWeights,
+}
+
+impl NativeCompute {
+    pub fn new(cfg: TransformerConfig, weights: TransformerWeights) -> NativeCompute {
+        cfg.validate().expect("invalid TransformerConfig");
+        assert_eq!(weights.layers.len(), cfg.n_layers);
+        NativeCompute { cfg, weights }
+    }
+
+    pub fn config(&self) -> &TransformerConfig {
+        &self.cfg
+    }
+
+    fn dense(x: &Tensor, w: &Tensor) -> Tensor {
+        let (m, k) = (x.dims()[0], x.dims()[1]);
+        let n = w.dims()[1];
+        assert_eq!(w.dims()[0], k);
+        // §Perf: weights are fp16-quantized once at init; only the
+        // activation rows (m = 1 on the decode path) need quantizing here
+        let xq: Vec<f32> =
+            x.data().iter().map(|&v| crate::tensor::quantize_f16(v)).collect();
+        let mut acc = vec![0.0f32; m * n];
+        crate::kernels::gemm_tile::gemm_tile_acc_prequant(&mut acc, &xq, w.data(), m, k, n);
+        Tensor::from_vec(&[m, n], acc)
+    }
+}
+
+/// GELU (tanh approximation — same as the JAX side's `jax.nn.gelu`).
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)) as f64).tanh() as f32)
+}
+
+/// RMSNorm (no learned gain) — keeps the residual stream bounded across
+/// arbitrarily long decodes; must match `rmsnorm` in
+/// `python/compile/model.py`.
+fn rmsnorm(x: &Tensor) -> Tensor {
+    let n = x.numel() as f32;
+    let ms = x.data().iter().map(|v| v * v).sum::<f32>() / n;
+    let inv = 1.0 / (ms + 1e-6).sqrt();
+    Tensor::from_vec(x.dims(), x.data().iter().map(|v| v * inv).collect())
+}
+
+impl LocalCompute for NativeCompute {
+    fn qkv(&self, layer: usize, h: &Tensor) -> (Tensor, Tensor, Tensor) {
+        let cfg = &self.cfg;
+        assert_eq!(h.dims(), &[1, cfg.d_model]);
+        let x = rmsnorm(h); // pre-attention norm
+        let fused = Self::dense(&x, &self.weights.layers[layer].wqkv); // [1, 3D]
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim);
+        let split = |off: usize| {
+            let mut t = Tensor::zeros(&[nh, hd]);
+            for head in 0..nh {
+                for j in 0..hd {
+                    t.set2(head, j, fused.at2(0, off + head * hd + j));
+                }
+            }
+            t
+        };
+        (split(0), split(cfg.d_model), split(2 * cfg.d_model))
+    }
+
+    fn post_attn(&self, layer: usize, h: &Tensor, attn_out: &Tensor) -> Tensor {
+        let cfg = &self.cfg;
+        let lw = &self.weights.layers[layer];
+        // flatten attn_out [heads, dim] -> [1, d_model]
+        let flat = Tensor::from_vec(&[1, cfg.d_model], attn_out.data().to_vec());
+        let proj = Self::dense(&flat, &lw.wo);
+        // residual 1
+        let mut h1 = h.clone();
+        for (a, b) in h1.data_mut().iter_mut().zip(proj.data()) {
+            *a += b;
+        }
+        // MLP with pre-norm
+        let x = rmsnorm(&h1);
+        let mut mid = Self::dense(&x, &lw.w1);
+        for v in mid.data_mut().iter_mut() {
+            *v = gelu(*v);
+        }
+        let mlp = Self::dense(&mid, &lw.w2);
+        // residual 2
+        let mut out = h1;
+        for (a, b) in out.data_mut().iter_mut().zip(mlp.data()) {
+            *a += b;
+        }
+        out
+    }
+
+    fn n_layers(&self) -> usize {
+        self.cfg.n_layers
+    }
+}
+
+/// Per-rank KV cache shard: per layer, appended (K, V) rows for the tokens
+/// this rank owns, stored [heads * capacity, dim] with a length counter.
+pub struct KvShard {
+    cfg: TransformerConfig,
+    /// per layer: (k, v, len)
+    layers: Vec<(Tensor, Tensor, usize)>,
+}
+
+impl KvShard {
+    pub fn new(cfg: &TransformerConfig) -> KvShard {
+        let cap = cfg.shard_capacity();
+        let layers = (0..cfg.n_layers)
+            .map(|_| {
+                (
+                    Tensor::zeros(&[cfg.n_heads * cap, cfg.head_dim]),
+                    Tensor::zeros(&[cfg.n_heads * cap, cfg.head_dim]),
+                    0usize,
+                )
+            })
+            .collect();
+        KvShard { cfg: cfg.clone(), layers }
+    }
+
+    pub fn len(&self, layer: usize) -> usize {
+        self.layers[layer].2
+    }
+
+    pub fn is_empty(&self, layer: usize) -> bool {
+        self.len(layer) == 0
+    }
+
+    /// Append one token's K/V rows ([heads, dim] each) for `layer`.
+    pub fn append(&mut self, layer: usize, k_new: &Tensor, v_new: &Tensor) {
+        let cap = self.cfg.shard_capacity();
+        let (nh, hd) = (self.cfg.n_heads, self.cfg.head_dim);
+        let (k, v, len) = &mut self.layers[layer];
+        assert!(*len < cap, "KV shard overflow (cap {cap})");
+        for h in 0..nh {
+            for j in 0..hd {
+                k.set2(h * cap + *len, j, k_new.at2(h, j));
+                v.set2(h * cap + *len, j, v_new.at2(h, j));
+            }
+        }
+        *len += 1;
+    }
+
+    /// Contiguous view [heads * len, dim] of the valid K (and V) prefix.
+    pub fn valid_kv(&self, layer: usize) -> (Tensor, Tensor, usize) {
+        let cap = self.cfg.shard_capacity();
+        let (nh, hd) = (self.cfg.n_heads, self.cfg.head_dim);
+        let (k, v, len) = &self.layers[layer];
+        let mut ck = Tensor::zeros(&[nh * len, hd]);
+        let mut cv = Tensor::zeros(&[nh * len, hd]);
+        for h in 0..nh {
+            for r in 0..*len {
+                for j in 0..hd {
+                    ck.set2(h * len + r, j, k.at2(h * cap + r, j));
+                    cv.set2(h * len + r, j, v.at2(h * cap + r, j));
+                }
+            }
+        }
+        (ck, cv, *len)
+    }
+
+    /// Local partial attention over this shard (empty shard → None).
+    pub fn partial(&self, layer: usize, q: &Tensor) -> Option<PartialState> {
+        let (k, v, len) = self.valid_kv(layer);
+        if len == 0 {
+            return None;
+        }
+        Some(flash_decode_partial(q, &k, &v, self.cfg.n_heads, len, self.cfg.kv_block))
+    }
+}
+
+/// Single-process reference decoder (world = 1 semantics): the oracle the
+/// distributed serving path is validated against.
+pub struct ReferenceDecoder<C: LocalCompute> {
+    cfg: TransformerConfig,
+    compute: C,
+    shard: KvShard,
+    tokens: usize,
+}
+
+impl<C: LocalCompute> ReferenceDecoder<C> {
+    pub fn new(cfg: TransformerConfig, compute: C) -> ReferenceDecoder<C> {
+        let mut c1 = cfg.clone();
+        c1.world = 1;
+        let shard = KvShard::new(&c1);
+        ReferenceDecoder { cfg: c1, compute, shard, tokens: 0 }
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// Run one decode step on hidden state `h`, returning the next hidden
+    /// state. Appends the token's KV to the cache.
+    pub fn step(&mut self, h: &Tensor) -> Tensor {
+        let mut h = h.clone();
+        for layer in 0..self.cfg.n_layers {
+            let (q, k_new, v_new) = self.compute.qkv(layer, &h);
+            self.shard.append(layer, &k_new, &v_new);
+            let p = self.shard.partial(layer, &q).expect("non-empty after append");
+            let mut comb = OnlineCombiner::new(self.cfg.n_heads, self.cfg.head_dim);
+            comb.add(&p);
+            let attn = comb.finish();
+            h = self.compute.post_attn(layer, &h, &attn);
+        }
+        self.tokens += 1;
+        h
+    }
+}
+
+/// Deterministic synthetic "embedding" for a token id (stands in for a
+/// vocab embedding table; serving tests and the e2e example feed these).
+pub fn token_embedding(cfg: &TransformerConfig, token_id: u64) -> Tensor {
+    let mut rng = Prng::new(0xE4B_EDu64.wrapping_add(token_id));
+    let mut t = Tensor::rand(&[1, cfg.d_model], 0.5, &mut rng);
+    t.quantize_f16();
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation() {
+        TransformerConfig::tiny(4).validate().unwrap();
+        TransformerConfig::e2e(8).validate().unwrap();
+        let mut bad = TransformerConfig::tiny(2);
+        bad.d_model = 33;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn param_count_e2e_in_expected_range() {
+        let cfg = TransformerConfig::e2e(8);
+        let p = cfg.n_params();
+        // 4 layers * (256*768 + 256*256 + 2*256*1024) = ~3.1M
+        assert!(p > 3_000_000 && p < 3_300_000, "{p}");
+    }
+
+    #[test]
+    fn kv_shard_append_and_view() {
+        let cfg = TransformerConfig::tiny(2);
+        let mut shard = KvShard::new(&cfg);
+        assert!(shard.is_empty(0));
+        let k = Tensor::full(&[cfg.n_heads, cfg.head_dim], 1.5);
+        let v = Tensor::full(&[cfg.n_heads, cfg.head_dim], 2.5);
+        shard.append(0, &k, &v);
+        shard.append(0, &k, &v);
+        assert_eq!(shard.len(0), 2);
+        assert_eq!(shard.len(1), 0, "layers independent");
+        let (ck, cv, len) = shard.valid_kv(0);
+        assert_eq!(len, 2);
+        assert_eq!(ck.dims(), &[cfg.n_heads * 2, cfg.head_dim]);
+        assert!(ck.data().iter().all(|&x| x == 1.5));
+        assert!(cv.data().iter().all(|&x| x == 2.5));
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn kv_shard_overflow_detected() {
+        let mut cfg = TransformerConfig::tiny(1);
+        cfg.max_seq = 2;
+        let mut shard = KvShard::new(&cfg);
+        let k = Tensor::zeros(&[cfg.n_heads, cfg.head_dim]);
+        for _ in 0..3 {
+            shard.append(0, &k, &k);
+        }
+    }
+
+    #[test]
+    fn reference_decoder_is_deterministic() {
+        let cfg = TransformerConfig::tiny(1);
+        let w = TransformerWeights::random(&cfg, 7);
+        let mut d1 = ReferenceDecoder::new(cfg.clone(), NativeCompute::new(cfg.clone(), w.clone()));
+        let mut d2 = ReferenceDecoder::new(cfg.clone(), NativeCompute::new(cfg.clone(), w));
+        let mut h1 = token_embedding(&cfg, 1);
+        let mut h2 = token_embedding(&cfg, 1);
+        for _ in 0..5 {
+            h1 = d1.step(&h1);
+            h2 = d2.step(&h2);
+        }
+        assert_eq!(h1, h2);
+        assert_eq!(d1.tokens(), 5);
+    }
+
+    #[test]
+    fn decode_outputs_are_finite_and_nontrivial() {
+        let cfg = TransformerConfig::tiny(1);
+        let w = TransformerWeights::random(&cfg, 8);
+        let mut dec = ReferenceDecoder::new(cfg.clone(), NativeCompute::new(cfg.clone(), w));
+        let mut h = token_embedding(&cfg, 42);
+        let h0 = h.clone();
+        for _ in 0..3 {
+            h = dec.step(&h);
+        }
+        assert!(h.data().iter().all(|x| x.is_finite()));
+        assert!(h.max_abs_diff(&h0) > 1e-3, "state must evolve");
+    }
+
+    #[test]
+    fn qkv_split_layout() {
+        // the head-major split must match the flat [1, 3D] projection
+        let cfg = TransformerConfig::tiny(1);
+        let w = TransformerWeights::random(&cfg, 9);
+        let nc = NativeCompute::new(cfg.clone(), w.clone());
+        let h = token_embedding(&cfg, 3);
+        let (q, k, v) = nc.qkv(0, &h);
+        assert_eq!(q.dims(), &[cfg.n_heads, cfg.head_dim]);
+        // recompute flat projection of the normed input
+        let x = rmsnorm(&h);
+        let flat = {
+            let mut acc = vec![0.0f32; 3 * cfg.d_model];
+            crate::kernels::gemm_tile::gemm_tile_acc(&mut acc, x.data(), w.layers[0].wqkv.data(), 1, cfg.d_model, 3 * cfg.d_model);
+            acc
+        };
+        assert_eq!(q.at2(1, 2), flat[cfg.head_dim + 2]);
+        assert_eq!(k.at2(0, 0), flat[cfg.d_model]);
+        assert_eq!(v.at2(3, 7), flat[2 * cfg.d_model + 3 * cfg.head_dim + 7]);
+    }
+}

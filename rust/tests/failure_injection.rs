@@ -1,0 +1,121 @@
+//! Integration: failure injection on the iris substrate — dead producers
+//! are detected by wait timeouts instead of hanging, slow ranks never
+//! corrupt results (only delay them), and the node propagates engine
+//! panics.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use taxfree::collectives;
+use taxfree::iris::{run_node, run_node_with_timeout, HeapBuilder};
+
+#[test]
+fn dead_producer_hits_timeout_not_hang() {
+    // rank 1 "dies" (never pushes); consumers must get a WaitTimeout
+    let world = 3;
+    let heap = Arc::new(HeapBuilder::new(world).buffer("b", 4).flags("f", world).build());
+    let outcomes = run_node_with_timeout(heap, Duration::from_millis(100), move |ctx| {
+        if ctx.rank() == 1 {
+            return Ok(0); // dead rank: contributes nothing
+        }
+        // everyone else publishes and waits for all flags
+        ctx.remote_store((ctx.rank() + 1) % 3, "b", 0, &[1.0]);
+        for s in 0..ctx.world() {
+            if s != ctx.rank() {
+                ctx.signal(s, "f", ctx.rank());
+            }
+        }
+        ctx.wait_flag_ge("f", 1, 1).map(|v| v as i32)
+    });
+    assert!(outcomes[0].is_err(), "rank 0 must time out");
+    assert!(outcomes[2].is_err(), "rank 2 must time out");
+    let err = outcomes[0].as_ref().unwrap_err();
+    assert_eq!(err.idx, 1);
+    assert!(err.to_string().contains("timeout"));
+}
+
+#[test]
+fn slow_rank_delays_but_never_corrupts() {
+    // one rank sleeps before contributing; the all-gather result must be
+    // identical to the fast case (the bulk-sync tax is time, not data)
+    let world = 4;
+    let seg = 8;
+    for slow_rank in 0..world {
+        let heap = Arc::new(
+            HeapBuilder::new(world).buffer("ag", world * seg).flags("agf", world).build(),
+        );
+        let outs = run_node(heap, move |ctx| {
+            if ctx.rank() == slow_rank {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            let send: Vec<f32> = (0..seg).map(|i| (ctx.rank() * 100 + i) as f32).collect();
+            collectives::all_gather_push(&ctx, &send, "ag", "agf", 1)
+        });
+        let expect: Vec<f32> =
+            (0..world).flat_map(|r| (0..seg).map(move |i| (r * 100 + i) as f32)).collect();
+        for (r, o) in outs.iter().enumerate() {
+            assert_eq!(o, &expect, "slow_rank={slow_rank} rank={r}");
+        }
+    }
+}
+
+#[test]
+fn interleaved_waiters_make_progress() {
+    // adversarial interleaving: every rank signals its successor only
+    // after hearing from its predecessor (a chain), seeded by rank 0.
+    // Any flag-ordering bug deadlocks; the timeout converts that to a
+    // failure instead of a hung suite.
+    let world = 6;
+    let heap = Arc::new(HeapBuilder::new(world).flags("chain", world).build());
+    let outs = run_node_with_timeout(heap, Duration::from_secs(10), move |ctx| {
+        let r = ctx.rank();
+        if r == 0 {
+            ctx.signal(1 % ctx.world(), "chain", 0);
+            Ok::<u64, taxfree::iris::WaitTimeout>(0)
+        } else {
+            let v = ctx.wait_flag_ge("chain", r - 1, 1)?;
+            let next = (r + 1) % ctx.world();
+            if next != 0 {
+                ctx.signal(next, "chain", r);
+            }
+            Ok(v)
+        }
+    });
+    for (r, o) in outs.iter().enumerate() {
+        assert!(o.is_ok(), "rank {r} failed: {o:?}");
+    }
+}
+
+#[test]
+fn flag_counts_are_conserved_under_contention() {
+    // hammer one flag from every rank; the final count must be exact
+    let world = 8;
+    let per_rank = 500u64;
+    let heap = Arc::new(HeapBuilder::new(world).flags("c", 1).build());
+    let counter = Arc::new(AtomicUsize::new(0));
+    let c2 = Arc::clone(&counter);
+    let outs = run_node(heap, move |ctx| {
+        for _ in 0..per_rank {
+            ctx.signal(0, "c", 0);
+            c2.fetch_add(1, Ordering::Relaxed);
+        }
+        ctx.barrier();
+        ctx.heap().flag_read(0, "c", 0)
+    });
+    assert_eq!(counter.load(Ordering::Relaxed), world * per_rank as usize);
+    for o in outs {
+        assert_eq!(o, world as u64 * per_rank);
+    }
+}
+
+#[test]
+#[should_panic(expected = "injected engine failure")]
+fn engine_panic_propagates_to_caller() {
+    let heap = Arc::new(HeapBuilder::new(3).build());
+    run_node(heap, |ctx| {
+        if ctx.rank() == 2 {
+            panic!("injected engine failure");
+        }
+    });
+}

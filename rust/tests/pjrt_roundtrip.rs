@@ -1,0 +1,143 @@
+//! Integration: the PJRT boundary — AOT-compiled Pallas/JAX artifacts
+//! executed from Rust must agree with the native Rust kernels over random
+//! inputs. This closes the loop L1 (Pallas) == L2 (JAX) == native Rust ==
+//! PJRT execution; the Python-side pytest closes L1 == oracle.
+//!
+//! Requires `make artifacts`; tests skip (with a note) when absent so
+//! `cargo test` stays usable before the first build.
+
+use std::path::{Path, PathBuf};
+
+use taxfree::kernels::{combine_all, flash_decode_partial, PartialState};
+use taxfree::runtime::{ArgValue, Runtime};
+use taxfree::tensor::linalg::matmul;
+use taxfree::tensor::Tensor;
+use taxfree::util::Prng;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built (`make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load_dir(&artifacts_dir()).expect("load artifacts"))
+}
+
+#[test]
+fn gemm_artifact_vs_native_random_sweep() {
+    let Some(rt) = runtime() else { return };
+    for seed in 0..5u64 {
+        let mut rng = Prng::new(1000 + seed);
+        let mut a = Tensor::rand(&[16, 32], 1.0, &mut rng);
+        let mut b = Tensor::rand(&[32, 24], 1.0, &mut rng);
+        a.quantize_f16();
+        b.quantize_f16();
+        let got =
+            rt.execute("gemm_test", &[ArgValue::F32(a.clone()), ArgValue::F32(b.clone())]).unwrap();
+        got[0].assert_allclose(&matmul(&a, &b), 2e-3, 2e-3);
+    }
+}
+
+#[test]
+fn combine_artifact_vs_native_combiner() {
+    let Some(rt) = runtime() else { return };
+    let (w, h, d) = (4usize, 8usize, 32usize);
+    let mut rng = Prng::new(2000);
+    // build W random partial states from random KV shards
+    let kv = 16;
+    let q = {
+        let mut t = Tensor::rand(&[h, d], 1.0, &mut rng);
+        t.quantize_f16();
+        t
+    };
+    let partials: Vec<PartialState> = (0..w)
+        .map(|_| {
+            let mut k = Tensor::rand(&[h * kv, d], 1.0, &mut rng);
+            let mut v = Tensor::rand(&[h * kv, d], 1.0, &mut rng);
+            k.quantize_f16();
+            v.quantize_f16();
+            flash_decode_partial(&q, &k, &v, h, kv, 8)
+        })
+        .collect();
+    // pack [W,H,D], [W,H], [W,H]
+    let mut os = Vec::new();
+    let mut ms = Vec::new();
+    let mut ls = Vec::new();
+    for p in &partials {
+        os.extend_from_slice(p.o.data());
+        ms.extend_from_slice(&p.m);
+        ls.extend_from_slice(&p.l);
+    }
+    let got = rt
+        .execute(
+            "flash_combine_test",
+            &[
+                ArgValue::F32(Tensor::from_vec(&[w, h, d], os)),
+                ArgValue::F32(Tensor::from_vec(&[w, h], ms)),
+                ArgValue::F32(Tensor::from_vec(&[w, h], ls)),
+            ],
+        )
+        .unwrap();
+    let native = combine_all(&partials, h, d);
+    got[0].assert_allclose(&native, 1e-4, 1e-4);
+}
+
+#[test]
+fn pipeline_partials_through_pjrt_then_combine_natively() {
+    // mixed pipeline: partials from the PJRT artifact, combine in native
+    // Rust — exactly what a heterogeneous deployment would do
+    let Some(rt) = runtime() else { return };
+    let (h, d, s) = (8usize, 32usize, 64usize);
+    let mut rng = Prng::new(3000);
+    let q = Tensor::rand(&[h, d], 1.0, &mut rng);
+    let mut partials = Vec::new();
+    let mut native_partials = Vec::new();
+    for _ in 0..3 {
+        let k = Tensor::rand(&[h, s, d], 1.0, &mut rng);
+        let v = Tensor::rand(&[h, s, d], 1.0, &mut rng);
+        let outs = rt
+            .execute(
+                "flash_partial_test",
+                &[
+                    ArgValue::I32(s as i32),
+                    ArgValue::F32(q.clone()),
+                    ArgValue::F32(k.clone()),
+                    ArgValue::F32(v.clone()),
+                ],
+            )
+            .unwrap();
+        partials.push(PartialState {
+            o: outs[0].clone(),
+            m: outs[1].data().to_vec(),
+            l: outs[2].data().to_vec(),
+        });
+        // native twin (flat layout)
+        let mut q16 = q.clone();
+        q16.quantize_f16();
+        let mut k2 = Tensor::from_vec(&[h * s, d], k.data().to_vec());
+        let mut v2 = Tensor::from_vec(&[h * s, d], v.data().to_vec());
+        k2.quantize_f16();
+        v2.quantize_f16();
+        native_partials.push(flash_decode_partial(&q16, &k2, &v2, h, s, 16));
+    }
+    let via_pjrt = combine_all(&partials, h, d);
+    let native = combine_all(&native_partials, h, d);
+    via_pjrt.assert_allclose(&native, 5e-3, 5e-3);
+}
+
+#[test]
+fn manifest_specs_are_enforced_at_the_boundary() {
+    let Some(rt) = runtime() else { return };
+    // every listed artifact must expose a spec and reject wrong arity
+    for name in rt.names() {
+        let spec = rt.spec(name).expect("spec");
+        assert!(!spec.outputs.is_empty(), "{name} has no outputs");
+        if !spec.inputs.is_empty() {
+            let err = rt.execute(name, &[]).unwrap_err();
+            assert!(err.contains("args passed"), "{name}: {err}");
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Integration: the serving loop under load — many requests, varying
+//! worlds, determinism, and the figure-level claims the experiments
+//! depend on holding together end to end.
+
+use taxfree::config::presets;
+use taxfree::coordinator::FlashDecodeStrategy;
+use taxfree::experiments;
+use taxfree::serve::{serve, RequestQueue};
+use taxfree::workloads::flash_decode as fd_sim;
+use taxfree::workloads::transformer::{NativeCompute, TransformerConfig, TransformerWeights};
+
+fn native_factory(
+    cfg: &TransformerConfig,
+    seed: u64,
+) -> impl Fn(usize) -> NativeCompute + Send + Sync + 'static {
+    let cfg = cfg.clone();
+    move |_| NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed))
+}
+
+#[test]
+fn serve_many_requests_all_complete() {
+    let cfg = TransformerConfig::tiny(4);
+    let mut q = RequestQueue::new();
+    q.fill_synthetic(12, (1, 6), (1, 8), 21);
+    let requests = q.drain_batch(12);
+    let expected_tokens: usize = requests.iter().map(|r| r.total_tokens()).sum();
+    let report = serve(&cfg, requests, native_factory(&cfg, 5));
+    assert_eq!(report.results.len(), 12);
+    assert_eq!(report.total_tokens, expected_tokens);
+    // ids preserved in FIFO order
+    for (i, r) in report.results.iter().enumerate() {
+        assert_eq!(r.id, i);
+        assert!(r.latency_ns > 0);
+    }
+    assert!(report.tokens_per_s() > 0.0);
+}
+
+#[test]
+fn serve_results_independent_of_world_size() {
+    // token counts and ids must be invariant to how the KV is sharded
+    let base: Vec<(usize, usize)> = {
+        let cfg = TransformerConfig::tiny(1);
+        let mut q = RequestQueue::new();
+        q.fill_synthetic(5, (2, 4), (2, 6), 33);
+        let report = serve(&cfg, q.drain_batch(5), native_factory(&cfg, 6));
+        report.results.iter().map(|r| (r.id, r.tokens)).collect()
+    };
+    for world in [2usize, 3, 4] {
+        let cfg = TransformerConfig::tiny(world);
+        let mut q = RequestQueue::new();
+        q.fill_synthetic(5, (2, 4), (2, 6), 33);
+        let report = serve(&cfg, q.drain_batch(5), native_factory(&cfg, 6));
+        let got: Vec<(usize, usize)> = report.results.iter().map(|r| (r.id, r.tokens)).collect();
+        assert_eq!(got, base, "world={world}");
+    }
+}
+
+#[test]
+fn kv_capacity_is_respected_under_max_length_requests() {
+    let cfg = TransformerConfig::tiny(2); // max_seq 64 => 32/shard
+    let mut q = RequestQueue::new();
+    // total tokens exactly max_seq
+    q.submit(32, 32);
+    let report = serve(&cfg, q.drain_batch(1), native_factory(&cfg, 7));
+    assert_eq!(report.total_tokens, 64);
+}
+
+#[test]
+fn figure_level_claims_hold_together() {
+    // one cheap end-to-end sanity pass over all four experiment harnesses
+    // (the per-figure shape tests live in the lib; this checks they can
+    // run back-to-back off one config, as `taxfree experiments all` does)
+    let hw300 = presets::mi300x();
+    let hw325 = presets::mi325x();
+    let f9 = experiments::fig9(&hw325, 1, 5);
+    let f10 = experiments::fig10(&hw300, 1, 5);
+    let f11 = experiments::fig11(&hw300, 1, 5);
+    let (ag, fd) = experiments::fig2(&hw300, 1);
+    assert_eq!(f9.len(), 14);
+    assert_eq!(f10.len(), 7);
+    assert_eq!(f11.len(), 4);
+    assert_eq!(ag.len() + fd.len(), 7);
+    // the headline: fused beats baseline everywhere in fig10
+    assert!(f10.iter().all(|r| r.fused_x > 1.0));
+}
+
+#[test]
+fn slow_fabric_ablation_increases_fused_advantage_at_large_kv() {
+    // ablation (DESIGN.md presets): halving fabric bandwidth should not
+    // *reduce* the fused advantage — fused hides communication better
+    let normal = presets::mi300x();
+    let slow = presets::slow_fabric();
+    let kv = 1 << 20;
+    let cfg = taxfree::config::FlashDecodeConfig::paper_fig10(kv);
+    let speedup = |hw: &taxfree::config::HwConfig| {
+        let b = fd_sim::mean_latency_s(&cfg, hw, FlashDecodeStrategy::BaselineBsp, 9, 20);
+        let f = fd_sim::mean_latency_s(&cfg, hw, FlashDecodeStrategy::FullyFused, 9, 20);
+        b / f
+    };
+    let s_normal = speedup(&normal);
+    let s_slow = speedup(&slow);
+    assert!(
+        s_slow >= s_normal * 0.98,
+        "slow fabric shrank the fused advantage: {s_slow:.3} vs {s_normal:.3}"
+    );
+}
+
+#[test]
+fn ideal_hardware_collapses_the_gap() {
+    // with zero taxes (free launches, no skew, perfect locality) the
+    // strategies converge — the paper's thesis stated as a limit
+    let ideal = presets::ideal();
+    let cfg = taxfree::config::FlashDecodeConfig::paper_fig10(1 << 18);
+    let b = fd_sim::mean_latency_s(&cfg, &ideal, FlashDecodeStrategy::BaselineBsp, 3, 20);
+    let f = fd_sim::mean_latency_s(&cfg, &ideal, FlashDecodeStrategy::FullyFused, 3, 20);
+    let gap = b / f;
+    assert!(
+        (0.99..=1.05).contains(&gap),
+        "on tax-free hardware the gap should vanish, got {gap:.4}"
+    );
+}

@@ -1,0 +1,173 @@
+//! Integration: strategy equivalence — the paper's core correctness
+//! invariant. The fused patterns change *when and where* data moves, never
+//! *what* is computed, so every strategy must produce the same output on
+//! every rank, for randomized configurations (property-tested with the
+//! in-crate propcheck harness; proptest is unavailable offline).
+
+use taxfree::config::{AgGemmConfig, FlashDecodeConfig};
+use taxfree::coordinator::{ag_gemm, flash_decode, AgGemmStrategy, FlashDecodeStrategy};
+use taxfree::tensor::linalg::{decode_attention_ref, matmul};
+use taxfree::tensor::Tensor;
+use taxfree::util::propcheck::{check_no_shrink, Config, Verdict};
+use taxfree::util::Prng;
+
+/// Random valid AG+GEMM config: world in 1..=6, block-aligned dims.
+fn gen_ag_cfg(rng: &mut Prng) -> AgGemmConfig {
+    let world = rng.range(1, 7);
+    let block_k = *rng.choose(&[2usize, 4]);
+    let panels = rng.range(1, 4);
+    AgGemmConfig {
+        m: rng.range(1, 13),
+        n: rng.range(1, 17),
+        k: world * block_k * panels,
+        world,
+        block_m: rng.range(1, 9),
+        block_n: rng.range(1, 9),
+        block_k,
+    }
+}
+
+#[test]
+fn ag_gemm_all_strategies_match_reference_property() {
+    check_no_shrink(
+        &Config { cases: 30, seed: 0xA11CE, ..Default::default() },
+        |rng| {
+            let cfg = gen_ag_cfg(rng);
+            let seed = rng.next_u64();
+            (cfg, seed)
+        },
+        |(cfg, seed)| {
+            let mut rng = Prng::new(*seed);
+            let mut a = Tensor::rand(&[cfg.m, cfg.k], 1.0, &mut rng);
+            let mut b = Tensor::rand(&[cfg.k, cfg.n], 1.0, &mut rng);
+            a.quantize_f16();
+            b.quantize_f16();
+            let expect = matmul(&a, &b);
+            for strategy in AgGemmStrategy::ALL {
+                let outs = ag_gemm::run(cfg, strategy, &a, &b, 1);
+                for (r, c) in outs.iter().enumerate() {
+                    let diff = c.max_abs_diff(&expect);
+                    let tol = 1e-2 * (cfg.k as f32).sqrt();
+                    if diff > tol {
+                        return Verdict::Fail(format!(
+                            "{} rank {r}: diff {diff} > {tol} ({cfg:?})",
+                            strategy.name()
+                        ));
+                    }
+                }
+            }
+            Verdict::Pass
+        },
+    );
+}
+
+#[test]
+fn ag_gemm_pull_push_bitwise_identical_property() {
+    // pull and push run the identical tile schedule; outputs must agree
+    // bit-for-bit — any divergence means the protocols reordered the math
+    check_no_shrink(
+        &Config { cases: 20, seed: 0xB0B, ..Default::default() },
+        |rng| {
+            let cfg = gen_ag_cfg(rng);
+            let seed = rng.next_u64();
+            (cfg, seed)
+        },
+        |(cfg, seed)| {
+            let mut rng = Prng::new(*seed);
+            let a = Tensor::rand(&[cfg.m, cfg.k], 1.0, &mut rng);
+            let b = Tensor::rand(&[cfg.k, cfg.n], 1.0, &mut rng);
+            let pull = ag_gemm::run(cfg, AgGemmStrategy::Pull, &a, &b, 1);
+            let push = ag_gemm::run(cfg, AgGemmStrategy::Push, &a, &b, 1);
+            Verdict::check(pull == push, || format!("pull != push for {cfg:?}"))
+        },
+    );
+}
+
+/// Random valid Flash-Decode config (MHA; GQA is timing-model-only).
+fn gen_fd_cfg(rng: &mut Prng) -> FlashDecodeConfig {
+    let world = rng.range(1, 7);
+    let kv_block = *rng.choose(&[2usize, 4]);
+    let blocks_per_rank = rng.range(1, 5);
+    let q_heads = rng.range(1, 5);
+    FlashDecodeConfig {
+        batch: 1,
+        q_heads,
+        kv_heads: q_heads,
+        head_dim: *rng.choose(&[4usize, 8, 16]),
+        kv_len_global: world * kv_block * blocks_per_rank,
+        world,
+        kv_block,
+        head_groups: 1,
+    }
+}
+
+#[test]
+fn flash_decode_all_strategies_match_reference_property() {
+    check_no_shrink(
+        &Config { cases: 25, seed: 0xF1A5, ..Default::default() },
+        |rng| {
+            let cfg = gen_fd_cfg(rng);
+            let seed = rng.next_u64();
+            (cfg, seed)
+        },
+        |(cfg, seed)| {
+            let (q, ks, vs, kf, vf) = flash_decode::make_inputs(cfg, *seed);
+            let expect = decode_attention_ref(&q, &kf, &vf, cfg.q_heads, cfg.kv_len_global);
+            for strategy in FlashDecodeStrategy::ALL {
+                let outs = flash_decode::run(cfg, strategy, &q, &ks, &vs, 1);
+                for (r, o) in outs.iter().enumerate() {
+                    let diff = o.max_abs_diff(&expect);
+                    if diff > 5e-3 {
+                        return Verdict::Fail(format!(
+                            "{} rank {r}: diff {diff} ({cfg:?})",
+                            strategy.name()
+                        ));
+                    }
+                }
+            }
+            Verdict::Pass
+        },
+    );
+}
+
+#[test]
+fn flash_decode_ranks_agree_exactly_within_strategy() {
+    // all ranks of the *same* strategy run the same combine order modulo
+    // staggering; they must agree to float tolerance with each other
+    check_no_shrink(
+        &Config { cases: 15, seed: 0xCAFE, ..Default::default() },
+        |rng| {
+            let cfg = gen_fd_cfg(rng);
+            let seed = rng.next_u64();
+            (cfg, seed)
+        },
+        |(cfg, seed)| {
+            let (q, ks, vs, _, _) = flash_decode::make_inputs(cfg, *seed);
+            for strategy in [FlashDecodeStrategy::BaselineBsp, FlashDecodeStrategy::FullyFused] {
+                let outs = flash_decode::run(cfg, strategy, &q, &ks, &vs, 1);
+                for o in &outs[1..] {
+                    let diff = o.max_abs_diff(&outs[0]);
+                    if diff > 1e-5 {
+                        return Verdict::Fail(format!(
+                            "{}: ranks disagree by {diff} ({cfg:?})",
+                            strategy.name()
+                        ));
+                    }
+                }
+            }
+            Verdict::Pass
+        },
+    );
+}
+
+#[test]
+fn repeated_rounds_are_stable() {
+    // flags are monotone counters; 10 rounds back-to-back must not corrupt
+    let cfg = AgGemmConfig::tiny(4);
+    let mut rng = Prng::new(31337);
+    let a = Tensor::rand(&[cfg.m, cfg.k], 1.0, &mut rng);
+    let b = Tensor::rand(&[cfg.k, cfg.n], 1.0, &mut rng);
+    let expect = ag_gemm::run(&cfg, AgGemmStrategy::Push, &a, &b, 1);
+    let many = ag_gemm::run(&cfg, AgGemmStrategy::Push, &a, &b, 10);
+    assert_eq!(expect, many);
+}
