@@ -1,24 +1,29 @@
-//! Tensor-parallel layer forward: the workload that motivates AG+GEMM
-//! (paper §4.1.1 — "tensor parallelism, where partial results or weights
-//! must be collected from all the ranks before a matrix multiply").
+//! Tensor-parallel layer forward: both collectives of a TP transformer
+//! layer, fused.
 //!
-//! An activation A is produced column-sharded across ranks by a previous
-//! row-parallel layer; the next layer needs the full activation times its
-//! weight: C = all_gather(A) · B. We run the layer functionally with every
-//! strategy, verify bit-agreement between pull and push, then sweep M on
-//! the performance model to show where each strategy wins — the Figure 9
-//! story told through one layer.
+//! * **Up (column-parallel)**: an activation A is produced column-sharded
+//!   across ranks; the next layer needs the full activation times its
+//!   weight: `C = all_gather(A) · B` — AG+GEMM (paper §4.1.1).
+//! * **Down (row-parallel)**: the mirror pattern — each rank holds a
+//!   column shard of the activation and a row shard of the weight; the
+//!   partial products must be *summed* and scattered:
+//!   `C = reduce_scatter(Σ_r A_r · B_r)` — fused GEMM+RS.
+//!
+//! We run both halves functionally with every strategy, verify
+//! bit-agreement between the fused pipelines and their BSP compositions,
+//! then sweep M on the performance model to show where each strategy wins.
 //!
 //! ```bash
 //! cargo run --release --offline --example tensor_parallel_layer
 //! ```
 
-use taxfree::config::{presets, AgGemmConfig};
-use taxfree::coordinator::{ag_gemm, AgGemmStrategy};
+use taxfree::config::{presets, AgGemmConfig, GemmRsConfig};
+use taxfree::coordinator::{ag_gemm, gemm_rs, AgGemmStrategy, GemmRsStrategy};
 use taxfree::tensor::linalg::matmul;
 use taxfree::tensor::Tensor;
 use taxfree::util::{Prng, Table};
 use taxfree::workloads::ag_gemm as sim;
+use taxfree::workloads::gemm_rs as rs_sim;
 
 fn main() {
     // a "layer": batch-of-24 tokens, hidden 96 sharded over 8 ranks,
@@ -73,4 +78,29 @@ fn main() {
     }
     table.print();
     println!("\nmatches paper §5.2: pull at small M, torch window at 8..64, push beyond.");
+
+    // ---- the down-projection: fused GEMM+ReduceScatter (the way back) ----
+    // ragged on purpose: hidden 50 and output 33 don't divide by 8
+    let rs_cfg = GemmRsConfig { m: 24, n: 33, k: 50, world: 8, block_n: 4 };
+    let mut act2 = Tensor::rand(&[rs_cfg.m, rs_cfg.k], 1.0, &mut rng);
+    let mut w2 = Tensor::rand(&[rs_cfg.k, rs_cfg.n], 0.2, &mut rng);
+    act2.quantize_f16();
+    w2.quantize_f16();
+    let expect2 = matmul(&act2, &w2);
+
+    println!("\n== TP layer down-projection (GEMM+RS) on 8 functional ranks ==");
+    let bsp = gemm_rs::run(&rs_cfg, GemmRsStrategy::BaselineBsp, &act2, &w2, 1);
+    let fused = gemm_rs::run(&rs_cfg, GemmRsStrategy::FusedTiles, &act2, &w2, 1);
+    assert_eq!(bsp, fused, "fused GEMM+RS must agree bitwise with the BSP composition");
+    let worst = gemm_rs::gather_output(&fused).max_abs_diff(&expect2);
+    println!("  fused == BSP bitwise; max error vs dense reference {worst:.2e} (ragged N/K)");
+
+    println!("\n== down-projection on the model (N=8192, K=28672, W=8) ==");
+    for m in [64usize, 1024, 8192] {
+        let c = GemmRsConfig::paper_down_proj(m);
+        let b = rs_sim::mean_latency_s(&c, &hw, GemmRsStrategy::BaselineBsp, 11, 30) * 1e3;
+        let f = rs_sim::mean_latency_s(&c, &hw, GemmRsStrategy::FusedTiles, 11, 30) * 1e3;
+        println!("  M={m:<5} bsp {b:.4} ms  fused {f:.4} ms  ({:.3}x)", b / f);
+    }
+    println!("\nno BSP barrier anywhere in the layer: AG+GEMM up, fused GEMM+RS down.");
 }

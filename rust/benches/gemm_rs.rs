@@ -1,0 +1,61 @@
+//! Bench: the TP-MLP down-projection figure (BSP GEMM→ReduceScatter vs
+//! the fused pipeline) on the calibrated model, plus wall-clock throughput
+//! of the *functional* fused GEMM+RS protocol with real data movement.
+//! criterion is unavailable offline; this is a `harness = false` bench
+//! reporting through the crate's own Summary/Table.
+//!
+//! Run: `cargo bench --offline --bench gemm_rs`
+
+use taxfree::clock::measure;
+use taxfree::config::{presets, GemmRsConfig};
+use taxfree::coordinator::{gemm_rs, GemmRsStrategy};
+use taxfree::experiments::ext_gemm_rs;
+use taxfree::tensor::Tensor;
+use taxfree::util::{Prng, Summary, Table};
+
+fn main() {
+    let hw = presets::mi325x();
+    let seed = 7;
+
+    // the modeled figure (paper-shaped down-projection)
+    let rows = ext_gemm_rs::sweep(&hw, seed, 50);
+    ext_gemm_rs::render(&rows, &hw).print();
+    let worst_bsp_tax = rows.iter().map(|r| r.bsp_bulk_sync_us).fold(0.0f64, f64::max);
+    println!(
+        "\nfused bulk-sync tax: 0 at every M (BSP pays up to {worst_bsp_tax:.1} us of rank-idle)"
+    );
+
+    // functional: per-op wall latency of the real-data protocols
+    let cfg = GemmRsConfig { m: 8, n: 50, k: 66, world: 4, block_n: 8 };
+    let mut rng = Prng::new(5);
+    let a = Tensor::rand(&[cfg.m, cfg.k], 1.0, &mut rng);
+    let b = Tensor::rand(&[cfg.k, cfg.n], 1.0, &mut rng);
+    let mut t = Table::new("functional gemm_rs (M=8,N=50,K=66,W=4)").header(vec![
+        "strategy",
+        "per-op",
+    ]);
+    for strategy in GemmRsStrategy::ALL {
+        let rounds = 20u64;
+        let timer = taxfree::clock::WallTimer::start();
+        let _ = gemm_rs::run(&cfg, strategy, &a, &b, rounds);
+        t.row(vec![
+            strategy.name().to_string(),
+            format!("{:.1} us", timer.elapsed_s() / rounds as f64 * 1e6),
+        ]);
+    }
+    println!();
+    t.print();
+
+    // harness cost: how fast the DES regenerates the whole figure
+    let samples = measure(2, 10, || {
+        let r = ext_gemm_rs::sweep(&hw, seed, 10);
+        assert_eq!(r.len(), ext_gemm_rs::M_SWEEP.len());
+    });
+    let s = Summary::of(&samples);
+    println!(
+        "\nbench gemm_rs: full figure ({} M-points x 2 strategies x 10 iters) in {:.2} ms mean, {:.2} ms p99",
+        ext_gemm_rs::M_SWEEP.len(),
+        s.mean / 1e6,
+        s.p99 / 1e6
+    );
+}

@@ -22,8 +22,22 @@
 //! no flag reset. Repeated rounds with *changing payloads* additionally
 //! need a barrier between rounds (data slots are reused; the coordinator
 //! strategies barrier per iteration per the §5.1 measurement protocol).
+//!
+//! **Ragged lengths.** `all_reduce_sum` and `reduce_scatter_sum` accept
+//! any `send.len()` — when `n % world != 0` the scatter segments follow
+//! [`crate::util::partition`] (first `n % world` segments one element
+//! longer) and staging slots are strided by `ceil(n / world)`. Their
+//! `data_buf` therefore needs `2 * world * ceil(n/world)` /
+//! `world * ceil(n/world)` elements respectively (identical to the old
+//! requirement when `world` divides `n`). The ring variant still requires
+//! even division (a ring step forwards fixed-width segments).
+//!
+//! Iris heap/device errors are typed ([`crate::iris::IrisError`]); the
+//! collectives treat them as fatal protocol bugs and `expect()` them,
+//! which fails the engine loudly with the structured message.
 
 use crate::iris::RankCtx;
+use crate::util::partition;
 
 /// Direct (clique) all-gather with push semantics and flag completion.
 /// Rank r stores its `send` segment into slot r of every peer's `data_buf`
@@ -39,20 +53,20 @@ pub fn all_gather_push(
 ) -> Vec<f32> {
     let (r, w) = (ctx.rank(), ctx.world());
     let len = send.len();
-    debug_assert_eq!(ctx.heap().buffer_len(data_buf) % w, 0);
+    debug_assert_eq!(ctx.heap().buffer_len(data_buf).expect("all_gather data_buf") % w, 0);
     // own segment: local copy
-    ctx.store_local(data_buf, r * len, send);
-    ctx.signal(r, flag_buf, r);
+    ctx.store_local(data_buf, r * len, send).expect("all_gather_push local store");
+    ctx.signal(r, flag_buf, r).expect("all_gather_push local signal");
     // push to peers (staggered order to spread link load)
     for d in ctx.peers() {
-        ctx.remote_store(d, data_buf, r * len, send);
-        ctx.signal(d, flag_buf, r);
+        ctx.remote_store(d, data_buf, r * len, send).expect("all_gather_push remote store");
+        ctx.signal(d, flag_buf, r).expect("all_gather_push remote signal");
     }
     // fine-grained completion: wait per source
     for s in 0..w {
         ctx.wait_flag_ge(flag_buf, s, round).expect("all_gather_push wait");
     }
-    ctx.load_local_vec(data_buf, 0, w * len)
+    ctx.load_local_vec(data_buf, 0, w * len).expect("all_gather_push load")
 }
 
 /// Direct all-gather with pull semantics: rank r publishes its segment
@@ -68,16 +82,16 @@ pub fn all_gather_pull(
     let (r, w) = (ctx.rank(), ctx.world());
     let len = send.len();
     // publish own segment in own region, then announce to all peers
-    ctx.store_local(data_buf, r * len, send);
-    ctx.signal(r, flag_buf, r);
+    ctx.store_local(data_buf, r * len, send).expect("all_gather_pull publish");
+    ctx.signal(r, flag_buf, r).expect("all_gather_pull local signal");
     for d in ctx.peers() {
-        ctx.signal(d, flag_buf, r);
+        ctx.signal(d, flag_buf, r).expect("all_gather_pull announce");
     }
     let mut out = vec![0.0f32; w * len];
     out[r * len..(r + 1) * len].copy_from_slice(send);
     for s in ctx.peers().collect::<Vec<_>>() {
         ctx.wait_flag_ge(flag_buf, s, round).expect("all_gather_pull wait");
-        let seg = ctx.remote_load_vec(s, data_buf, s * len, len);
+        let seg = ctx.remote_load_vec(s, data_buf, s * len, len).expect("all_gather_pull load");
         out[s * len..(s + 1) * len].copy_from_slice(&seg);
     }
     out
@@ -95,23 +109,23 @@ pub fn all_gather_ring(
 ) -> Vec<f32> {
     let (r, w) = (ctx.rank(), ctx.world());
     let len = send.len();
-    ctx.store_local(data_buf, r * len, send);
+    ctx.store_local(data_buf, r * len, send).expect("all_gather_ring publish");
     let next = (r + 1) % w;
     // flags: flag_buf[s] on this rank means "segment of source s arrived"
-    let base = (round - 1) * (w as u64 - 1);
-    let _ = base;
     for step in 0..w.saturating_sub(1) {
         // segment that originated at (r - step) mod w is ready locally
         let src_seg = (r + w - step) % w;
-        let seg = ctx.load_local_vec(data_buf, src_seg * len, len);
-        ctx.remote_store(next, data_buf, src_seg * len, &seg);
-        ctx.signal(next, flag_buf, src_seg);
+        let seg = ctx
+            .load_local_vec(data_buf, src_seg * len, len)
+            .expect("all_gather_ring local load");
+        ctx.remote_store(next, data_buf, src_seg * len, &seg).expect("all_gather_ring forward");
+        ctx.signal(next, flag_buf, src_seg).expect("all_gather_ring signal");
         // wait for the segment arriving from the predecessor this step:
         // it originated at (r - 1 - step) mod w
         let arriving = (r + w - 1 - step) % w;
         ctx.wait_flag_ge(flag_buf, arriving, round).expect("all_gather_ring wait");
     }
-    ctx.load_local_vec(data_buf, 0, w * len)
+    ctx.load_local_vec(data_buf, 0, w * len).expect("all_gather_ring load")
 }
 
 /// BSP wrapper: barrier – exchange – barrier. The RCCL-shaped call whose
@@ -130,13 +144,15 @@ pub fn all_gather_bsp(
 }
 
 /// All-reduce (sum) via reduce-scatter + all-gather over the clique.
-/// `data_buf` needs `2 * world * (len / world)` elements where
-/// `len = send.len()` (first half: scatter contribution slots; second
-/// half: gathered reduced segments — disjoint so a fast peer's gather push
-/// cannot clobber a contribution a slow rank has not reduced yet).
-/// `send.len()` must be divisible by `world`. `flag_buf` needs
-/// `2 * world` flags (first half for the scatter phase, second for the
-/// gather phase).
+///
+/// `n = send.len()` may be any length; segments follow
+/// [`crate::util::partition`] (ragged tail allowed). With
+/// `seg_max = ceil(n / world)`, `data_buf` needs `2 * world * seg_max`
+/// elements (first half: scatter contribution slots, strided `seg_max`
+/// per source; second half: gathered reduced segments — disjoint so a fast
+/// peer's gather push cannot clobber a contribution a slow rank has not
+/// reduced yet). `flag_buf` needs `2 * world` flags (first half for the
+/// scatter phase, second for the gather phase).
 pub fn all_reduce_sum(
     ctx: &RankCtx,
     send: &[f32],
@@ -146,53 +162,67 @@ pub fn all_reduce_sum(
 ) -> Vec<f32> {
     let (r, w) = (ctx.rank(), ctx.world());
     let n = send.len();
-    assert_eq!(n % w, 0, "all_reduce length {n} not divisible by world {w}");
-    let seg = n / w;
-    // Phase 1 (reduce-scatter): rank r owns segment r. Everyone pushes
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = partition(n, w);
+    let seg_max = n.div_ceil(w);
+    // Phase 1 (reduce-scatter): rank s owns segment s. Everyone pushes
     // their copy of segment s into slot (src rank) of rank s's data_buf.
     for s in 0..w {
-        let piece = &send[s * seg..(s + 1) * seg];
+        let (off, len) = parts[s];
+        let piece = &send[off..off + len];
         if s == r {
-            ctx.store_local(data_buf, r * seg, piece);
-            ctx.signal(r, flag_buf, r);
+            ctx.store_local(data_buf, r * seg_max, piece).expect("all_reduce local store");
+            ctx.signal(r, flag_buf, r).expect("all_reduce local signal");
         } else {
-            ctx.remote_store(s, data_buf, r * seg, piece);
-            ctx.signal(s, flag_buf, r);
+            ctx.remote_store(s, data_buf, r * seg_max, piece).expect("all_reduce remote store");
+            ctx.signal(s, flag_buf, r).expect("all_reduce remote signal");
         }
     }
     // reduce own segment once all contributions arrive
-    let mut acc = vec![0.0f32; seg];
+    let (my_off, my_len) = parts[r];
+    let mut acc = vec![0.0f32; my_len];
     for src in 0..w {
         ctx.wait_flag_ge(flag_buf, src, round).expect("all_reduce scatter wait");
-        let contrib = ctx.load_local_vec(data_buf, src * seg, seg);
+        let contrib = ctx
+            .load_local_vec(data_buf, src * seg_max, my_len)
+            .expect("all_reduce contribution load");
         for (a, c) in acc.iter_mut().zip(&contrib) {
             *a += c;
         }
     }
     // Phase 2: all-gather the reduced segments into the second half of
-    // data_buf (slots w*seg ..) using flags w..2w.
-    let gather_base = w * seg;
+    // data_buf (slots strided seg_max from base world*seg_max) using flags
+    // w..2w.
+    let gather_base = w * seg_max;
     let mut out = vec![0.0f32; n];
-    out[r * seg..(r + 1) * seg].copy_from_slice(&acc);
-    ctx.store_local(data_buf, gather_base + r * seg, &acc);
-    ctx.signal(r, flag_buf, w + r);
+    out[my_off..my_off + my_len].copy_from_slice(&acc);
+    ctx.store_local(data_buf, gather_base + r * seg_max, &acc).expect("all_reduce gather store");
+    ctx.signal(r, flag_buf, w + r).expect("all_reduce gather local signal");
     for d in ctx.peers() {
-        ctx.remote_store(d, data_buf, gather_base + r * seg, &acc);
-        ctx.signal(d, flag_buf, w + r);
+        ctx.remote_store(d, data_buf, gather_base + r * seg_max, &acc)
+            .expect("all_reduce gather push");
+        ctx.signal(d, flag_buf, w + r).expect("all_reduce gather signal");
     }
     for s in 0..w {
         ctx.wait_flag_ge(flag_buf, w + s, round).expect("all_reduce gather wait");
         if s != r {
-            let piece = ctx.load_local_vec(data_buf, gather_base + s * seg, seg);
-            out[s * seg..(s + 1) * seg].copy_from_slice(&piece);
+            let (off, len) = parts[s];
+            let piece = ctx
+                .load_local_vec(data_buf, gather_base + s * seg_max, len)
+                .expect("all_reduce gather load");
+            out[off..off + len].copy_from_slice(&piece);
         }
     }
     out
 }
 
-/// Reduce-scatter (sum): returns this rank's reduced segment
-/// (`send.len() / world` elements). Buffer requirements as
-/// [`all_reduce_sum`], flags `world`.
+/// Reduce-scatter (sum): returns this rank's reduced segment (segment `r`
+/// of [`crate::util::partition`]`(send.len(), world)` — ragged lengths
+/// allowed, so the segment may even be empty when `n < world`).
+/// `data_buf` needs `world * ceil(n/world)` elements, `flag_buf` `world`
+/// flags.
 pub fn reduce_scatter_sum(
     ctx: &RankCtx,
     send: &[f32],
@@ -202,22 +232,30 @@ pub fn reduce_scatter_sum(
 ) -> Vec<f32> {
     let (r, w) = (ctx.rank(), ctx.world());
     let n = send.len();
-    assert_eq!(n % w, 0);
-    let seg = n / w;
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = partition(n, w);
+    let seg_max = n.div_ceil(w);
     for s in 0..w {
-        let piece = &send[s * seg..(s + 1) * seg];
+        let (off, len) = parts[s];
+        let piece = &send[off..off + len];
         if s == r {
-            ctx.store_local(data_buf, r * seg, piece);
-            ctx.signal(r, flag_buf, r);
+            ctx.store_local(data_buf, r * seg_max, piece).expect("reduce_scatter local store");
+            ctx.signal(r, flag_buf, r).expect("reduce_scatter local signal");
         } else {
-            ctx.remote_store(s, data_buf, r * seg, piece);
-            ctx.signal(s, flag_buf, r);
+            ctx.remote_store(s, data_buf, r * seg_max, piece)
+                .expect("reduce_scatter remote store");
+            ctx.signal(s, flag_buf, r).expect("reduce_scatter remote signal");
         }
     }
-    let mut acc = vec![0.0f32; seg];
+    let my_len = parts[r].1;
+    let mut acc = vec![0.0f32; my_len];
     for src in 0..w {
         ctx.wait_flag_ge(flag_buf, src, round).expect("reduce_scatter wait");
-        let contrib = ctx.load_local_vec(data_buf, src * seg, seg);
+        let contrib = ctx
+            .load_local_vec(data_buf, src * seg_max, my_len)
+            .expect("reduce_scatter contribution load");
         for (a, c) in acc.iter_mut().zip(&contrib) {
             *a += c;
         }
@@ -241,16 +279,18 @@ pub fn all_to_all(
     assert_eq!(send.len() % w, 0, "all_to_all length {} not divisible by {w}", send.len());
     let seg = send.len() / w;
     // deliver my segment d into rank d's slot r
-    ctx.store_local(data_buf, r * seg, &send[r * seg..(r + 1) * seg]);
-    ctx.signal(r, flag_buf, r);
+    ctx.store_local(data_buf, r * seg, &send[r * seg..(r + 1) * seg])
+        .expect("all_to_all local store");
+    ctx.signal(r, flag_buf, r).expect("all_to_all local signal");
     for d in ctx.peers() {
-        ctx.remote_store(d, data_buf, r * seg, &send[d * seg..(d + 1) * seg]);
-        ctx.signal(d, flag_buf, r);
+        ctx.remote_store(d, data_buf, r * seg, &send[d * seg..(d + 1) * seg])
+            .expect("all_to_all remote store");
+        ctx.signal(d, flag_buf, r).expect("all_to_all remote signal");
     }
     let mut out = vec![0.0f32; w * seg];
     for s in 0..w {
         ctx.wait_flag_ge(flag_buf, s, round).expect("all_to_all wait");
-        let piece = ctx.load_local_vec(data_buf, s * seg, seg);
+        let piece = ctx.load_local_vec(data_buf, s * seg, seg).expect("all_to_all load");
         out[s * seg..(s + 1) * seg].copy_from_slice(&piece);
     }
     out
@@ -261,7 +301,8 @@ pub fn all_to_all(
 /// topology RCCL uses at scale. Returns this rank's fully-reduced segment
 /// (`send.len() / world` elements). `data_buf` needs `world * seg`
 /// elements (step-indexed staging slots); `flag_buf` needs `world` flags,
-/// each incremented once per round per step.
+/// each incremented once per round per step. Unlike the direct variant,
+/// the ring requires `world | send.len()` (fixed-width forwarding).
 pub fn reduce_scatter_ring(
     ctx: &RankCtx,
     send: &[f32],
@@ -270,7 +311,7 @@ pub fn reduce_scatter_ring(
     round: u64,
 ) -> Vec<f32> {
     let (r, w) = (ctx.rank(), ctx.world());
-    assert_eq!(send.len() % w, 0);
+    assert_eq!(send.len() % w, 0, "reduce_scatter_ring needs world | n; use reduce_scatter_sum");
     let seg = send.len() / w;
     let next = (r + 1) % w;
     // step t: rank r sends its running sum of segment (r - t - 1) to next,
@@ -279,12 +320,15 @@ pub fn reduce_scatter_ring(
     let mut acc: Vec<Vec<f32>> = (0..w).map(|s| send[s * seg..(s + 1) * seg].to_vec()).collect();
     for step in 0..w.saturating_sub(1) {
         let send_seg = (r + w - step + w - 1) % w; // (r - 1 - step) mod w
-        ctx.remote_store(next, data_buf, send_seg * seg, &acc[send_seg]);
-        ctx.signal(next, flag_buf, send_seg);
+        ctx.remote_store(next, data_buf, send_seg * seg, &acc[send_seg])
+            .expect("reduce_scatter_ring forward");
+        ctx.signal(next, flag_buf, send_seg).expect("reduce_scatter_ring signal");
         let recv_seg = (r + w - step + w - 2) % w; // (r - 2 - step) mod w
         // each segment passes through this rank exactly once per round
         ctx.wait_flag_ge(flag_buf, recv_seg, round).expect("reduce_scatter_ring wait");
-        let incoming = ctx.load_local_vec(data_buf, recv_seg * seg, seg);
+        let incoming = ctx
+            .load_local_vec(data_buf, recv_seg * seg, seg)
+            .expect("reduce_scatter_ring load");
         for (a, b) in acc[recv_seg].iter_mut().zip(&incoming) {
             *a += b;
         }
@@ -304,16 +348,16 @@ pub fn broadcast(
 ) -> Vec<f32> {
     let r = ctx.rank();
     if r == root {
-        ctx.store_local(data_buf, 0, data);
-        ctx.signal(r, flag_buf, 0);
+        ctx.store_local(data_buf, 0, data).expect("broadcast local store");
+        ctx.signal(r, flag_buf, 0).expect("broadcast local signal");
         for d in ctx.peers() {
-            ctx.remote_store(d, data_buf, 0, data);
-            ctx.signal(d, flag_buf, 0);
+            ctx.remote_store(d, data_buf, 0, data).expect("broadcast remote store");
+            ctx.signal(d, flag_buf, 0).expect("broadcast remote signal");
         }
         data.to_vec()
     } else {
         ctx.wait_flag_ge(flag_buf, 0, round).expect("broadcast wait");
-        ctx.load_local_vec(data_buf, 0, data.len())
+        ctx.load_local_vec(data_buf, 0, data.len()).expect("broadcast load")
     }
 }
 
@@ -410,16 +454,21 @@ mod tests {
         }
     }
 
+    fn reduce_heap(world: usize, n: usize) -> Arc<crate::iris::SymmetricHeap> {
+        let seg_max = n.div_ceil(world);
+        Arc::new(
+            HeapBuilder::new(world)
+                .buffer("ar", 2 * world * seg_max)
+                .flags("arf", 2 * world)
+                .build(),
+        )
+    }
+
     #[test]
     fn all_reduce_sum_correct() {
         for world in [2usize, 4, 8] {
             let n = world * 3;
-            let heap = Arc::new(
-                HeapBuilder::new(world)
-                    .buffer("ar", 2 * n)
-                    .flags("arf", 2 * world)
-                    .build(),
-            );
+            let heap = reduce_heap(world, n);
             let outs = run_node(heap, move |ctx| {
                 let send: Vec<f32> = (0..n).map(|i| (ctx.rank() + i) as f32).collect();
                 all_reduce_sum(&ctx, &send, "ar", "arf", 1)
@@ -430,6 +479,45 @@ mod tests {
             for (r, o) in outs.iter().enumerate() {
                 assert_eq!(o, &expect, "world {world} rank {r}");
             }
+        }
+    }
+
+    #[test]
+    fn all_reduce_sum_ragged_lengths() {
+        // d_model need not divide by world: n % world != 0 everywhere here
+        for (world, n) in [(2usize, 7usize), (4, 10), (4, 33), (3, 2), (8, 5)] {
+            let heap = reduce_heap(world, n);
+            let outs = run_node(heap, move |ctx| {
+                let send: Vec<f32> = (0..n).map(|i| ((ctx.rank() + 1) * (i + 2)) as f32).collect();
+                all_reduce_sum(&ctx, &send, "ar", "arf", 1)
+            });
+            let factor: usize = (1..=world).sum();
+            let expect: Vec<f32> = (0..n).map(|i| (factor * (i + 2)) as f32).collect();
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(o, &expect, "world {world} n {n} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_repeated_rounds_ragged() {
+        let (world, n) = (4usize, 9usize);
+        let heap = reduce_heap(world, n);
+        let outs = run_node(heap, move |ctx| {
+            let mut last = Vec::new();
+            for round in 1..=5u64 {
+                let send: Vec<f32> =
+                    (0..n).map(|i| (ctx.rank() * n + i) as f32 + round as f32).collect();
+                last = all_reduce_sum(&ctx, &send, "ar", "arf", round);
+                ctx.barrier(); // payload changes between rounds
+            }
+            last
+        });
+        let expect: Vec<f32> = (0..n)
+            .map(|i| (0..world).map(|r| (r * n + i) as f32 + 5.0).sum())
+            .collect();
+        for o in outs {
+            assert_eq!(o, expect);
         }
     }
 
@@ -450,6 +538,34 @@ mod tests {
             let expect: Vec<f32> =
                 (0..seg).map(|j| (rank_factor * (r * seg + j + 1)) as f32).collect();
             assert_eq!(o, &expect, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_ragged_segments_cover_everything() {
+        for (world, n) in [(4usize, 10usize), (3, 7), (4, 2), (5, 13)] {
+            let seg_max = n.div_ceil(world);
+            let heap = Arc::new(
+                HeapBuilder::new(world)
+                    .buffer("rs", world * seg_max)
+                    .flags("rsf", world)
+                    .build(),
+            );
+            let outs = run_node(heap, move |ctx| {
+                let send: Vec<f32> =
+                    (0..n).map(|i| ((ctx.rank() + 1) * (i + 1)) as f32).collect();
+                reduce_scatter_sum(&ctx, &send, "rs", "rsf", 1)
+            });
+            let parts = crate::util::partition(n, world);
+            let rank_factor: usize = (1..=world).sum();
+            // concatenating every rank's segment reproduces the full sum
+            let mut got = Vec::new();
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(o.len(), parts[r].1, "world {world} n {n} rank {r}");
+                got.extend_from_slice(o);
+            }
+            let expect: Vec<f32> = (0..n).map(|i| (rank_factor * (i + 1)) as f32).collect();
+            assert_eq!(got, expect, "world {world} n {n}");
         }
     }
 

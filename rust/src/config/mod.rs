@@ -90,6 +90,93 @@ impl AgGemmConfig {
     }
 }
 
+/// Fused GEMM + Reduce-Scatter workload parameters (the mirror of
+/// [`AgGemmConfig`]: the row-parallel down-projection of a tensor-parallel
+/// MLP). A (M, K) is column-sharded over `world` (rank r holds A_r), B
+/// (K, N) is row-sharded (rank r holds B_r); the full product is
+/// `C = Σ_r A_r · B_r`, and the reduction is scattered over N so rank s
+/// ends up owning column segment s of the sum.
+///
+/// Unlike the all-gather direction, **both K and N may be ragged**: shard
+/// and scatter segments follow [`crate::util::partition`], so `d_model`
+/// and `ffn_hidden` need not divide by the world size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GemmRsConfig {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub world: usize,
+    /// Tile width (columns) of one fused push: the communication
+    /// granularity of the producer-consumer pipeline.
+    pub block_n: usize,
+}
+
+impl GemmRsConfig {
+    /// A Llama-70B-class down-projection at a given M: the transpose shape
+    /// of [`AgGemmConfig::paper_fig9`] (K and N swap roles on the way back
+    /// down from the FFN hidden dimension).
+    pub fn paper_down_proj(m: usize) -> GemmRsConfig {
+        GemmRsConfig { m, n: 8192, k: 28672, world: 8, block_n: 256 }
+    }
+
+    /// Small configuration for tests. K and N are deliberately *not*
+    /// multiples of typical world sizes (ragged path always exercised).
+    pub fn tiny(world: usize) -> GemmRsConfig {
+        GemmRsConfig { m: 3, n: 10, k: 11, world, block_n: 3 }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.world == 0 {
+            return Err("world must be >= 1".into());
+        }
+        if self.m == 0 || self.n == 0 || self.k == 0 {
+            return Err("M, N, K must be positive".into());
+        }
+        if self.block_n == 0 {
+            return Err("block_n must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// Column partition of the output (who owns which reduced segment).
+    pub fn n_partition(&self) -> Vec<(usize, usize)> {
+        crate::util::partition(self.n, self.world)
+    }
+
+    /// Row/column partition of the contracted dimension K across ranks.
+    pub fn k_partition(&self) -> Vec<(usize, usize)> {
+        crate::util::partition(self.k, self.world)
+    }
+
+    /// Widest scatter segment (staging-slot stride on the heap).
+    pub fn seg_max(&self) -> usize {
+        self.n.div_ceil(self.world)
+    }
+
+    /// Tiles in the widest segment (flag-array stride per producer).
+    pub fn tiles_max(&self) -> usize {
+        self.seg_max().div_ceil(self.block_n).max(1)
+    }
+
+    /// Column tiles (col offset, width) of a scatter segment of `len`
+    /// columns — the single source of tile geometry shared by the
+    /// functional coordinator and the DES timing twin, so they can never
+    /// disagree on tile counts or flag indices.
+    pub fn seg_tiles(&self, len: usize) -> Vec<(usize, usize)> {
+        (0..len.div_ceil(self.block_n))
+            .map(|t| {
+                let c0 = t * self.block_n;
+                (c0, (len - c0).min(self.block_n))
+            })
+            .collect()
+    }
+
+    /// FLOPs of the full GEMM (2·M·N·K).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+}
+
 /// Flash-Decode workload parameters (paper §4.2 / §5.3, Figs. 10–11).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlashDecodeConfig {
@@ -286,7 +373,29 @@ mod tests {
         for w in 1..=8 {
             AgGemmConfig::tiny(w).validate().unwrap();
             FlashDecodeConfig::tiny(w).validate().unwrap();
+            GemmRsConfig::tiny(w).validate().unwrap();
         }
+    }
+
+    #[test]
+    fn gemm_rs_partitions_are_consistent() {
+        for m in [1usize, 64, 4096] {
+            GemmRsConfig::paper_down_proj(m).validate().unwrap();
+        }
+        let cfg = GemmRsConfig::tiny(4); // n=10, k=11: both ragged
+        let np = cfg.n_partition();
+        assert_eq!(np.iter().map(|(_, l)| l).sum::<usize>(), cfg.n);
+        assert_eq!(np.len(), cfg.world);
+        let kp = cfg.k_partition();
+        assert_eq!(kp.iter().map(|(_, l)| l).sum::<usize>(), cfg.k);
+        assert_eq!(cfg.seg_max(), 3);
+        assert_eq!(cfg.tiles_max(), 1);
+        let wide = GemmRsConfig { m: 2, n: 40, k: 8, world: 4, block_n: 3 };
+        assert_eq!(wide.seg_max(), 10);
+        assert_eq!(wide.tiles_max(), 4);
+        assert_eq!(wide.seg_tiles(10), vec![(0, 3), (3, 3), (6, 3), (9, 1)]);
+        assert_eq!(wide.seg_tiles(3), vec![(0, 3)]);
+        assert_eq!(wide.seg_tiles(0), Vec::<(usize, usize)>::new());
     }
 
     #[test]

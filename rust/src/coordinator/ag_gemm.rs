@@ -135,7 +135,7 @@ fn engine_body(
     let p = Panels::of(cfg);
     // publish own shard in own heap region once (weights/activations are
     // resident before the operation starts)
-    ctx.store_local(BUF_SHARD, 0, a_shard_pm);
+    ctx.store_local(BUF_SHARD, 0, a_shard_pm).expect("publish A shard");
     ctx.barrier();
 
     let mut c = Tensor::zeros(&[cfg.m, cfg.n]);
@@ -176,8 +176,9 @@ fn pull_round(ctx: &RankCtx, cfg: &AgGemmConfig, p: Panels, b: &Tensor) -> Tenso
     for s in 0..cfg.world {
         for panel in 0..p.n_panels {
             // RemotePull(A_s(k)) — local copy when s == rank
-            let a_panel =
-                ctx.remote_load_vec(s, BUF_SHARD, panel * p.panel_elems, p.panel_elems);
+            let a_panel = ctx
+                .remote_load_vec(s, BUF_SHARD, panel * p.panel_elems, p.panel_elems)
+                .expect("pull A panel");
             let b_rows = b_rows_for(b, cfg, s, panel);
             gemm_tile_acc_prequant(&mut acc, &a_panel, b_rows.data(), p.m, p.block_k, cfg.n);
         }
@@ -204,11 +205,13 @@ fn push_round(
     for panel in 0..p.n_panels {
         let tile = &a_shard_pm[panel * p.panel_elems..(panel + 1) * p.panel_elems];
         // own inbox slot first (RemotePush is a local copy for s == r)
-        ctx.store_local(BUF_INBOX, r * shard_elems + panel * p.panel_elems, tile);
-        ctx.signal(r, FLAGS_PANEL, r * p.n_panels + panel);
+        ctx.store_local(BUF_INBOX, r * shard_elems + panel * p.panel_elems, tile)
+            .expect("push panel to own inbox");
+        ctx.signal(r, FLAGS_PANEL, r * p.n_panels + panel).expect("signal own panel");
         for d in ctx.peers() {
-            ctx.remote_store(d, BUF_INBOX, r * shard_elems + panel * p.panel_elems, tile);
-            ctx.signal(d, FLAGS_PANEL, r * p.n_panels + panel);
+            ctx.remote_store(d, BUF_INBOX, r * shard_elems + panel * p.panel_elems, tile)
+                .expect("push panel to peer");
+            ctx.signal(d, FLAGS_PANEL, r * p.n_panels + panel).expect("signal peer panel");
         }
     }
 
@@ -219,7 +222,8 @@ fn push_round(
             ctx.wait_flag_ge(FLAGS_PANEL, s * p.n_panels + panel, round)
                 .expect("push-model panel wait");
             let base = s * shard_elems + panel * p.panel_elems;
-            let a_panel = ctx.load_local_vec(BUF_INBOX, base, p.panel_elems);
+            let a_panel =
+                ctx.load_local_vec(BUF_INBOX, base, p.panel_elems).expect("load inbox panel");
             let b_rows = b_rows_for(b, cfg, s, panel);
             gemm_tile_acc_prequant(&mut acc, &a_panel, b_rows.data(), p.m, p.block_k, cfg.n);
         }

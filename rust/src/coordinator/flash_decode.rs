@@ -118,11 +118,11 @@ fn fine_grained_round(
     let wire = p.to_wire();
 
     // producer side: deliver to own inbox + all peers, signalling per tile
-    ctx.store_local(BUF_INBOX, r * wl, &wire);
-    ctx.signal(r, FLAGS_PARTIAL, r);
+    ctx.store_local(BUF_INBOX, r * wl, &wire).expect("publish own partial");
+    ctx.signal(r, FLAGS_PARTIAL, r).expect("signal own partial");
     for d in ctx.peers() {
-        ctx.remote_store(d, BUF_INBOX, r * wl, &wire);
-        ctx.signal(d, FLAGS_PARTIAL, r);
+        ctx.remote_store(d, BUF_INBOX, r * wl, &wire).expect("push partial");
+        ctx.signal(d, FLAGS_PARTIAL, r).expect("signal partial");
     }
 
     // consumer side: fine-grained waits — fold in source s as soon as its
@@ -131,7 +131,7 @@ fn fine_grained_round(
     comb.add(&p);
     for s in ctx.peers().collect::<Vec<_>>() {
         ctx.wait_flag_ge(FLAGS_PARTIAL, s, round).expect("fine-grained wait");
-        let data = ctx.load_local_vec(BUF_INBOX, s * wl, wl);
+        let data = ctx.load_local_vec(BUF_INBOX, s * wl, wl).expect("load partial");
         comb.add(&PartialState::from_wire(&data, cfg.q_heads, cfg.head_dim));
     }
     comb.finish()
@@ -160,19 +160,19 @@ fn fused_round(
     let p = local_partial(cfg, q, k, v);
     let wire = p.to_wire();
     for d in ctx.peers() {
-        ctx.remote_store(d, BUF_INBOX, r * wl, &wire);
-        ctx.signal(d, FLAGS_PARTIAL, r);
+        ctx.remote_store(d, BUF_INBOX, r * wl, &wire).expect("fused push partial");
+        ctx.signal(d, FLAGS_PARTIAL, r).expect("fused signal partial");
     }
     // own slot is a local copy
-    ctx.store_local(BUF_INBOX, r * wl, &wire);
-    ctx.signal(r, FLAGS_PARTIAL, r);
+    ctx.store_local(BUF_INBOX, r * wl, &wire).expect("fused publish own partial");
+    ctx.signal(r, FLAGS_PARTIAL, r).expect("fused signal own partial");
 
     // Part 2: concurrent global reduction (spin-wait per source, fold on
     // arrival; iteration order staggered by rank)
     let mut comb = OnlineCombiner::new(cfg.q_heads, cfg.head_dim);
     for s in std::iter::once(r).chain(ctx.peers()) {
         ctx.wait_flag_ge(FLAGS_PARTIAL, s, round).expect("fused reduction wait");
-        let data = ctx.load_local_vec(BUF_INBOX, s * wl, wl);
+        let data = ctx.load_local_vec(BUF_INBOX, s * wl, wl).expect("fused load partial");
         comb.add(&PartialState::from_wire(&data, cfg.q_heads, cfg.head_dim));
     }
     comb.finish()

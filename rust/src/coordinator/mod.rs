@@ -3,6 +3,9 @@
 //! timing model in [`crate::workloads`]).
 //!
 //! * [`ag_gemm`] — All-Gather + GEMM (paper §4.1): baseline / pull / push;
+//! * [`gemm_rs`] — fused GEMM + Reduce-Scatter (the mirror pattern: the
+//!   row-parallel down-projection whose partial products are summed across
+//!   ranks), BSP composition vs tile-granular fused pipeline;
 //! * [`flash_decode`] — distributed Flash Decode (paper §4.2): the four
 //!   evolutionary stages from RCCL-BSP to fully fused.
 //!
@@ -15,6 +18,8 @@
 pub mod ag_gemm;
 pub mod autotune;
 pub mod flash_decode;
+pub mod gemm_rs;
 
 pub use ag_gemm::AgGemmStrategy;
 pub use flash_decode::FlashDecodeStrategy;
+pub use gemm_rs::GemmRsStrategy;

@@ -1,0 +1,121 @@
+//! Extension figure: the TP-MLP down-projection — BSP GEMM→ReduceScatter
+//! vs the fused GEMM+RS pipeline across M, with the bulk-synchronous tax
+//! each pays. The mirror of Figure 9 for the reduce direction: together
+//! they cover both collectives of a tensor-parallel transformer layer
+//! (all-gather up, reduce-scatter down), leaving no BSP barrier anywhere
+//! in the layer.
+
+use crate::config::{GemmRsConfig, HwConfig};
+use crate::coordinator::GemmRsStrategy;
+use crate::util::Table;
+use crate::workloads::gemm_rs;
+
+/// One row of the GEMM+RS figure.
+#[derive(Debug, Clone)]
+pub struct GemmRsRow {
+    pub m: usize,
+    pub bsp_ms: f64,
+    pub fused_ms: f64,
+    pub speedup: f64,
+    /// Bulk-synchronous tax (summed rank-seconds) of one representative
+    /// simulated iteration per strategy.
+    pub bsp_bulk_sync_us: f64,
+    pub fused_bulk_sync_us: f64,
+}
+
+/// The M sweep (decode batch through prefill-sized M).
+pub const M_SWEEP: [usize; 8] = [1, 16, 64, 256, 1024, 2048, 4096, 8192];
+
+/// Run the sweep: paper-shaped down-projection (N=8192, K=28672, W=8).
+pub fn sweep(hw: &HwConfig, seed: u64, iters: usize) -> Vec<GemmRsRow> {
+    M_SWEEP
+        .iter()
+        .map(|&m| {
+            let cfg = GemmRsConfig::paper_down_proj(m);
+            let bsp_ms =
+                gemm_rs::mean_latency_s(&cfg, hw, GemmRsStrategy::BaselineBsp, seed, iters) * 1e3;
+            let fused_ms =
+                gemm_rs::mean_latency_s(&cfg, hw, GemmRsStrategy::FusedTiles, seed, iters) * 1e3;
+            let bsp_led = gemm_rs::simulate(&cfg, hw, GemmRsStrategy::BaselineBsp, seed).ledger;
+            let fused_led = gemm_rs::simulate(&cfg, hw, GemmRsStrategy::FusedTiles, seed).ledger;
+            GemmRsRow {
+                m,
+                bsp_ms,
+                fused_ms,
+                speedup: bsp_ms / fused_ms,
+                bsp_bulk_sync_us: bsp_led.bulk_sync_s * 1e6,
+                fused_bulk_sync_us: fused_led.bulk_sync_s * 1e6,
+            }
+        })
+        .collect()
+}
+
+/// Render the figure as a table.
+pub fn render(rows: &[GemmRsRow], hw: &HwConfig) -> Table {
+    let mut t = Table::new(&format!(
+        "TP-MLP down-projection — BSP GEMM->RS vs fused (N=8192, K=28672, W=8, {})",
+        hw.name
+    ))
+    .header(vec!["M", "bsp ms", "fused ms", "fused x", "bsp bulk-sync us", "fused bulk-sync us"]);
+    for r in rows {
+        t.row(vec![
+            r.m.to_string(),
+            format!("{:.4}", r.bsp_ms),
+            format!("{:.4}", r.fused_ms),
+            format!("{:.3}", r.speedup),
+            format!("{:.2}", r.bsp_bulk_sync_us),
+            format!("{:.2}", r.fused_bulk_sync_us),
+        ]);
+    }
+    t
+}
+
+/// Run and print the figure (the `experiments gemm_rs` subcommand).
+pub fn run(hw: &HwConfig, seed: u64, iters: usize) {
+    let rows = sweep(hw, seed, iters);
+    render(&rows, hw).print();
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn fused_pays_strictly_less_bulk_sync_everywhere() {
+        // the PR's acceptance criterion, at figure scope: the fused
+        // pipeline's bulk-synchronous tax is strictly below the BSP
+        // composition's at every M
+        let rows = sweep(&presets::mi325x(), 1, 5);
+        assert_eq!(rows.len(), M_SWEEP.len());
+        for r in &rows {
+            assert!(r.bsp_bulk_sync_us > 0.0, "M={}: BSP must pay bulk-sync", r.m);
+            assert!(
+                r.fused_bulk_sync_us < r.bsp_bulk_sync_us,
+                "M={}: fused {} !< bsp {}",
+                r.m,
+                r.fused_bulk_sync_us,
+                r.bsp_bulk_sync_us
+            );
+            assert_eq!(r.fused_bulk_sync_us, 0.0, "M={}: no barrier anywhere", r.m);
+        }
+    }
+
+    #[test]
+    fn fused_wins_at_large_m() {
+        let rows = sweep(&presets::mi325x(), 2, 10);
+        for r in rows.iter().filter(|r| r.m >= 1024) {
+            assert!(r.speedup > 1.0, "M={}: speedup {:.3}", r.m, r.speedup);
+        }
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let hw = presets::mi325x();
+        let rows = sweep(&hw, 3, 3);
+        let t = render(&rows, &hw);
+        assert_eq!(t.n_rows(), M_SWEEP.len());
+        assert!(t.render().contains("bulk-sync"));
+    }
+}

@@ -6,8 +6,9 @@
 //! (benches and integration tests call these too).
 
 pub mod ablations;
-pub mod fig10_flash_decode;
 pub mod ext_allreduce;
+pub mod ext_gemm_rs;
+pub mod fig10_flash_decode;
 pub mod fig11_scaling;
 pub mod fig2_taxes;
 pub mod fig9_ag_gemm;

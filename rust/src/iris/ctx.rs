@@ -2,6 +2,10 @@
 //! device API (`iris.load`, `iris.store`, `iris.atomic_add`, spin-waits),
 //! plus the node runner that stands up one engine thread per rank.
 //!
+//! Every fallible operation returns a typed [`IrisError`] (misnamed
+//! buffer, out-of-bounds access, bad rank, wait timeout) so coordinator
+//! code can recover or fail loudly with a structured message — its choice.
+//!
 //! Traffic accounting: every remote operation bumps the shared
 //! [`Traffic`] matrix so functional runs report fabric bytes exactly like
 //! the simulator does.
@@ -10,6 +14,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::iris::error::{IrisError, WaitTimeout};
 use crate::iris::heap::SymmetricHeap;
 
 /// Default timeout for flag waits. A correct protocol never gets near
@@ -62,17 +67,6 @@ impl Traffic {
     }
 }
 
-/// Error from a timed flag wait.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("rank {rank}: timeout waiting for {flags}[{idx}] >= {target} (last seen {seen})")]
-pub struct WaitTimeout {
-    pub rank: usize,
-    pub flags: String,
-    pub idx: usize,
-    pub target: u64,
-    pub seen: u64,
-}
-
 /// A rank engine's view of the node: its identity plus the shared heap.
 #[derive(Clone)]
 pub struct RankCtx {
@@ -110,20 +104,25 @@ impl RankCtx {
     // ---- local memory ----
 
     /// Local store (tl.store analogue).
-    pub fn store_local(&self, buf: &str, offset: usize, data: &[f32]) {
-        self.heap.store(self.rank, buf, offset, data);
+    pub fn store_local(&self, buf: &str, offset: usize, data: &[f32]) -> Result<(), IrisError> {
+        self.heap.store(self.rank, buf, offset, data)
     }
 
     /// Local load (tl.load analogue).
-    pub fn load_local(&self, buf: &str, offset: usize, out: &mut [f32]) {
-        self.heap.load(self.rank, buf, offset, out);
+    pub fn load_local(&self, buf: &str, offset: usize, out: &mut [f32]) -> Result<(), IrisError> {
+        self.heap.load(self.rank, buf, offset, out)
     }
 
     /// Local load returning a fresh Vec.
-    pub fn load_local_vec(&self, buf: &str, offset: usize, len: usize) -> Vec<f32> {
+    pub fn load_local_vec(
+        &self,
+        buf: &str,
+        offset: usize,
+        len: usize,
+    ) -> Result<Vec<f32>, IrisError> {
         let mut v = vec![0.0; len];
-        self.load_local(buf, offset, &mut v);
-        v
+        self.load_local(buf, offset, &mut v)?;
+        Ok(v)
     }
 
     // ---- remote memory (the Iris device API) ----
@@ -131,53 +130,72 @@ impl RankCtx {
     /// `iris.store`: write `data` into `dst_rank`'s copy of `buf`.
     /// fp16 on the wire (all paper kernels are fp16), hence 2 bytes/elem
     /// in the traffic matrix.
-    pub fn remote_store(&self, dst_rank: usize, buf: &str, offset: usize, data: &[f32]) {
-        assert!(dst_rank < self.world, "bad dst rank {dst_rank}");
-        self.heap.store(dst_rank, buf, offset, data);
+    pub fn remote_store(
+        &self,
+        dst_rank: usize,
+        buf: &str,
+        offset: usize,
+        data: &[f32],
+    ) -> Result<(), IrisError> {
+        self.heap.store(dst_rank, buf, offset, data)?;
         if dst_rank != self.rank {
             self.traffic.record(self.rank, dst_rank, 2 * data.len() as u64);
         }
+        Ok(())
     }
 
     /// `iris.load`: read from `src_rank`'s copy of `buf`. The calling
     /// engine blocks for the duration (consumer-driven pull semantics).
-    pub fn remote_load(&self, src_rank: usize, buf: &str, offset: usize, out: &mut [f32]) {
-        assert!(src_rank < self.world, "bad src rank {src_rank}");
-        self.heap.load(src_rank, buf, offset, out);
+    pub fn remote_load(
+        &self,
+        src_rank: usize,
+        buf: &str,
+        offset: usize,
+        out: &mut [f32],
+    ) -> Result<(), IrisError> {
+        self.heap.load(src_rank, buf, offset, out)?;
         if src_rank != self.rank {
             self.traffic.record(src_rank, self.rank, 2 * out.len() as u64);
         }
+        Ok(())
     }
 
-    pub fn remote_load_vec(&self, src_rank: usize, buf: &str, offset: usize, len: usize) -> Vec<f32> {
+    pub fn remote_load_vec(
+        &self,
+        src_rank: usize,
+        buf: &str,
+        offset: usize,
+        len: usize,
+    ) -> Result<Vec<f32>, IrisError> {
         let mut v = vec![0.0; len];
-        self.remote_load(src_rank, buf, offset, &mut v);
-        v
+        self.remote_load(src_rank, buf, offset, &mut v)?;
+        Ok(v)
     }
 
     /// `iris.atomic_add` on a remote signal flag (Release): publishes all
     /// of this engine's preceding stores to a consumer that acquires the
     /// flag.
-    pub fn signal(&self, dst_rank: usize, flags: &str, idx: usize) {
-        self.heap.flag_add(dst_rank, flags, idx, 1);
+    pub fn signal(&self, dst_rank: usize, flags: &str, idx: usize) -> Result<(), IrisError> {
+        self.heap.flag_add(dst_rank, flags, idx, 1)?;
         if dst_rank != self.rank {
             self.traffic.record(self.rank, dst_rank, 8);
         }
+        Ok(())
     }
 
     /// Read a local flag (Acquire).
-    pub fn flag(&self, flags: &str, idx: usize) -> u64 {
+    pub fn flag(&self, flags: &str, idx: usize) -> Result<u64, IrisError> {
         self.heap.flag_read(self.rank, flags, idx)
     }
 
     /// Spin/yield-wait until local flag `idx` reaches `target`
     /// (the consumer side of the paper's fine-grained waits). Returns the
     /// flag value seen; errors after the context's timeout.
-    pub fn wait_flag_ge(&self, flags: &str, idx: usize, target: u64) -> Result<u64, WaitTimeout> {
+    pub fn wait_flag_ge(&self, flags: &str, idx: usize, target: u64) -> Result<u64, IrisError> {
         let mut spins = 0u32;
         let start = Instant::now();
         loop {
-            let v = self.heap.flag_read(self.rank, flags, idx);
+            let v = self.heap.flag_read(self.rank, flags, idx)?;
             if v >= target {
                 return Ok(v);
             }
@@ -186,13 +204,13 @@ impl RankCtx {
                 std::thread::yield_now();
             }
             if spins % 1024 == 0 && start.elapsed() > self.wait_timeout {
-                return Err(WaitTimeout {
+                return Err(IrisError::Timeout(WaitTimeout {
                     rank: self.rank,
                     flags: flags.to_string(),
                     idx,
                     target,
                     seen: v,
-                });
+                }));
             }
         }
     }
@@ -282,13 +300,13 @@ mod tests {
         let outs = run_node(heap, move |ctx| {
             if ctx.rank() == 0 {
                 for d in 1..ctx.world() {
-                    ctx.remote_store(d, "inbox", 0, &[7.0, 8.0, 9.0]);
-                    ctx.signal(d, "ready", 0);
+                    ctx.remote_store(d, "inbox", 0, &[7.0, 8.0, 9.0]).unwrap();
+                    ctx.signal(d, "ready", 0).unwrap();
                 }
                 vec![7.0, 8.0, 9.0]
             } else {
                 ctx.wait_flag_ge("ready", 0, 1).unwrap();
-                ctx.load_local_vec("inbox", 0, 3)
+                ctx.load_local_vec("inbox", 0, 3).unwrap()
             }
         });
         for (r, o) in outs.iter().enumerate() {
@@ -302,11 +320,11 @@ mod tests {
         let heap = Arc::new(HeapBuilder::new(world).buffer("shard", 4).build());
         let outs = run_node(heap, move |ctx| {
             let r = ctx.rank();
-            ctx.store_local("shard", 0, &[r as f32; 4]);
+            ctx.store_local("shard", 0, &[r as f32; 4]).unwrap();
             ctx.barrier();
             // pull everyone's shard
             (0..ctx.world())
-                .map(|s| ctx.remote_load_vec(s, "shard", 0, 4)[0])
+                .map(|s| ctx.remote_load_vec(s, "shard", 0, 4).unwrap()[0])
                 .collect::<Vec<_>>()
         });
         for o in outs {
@@ -315,17 +333,30 @@ mod tests {
     }
 
     #[test]
+    fn misnamed_buffer_surfaces_as_recoverable_error() {
+        // the satellite case: a coordinator typo must come back as a typed
+        // error value the engine can handle, not a poisoned node
+        let heap = Arc::new(HeapBuilder::new(2).buffer("good", 4).build());
+        let outs = run_node(heap, |ctx| {
+            match ctx.store_local("goood", 0, &[1.0]) {
+                Err(IrisError::UnknownBuffer(name)) => name,
+                other => panic!("expected UnknownBuffer, got {other:?}"),
+            }
+        });
+        for name in outs {
+            assert_eq!(name, "goood");
+        }
+    }
+
+    #[test]
     fn traffic_accounting_counts_remote_only() {
         let world = 2;
         let heap = Arc::new(HeapBuilder::new(world).buffer("b", 16).flags("f", 1).build());
-        // do all the traffic from a single deterministic engine layout
-        let heap2 = Arc::clone(&heap);
-        let _ = heap2; // silence
         let traffics = run_node(heap, move |ctx| {
             if ctx.rank() == 0 {
-                ctx.remote_store(1, "b", 0, &[1.0; 16]); // 32 bytes
-                ctx.signal(1, "f", 0); // 8 bytes
-                ctx.store_local("b", 0, &[2.0; 16]); // local: free
+                ctx.remote_store(1, "b", 0, &[1.0; 16]).unwrap(); // 32 bytes
+                ctx.signal(1, "f", 0).unwrap(); // 8 bytes
+                ctx.store_local("b", 0, &[2.0; 16]).unwrap(); // local: free
             } else {
                 ctx.wait_flag_ge("f", 0, 1).unwrap();
             }
@@ -350,8 +381,13 @@ mod tests {
             ctx.wait_flag_ge("f", 0, 1)
         });
         let err = res[0].as_ref().unwrap_err();
-        assert_eq!(err.idx, 0);
-        assert_eq!(err.target, 1);
+        match err {
+            IrisError::Timeout(t) => {
+                assert_eq!(t.idx, 0);
+                assert_eq!(t.target, 1);
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
         assert!(err.to_string().contains("timeout"));
     }
 

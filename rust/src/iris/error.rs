@@ -1,0 +1,106 @@
+//! Typed errors for the iris substrate.
+//!
+//! Every fallible heap / device-API operation reports through [`IrisError`]
+//! so a misnamed buffer or an out-of-bounds access in a coordinator
+//! surfaces as a recoverable, matchable error value instead of an ad-hoc
+//! panic string. Protocols that treat these as fatal (`collectives`, the
+//! built-in coordinators) `expect()` them, which still fails loudly with
+//! the typed message — but callers that want to degrade gracefully (e.g. a
+//! serving loop rejecting one request) can match and recover.
+
+use std::fmt;
+
+/// A flag wait that did not reach its target before the context timeout.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WaitTimeout {
+    pub rank: usize,
+    pub flags: String,
+    pub idx: usize,
+    pub target: u64,
+    pub seen: u64,
+}
+
+impl fmt::Display for WaitTimeout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "rank {}: timeout waiting for {}[{}] >= {} (last seen {})",
+            self.rank, self.flags, self.idx, self.target, self.seen
+        )
+    }
+}
+
+impl std::error::Error for WaitTimeout {}
+
+/// Error from a symmetric-heap or rank-context operation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IrisError {
+    /// No buffer with this name was declared on the heap.
+    UnknownBuffer(String),
+    /// No flag array with this name was declared on the heap.
+    UnknownFlags(String),
+    /// A store/load would run past the end of the named buffer.
+    OutOfBounds { buf: String, offset: usize, len: usize, capacity: usize },
+    /// A flag index past the end of the named flag array.
+    FlagOutOfBounds { flags: String, idx: usize, len: usize },
+    /// A rank outside `0..world`.
+    BadRank { rank: usize, world: usize },
+    /// A flag wait timed out (peer death / protocol deadlock).
+    Timeout(WaitTimeout),
+}
+
+impl fmt::Display for IrisError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IrisError::UnknownBuffer(name) => write!(f, "unknown buffer: {name}"),
+            IrisError::UnknownFlags(name) => write!(f, "unknown flag array: {name}"),
+            IrisError::OutOfBounds { buf, offset, len, capacity } => write!(
+                f,
+                "out of bounds: {buf}[{offset}..{}] exceeds capacity {capacity}",
+                offset + len
+            ),
+            IrisError::FlagOutOfBounds { flags, idx, len } => {
+                write!(f, "flag index {idx} out of bounds for {flags} (len {len})")
+            }
+            IrisError::BadRank { rank, world } => {
+                write!(f, "rank {rank} out of range for world {world}")
+            }
+            IrisError::Timeout(t) => t.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for IrisError {}
+
+impl From<WaitTimeout> for IrisError {
+    fn from(t: WaitTimeout) -> IrisError {
+        IrisError::Timeout(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_specific() {
+        assert_eq!(IrisError::UnknownBuffer("x".into()).to_string(), "unknown buffer: x");
+        assert_eq!(IrisError::UnknownFlags("f".into()).to_string(), "unknown flag array: f");
+        let oob =
+            IrisError::OutOfBounds { buf: "b".into(), offset: 3, len: 2, capacity: 4 };
+        assert!(oob.to_string().contains("b[3..5]"));
+        let t = WaitTimeout { rank: 1, flags: "f".into(), idx: 2, target: 3, seen: 0 };
+        assert!(IrisError::from(t).to_string().contains("timeout"));
+    }
+
+    #[test]
+    fn errors_are_matchable() {
+        let e: IrisError = IrisError::BadRank { rank: 9, world: 8 };
+        match e {
+            IrisError::BadRank { rank, world } => {
+                assert_eq!((rank, world), (9, 8));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+}

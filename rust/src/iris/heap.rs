@@ -7,6 +7,11 @@
 //! arrays. Remote stores/loads are performed directly on the target rank's
 //! region.
 //!
+//! **Error model.** Every lookup is fallible and reports through the typed
+//! [`IrisError`] (unknown buffer / flag array, out-of-bounds access, bad
+//! rank) so a misnamed buffer in a coordinator surfaces as a recoverable
+//! error value at the call site instead of a panic string deep in the heap.
+//!
 //! **Memory model.** Data elements are `AtomicU32` (f32 bit patterns)
 //! accessed with `Relaxed` ordering; signal flags are `AtomicU64` with
 //! `Release` increments and `Acquire` reads. This mirrors the real Iris
@@ -19,6 +24,8 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+use crate::iris::error::IrisError;
 
 /// One named buffer: `world` regions of `len` f32 elements each.
 struct Region {
@@ -107,79 +114,137 @@ impl SymmetricHeap {
         self.world
     }
 
-    fn region(&self, buf: &str) -> &Region {
-        self.regions.get(buf).unwrap_or_else(|| panic!("unknown buffer: {buf}"))
+    fn region(&self, buf: &str) -> Result<&Region, IrisError> {
+        self.regions.get(buf).ok_or_else(|| IrisError::UnknownBuffer(buf.to_string()))
     }
 
-    fn flag_region(&self, name: &str) -> &FlagRegion {
-        self.flag_regions.get(name).unwrap_or_else(|| panic!("unknown flag array: {name}"))
+    fn flag_region(&self, name: &str) -> Result<&FlagRegion, IrisError> {
+        self.flag_regions.get(name).ok_or_else(|| IrisError::UnknownFlags(name.to_string()))
+    }
+
+    fn check_rank(&self, rank: usize) -> Result<(), IrisError> {
+        if rank < self.world {
+            Ok(())
+        } else {
+            Err(IrisError::BadRank { rank, world: self.world })
+        }
     }
 
     /// Length (elements) of a named buffer.
-    pub fn buffer_len(&self, buf: &str) -> usize {
-        self.region(buf).len
+    pub fn buffer_len(&self, buf: &str) -> Result<usize, IrisError> {
+        Ok(self.region(buf)?.len)
     }
 
     /// Length of a named flag array.
-    pub fn flags_len(&self, name: &str) -> usize {
-        self.flag_region(name).len
+    pub fn flags_len(&self, name: &str) -> Result<usize, IrisError> {
+        Ok(self.flag_region(name)?.len)
     }
 
     /// Store `data` into rank `rank`'s copy of `buf` at `offset`
     /// (relaxed; publish with a flag).
-    pub fn store(&self, rank: usize, buf: &str, offset: usize, data: &[f32]) {
-        let region = self.region(buf);
+    pub fn store(
+        &self,
+        rank: usize,
+        buf: &str,
+        offset: usize,
+        data: &[f32],
+    ) -> Result<(), IrisError> {
+        self.check_rank(rank)?;
+        let region = self.region(buf)?;
+        // checked_add: a wrapped offset must surface as the typed error,
+        // not sneak past the bound in release builds
+        match offset.checked_add(data.len()) {
+            Some(end) if end <= region.len => {}
+            _ => {
+                return Err(IrisError::OutOfBounds {
+                    buf: buf.to_string(),
+                    offset,
+                    len: data.len(),
+                    capacity: region.len,
+                });
+            }
+        }
         let cells = &region.per_rank[rank];
-        assert!(
-            offset + data.len() <= region.len,
-            "store out of bounds: {buf}[{offset}..{}] len {}",
-            offset + data.len(),
-            region.len
-        );
         for (i, v) in data.iter().enumerate() {
             cells[offset + i].store(v.to_bits(), Ordering::Relaxed);
         }
+        Ok(())
     }
 
-    /// Load `len` elements from rank `rank`'s copy of `buf` at `offset`.
-    pub fn load(&self, rank: usize, buf: &str, offset: usize, out: &mut [f32]) {
-        let region = self.region(buf);
+    /// Load `out.len()` elements from rank `rank`'s copy of `buf` at `offset`.
+    pub fn load(
+        &self,
+        rank: usize,
+        buf: &str,
+        offset: usize,
+        out: &mut [f32],
+    ) -> Result<(), IrisError> {
+        self.check_rank(rank)?;
+        let region = self.region(buf)?;
+        match offset.checked_add(out.len()) {
+            Some(end) if end <= region.len => {}
+            _ => {
+                return Err(IrisError::OutOfBounds {
+                    buf: buf.to_string(),
+                    offset,
+                    len: out.len(),
+                    capacity: region.len,
+                });
+            }
+        }
         let cells = &region.per_rank[rank];
-        assert!(
-            offset + out.len() <= region.len,
-            "load out of bounds: {buf}[{offset}..{}] len {}",
-            offset + out.len(),
-            region.len
-        );
         for (i, slot) in out.iter_mut().enumerate() {
             *slot = f32::from_bits(cells[offset + i].load(Ordering::Relaxed));
         }
+        Ok(())
     }
 
     /// Atomically add `delta` to flag `idx` of `flags` on rank `rank`,
     /// with Release ordering (publishes preceding relaxed data stores).
-    pub fn flag_add(&self, rank: usize, flags: &str, idx: usize, delta: u64) -> u64 {
-        let fr = self.flag_region(flags);
-        assert!(idx < fr.len, "flag index {idx} out of bounds (len {})", fr.len);
-        fr.per_rank[rank][idx].fetch_add(delta, Ordering::Release)
+    /// Returns the previous value.
+    pub fn flag_add(
+        &self,
+        rank: usize,
+        flags: &str,
+        idx: usize,
+        delta: u64,
+    ) -> Result<u64, IrisError> {
+        self.check_rank(rank)?;
+        let fr = self.flag_region(flags)?;
+        if idx >= fr.len {
+            return Err(IrisError::FlagOutOfBounds {
+                flags: flags.to_string(),
+                idx,
+                len: fr.len,
+            });
+        }
+        Ok(fr.per_rank[rank][idx].fetch_add(delta, Ordering::Release))
     }
 
     /// Read flag `idx` on rank `rank` with Acquire ordering.
-    pub fn flag_read(&self, rank: usize, flags: &str, idx: usize) -> u64 {
-        let fr = self.flag_region(flags);
-        assert!(idx < fr.len, "flag index {idx} out of bounds (len {})", fr.len);
-        fr.per_rank[rank][idx].load(Ordering::Acquire)
+    pub fn flag_read(&self, rank: usize, flags: &str, idx: usize) -> Result<u64, IrisError> {
+        self.check_rank(rank)?;
+        let fr = self.flag_region(flags)?;
+        if idx >= fr.len {
+            return Err(IrisError::FlagOutOfBounds {
+                flags: flags.to_string(),
+                idx,
+                len: fr.len,
+            });
+        }
+        Ok(fr.per_rank[rank][idx].load(Ordering::Acquire))
     }
 
     /// Reset every flag in an array on every rank to zero (between
     /// iterations; collective — caller must ensure quiescence).
-    pub fn flags_reset(&self, flags: &str) {
-        let fr = self.flag_region(flags);
+    pub fn flags_reset(&self, flags: &str) -> Result<(), IrisError> {
+        let fr = self.flag_region(flags)?;
         for rank in 0..self.world {
             for f in &fr.per_rank[rank] {
                 f.store(0, Ordering::Release);
             }
         }
+        Ok(())
     }
 
     /// Sense-reversing global barrier over all ranks. Yields while waiting
@@ -206,14 +271,15 @@ impl SymmetricHeap {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::iris::IrisError;
     use std::sync::Arc;
 
     #[test]
     fn builder_allocates_per_rank_regions() {
         let heap = HeapBuilder::new(4).buffer("a", 16).flags("f", 8).build();
         assert_eq!(heap.world(), 4);
-        assert_eq!(heap.buffer_len("a"), 16);
-        assert_eq!(heap.flags_len("f"), 8);
+        assert_eq!(heap.buffer_len("a").unwrap(), 16);
+        assert_eq!(heap.flags_len("f").unwrap(), 8);
     }
 
     #[test]
@@ -223,43 +289,84 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "unknown buffer")]
-    fn unknown_buffer_panics() {
+    fn unknown_buffer_is_typed_error() {
         let heap = HeapBuilder::new(2).build();
-        heap.store(0, "nope", 0, &[1.0]);
+        let err = heap.store(0, "nope", 0, &[1.0]).unwrap_err();
+        assert_eq!(err, IrisError::UnknownBuffer("nope".to_string()));
+        assert!(err.to_string().contains("unknown buffer: nope"));
+        let mut out = [0.0f32];
+        assert!(matches!(
+            heap.load(0, "nope", 0, &mut out),
+            Err(IrisError::UnknownBuffer(_))
+        ));
+        assert!(matches!(heap.buffer_len("nope"), Err(IrisError::UnknownBuffer(_))));
+    }
+
+    #[test]
+    fn unknown_flags_is_typed_error() {
+        let heap = HeapBuilder::new(2).build();
+        assert!(matches!(heap.flag_add(0, "nf", 0, 1), Err(IrisError::UnknownFlags(_))));
+        assert!(matches!(heap.flag_read(0, "nf", 0), Err(IrisError::UnknownFlags(_))));
+        assert!(matches!(heap.flags_reset("nf"), Err(IrisError::UnknownFlags(_))));
+        assert!(matches!(heap.flags_len("nf"), Err(IrisError::UnknownFlags(_))));
+    }
+
+    #[test]
+    fn bad_rank_is_typed_error() {
+        let heap = HeapBuilder::new(2).buffer("x", 4).flags("f", 1).build();
+        assert!(matches!(
+            heap.store(2, "x", 0, &[1.0]),
+            Err(IrisError::BadRank { rank: 2, world: 2 })
+        ));
+        assert!(matches!(heap.flag_read(5, "f", 0), Err(IrisError::BadRank { .. })));
     }
 
     #[test]
     fn regions_are_independent_per_rank() {
         let heap = HeapBuilder::new(3).buffer("x", 4).build();
-        heap.store(0, "x", 0, &[1.0, 2.0]);
-        heap.store(1, "x", 0, &[9.0, 8.0]);
+        heap.store(0, "x", 0, &[1.0, 2.0]).unwrap();
+        heap.store(1, "x", 0, &[9.0, 8.0]).unwrap();
         let mut out = [0.0f32; 2];
-        heap.load(0, "x", 0, &mut out);
+        heap.load(0, "x", 0, &mut out).unwrap();
         assert_eq!(out, [1.0, 2.0]);
-        heap.load(1, "x", 0, &mut out);
+        heap.load(1, "x", 0, &mut out).unwrap();
         assert_eq!(out, [9.0, 8.0]);
-        heap.load(2, "x", 0, &mut out);
+        heap.load(2, "x", 0, &mut out).unwrap();
         assert_eq!(out, [0.0, 0.0]);
     }
 
     #[test]
-    #[should_panic(expected = "out of bounds")]
-    fn store_bounds_checked() {
+    fn store_bounds_is_typed_error() {
         let heap = HeapBuilder::new(1).buffer("x", 4).build();
-        heap.store(0, "x", 3, &[1.0, 2.0]);
+        let err = heap.store(0, "x", 3, &[1.0, 2.0]).unwrap_err();
+        match err {
+            IrisError::OutOfBounds { buf, offset, len, capacity } => {
+                assert_eq!((buf.as_str(), offset, len, capacity), ("x", 3, 2, 4));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // a load at the same spot errors identically
+        let mut out = [0.0f32; 2];
+        assert!(matches!(heap.load(0, "x", 3, &mut out), Err(IrisError::OutOfBounds { .. })));
+        // a wrapped offset (underflow artifact) must error, not wrap past
+        // the bound in release builds
+        assert!(matches!(
+            heap.store(0, "x", usize::MAX - 1, &[1.0, 2.0]),
+            Err(IrisError::OutOfBounds { .. })
+        ));
     }
 
     #[test]
     fn flags_add_and_read() {
         let heap = HeapBuilder::new(2).flags("f", 4).build();
-        assert_eq!(heap.flag_read(1, "f", 2), 0);
-        let prev = heap.flag_add(1, "f", 2, 1);
+        assert_eq!(heap.flag_read(1, "f", 2).unwrap(), 0);
+        let prev = heap.flag_add(1, "f", 2, 1).unwrap();
         assert_eq!(prev, 0);
-        assert_eq!(heap.flag_read(1, "f", 2), 1);
-        assert_eq!(heap.flag_read(0, "f", 2), 0, "flags are per-rank");
-        heap.flags_reset("f");
-        assert_eq!(heap.flag_read(1, "f", 2), 0);
+        assert_eq!(heap.flag_read(1, "f", 2).unwrap(), 1);
+        assert_eq!(heap.flag_read(0, "f", 2).unwrap(), 0, "flags are per-rank");
+        assert!(matches!(heap.flag_add(1, "f", 9, 1), Err(IrisError::FlagOutOfBounds { .. })));
+        heap.flags_reset("f").unwrap();
+        assert_eq!(heap.flag_read(1, "f", 2).unwrap(), 0);
     }
 
     #[test]
@@ -271,10 +378,10 @@ mod tests {
             let h = Arc::clone(&heap);
             handles.push(std::thread::spawn(move || {
                 // phase 1: everyone signals
-                h.flag_add(r, "f", 0, 1);
+                h.flag_add(r, "f", 0, 1).unwrap();
                 h.barrier_wait();
                 // phase 2: after the barrier every rank must see all signals
-                let seen: u64 = (0..world).map(|rk| h.flag_read(rk, "f", 0)).sum();
+                let seen: u64 = (0..world).map(|rk| h.flag_read(rk, "f", 0).unwrap()).sum();
                 assert_eq!(seen, world as u64);
                 h.barrier_wait();
             }));
@@ -294,11 +401,11 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 for round in 0..50u32 {
                     if r == (round as usize % world) {
-                        h.store(0, "x", 0, &[round as f32]);
+                        h.store(0, "x", 0, &[round as f32]).unwrap();
                     }
                     h.barrier_wait();
                     let mut v = [0.0f32];
-                    h.load(0, "x", 0, &mut v);
+                    h.load(0, "x", 0, &mut v).unwrap();
                     assert_eq!(v[0], round as f32, "rank {r} round {round}");
                     h.barrier_wait();
                 }

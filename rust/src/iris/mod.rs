@@ -5,14 +5,19 @@
 //!   Release/Acquire publication protocol);
 //! * [`ctx`] — the per-rank device API (`remote_store` / `remote_load` /
 //!   `signal` / `wait_flag_ge` / `barrier`) and the node runner that stands
-//!   up one engine thread per rank.
+//!   up one engine thread per rank;
+//! * [`error`] — the typed [`IrisError`] every fallible heap / device-API
+//!   operation reports through (misnamed buffer, out-of-bounds, bad rank,
+//!   wait timeout) so protocol code can recover instead of unwinding.
 //!
 //! Every distributed algorithm in the paper (Algorithms 1–4) is expressed
 //! against [`RankCtx`]; the timing twin of each protocol lives in
 //! [`crate::sim`].
 
 pub mod ctx;
+pub mod error;
 pub mod heap;
 
-pub use ctx::{run_node, run_node_with_timeout, RankCtx, Traffic, WaitTimeout, DEFAULT_WAIT_TIMEOUT};
+pub use ctx::{run_node, run_node_with_timeout, RankCtx, Traffic, DEFAULT_WAIT_TIMEOUT};
+pub use error::{IrisError, WaitTimeout};
 pub use heap::{HeapBuilder, SymmetricHeap};

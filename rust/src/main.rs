@@ -176,6 +176,7 @@ fn cmd_experiments(args: &[String]) -> i32 {
         "fig11" => run_fig11(),
         "ablations" => run_ablations(),
         "allreduce" => experiments::ext_allreduce::run(seed, iters),
+        "gemm_rs" => experiments::ext_gemm_rs::run(&hw9, seed, iters),
         "autotune" => run_autotune(),
         "all" => {
             run_fig2();
@@ -184,11 +185,12 @@ fn cmd_experiments(args: &[String]) -> i32 {
             run_fig11();
             run_ablations();
             experiments::ext_allreduce::run(seed, iters);
+            experiments::ext_gemm_rs::run(&hw9, seed, iters);
             run_autotune();
         }
         other => {
             eprintln!(
-                "unknown experiment: {other} (want fig2|fig9|fig10|fig11|ablations|autotune|all)"
+                "unknown experiment: {other} (want fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|autotune|all)"
             );
             return 2;
         }
@@ -226,9 +228,12 @@ fn cmd_serve(args: &[String]) -> i32 {
 
     let report = match backend.as_str() {
         "native" => {
+            // genuinely tensor-parallel: each rank holds only its shard of
+            // the MLP weights; the down-projection runs the fused GEMM+RS
+            // exchange (attention stays sequence-parallel)
             let cfg2 = cfg.clone();
-            serve(&cfg, requests, move |_rank| {
-                NativeCompute::new(cfg2.clone(), TransformerWeights::random(&cfg2, seed))
+            serve(&cfg, requests, move |rank| {
+                NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, seed), rank)
             })
         }
         "pjrt" => {

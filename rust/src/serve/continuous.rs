@@ -11,12 +11,9 @@
 //!
 //! Reports per-request time-to-first-token and completion latency.
 
-use std::sync::Arc;
-
-use crate::iris::{run_node, HeapBuilder, RankCtx};
-use crate::kernels::attention::PartialState;
+use crate::iris::{run_node, RankCtx};
 use crate::serve::queue::Request;
-use crate::serve::{decode_step_fused, BUF_INBOX, FLAGS_PARTIAL};
+use crate::serve::{build_serve_heap, decode_step_fused};
 use crate::tensor::Tensor;
 use crate::workloads::transformer::{token_embedding, KvShard, LocalCompute, TransformerConfig};
 
@@ -75,13 +72,7 @@ where
 {
     cfg.validate().expect("invalid TransformerConfig");
     assert!(max_active >= 1);
-    let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
-    let heap = Arc::new(
-        HeapBuilder::new(cfg.world)
-            .buffer(BUF_INBOX, 2 * cfg.world * wire)
-            .flags(FLAGS_PARTIAL, cfg.world)
-            .build(),
-    );
+    let heap = build_serve_heap(cfg);
     let cfg2 = cfg.clone();
     let t0 = crate::clock::WallTimer::start();
     let mut outs = run_node(heap, move |ctx| {
@@ -173,6 +164,14 @@ mod tests {
         move |_| NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed))
     }
 
+    fn tp_factory(
+        cfg: &TransformerConfig,
+        seed: u64,
+    ) -> impl Fn(usize) -> NativeCompute + Send + Sync + 'static {
+        let cfg = cfg.clone();
+        move |rank| NativeCompute::new_tp(cfg.clone(), TransformerWeights::random(&cfg, seed), rank)
+    }
+
     #[test]
     fn all_requests_complete_with_correct_token_counts() {
         let cfg = TransformerConfig::tiny(2);
@@ -233,6 +232,33 @@ mod tests {
         assert!(by_id(2).finished_step < by_id(0).finished_step);
         // the third request was admitted when the second finished
         assert!(by_id(2).admitted_step > by_id(1).admitted_step);
+    }
+
+    #[test]
+    fn tp_sharded_continuous_matches_reference() {
+        // interleaved scheduling over the TP-MLP exchange: per-sequence
+        // results must still equal the single-process reference (ragged
+        // d_model/ffn to exercise the partition layout under interleaving)
+        let cfg = TransformerConfig::tiny_ragged(2);
+        let seed = 14;
+        let mut q = RequestQueue::new();
+        q.submit(2, 2);
+        q.submit(1, 2);
+        q.submit(3, 1);
+        let reqs = q.drain_batch(3);
+        let report = serve_continuous(&cfg, reqs.clone(), 2, tp_factory(&cfg, seed));
+        for req in &reqs {
+            let mut dec = ReferenceDecoder::new(
+                cfg.clone(),
+                NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
+            );
+            let mut h = token_embedding(&cfg, req.id as u64);
+            for _ in 0..req.total_tokens() {
+                h = dec.step(&h);
+            }
+            let got = &report.results[req.id].final_hidden;
+            got.assert_allclose(&h, 1e-3, 1e-3);
+        }
     }
 
     #[test]

@@ -11,7 +11,16 @@
 //! 3. **distributed flash decode with the paper's fully-fused pattern**:
 //!    local partial → immediate push + signal to all peers → concurrent
 //!    online-softmax reduction behind flags (Algorithm 4);
-//! 4. every rank runs the post-attention dense block (replicated).
+//! 4. the post-attention block. With a TP-sharded backend
+//!    ([`LocalCompute::tp_sharded`]) the MLP runs **tensor-parallel**:
+//!    output projection + residual locally, then each rank's partial
+//!    down-projection flows through the fused GEMM+ReduceScatter exchange
+//!    (per-segment push + signal into the owning rank's heap, concurrent
+//!    reduction behind flags — the mirror of Algorithm 4, see
+//!    [`crate::coordinator::gemm_rs`]) followed by a flag-synchronized
+//!    all-gather of the reduced segments. No global barrier anywhere in
+//!    the token loop. With a replicated backend (PJRT's monolithic
+//!    artifact) step 4 stays a local dense block.
 //!
 //! Requests are processed from a FIFO queue; the report carries the
 //! paper-style latency summary plus tokens/s.
@@ -21,13 +30,13 @@ pub mod queue;
 
 use std::sync::Arc;
 
-use crate::iris::{run_node, HeapBuilder, RankCtx};
+use crate::iris::{run_node, HeapBuilder, RankCtx, SymmetricHeap};
 use crate::kernels::attention::PartialState;
 use crate::kernels::combine::OnlineCombiner;
 use crate::metrics::Recorder;
 use crate::tensor::Tensor;
 use crate::workloads::transformer::{
-    token_embedding, KvShard, LocalCompute, TransformerConfig,
+    rmsnorm, token_embedding, KvShard, LocalCompute, TransformerConfig,
 };
 
 pub use queue::{Request, RequestQueue, RequestResult};
@@ -56,10 +65,35 @@ impl ServeReport {
 
 pub(crate) const BUF_INBOX: &str = "serve_inbox";
 pub(crate) const FLAGS_PARTIAL: &str = "serve_ready";
+pub(crate) const BUF_MLP_PART: &str = "serve_mlp_partial";
+pub(crate) const FLAGS_MLP_PART: &str = "serve_mlp_partial_ready";
+pub(crate) const BUF_MLP_GATHER: &str = "serve_mlp_gather";
+pub(crate) const FLAGS_MLP_GATHER: &str = "serve_mlp_gather_ready";
+
+/// Build the serving heap: the attention partial inbox plus the two
+/// MLP-exchange staging areas (GEMM+RS contributions, reduced-segment
+/// all-gather). Every data buffer is double-buffered by round parity — a
+/// producer may run one layer ahead of a slow consumer, so slot
+/// (parity, source) guarantees it never overwrites data still being read
+/// (see `decode_step_fused`).
+pub(crate) fn build_serve_heap(cfg: &TransformerConfig) -> Arc<SymmetricHeap> {
+    let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
+    let seg_max = cfg.d_model.div_ceil(cfg.world);
+    Arc::new(
+        HeapBuilder::new(cfg.world)
+            .buffer(BUF_INBOX, 2 * cfg.world * wire)
+            .flags(FLAGS_PARTIAL, cfg.world)
+            .buffer(BUF_MLP_PART, 2 * cfg.world * seg_max)
+            .flags(FLAGS_MLP_PART, cfg.world)
+            .buffer(BUF_MLP_GATHER, 2 * cfg.world * seg_max)
+            .flags(FLAGS_MLP_GATHER, cfg.world)
+            .build(),
+    )
+}
 
 /// Serve a queue of requests on a fresh distributed node. `factory` builds
 /// each rank's [`LocalCompute`]; all ranks must be given identical weights
-/// (replicated model).
+/// (replicated backend) or shards of the same weights (TP backend).
 pub fn serve<C, F>(
     cfg: &TransformerConfig,
     requests: Vec<Request>,
@@ -70,16 +104,7 @@ where
     F: Fn(usize) -> C + Send + Sync + 'static,
 {
     cfg.validate().expect("invalid TransformerConfig");
-    let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
-    // inbox is double-buffered by round parity: a producer may run one
-    // layer ahead of a slow consumer, so slot (parity, source) guarantees
-    // it never overwrites data still being read (see decode_step_fused)
-    let heap = Arc::new(
-        HeapBuilder::new(cfg.world)
-            .buffer(BUF_INBOX, 2 * cfg.world * wire)
-            .flags(FLAGS_PARTIAL, cfg.world)
-            .build(),
-    );
+    let heap = build_serve_heap(cfg);
     let cfg2 = cfg.clone();
     let t0 = crate::clock::WallTimer::start();
     let mut outs = run_node(heap, move |ctx| {
@@ -111,17 +136,12 @@ fn engine_body<C: LocalCompute>(
         let mut shard = KvShard::new(cfg);
         let mut h = token_embedding(cfg, req.id as u64);
         let total_tokens = req.prompt_len + req.gen_len;
-        let mut last_hidden = h.clone();
         for t in 0..total_tokens {
             let owner = t % cfg.world;
             h = recorder.time(|| {
                 decode_step_fused(ctx, cfg, compute, &mut shard, &h, owner, &mut round)
             });
-            last_hidden = h.clone();
         }
-        // next-step input for a "generated" token would come from sampling;
-        // we feed the hidden state back (synthetic workload)
-        let _ = last_hidden;
         results.push(RequestResult {
             id: req.id,
             tokens: total_tokens,
@@ -132,8 +152,10 @@ fn engine_body<C: LocalCompute>(
     results
 }
 
-/// One decode step with the paper's fully-fused attention exchange
-/// (Algorithm 4) per layer.
+/// One decode step: the paper's fully-fused attention exchange
+/// (Algorithm 4) per layer, plus — for TP-sharded backends — the fused
+/// GEMM+ReduceScatter MLP exchange (the mirror pattern) with its
+/// flag-synchronized segment all-gather.
 pub(crate) fn decode_step_fused<C: LocalCompute>(
     ctx: &RankCtx,
     cfg: &TransformerConfig,
@@ -174,23 +196,108 @@ pub(crate) fn decode_step_fused<C: LocalCompute>(
         // round N+1), so alternating slots cannot collide
         let base = ((*round % 2) as usize) * cfg.world * wire;
         for d in ctx.peers() {
-            ctx.remote_store(d, BUF_INBOX, base + r * wire, &wire_data);
-            ctx.signal(d, FLAGS_PARTIAL, r);
+            ctx.remote_store(d, BUF_INBOX, base + r * wire, &wire_data)
+                .expect("serve push partial");
+            ctx.signal(d, FLAGS_PARTIAL, r).expect("serve signal partial");
         }
-        ctx.store_local(BUF_INBOX, base + r * wire, &wire_data);
-        ctx.signal(r, FLAGS_PARTIAL, r);
+        ctx.store_local(BUF_INBOX, base + r * wire, &wire_data)
+            .expect("serve publish partial");
+        ctx.signal(r, FLAGS_PARTIAL, r).expect("serve signal own partial");
         //    part 2 — concurrent reduction behind flags
         let mut comb = OnlineCombiner::new(cfg.n_heads, cfg.head_dim);
         for s in std::iter::once(r).chain(ctx.peers()) {
             ctx.wait_flag_ge(FLAGS_PARTIAL, s, *round).expect("serve reduction wait");
-            let data = ctx.load_local_vec(BUF_INBOX, base + s * wire, wire);
+            let data = ctx
+                .load_local_vec(BUF_INBOX, base + s * wire, wire)
+                .expect("serve load partial");
             comb.add(&PartialState::from_wire(&data, cfg.n_heads, cfg.head_dim));
         }
         let attn = comb.finish();
-        // 4) dense post-attention block
-        h = compute.post_attn(layer, &h, &attn);
+        // 4) post-attention block: TP exchange for sharded backends,
+        //    local dense for replicated ones
+        h = if compute.tp_sharded() && ctx.world() > 1 {
+            let h1 = compute.attn_out_proj(layer, &h, &attn);
+            let x = rmsnorm(&h1);
+            let p = compute.mlp_partial(layer, &x);
+            let mlp = mlp_exchange_fused(ctx, cfg, &p, *round);
+            let mut out = h1;
+            for (a, b) in out.data_mut().iter_mut().zip(&mlp) {
+                *a += b;
+            }
+            out
+        } else {
+            compute.post_attn(layer, &h, &attn)
+        };
     }
     h
+}
+
+/// The fused GEMM+ReduceScatter + all-gather MLP exchange of one layer:
+/// every rank holds a full-width partial down-projection `p` [1, d_model];
+/// segment s of the sum belongs to rank s. Producers push their segment
+/// contributions straight into the owning rank's heap with a signal flag;
+/// each rank reduces its own segment behind flags in canonical source
+/// order (one deterministic association per segment — every rank then
+/// gathers the same reduced bits), then the reduced segments are
+/// all-gathered the same way. Flags are
+/// monotone per round; data slots alternate by round parity like the
+/// attention inbox.
+fn mlp_exchange_fused(
+    ctx: &RankCtx,
+    cfg: &TransformerConfig,
+    p: &Tensor,
+    round: u64,
+) -> Vec<f32> {
+    let (r, w) = (ctx.rank(), ctx.world());
+    let parts = cfg.d_model_partition();
+    let seg_max = cfg.d_model.div_ceil(w);
+    let base = ((round % 2) as usize) * w * seg_max;
+
+    // ---- reduce-scatter: push partial segments to their owners ----
+    for d in ctx.peers() {
+        let (off, len) = parts[d];
+        ctx.remote_store(d, BUF_MLP_PART, base + r * seg_max, &p.data()[off..off + len])
+            .expect("mlp push partial segment");
+        ctx.signal(d, FLAGS_MLP_PART, r).expect("mlp signal partial segment");
+    }
+    let (my_off, my_len) = parts[r];
+    ctx.store_local(BUF_MLP_PART, base + r * seg_max, &p.data()[my_off..my_off + my_len])
+        .expect("mlp publish own segment");
+    ctx.signal(r, FLAGS_MLP_PART, r).expect("mlp signal own segment");
+
+    // concurrent reduction of the owned segment behind flags
+    let mut acc = vec![0.0f32; my_len];
+    for src in 0..w {
+        ctx.wait_flag_ge(FLAGS_MLP_PART, src, round).expect("mlp reduce wait");
+        let contrib = ctx
+            .load_local_vec(BUF_MLP_PART, base + src * seg_max, my_len)
+            .expect("mlp load contribution");
+        for (a, c) in acc.iter_mut().zip(&contrib) {
+            *a += c;
+        }
+    }
+
+    // ---- all-gather the reduced segments (column-parallel up-projection
+    //      of the next layer consumes the full vector) ----
+    for d in ctx.peers() {
+        ctx.remote_store(d, BUF_MLP_GATHER, base + r * seg_max, &acc)
+            .expect("mlp push reduced segment");
+        ctx.signal(d, FLAGS_MLP_GATHER, r).expect("mlp signal reduced segment");
+    }
+    ctx.store_local(BUF_MLP_GATHER, base + r * seg_max, &acc)
+        .expect("mlp publish reduced segment");
+    ctx.signal(r, FLAGS_MLP_GATHER, r).expect("mlp signal own reduced segment");
+
+    let mut mlp = vec![0.0f32; cfg.d_model];
+    for src in 0..w {
+        ctx.wait_flag_ge(FLAGS_MLP_GATHER, src, round).expect("mlp gather wait");
+        let (off, len) = parts[src];
+        let seg = ctx
+            .load_local_vec(BUF_MLP_GATHER, base + src * seg_max, len)
+            .expect("mlp load reduced segment");
+        mlp[off..off + len].copy_from_slice(&seg);
+    }
+    mlp
 }
 
 #[cfg(test)]
@@ -209,6 +316,17 @@ mod tests {
         }
     }
 
+    fn tp_factory(
+        cfg: &TransformerConfig,
+        seed: u64,
+    ) -> impl Fn(usize) -> NativeCompute + Send + Sync + 'static {
+        let cfg = cfg.clone();
+        move |rank| {
+            let w = TransformerWeights::random(&cfg, seed);
+            NativeCompute::new_tp(cfg.clone(), w, rank)
+        }
+    }
+
     #[test]
     fn distributed_serve_matches_single_rank_reference() {
         let seed = 77;
@@ -224,44 +342,96 @@ mod tests {
     }
 
     #[test]
-    fn distributed_hidden_state_equals_reference_decoder() {
-        // run the same token stream through the distributed node (world=3)
-        // and the single-process reference; outputs must match.
-        let seed = 78;
-        let world = 3;
-        let cfg = TransformerConfig::tiny(world);
-        // distributed: capture final hidden by re-running a single request
-        // through a custom body — reuse serve() and compare reference token
-        // counts; for state equality we drive decode_step_fused directly.
-        let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
-        let heap = Arc::new(
-            HeapBuilder::new(world)
-                .buffer(BUF_INBOX, 2 * world * wire)
-                .flags(FLAGS_PARTIAL, world)
-                .build(),
-        );
+    fn tp_sharded_serve_completes() {
+        // the TP-MLP path through serve(): every rank holds only its
+        // shard; token counts must match the replicated run
+        for world in [2usize, 3, 4] {
+            let cfg = TransformerConfig::tiny(world);
+            let reqs = vec![Request { id: 0, prompt_len: 2, gen_len: 3 }];
+            let report = serve(&cfg, reqs, tp_factory(&cfg, 91));
+            assert_eq!(report.total_tokens, 5, "world {world}");
+        }
+    }
+
+    /// Drive `decode_step_fused` on a node with `factory`-built computes
+    /// and return every rank's hidden state after `steps` tokens.
+    fn drive_node<F>(cfg: &TransformerConfig, steps: usize, factory: F) -> Vec<Tensor>
+    where
+        F: Fn(usize) -> NativeCompute + Send + Sync + 'static,
+    {
+        let heap = build_serve_heap(cfg);
         let cfg2 = cfg.clone();
-        let outs = run_node(heap, move |ctx| {
-            let w = TransformerWeights::random(&cfg2, seed);
-            let compute = NativeCompute::new(cfg2.clone(), w);
+        run_node(heap, move |ctx| {
+            let compute = factory(ctx.rank());
             let mut shard = KvShard::new(&cfg2);
             let mut h = token_embedding(&cfg2, 0);
             let mut round = 0u64;
-            for t in 0..6 {
-                h = decode_step_fused(&ctx, &cfg2, &compute, &mut shard, &h, t % cfg2.world, &mut round);
+            for t in 0..steps {
+                h = decode_step_fused(
+                    &ctx,
+                    &cfg2,
+                    &compute,
+                    &mut shard,
+                    &h,
+                    t % cfg2.world,
+                    &mut round,
+                );
             }
             h
-        });
-        // reference
-        let w = TransformerWeights::random(&cfg, seed);
+        })
+    }
+
+    fn reference_hidden(cfg: &TransformerConfig, steps: usize, seed: u64) -> Tensor {
+        let w = TransformerWeights::random(cfg, seed);
         let mut refdec = ReferenceDecoder::new(cfg.clone(), NativeCompute::new(cfg.clone(), w));
-        let mut h = token_embedding(&cfg, 0);
-        for _ in 0..6 {
+        let mut h = token_embedding(cfg, 0);
+        for _ in 0..steps {
             h = refdec.step(&h);
         }
-        for (rk, out) in outs.iter().enumerate() {
-            out.assert_allclose(&h, 1e-4, 1e-4);
-            let _ = rk;
+        h
+    }
+
+    #[test]
+    fn distributed_hidden_state_equals_reference_decoder() {
+        // replicated-MLP path: world=3 node vs single-process reference
+        let seed = 78;
+        let cfg = TransformerConfig::tiny(3);
+        let outs = drive_node(&cfg, 6, native_factory(&cfg, seed));
+        let expect = reference_hidden(&cfg, 6, seed);
+        for out in &outs {
+            out.assert_allclose(&expect, 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn tp_hidden_state_equals_reference_decoder() {
+        // TP-MLP path: the fused GEMM+RS exchange must reproduce the
+        // replicated reference (up to the segmented-K sum association),
+        // for even and ragged d_model/ffn_hidden, worlds 1..4
+        let seed = 79;
+        for world in [1usize, 2, 3, 4] {
+            for cfg in
+                [TransformerConfig::tiny(world), TransformerConfig::tiny_ragged(world)]
+            {
+                let outs = drive_node(&cfg, 5, tp_factory(&cfg, seed));
+                let expect = reference_hidden(&cfg, 5, seed);
+                for (rk, out) in outs.iter().enumerate() {
+                    out.assert_allclose(&expect, 1e-3, 1e-3);
+                    let _ = rk;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tp_ranks_agree_closely_with_each_other() {
+        // the MLP reduction association is canonical (source order), but
+        // the attention combine folds in rank-staggered order, so ranks
+        // agree to tight float tolerance rather than bitwise
+        let cfg = TransformerConfig::tiny_ragged(4);
+        let outs = drive_node(&cfg, 4, tp_factory(&cfg, 80));
+        for out in &outs[1..] {
+            out.assert_allclose(&outs[0], 1e-5, 1e-5);
         }
     }
 

@@ -100,6 +100,20 @@ pub fn multipush_time(hw: &HwConfig, bytes_per_dst: u64, world: usize, eff: f64)
     hw.link_latency_s + total / (agg * eff)
 }
 
+/// Time to fold `sources` partial contributions of `elems` f32 elements
+/// each into an accumulator (the reduction stage of GEMM+ReduceScatter /
+/// fused all-reduce). Streaming adds are vector-engine work bounded by
+/// reading each contribution once (fp16) and keeping the accumulator hot.
+pub fn reduce_accum_time(hw: &HwConfig, elems: usize, sources: usize) -> f64 {
+    if elems == 0 || sources == 0 {
+        return 0.0;
+    }
+    let flops = elems as f64 * sources as f64; // one add per (elem, source)
+    // each contribution streamed once (fp16) + one accumulator write (fp16)
+    let bytes = 2.0 * elems as f64 * (sources as f64 + 1.0);
+    (flops / hw.peak_vec_flops).max(bytes / hw.hbm_bw)
+}
+
 /// HBM round-trip time for `bytes` (write + read back) — the unit price of
 /// the Inter-Kernel Tax.
 pub fn hbm_roundtrip_time(hw: &HwConfig, bytes: u64) -> f64 {
@@ -172,6 +186,21 @@ mod tests {
         let serial: f64 = (0..7).map(|_| link_transfer_time(&hw, per, 1.0)).sum();
         assert!(t < serial * 0.5, "multipush {t} should beat serial {serial}");
         assert_eq!(multipush_time(&hw, per, 1, 1.0), 0.0);
+    }
+
+    #[test]
+    fn reduce_accum_scales_with_sources_and_stays_cheap() {
+        let hw = presets::mi300x();
+        // the reduction of a paper-shaped down-projection segment is far
+        // cheaper than the GEMM producing it
+        let seg = 64 * 1024; // M=64 rows of a 1K-column segment
+        let t_reduce = reduce_accum_time(&hw, seg, 7);
+        let t_gemm = gemm_time(&hw, 64, 8192, 28672 / 8, GemmImpl::Tile);
+        assert!(t_reduce < t_gemm / 10.0, "reduce {t_reduce} vs gemm {t_gemm}");
+        // monotone in sources, zero for degenerate inputs
+        assert!(reduce_accum_time(&hw, seg, 7) > reduce_accum_time(&hw, seg, 1));
+        assert_eq!(reduce_accum_time(&hw, 0, 7), 0.0);
+        assert_eq!(reduce_accum_time(&hw, seg, 0), 0.0);
     }
 
     #[test]

@@ -158,6 +158,22 @@ impl Tensor {
         (0..n).map(|i| self.cols(i * w, (i + 1) * w)).collect()
     }
 
+    /// Shard a matrix into column slices following an explicit
+    /// (offset, len) partition (see [`crate::util::partition`]) — the
+    /// ragged generalization of [`Tensor::shard_cols`] used when a sharded
+    /// dimension does not divide evenly by the world size.
+    pub fn shard_cols_ragged(&self, parts: &[(usize, usize)]) -> Vec<Tensor> {
+        assert_eq!(self.shape.rank(), 2);
+        parts.iter().map(|&(off, len)| self.cols(off, off + len)).collect()
+    }
+
+    /// Shard a matrix into row slices following an explicit partition
+    /// (ragged generalization of [`Tensor::shard_rows`]).
+    pub fn shard_rows_ragged(&self, parts: &[(usize, usize)]) -> Vec<Tensor> {
+        assert_eq!(self.shape.rank(), 2);
+        parts.iter().map(|&(off, len)| self.rows(off, off + len)).collect()
+    }
+
     /// Shard a matrix into `n` equal row slices.
     pub fn shard_rows(&self, n: usize) -> Vec<Tensor> {
         assert_eq!(self.shape.rank(), 2);
@@ -259,6 +275,31 @@ mod tests {
         assert_eq!(shards[0].dims(), &[6, 2]);
         let back = Tensor::concat_cols(&shards);
         assert_eq!(back, t);
+    }
+
+    #[test]
+    fn ragged_shards_round_trip() {
+        let mut rng = Prng::new(6);
+        let t = Tensor::rand(&[5, 13], 1.0, &mut rng);
+        let parts = crate::util::partition(13, 4);
+        let shards = t.shard_cols_ragged(&parts);
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards[0].dims(), &[5, 4]);
+        assert_eq!(shards[3].dims(), &[5, 3]);
+        assert_eq!(Tensor::concat_cols(&shards), t);
+
+        let t2 = Tensor::rand(&[11, 3], 1.0, &mut rng);
+        let parts2 = crate::util::partition(11, 4);
+        assert_eq!(Tensor::concat_rows(&t2.shard_rows_ragged(&parts2)), t2);
+    }
+
+    #[test]
+    fn ragged_shard_can_be_empty() {
+        let t = Tensor::zeros(&[2, 2]);
+        let parts = crate::util::partition(2, 4); // two empty tails
+        let shards = t.shard_cols_ragged(&parts);
+        assert_eq!(shards[2].dims(), &[2, 0]);
+        assert_eq!(shards[3].numel(), 0);
     }
 
     #[test]

@@ -13,3 +13,71 @@ pub mod table;
 pub use prng::Prng;
 pub use stats::{geomean, LatencyHistogram, Summary};
 pub use table::{fmt_bytes, fmt_count, fmt_ns, Table};
+
+/// Partition `n` elements into `parts` contiguous (offset, len) segments,
+/// as evenly as possible: the first `n % parts` segments get one extra
+/// element. This is the canonical ragged-scatter layout shared by the
+/// collectives (`reduce_scatter_sum` with `n % world != 0`), the fused
+/// GEMM+ReduceScatter coordinator, and the tensor-parallel MLP sharding —
+/// one convention everywhere so segments always line up across layers.
+pub fn partition(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    assert!(parts >= 1, "partition into zero parts");
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut off = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push((off, len));
+        off += len;
+    }
+    debug_assert_eq!(off, n);
+    out
+}
+
+#[cfg(test)]
+mod partition_tests {
+    use super::partition;
+
+    #[test]
+    fn even_division() {
+        assert_eq!(partition(8, 4), vec![(0, 2), (2, 2), (4, 2), (6, 2)]);
+    }
+
+    #[test]
+    fn ragged_front_loads_remainder() {
+        assert_eq!(partition(10, 4), vec![(0, 3), (3, 3), (6, 2), (8, 2)]);
+        assert_eq!(partition(5, 3), vec![(0, 2), (2, 2), (4, 1)]);
+    }
+
+    #[test]
+    fn fewer_elements_than_parts_gives_empty_tails() {
+        assert_eq!(partition(2, 4), vec![(0, 1), (1, 1), (2, 0), (2, 0)]);
+        assert_eq!(partition(0, 2), vec![(0, 0), (0, 0)]);
+    }
+
+    #[test]
+    fn single_part_is_identity() {
+        assert_eq!(partition(7, 1), vec![(0, 7)]);
+    }
+
+    #[test]
+    fn covers_exactly_without_overlap() {
+        for n in [0usize, 1, 7, 64, 97] {
+            for parts in [1usize, 2, 3, 8] {
+                let p = partition(n, parts);
+                assert_eq!(p.len(), parts);
+                let mut expect_off = 0;
+                for (off, len) in &p {
+                    assert_eq!(*off, expect_off);
+                    expect_off += len;
+                }
+                assert_eq!(expect_off, n);
+                // segment lengths differ by at most one
+                let lens: Vec<usize> = p.iter().map(|(_, l)| *l).collect();
+                let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(mx - mn <= 1);
+            }
+        }
+    }
+}

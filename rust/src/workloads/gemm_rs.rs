@@ -1,0 +1,250 @@
+//! Timing twin of the fused GEMM + Reduce-Scatter strategies: builds the
+//! discrete-event program for the BSP composition and the fused pipeline
+//! at arbitrary (M, N, K, world) and returns the simulated timeline + tax
+//! ledger. The functional twin (real data movement, same protocols) is
+//! [`crate::coordinator::gemm_rs`].
+//!
+//! Structure per strategy (mirror of [`crate::workloads::ag_gemm`]):
+//!
+//! * **BaselineBsp** — launch(GEMM) → monolithic partial GEMM (vendor) →
+//!   HBM round-trip of the full partial (Inter-Kernel Tax: the collective
+//!   re-reads what the GEMM just wrote) → entry barrier → launch(RS) →
+//!   RCCL-shaped reduce-scatter kernel (block exchange + reduction) →
+//!   exit barrier. Pays all three taxes.
+//! * **FusedTiles** — push kernel on stream 1 conceptually fused with the
+//!   tile GEMM on stream 0: each (consumer, tile) block is pushed the
+//!   moment it is computed; the consumer's reduction chunks run behind
+//!   per-tile dependencies. One extra launch, no barriers, no HBM staging
+//!   of the partial.
+
+use crate::config::{GemmRsConfig, HwConfig};
+use crate::coordinator::GemmRsStrategy;
+use crate::sim::cost::{self, GemmImpl};
+use crate::sim::{Sim, SimResult, TaskId};
+
+/// Build and run the DES program for one GEMM+RS operation.
+pub fn simulate(
+    cfg: &GemmRsConfig,
+    hw: &HwConfig,
+    strategy: GemmRsStrategy,
+    seed: u64,
+) -> SimResult {
+    cfg.validate().expect("invalid GemmRsConfig");
+    let mut sim = Sim::new(hw, cfg.world, seed);
+    match strategy {
+        GemmRsStrategy::BaselineBsp => build_baseline(&mut sim, cfg, hw),
+        GemmRsStrategy::FusedTiles => build_fused(&mut sim, cfg, hw),
+    }
+    sim.run()
+}
+
+/// Mean makespan over `iters` simulated iterations (§5.1 protocol; jitter
+/// seeds differ per iteration).
+pub fn mean_latency_s(
+    cfg: &GemmRsConfig,
+    hw: &HwConfig,
+    strategy: GemmRsStrategy,
+    seed: u64,
+    iters: usize,
+) -> f64 {
+    assert!(iters > 0);
+    (0..iters)
+        .map(|i| simulate(cfg, hw, strategy, seed.wrapping_add(i as u64)).makespan_s)
+        .sum::<f64>()
+        / iters as f64
+}
+
+fn build_baseline(sim: &mut Sim, cfg: &GemmRsConfig, hw: &HwConfig) {
+    let w = cfg.world;
+    let parts = cfg.n_partition();
+    let k_parts = cfg.k_partition();
+    let seg_max = cfg.seg_max();
+
+    // GEMM stage: one monolithic partial product per rank, staged to HBM
+    // for the collective that follows
+    let mut arrivals = Vec::with_capacity(w);
+    for r in 0..w {
+        let l = sim.launch(r, "rs_gemm_launch", &[]);
+        let kr = k_parts[r].1;
+        let dur = cost::gemm_time(hw, cfg.m, cfg.n, kr.max(1), GemmImpl::Vendor)
+            .max(hw.kernel_min_s);
+        let dur = sim.jittered(dur);
+        let c = sim.compute(r, "partial_gemm", dur, &[l]);
+        // the partial is evicted to HBM and re-read by the collective:
+        // the Inter-Kernel Tax
+        let rt = sim.hbm_roundtrip(r, (cfg.m * cfg.n * 2) as u64, &[c]);
+        arrivals.push(rt);
+    }
+    let entry = sim.barrier(&arrivals);
+
+    // Collective stage: RCCL-shaped reduce-scatter (block exchange at
+    // aggregate fabric bandwidth + the fold of w-1 remote contributions)
+    let mut coll = Vec::with_capacity(w);
+    for r in 0..w {
+        let l = sim.launch(r, "rs_collective_launch", &[entry[r]]);
+        let comm = cost::multipush_time(hw, (cfg.m * seg_max * 2) as u64, w, hw.rma_store_eff);
+        let red = cost::reduce_accum_time(hw, cfg.m * parts[r].1, w.saturating_sub(1));
+        let dur = sim.jittered((comm + red).max(hw.kernel_min_s));
+        coll.push(sim.compute(r, "rccl_reduce_scatter", dur, &[l]));
+    }
+    let _exit = sim.barrier(&coll);
+}
+
+fn build_fused(sim: &mut Sim, cfg: &GemmRsConfig, hw: &HwConfig) {
+    let w = cfg.world;
+    let parts = cfg.n_partition();
+    let k_parts = cfg.k_partition();
+
+    // stage 1: tile-granular partial GEMM; each (consumer, tile) block is
+    // pushed the moment it exists. `done[r][dst][t]` is the consumer-
+    // visible completion of producer r's tile t for consumer dst (the
+    // push for remote consumers, the compute chunk itself for dst == r).
+    let mut done: Vec<Vec<Vec<TaskId>>> = vec![vec![Vec::new(); w]; w];
+    let mut tail = Vec::with_capacity(w);
+    for r in 0..w {
+        let lp = sim.launch(r, "rs_push_launch", &[]);
+        let lg = sim.launch(r, "rs_gemm_launch", &[lp]);
+        // one jitter draw per rank-kernel (chunks of one kernel share the
+        // slow-clock fate of their CU set)
+        let jf = sim.jittered(1.0);
+        let kr = k_parts[r].1;
+        let gemm_total = cost::gemm_time(hw, cfg.m, cfg.n, kr.max(1), GemmImpl::Tile);
+        let mut prev = lg;
+        for d in 0..w {
+            let dst = (r + d) % w;
+            let (_, len) = parts[dst];
+            for &(_c0, tl) in &cfg.seg_tiles(len) {
+                let dur = gemm_total * (tl as f64 / cfg.n as f64) * jf;
+                let c = sim.compute(r, "rs_gemm_chunk", dur, &[prev]);
+                prev = c;
+                if dst == r {
+                    done[r][dst].push(c);
+                } else {
+                    // the push kernel on stream 1 ships the block the
+                    // moment the chunk exists; issue occupancy stays off
+                    // the compute stream (paper §4.1.4 concurrency)
+                    let p = sim.push_on(r, 1, dst, (cfg.m * tl * 2) as u64, &[c]);
+                    done[r][dst].push(p);
+                }
+            }
+        }
+        tail.push(prev);
+    }
+
+    // stage 2: concurrent reduction — fold own tiles (already on-chip),
+    // then each remote (source, tile) behind its arrival
+    for r in 0..w {
+        let jf = sim.jittered(1.0);
+        let tiles = cfg.seg_tiles(parts[r].1);
+        let mut prev = tail[r];
+        for d in 0..w {
+            let s = (r + d) % w;
+            for (t, &(_c0, tl)) in tiles.iter().enumerate() {
+                let dur = cost::reduce_accum_time(hw, cfg.m * tl, 1) * jf;
+                let deps = vec![prev, done[s][r][t]];
+                prev = sim.compute(r, "rs_reduce_chunk", dur, &deps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn down(m: usize) -> GemmRsConfig {
+        GemmRsConfig::paper_down_proj(m)
+    }
+
+    fn latency(m: usize, s: GemmRsStrategy) -> f64 {
+        mean_latency_s(&down(m), &presets::mi325x(), s, 4321, 20)
+    }
+
+    #[test]
+    fn fused_beats_bsp_outside_torch_window() {
+        // beyond the vendor-GEMM bonus window the fused pipeline must win:
+        // it pays no barrier skew, no HBM staging, and overlaps the
+        // exchange with compute
+        for m in [256usize, 1024, 4096] {
+            let bsp = latency(m, GemmRsStrategy::BaselineBsp);
+            let fused = latency(m, GemmRsStrategy::FusedTiles);
+            assert!(fused < bsp, "M={m}: fused {fused} !< bsp {bsp}");
+        }
+    }
+
+    #[test]
+    fn bsp_pays_all_three_taxes() {
+        let r = simulate(&down(64), &presets::mi325x(), GemmRsStrategy::BaselineBsp, 7);
+        assert_eq!(r.ledger.launches, 16, "2 launches per rank");
+        assert!(r.ledger.launch_s > 0.0);
+        assert!(r.ledger.bulk_sync_s > 0.0, "barrier skew must show up");
+        assert!(r.ledger.inter_kernel_s > 0.0, "partial staged through HBM");
+    }
+
+    #[test]
+    fn fused_pays_strictly_less_bulk_sync_tax() {
+        // the acceptance criterion: the fused path pays *strictly* less
+        // bulk-synchronous tax than BSP GEMM→ReduceScatter — in fact none
+        for m in [16usize, 64, 1024] {
+            let bsp = simulate(&down(m), &presets::mi325x(), GemmRsStrategy::BaselineBsp, 11);
+            let fused = simulate(&down(m), &presets::mi325x(), GemmRsStrategy::FusedTiles, 11);
+            assert!(bsp.ledger.bulk_sync_s > 0.0, "M={m}: BSP must pay bulk-sync");
+            assert_eq!(fused.ledger.bulk_sync_s, 0.0, "M={m}: fused pays none");
+            assert!(
+                fused.ledger.bulk_sync_s < bsp.ledger.bulk_sync_s,
+                "M={m}: strict inequality"
+            );
+            assert_eq!(fused.ledger.inter_kernel_s, 0.0, "M={m}: no HBM staging");
+        }
+    }
+
+    #[test]
+    fn fused_fabric_bytes_match_analytic() {
+        // every rank ships its partial of every *remote* segment once:
+        // 2 * M * N * (W-1) bytes total (fp16)
+        let cfg = down(128);
+        let r = simulate(&cfg, &presets::mi325x(), GemmRsStrategy::FusedTiles, 3);
+        let expect = (2 * cfg.m * cfg.n * (cfg.world - 1)) as u64;
+        assert_eq!(r.ledger.fabric_bytes, expect);
+    }
+
+    #[test]
+    fn fused_reduce_time_is_attributed_by_label() {
+        let r = simulate(&down(512), &presets::mi325x(), GemmRsStrategy::FusedTiles, 5);
+        assert!(r.time_by_label("rs_gemm_chunk") > 0.0);
+        assert!(r.time_by_label("rs_reduce_chunk") > 0.0);
+        assert!(
+            r.time_by_label("rs_reduce_chunk") < r.time_by_label("rs_gemm_chunk"),
+            "reduction must be cheap relative to the GEMM"
+        );
+        assert_eq!(r.count_by_label("rs_push_launch"), 8);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = simulate(&down(256), &presets::mi325x(), GemmRsStrategy::FusedTiles, 99);
+        let b = simulate(&down(256), &presets::mi325x(), GemmRsStrategy::FusedTiles, 99);
+        assert_eq!(a.makespan_s, b.makespan_s);
+    }
+
+    #[test]
+    fn world_one_degenerates_gracefully() {
+        let cfg = GemmRsConfig { m: 64, n: 256, k: 512, world: 1, block_n: 64 };
+        for s in GemmRsStrategy::ALL {
+            let r = simulate(&cfg, &presets::mi325x(), s, 5);
+            assert!(r.makespan_s > 0.0, "{s:?}");
+            assert_eq!(r.ledger.fabric_bytes, 0, "{s:?} moved bytes with world=1");
+        }
+    }
+
+    #[test]
+    fn ragged_shapes_simulate() {
+        // ragged N and K: tile/segment bookkeeping must stay consistent
+        let cfg = GemmRsConfig { m: 32, n: 1000, k: 777, world: 8, block_n: 96 };
+        for s in GemmRsStrategy::ALL {
+            let r = simulate(&cfg, &presets::mi325x(), s, 6);
+            assert!(r.makespan_s > 0.0 && r.makespan_s.is_finite(), "{s:?}");
+        }
+    }
+}

@@ -2,12 +2,17 @@
 //! built on the discrete-event model ([`crate::sim`]).
 //!
 //! * [`ag_gemm`] — All-Gather + GEMM (paper §4.1, Figure 9);
+//! * [`gemm_rs`] — fused GEMM + Reduce-Scatter (the mirror pattern: the
+//!   row-parallel down-projection), BSP composition vs fused pipeline;
 //! * [`flash_decode`] — distributed Flash Decode (paper §4.2, Figures
 //!   10–11);
+//! * [`all_reduce`] — the §6.2 training extension (bucketed gradient
+//!   all-reduce overlapped with the backward pass);
 //! * [`transformer`] — a tiny tensor-parallel transformer decode model
 //!   built from the same pieces, used by the end-to-end serving example.
 
 pub mod ag_gemm;
 pub mod all_reduce;
 pub mod flash_decode;
+pub mod gemm_rs;
 pub mod transformer;

@@ -1,27 +1,39 @@
 //! A tiny tensor-parallel transformer decode model built on the paper's
 //! fused patterns — the workload behind the end-to-end serving example.
 //!
-//! Architecture (sequence-parallel decode, the setting of paper §4.2):
-//! weights are replicated; the KV cache is sharded across ranks along the
-//! sequence dimension (token `t`'s KV lives on rank `t % world`). One
-//! decode step per layer is:
+//! Architecture (decode, the setting of paper §4.2):
 //!
-//! 1. `qkv`    — local dense projection (replicated compute);
-//! 2. append   — the owning rank stores the new token's K/V in its shard;
-//! 3. attention — **distributed flash decode over the KV shards using the
-//!    paper's fully-fused pattern** (partial per rank, tile push + flags,
-//!    concurrent reduction);
-//! 4. `post_attn` — output projection + MLP + residuals (local dense).
+//! * **Attention is sequence-parallel**: QKV/output-projection weights are
+//!   replicated; the KV cache is sharded across ranks along the sequence
+//!   dimension (token `t`'s KV lives on rank `t % world`), and attention
+//!   runs the paper's fully-fused distributed Flash Decode (partial per
+//!   rank, tile push + flags, concurrent reduction — Algorithm 4).
+//! * **The MLP is tensor-parallel**: the up-projection `W1` is
+//!   column-sharded (rank r owns `W1[:, ffn_r]`) and the down-projection
+//!   `W2` is row-sharded (rank r owns `W2[ffn_r, :]`), with the ragged
+//!   [`crate::util::partition`] layout so `ffn_hidden` and `d_model` need
+//!   not divide by the world size. A decode step computes each rank's
+//!   partial down-projection `gelu(x · W1_r) · W2_r` locally; the serving
+//!   engine then runs the fused GEMM+ReduceScatter exchange (the mirror of
+//!   AG+GEMM — see [`crate::coordinator::gemm_rs`]) followed by a
+//!   flag-synchronized all-gather of the reduced segments. On the decode
+//!   path (M = 1) the column-parallel up-projection's all-gather
+//!   degenerates to "gather the activation segments, then GEMM" — the
+//!   same data movement the AG+GEMM path fuses at tile granularity for
+//!   prefill-sized M.
 //!
 //! The local dense compute is abstracted behind [`LocalCompute`] so the
 //! serving path can execute it either natively ([`NativeCompute`]) or via
 //! the PJRT runtime running the AOT-compiled JAX artifact
-//! (`runtime::PjrtCompute`) — same protocol, Python never involved.
+//! (`runtime::PjrtCompute`) — same protocol, Python never involved. A
+//! backend advertises TP sharding via [`LocalCompute::tp_sharded`]; the
+//! PJRT backend keeps the replicated-MLP layout (its artifact is the
+//! monolithic post-attention block).
 
 use crate::kernels::attention::{flash_decode_partial, PartialState};
 use crate::kernels::combine::OnlineCombiner;
 use crate::tensor::Tensor;
-use crate::util::Prng;
+use crate::util::{partition, Prng};
 
 /// Model geometry.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -51,6 +63,22 @@ impl TransformerConfig {
             world,
             kv_block: 4,
             max_seq: 64,
+        }
+    }
+
+    /// Ragged-sharding test config: `d_model` (33) and `ffn_hidden` (50)
+    /// deliberately do not divide by common world sizes, exercising the
+    /// ragged partition layout of the TP MLP end to end.
+    pub fn tiny_ragged(world: usize) -> TransformerConfig {
+        TransformerConfig {
+            d_model: 33,
+            n_heads: 3,
+            head_dim: 11,
+            n_layers: 2,
+            ffn_hidden: 50,
+            world,
+            kv_block: 4,
+            max_seq: 48,
         }
     }
 
@@ -95,6 +123,18 @@ impl TransformerConfig {
     pub fn shard_capacity(&self) -> usize {
         self.max_seq.div_ceil(self.world)
     }
+
+    /// Partition of `ffn_hidden` across ranks (TP shard of W1 cols /
+    /// W2 rows). Ragged allowed.
+    pub fn ffn_partition(&self) -> Vec<(usize, usize)> {
+        partition(self.ffn_hidden, self.world)
+    }
+
+    /// Partition of `d_model` across ranks (the reduce-scatter segments of
+    /// the fused down-projection). Ragged allowed.
+    pub fn d_model_partition(&self) -> Vec<(usize, usize)> {
+        partition(self.d_model, self.world)
+    }
 }
 
 /// One layer's dense weights.
@@ -110,7 +150,9 @@ pub struct LayerWeights {
     pub w2: Tensor,
 }
 
-/// Full model weights (replicated on every rank).
+/// Full model weights. Attention weights are replicated on every rank;
+/// the MLP weights are either used whole (replicated mode) or sliced into
+/// this rank's TP shard at construction ([`NativeCompute::new_tp`]).
 #[derive(Debug, Clone)]
 pub struct TransformerWeights {
     pub layers: Vec<LayerWeights>,
@@ -145,14 +187,68 @@ impl TransformerWeights {
 /// Deliberately *not* `Send + Sync`: the `xla` crate's PJRT handles are
 /// `Rc`-based, so each rank engine constructs its own instance (see
 /// `serve::ComputeFactory`).
+///
+/// A backend either keeps the MLP **replicated** (default; the serving
+/// engine calls [`LocalCompute::post_attn`] and no MLP communication
+/// happens) or holds a **TP shard** (`tp_sharded() == true`; the engine
+/// calls [`LocalCompute::attn_out_proj`] + [`LocalCompute::mlp_partial`]
+/// and runs the fused GEMM+RS exchange between them).
 pub trait LocalCompute {
     /// h [1, d_model] → (q [heads, dim], k_new [heads, dim], v_new [heads, dim]).
     fn qkv(&self, layer: usize, h: &Tensor) -> (Tensor, Tensor, Tensor);
-    /// (h [1, d_model], attn_out [heads, dim]) → next h [1, d_model]
-    /// (output projection + residual + MLP + residual).
-    fn post_attn(&self, layer: usize, h: &Tensor, attn_out: &Tensor) -> Tensor;
+
     /// Number of layers available.
     fn n_layers(&self) -> usize;
+
+    /// Whether this backend holds only its rank's shard of the MLP
+    /// weights (and therefore requires the fused GEMM+RS exchange).
+    fn tp_sharded(&self) -> bool {
+        false
+    }
+
+    /// Output projection + first residual:
+    /// `h1 = h + flatten(attn_out) · Wo`. Required for TP backends; the
+    /// replicated default is built from it too.
+    fn attn_out_proj(&self, layer: usize, h: &Tensor, attn_out: &Tensor) -> Tensor {
+        let _ = (layer, h, attn_out);
+        unimplemented!("this LocalCompute backend only supports the monolithic post_attn path")
+    }
+
+    /// This rank's partial down-projection of the MLP:
+    /// `gelu(x_norm · W1_r) · W2_r`, shape [1, d_model]. For a replicated
+    /// backend the "shard" is the whole weight and the partial *is* the
+    /// full MLP output. Summing all ranks' partials gives the full MLP.
+    fn mlp_partial(&self, layer: usize, x_norm: &Tensor) -> Tensor {
+        let _ = (layer, x_norm);
+        unimplemented!("this LocalCompute backend only supports the monolithic post_attn path")
+    }
+
+    /// (h [1, d_model], attn_out [heads, dim]) → next h [1, d_model]:
+    /// the full replicated post-attention block (output projection +
+    /// residual + MLP + residual). Default composition of
+    /// [`LocalCompute::attn_out_proj`] and [`LocalCompute::mlp_partial`];
+    /// backends with a monolithic artifact (PJRT) override it directly.
+    fn post_attn(&self, layer: usize, h: &Tensor, attn_out: &Tensor) -> Tensor {
+        let h1 = self.attn_out_proj(layer, h, attn_out);
+        let x = rmsnorm(&h1);
+        let mlp = self.mlp_partial(layer, &x);
+        let mut out = h1;
+        for (a, b) in out.data_mut().iter_mut().zip(mlp.data()) {
+            *a += b;
+        }
+        out
+    }
+}
+
+/// MLP weight residency of a [`NativeCompute`].
+#[derive(Debug, Clone)]
+enum MlpWeights {
+    /// Full W1/W2 on this instance (single-rank reference, or the legacy
+    /// replicated serving mode).
+    Replicated,
+    /// This rank's TP shard: per layer, (W1 columns, W2 rows) of the
+    /// rank's ffn segment.
+    Sharded { w1: Vec<Tensor>, w2: Vec<Tensor> },
 }
 
 /// Native (host tile-kernel) implementation of [`LocalCompute`] — the
@@ -160,13 +256,39 @@ pub trait LocalCompute {
 pub struct NativeCompute {
     cfg: TransformerConfig,
     weights: TransformerWeights,
+    mlp: MlpWeights,
 }
 
 impl NativeCompute {
+    /// Replicated-weights instance (every rank holds the full MLP).
     pub fn new(cfg: TransformerConfig, weights: TransformerWeights) -> NativeCompute {
         cfg.validate().expect("invalid TransformerConfig");
         assert_eq!(weights.layers.len(), cfg.n_layers);
-        NativeCompute { cfg, weights }
+        NativeCompute { cfg, weights, mlp: MlpWeights::Replicated }
+    }
+
+    /// Tensor-parallel instance holding only rank `rank`'s shard of the
+    /// MLP: W1 columns / W2 rows of ffn segment `rank` (ragged partition).
+    /// Attention weights stay replicated (sequence-parallel attention).
+    pub fn new_tp(
+        cfg: TransformerConfig,
+        mut weights: TransformerWeights,
+        rank: usize,
+    ) -> NativeCompute {
+        cfg.validate().expect("invalid TransformerConfig");
+        assert_eq!(weights.layers.len(), cfg.n_layers);
+        assert!(rank < cfg.world, "rank {rank} out of range for world {}", cfg.world);
+        let (off, len) = cfg.ffn_partition()[rank];
+        let w1 = weights.layers.iter().map(|lw| lw.w1.cols(off, off + len)).collect();
+        let w2 = weights.layers.iter().map(|lw| lw.w2.rows(off, off + len)).collect();
+        // release the full MLP weights: a sharded rank holds only its
+        // shard (the memory point of TP), plus the replicated attention
+        // weights it still needs for qkv / attn_out_proj
+        for lw in &mut weights.layers {
+            lw.w1 = Tensor::zeros(&[0, 0]);
+            lw.w2 = Tensor::zeros(&[0, 0]);
+        }
+        NativeCompute { cfg, weights, mlp: MlpWeights::Sharded { w1, w2 } }
     }
 
     pub fn config(&self) -> &TransformerConfig {
@@ -194,8 +316,9 @@ fn gelu(x: f32) -> f32 {
 
 /// RMSNorm (no learned gain) — keeps the residual stream bounded across
 /// arbitrarily long decodes; must match `rmsnorm` in
-/// `python/compile/model.py`.
-fn rmsnorm(x: &Tensor) -> Tensor {
+/// `python/compile/model.py`. Public because the TP serving engine norms
+/// the residual stream between the attention and MLP exchanges.
+pub fn rmsnorm(x: &Tensor) -> Tensor {
     let n = x.numel() as f32;
     let ms = x.data().iter().map(|v| v * v).sum::<f32>() / n;
     let inv = 1.0 / (ms + 1e-6).sqrt();
@@ -221,34 +344,41 @@ impl LocalCompute for NativeCompute {
         (split(0), split(cfg.d_model), split(2 * cfg.d_model))
     }
 
-    fn post_attn(&self, layer: usize, h: &Tensor, attn_out: &Tensor) -> Tensor {
+    fn n_layers(&self) -> usize {
+        self.cfg.n_layers
+    }
+
+    fn tp_sharded(&self) -> bool {
+        // a world-1 "shard" is the whole weight: no exchange needed
+        matches!(self.mlp, MlpWeights::Sharded { .. }) && self.cfg.world > 1
+    }
+
+    fn attn_out_proj(&self, layer: usize, h: &Tensor, attn_out: &Tensor) -> Tensor {
         let cfg = &self.cfg;
         let lw = &self.weights.layers[layer];
         // flatten attn_out [heads, dim] -> [1, d_model]
         let flat = Tensor::from_vec(&[1, cfg.d_model], attn_out.data().to_vec());
         let proj = Self::dense(&flat, &lw.wo);
-        // residual 1
         let mut h1 = h.clone();
         for (a, b) in h1.data_mut().iter_mut().zip(proj.data()) {
             *a += b;
         }
-        // MLP with pre-norm
-        let x = rmsnorm(&h1);
-        let mut mid = Self::dense(&x, &lw.w1);
+        h1
+    }
+
+    fn mlp_partial(&self, layer: usize, x_norm: &Tensor) -> Tensor {
+        let (w1, w2) = match &self.mlp {
+            MlpWeights::Replicated => {
+                let lw = &self.weights.layers[layer];
+                (&lw.w1, &lw.w2)
+            }
+            MlpWeights::Sharded { w1, w2 } => (&w1[layer], &w2[layer]),
+        };
+        let mut mid = Self::dense(x_norm, w1);
         for v in mid.data_mut().iter_mut() {
             *v = gelu(*v);
         }
-        let mlp = Self::dense(&mid, &lw.w2);
-        // residual 2
-        let mut out = h1;
-        for (a, b) in out.data_mut().iter_mut().zip(mlp.data()) {
-            *a += b;
-        }
-        out
-    }
-
-    fn n_layers(&self) -> usize {
-        self.cfg.n_layers
+        Self::dense(&mid, w2)
     }
 }
 
@@ -381,6 +511,7 @@ mod tests {
     #[test]
     fn config_validation() {
         TransformerConfig::tiny(4).validate().unwrap();
+        TransformerConfig::tiny_ragged(4).validate().unwrap();
         TransformerConfig::e2e(8).validate().unwrap();
         let mut bad = TransformerConfig::tiny(2);
         bad.d_model = 33;
@@ -393,6 +524,17 @@ mod tests {
         let p = cfg.n_params();
         // 4 layers * (256*768 + 256*256 + 2*256*1024) = ~3.1M
         assert!(p > 3_000_000 && p < 3_300_000, "{p}");
+    }
+
+    #[test]
+    fn ragged_partitions_cover_dimensions() {
+        let cfg = TransformerConfig::tiny_ragged(4); // d_model 33, ffn 50
+        let fp = cfg.ffn_partition();
+        assert_eq!(fp.iter().map(|(_, l)| l).sum::<usize>(), cfg.ffn_hidden);
+        let dp = cfg.d_model_partition();
+        assert_eq!(dp.iter().map(|(_, l)| l).sum::<usize>(), cfg.d_model);
+        // genuinely ragged: not all segments equal
+        assert!(dp.iter().any(|(_, l)| *l != dp[0].1) || cfg.d_model % 4 != 0);
     }
 
     #[test]
@@ -474,5 +616,56 @@ mod tests {
         assert_eq!(q.at2(1, 2), flat[cfg.head_dim + 2]);
         assert_eq!(k.at2(0, 0), flat[cfg.d_model]);
         assert_eq!(v.at2(3, 7), flat[2 * cfg.d_model + 3 * cfg.head_dim + 7]);
+    }
+
+    #[test]
+    fn tp_shards_sum_to_replicated_mlp() {
+        // the TP invariant: Σ_r mlp_partial_r == replicated MLP output,
+        // for both even and ragged shardings
+        for cfg in [TransformerConfig::tiny(4), TransformerConfig::tiny_ragged(4)] {
+            let w = TransformerWeights::random(&cfg, 10);
+            let replicated = NativeCompute::new(cfg.clone(), w.clone());
+            let h = token_embedding(&cfg, 5);
+            let x = rmsnorm(&h);
+            let full = replicated.mlp_partial(0, &x);
+            let mut sum = Tensor::zeros(&[1, cfg.d_model]);
+            for rank in 0..cfg.world {
+                let shard = NativeCompute::new_tp(cfg.clone(), w.clone(), rank);
+                assert!(shard.tp_sharded());
+                let p = shard.mlp_partial(0, &x);
+                assert_eq!(p.dims(), &[1, cfg.d_model]);
+                for (a, b) in sum.data_mut().iter_mut().zip(p.data()) {
+                    *a += b;
+                }
+            }
+            sum.assert_allclose(&full, 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn tp_post_attn_matches_replicated_for_world_one() {
+        // a world=1 "shard" is the whole weight: the default post_attn
+        // composition must agree with the replicated instance exactly
+        let cfg = TransformerConfig::tiny_ragged(1);
+        let w = TransformerWeights::random(&cfg, 11);
+        let rep = NativeCompute::new(cfg.clone(), w.clone());
+        let tp = NativeCompute::new_tp(cfg.clone(), w, 0);
+        assert!(!tp.tp_sharded(), "world=1 shard is effectively replicated");
+        let h = token_embedding(&cfg, 6);
+        let attn = Tensor::from_vec(
+            &[cfg.n_heads, cfg.head_dim],
+            token_embedding(&cfg, 7).data().to_vec(),
+        );
+        let a = rep.post_attn(0, &h, &attn);
+        let b = tp.post_attn(0, &h, &attn);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn replicated_backend_is_not_tp() {
+        let cfg = TransformerConfig::tiny(2);
+        let w = TransformerWeights::random(&cfg, 12);
+        assert!(!NativeCompute::new(cfg.clone(), w.clone()).tp_sharded());
+        assert!(NativeCompute::new_tp(cfg, w, 1).tp_sharded());
     }
 }

@@ -1,18 +1,18 @@
 //! Integration: failure injection on the iris substrate — dead producers
-//! are detected by wait timeouts instead of hanging, slow ranks never
-//! corrupt results (only delay them), and the node propagates engine
-//! panics.
+//! are detected by wait timeouts instead of hanging, misnamed buffers
+//! surface as typed recoverable errors, slow ranks never corrupt results
+//! (only delay them), and the node propagates engine panics.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use taxfree::collectives;
-use taxfree::iris::{run_node, run_node_with_timeout, HeapBuilder};
+use taxfree::iris::{run_node, run_node_with_timeout, HeapBuilder, IrisError};
 
 #[test]
 fn dead_producer_hits_timeout_not_hang() {
-    // rank 1 "dies" (never pushes); consumers must get a WaitTimeout
+    // rank 1 "dies" (never pushes); consumers must get a typed timeout
     let world = 3;
     let heap = Arc::new(HeapBuilder::new(world).buffer("b", 4).flags("f", world).build());
     let outcomes = run_node_with_timeout(heap, Duration::from_millis(100), move |ctx| {
@@ -20,10 +20,10 @@ fn dead_producer_hits_timeout_not_hang() {
             return Ok(0); // dead rank: contributes nothing
         }
         // everyone else publishes and waits for all flags
-        ctx.remote_store((ctx.rank() + 1) % 3, "b", 0, &[1.0]);
+        ctx.remote_store((ctx.rank() + 1) % 3, "b", 0, &[1.0]).unwrap();
         for s in 0..ctx.world() {
             if s != ctx.rank() {
-                ctx.signal(s, "f", ctx.rank());
+                ctx.signal(s, "f", ctx.rank()).unwrap();
             }
         }
         ctx.wait_flag_ge("f", 1, 1).map(|v| v as i32)
@@ -31,8 +31,31 @@ fn dead_producer_hits_timeout_not_hang() {
     assert!(outcomes[0].is_err(), "rank 0 must time out");
     assert!(outcomes[2].is_err(), "rank 2 must time out");
     let err = outcomes[0].as_ref().unwrap_err();
-    assert_eq!(err.idx, 1);
+    match err {
+        IrisError::Timeout(t) => assert_eq!(t.idx, 1),
+        other => panic!("expected Timeout, got {other:?}"),
+    }
     assert!(err.to_string().contains("timeout"));
+}
+
+#[test]
+fn misnamed_buffer_is_recoverable_per_rank() {
+    // a typo'd buffer name in one engine surfaces as a typed error on that
+    // rank; the other ranks' correct traffic is unaffected
+    let world = 2;
+    let heap = Arc::new(HeapBuilder::new(world).buffer("inbox", 4).flags("f", 1).build());
+    let outcomes = run_node(heap, move |ctx| {
+        if ctx.rank() == 0 {
+            // correct protocol half
+            ctx.store_local("inbox", 0, &[4.0]).map_err(|e| e.to_string())
+        } else {
+            // typo: recoverable, not a node-wide panic
+            ctx.store_local("inbxo", 0, &[4.0]).map_err(|e| e.to_string())
+        }
+    });
+    assert!(outcomes[0].is_ok());
+    let err = outcomes[1].as_ref().unwrap_err();
+    assert!(err.contains("unknown buffer: inbxo"), "{err}");
 }
 
 #[test]
@@ -71,13 +94,13 @@ fn interleaved_waiters_make_progress() {
     let outs = run_node_with_timeout(heap, Duration::from_secs(10), move |ctx| {
         let r = ctx.rank();
         if r == 0 {
-            ctx.signal(1 % ctx.world(), "chain", 0);
-            Ok::<u64, taxfree::iris::WaitTimeout>(0)
+            ctx.signal(1 % ctx.world(), "chain", 0)?;
+            Ok::<u64, IrisError>(0)
         } else {
             let v = ctx.wait_flag_ge("chain", r - 1, 1)?;
             let next = (r + 1) % ctx.world();
             if next != 0 {
-                ctx.signal(next, "chain", r);
+                ctx.signal(next, "chain", r)?;
             }
             Ok(v)
         }
@@ -97,11 +120,11 @@ fn flag_counts_are_conserved_under_contention() {
     let c2 = Arc::clone(&counter);
     let outs = run_node(heap, move |ctx| {
         for _ in 0..per_rank {
-            ctx.signal(0, "c", 0);
+            ctx.signal(0, "c", 0).unwrap();
             c2.fetch_add(1, Ordering::Relaxed);
         }
         ctx.barrier();
-        ctx.heap().flag_read(0, "c", 0)
+        ctx.heap().flag_read(0, "c", 0).unwrap()
     });
     assert_eq!(counter.load(Ordering::Relaxed), world * per_rank as usize);
     for o in outs {

@@ -4,8 +4,10 @@
 //! every rank, for randomized configurations (property-tested with the
 //! in-crate propcheck harness; proptest is unavailable offline).
 
-use taxfree::config::{AgGemmConfig, FlashDecodeConfig};
-use taxfree::coordinator::{ag_gemm, flash_decode, AgGemmStrategy, FlashDecodeStrategy};
+use taxfree::config::{AgGemmConfig, FlashDecodeConfig, GemmRsConfig};
+use taxfree::coordinator::{
+    ag_gemm, flash_decode, gemm_rs, AgGemmStrategy, FlashDecodeStrategy, GemmRsStrategy,
+};
 use taxfree::tensor::linalg::{decode_attention_ref, matmul};
 use taxfree::tensor::Tensor;
 use taxfree::util::propcheck::{check_no_shrink, Config, Verdict};
@@ -158,6 +160,83 @@ fn flash_decode_ranks_agree_exactly_within_strategy() {
             Verdict::Pass
         },
     );
+}
+
+#[test]
+fn gemm_rs_matches_dense_reference_worlds_1_2_4_ragged() {
+    // the acceptance criterion: fused GEMM+RS output must match both the
+    // single-rank dense reference and the BSP GEMM→reduce_scatter
+    // composition within fp tolerance, for world ∈ {1, 2, 4} and ragged
+    // dimensions (neither K nor N divides by the world)
+    for world in [1usize, 2, 4] {
+        for (m, n, k) in [(1usize, 10usize, 11usize), (3, 13, 9), (5, 7, 18)] {
+            let cfg = GemmRsConfig { m, n, k, world, block_n: 3 };
+            let mut rng = Prng::new(0xD0_u64 + (world * 100 + n) as u64);
+            let mut a = Tensor::rand(&[m, k], 1.0, &mut rng);
+            let mut b = Tensor::rand(&[k, n], 1.0, &mut rng);
+            a.quantize_f16();
+            b.quantize_f16();
+            let expect = matmul(&a, &b);
+            let bsp = gemm_rs::run(&cfg, GemmRsStrategy::BaselineBsp, &a, &b, 1);
+            let fused = gemm_rs::run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 1);
+            // fused == BSP bitwise (same tile kernel, same fold order)
+            assert_eq!(bsp, fused, "world {world} m {m} n {n} k {k}");
+            // both == dense reference within fp16/f32 tolerance
+            gemm_rs::gather_output(&fused)
+                .assert_allclose(&expect, 1e-2 * (k as f32).sqrt(), 1e-2);
+        }
+    }
+}
+
+#[test]
+fn gemm_rs_strategy_equivalence_property() {
+    // randomized shapes/worlds, ragged everywhere: BSP and fused must
+    // agree bitwise, and reassembling the segments must reproduce A·B
+    check_no_shrink(
+        &Config { cases: 25, seed: 0x6E55, ..Default::default() },
+        |rng| {
+            let world = rng.range(1, 7);
+            let cfg = GemmRsConfig {
+                m: rng.range(1, 7),
+                n: rng.range(1, 21),
+                k: rng.range(1, 25),
+                world,
+                block_n: rng.range(1, 6),
+            };
+            let seed = rng.next_u64();
+            (cfg, seed)
+        },
+        |(cfg, seed)| {
+            let mut rng = Prng::new(*seed);
+            let mut a = Tensor::rand(&[cfg.m, cfg.k], 1.0, &mut rng);
+            let mut b = Tensor::rand(&[cfg.k, cfg.n], 1.0, &mut rng);
+            a.quantize_f16();
+            b.quantize_f16();
+            let expect = matmul(&a, &b);
+            let bsp = gemm_rs::run(cfg, GemmRsStrategy::BaselineBsp, &a, &b, 1);
+            let fused = gemm_rs::run(cfg, GemmRsStrategy::FusedTiles, &a, &b, 1);
+            if bsp != fused {
+                return Verdict::Fail(format!("bsp != fused for {cfg:?}"));
+            }
+            let full = gemm_rs::gather_output(&fused);
+            let diff = full.max_abs_diff(&expect);
+            let tol = 1e-2 * (cfg.k as f32).sqrt();
+            Verdict::check(diff <= tol, || format!("diff {diff} > {tol} for {cfg:?}"))
+        },
+    );
+}
+
+#[test]
+fn gemm_rs_repeated_rounds_are_stable() {
+    let cfg = GemmRsConfig::tiny(4);
+    let mut rng = Prng::new(0x5EED);
+    let mut a = Tensor::rand(&[cfg.m, cfg.k], 1.0, &mut rng);
+    let mut b = Tensor::rand(&[cfg.k, cfg.n], 1.0, &mut rng);
+    a.quantize_f16();
+    b.quantize_f16();
+    let once = gemm_rs::run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 1);
+    let many = gemm_rs::run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 10);
+    assert_eq!(once, many);
 }
 
 #[test]
