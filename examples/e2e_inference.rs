@@ -87,7 +87,8 @@ fn main() {
         let w = TransformerWeights::random(&cfg2, weight_seed);
         let _ = rank;
         PjrtCompute::new(rt, cfg2.clone(), w).expect("wire PJRT compute")
-    });
+    })
+    .expect("serve");
 
     let s = report.latency_summary();
     println!("\n[3/3] results:");

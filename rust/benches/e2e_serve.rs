@@ -19,7 +19,8 @@ fn main() {
         let cfg2 = cfg.clone();
         let report = serve(&cfg, requests, move |_r| {
             NativeCompute::new(cfg2.clone(), TransformerWeights::random(&cfg2, 42))
-        });
+        })
+        .expect("serve");
         let s = report.latency_summary();
         t.row(vec![
             world.to_string(),

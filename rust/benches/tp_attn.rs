@@ -1,0 +1,78 @@
+//! Bench: the head-sharded TP attention figure (BSP Megatron vs the fused
+//! GEMM+RS pipeline) on the calibrated model, plus wall-clock throughput
+//! of the *functional* head-sharded serving path with real data movement.
+//! criterion is unavailable offline; this is a `harness = false` bench
+//! reporting through the crate's own Summary/Table.
+//!
+//! Run: `cargo bench --offline --bench tp_attn`
+
+use taxfree::clock::measure;
+use taxfree::config::presets;
+use taxfree::experiments::ext_tp_attn;
+use taxfree::serve::{serve, Request};
+use taxfree::util::{Summary, Table};
+use taxfree::workloads::transformer::{NativeCompute, TransformerConfig, TransformerWeights};
+
+fn main() {
+    let hw = presets::mi300x();
+    let seed = 7;
+
+    // the modeled figure (Llama-70B-class attention block)
+    let rows = ext_tp_attn::sweep(&hw, seed, 50);
+    ext_tp_attn::render(&rows, &hw).print();
+    let worst_bsp_tax = rows.iter().map(|r| r.bsp_bulk_sync_us).fold(0.0f64, f64::max);
+    println!(
+        "\nfused bulk-sync tax: 0 at every KV length (BSP pays up to {worst_bsp_tax:.1} us of rank-idle)"
+    );
+
+    // functional: tokens/s of the real serving node, replicated attention
+    // vs head-sharded TP attention (both through `serve`)
+    let mut t = Table::new("functional serve (tiny model, 5 requests)").header(vec![
+        "world",
+        "layout",
+        "tokens",
+        "tok/s",
+    ]);
+    for world in [2usize, 4] {
+        let cfg = TransformerConfig::tiny(world);
+        let reqs: Vec<Request> =
+            (0..5).map(|id| Request { id, prompt_len: 3, gen_len: 5 }).collect();
+        let cfg2 = cfg.clone();
+        let rep = serve(&cfg, reqs.clone(), move |_r| {
+            NativeCompute::new(cfg2.clone(), TransformerWeights::random(&cfg2, 42))
+        })
+        .expect("replicated serve");
+        let cfg2 = cfg.clone();
+        let tp = serve(&cfg, reqs, move |rank| {
+            NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, 42), rank)
+        })
+        .expect("TP serve");
+        t.row(vec![
+            world.to_string(),
+            "replicated".into(),
+            rep.total_tokens.to_string(),
+            format!("{:.0}", rep.tokens_per_s()),
+        ]);
+        t.row(vec![
+            world.to_string(),
+            "tp_heads".into(),
+            tp.total_tokens.to_string(),
+            format!("{:.0}", tp.tokens_per_s()),
+        ]);
+    }
+    println!();
+    t.print();
+
+    // harness cost: how fast the DES regenerates the whole figure
+    let samples = measure(2, 10, || {
+        let r = ext_tp_attn::sweep(&hw, seed, 10);
+        assert_eq!(r.len(), ext_tp_attn::KV_SWEEP.len());
+    });
+    let s = Summary::of(&samples);
+    println!(
+        "\nbench tp_attn: full figure ({} KV points x 2 strategies x 10 iters) in {:.2} ms mean, {:.2} ms p99",
+        ext_tp_attn::KV_SWEEP.len(),
+        s.mean / 1e6,
+        s.p99 / 1e6
+    );
+}

@@ -23,20 +23,27 @@
 //! need a barrier between rounds (data slots are reused; the coordinator
 //! strategies barrier per iteration per the §5.1 measurement protocol).
 //!
-//! **Ragged lengths.** `all_reduce_sum` and `reduce_scatter_sum` accept
-//! any `send.len()` — when `n % world != 0` the scatter segments follow
-//! [`crate::util::partition`] (first `n % world` segments one element
-//! longer) and staging slots are strided by `ceil(n / world)`. Their
-//! `data_buf` therefore needs `2 * world * ceil(n/world)` /
+//! **Ragged lengths.** `all_reduce_sum`, `reduce_scatter_sum`, and
+//! `all_to_all` accept any `send.len()` — when `n % world != 0` the
+//! segments follow [`crate::util::partition`] (first `n % world` segments
+//! one element longer, tails possibly empty when `n < world`) and staging
+//! slots are strided by `ceil(n / world)`. Their `data_buf` therefore
+//! needs `2 * world * ceil(n/world)` / `world * ceil(n/world)` /
 //! `world * ceil(n/world)` elements respectively (identical to the old
-//! requirement when `world` divides `n`). The ring variant still requires
-//! even division (a ring step forwards fixed-width segments).
+//! requirement when `world` divides `n`). The ring variants genuinely
+//! need fixed-width segments (a ring step forwards them blindly):
+//! `reduce_scatter_ring` returns [`IrisError::InvalidLayout`] instead of
+//! panicking when `world ∤ n`, and `all_gather_ring`'s requirement —
+//! every rank contributes the *same* `send.len()` — is a cross-rank
+//! contract no rank can check locally, so it is documented on the
+//! function instead. No assert-style panic path is left in this API;
+//! ring heap errors propagate as typed `Result`s.
 //!
 //! Iris heap/device errors are typed ([`crate::iris::IrisError`]); the
 //! collectives treat them as fatal protocol bugs and `expect()` them,
 //! which fails the engine loudly with the structured message.
 
-use crate::iris::RankCtx;
+use crate::iris::{IrisError, RankCtx};
 use crate::util::partition;
 
 /// Direct (clique) all-gather with push semantics and flag completion.
@@ -100,32 +107,32 @@ pub fn all_gather_pull(
 /// Ring all-gather: `world - 1` steps; at step t, rank r forwards the
 /// segment that originated at `r - t` to its ring successor. Exercises
 /// pipelined neighbor traffic (the topology RCCL actually uses at scale).
+/// Every rank must contribute the same `send.len()` (ring steps forward
+/// fixed-width segments); use [`all_gather_push`] for anything else.
 pub fn all_gather_ring(
     ctx: &RankCtx,
     send: &[f32],
     data_buf: &str,
     flag_buf: &str,
     round: u64,
-) -> Vec<f32> {
+) -> Result<Vec<f32>, IrisError> {
     let (r, w) = (ctx.rank(), ctx.world());
     let len = send.len();
-    ctx.store_local(data_buf, r * len, send).expect("all_gather_ring publish");
+    ctx.store_local(data_buf, r * len, send)?;
     let next = (r + 1) % w;
     // flags: flag_buf[s] on this rank means "segment of source s arrived"
     for step in 0..w.saturating_sub(1) {
         // segment that originated at (r - step) mod w is ready locally
         let src_seg = (r + w - step) % w;
-        let seg = ctx
-            .load_local_vec(data_buf, src_seg * len, len)
-            .expect("all_gather_ring local load");
-        ctx.remote_store(next, data_buf, src_seg * len, &seg).expect("all_gather_ring forward");
-        ctx.signal(next, flag_buf, src_seg).expect("all_gather_ring signal");
+        let seg = ctx.load_local_vec(data_buf, src_seg * len, len)?;
+        ctx.remote_store(next, data_buf, src_seg * len, &seg)?;
+        ctx.signal(next, flag_buf, src_seg)?;
         // wait for the segment arriving from the predecessor this step:
         // it originated at (r - 1 - step) mod w
         let arriving = (r + w - 1 - step) % w;
-        ctx.wait_flag_ge(flag_buf, arriving, round).expect("all_gather_ring wait");
+        ctx.wait_flag_ge(flag_buf, arriving, round)?;
     }
-    ctx.load_local_vec(data_buf, 0, w * len).expect("all_gather_ring load")
+    ctx.load_local_vec(data_buf, 0, w * len)
 }
 
 /// BSP wrapper: barrier – exchange – barrier. The RCCL-shaped call whose
@@ -162,9 +169,10 @@ pub fn all_reduce_sum(
 ) -> Vec<f32> {
     let (r, w) = (ctx.rank(), ctx.world());
     let n = send.len();
-    if n == 0 {
-        return Vec::new();
-    }
+    // no early return for n == 0: an empty collective still runs the full
+    // signal/wait protocol (zero-length stores and loads), keeping the
+    // monotone flag counters in lockstep with the caller's round so a
+    // later non-empty round on the same flag buffer cannot deadlock
     let parts = partition(n, w);
     let seg_max = n.div_ceil(w);
     // Phase 1 (reduce-scatter): rank s owns segment s. Everyone pushes
@@ -232,9 +240,7 @@ pub fn reduce_scatter_sum(
 ) -> Vec<f32> {
     let (r, w) = (ctx.rank(), ctx.world());
     let n = send.len();
-    if n == 0 {
-        return Vec::new();
-    }
+    // empty payloads keep signaling — see all_reduce_sum
     let parts = partition(n, w);
     let seg_max = n.div_ceil(w);
     for s in 0..w {
@@ -265,9 +271,17 @@ pub fn reduce_scatter_sum(
 
 /// All-to-all: rank r sends segment `d` of its `send` buffer to rank `d`
 /// and receives segment `s` from every rank `s` (the transpose exchange
-/// of expert-parallel / sequence-parallel layouts). `send.len()` must be
-/// `world * seg`; `data_buf` needs `world * seg` elements; `flag_buf`
-/// `world` flags. Returns the received `world * seg` elements, source-major.
+/// of expert-parallel / sequence-parallel layouts).
+///
+/// `send.len()` may be **any** length `n` (identical on every rank): the
+/// outgoing segments follow the shared [`crate::util::partition`]`(n,
+/// world)` layout — ragged tails and even `n < world` (empty segments)
+/// included — and staging slots are strided by `seg_max = ceil(n /
+/// world)`. `data_buf` needs `world * seg_max` elements; `flag_buf`
+/// `world` flags. Returns this rank's received segments concatenated
+/// source-major: `world * partition(n, world)[r].len` elements (every
+/// source's segment `r` has the same length because all ranks share the
+/// partition).
 pub fn all_to_all(
     ctx: &RankCtx,
     send: &[f32],
@@ -276,22 +290,26 @@ pub fn all_to_all(
     round: u64,
 ) -> Vec<f32> {
     let (r, w) = (ctx.rank(), ctx.world());
-    assert_eq!(send.len() % w, 0, "all_to_all length {} not divisible by {w}", send.len());
-    let seg = send.len() / w;
-    // deliver my segment d into rank d's slot r
-    ctx.store_local(data_buf, r * seg, &send[r * seg..(r + 1) * seg])
+    let n = send.len();
+    // empty payloads keep signaling — see all_reduce_sum
+    let parts = partition(n, w);
+    let seg_max = n.div_ceil(w);
+    // deliver my segment d into rank d's slot r (strided seg_max)
+    let (my_off, my_len) = parts[r];
+    ctx.store_local(data_buf, r * seg_max, &send[my_off..my_off + my_len])
         .expect("all_to_all local store");
     ctx.signal(r, flag_buf, r).expect("all_to_all local signal");
     for d in ctx.peers() {
-        ctx.remote_store(d, data_buf, r * seg, &send[d * seg..(d + 1) * seg])
+        let (off, len) = parts[d];
+        ctx.remote_store(d, data_buf, r * seg_max, &send[off..off + len])
             .expect("all_to_all remote store");
         ctx.signal(d, flag_buf, r).expect("all_to_all remote signal");
     }
-    let mut out = vec![0.0f32; w * seg];
+    let mut out = vec![0.0f32; w * my_len];
     for s in 0..w {
         ctx.wait_flag_ge(flag_buf, s, round).expect("all_to_all wait");
-        let piece = ctx.load_local_vec(data_buf, s * seg, seg).expect("all_to_all load");
-        out[s * seg..(s + 1) * seg].copy_from_slice(&piece);
+        let piece = ctx.load_local_vec(data_buf, s * seg_max, my_len).expect("all_to_all load");
+        out[s * my_len..(s + 1) * my_len].copy_from_slice(&piece);
     }
     out
 }
@@ -302,16 +320,23 @@ pub fn all_to_all(
 /// (`send.len() / world` elements). `data_buf` needs `world * seg`
 /// elements (step-indexed staging slots); `flag_buf` needs `world` flags,
 /// each incremented once per round per step. Unlike the direct variant,
-/// the ring requires `world | send.len()` (fixed-width forwarding).
+/// the ring genuinely requires `world | send.len()` (fixed-width
+/// forwarding) — anything else returns [`IrisError::InvalidLayout`]; use
+/// [`reduce_scatter_sum`] for ragged payloads.
 pub fn reduce_scatter_ring(
     ctx: &RankCtx,
     send: &[f32],
     data_buf: &str,
     flag_buf: &str,
     round: u64,
-) -> Vec<f32> {
+) -> Result<Vec<f32>, IrisError> {
     let (r, w) = (ctx.rank(), ctx.world());
-    assert_eq!(send.len() % w, 0, "reduce_scatter_ring needs world | n; use reduce_scatter_sum");
+    if send.len() % w != 0 {
+        return Err(IrisError::InvalidLayout(format!(
+            "reduce_scatter_ring needs world ({w}) | send.len() ({}); use reduce_scatter_sum",
+            send.len()
+        )));
+    }
     let seg = send.len() / w;
     let next = (r + 1) % w;
     // step t: rank r sends its running sum of segment (r - t - 1) to next,
@@ -320,20 +345,17 @@ pub fn reduce_scatter_ring(
     let mut acc: Vec<Vec<f32>> = (0..w).map(|s| send[s * seg..(s + 1) * seg].to_vec()).collect();
     for step in 0..w.saturating_sub(1) {
         let send_seg = (r + w - step + w - 1) % w; // (r - 1 - step) mod w
-        ctx.remote_store(next, data_buf, send_seg * seg, &acc[send_seg])
-            .expect("reduce_scatter_ring forward");
-        ctx.signal(next, flag_buf, send_seg).expect("reduce_scatter_ring signal");
+        ctx.remote_store(next, data_buf, send_seg * seg, &acc[send_seg])?;
+        ctx.signal(next, flag_buf, send_seg)?;
         let recv_seg = (r + w - step + w - 2) % w; // (r - 2 - step) mod w
         // each segment passes through this rank exactly once per round
-        ctx.wait_flag_ge(flag_buf, recv_seg, round).expect("reduce_scatter_ring wait");
-        let incoming = ctx
-            .load_local_vec(data_buf, recv_seg * seg, seg)
-            .expect("reduce_scatter_ring load");
+        ctx.wait_flag_ge(flag_buf, recv_seg, round)?;
+        let incoming = ctx.load_local_vec(data_buf, recv_seg * seg, seg)?;
         for (a, b) in acc[recv_seg].iter_mut().zip(&incoming) {
             *a += b;
         }
     }
-    acc[r].clone()
+    Ok(acc[r].clone())
 }
 
 /// Broadcast from `root`: `data_buf` needs `len` elements, `flag_buf` one
@@ -419,6 +441,7 @@ mod tests {
             let heap = gather_heap(world, len);
             let outs = run_node(heap, move |ctx| {
                 all_gather_ring(&ctx, &seg_for(ctx.rank(), len), "ag", "agf", 1)
+                    .expect("ring all-gather")
             });
             for (r, o) in outs.iter().enumerate() {
                 assert_eq!(o, &expected_gather(world, len), "world {world} rank {r}");
@@ -595,6 +618,85 @@ mod tests {
     }
 
     #[test]
+    fn all_to_all_ragged_lengths() {
+        // the PR-1 regression: every other collective went ragged while
+        // all_to_all still hard-panicked on n % world != 0. It now uses
+        // the shared partition layout — including n < world, where tail
+        // segments are empty.
+        for (world, n) in [(2usize, 7usize), (4, 10), (3, 2), (5, 3), (4, 33)] {
+            let seg_max = n.div_ceil(world);
+            let heap = Arc::new(
+                HeapBuilder::new(world)
+                    .buffer("a2a", world * seg_max)
+                    .flags("a2af", world)
+                    .build(),
+            );
+            let outs = run_node(heap, move |ctx| {
+                // rank r's element i carries the value r*1000 + i
+                let send: Vec<f32> = (0..n).map(|i| (ctx.rank() * 1000 + i) as f32).collect();
+                all_to_all(&ctx, &send, "a2a", "a2af", 1)
+            });
+            let parts = partition(n, world);
+            for (r, o) in outs.iter().enumerate() {
+                let (off, len) = parts[r];
+                assert_eq!(o.len(), world * len, "world {world} n {n} rank {r}");
+                for s in 0..world {
+                    for j in 0..len {
+                        assert_eq!(
+                            o[s * len + j],
+                            (s * 1000 + off + j) as f32,
+                            "world {world} n {n} rank {r} src {s}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_empty_round_keeps_flags_in_lockstep() {
+        // an empty exchange still signals, so a later non-empty round on
+        // the same flag buffer proceeds instead of deadlocking on a flag
+        // counter that fell behind the round number
+        let world = 3;
+        let heap = Arc::new(
+            HeapBuilder::new(world).buffer("a2a", world).flags("a2af", world).build(),
+        );
+        let outs = run_node(heap, move |ctx| {
+            let empty = all_to_all(&ctx, &[], "a2a", "a2af", 1);
+            assert!(empty.is_empty());
+            ctx.barrier(); // payload changes between rounds
+            let send: Vec<f32> = (0..world).map(|i| (ctx.rank() * 10 + i) as f32).collect();
+            all_to_all(&ctx, &send, "a2a", "a2af", 2)
+        });
+        for (r, o) in outs.iter().enumerate() {
+            let expect: Vec<f32> = (0..world).map(|s| (s * 10 + r) as f32).collect();
+            assert_eq!(o, &expect, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_ring_rejects_ragged_with_typed_error() {
+        // the ring genuinely needs fixed-width segments; the misuse now
+        // comes back as a typed error instead of a panic
+        let world = 4;
+        let heap = Arc::new(
+            HeapBuilder::new(world).buffer("rsr", 12).flags("rsrf", world).build(),
+        );
+        let outs = run_node(heap, move |ctx| {
+            reduce_scatter_ring(&ctx, &[1.0; 10], "rsr", "rsrf", 1)
+        });
+        for o in outs {
+            match o {
+                Err(crate::iris::IrisError::InvalidLayout(msg)) => {
+                    assert!(msg.contains("reduce_scatter_sum"), "{msg}");
+                }
+                other => panic!("expected InvalidLayout, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn reduce_scatter_ring_matches_direct() {
         for world in [2usize, 3, 4, 8] {
             let n = world * 2;
@@ -604,7 +706,7 @@ mod tests {
             let outs = run_node(heap, move |ctx| {
                 let send: Vec<f32> =
                     (0..n).map(|i| ((ctx.rank() + 1) * (i + 1)) as f32).collect();
-                reduce_scatter_ring(&ctx, &send, "rsr", "rsrf", 1)
+                reduce_scatter_ring(&ctx, &send, "rsr", "rsrf", 1).expect("ring reduce-scatter")
             });
             let rank_factor: usize = (1..=world).sum();
             for (r, o) in outs.iter().enumerate() {
@@ -621,7 +723,7 @@ mod tests {
         let world = 5;
         let heap = Arc::new(HeapBuilder::new(world).buffer("bc", 4).flags("bcf", 1).build());
         let outs = run_node(heap, move |ctx| {
-            let payload = if ctx.rank() == 2 { vec![3.0, 1.0, 4.0, 1.0] } else { vec![0.0; 4] };
+            let payload = if ctx.rank() == 2 { [3.0, 1.0, 4.0, 1.0] } else { [0.0; 4] };
             broadcast(&ctx, 2, &payload, "bc", "bcf", 1)
         });
         for o in outs {

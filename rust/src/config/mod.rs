@@ -159,21 +159,89 @@ impl GemmRsConfig {
     }
 
     /// Column tiles (col offset, width) of a scatter segment of `len`
-    /// columns — the single source of tile geometry shared by the
-    /// functional coordinator and the DES timing twin, so they can never
-    /// disagree on tile counts or flag indices.
+    /// columns — delegates to the shared [`crate::util::seg_tiles`]
+    /// geometry so the functional coordinator and the DES timing twins can
+    /// never disagree on tile counts or flag indices.
     pub fn seg_tiles(&self, len: usize) -> Vec<(usize, usize)> {
-        (0..len.div_ceil(self.block_n))
-            .map(|t| {
-                let c0 = t * self.block_n;
-                (c0, (len - c0).min(self.block_n))
-            })
-            .collect()
+        crate::util::seg_tiles(len, self.block_n)
     }
 
     /// FLOPs of the full GEMM (2·M·N·K).
     pub fn flops(&self) -> f64 {
         2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+}
+
+/// Head-sharded (Megatron-style) TP attention block parameters — the DES
+/// twin of the serving path's fused attention layer
+/// ([`crate::workloads::tp_attention`]): column-parallel fused QKV for
+/// this rank's [`crate::util::partition`] head slice, fully local flash
+/// decode over the full `kv_len` sequence, then the row-parallel Wo
+/// partial `[batch, d_model]` summed across ranks — either by an RCCL-
+/// shaped BSP all-reduce (baseline) or by the fused GEMM+RS push pipeline.
+/// `n_heads` need not divide by `world` (ragged head shards, empty shards
+/// for `world > n_heads`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TpAttnConfig {
+    /// Decode batch (M of the projections; 1 in the paper's §5.3 setting).
+    pub batch: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    /// Sequence length each rank's head shard attends over (full sequence
+    /// — the KV cache is head-sharded, not sequence-sharded).
+    pub kv_len: usize,
+    pub world: usize,
+    /// Column-tile width of one fused Wo push (the communication
+    /// granularity of the producer-consumer pipeline).
+    pub block_n: usize,
+}
+
+impl TpAttnConfig {
+    /// A Llama-70B-class attention block at a given KV length: 64 heads of
+    /// 128 (d_model 8192) on 8 ranks.
+    pub fn paper_attn(kv_len: usize) -> TpAttnConfig {
+        TpAttnConfig { batch: 1, n_heads: 64, head_dim: 128, kv_len, world: 8, block_n: 256 }
+    }
+
+    /// Small configuration for tests: 5 heads deliberately ragged over
+    /// common world sizes.
+    pub fn tiny(world: usize) -> TpAttnConfig {
+        TpAttnConfig { batch: 1, n_heads: 5, head_dim: 8, kv_len: 64, world, block_n: 8 }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.world == 0 {
+            return Err("world must be >= 1".into());
+        }
+        if self.batch == 0 || self.n_heads == 0 || self.head_dim == 0 || self.kv_len == 0 {
+            return Err("batch, n_heads, head_dim, kv_len must be positive".into());
+        }
+        if self.block_n == 0 {
+            return Err("block_n must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// The model width the Wo partials span.
+    pub fn d_model(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// Head slice per rank (ragged; tails may be empty).
+    pub fn head_partition(&self) -> Vec<(usize, usize)> {
+        crate::util::partition(self.n_heads, self.world)
+    }
+
+    /// Column partition of the Wo sum (who owns which reduced segment).
+    pub fn d_model_partition(&self) -> Vec<(usize, usize)> {
+        crate::util::partition(self.d_model(), self.world)
+    }
+
+    /// Column tiles (col offset, width) of a scatter segment of `len`
+    /// columns — the same shared [`crate::util::seg_tiles`] geometry rule
+    /// as [`GemmRsConfig::seg_tiles`].
+    pub fn seg_tiles(&self, len: usize) -> Vec<(usize, usize)> {
+        crate::util::seg_tiles(len, self.block_n)
     }
 }
 
@@ -374,6 +442,27 @@ mod tests {
             AgGemmConfig::tiny(w).validate().unwrap();
             FlashDecodeConfig::tiny(w).validate().unwrap();
             GemmRsConfig::tiny(w).validate().unwrap();
+            TpAttnConfig::tiny(w).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn tp_attn_partitions_cover_heads_and_width() {
+        for w in [1usize, 2, 4, 8] {
+            let cfg = TpAttnConfig::tiny(w); // 5 heads: ragged for w > 1
+            cfg.validate().unwrap();
+            assert_eq!(cfg.d_model(), 40);
+            assert_eq!(cfg.head_partition().iter().map(|(_, l)| l).sum::<usize>(), 5);
+            assert_eq!(
+                cfg.d_model_partition().iter().map(|(_, l)| l).sum::<usize>(),
+                cfg.d_model()
+            );
+        }
+        // world > n_heads: empty head shards are part of the layout
+        let cfg = TpAttnConfig::tiny(8);
+        assert!(cfg.head_partition()[7].1 == 0);
+        for m in [1usize << 12, 1 << 17] {
+            TpAttnConfig::paper_attn(m).validate().unwrap();
         }
     }
 

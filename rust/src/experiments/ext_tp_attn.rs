@@ -1,0 +1,125 @@
+//! Extension figure: the head-sharded TP attention block — BSP Megatron
+//! (local QKV/attention/Wo, barrier-fenced all-reduce of the output
+//! partials) vs the fused GEMM+RS pipeline across KV length, with the
+//! bulk-synchronous tax each pays. Together with the `gemm_rs` figure this
+//! covers every collective of a fully tensor-parallel transformer layer
+//! (attention Wo sum, MLP down-projection sum, all-gather up) — no BSP
+//! barrier anywhere in the layer.
+
+use crate::config::{HwConfig, TpAttnConfig};
+use crate::util::Table;
+use crate::workloads::tp_attention::{self, TpAttnStrategy};
+
+/// One row of the TP-attention figure.
+#[derive(Debug, Clone)]
+pub struct TpAttnRow {
+    pub kv_len: usize,
+    pub bsp_ms: f64,
+    pub fused_ms: f64,
+    pub speedup: f64,
+    /// Bulk-synchronous tax (summed rank-seconds) of one representative
+    /// simulated iteration per strategy.
+    pub bsp_bulk_sync_us: f64,
+    pub fused_bulk_sync_us: f64,
+}
+
+/// The KV-length sweep (short prompts through paper-scale contexts).
+pub const KV_SWEEP: [usize; 6] = [1 << 12, 1 << 14, 1 << 15, 1 << 16, 1 << 18, 1 << 20];
+
+/// Run the sweep: Llama-70B-class attention (64 heads × 128, W=8).
+pub fn sweep(hw: &HwConfig, seed: u64, iters: usize) -> Vec<TpAttnRow> {
+    KV_SWEEP
+        .iter()
+        .map(|&kv| {
+            let cfg = TpAttnConfig::paper_attn(kv);
+            let bsp_ms =
+                tp_attention::mean_latency_s(&cfg, hw, TpAttnStrategy::BaselineBsp, seed, iters)
+                    * 1e3;
+            let fused_ms =
+                tp_attention::mean_latency_s(&cfg, hw, TpAttnStrategy::FusedTiles, seed, iters)
+                    * 1e3;
+            let bsp_led =
+                tp_attention::simulate(&cfg, hw, TpAttnStrategy::BaselineBsp, seed).ledger;
+            let fused_led =
+                tp_attention::simulate(&cfg, hw, TpAttnStrategy::FusedTiles, seed).ledger;
+            TpAttnRow {
+                kv_len: kv,
+                bsp_ms,
+                fused_ms,
+                speedup: bsp_ms / fused_ms,
+                bsp_bulk_sync_us: bsp_led.bulk_sync_s * 1e6,
+                fused_bulk_sync_us: fused_led.bulk_sync_s * 1e6,
+            }
+        })
+        .collect()
+}
+
+/// Render the figure as a table.
+pub fn render(rows: &[TpAttnRow], hw: &HwConfig) -> Table {
+    let mut t = Table::new(&format!(
+        "TP attention — BSP Megatron vs fused GEMM+RS (64 heads x 128, W=8, {})",
+        hw.name
+    ))
+    .header(vec![
+        "KV len",
+        "bsp ms",
+        "fused ms",
+        "fused x",
+        "bsp bulk-sync us",
+        "fused bulk-sync us",
+    ]);
+    for r in rows {
+        t.row(vec![
+            format!("{}K", r.kv_len >> 10),
+            format!("{:.4}", r.bsp_ms),
+            format!("{:.4}", r.fused_ms),
+            format!("{:.3}", r.speedup),
+            format!("{:.2}", r.bsp_bulk_sync_us),
+            format!("{:.2}", r.fused_bulk_sync_us),
+        ]);
+    }
+    t
+}
+
+/// Run and print the figure (the `experiments tp_attn` subcommand).
+pub fn run(hw: &HwConfig, seed: u64, iters: usize) {
+    let rows = sweep(hw, seed, iters);
+    render(&rows, hw).print();
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn fused_pays_zero_bulk_sync_everywhere() {
+        // the PR's acceptance criterion at figure scope: the fused TP
+        // attention path pays zero bulk-synchronous tax at every KV length
+        // while BSP Megatron always pays some
+        let rows = sweep(&presets::mi300x(), 1, 5);
+        assert_eq!(rows.len(), KV_SWEEP.len());
+        for r in &rows {
+            assert!(r.bsp_bulk_sync_us > 0.0, "kv={}: BSP must pay bulk-sync", r.kv_len);
+            assert_eq!(r.fused_bulk_sync_us, 0.0, "kv={}: no barrier anywhere", r.kv_len);
+        }
+    }
+
+    #[test]
+    fn fused_wins_everywhere() {
+        let rows = sweep(&presets::mi300x(), 2, 10);
+        for r in &rows {
+            assert!(r.speedup > 1.0, "kv={}: speedup {:.3}", r.kv_len, r.speedup);
+        }
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let hw = presets::mi300x();
+        let rows = sweep(&hw, 3, 3);
+        let t = render(&rows, &hw);
+        assert_eq!(t.n_rows(), KV_SWEEP.len());
+        assert!(t.render().contains("bulk-sync"));
+    }
+}

@@ -45,6 +45,12 @@ pub enum IrisError {
     FlagOutOfBounds { flags: String, idx: usize, len: usize },
     /// A rank outside `0..world`.
     BadRank { rank: usize, world: usize },
+    /// A protocol entry point invoked with an argument layout it cannot
+    /// serve: a ring collective whose payload does not divide by the
+    /// world (ring steps forward fixed-width segments), a fused exchange
+    /// whose segment list is not a partition, or a serving request beyond
+    /// the model's KV capacity.
+    InvalidLayout(String),
     /// A flag wait timed out (peer death / protocol deadlock).
     Timeout(WaitTimeout),
 }
@@ -65,6 +71,7 @@ impl fmt::Display for IrisError {
             IrisError::BadRank { rank, world } => {
                 write!(f, "rank {rank} out of range for world {world}")
             }
+            IrisError::InvalidLayout(what) => write!(f, "invalid collective layout: {what}"),
             IrisError::Timeout(t) => t.fmt(f),
         }
     }
@@ -91,6 +98,8 @@ mod tests {
         assert!(oob.to_string().contains("b[3..5]"));
         let t = WaitTimeout { rank: 1, flags: "f".into(), idx: 2, target: 3, seen: 0 };
         assert!(IrisError::from(t).to_string().contains("timeout"));
+        let l = IrisError::InvalidLayout("ring needs world | n".into());
+        assert!(l.to_string().contains("invalid collective layout"));
     }
 
     #[test]

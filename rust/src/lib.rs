@@ -24,10 +24,13 @@
 //!   attention, combine), the functional mirror of the L1 Pallas kernels;
 //! * [`runtime`] — PJRT loading/execution of the AOT-compiled JAX/Pallas
 //!   artifacts (Python never runs at serve time);
-//! * [`workloads`] — All-Gather+GEMM (paper §4.1) and Flash Decode
-//!   (paper §4.2) plus a tiny tensor-parallel transformer for end-to-end
+//! * [`workloads`] — All-Gather+GEMM (paper §4.1), Flash Decode
+//!   (paper §4.2), fused GEMM+ReduceScatter, and head-sharded TP attention
+//!   timing twins, plus a tiny tensor-parallel transformer for end-to-end
 //!   serving;
-//! * [`serve`] — a batched decode serving loop on top of the runtime;
+//! * [`serve`] — a batched decode serving loop on top of the runtime, with
+//!   Megatron-style head-sharded TP attention through the fused GEMM+RS
+//!   exchange;
 //! * [`experiments`] — harnesses that regenerate every figure/table in the
 //!   paper's evaluation;
 //! * [`metrics`] — the Three-Taxes ledger and the paper's timing protocol.

@@ -42,7 +42,7 @@ fn print_help() {
     println!(
         "taxfree — reproduction of \"Eliminating Multi-GPU Performance Taxes\"\n\
          \n\
-         USAGE:\n  taxfree experiments <fig2|fig9|fig10|fig11|all> [options]\n\
+         USAGE:\n  taxfree experiments <fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|autotune|all> [options]\n\
          \x20 taxfree serve [--world N] [--requests N] [--backend native|pjrt] [--artifacts DIR]\n\
          \x20 taxfree selftest [--artifacts DIR]\n\
          \n\
@@ -177,6 +177,7 @@ fn cmd_experiments(args: &[String]) -> i32 {
         "ablations" => run_ablations(),
         "allreduce" => experiments::ext_allreduce::run(seed, iters),
         "gemm_rs" => experiments::ext_gemm_rs::run(&hw9, seed, iters),
+        "tp_attn" => experiments::ext_tp_attn::run(hw, seed, iters),
         "autotune" => run_autotune(),
         "all" => {
             run_fig2();
@@ -186,11 +187,12 @@ fn cmd_experiments(args: &[String]) -> i32 {
             run_ablations();
             experiments::ext_allreduce::run(seed, iters);
             experiments::ext_gemm_rs::run(&hw9, seed, iters);
+            experiments::ext_tp_attn::run(hw, seed, iters);
             run_autotune();
         }
         other => {
             eprintln!(
-                "unknown experiment: {other} (want fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|autotune|all)"
+                "unknown experiment: {other} (want fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|autotune|all)"
             );
             return 2;
         }
@@ -226,11 +228,13 @@ fn cmd_serve(args: &[String]) -> i32 {
         cfg.n_params()
     );
 
-    let report = match backend.as_str() {
+    let served = match backend.as_str() {
         "native" => {
-            // genuinely tensor-parallel: each rank holds only its shard of
-            // the MLP weights; the down-projection runs the fused GEMM+RS
-            // exchange (attention stays sequence-parallel)
+            // genuinely tensor-parallel: each rank holds only its head
+            // slice of the attention projections and its shard of the MLP
+            // weights; both the Wo partial sum and the down-projection run
+            // the fused GEMM+RS exchange (Megatron-style layer, no BSP
+            // barrier anywhere)
             let cfg2 = cfg.clone();
             serve(&cfg, requests, move |rank| {
                 NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, seed), rank)
@@ -254,6 +258,13 @@ fn cmd_serve(args: &[String]) -> i32 {
         other => {
             eprintln!("unknown backend: {other} (want native|pjrt)");
             return 2;
+        }
+    };
+    let report = match served {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            return 1;
         }
     };
     let s = report.latency_summary();

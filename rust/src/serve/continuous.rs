@@ -11,9 +11,9 @@
 //!
 //! Reports per-request time-to-first-token and completion latency.
 
-use crate::iris::{run_node, RankCtx};
+use crate::iris::{run_node, IrisError, RankCtx};
 use crate::serve::queue::Request;
-use crate::serve::{build_serve_heap, decode_step_fused};
+use crate::serve::{build_serve_heap, decode_step_fused, make_shard};
 use crate::tensor::Tensor;
 use crate::workloads::transformer::{token_embedding, KvShard, LocalCompute, TransformerConfig};
 
@@ -59,30 +59,32 @@ struct Active {
 }
 
 /// Run a continuous-batching session over `requests` with at most
-/// `max_active` concurrent sequences.
+/// `max_active` concurrent sequences. Heap/protocol failures on any rank
+/// surface as a typed [`IrisError`] instead of a panic mid-decode.
 pub fn serve_continuous<C, F>(
     cfg: &TransformerConfig,
     requests: Vec<Request>,
     max_active: usize,
     factory: F,
-) -> ContinuousReport
+) -> Result<ContinuousReport, IrisError>
 where
     C: LocalCompute,
     F: Fn(usize) -> C + Send + Sync + 'static,
 {
     cfg.validate().expect("invalid TransformerConfig");
     assert!(max_active >= 1);
+    crate::serve::validate_requests(cfg, &requests)?;
     let heap = build_serve_heap(cfg);
     let cfg2 = cfg.clone();
     let t0 = crate::clock::WallTimer::start();
-    let mut outs = run_node(heap, move |ctx| {
+    let outs = run_node(heap, move |ctx| {
         let compute = factory(ctx.rank());
         scheduler_body(&ctx, &cfg2, &compute, &requests, max_active)
     });
     let wall_s = t0.elapsed_s();
-    let (results, total_steps) = outs.swap_remove(0);
+    let (results, total_steps) = crate::serve::collect_node_outcomes(outs)?;
     let total_tokens = results.iter().map(|r| r.tokens).sum();
-    ContinuousReport { results, total_tokens, total_steps, wall_s }
+    Ok(ContinuousReport { results, total_tokens, total_steps, wall_s })
 }
 
 /// The per-rank scheduler: identical decisions on every rank (admission is
@@ -94,7 +96,7 @@ fn scheduler_body<C: LocalCompute>(
     compute: &C,
     requests: &[Request],
     max_active: usize,
-) -> (Vec<ContinuousResult>, usize) {
+) -> Result<(Vec<ContinuousResult>, usize), IrisError> {
     let mut queue: std::collections::VecDeque<&Request> = requests.iter().collect();
     let mut active: Vec<Active> = Vec::new();
     let mut done: Vec<ContinuousResult> = Vec::new();
@@ -111,7 +113,7 @@ fn scheduler_body<C: LocalCompute>(
                 tokens_done: 0,
                 admitted_step: step,
                 first_token_step: None,
-                shard: KvShard::new(cfg),
+                shard: make_shard(cfg, compute, ctx.rank()),
                 hidden: token_embedding(cfg, req.id as u64),
             });
         }
@@ -119,8 +121,15 @@ fn scheduler_body<C: LocalCompute>(
         // all ranks, keeping the flag protocol aligned)
         for seq in active.iter_mut() {
             let owner = seq.tokens_done % cfg.world;
-            seq.hidden =
-                decode_step_fused(ctx, cfg, compute, &mut seq.shard, &seq.hidden, owner, &mut round);
+            seq.hidden = decode_step_fused(
+                ctx,
+                cfg,
+                compute,
+                &mut seq.shard,
+                &seq.hidden,
+                owner,
+                &mut round,
+            )?;
             seq.tokens_done += 1;
             seq.remaining -= 1;
             if seq.first_token_step.is_none() {
@@ -136,7 +145,9 @@ fn scheduler_body<C: LocalCompute>(
                     id: seq.id,
                     tokens: seq.tokens_done,
                     admitted_step: seq.admitted_step,
-                    first_token_step: seq.first_token_step.unwrap(),
+                    first_token_step: seq
+                        .first_token_step
+                        .expect("finished sequence decoded at least one token"),
                     finished_step: step,
                     final_hidden: seq.hidden,
                 });
@@ -147,7 +158,7 @@ fn scheduler_body<C: LocalCompute>(
         step += 1;
     }
     done.sort_by_key(|r| r.id);
-    (done, step)
+    Ok((done, step))
 }
 
 #[cfg(test)]
@@ -179,7 +190,7 @@ mod tests {
         q.fill_synthetic(7, (1, 4), (1, 5), 55);
         let reqs = q.drain_batch(7);
         let expect: Vec<(usize, usize)> = reqs.iter().map(|r| (r.id, r.total_tokens())).collect();
-        let report = serve_continuous(&cfg, reqs, 3, factory(&cfg, 8));
+        let report = serve_continuous(&cfg, reqs, 3, factory(&cfg, 8)).expect("serve");
         assert_eq!(report.results.len(), 7);
         for (r, (id, tokens)) in report.results.iter().zip(expect) {
             assert_eq!((r.id, r.tokens), (id, tokens));
@@ -201,7 +212,7 @@ mod tests {
         q.submit(3, 1);
         q.submit(1, 2);
         let reqs = q.drain_batch(3);
-        let report = serve_continuous(&cfg, reqs.clone(), 2, factory(&cfg, seed));
+        let report = serve_continuous(&cfg, reqs.clone(), 2, factory(&cfg, seed)).expect("serve");
         for req in &reqs {
             let mut dec = ReferenceDecoder::new(
                 cfg.clone(),
@@ -226,7 +237,7 @@ mod tests {
         q.submit(1, 1); // short
         q.submit(1, 1); // waits for a slot, then finishes fast
         let reqs = q.drain_batch(3);
-        let report = serve_continuous(&cfg, reqs, 2, factory(&cfg, 10));
+        let report = serve_continuous(&cfg, reqs, 2, factory(&cfg, 10)).expect("serve");
         let by_id = |id: usize| report.results.iter().find(|r| r.id == id).unwrap();
         assert!(by_id(1).finished_step < by_id(0).finished_step);
         assert!(by_id(2).finished_step < by_id(0).finished_step);
@@ -236,9 +247,11 @@ mod tests {
 
     #[test]
     fn tp_sharded_continuous_matches_reference() {
-        // interleaved scheduling over the TP-MLP exchange: per-sequence
-        // results must still equal the single-process reference (ragged
-        // d_model/ffn to exercise the partition layout under interleaving)
+        // interleaved scheduling over the full TP layer (head-sharded
+        // attention + TP MLP, both through the fused GEMM+RS exchange):
+        // per-sequence results must still equal the single-process
+        // reference (ragged n_heads/d_model/ffn to exercise the partition
+        // layout under interleaving)
         let cfg = TransformerConfig::tiny_ragged(2);
         let seed = 14;
         let mut q = RequestQueue::new();
@@ -246,7 +259,7 @@ mod tests {
         q.submit(1, 2);
         q.submit(3, 1);
         let reqs = q.drain_batch(3);
-        let report = serve_continuous(&cfg, reqs.clone(), 2, tp_factory(&cfg, seed));
+        let report = serve_continuous(&cfg, reqs.clone(), 2, tp_factory(&cfg, seed)).expect("serve");
         for req in &reqs {
             let mut dec = ReferenceDecoder::new(
                 cfg.clone(),
@@ -267,7 +280,7 @@ mod tests {
         let mut q = RequestQueue::new();
         q.fill_synthetic(3, (1, 3), (1, 3), 77);
         let reqs = q.drain_batch(3);
-        let report = serve_continuous(&cfg, reqs.clone(), 1, factory(&cfg, 11));
+        let report = serve_continuous(&cfg, reqs.clone(), 1, factory(&cfg, 11)).expect("serve");
         // sequential: each request's admitted step == previous finished + 1
         let rs = &report.results;
         for w in rs.windows(2) {

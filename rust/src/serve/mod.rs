@@ -4,33 +4,48 @@
 //! The serving node stands up `world` rank engines over the iris heap. Each
 //! engine owns its KV-cache shard and its own [`LocalCompute`] (native tile
 //! kernels or PJRT artifacts — PJRT handles are not `Send`, so each engine
-//! builds its own via the [`ComputeFactory`]). Per layer and token:
+//! builds its own via the [`ComputeFactory`]).
 //!
-//! 1. every rank runs the dense QKV projection (replicated);
-//! 2. the owning rank (token `t % world`) appends the new K/V to its shard;
-//! 3. **distributed flash decode with the paper's fully-fused pattern**:
-//!    local partial → immediate push + signal to all peers → concurrent
-//!    online-softmax reduction behind flags (Algorithm 4);
-//! 4. the post-attention block. With a TP-sharded backend
-//!    ([`LocalCompute::tp_sharded`]) the MLP runs **tensor-parallel**:
-//!    output projection + residual locally, then each rank's partial
-//!    down-projection flows through the fused GEMM+ReduceScatter exchange
-//!    (per-segment push + signal into the owning rank's heap, concurrent
-//!    reduction behind flags — the mirror of Algorithm 4, see
-//!    [`crate::coordinator::gemm_rs`]) followed by a flag-synchronized
-//!    all-gather of the reduced segments. No global barrier anywhere in
-//!    the token loop. With a replicated backend (PJRT's monolithic
-//!    artifact) step 4 stays a local dense block.
+//! With a **head-sharded backend** ([`LocalCompute::attn_sharded`] —
+//! Megatron-style TP attention), per layer and token:
+//!
+//! 1. every rank runs the column-parallel QKV projection for *its* head
+//!    slice and appends the new K/V to its head shard (full sequence);
+//! 2. attention is entirely local (flash decode over the rank's heads);
+//! 3. the row-parallel Wo partial `[1, d_model]` flows through the
+//!    **fused GEMM+ReduceScatter exchange** ([`fused_allreduce_exchange`]:
+//!    per-segment push + signal into the owning rank's heap, concurrent
+//!    reduction behind flags, flag-synchronized all-gather of the reduced
+//!    segments — the mirror of Algorithm 4, see
+//!    [`crate::coordinator::gemm_rs`]), then the residual is added;
+//! 4. the TP MLP runs the same fused exchange on its partial
+//!    down-projection. No BSP barrier anywhere in the attention block or
+//!    the token loop.
+//!
+//! With a **replicated-attention backend** (PJRT's monolithic artifact, or
+//! [`NativeCompute::new`]), attention is sequence-parallel: every rank runs
+//! the full QKV, the owning rank (token `t % world`) appends K/V to its
+//! sequence shard, and the paper's fully-fused distributed flash decode
+//! runs (local partial → immediate push + signal to all peers → concurrent
+//! online-softmax reduction behind flags — Algorithm 4); the
+//! post-attention block is local (or TP-MLP-only for
+//! [`LocalCompute::tp_sharded`] backends without head sharding).
+//!
+//! Every fallible heap operation propagates a typed
+//! [`crate::iris::IrisError`]: a mis-sized buffer or a dead peer surfaces
+//! as a structured error from [`serve`], not a panic mid-decode.
 //!
 //! Requests are processed from a FIFO queue; the report carries the
 //! paper-style latency summary plus tokens/s.
+//!
+//! [`NativeCompute::new`]: crate::workloads::transformer::NativeCompute::new
 
 pub mod continuous;
 pub mod queue;
 
 use std::sync::Arc;
 
-use crate::iris::{run_node, HeapBuilder, RankCtx, SymmetricHeap};
+use crate::iris::{run_node, HeapBuilder, IrisError, RankCtx, SymmetricHeap};
 use crate::kernels::attention::PartialState;
 use crate::kernels::combine::OnlineCombiner;
 use crate::metrics::Recorder;
@@ -65,57 +80,162 @@ impl ServeReport {
 
 pub(crate) const BUF_INBOX: &str = "serve_inbox";
 pub(crate) const FLAGS_PARTIAL: &str = "serve_ready";
-pub(crate) const BUF_MLP_PART: &str = "serve_mlp_partial";
-pub(crate) const FLAGS_MLP_PART: &str = "serve_mlp_partial_ready";
-pub(crate) const BUF_MLP_GATHER: &str = "serve_mlp_gather";
-pub(crate) const FLAGS_MLP_GATHER: &str = "serve_mlp_gather_ready";
+pub(crate) const FLAGS_REQ_DONE: &str = "serve_req_done";
 
-/// Build the serving heap: the attention partial inbox plus the two
-/// MLP-exchange staging areas (GEMM+RS contributions, reduced-segment
-/// all-gather). Every data buffer is double-buffered by round parity — a
-/// producer may run one layer ahead of a slow consumer, so slot
-/// (parity, source) guarantees it never overwrites data still being read
-/// (see `decode_step_fused`).
+/// The heap buffers of one fused reduce-scatter + all-gather exchange
+/// ([`fused_allreduce_exchange`]). The serving heap carries two disjoint
+/// instances — one for the attention Wo partials, one for the MLP
+/// down-projection partials — because both exchanges run within the same
+/// monotone flag round of a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExchangeBufs {
+    /// Contribution staging area: `2 * world * seg_max` elements
+    /// (double-buffered by round parity, one `seg_max` slot per source).
+    pub data: &'static str,
+    /// One monotone flag per source for the scatter phase.
+    pub data_flags: &'static str,
+    /// Reduced-segment staging area: `2 * world * seg_max` elements.
+    pub gather: &'static str,
+    /// One monotone flag per source for the gather phase.
+    pub gather_flags: &'static str,
+}
+
+/// The attention output-projection (row-parallel Wo) exchange.
+pub const ATTN_EXCHANGE: ExchangeBufs = ExchangeBufs {
+    data: "serve_attn_partial",
+    data_flags: "serve_attn_partial_ready",
+    gather: "serve_attn_gather",
+    gather_flags: "serve_attn_gather_ready",
+};
+
+/// The MLP down-projection exchange.
+pub const MLP_EXCHANGE: ExchangeBufs = ExchangeBufs {
+    data: "serve_mlp_partial",
+    data_flags: "serve_mlp_partial_ready",
+    gather: "serve_mlp_gather",
+    gather_flags: "serve_mlp_gather_ready",
+};
+
+/// Build the serving heap: the attention partial inbox (sequence-parallel
+/// flash decode) plus the two fused-exchange staging areas (attention Wo
+/// partials, MLP down-projection partials). Every data buffer is
+/// double-buffered by round parity — a producer may run one layer ahead of
+/// a slow consumer, so slot (parity, source) guarantees it never
+/// overwrites data still being read (see `decode_step_fused`).
 pub(crate) fn build_serve_heap(cfg: &TransformerConfig) -> Arc<SymmetricHeap> {
     let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
     let seg_max = cfg.d_model.div_ceil(cfg.world);
-    Arc::new(
-        HeapBuilder::new(cfg.world)
-            .buffer(BUF_INBOX, 2 * cfg.world * wire)
-            .flags(FLAGS_PARTIAL, cfg.world)
-            .buffer(BUF_MLP_PART, 2 * cfg.world * seg_max)
-            .flags(FLAGS_MLP_PART, cfg.world)
-            .buffer(BUF_MLP_GATHER, 2 * cfg.world * seg_max)
-            .flags(FLAGS_MLP_GATHER, cfg.world)
-            .build(),
-    )
+    let mut b = HeapBuilder::new(cfg.world)
+        .buffer(BUF_INBOX, 2 * cfg.world * wire)
+        .flags(FLAGS_PARTIAL, cfg.world)
+        .flags(FLAGS_REQ_DONE, cfg.world);
+    for bufs in [&ATTN_EXCHANGE, &MLP_EXCHANGE] {
+        b = b
+            .buffer(bufs.data, 2 * cfg.world * seg_max)
+            .flags(bufs.data_flags, cfg.world)
+            .buffer(bufs.gather, 2 * cfg.world * seg_max)
+            .flags(bufs.gather_flags, cfg.world);
+    }
+    Arc::new(b.build())
 }
 
 /// Serve a queue of requests on a fresh distributed node. `factory` builds
 /// each rank's [`LocalCompute`]; all ranks must be given identical weights
 /// (replicated backend) or shards of the same weights (TP backend).
+/// A heap/protocol failure on any rank (mis-sized buffer, dead peer) comes
+/// back as a typed [`IrisError`] instead of a panic.
 pub fn serve<C, F>(
     cfg: &TransformerConfig,
     requests: Vec<Request>,
     factory: F,
-) -> ServeReport
+) -> Result<ServeReport, IrisError>
 where
     C: LocalCompute,
     F: Fn(usize) -> C + Send + Sync + 'static,
 {
     cfg.validate().expect("invalid TransformerConfig");
+    validate_requests(cfg, &requests)?;
     let heap = build_serve_heap(cfg);
     let cfg2 = cfg.clone();
     let t0 = crate::clock::WallTimer::start();
-    let mut outs = run_node(heap, move |ctx| {
+    let outs = run_node(heap, move |ctx| {
         let compute = factory(ctx.rank());
         engine_body(&ctx, &cfg2, &compute, &requests)
     });
     let wall_s = t0.elapsed_s();
-    // rank 0's view is authoritative (all ranks produce identical results)
-    let results = outs.swap_remove(0);
+    let results = collect_node_outcomes(outs)?;
     let total_tokens = results.iter().map(|r| r.tokens).sum();
-    ServeReport { results, total_tokens, wall_s }
+    Ok(ServeReport { results, total_tokens, wall_s })
+}
+
+/// Collapse per-rank engine outcomes into the node result: rank 0's
+/// payload on success (all ranks produce identical results), and on
+/// failure the **root-cause** error — the first structured (non-Timeout)
+/// error any rank reported — in preference to the secondary Timeouts its
+/// peers hit while waiting on the failed rank's flags.
+pub(crate) fn collect_node_outcomes<T>(
+    outs: Vec<Result<T, IrisError>>,
+) -> Result<T, IrisError> {
+    let mut payload: Option<T> = None;
+    let mut timeout: Option<IrisError> = None;
+    for (rank, o) in outs.into_iter().enumerate() {
+        match o {
+            Ok(v) => {
+                if rank == 0 {
+                    payload = Some(v);
+                }
+            }
+            Err(e @ IrisError::Timeout(_)) => {
+                if timeout.is_none() {
+                    timeout = Some(e);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    if let Some(e) = timeout {
+        return Err(e);
+    }
+    Ok(payload.expect("world >= 1"))
+}
+
+/// Pre-flight contract check: a request longer than the model's `max_seq`
+/// can never fit any KV layout (sequence shards hold `max_seq / world`
+/// tokens each across `world` owners; a head shard holds `max_seq` tokens
+/// outright), so reject it here — one typed error before any engine
+/// thread spawns — instead of tripping the shard-overflow assert
+/// mid-decode on every rank. Typed rather than a panic so a server
+/// embedding this crate can refuse untrusted requests gracefully.
+pub(crate) fn validate_requests(
+    cfg: &TransformerConfig,
+    requests: &[Request],
+) -> Result<(), IrisError> {
+    for req in requests {
+        if req.total_tokens() > cfg.max_seq {
+            return Err(IrisError::InvalidLayout(format!(
+                "request {} needs {} tokens but max_seq is {}",
+                req.id,
+                req.total_tokens(),
+                cfg.max_seq
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Build the KV shard matching the backend's attention layout: a head
+/// shard (this rank's heads, full sequence) for head-sharded backends, a
+/// sequence shard (all heads, `max_seq / world` tokens) otherwise.
+pub(crate) fn make_shard<C: LocalCompute>(
+    cfg: &TransformerConfig,
+    compute: &C,
+    rank: usize,
+) -> KvShard {
+    if compute.attn_sharded() {
+        KvShard::for_heads(cfg, cfg.head_partition()[rank].1)
+    } else {
+        KvShard::new(cfg)
+    }
 }
 
 /// The per-rank serving engine: processes every request in order, running
@@ -125,37 +245,54 @@ fn engine_body<C: LocalCompute>(
     cfg: &TransformerConfig,
     compute: &C,
     requests: &[Request],
-) -> Vec<RequestResult> {
+) -> Result<Vec<RequestResult>, IrisError> {
+    let r = ctx.rank();
     let mut results = Vec::with_capacity(requests.len());
-    // monotone flag round counter across the whole session
+    // monotone flag round counters across the whole session
     let mut round: u64 = 0;
+    let mut req_round: u64 = 0;
     let mut recorder = Recorder::new("decode_step");
 
     for req in requests {
         let timer = crate::clock::WallTimer::start();
-        let mut shard = KvShard::new(cfg);
+        let mut shard = make_shard(cfg, compute, ctx.rank());
         let mut h = token_embedding(cfg, req.id as u64);
         let total_tokens = req.prompt_len + req.gen_len;
         for t in 0..total_tokens {
             let owner = t % cfg.world;
             h = recorder.time(|| {
                 decode_step_fused(ctx, cfg, compute, &mut shard, &h, owner, &mut round)
-            });
+            })?;
         }
         results.push(RequestResult {
             id: req.id,
             tokens: total_tokens,
             latency_ns: timer.elapsed_ns(),
         });
-        ctx.barrier(); // requests are serialized across the node
+        // requests are serialized across the node by a *flag* fence, not a
+        // hard barrier: every wait here runs under the context timeout, so
+        // a rank that bailed out with a typed error mid-request surfaces as
+        // IrisError::Timeout on the survivors instead of wedging them in a
+        // timeout-less barrier (and serve() then reports the failure)
+        req_round += 1;
+        for d in ctx.peers() {
+            ctx.signal(d, FLAGS_REQ_DONE, r)?;
+        }
+        ctx.signal(r, FLAGS_REQ_DONE, r)?;
+        for s in 0..ctx.world() {
+            ctx.wait_flag_ge(FLAGS_REQ_DONE, s, req_round)?;
+        }
     }
-    results
+    Ok(results)
 }
 
-/// One decode step: the paper's fully-fused attention exchange
-/// (Algorithm 4) per layer, plus — for TP-sharded backends — the fused
-/// GEMM+ReduceScatter MLP exchange (the mirror pattern) with its
-/// flag-synchronized segment all-gather.
+/// One decode step. Per layer, for head-sharded backends: local QKV for
+/// this rank's heads, fully local flash decode over its head shard, then
+/// the fused GEMM+RS exchange of the Wo partials and (after the residual
+/// and norm) of the MLP partials — no BSP barrier anywhere. For
+/// replicated-attention backends: the paper's fully-fused sequence-parallel
+/// attention exchange (Algorithm 4), then a local post-attention block or
+/// the TP-MLP exchange.
 pub(crate) fn decode_step_fused<C: LocalCompute>(
     ctx: &RankCtx,
     cfg: &TransformerConfig,
@@ -164,15 +301,59 @@ pub(crate) fn decode_step_fused<C: LocalCompute>(
     h: &Tensor,
     owner: usize,
     round: &mut u64,
-) -> Tensor {
+) -> Result<Tensor, IrisError> {
     let r = ctx.rank();
     let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
+    let d_parts = cfg.d_model_partition();
     let mut h = h.clone();
     for layer in 0..cfg.n_layers {
         *round += 1;
-        // 1) dense QKV (replicated compute — same inputs, same outputs)
+        // 1) dense QKV — the full projection on replicated backends, this
+        //    rank's column-parallel head slice on head-sharded ones
         let (q, k_new, v_new) = compute.qkv(layer, &h);
-        // 2) owner appends this token's KV to its shard
+
+        if compute.attn_sharded() {
+            // ---- Megatron head-sharded attention ----
+            // every rank owns its heads' KV for the *full* sequence, so it
+            // appends every token and attention needs no cross-rank data:
+            shard.append(layer, &k_new, &v_new);
+            let p = shard.partial(layer, &q).expect("KV non-empty after append");
+            let mut comb = OnlineCombiner::new(shard.heads(), cfg.head_dim);
+            comb.add(&p);
+            let attn = comb.finish();
+            // row-parallel Wo: the partial [1, d_model] projections are
+            // summed through the fused GEMM+RS push pipeline, then the
+            // residual is added to the *reduced* projection (adding it to
+            // each partial would count it `world` times)
+            let wo_partial = compute.attn_out_partial(layer, &attn);
+            let proj =
+                fused_allreduce_exchange(ctx, &d_parts, wo_partial.data(), *round, &ATTN_EXCHANGE)?;
+            let mut h1 = h.clone();
+            for (a, b) in h1.data_mut().iter_mut().zip(&proj) {
+                *a += b;
+            }
+            // MLP: the exchange only runs for a sharded MLP — the two
+            // sharding flags are independent, and summing a *replicated*
+            // backend's full MLP output across ranks would count it
+            // `world` times (disjoint buffers keep the two exchanges of
+            // one flag round apart)
+            let x = rmsnorm(&h1);
+            let p = compute.mlp_partial(layer, &x);
+            let mlp = if compute.tp_sharded() {
+                fused_allreduce_exchange(ctx, &d_parts, p.data(), *round, &MLP_EXCHANGE)?
+            } else {
+                p.data().to_vec()
+            };
+            let mut out = h1;
+            for (a, b) in out.data_mut().iter_mut().zip(&mlp) {
+                *a += b;
+            }
+            h = out;
+            continue;
+        }
+
+        // ---- sequence-parallel attention (replicated projections) ----
+        // 2) owner appends this token's KV to its sequence shard
         if r == owner {
             shard.append(layer, &k_new, &v_new);
         }
@@ -196,30 +377,26 @@ pub(crate) fn decode_step_fused<C: LocalCompute>(
         // round N+1), so alternating slots cannot collide
         let base = ((*round % 2) as usize) * cfg.world * wire;
         for d in ctx.peers() {
-            ctx.remote_store(d, BUF_INBOX, base + r * wire, &wire_data)
-                .expect("serve push partial");
-            ctx.signal(d, FLAGS_PARTIAL, r).expect("serve signal partial");
+            ctx.remote_store(d, BUF_INBOX, base + r * wire, &wire_data)?;
+            ctx.signal(d, FLAGS_PARTIAL, r)?;
         }
-        ctx.store_local(BUF_INBOX, base + r * wire, &wire_data)
-            .expect("serve publish partial");
-        ctx.signal(r, FLAGS_PARTIAL, r).expect("serve signal own partial");
+        ctx.store_local(BUF_INBOX, base + r * wire, &wire_data)?;
+        ctx.signal(r, FLAGS_PARTIAL, r)?;
         //    part 2 — concurrent reduction behind flags
         let mut comb = OnlineCombiner::new(cfg.n_heads, cfg.head_dim);
         for s in std::iter::once(r).chain(ctx.peers()) {
-            ctx.wait_flag_ge(FLAGS_PARTIAL, s, *round).expect("serve reduction wait");
-            let data = ctx
-                .load_local_vec(BUF_INBOX, base + s * wire, wire)
-                .expect("serve load partial");
+            ctx.wait_flag_ge(FLAGS_PARTIAL, s, *round)?;
+            let data = ctx.load_local_vec(BUF_INBOX, base + s * wire, wire)?;
             comb.add(&PartialState::from_wire(&data, cfg.n_heads, cfg.head_dim));
         }
         let attn = comb.finish();
-        // 4) post-attention block: TP exchange for sharded backends,
+        // 4) post-attention block: TP exchange for MLP-sharded backends,
         //    local dense for replicated ones
         h = if compute.tp_sharded() && ctx.world() > 1 {
             let h1 = compute.attn_out_proj(layer, &h, &attn);
             let x = rmsnorm(&h1);
             let p = compute.mlp_partial(layer, &x);
-            let mlp = mlp_exchange_fused(ctx, cfg, &p, *round);
+            let mlp = fused_allreduce_exchange(ctx, &d_parts, p.data(), *round, &MLP_EXCHANGE)?;
             let mut out = h1;
             for (a, b) in out.data_mut().iter_mut().zip(&mlp) {
                 *a += b;
@@ -229,75 +406,110 @@ pub(crate) fn decode_step_fused<C: LocalCompute>(
             compute.post_attn(layer, &h, &attn)
         };
     }
-    h
+    Ok(h)
 }
 
-/// The fused GEMM+ReduceScatter + all-gather MLP exchange of one layer:
-/// every rank holds a full-width partial down-projection `p` [1, d_model];
-/// segment s of the sum belongs to rank s. Producers push their segment
-/// contributions straight into the owning rank's heap with a signal flag;
-/// each rank reduces its own segment behind flags in canonical source
-/// order (one deterministic association per segment — every rank then
-/// gathers the same reduced bits), then the reduced segments are
-/// all-gathered the same way. Flags are
-/// monotone per round; data slots alternate by round parity like the
-/// attention inbox.
-fn mlp_exchange_fused(
+/// The fused GEMM+ReduceScatter + all-gather exchange of one partial sum
+/// (the serving-path twin of [`crate::coordinator::gemm_rs`]): every rank
+/// holds a full-width partial `contribution` (`parts` must be the
+/// [`crate::util::partition`] of its length over the world); segment s of
+/// the sum belongs to rank s. Producers push their segment contributions
+/// straight into the owning rank's heap with a signal flag; each rank
+/// reduces its own segment behind flags in canonical source order (one
+/// deterministic association per segment — every rank then gathers
+/// identical reduced bits), then the reduced segments are all-gathered the
+/// same way. Flags are monotone per `round`; data slots alternate by round
+/// parity, so a producer may run one round ahead of a slow consumer
+/// without clobbering unread data. Both the attention Wo partials
+/// ([`ATTN_EXCHANGE`]) and the MLP down-projection partials
+/// ([`MLP_EXCHANGE`]) run through this; callers with their own heap may
+/// declare any [`ExchangeBufs`] (each data buffer `2 * world * seg_max`
+/// elements, each flag array `world` flags).
+///
+/// Heap errors (mis-sized buffer, dead peer timing out a wait) propagate
+/// as typed [`IrisError`]s.
+pub fn fused_allreduce_exchange(
     ctx: &RankCtx,
-    cfg: &TransformerConfig,
-    p: &Tensor,
+    parts: &[(usize, usize)],
+    contribution: &[f32],
     round: u64,
-) -> Vec<f32> {
+    bufs: &ExchangeBufs,
+) -> Result<Vec<f32>, IrisError> {
     let (r, w) = (ctx.rank(), ctx.world());
-    let parts = cfg.d_model_partition();
-    let seg_max = cfg.d_model.div_ceil(w);
+    // real validation, not debug_assert: this is a public API, and a bad
+    // partition in release mode would otherwise sum silently wrong (or
+    // panic on a slice) instead of reporting the typed contract breach.
+    // The contract is exactly [`crate::util::partition`]'s shape: one
+    // segment per rank, contiguous from offset 0, covering every element
+    // (overlap or gaps would double-count or drop segments silently).
+    if parts.len() != w {
+        return Err(IrisError::InvalidLayout(format!(
+            "fused_allreduce_exchange needs one partition segment per rank: got {} for world {w}",
+            parts.len()
+        )));
+    }
+    let n = contribution.len();
+    let seg_max = n.div_ceil(w);
+    let mut covered = 0usize;
+    for &(off, len) in parts {
+        if off != covered {
+            return Err(IrisError::InvalidLayout(format!(
+                "fused_allreduce_exchange partition is not contiguous at offset {off} (covered {covered})"
+            )));
+        }
+        if len > seg_max {
+            // staging slots are strided seg_max: a longer segment would
+            // spill into the next source's slot and corrupt the reduction
+            return Err(IrisError::InvalidLayout(format!(
+                "fused_allreduce_exchange segment of {len} elements exceeds the seg_max stride {seg_max}"
+            )));
+        }
+        covered += len;
+    }
+    if covered != n {
+        return Err(IrisError::InvalidLayout(format!(
+            "fused_allreduce_exchange partition covers {covered} of {n} contribution elements"
+        )));
+    }
     let base = ((round % 2) as usize) * w * seg_max;
 
     // ---- reduce-scatter: push partial segments to their owners ----
     for d in ctx.peers() {
         let (off, len) = parts[d];
-        ctx.remote_store(d, BUF_MLP_PART, base + r * seg_max, &p.data()[off..off + len])
-            .expect("mlp push partial segment");
-        ctx.signal(d, FLAGS_MLP_PART, r).expect("mlp signal partial segment");
+        ctx.remote_store(d, bufs.data, base + r * seg_max, &contribution[off..off + len])?;
+        ctx.signal(d, bufs.data_flags, r)?;
     }
     let (my_off, my_len) = parts[r];
-    ctx.store_local(BUF_MLP_PART, base + r * seg_max, &p.data()[my_off..my_off + my_len])
-        .expect("mlp publish own segment");
-    ctx.signal(r, FLAGS_MLP_PART, r).expect("mlp signal own segment");
+    ctx.store_local(bufs.data, base + r * seg_max, &contribution[my_off..my_off + my_len])?;
+    ctx.signal(r, bufs.data_flags, r)?;
 
     // concurrent reduction of the owned segment behind flags
     let mut acc = vec![0.0f32; my_len];
     for src in 0..w {
-        ctx.wait_flag_ge(FLAGS_MLP_PART, src, round).expect("mlp reduce wait");
-        let contrib = ctx
-            .load_local_vec(BUF_MLP_PART, base + src * seg_max, my_len)
-            .expect("mlp load contribution");
+        ctx.wait_flag_ge(bufs.data_flags, src, round)?;
+        let contrib = ctx.load_local_vec(bufs.data, base + src * seg_max, my_len)?;
         for (a, c) in acc.iter_mut().zip(&contrib) {
             *a += c;
         }
     }
 
-    // ---- all-gather the reduced segments (column-parallel up-projection
-    //      of the next layer consumes the full vector) ----
+    // ---- all-gather the reduced segments (the next dense consumer needs
+    //      the full vector) ----
     for d in ctx.peers() {
-        ctx.remote_store(d, BUF_MLP_GATHER, base + r * seg_max, &acc)
-            .expect("mlp push reduced segment");
-        ctx.signal(d, FLAGS_MLP_GATHER, r).expect("mlp signal reduced segment");
+        ctx.remote_store(d, bufs.gather, base + r * seg_max, &acc)?;
+        ctx.signal(d, bufs.gather_flags, r)?;
     }
-    ctx.store_local(BUF_MLP_GATHER, base + r * seg_max, &acc)
-        .expect("mlp publish reduced segment");
-    ctx.signal(r, FLAGS_MLP_GATHER, r).expect("mlp signal own reduced segment");
+    ctx.store_local(bufs.gather, base + r * seg_max, &acc)?;
+    ctx.signal(r, bufs.gather_flags, r)?;
 
-    let mut mlp = vec![0.0f32; cfg.d_model];
+    let mut out = vec![0.0f32; n];
     for src in 0..w {
-        ctx.wait_flag_ge(FLAGS_MLP_GATHER, src, round).expect("mlp gather wait");
+        ctx.wait_flag_ge(bufs.gather_flags, src, round)?;
         let (off, len) = parts[src];
-        let seg = ctx
-            .load_local_vec(BUF_MLP_GATHER, base + src * seg_max, len)
-            .expect("mlp load reduced segment");
-        mlp[off..off + len].copy_from_slice(&seg);
+        let seg = ctx.load_local_vec(bufs.gather, base + src * seg_max, len)?;
+        out[off..off + len].copy_from_slice(&seg);
     }
-    mlp
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -333,7 +545,7 @@ mod tests {
         for world in [1usize, 2, 4] {
             let cfg = TransformerConfig::tiny(world);
             let reqs = vec![Request { id: 0, prompt_len: 3, gen_len: 2 }];
-            let report = serve(&cfg, reqs, native_factory(&cfg, seed));
+            let report = serve(&cfg, reqs, native_factory(&cfg, seed)).expect("serve");
             assert_eq!(report.results.len(), 1);
             assert_eq!(report.results[0].tokens, 5);
             assert_eq!(report.total_tokens, 5);
@@ -343,12 +555,13 @@ mod tests {
 
     #[test]
     fn tp_sharded_serve_completes() {
-        // the TP-MLP path through serve(): every rank holds only its
-        // shard; token counts must match the replicated run
+        // the full-TP path through serve() (head-sharded attention + TP
+        // MLP): every rank holds only its shards; token counts must match
+        // the replicated run
         for world in [2usize, 3, 4] {
             let cfg = TransformerConfig::tiny(world);
             let reqs = vec![Request { id: 0, prompt_len: 2, gen_len: 3 }];
-            let report = serve(&cfg, reqs, tp_factory(&cfg, 91));
+            let report = serve(&cfg, reqs, tp_factory(&cfg, 91)).expect("serve");
             assert_eq!(report.total_tokens, 5, "world {world}");
         }
     }
@@ -363,7 +576,7 @@ mod tests {
         let cfg2 = cfg.clone();
         run_node(heap, move |ctx| {
             let compute = factory(ctx.rank());
-            let mut shard = KvShard::new(&cfg2);
+            let mut shard = make_shard(&cfg2, &compute, ctx.rank());
             let mut h = token_embedding(&cfg2, 0);
             let mut round = 0u64;
             for t in 0..steps {
@@ -375,7 +588,8 @@ mod tests {
                     &h,
                     t % cfg2.world,
                     &mut round,
-                );
+                )
+                .expect("decode step");
             }
             h
         })
@@ -405,9 +619,11 @@ mod tests {
 
     #[test]
     fn tp_hidden_state_equals_reference_decoder() {
-        // TP-MLP path: the fused GEMM+RS exchange must reproduce the
-        // replicated reference (up to the segmented-K sum association),
-        // for even and ragged d_model/ffn_hidden, worlds 1..4
+        // the acceptance criterion: head-sharded TP attention (plus the TP
+        // MLP) through the fused GEMM+RS exchanges must reproduce the
+        // replicated reference decoder — for even and ragged
+        // n_heads/d_model/ffn_hidden, worlds 1..4 (tiny_ragged(4) puts 3
+        // heads on 4 ranks: one empty head shard, explicitly supported)
         let seed = 79;
         for world in [1usize, 2, 3, 4] {
             for cfg in
@@ -424,14 +640,14 @@ mod tests {
     }
 
     #[test]
-    fn tp_ranks_agree_closely_with_each_other() {
-        // the MLP reduction association is canonical (source order), but
-        // the attention combine folds in rank-staggered order, so ranks
-        // agree to tight float tolerance rather than bitwise
+    fn tp_ranks_agree_bitwise_with_each_other() {
+        // both fused exchanges reduce in canonical source order and every
+        // rank gathers the same reduced bits, and head-sharded attention
+        // is entirely local — so all ranks' hidden states are *identical*
         let cfg = TransformerConfig::tiny_ragged(4);
         let outs = drive_node(&cfg, 4, tp_factory(&cfg, 80));
         for out in &outs[1..] {
-            out.assert_allclose(&outs[0], 1e-5, 1e-5);
+            assert_eq!(out, &outs[0]);
         }
     }
 
@@ -443,10 +659,123 @@ mod tests {
             Request { id: 1, prompt_len: 1, gen_len: 2 },
             Request { id: 2, prompt_len: 4, gen_len: 0 },
         ];
-        let report = serve(&cfg, reqs, native_factory(&cfg, 79));
+        let report = serve(&cfg, reqs, native_factory(&cfg, 79)).expect("serve");
         assert_eq!(report.results.len(), 3);
         assert_eq!(report.total_tokens, 3 + 3 + 4);
         let s = report.latency_summary();
         assert!(s.min > 0.0);
+    }
+
+    #[test]
+    fn node_outcomes_prefer_root_cause_over_secondary_timeouts() {
+        use crate::iris::WaitTimeout;
+        let timeout = || {
+            IrisError::Timeout(WaitTimeout {
+                rank: 0,
+                flags: "f".into(),
+                idx: 1,
+                target: 2,
+                seen: 0,
+            })
+        };
+        // a rank's structured failure outranks its peers' timeouts, in
+        // whatever rank order they appear
+        let outs: Vec<Result<u32, IrisError>> =
+            vec![Err(timeout()), Err(IrisError::UnknownBuffer("b".into())), Err(timeout())];
+        match collect_node_outcomes(outs) {
+            Err(IrisError::UnknownBuffer(b)) => assert_eq!(b, "b"),
+            other => panic!("expected root cause, got {other:?}"),
+        }
+        // all ok: rank 0's payload
+        assert_eq!(collect_node_outcomes(vec![Ok(7u32), Ok(7)]).unwrap(), 7);
+        // only timeouts: the timeout is the best information available
+        assert!(matches!(
+            collect_node_outcomes::<u32>(vec![Ok(1), Err(timeout())]),
+            Err(IrisError::Timeout(_))
+        ));
+    }
+
+    #[test]
+    fn over_long_request_rejected_before_decode() {
+        // a request that cannot fit any KV layout is rejected up front
+        // with a typed error (uniform with the Result API), not by a
+        // shard-overflow assert on every rank mid-decode
+        let cfg = TransformerConfig::tiny(2); // max_seq 64
+        let reqs = vec![Request { id: 0, prompt_len: 40, gen_len: 30 }];
+        match serve(&cfg, reqs, tp_factory(&cfg, 1)) {
+            Err(IrisError::InvalidLayout(msg)) => assert!(msg.contains("max_seq"), "{msg}"),
+            other => panic!("expected InvalidLayout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_partition_in_exchange_reports_invalid_layout() {
+        // the public exchange validates its partition contract in release
+        // builds too: a partition that does not cover the contribution —
+        // or overlaps itself — comes back as a typed InvalidLayout, not a
+        // silently wrong sum
+        let cfg = TransformerConfig::tiny(2);
+        let heap = build_serve_heap(&cfg);
+        let outs = run_node(heap, move |ctx| {
+            let short = crate::util::partition(7, ctx.world()); // covers n-1
+            let p = [1.0f32; 8];
+            let a = fused_allreduce_exchange(&ctx, &short, &p, 1, &MLP_EXCHANGE);
+            let overlapping = vec![(0usize, 4usize), (0, 4)]; // sums to n but double-counts
+            let b = fused_allreduce_exchange(&ctx, &overlapping, &p, 1, &MLP_EXCHANGE);
+            let unbalanced = vec![(0usize, 6usize), (6, 2)]; // contiguous but > seg_max stride
+            let c = fused_allreduce_exchange(&ctx, &unbalanced, &p, 1, &MLP_EXCHANGE);
+            (a, b, c)
+        });
+        for (a, b, c) in outs {
+            match a {
+                Err(IrisError::InvalidLayout(msg)) => assert!(msg.contains("covers"), "{msg}"),
+                other => panic!("expected InvalidLayout, got {other:?}"),
+            }
+            match b {
+                Err(IrisError::InvalidLayout(msg)) => {
+                    assert!(msg.contains("not contiguous"), "{msg}")
+                }
+                other => panic!("expected InvalidLayout, got {other:?}"),
+            }
+            match c {
+                Err(IrisError::InvalidLayout(msg)) => {
+                    assert!(msg.contains("seg_max"), "{msg}")
+                }
+                other => panic!("expected InvalidLayout, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn tp_attention_moves_no_flash_decode_partials() {
+        // head-sharded attention's exchange is the Wo partial sum, not the
+        // per-rank PartialState inbox: the serve_inbox flags must stay at
+        // zero for the whole TP run
+        let cfg = TransformerConfig::tiny(3);
+        let heap = build_serve_heap(&cfg);
+        let heap2 = Arc::clone(&heap);
+        let cfg2 = cfg.clone();
+        let factory = tp_factory(&cfg, 83);
+        run_node(heap2, move |ctx| {
+            let compute = factory(ctx.rank());
+            let mut shard = make_shard(&cfg2, &compute, ctx.rank());
+            let mut h = token_embedding(&cfg2, 0);
+            let mut round = 0u64;
+            for t in 0..3 {
+                h = decode_step_fused(
+                    &ctx,
+                    &cfg2,
+                    &compute,
+                    &mut shard,
+                    &h,
+                    t % cfg2.world,
+                    &mut round,
+                )
+                .expect("decode step");
+            }
+        });
+        for rank in 0..cfg.world {
+            assert_eq!(heap.flag_read(rank, FLAGS_PARTIAL, rank).unwrap(), 0);
+        }
     }
 }

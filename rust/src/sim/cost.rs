@@ -34,7 +34,7 @@ pub fn gemm_time(hw: &HwConfig, m: usize, n: usize, k: usize, imp: GemmImpl) -> 
     let mut t = flop_time.max(mem_time);
     if imp == GemmImpl::Vendor {
         let (lo, hi) = hw.torch_gemm_window;
-        if m >= lo && m <= hi {
+        if (lo..=hi).contains(&m) {
             t /= hw.torch_gemm_bonus;
         }
     }
@@ -120,6 +120,22 @@ pub fn hbm_roundtrip_time(hw: &HwConfig, bytes: u64) -> f64 {
     2.0 * bytes as f64 / hw.hbm_bw
 }
 
+/// RCCL-shaped all-reduce (direct reduce-scatter + all-gather) of `elems`
+/// fp16 elements on one rank: two segment multipushes plus the fold of
+/// `world - 1` remote contributions into the owned segment. The collective
+/// kernel the BSP Megatron attention/MLP blocks invoke after their partial
+/// output projections; the fused serving path replaces it with the
+/// tile-granular GEMM+RS pipeline.
+pub fn allreduce_time(hw: &HwConfig, elems: usize, world: usize) -> f64 {
+    if world <= 1 || elems == 0 {
+        return 0.0;
+    }
+    let seg = elems.div_ceil(world);
+    let comm = 2.0 * multipush_time(hw, (seg * 2) as u64, world, hw.rma_store_eff);
+    let red = reduce_accum_time(hw, seg, world - 1);
+    comm + red
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +217,21 @@ mod tests {
         assert!(reduce_accum_time(&hw, seg, 7) > reduce_accum_time(&hw, seg, 1));
         assert_eq!(reduce_accum_time(&hw, 0, 7), 0.0);
         assert_eq!(reduce_accum_time(&hw, seg, 0), 0.0);
+    }
+
+    #[test]
+    fn allreduce_time_scales_and_degenerates() {
+        let hw = presets::mi300x();
+        // one d_model-wide decode vector on 8 ranks: strictly positive,
+        // dominated by two latency-floored multipushes
+        let t = allreduce_time(&hw, 8192, 8);
+        assert!(t > 0.0 && t.is_finite());
+        assert!(t >= 2.0 * hw.link_latency_s);
+        // no communication for world 1 or empty payloads
+        assert_eq!(allreduce_time(&hw, 8192, 1), 0.0);
+        assert_eq!(allreduce_time(&hw, 0, 8), 0.0);
+        // more data takes longer
+        assert!(allreduce_time(&hw, 1 << 22, 8) > allreduce_time(&hw, 1 << 12, 8));
     }
 
     #[test]

@@ -35,6 +35,43 @@ pub fn partition(n: usize, parts: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// Column tiles `(col offset, width)` of a segment of `len` columns cut
+/// into `block`-wide tiles (last tile ragged). This is the single source
+/// of fused-push tile geometry shared by the GEMM+RS coordinator, its DES
+/// timing twin, and the TP-attention twin — one rule everywhere so flag
+/// indices and tile counts can never disagree across layers.
+pub fn seg_tiles(len: usize, block: usize) -> Vec<(usize, usize)> {
+    assert!(block >= 1, "tile width must be positive");
+    (0..len.div_ceil(block))
+        .map(|t| {
+            let c0 = t * block;
+            (c0, (len - c0).min(block))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod seg_tiles_tests {
+    use super::seg_tiles;
+
+    #[test]
+    fn tiles_cover_segment_exactly() {
+        assert_eq!(seg_tiles(10, 3), vec![(0, 3), (3, 3), (6, 3), (9, 1)]);
+        assert_eq!(seg_tiles(3, 3), vec![(0, 3)]);
+        assert_eq!(seg_tiles(0, 4), Vec::<(usize, usize)>::new());
+        for (len, block) in [(1usize, 1usize), (7, 2), (64, 16), (13, 5)] {
+            let tiles = seg_tiles(len, block);
+            assert_eq!(tiles.iter().map(|(_, w)| w).sum::<usize>(), len);
+            let mut off = 0;
+            for (c0, w) in tiles {
+                assert_eq!(c0, off);
+                assert!((1..=block).contains(&w));
+                off += w;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod partition_tests {
     use super::partition;

@@ -8,6 +8,9 @@
 //!   10–11);
 //! * [`all_reduce`] — the §6.2 training extension (bucketed gradient
 //!   all-reduce overlapped with the backward pass);
+//! * [`tp_attention`] — the head-sharded (Megatron-style) TP attention
+//!   block: BSP all-reduce of the Wo partials vs the fused GEMM+RS
+//!   pipeline;
 //! * [`transformer`] — a tiny tensor-parallel transformer decode model
 //!   built from the same pieces, used by the end-to-end serving example.
 
@@ -15,4 +18,7 @@ pub mod ag_gemm;
 pub mod all_reduce;
 pub mod flash_decode;
 pub mod gemm_rs;
+pub mod tp_attention;
 pub mod transformer;
+
+pub use tp_attention::TpAttnStrategy;

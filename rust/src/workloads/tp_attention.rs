@@ -1,0 +1,317 @@
+//! Timing twin of the head-sharded (Megatron-style) TP attention block:
+//! builds the discrete-event program for the BSP composition and the fused
+//! pipeline at arbitrary (batch, heads, head_dim, kv_len, world) and
+//! returns the simulated timeline + tax ledger. The functional twin — real
+//! data movement, same protocol — is the serving path's head-sharded
+//! branch (`serve::decode_step_fused` + `serve::fused_allreduce_exchange`).
+//!
+//! Structure per strategy (mirror of [`crate::workloads::gemm_rs`], with
+//! the attention stage in front):
+//!
+//! * **BaselineBsp** — launch(QKV) → column-parallel QKV projection
+//!   (vendor GEMM) → launch(attn) → local flash decode over this rank's
+//!   head shard → launch(Wo) → row-parallel partial output projection →
+//!   HBM round-trip of the partial (Inter-Kernel Tax: the collective
+//!   re-reads what the GEMM just wrote) → entry barrier → launch(AR) →
+//!   RCCL-shaped all-reduce of the `[batch, d_model]` partials → exit
+//!   barrier. Pays all three taxes.
+//! * **FusedTiles** — push kernel on stream 1 conceptually fused with one
+//!   compute kernel on stream 0: QKV + attention proceed head by head,
+//!   then each (consumer, tile) block of the Wo partial is pushed the
+//!   moment it is computed; the consumer's reduction chunks run behind
+//!   per-tile dependencies and the reduced segments are multipushed back.
+//!   Two launches, no barriers, no HBM staging of the partial — the
+//!   eliminated taxes the acceptance criterion prices.
+//!
+//! Ragged head partitions are first-class: `n_heads % world != 0` skews
+//! per-rank compute, and `world > n_heads` leaves some ranks with *empty*
+//! head shards that still participate in the Wo reduction.
+
+use crate::config::{HwConfig, TpAttnConfig};
+use crate::sim::cost::{self, GemmImpl};
+use crate::sim::{Sim, SimResult, TaskId};
+
+/// Execution strategy of the TP attention block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TpAttnStrategy {
+    /// BSP Megatron: local projections + attention, then a barrier-fenced
+    /// RCCL-shaped all-reduce of the Wo partials.
+    BaselineBsp,
+    /// The paper's pattern: tile-granular fused GEMM+RS pipeline for the
+    /// Wo partial sum, no barrier anywhere.
+    FusedTiles,
+}
+
+impl TpAttnStrategy {
+    pub const ALL: [TpAttnStrategy; 2] = [TpAttnStrategy::BaselineBsp, TpAttnStrategy::FusedTiles];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TpAttnStrategy::BaselineBsp => "baseline_bsp",
+            TpAttnStrategy::FusedTiles => "fused_tiles",
+        }
+    }
+}
+
+/// Build and run the DES program for one TP-attention block.
+pub fn simulate(
+    cfg: &TpAttnConfig,
+    hw: &HwConfig,
+    strategy: TpAttnStrategy,
+    seed: u64,
+) -> SimResult {
+    cfg.validate().expect("invalid TpAttnConfig");
+    let mut sim = Sim::new(hw, cfg.world, seed);
+    match strategy {
+        TpAttnStrategy::BaselineBsp => build_baseline(&mut sim, cfg, hw),
+        TpAttnStrategy::FusedTiles => build_fused(&mut sim, cfg, hw),
+    }
+    sim.run()
+}
+
+/// Mean makespan over `iters` simulated iterations (§5.1 protocol; jitter
+/// seeds differ per iteration).
+pub fn mean_latency_s(
+    cfg: &TpAttnConfig,
+    hw: &HwConfig,
+    strategy: TpAttnStrategy,
+    seed: u64,
+    iters: usize,
+) -> f64 {
+    assert!(iters > 0);
+    (0..iters)
+        .map(|i| simulate(cfg, hw, strategy, seed.wrapping_add(i as u64)).makespan_s)
+        .sum::<f64>()
+        / iters as f64
+}
+
+/// Per-rank modeled stage times for this rank's head slice.
+fn stage_times(cfg: &TpAttnConfig, hw: &HwConfig, heads_r: usize, imp: GemmImpl) -> (f64, f64, f64) {
+    let d = cfg.d_model();
+    let hd = cfg.head_dim;
+    let qkv = cost::gemm_time(hw, cfg.batch, 3 * heads_r * hd, d, imp);
+    let attn =
+        cost::attention_partial_time(hw, cfg.batch, heads_r, heads_r, hd, cfg.kv_len);
+    let wo = cost::gemm_time(hw, cfg.batch, d, heads_r * hd, imp);
+    (qkv, attn, wo)
+}
+
+fn build_baseline(sim: &mut Sim, cfg: &TpAttnConfig, hw: &HwConfig) {
+    let w = cfg.world;
+    let d = cfg.d_model();
+    let head_parts = cfg.head_partition();
+
+    // local stage: three vendor kernels per rank, partial staged to HBM
+    // for the collective that follows
+    let mut arrivals = Vec::with_capacity(w);
+    for r in 0..w {
+        let (qkv, attn, wo) = stage_times(cfg, hw, head_parts[r].1, GemmImpl::Vendor);
+        let l1 = sim.launch(r, "tp_qkv_launch", &[]);
+        let dur = sim.jittered(qkv.max(hw.kernel_min_s));
+        let c1 = sim.compute(r, "qkv_proj", dur, &[l1]);
+        let l2 = sim.launch(r, "tp_attn_launch", &[c1]);
+        let dur = sim.jittered(attn.max(hw.kernel_min_s));
+        let c2 = sim.compute(r, "attn_local", dur, &[l2]);
+        let l3 = sim.launch(r, "tp_wo_launch", &[c2]);
+        let dur = sim.jittered(wo.max(hw.kernel_min_s));
+        let c3 = sim.compute(r, "wo_partial", dur, &[l3]);
+        // the partial is evicted to HBM and re-read by the collective:
+        // the Inter-Kernel Tax
+        let rt = sim.hbm_roundtrip(r, (cfg.batch * d * 2) as u64, &[c3]);
+        arrivals.push(rt);
+    }
+    let entry = sim.barrier(&arrivals);
+
+    // collective stage: RCCL-shaped all-reduce of the [batch, d_model]
+    // partials (reduce-scatter + all-gather at aggregate bandwidth)
+    let mut coll = Vec::with_capacity(w);
+    for r in 0..w {
+        let l = sim.launch(r, "tp_allreduce_launch", &[entry[r]]);
+        let dur = cost::allreduce_time(hw, cfg.batch * d, w);
+        let dur = sim.jittered(dur.max(hw.kernel_min_s));
+        coll.push(sim.compute(r, "rccl_allreduce", dur, &[l]));
+    }
+    let _exit = sim.barrier(&coll);
+}
+
+fn build_fused(sim: &mut Sim, cfg: &TpAttnConfig, hw: &HwConfig) {
+    let w = cfg.world;
+    let d = cfg.d_model();
+    let head_parts = cfg.head_partition();
+    let d_parts = cfg.d_model_partition();
+
+    // stage 1: one fused kernel per rank — QKV + attention proceed head by
+    // head, then the Wo partial is produced tile by tile; each (consumer,
+    // tile) block is pushed on stream 1 the moment it exists.
+    // `done[r][dst][t]` is the consumer-visible completion of producer r's
+    // tile t of segment dst.
+    let mut done: Vec<Vec<Vec<TaskId>>> = vec![vec![Vec::new(); w]; w];
+    let mut tail = Vec::with_capacity(w);
+    for r in 0..w {
+        let heads_r = head_parts[r].1;
+        let lp = sim.launch(r, "tp_push_launch", &[]);
+        let lf = sim.launch(r, "tp_fused_launch", &[lp]);
+        // one jitter draw per rank-kernel (chunks of one kernel share the
+        // slow-clock fate of their CU set)
+        let jf = sim.jittered(1.0);
+        let (qkv, attn, wo) = stage_times(cfg, hw, heads_r, GemmImpl::Tile);
+        let mut prev = lf;
+        for _ in 0..heads_r {
+            let dur = (qkv + attn) / heads_r as f64 * jf;
+            prev = sim.compute(r, "attn_head_chunk", dur, &[prev]);
+        }
+        for d_off in 0..w {
+            let dst = (r + d_off) % w;
+            let (_, len) = d_parts[dst];
+            for &(_c0, tl) in &cfg.seg_tiles(len) {
+                let dur = wo * (tl as f64 / d as f64) * jf;
+                let c = sim.compute(r, "wo_chunk", dur, &[prev]);
+                prev = c;
+                if dst == r {
+                    done[r][dst].push(c);
+                } else {
+                    // the push kernel on stream 1 ships the block the
+                    // moment the chunk exists (paper §4.1.4 concurrency)
+                    let p = sim.push_on(r, 1, dst, (cfg.batch * tl * 2) as u64, &[c]);
+                    done[r][dst].push(p);
+                }
+            }
+        }
+        tail.push(prev);
+    }
+
+    // stage 2: concurrent reduction — fold own tiles (already on-chip),
+    // then each remote (source, tile) behind its arrival; the reduced
+    // segment is multipushed back on stream 1 for the gather
+    let mut gathered: Vec<TaskId> = Vec::with_capacity(w);
+    let mut reduce_tail = Vec::with_capacity(w);
+    for r in 0..w {
+        let jf = sim.jittered(1.0);
+        let tiles = cfg.seg_tiles(d_parts[r].1);
+        let mut prev = tail[r];
+        for d_off in 0..w {
+            let s = (r + d_off) % w;
+            for (t, &(_c0, tl)) in tiles.iter().enumerate() {
+                let dur = cost::reduce_accum_time(hw, cfg.batch * tl, 1) * jf;
+                let deps = vec![prev, done[s][r][t]];
+                prev = sim.compute(r, "tp_reduce_chunk", dur, &deps);
+            }
+        }
+        reduce_tail.push(prev);
+        gathered.push(sim.multipush_on(r, 1, (cfg.batch * d_parts[r].1 * 2) as u64, &[prev]));
+    }
+
+    // stage 3: residual add once every reduced segment has arrived — a
+    // per-tile flag wait, not a barrier (no rank waits for ranks it does
+    // not consume data from)
+    for r in 0..w {
+        let mut deps = vec![reduce_tail[r]];
+        for (s, &g) in gathered.iter().enumerate() {
+            if s != r {
+                deps.push(g);
+            }
+        }
+        let dur = cost::reduce_accum_time(hw, cfg.batch * d, 1);
+        sim.compute(r, "attn_residual", dur, &deps);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn attn(kv: usize) -> TpAttnConfig {
+        TpAttnConfig::paper_attn(kv)
+    }
+
+    fn latency(kv: usize, s: TpAttnStrategy) -> f64 {
+        mean_latency_s(&attn(kv), &presets::mi300x(), s, 777, 20)
+    }
+
+    #[test]
+    fn fused_beats_bsp_across_kv_lengths() {
+        // no barrier skew, no HBM staging, exchange overlapped with the
+        // tile loop: the fused block must win at every KV length
+        for kv in [1usize << 12, 1 << 15, 1 << 18] {
+            let bsp = latency(kv, TpAttnStrategy::BaselineBsp);
+            let fused = latency(kv, TpAttnStrategy::FusedTiles);
+            assert!(fused < bsp, "kv={kv}: fused {fused} !< bsp {bsp}");
+        }
+    }
+
+    #[test]
+    fn bsp_pays_all_three_taxes() {
+        let r = simulate(&attn(1 << 15), &presets::mi300x(), TpAttnStrategy::BaselineBsp, 5);
+        assert_eq!(r.ledger.launches, 4 * 8, "4 launches per rank");
+        assert!(r.ledger.launch_s > 0.0);
+        assert!(r.ledger.bulk_sync_s > 0.0, "barrier skew must show up");
+        assert!(r.ledger.inter_kernel_s > 0.0, "partial staged through HBM");
+    }
+
+    #[test]
+    fn fused_pays_zero_bulk_sync_tax() {
+        // the acceptance criterion: zero bulk-synchronous tax in the DES
+        // twin for the fused TP-attention path, at every KV length
+        for kv in [1usize << 12, 1 << 16, 1 << 19] {
+            let bsp = simulate(&attn(kv), &presets::mi300x(), TpAttnStrategy::BaselineBsp, 11);
+            let fused = simulate(&attn(kv), &presets::mi300x(), TpAttnStrategy::FusedTiles, 11);
+            assert!(bsp.ledger.bulk_sync_s > 0.0, "kv={kv}: BSP must pay bulk-sync");
+            assert_eq!(fused.ledger.bulk_sync_s, 0.0, "kv={kv}: fused pays none");
+            assert_eq!(fused.ledger.inter_kernel_s, 0.0, "kv={kv}: no HBM staging");
+            assert_eq!(fused.count_by_label("tp_fused_launch"), 8, "one fused kernel per rank");
+        }
+    }
+
+    #[test]
+    fn fused_fabric_bytes_match_analytic() {
+        // scatter: every rank ships its partial of every remote segment
+        // once (2·M·D·(W−1) bytes total, fp16); gather: every reduced
+        // segment is multipushed to W−1 peers (another 2·M·D·(W−1))
+        let cfg = attn(1 << 14);
+        let r = simulate(&cfg, &presets::mi300x(), TpAttnStrategy::FusedTiles, 3);
+        let expect = (4 * cfg.batch * cfg.d_model() * (cfg.world - 1)) as u64;
+        assert_eq!(r.ledger.fabric_bytes, expect);
+    }
+
+    #[test]
+    fn ragged_and_empty_head_shards_simulate() {
+        // 5 heads on 4 ranks (ragged) and on 8 ranks (three empty shards):
+        // the tile/segment bookkeeping must stay consistent and the empty
+        // ranks still join the Wo reduction
+        for world in [1usize, 3, 4, 8] {
+            let cfg = TpAttnConfig::tiny(world);
+            for s in TpAttnStrategy::ALL {
+                let r = simulate(&cfg, &presets::mi300x(), s, 9);
+                assert!(r.makespan_s > 0.0 && r.makespan_s.is_finite(), "{s:?} world {world}");
+            }
+        }
+    }
+
+    #[test]
+    fn attention_dominates_at_long_kv() {
+        // the block's time must be attention-bound at 256K KV — otherwise
+        // the twin is mispricing the stages
+        let r = simulate(&attn(1 << 18), &presets::mi300x(), TpAttnStrategy::FusedTiles, 21);
+        let attn_t = r.time_by_label("attn_head_chunk");
+        let wo_t = r.time_by_label("wo_chunk");
+        assert!(attn_t > wo_t, "attention {attn_t} must dominate wo {wo_t}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = simulate(&attn(1 << 15), &presets::mi300x(), TpAttnStrategy::FusedTiles, 99);
+        let b = simulate(&attn(1 << 15), &presets::mi300x(), TpAttnStrategy::FusedTiles, 99);
+        assert_eq!(a.makespan_s, b.makespan_s);
+    }
+
+    #[test]
+    fn world_one_degenerates_gracefully() {
+        let cfg = TpAttnConfig { batch: 1, n_heads: 8, head_dim: 16, kv_len: 256, world: 1, block_n: 16 };
+        for s in TpAttnStrategy::ALL {
+            let r = simulate(&cfg, &presets::mi300x(), s, 5);
+            assert!(r.makespan_s > 0.0, "{s:?}");
+            assert_eq!(r.ledger.fabric_bytes, 0, "{s:?} moved bytes with world=1");
+        }
+    }
+}

@@ -1,34 +1,48 @@
 //! A tiny tensor-parallel transformer decode model built on the paper's
 //! fused patterns — the workload behind the end-to-end serving example.
 //!
-//! Architecture (decode, the setting of paper §4.2):
+//! Architecture (decode, the setting of paper §4.2). Two attention
+//! layouts coexist behind [`LocalCompute`]:
 //!
-//! * **Attention is sequence-parallel**: QKV/output-projection weights are
-//!   replicated; the KV cache is sharded across ranks along the sequence
-//!   dimension (token `t`'s KV lives on rank `t % world`), and attention
-//!   runs the paper's fully-fused distributed Flash Decode (partial per
-//!   rank, tile push + flags, concurrent reduction — Algorithm 4).
-//! * **The MLP is tensor-parallel**: the up-projection `W1` is
-//!   column-sharded (rank r owns `W1[:, ffn_r]`) and the down-projection
-//!   `W2` is row-sharded (rank r owns `W2[ffn_r, :]`), with the ragged
-//!   [`crate::util::partition`] layout so `ffn_hidden` and `d_model` need
-//!   not divide by the world size. A decode step computes each rank's
-//!   partial down-projection `gelu(x · W1_r) · W2_r` locally; the serving
-//!   engine then runs the fused GEMM+ReduceScatter exchange (the mirror of
-//!   AG+GEMM — see [`crate::coordinator::gemm_rs`]) followed by a
-//!   flag-synchronized all-gather of the reduced segments. On the decode
-//!   path (M = 1) the column-parallel up-projection's all-gather
-//!   degenerates to "gather the activation segments, then GEMM" — the
-//!   same data movement the AG+GEMM path fuses at tile granularity for
-//!   prefill-sized M.
+//! * **Replicated (sequence-parallel) attention** — the legacy layout the
+//!   PJRT backend still uses: QKV/output-projection weights are replicated,
+//!   the KV cache is sharded across ranks along the sequence dimension
+//!   (token `t`'s KV lives on rank `t % world`), and attention runs the
+//!   paper's fully-fused distributed Flash Decode (partial per rank, tile
+//!   push + flags, concurrent reduction — Algorithm 4).
+//! * **Head-sharded (Megatron-style) attention** — the layout
+//!   [`NativeCompute::new_tp`] builds: the fused QKV projection is
+//!   **column-parallel** (rank r owns the q/k/v columns of its
+//!   [`TransformerConfig::head_partition`] head slice and computes only
+//!   those heads), the KV cache holds only those heads — over the *full*
+//!   sequence — so attention is entirely local, and the output projection
+//!   `Wo` is **row-parallel**: rank r's [`LocalCompute::attn_out_partial`]
+//!   is `flatten(attn_r) · Wo_r`, a partial `[1, d_model]` product whose
+//!   cross-rank sum flows through the same fused GEMM+ReduceScatter push
+//!   pipeline as the MLP down-projection (see
+//!   [`crate::coordinator::gemm_rs`] and `serve::fused_allreduce_exchange`)
+//!   — no BSP barrier anywhere in the attention block. Head partitions are
+//!   ragged ([`crate::util::partition`]): `n_heads % world != 0` is fine,
+//!   and `world > n_heads` yields *empty* head shards that contribute a
+//!   zero partial (explicitly supported, see `validate`).
+//!
+//! **The MLP is tensor-parallel** in both layouts' TP mode: the
+//! up-projection `W1` is column-sharded (rank r owns `W1[:, ffn_r]`) and
+//! the down-projection `W2` is row-sharded (rank r owns `W2[ffn_r, :]`),
+//! with the ragged partition layout so `ffn_hidden` and `d_model` need not
+//! divide by the world size. A decode step computes each rank's partial
+//! down-projection `gelu(x · W1_r) · W2_r` locally; the serving engine
+//! runs the fused GEMM+ReduceScatter exchange followed by a
+//! flag-synchronized all-gather of the reduced segments.
 //!
 //! The local dense compute is abstracted behind [`LocalCompute`] so the
 //! serving path can execute it either natively ([`NativeCompute`]) or via
 //! the PJRT runtime running the AOT-compiled JAX artifact
 //! (`runtime::PjrtCompute`) — same protocol, Python never involved. A
-//! backend advertises TP sharding via [`LocalCompute::tp_sharded`]; the
-//! PJRT backend keeps the replicated-MLP layout (its artifact is the
-//! monolithic post-attention block).
+//! backend advertises its sharding via [`LocalCompute::tp_sharded`] (MLP)
+//! and [`LocalCompute::attn_sharded`] (attention heads); the PJRT backend
+//! keeps the fully replicated layout (its artifact is the monolithic
+//! post-attention block).
 
 use crate::kernels::attention::{flash_decode_partial, PartialState};
 use crate::kernels::combine::OnlineCombiner;
@@ -96,6 +110,10 @@ impl TransformerConfig {
         }
     }
 
+    /// Validate the geometry. `world > n_heads` is *accepted*: the ragged
+    /// head partition then assigns some ranks an empty head shard, which
+    /// the head-sharded attention path explicitly supports (the rank
+    /// computes no heads and contributes a zero output-projection partial).
     pub fn validate(&self) -> Result<(), String> {
         if self.d_model != self.n_heads * self.head_dim {
             return Err(format!(
@@ -106,6 +124,15 @@ impl TransformerConfig {
         }
         if self.world == 0 || self.n_layers == 0 {
             return Err("world and n_layers must be positive".into());
+        }
+        if self.n_heads == 0 || self.head_dim == 0 {
+            return Err("n_heads and head_dim must be positive".into());
+        }
+        if self.kv_block == 0 {
+            return Err("kv_block must be positive".into());
+        }
+        if self.max_seq == 0 {
+            return Err("max_seq must be positive".into());
         }
         Ok(())
     }
@@ -135,6 +162,13 @@ impl TransformerConfig {
     pub fn d_model_partition(&self) -> Vec<(usize, usize)> {
         partition(self.d_model, self.world)
     }
+
+    /// Partition of the attention heads across ranks (the column shard of
+    /// the fused QKV projection / row shard of Wo). Ragged allowed —
+    /// including `world > n_heads`, which gives some ranks an empty shard.
+    pub fn head_partition(&self) -> Vec<(usize, usize)> {
+        partition(self.n_heads, self.world)
+    }
 }
 
 /// One layer's dense weights.
@@ -150,9 +184,12 @@ pub struct LayerWeights {
     pub w2: Tensor,
 }
 
-/// Full model weights. Attention weights are replicated on every rank;
-/// the MLP weights are either used whole (replicated mode) or sliced into
-/// this rank's TP shard at construction ([`NativeCompute::new_tp`]).
+/// Full model weights as materialized at initialization. A replicated
+/// backend uses them whole; a tensor-parallel backend
+/// ([`NativeCompute::new_tp`]) slices *both* the attention projections
+/// (QKV columns / Wo rows of this rank's head slice) and the MLP
+/// (W1 columns / W2 rows of its ffn segment) at construction and drops
+/// the rest.
 #[derive(Debug, Clone)]
 pub struct TransformerWeights {
     pub layers: Vec<LayerWeights>,
@@ -192,9 +229,17 @@ impl TransformerWeights {
 /// engine calls [`LocalCompute::post_attn`] and no MLP communication
 /// happens) or holds a **TP shard** (`tp_sharded() == true`; the engine
 /// calls [`LocalCompute::attn_out_proj`] + [`LocalCompute::mlp_partial`]
-/// and runs the fused GEMM+RS exchange between them).
+/// and runs the fused GEMM+RS exchange between them). Independently, a
+/// backend with `attn_sharded() == true` holds only its head slice of the
+/// attention projections: [`LocalCompute::qkv`] returns that slice's
+/// heads, and [`LocalCompute::attn_out_partial`] is a *partial* output
+/// projection whose cross-rank sum the engine carries through the fused
+/// GEMM+RS exchange before adding the residual.
 pub trait LocalCompute {
-    /// h [1, d_model] → (q [heads, dim], k_new [heads, dim], v_new [heads, dim]).
+    /// h [1, d_model] → (q, k_new, v_new), each `[local_heads, dim]` where
+    /// `local_heads` is the full head count for replicated backends and
+    /// this rank's [`TransformerConfig::head_partition`] slice for
+    /// head-sharded ones (possibly zero heads when `world > n_heads`).
     fn qkv(&self, layer: usize, h: &Tensor) -> (Tensor, Tensor, Tensor);
 
     /// Number of layers available.
@@ -206,12 +251,34 @@ pub trait LocalCompute {
         false
     }
 
-    /// Output projection + first residual:
-    /// `h1 = h + flatten(attn_out) · Wo`. Required for TP backends; the
-    /// replicated default is built from it too.
-    fn attn_out_proj(&self, layer: usize, h: &Tensor, attn_out: &Tensor) -> Tensor {
-        let _ = (layer, h, attn_out);
+    /// Whether this backend holds only its rank's head slice of the
+    /// attention projections (and therefore requires the fused GEMM+RS
+    /// exchange of the Wo partials).
+    fn attn_sharded(&self) -> bool {
+        false
+    }
+
+    /// This rank's (partial) output projection, **without** the residual:
+    /// `flatten(attn_out) · Wo_r`, shape [1, d_model]. For a replicated
+    /// backend the "shard" is the whole Wo and the partial *is* the full
+    /// projection; for a head-sharded backend the cross-rank sum of the
+    /// partials reproduces it.
+    fn attn_out_partial(&self, layer: usize, attn_out: &Tensor) -> Tensor {
+        let _ = (layer, attn_out);
         unimplemented!("this LocalCompute backend only supports the monolithic post_attn path")
+    }
+
+    /// Output projection + first residual:
+    /// `h1 = h + flatten(attn_out) · Wo`. Only meaningful when the
+    /// backend's [`LocalCompute::attn_out_partial`] is the *full*
+    /// projection (replicated attention, or a world-1 "shard").
+    fn attn_out_proj(&self, layer: usize, h: &Tensor, attn_out: &Tensor) -> Tensor {
+        let proj = self.attn_out_partial(layer, attn_out);
+        let mut h1 = h.clone();
+        for (a, b) in h1.data_mut().iter_mut().zip(proj.data()) {
+            *a += b;
+        }
+        h1
     }
 
     /// This rank's partial down-projection of the MLP:
@@ -251,25 +318,43 @@ enum MlpWeights {
     Sharded { w1: Vec<Tensor>, w2: Vec<Tensor> },
 }
 
+/// Attention weight residency of a [`NativeCompute`].
+#[derive(Debug, Clone)]
+enum AttnWeights {
+    /// Full wqkv/wo on this instance.
+    Replicated,
+    /// This rank's Megatron head shard: per layer, the column-parallel
+    /// fused QKV slice `[d_model, 3 * heads * head_dim]` (local layout
+    /// `[q_r | k_r | v_r]`) and the row-parallel Wo slice
+    /// `[heads * head_dim, d_model]`. `heads` may be zero (empty shard
+    /// when `world > n_heads`).
+    HeadSharded { wqkv: Vec<Tensor>, wo: Vec<Tensor>, heads: usize },
+}
+
 /// Native (host tile-kernel) implementation of [`LocalCompute`] — the
 /// functional mirror of the JAX L2 graph in `python/compile/model.py`.
 pub struct NativeCompute {
     cfg: TransformerConfig,
     weights: TransformerWeights,
+    attn: AttnWeights,
     mlp: MlpWeights,
 }
 
 impl NativeCompute {
-    /// Replicated-weights instance (every rank holds the full MLP).
+    /// Replicated-weights instance (every rank holds the full model).
     pub fn new(cfg: TransformerConfig, weights: TransformerWeights) -> NativeCompute {
         cfg.validate().expect("invalid TransformerConfig");
         assert_eq!(weights.layers.len(), cfg.n_layers);
-        NativeCompute { cfg, weights, mlp: MlpWeights::Replicated }
+        NativeCompute { cfg, weights, attn: AttnWeights::Replicated, mlp: MlpWeights::Replicated }
     }
 
     /// Tensor-parallel instance holding only rank `rank`'s shard of the
-    /// MLP: W1 columns / W2 rows of ffn segment `rank` (ragged partition).
-    /// Attention weights stay replicated (sequence-parallel attention).
+    /// whole layer: the column-parallel fused QKV / row-parallel Wo slice
+    /// of its head partition (Megatron-style attention) plus W1 columns /
+    /// W2 rows of its ffn segment. Both partitions are ragged — neither
+    /// `n_heads` nor `ffn_hidden` need divide by the world size, and
+    /// `world > n_heads` yields an (explicitly supported) empty head
+    /// shard.
     pub fn new_tp(
         cfg: TransformerConfig,
         mut weights: TransformerWeights,
@@ -278,17 +363,41 @@ impl NativeCompute {
         cfg.validate().expect("invalid TransformerConfig");
         assert_eq!(weights.layers.len(), cfg.n_layers);
         assert!(rank < cfg.world, "rank {rank} out of range for world {}", cfg.world);
+        let hd = cfg.head_dim;
+        let (h0, hn) = cfg.head_partition()[rank];
+        let (c0, c1) = (h0 * hd, (h0 + hn) * hd);
+        let wqkv = weights
+            .layers
+            .iter()
+            .map(|lw| {
+                // the fused [d_model, 3*d_model] projection is laid out
+                // [q | k | v], each section head-major: this rank's slice
+                // keeps its heads' columns from each section
+                Tensor::concat_cols(&[
+                    lw.wqkv.cols(c0, c1),
+                    lw.wqkv.cols(cfg.d_model + c0, cfg.d_model + c1),
+                    lw.wqkv.cols(2 * cfg.d_model + c0, 2 * cfg.d_model + c1),
+                ])
+            })
+            .collect();
+        let wo = weights.layers.iter().map(|lw| lw.wo.rows(c0, c1)).collect();
         let (off, len) = cfg.ffn_partition()[rank];
         let w1 = weights.layers.iter().map(|lw| lw.w1.cols(off, off + len)).collect();
         let w2 = weights.layers.iter().map(|lw| lw.w2.rows(off, off + len)).collect();
-        // release the full MLP weights: a sharded rank holds only its
-        // shard (the memory point of TP), plus the replicated attention
-        // weights it still needs for qkv / attn_out_proj
+        // release the full weights: a sharded rank holds only its slices
+        // (the memory point of tensor parallelism)
         for lw in &mut weights.layers {
+            lw.wqkv = Tensor::zeros(&[0, 0]);
+            lw.wo = Tensor::zeros(&[0, 0]);
             lw.w1 = Tensor::zeros(&[0, 0]);
             lw.w2 = Tensor::zeros(&[0, 0]);
         }
-        NativeCompute { cfg, weights, mlp: MlpWeights::Sharded { w1, w2 } }
+        NativeCompute {
+            cfg,
+            weights,
+            attn: AttnWeights::HeadSharded { wqkv, wo, heads: hn },
+            mlp: MlpWeights::Sharded { w1, w2 },
+        }
     }
 
     pub fn config(&self) -> &TransformerConfig {
@@ -330,8 +439,19 @@ impl LocalCompute for NativeCompute {
         let cfg = &self.cfg;
         assert_eq!(h.dims(), &[1, cfg.d_model]);
         let x = rmsnorm(h); // pre-attention norm
-        let fused = Self::dense(&x, &self.weights.layers[layer].wqkv); // [1, 3D]
-        let (nh, hd) = (cfg.n_heads, cfg.head_dim);
+        let hd = cfg.head_dim;
+        // the fused projection [1, 3 * nh * hd] for this backend's heads
+        // (column subsets of the full GEMM are bitwise identical to the
+        // corresponding columns of the replicated projection: the k-loop
+        // accumulation order per output element does not change)
+        let (fused, nh) = match &self.attn {
+            AttnWeights::Replicated => {
+                (Self::dense(&x, &self.weights.layers[layer].wqkv), cfg.n_heads)
+            }
+            AttnWeights::HeadSharded { wqkv, heads, .. } => {
+                (Self::dense(&x, &wqkv[layer]), *heads)
+            }
+        };
         let split = |off: usize| {
             let mut t = Tensor::zeros(&[nh, hd]);
             for head in 0..nh {
@@ -341,7 +461,7 @@ impl LocalCompute for NativeCompute {
             }
             t
         };
-        (split(0), split(cfg.d_model), split(2 * cfg.d_model))
+        (split(0), split(nh * hd), split(2 * nh * hd))
     }
 
     fn n_layers(&self) -> usize {
@@ -353,17 +473,22 @@ impl LocalCompute for NativeCompute {
         matches!(self.mlp, MlpWeights::Sharded { .. }) && self.cfg.world > 1
     }
 
-    fn attn_out_proj(&self, layer: usize, h: &Tensor, attn_out: &Tensor) -> Tensor {
+    fn attn_sharded(&self) -> bool {
+        // a world-1 "shard" is the whole weight: no exchange needed
+        matches!(self.attn, AttnWeights::HeadSharded { .. }) && self.cfg.world > 1
+    }
+
+    fn attn_out_partial(&self, layer: usize, attn_out: &Tensor) -> Tensor {
         let cfg = &self.cfg;
-        let lw = &self.weights.layers[layer];
-        // flatten attn_out [heads, dim] -> [1, d_model]
-        let flat = Tensor::from_vec(&[1, cfg.d_model], attn_out.data().to_vec());
-        let proj = Self::dense(&flat, &lw.wo);
-        let mut h1 = h.clone();
-        for (a, b) in h1.data_mut().iter_mut().zip(proj.data()) {
-            *a += b;
-        }
-        h1
+        let (wo, nh) = match &self.attn {
+            AttnWeights::Replicated => (&self.weights.layers[layer].wo, cfg.n_heads),
+            AttnWeights::HeadSharded { wo, heads, .. } => (&wo[layer], *heads),
+        };
+        // flatten attn_out [local_heads, dim] -> [1, local_heads * dim]
+        // (the row slice of Wo this backend holds contracts exactly this)
+        assert_eq!(attn_out.dims(), &[nh, cfg.head_dim], "attention head slice");
+        let flat = Tensor::from_vec(&[1, nh * cfg.head_dim], attn_out.data().to_vec());
+        Self::dense(&flat, wo)
     }
 
     fn mlp_partial(&self, layer: usize, x_norm: &Tensor) -> Tensor {
@@ -383,26 +508,52 @@ impl LocalCompute for NativeCompute {
 }
 
 /// Per-rank KV cache shard: per layer, appended (K, V) rows for the tokens
-/// this rank owns, stored [heads * capacity, dim] with a length counter.
+/// this shard covers, stored [heads * capacity, dim] with a length counter.
+///
+/// Two geometries share this type: the **sequence shard** of replicated
+/// attention ([`KvShard::new`]: all heads, `max_seq / world` tokens) and
+/// the **head shard** of Megatron-style TP attention
+/// ([`KvShard::for_heads`]: this rank's heads only — possibly zero — over
+/// the full `max_seq` sequence).
 pub struct KvShard {
-    cfg: TransformerConfig,
+    heads: usize,
+    head_dim: usize,
+    kv_block: usize,
+    cap: usize,
     /// per layer: (k, v, len)
     layers: Vec<(Tensor, Tensor, usize)>,
 }
 
 impl KvShard {
+    /// Sequence-sharded cache: all heads, capacity `max_seq / world`
+    /// (rounded up).
     pub fn new(cfg: &TransformerConfig) -> KvShard {
-        let cap = cfg.shard_capacity();
+        Self::with_geometry(cfg, cfg.n_heads, cfg.shard_capacity())
+    }
+
+    /// Head-sharded cache: `heads` heads (this rank's
+    /// [`TransformerConfig::head_partition`] slice; zero is allowed) over
+    /// the full sequence.
+    pub fn for_heads(cfg: &TransformerConfig, heads: usize) -> KvShard {
+        Self::with_geometry(cfg, heads, cfg.max_seq)
+    }
+
+    fn with_geometry(cfg: &TransformerConfig, heads: usize, cap: usize) -> KvShard {
         let layers = (0..cfg.n_layers)
             .map(|_| {
                 (
-                    Tensor::zeros(&[cfg.n_heads * cap, cfg.head_dim]),
-                    Tensor::zeros(&[cfg.n_heads * cap, cfg.head_dim]),
+                    Tensor::zeros(&[heads * cap, cfg.head_dim]),
+                    Tensor::zeros(&[heads * cap, cfg.head_dim]),
                     0usize,
                 )
             })
             .collect();
-        KvShard { cfg: cfg.clone(), layers }
+        KvShard { heads, head_dim: cfg.head_dim, kv_block: cfg.kv_block, cap, layers }
+    }
+
+    /// Heads stored per token in this shard.
+    pub fn heads(&self) -> usize {
+        self.heads
     }
 
     pub fn len(&self, layer: usize) -> usize {
@@ -415,8 +566,7 @@ impl KvShard {
 
     /// Append one token's K/V rows ([heads, dim] each) for `layer`.
     pub fn append(&mut self, layer: usize, k_new: &Tensor, v_new: &Tensor) {
-        let cap = self.cfg.shard_capacity();
-        let (nh, hd) = (self.cfg.n_heads, self.cfg.head_dim);
+        let (cap, nh, hd) = (self.cap, self.heads, self.head_dim);
         let (k, v, len) = &mut self.layers[layer];
         assert!(*len < cap, "KV shard overflow (cap {cap})");
         for h in 0..nh {
@@ -430,8 +580,7 @@ impl KvShard {
 
     /// Contiguous view [heads * len, dim] of the valid K (and V) prefix.
     pub fn valid_kv(&self, layer: usize) -> (Tensor, Tensor, usize) {
-        let cap = self.cfg.shard_capacity();
-        let (nh, hd) = (self.cfg.n_heads, self.cfg.head_dim);
+        let (cap, nh, hd) = (self.cap, self.heads, self.head_dim);
         let (k, v, len) = &self.layers[layer];
         let mut ck = Tensor::zeros(&[nh * len, hd]);
         let mut cv = Tensor::zeros(&[nh * len, hd]);
@@ -446,13 +595,15 @@ impl KvShard {
         (ck, cv, *len)
     }
 
-    /// Local partial attention over this shard (empty shard → None).
+    /// Local partial attention over this shard (no tokens yet → None).
+    /// `q` must be `[self.heads(), head_dim]`; a zero-head shard yields an
+    /// empty `[0, head_dim]` partial.
     pub fn partial(&self, layer: usize, q: &Tensor) -> Option<PartialState> {
         let (k, v, len) = self.valid_kv(layer);
         if len == 0 {
             return None;
         }
-        Some(flash_decode_partial(q, &k, &v, self.cfg.n_heads, len, self.cfg.kv_block))
+        Some(flash_decode_partial(q, &k, &v, self.heads, len, self.kv_block))
     }
 }
 
@@ -516,6 +667,33 @@ mod tests {
         let mut bad = TransformerConfig::tiny(2);
         bad.d_model = 33;
         assert!(bad.validate().is_err());
+        let mut bad = TransformerConfig::tiny(2);
+        bad.kv_block = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = TransformerConfig::tiny(2);
+        bad.max_seq = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn world_larger_than_heads_validates_with_empty_shards() {
+        // regression: world > n_heads is explicitly supported — the ragged
+        // head partition gives the tail ranks empty shards instead of the
+        // config being rejected (or, worse, panicking downstream)
+        let cfg = TransformerConfig::tiny_ragged(5); // 3 heads on 5 ranks
+        cfg.validate().unwrap();
+        let hp = cfg.head_partition();
+        assert_eq!(hp.iter().map(|(_, l)| l).sum::<usize>(), cfg.n_heads);
+        assert_eq!(hp[3].1, 0);
+        assert_eq!(hp[4].1, 0);
+    }
+
+    #[test]
+    fn head_partition_covers_heads_raggedly() {
+        let cfg = TransformerConfig::tiny_ragged(2); // 3 heads on 2 ranks
+        assert_eq!(cfg.head_partition(), vec![(0, 2), (2, 1)]);
+        let cfg = TransformerConfig::tiny(4); // 4 heads on 4 ranks
+        assert_eq!(cfg.head_partition(), vec![(0, 1), (1, 1), (2, 1), (3, 1)]);
     }
 
     #[test]
@@ -665,7 +843,99 @@ mod tests {
     fn replicated_backend_is_not_tp() {
         let cfg = TransformerConfig::tiny(2);
         let w = TransformerWeights::random(&cfg, 12);
-        assert!(!NativeCompute::new(cfg.clone(), w.clone()).tp_sharded());
-        assert!(NativeCompute::new_tp(cfg, w, 1).tp_sharded());
+        let rep = NativeCompute::new(cfg.clone(), w.clone());
+        assert!(!rep.tp_sharded());
+        assert!(!rep.attn_sharded());
+        let tp = NativeCompute::new_tp(cfg, w, 1);
+        assert!(tp.tp_sharded());
+        assert!(tp.attn_sharded());
+    }
+
+    #[test]
+    fn head_sharded_qkv_is_the_replicated_head_slice() {
+        // column-parallel QKV: each rank's q/k/v must equal the
+        // corresponding head rows of the replicated projection, bitwise
+        // (a column subset of the GEMM does not change any element's
+        // k-accumulation order)
+        for cfg in [TransformerConfig::tiny(3), TransformerConfig::tiny_ragged(2)] {
+            let w = TransformerWeights::random(&cfg, 13);
+            let rep = NativeCompute::new(cfg.clone(), w.clone());
+            let h = token_embedding(&cfg, 4);
+            let (qf, kf, vf) = rep.qkv(0, &h);
+            for (rank, (h0, hn)) in cfg.head_partition().into_iter().enumerate() {
+                let shard = NativeCompute::new_tp(cfg.clone(), w.clone(), rank);
+                let (q, k, v) = shard.qkv(0, &h);
+                assert_eq!(q.dims(), &[hn, cfg.head_dim]);
+                assert_eq!(q, qf.rows(h0, h0 + hn), "rank {rank} q");
+                assert_eq!(k, kf.rows(h0, h0 + hn), "rank {rank} k");
+                assert_eq!(v, vf.rows(h0, h0 + hn), "rank {rank} v");
+            }
+        }
+    }
+
+    #[test]
+    fn head_sharded_wo_partials_sum_to_replicated_projection() {
+        // row-parallel Wo: Σ_r flatten(attn_r) · Wo_r == flatten(attn) · Wo
+        for cfg in [TransformerConfig::tiny(4), TransformerConfig::tiny_ragged(4)] {
+            let w = TransformerWeights::random(&cfg, 14);
+            let rep = NativeCompute::new(cfg.clone(), w.clone());
+            let attn = Tensor::from_vec(
+                &[cfg.n_heads, cfg.head_dim],
+                token_embedding(&cfg, 8).data().to_vec(),
+            );
+            let full = rep.attn_out_partial(0, &attn);
+            let mut sum = Tensor::zeros(&[1, cfg.d_model]);
+            for (rank, (h0, hn)) in cfg.head_partition().into_iter().enumerate() {
+                let shard = NativeCompute::new_tp(cfg.clone(), w.clone(), rank);
+                let p = shard.attn_out_partial(0, &attn.rows(h0, h0 + hn));
+                assert_eq!(p.dims(), &[1, cfg.d_model]);
+                for (a, b) in sum.data_mut().iter_mut().zip(p.data()) {
+                    *a += b;
+                }
+            }
+            sum.assert_allclose(&full, 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn empty_head_shard_computes_nothing_and_contributes_zero() {
+        // regression for world > n_heads: the tail rank holds zero heads;
+        // its qkv is a [0, head_dim] slice and its Wo partial is exactly
+        // zero — no panic anywhere on the path
+        let cfg = TransformerConfig::tiny_ragged(4); // 3 heads on 4 ranks
+        let w = TransformerWeights::random(&cfg, 15);
+        let shard = NativeCompute::new_tp(cfg.clone(), w, 3);
+        assert!(shard.attn_sharded());
+        let h = token_embedding(&cfg, 9);
+        let (q, k, v) = shard.qkv(0, &h);
+        assert_eq!(q.dims(), &[0, cfg.head_dim]);
+        assert_eq!(k.numel(), 0);
+        assert_eq!(v.numel(), 0);
+        let p = shard.attn_out_partial(0, &q);
+        assert_eq!(p.dims(), &[1, cfg.d_model]);
+        assert!(p.data().iter().all(|&x| x == 0.0));
+        // and the head-sharded KV cache for zero heads stays functional
+        let mut kv = KvShard::for_heads(&cfg, 0);
+        kv.append(0, &k, &v);
+        assert_eq!(kv.len(0), 1);
+        let partial = kv.partial(0, &q).expect("non-empty after append");
+        assert_eq!(partial.o.dims(), &[0, cfg.head_dim]);
+    }
+
+    #[test]
+    fn head_sharded_kv_cache_holds_full_sequence() {
+        // the head shard stores max_seq tokens (attention is local over
+        // the whole sequence), unlike the seq shard's max_seq / world
+        let cfg = TransformerConfig::tiny(4);
+        let mut kv = KvShard::for_heads(&cfg, 1);
+        assert_eq!(kv.heads(), 1);
+        let k = Tensor::full(&[1, cfg.head_dim], 0.5);
+        for _ in 0..cfg.max_seq {
+            kv.append(0, &k, &k); // seq shard would overflow at max_seq/4
+        }
+        assert_eq!(kv.len(0), cfg.max_seq);
+        let (ck, _, len) = kv.valid_kv(0);
+        assert_eq!(len, cfg.max_seq);
+        assert_eq!(ck.dims(), &[cfg.max_seq, cfg.head_dim]);
     }
 }

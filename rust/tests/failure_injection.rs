@@ -9,6 +9,8 @@ use std::time::Duration;
 
 use taxfree::collectives;
 use taxfree::iris::{run_node, run_node_with_timeout, HeapBuilder, IrisError};
+use taxfree::serve::{fused_allreduce_exchange, ATTN_EXCHANGE};
+use taxfree::util::partition;
 
 #[test]
 fn dead_producer_hits_timeout_not_hang() {
@@ -129,6 +131,78 @@ fn flag_counts_are_conserved_under_contention() {
     assert_eq!(counter.load(Ordering::Relaxed), world * per_rank as usize);
     for o in outs {
         assert_eq!(o, world as u64 * per_rank);
+    }
+}
+
+/// Heap with the attention-exchange buffers at the serving path's layout
+/// (`2 * world * seg_max` data slots per phase, `world` flags per phase).
+fn attn_exchange_heap(world: usize, seg_max: usize) -> Arc<taxfree::iris::SymmetricHeap> {
+    Arc::new(
+        HeapBuilder::new(world)
+            .buffer(ATTN_EXCHANGE.data, 2 * world * seg_max)
+            .flags(ATTN_EXCHANGE.data_flags, world)
+            .buffer(ATTN_EXCHANGE.gather, 2 * world * seg_max)
+            .flags(ATTN_EXCHANGE.gather_flags, world)
+            .build(),
+    )
+}
+
+#[test]
+fn dead_rank_in_attention_exchange_times_out_typed() {
+    // the TP-attention Wo partial sum (fused GEMM+RS exchange) with a dead
+    // producer: the surviving ranks must get a typed timeout naming the
+    // exchange's scatter flags — not hang, not panic
+    let world = 3;
+    let n = 7usize; // ragged d_model
+    let heap = attn_exchange_heap(world, n.div_ceil(world));
+    let outcomes = run_node_with_timeout(heap, Duration::from_millis(100), move |ctx| {
+        if ctx.rank() == 2 {
+            return Ok(Vec::new()); // dead rank: contributes nothing
+        }
+        let parts = partition(n, ctx.world());
+        let p = vec![ctx.rank() as f32 + 1.0; n];
+        fused_allreduce_exchange(&ctx, &parts, &p, 1, &ATTN_EXCHANGE)
+    });
+    for rank in [0usize, 1] {
+        let err = outcomes[rank].as_ref().expect_err("must time out");
+        match err {
+            IrisError::Timeout(t) => {
+                assert_eq!(t.flags, ATTN_EXCHANGE.data_flags, "rank {rank}");
+                assert_eq!(t.idx, 2, "rank {rank} waits on the dead producer");
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn missized_buffer_in_attention_exchange_reports_typed() {
+    // a heap sized without the round-parity double buffer: the odd-round
+    // exchange overruns it and must come back as a typed OutOfBounds from
+    // the decode path, not a panic mid-decode
+    let world = 2;
+    let n = 6usize;
+    let seg_max = n.div_ceil(world);
+    let heap = Arc::new(
+        HeapBuilder::new(world)
+            .buffer(ATTN_EXCHANGE.data, world * seg_max) // half the required size
+            .flags(ATTN_EXCHANGE.data_flags, world)
+            .buffer(ATTN_EXCHANGE.gather, 2 * world * seg_max)
+            .flags(ATTN_EXCHANGE.gather_flags, world)
+            .build(),
+    );
+    let outcomes = run_node(heap, move |ctx| {
+        let parts = partition(n, ctx.world());
+        let p = vec![1.0f32; n];
+        fused_allreduce_exchange(&ctx, &parts, &p, 1, &ATTN_EXCHANGE)
+    });
+    for (rank, o) in outcomes.iter().enumerate() {
+        match o.as_ref().expect_err("must overflow") {
+            IrisError::OutOfBounds { buf, .. } => {
+                assert_eq!(buf, ATTN_EXCHANGE.data, "rank {rank}");
+            }
+            other => panic!("expected OutOfBounds, got {other:?}"),
+        }
     }
 }
 

@@ -24,7 +24,7 @@ fn serve_many_requests_all_complete() {
     q.fill_synthetic(12, (1, 6), (1, 8), 21);
     let requests = q.drain_batch(12);
     let expected_tokens: usize = requests.iter().map(|r| r.total_tokens()).sum();
-    let report = serve(&cfg, requests, native_factory(&cfg, 5));
+    let report = serve(&cfg, requests, native_factory(&cfg, 5)).expect("serve");
     assert_eq!(report.results.len(), 12);
     assert_eq!(report.total_tokens, expected_tokens);
     // ids preserved in FIFO order
@@ -42,14 +42,14 @@ fn serve_results_independent_of_world_size() {
         let cfg = TransformerConfig::tiny(1);
         let mut q = RequestQueue::new();
         q.fill_synthetic(5, (2, 4), (2, 6), 33);
-        let report = serve(&cfg, q.drain_batch(5), native_factory(&cfg, 6));
+        let report = serve(&cfg, q.drain_batch(5), native_factory(&cfg, 6)).expect("serve");
         report.results.iter().map(|r| (r.id, r.tokens)).collect()
     };
     for world in [2usize, 3, 4] {
         let cfg = TransformerConfig::tiny(world);
         let mut q = RequestQueue::new();
         q.fill_synthetic(5, (2, 4), (2, 6), 33);
-        let report = serve(&cfg, q.drain_batch(5), native_factory(&cfg, 6));
+        let report = serve(&cfg, q.drain_batch(5), native_factory(&cfg, 6)).expect("serve");
         let got: Vec<(usize, usize)> = report.results.iter().map(|r| (r.id, r.tokens)).collect();
         assert_eq!(got, base, "world={world}");
     }
@@ -61,7 +61,7 @@ fn kv_capacity_is_respected_under_max_length_requests() {
     let mut q = RequestQueue::new();
     // total tokens exactly max_seq
     q.submit(32, 32);
-    let report = serve(&cfg, q.drain_batch(1), native_factory(&cfg, 7));
+    let report = serve(&cfg, q.drain_batch(1), native_factory(&cfg, 7)).expect("serve");
     assert_eq!(report.total_tokens, 64);
 }
 

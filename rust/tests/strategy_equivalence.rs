@@ -8,10 +8,15 @@ use taxfree::config::{AgGemmConfig, FlashDecodeConfig, GemmRsConfig};
 use taxfree::coordinator::{
     ag_gemm, flash_decode, gemm_rs, AgGemmStrategy, FlashDecodeStrategy, GemmRsStrategy,
 };
+use taxfree::serve::continuous::serve_continuous;
+use taxfree::serve::Request;
 use taxfree::tensor::linalg::{decode_attention_ref, matmul};
 use taxfree::tensor::Tensor;
 use taxfree::util::propcheck::{check_no_shrink, Config, Verdict};
 use taxfree::util::Prng;
+use taxfree::workloads::transformer::{
+    token_embedding, NativeCompute, ReferenceDecoder, TransformerConfig, TransformerWeights,
+};
 
 /// Random valid AG+GEMM config: world in 1..=6, block-aligned dims.
 fn gen_ag_cfg(rng: &mut Prng) -> AgGemmConfig {
@@ -237,6 +242,42 @@ fn gemm_rs_repeated_rounds_are_stable() {
     let once = gemm_rs::run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 1);
     let many = gemm_rs::run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 10);
     assert_eq!(once, many);
+}
+
+#[test]
+fn tp_attention_matches_replicated_reference() {
+    // the PR's acceptance criterion, end to end through the serving node:
+    // head-sharded TP attention (column-parallel QKV, head-sharded KV,
+    // row-parallel Wo through the fused GEMM+RS exchange) must produce the
+    // same hidden states as the replicated single-process reference
+    // decoder — for world ∈ {1, 2, 4}, for both an even and a ragged
+    // n_heads config, and for world = 5 > n_heads = 3 (empty head shards).
+    let seed = 4242;
+    for world in [1usize, 2, 4, 5] {
+        for cfg in [TransformerConfig::tiny(world), TransformerConfig::tiny_ragged(world)] {
+            let reqs = vec![
+                Request { id: 0, prompt_len: 2, gen_len: 2 },
+                Request { id: 1, prompt_len: 1, gen_len: 3 },
+            ];
+            let cfg2 = cfg.clone();
+            let report = serve_continuous(&cfg, reqs.clone(), 2, move |rank| {
+                NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, seed), rank)
+            })
+            .expect("TP serve");
+            for req in &reqs {
+                let mut dec = ReferenceDecoder::new(
+                    cfg.clone(),
+                    NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
+                );
+                let mut h = token_embedding(&cfg, req.id as u64);
+                for _ in 0..req.total_tokens() {
+                    h = dec.step(&h);
+                }
+                let got = report.results.iter().find(|r| r.id == req.id).expect("result");
+                got.final_hidden.assert_allclose(&h, 1e-3, 1e-3);
+            }
+        }
+    }
 }
 
 #[test]
