@@ -1,0 +1,71 @@
+//! Bench: the batched-prefill figure (BSP AG→GEMM composition vs the
+//! fused M-row push pipeline) on the calibrated model, plus wall-clock
+//! throughput of the *functional* serving path with real prompts — how
+//! much chunked batched prefill compresses the schedule vs decoding the
+//! prompt token by token. criterion is unavailable offline; this is a
+//! `harness = false` bench reporting through the crate's own
+//! Summary/Table.
+//!
+//! Run: `cargo bench --offline --bench prefill`
+
+use taxfree::clock::measure;
+use taxfree::config::presets;
+use taxfree::experiments::ext_prefill;
+use taxfree::serve::continuous::serve_continuous;
+use taxfree::serve::Request;
+use taxfree::util::{Summary, Table};
+use taxfree::workloads::transformer::{NativeCompute, TransformerConfig, TransformerWeights};
+
+fn main() {
+    let hw = presets::mi325x();
+    let seed = 7;
+
+    // the modeled figure (one Llama-70B-class layer per prompt chunk)
+    let rows = ext_prefill::sweep(&hw, seed, 50);
+    ext_prefill::render(&rows, &hw).print();
+    let worst_bsp_tax = rows.iter().map(|r| r.bsp_bulk_sync_us).fold(0.0f64, f64::max);
+    println!(
+        "\nfused bulk-sync tax: 0 at every M (BSP pays up to {worst_bsp_tax:.1} us of rank-idle)"
+    );
+
+    // functional: scheduler steps and tokens/s of the real continuous-
+    // batching node on prompt-heavy traffic, head-sharded TP backend —
+    // batched prefill advances prefill_chunk rows per step
+    let mut t = Table::new("functional continuous serve (tiny model, prompt-heavy)").header(vec![
+        "world",
+        "tokens",
+        "sched steps",
+        "tok/s",
+    ]);
+    for world in [2usize, 4] {
+        let cfg = TransformerConfig::tiny(world); // prefill_chunk = 4
+        let reqs: Vec<Request> =
+            (0..4).map(|id| Request { id, prompt_len: 13, gen_len: 3 }).collect();
+        let cfg2 = cfg.clone();
+        let report = serve_continuous(&cfg, reqs, 2, move |rank| {
+            NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, 42), rank)
+        })
+        .expect("TP continuous serve");
+        t.row(vec![
+            world.to_string(),
+            report.total_tokens.to_string(),
+            report.total_steps.to_string(),
+            format!("{:.0}", report.tokens_per_s()),
+        ]);
+    }
+    println!();
+    t.print();
+
+    // harness cost: how fast the DES regenerates the whole figure
+    let samples = measure(2, 10, || {
+        let r = ext_prefill::sweep(&hw, seed, 10);
+        assert_eq!(r.len(), ext_prefill::M_SWEEP.len());
+    });
+    let s = Summary::of(&samples);
+    println!(
+        "\nbench prefill: full figure ({} M points x 2 strategies x 10 iters) in {:.2} ms mean, {:.2} ms p99",
+        ext_prefill::M_SWEEP.len(),
+        s.mean / 1e6,
+        s.p99 / 1e6
+    );
+}

@@ -152,14 +152,49 @@ pub fn all_gather_bsp(
 
 /// All-reduce (sum) via reduce-scatter + all-gather over the clique.
 ///
-/// `n = send.len()` may be any length; segments follow
-/// [`crate::util::partition`] (ragged tail allowed). With
-/// `seg_max = ceil(n / world)`, `data_buf` needs `2 * world * seg_max`
-/// elements (first half: scatter contribution slots, strided `seg_max`
-/// per source; second half: gathered reduced segments — disjoint so a fast
-/// peer's gather push cannot clobber a contribution a slow rank has not
-/// reduced yet). `flag_buf` needs `2 * world` flags (first half for the
-/// scatter phase, second for the gather phase).
+/// **Cross-rank contract.** Every rank calls with the same `n =
+/// send.len()`, buffers, and `round`. Rank s owns partition segment s:
+/// every producer pushes its copy of segment s into slot *src* of rank
+/// s's `data_buf` and signals flag *src* there; the owner reduces behind
+/// those flags in canonical source order, then pushes its reduced
+/// segment to every peer's gather half with flag `world + src`. `n` may
+/// be any length; segments follow [`crate::util::partition`] (ragged
+/// tail allowed). With `seg_max = ceil(n / world)`, `data_buf` needs
+/// `2 * world * seg_max` elements (first half: scatter contribution
+/// slots, strided `seg_max` per source; second half: gathered reduced
+/// segments — disjoint so a fast peer's gather push cannot clobber a
+/// contribution a slow rank has not reduced yet). `flag_buf` needs
+/// `2 * world` flags (first half for the scatter phase, second for the
+/// gather phase). Empty payloads still run the full signal protocol so
+/// flag counters stay in lockstep with `round`.
+///
+/// # Examples
+///
+/// A ragged all-reduce (`n = 5` on `world = 3`: segments of 2, 2, 1):
+///
+/// ```
+/// use std::sync::Arc;
+/// use taxfree::collectives::all_reduce_sum;
+/// use taxfree::iris::{run_node, HeapBuilder};
+///
+/// let world = 3;
+/// let n = 5; // world does not divide n: ragged segments
+/// let seg_max = n.div_ceil(world);
+/// let heap = Arc::new(
+///     HeapBuilder::new(world)
+///         .buffer("ar", 2 * world * seg_max)
+///         .flags("arf", 2 * world)
+///         .build(),
+/// );
+/// let outs = run_node(heap, move |ctx| {
+///     let send: Vec<f32> = (0..n).map(|i| (ctx.rank() + i) as f32).collect();
+///     all_reduce_sum(&ctx, &send, "ar", "arf", 1)
+/// });
+/// // Σ_r (r + i) = 3 + 3i for r in 0..3
+/// for out in outs {
+///     assert_eq!(out, vec![3.0, 6.0, 9.0, 12.0, 15.0]);
+/// }
+/// ```
 pub fn all_reduce_sum(
     ctx: &RankCtx,
     send: &[f32],
@@ -273,15 +308,49 @@ pub fn reduce_scatter_sum(
 /// and receives segment `s` from every rank `s` (the transpose exchange
 /// of expert-parallel / sequence-parallel layouts).
 ///
-/// `send.len()` may be **any** length `n` (identical on every rank): the
-/// outgoing segments follow the shared [`crate::util::partition`]`(n,
-/// world)` layout — ragged tails and even `n < world` (empty segments)
-/// included — and staging slots are strided by `seg_max = ceil(n /
-/// world)`. `data_buf` needs `world * seg_max` elements; `flag_buf`
-/// `world` flags. Returns this rank's received segments concatenated
-/// source-major: `world * partition(n, world)[r].len` elements (every
-/// source's segment `r` has the same length because all ranks share the
-/// partition).
+/// **Cross-rank contract.** Every rank calls with the same `n =
+/// send.len()` and `round`; rank r pushes its partition segment d into
+/// slot r of rank d's `data_buf` (strided `seg_max = ceil(n / world)`)
+/// and signals flag r there. The outgoing segments follow the shared
+/// [`crate::util::partition`]`(n, world)` layout — ragged tails and even
+/// `n < world` (empty segments) included. `data_buf` needs
+/// `world * seg_max` elements; `flag_buf` `world` flags. Returns this
+/// rank's received segments concatenated source-major:
+/// `world * partition(n, world)[r].len` elements (every source's segment
+/// `r` has the same length because all ranks share the partition).
+///
+/// # Examples
+///
+/// A ragged transpose (`n = 4` on `world = 3`: rank 2's segment is one
+/// element; every rank receives segment *r* from every source):
+///
+/// ```
+/// use std::sync::Arc;
+/// use taxfree::collectives::all_to_all;
+/// use taxfree::iris::{run_node, HeapBuilder};
+/// use taxfree::util::partition;
+///
+/// let world = 3;
+/// let n = 4; // partition(4, 3) = [(0, 2), (2, 1), (3, 1)]
+/// let seg_max = n.div_ceil(world);
+/// let heap = Arc::new(
+///     HeapBuilder::new(world)
+///         .buffer("a2a", world * seg_max)
+///         .flags("a2af", world)
+///         .build(),
+/// );
+/// let outs = run_node(heap, move |ctx| {
+///     // element i of rank r carries r*10 + i
+///     let send: Vec<f32> = (0..n).map(|i| (ctx.rank() * 10 + i) as f32).collect();
+///     all_to_all(&ctx, &send, "a2a", "a2af", 1)
+/// });
+/// // rank 1 owns segment (2, 1): it receives element 2 of every source
+/// assert_eq!(outs[1], vec![2.0, 12.0, 22.0]);
+/// let parts = partition(n, world);
+/// for (r, out) in outs.iter().enumerate() {
+///     assert_eq!(out.len(), world * parts[r].1);
+/// }
+/// ```
 pub fn all_to_all(
     ctx: &RankCtx,
     send: &[f32],

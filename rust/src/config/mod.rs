@@ -245,6 +245,116 @@ impl TpAttnConfig {
     }
 }
 
+/// Batched prompt-prefill workload parameters — the DES twin of the
+/// serving path's [`crate::serve::prefill_step_fused`]: one prompt chunk
+/// of `m` rows through `n_layers` tensor-parallel transformer layers.
+/// Per layer: column-parallel fused QKV at real M (the fat-GEMM regime of
+/// the paper's AG+GEMM pattern, §4.1), causal attention over this rank's
+/// [`crate::util::partition`] head slice for all `m` positions (fully
+/// local — the KV cache is head-sharded), then the row-parallel Wo
+/// partials and the TP MLP down-projection summed across ranks — either
+/// by barrier-fenced RCCL-shaped all-reduces (the BSP AG→GEMM baseline)
+/// or by the fused GEMM+RS push pipeline with M-row tiles. `n_heads`
+/// need not divide by `world` (ragged head shards, empty shards for
+/// `world > n_heads`), and `m` may be any prompt-chunk length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefillConfig {
+    /// Prompt rows in the chunk (the M of every projection GEMM).
+    pub m: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    /// FFN hidden width of the TP MLP (column shard of W1 / row shard of
+    /// W2 per rank, ragged allowed).
+    pub ffn_hidden: usize,
+    /// Transformer layers the chunk runs through.
+    pub n_layers: usize,
+    pub world: usize,
+    /// Tokens already cached before this chunk (0 for a fresh prompt;
+    /// the causal attention of chunk `c` sees all earlier chunks).
+    pub kv_base: usize,
+    /// Column-tile width of one fused push (the communication granularity
+    /// of the producer-consumer pipeline).
+    pub block_n: usize,
+}
+
+impl PrefillConfig {
+    /// A Llama-70B-class layer at a given prompt length: 64 heads of 128
+    /// (d_model 8192), FFN 28672, on 8 ranks — the prefill-side companion
+    /// of [`GemmRsConfig::paper_down_proj`].
+    pub fn paper_prefill(m: usize) -> PrefillConfig {
+        PrefillConfig {
+            m,
+            n_heads: 64,
+            head_dim: 128,
+            ffn_hidden: 28672,
+            n_layers: 1,
+            world: 8,
+            kv_base: 0,
+            block_n: 256,
+        }
+    }
+
+    /// Small configuration for tests: 5 heads and an FFN of 10 are ragged
+    /// over common world sizes; m = 5 is ragged over typical tile widths.
+    pub fn tiny(world: usize) -> PrefillConfig {
+        PrefillConfig {
+            m: 5,
+            n_heads: 5,
+            head_dim: 8,
+            ffn_hidden: 10,
+            n_layers: 2,
+            world,
+            kv_base: 0,
+            block_n: 8,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.world == 0 {
+            return Err("world must be >= 1".into());
+        }
+        if self.m == 0 {
+            return Err("m must be positive (an M = 0 prefill chunk is rejected)".into());
+        }
+        if self.n_heads == 0 || self.head_dim == 0 || self.ffn_hidden == 0 || self.n_layers == 0 {
+            return Err("n_heads, head_dim, ffn_hidden, n_layers must be positive".into());
+        }
+        if self.block_n == 0 {
+            return Err("block_n must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// The model width the exchanges span.
+    pub fn d_model(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// Head slice per rank (ragged; tails may be empty).
+    pub fn head_partition(&self) -> Vec<(usize, usize)> {
+        crate::util::partition(self.n_heads, self.world)
+    }
+
+    /// FFN column/row shard per rank (ragged allowed).
+    pub fn ffn_partition(&self) -> Vec<(usize, usize)> {
+        crate::util::partition(self.ffn_hidden, self.world)
+    }
+
+    /// Column partition of both exchanges' sums (who owns which reduced
+    /// segment).
+    pub fn d_model_partition(&self) -> Vec<(usize, usize)> {
+        crate::util::partition(self.d_model(), self.world)
+    }
+
+    /// Column tiles (col offset, width) of a scatter segment of `len`
+    /// columns — the same shared [`crate::util::seg_tiles`] geometry rule
+    /// as [`GemmRsConfig::seg_tiles`]. With M prompt rows each tile is an
+    /// M-row block but still one push + one signal.
+    pub fn seg_tiles(&self, len: usize) -> Vec<(usize, usize)> {
+        crate::util::seg_tiles(len, self.block_n)
+    }
+}
+
 /// Flash-Decode workload parameters (paper §4.2 / §5.3, Figs. 10–11).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlashDecodeConfig {
@@ -443,7 +553,31 @@ mod tests {
             FlashDecodeConfig::tiny(w).validate().unwrap();
             GemmRsConfig::tiny(w).validate().unwrap();
             TpAttnConfig::tiny(w).validate().unwrap();
+            PrefillConfig::tiny(w).validate().unwrap();
         }
+    }
+
+    #[test]
+    fn prefill_partitions_cover_heads_ffn_and_width() {
+        for w in [1usize, 3, 4, 8] {
+            let cfg = PrefillConfig::tiny(w); // 5 heads, ffn 10: ragged
+            cfg.validate().unwrap();
+            assert_eq!(cfg.d_model(), 40);
+            assert_eq!(cfg.head_partition().iter().map(|(_, l)| l).sum::<usize>(), 5);
+            assert_eq!(cfg.ffn_partition().iter().map(|(_, l)| l).sum::<usize>(), 10);
+            assert_eq!(
+                cfg.d_model_partition().iter().map(|(_, l)| l).sum::<usize>(),
+                cfg.d_model()
+            );
+        }
+        // world > n_heads: empty head shards are part of the layout
+        assert_eq!(PrefillConfig::tiny(8).head_partition()[7].1, 0);
+        for m in [16usize, 4096] {
+            PrefillConfig::paper_prefill(m).validate().unwrap();
+        }
+        let mut bad = PrefillConfig::tiny(2);
+        bad.m = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -8,7 +8,13 @@
 //! Shards live on the symmetric heap in *panel-major* layout: the shard is
 //! a sequence of (M × block_k) column panels, each contiguous, so a panel
 //! is one contiguous remote load/store — the layout the paper's Triton
-//! kernels achieve with their BlockSpec-style tiling.
+//! kernels achieve with their BlockSpec-style tiling. M is a free
+//! parameter throughout: every panel is an **M-row tile** moved by one
+//! store + one signal, which is exactly the signal layout the serving
+//! path's batched prefill reuses for its prompt chunks
+//! ([`crate::serve::fused_allreduce_exchange_rows`] — its gather phase
+//! is this module's all-gather, and the GEMM that consumes it is the
+//! next layer's column-parallel projection).
 
 use std::sync::Arc;
 
@@ -33,9 +39,11 @@ pub enum AgGemmStrategy {
 }
 
 impl AgGemmStrategy {
+    /// Every strategy, in the order Figure 9 plots them.
     pub const ALL: [AgGemmStrategy; 3] =
         [AgGemmStrategy::BaselineBsp, AgGemmStrategy::Pull, AgGemmStrategy::Push];
 
+    /// Short name used in tables and trace labels.
     pub fn name(&self) -> &'static str {
         match self {
             AgGemmStrategy::BaselineBsp => "rccl_bsp",
@@ -101,7 +109,12 @@ fn assemble_full_a(data: &[f32], cfg: &AgGemmConfig, p: Panels) -> Tensor {
     a
 }
 
-/// Build the symmetric heap for an AG+GEMM node.
+/// Build the symmetric heap for an AG+GEMM node: each rank's own
+/// panel-major shard (`ag_a_shard`), a `world`-slot inbox for pushed
+/// shards (`ag_inbox`), one panel-arrival flag per (source, panel), and
+/// the baseline collective's flags. Every rank must build the identical
+/// layout (the heap is symmetric — offsets computed on one rank are
+/// dereferenced on another).
 pub fn build_heap(cfg: &AgGemmConfig) -> Arc<SymmetricHeap> {
     let p = Panels::of(cfg);
     let shard_elems = p.m * p.k_shard;
@@ -233,7 +246,12 @@ fn push_round(
 
 /// Run one AG+GEMM operation on a fresh functional node; returns every
 /// rank's C. `a` is the full (M,K) matrix (sharded internally), `b` the
-/// full (K,N) matrix.
+/// full (K,N) matrix. Cross-rank protocol per strategy: the baseline
+/// barriers around a push all-gather; Pull consumers `remote_load` each
+/// panel from its owner on demand; Push producers `remote_store` each
+/// panel into every peer's inbox slot and `signal` the (source, panel)
+/// flag, with consumers spin-waiting per panel — flags are monotone per
+/// `round`, so repeated rounds need no reset.
 pub fn run(
     cfg: &AgGemmConfig,
     strategy: AgGemmStrategy,

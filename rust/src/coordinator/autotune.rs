@@ -81,11 +81,13 @@ pub fn tune_flash_decode(
     results
 }
 
-/// The tuner's top-line answer for a workload: best strategy + granularity.
+/// The tuner's top-line answer for AG+GEMM: best strategy + granularity.
 pub fn best_ag_gemm(base: &AgGemmConfig, hw: &HwConfig, seed: u64) -> AgGemmTuneResult {
     tune_ag_gemm(base, hw, seed, 20).remove(0)
 }
 
+/// The tuner's top-line answer for Flash Decode: best strategy + push
+/// granularity.
 pub fn best_flash_decode(base: &FlashDecodeConfig, hw: &HwConfig, seed: u64) -> FlashDecodeTuneResult {
     tune_flash_decode(base, hw, seed, 20).remove(0)
 }

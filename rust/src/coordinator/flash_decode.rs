@@ -34,6 +34,7 @@ pub enum FlashDecodeStrategy {
 }
 
 impl FlashDecodeStrategy {
+    /// Every strategy, in the paper's evolutionary order (§4.2.2–§4.2.5).
     pub const ALL: [FlashDecodeStrategy; 4] = [
         FlashDecodeStrategy::BaselineBsp,
         FlashDecodeStrategy::IrisAgBsp,
@@ -41,6 +42,7 @@ impl FlashDecodeStrategy {
         FlashDecodeStrategy::FullyFused,
     ];
 
+    /// Short name used in tables and trace labels.
     pub fn name(&self) -> &'static str {
         match self {
             FlashDecodeStrategy::BaselineBsp => "rccl_bsp",

@@ -48,8 +48,10 @@ pub enum GemmRsStrategy {
 }
 
 impl GemmRsStrategy {
+    /// Both strategies, baseline first.
     pub const ALL: [GemmRsStrategy; 2] = [GemmRsStrategy::BaselineBsp, GemmRsStrategy::FusedTiles];
 
+    /// Short name used in tables and trace labels.
     pub fn name(&self) -> &'static str {
         match self {
             GemmRsStrategy::BaselineBsp => "bsp_gemm_rs",

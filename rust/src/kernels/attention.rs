@@ -66,9 +66,33 @@ pub fn flash_decode_partial(
     kv_block: usize,
 ) -> PartialState {
     let dim = q.dims()[1];
-    assert_eq!(q.dims()[0], heads);
     assert_eq!(k.dims(), &[heads * kv_len, dim], "K shape");
     assert_eq!(v.dims(), &[heads * kv_len, dim], "V shape");
+    flash_decode_partial_strided(q, k, v, heads, kv_len, kv_len, kv_block)
+}
+
+/// [`flash_decode_partial`] over K/V stored with a per-head row stride
+/// `kv_cap >= kv_len` (head `h`'s token `s` lives at row
+/// `h * kv_cap + s`): attends over the first `kv_len` tokens of each head
+/// directly in a capacity-`kv_cap` cache, so causal prefill can evaluate
+/// every prompt position against its prefix **without copying the prefix
+/// out of the cache first**. Identical numerics to the contiguous form —
+/// only the addressing changes (the batched-prefill bitwise-equivalence
+/// tests rely on this).
+pub fn flash_decode_partial_strided(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    heads: usize,
+    kv_len: usize,
+    kv_cap: usize,
+    kv_block: usize,
+) -> PartialState {
+    let dim = q.dims()[1];
+    assert_eq!(q.dims()[0], heads);
+    assert!(kv_len <= kv_cap, "valid prefix {kv_len} beyond capacity {kv_cap}");
+    assert_eq!(k.dims(), &[heads * kv_cap, dim], "K storage shape");
+    assert_eq!(v.dims(), &[heads * kv_cap, dim], "V storage shape");
     assert!(kv_block > 0);
     let scale = 1.0 / (dim as f32).sqrt();
 
@@ -90,7 +114,7 @@ pub fn flash_decode_partial(
             for (si, s) in (s0..s1).enumerate() {
                 let mut dot = 0.0;
                 for j in 0..dim {
-                    dot += qrow[j] * quantize_f16(k.at2(h * kv_len + s, j));
+                    dot += qrow[j] * quantize_f16(k.at2(h * kv_cap + s, j));
                 }
                 scores[si] = dot * scale;
             }
@@ -107,7 +131,7 @@ pub fn flash_decode_partial(
                 let p = (scores[si] - m_new).exp();
                 l_run += p;
                 for j in 0..dim {
-                    acc[j] += p * quantize_f16(v.at2(h * kv_len + s, j));
+                    acc[j] += p * quantize_f16(v.at2(h * kv_cap + s, j));
                 }
             }
             m_run = m_new;
@@ -179,6 +203,34 @@ mod tests {
         blocked.o.assert_allclose(&o_ref, 1e-3, 1e-3);
         for h in 0..heads {
             assert!((blocked.l[h] - l_ref[h]).abs() / l_ref[h] < 1e-3);
+        }
+    }
+
+    #[test]
+    fn strided_prefix_equals_contiguous_copy() {
+        // the batched-prefill addressing mode: attending over the first
+        // `len` tokens of a capacity-`cap` cache must equal copying that
+        // prefix out contiguously first — bitwise, every prefix length
+        let (heads, dim, cap) = (3usize, 8usize, 13usize);
+        let mut rng = Prng::new(36);
+        let q = fp16_tensor(&[heads, dim], &mut rng);
+        let ks = fp16_tensor(&[heads * cap, dim], &mut rng);
+        let vs = fp16_tensor(&[heads * cap, dim], &mut rng);
+        for len in [1usize, 4, 7, 13] {
+            // contiguous prefix copy (stride len)
+            let mut kc = Tensor::zeros(&[heads * len, dim]);
+            let mut vc = Tensor::zeros(&[heads * len, dim]);
+            for h in 0..heads {
+                for s in 0..len {
+                    for j in 0..dim {
+                        kc.set2(h * len + s, j, ks.at2(h * cap + s, j));
+                        vc.set2(h * len + s, j, vs.at2(h * cap + s, j));
+                    }
+                }
+            }
+            let strided = flash_decode_partial_strided(&q, &ks, &vs, heads, len, cap, 4);
+            let copied = flash_decode_partial(&q, &kc, &vc, heads, len, 4);
+            assert_eq!(strided, copied, "len {len}");
         }
     }
 

@@ -5,38 +5,78 @@
 //! three-layer Rust + JAX + Pallas stack.
 //!
 //! The paper identifies three taxes paid by the bulk-synchronous
-//! "Compute–Wait–Collective–Wait–Compute" pattern — kernel-launch overhead,
-//! bulk-synchronous barrier idle, and inter-kernel data-locality loss — and
-//! removes them by fusing tile-level communication (Iris-style remote
-//! load/store + signal flags) into compute kernels.
+//! "Compute–Wait–Collective–Wait–Compute" pattern and removes them by
+//! fusing tile-level communication (Iris-style remote load/store + signal
+//! flags) into compute kernels. This crate reproduces both sides of that
+//! argument: **functional** coordinators that run every protocol with
+//! real data movement on a simulated node, and a calibrated
+//! **discrete-event timing twin** per workload that prices exactly which
+//! taxes each strategy pays.
 //!
-//! This crate provides:
+//! ## The Three Taxes → the code that eliminates them
+//!
+//! | Tax | What it is | Where it is eliminated | Where it is priced |
+//! |---|---|---|---|
+//! | **Kernel-Launch Tax** | per-dispatch host overhead of the launch barrage around every collective | the fused coordinators run one persistent compute kernel + one push kernel per rank ([`coordinator::ag_gemm`] push model, [`coordinator::gemm_rs`], [`coordinator::flash_decode`]) | [`Sim::launch`] tasks; [`TaxLedger::launch_s`] |
+//! | **Bulk-Synchronous Tax** | every rank idling at entry/exit barriers for the slowest peer | per-tile **signal flags** replace barriers: producers `remote_store` + `signal`, consumers `wait_flag_ge` per tile ([`iris::RankCtx`]; [`serve::fused_allreduce_exchange`]; the flag fences in [`serve`]) | [`Sim::barrier`] skew; [`TaxLedger::bulk_sync_s`] — the fused twins assert **zero** |
+//! | **Inter-Kernel (data-locality) Tax** | the collective re-reading from HBM what the GEMM just wrote | tiles are pushed the moment they are computed, straight into the consumer's heap slot — no staging of the full partial ([`coordinator::gemm_rs`], [`serve::fused_allreduce_exchange_rows`]) | [`Sim::hbm_roundtrip`]; [`TaxLedger::inter_kernel_s`] |
+//!
+//! ## Workload → DES twin → figure
+//!
+//! Every fused pattern ships three times: a functional coordinator
+//! (bitwise-checked against its BSP composition), a DES timing twin, and
+//! an experiment that regenerates the paper figure. See
+//! `docs/EXPERIMENTS.md` for how to run and read each one.
+//!
+//! | Pattern | Functional | DES twin | Figure (`taxfree experiments …`) |
+//! |---|---|---|---|
+//! | All-Gather + GEMM (§4.1, Fig. 9) | [`coordinator::ag_gemm`] | [`workloads::ag_gemm`] | `fig9` |
+//! | Distributed Flash Decode (§4.2, Figs. 10–11) | [`coordinator::flash_decode`] | [`workloads::flash_decode`] | `fig10`, `fig11` |
+//! | Fused GEMM + Reduce-Scatter (TP MLP) | [`coordinator::gemm_rs`] | [`workloads::gemm_rs`] | `gemm_rs` |
+//! | Head-sharded TP attention (decode) | [`serve::decode_step_fused`] | [`workloads::tp_attention`] | `tp_attn` |
+//! | Batched prompt prefill (M > 1) | [`serve::prefill_step_fused`] | [`workloads::prefill`] | `prefill` |
+//! | Bucketed gradient all-reduce (§6.2) | [`collectives`] | [`workloads::all_reduce`] | `allreduce` |
+//!
+//! ## Module map
 //!
 //! * [`iris`] — the RMA substrate (symmetric heap, remote load/store,
-//!   signal flags, barriers) over a simulated 8-rank node;
+//!   signal flags, barriers) over a simulated 8-rank node, with typed
+//!   [`iris::IrisError`]s;
 //! * [`collectives`] — BSP collectives (the RCCL-like baseline) and
-//!   tile-granular fused variants;
-//! * [`coordinator`] — rank engines and the six execution strategies from
-//!   the paper's evolution (BSP baseline → fully fused);
-//! * [`sim`] — the calibrated discrete-event performance model that stands
-//!   in for the MI300X node and regenerates the paper's figures;
+//!   flag-synchronized fused variants, ragged lengths included;
+//! * [`coordinator`] — rank engines and the execution strategies from
+//!   the paper's evolution (BSP baseline → fully fused), plus autotuning;
+//! * [`sim`] — the calibrated discrete-event performance model that
+//!   stands in for the MI300X/MI325X node and regenerates the figures;
 //! * [`kernels`] — native tile kernels (GEMM tile, online-softmax partial
 //!   attention, combine), the functional mirror of the L1 Pallas kernels;
 //! * [`runtime`] — PJRT loading/execution of the AOT-compiled JAX/Pallas
 //!   artifacts (Python never runs at serve time);
-//! * [`workloads`] — All-Gather+GEMM (paper §4.1), Flash Decode
-//!   (paper §4.2), fused GEMM+ReduceScatter, and head-sharded TP attention
-//!   timing twins, plus a tiny tensor-parallel transformer for end-to-end
-//!   serving;
-//! * [`serve`] — a batched decode serving loop on top of the runtime, with
-//!   Megatron-style head-sharded TP attention through the fused GEMM+RS
-//!   exchange;
-//! * [`experiments`] — harnesses that regenerate every figure/table in the
-//!   paper's evaluation;
-//! * [`metrics`] — the Three-Taxes ledger and the paper's timing protocol.
+//! * [`workloads`] — the DES timing twins listed above plus a tiny
+//!   tensor-parallel transformer ([`workloads::transformer`]) for
+//!   end-to-end serving;
+//! * [`serve`] — batched serving on top of the runtime: chunked M-row
+//!   prompt prefill through the fused AG+GEMM push pipeline, then
+//!   Megatron-style head-sharded TP decode through the fused GEMM+RS
+//!   exchange, with FIFO ([`serve::serve`]) and continuous-batching
+//!   ([`serve::continuous`]) schedulers;
+//! * [`experiments`] — harnesses that regenerate every figure/table in
+//!   the paper's evaluation;
+//! * [`metrics`] — the Three-Taxes ledger and the paper's timing
+//!   protocol;
+//! * [`config`] — hardware presets, workload parameter sets, and the
+//!   config-file/CLI override loader.
 //!
-//! See `DESIGN.md` for the substitution map (paper testbed → this repo) and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! `docs/ARCHITECTURE.md` expands this map (heap layouts, protocol
+//! walk-throughs, the substitution map from the paper's testbed to this
+//! repo); `docs/EXPERIMENTS.md` documents every experiment subcommand.
+//!
+//! [`TaxLedger::launch_s`]: crate::metrics::TaxLedger::launch_s
+//! [`TaxLedger::bulk_sync_s`]: crate::metrics::TaxLedger::bulk_sync_s
+//! [`TaxLedger::inter_kernel_s`]: crate::metrics::TaxLedger::inter_kernel_s
+//! [`Sim::launch`]: crate::sim::Sim::launch
+//! [`Sim::barrier`]: crate::sim::Sim::barrier
+//! [`Sim::hbm_roundtrip`]: crate::sim::Sim::hbm_roundtrip
 
 pub mod clock;
 pub mod collectives;

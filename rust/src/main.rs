@@ -3,7 +3,8 @@
 //! Subcommands (no clap offline; parsing is hand-rolled):
 //!
 //! ```text
-//! taxfree experiments <fig2|fig9|fig10|fig11|all> [--iters N] [--seed N]
+//! taxfree experiments <fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|
+//!         tp_attn|prefill|autotune|all> [--iters N] [--seed N]
 //!         [--config FILE] [--set section.key=value]...
 //! taxfree serve [--world N] [--requests N] [--backend native|pjrt]
 //!         [--artifacts DIR] [--seed N]
@@ -42,7 +43,7 @@ fn print_help() {
     println!(
         "taxfree — reproduction of \"Eliminating Multi-GPU Performance Taxes\"\n\
          \n\
-         USAGE:\n  taxfree experiments <fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|autotune|all> [options]\n\
+         USAGE:\n  taxfree experiments <fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|autotune|all> [options]\n\
          \x20 taxfree serve [--world N] [--requests N] [--backend native|pjrt] [--artifacts DIR]\n\
          \x20 taxfree selftest [--artifacts DIR]\n\
          \n\
@@ -178,6 +179,9 @@ fn cmd_experiments(args: &[String]) -> i32 {
         "allreduce" => experiments::ext_allreduce::run(seed, iters),
         "gemm_rs" => experiments::ext_gemm_rs::run(&hw9, seed, iters),
         "tp_attn" => experiments::ext_tp_attn::run(hw, seed, iters),
+        // prefill is the fat-GEMM regime: like fig9 it defaults to the
+        // MI325X preset the paper ran AG+GEMM on
+        "prefill" => experiments::ext_prefill::run(&hw9, seed, iters),
         "autotune" => run_autotune(),
         "all" => {
             run_fig2();
@@ -188,11 +192,12 @@ fn cmd_experiments(args: &[String]) -> i32 {
             experiments::ext_allreduce::run(seed, iters);
             experiments::ext_gemm_rs::run(&hw9, seed, iters);
             experiments::ext_tp_attn::run(hw, seed, iters);
+            experiments::ext_prefill::run(&hw9, seed, iters);
             run_autotune();
         }
         other => {
             eprintln!(
-                "unknown experiment: {other} (want fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|autotune|all)"
+                "unknown experiment: {other} (want fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|autotune|all)"
             );
             return 2;
         }

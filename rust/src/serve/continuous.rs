@@ -1,21 +1,34 @@
 //! Continuous batching: the serving policy a deployable decode framework
 //! actually uses (vLLM/Orca-style iteration-level scheduling).
 //!
-//! Up to `max_active` sequences are decoded concurrently: each scheduler
-//! *step* advances every active sequence by one token (its own KV shard,
-//! its own hidden state), and finished sequences immediately yield their
-//! slot to the next queued request — no head-of-line blocking on long
-//! generations. Every token still runs the paper's fully-fused distributed
-//! attention exchange; sequences are interleaved, never batched into one
-//! attention call (batch=1 decode, the paper's §5.3 setting).
+//! Up to `max_active` sequences are processed concurrently: each scheduler
+//! *step* advances every active sequence (its own KV shard, its own
+//! hidden state), and finished sequences immediately yield their slot to
+//! the next queued request — no head-of-line blocking on long
+//! generations. Admission is a **prefill → decode** state machine: a
+//! newly admitted sequence is in the prefill phase, and each step
+//! advances it by one batched prompt chunk of up to
+//! [`TransformerConfig::prefill_chunk`] rows
+//! ([`crate::serve::prefill_step_fused`], head-sharded backends) or one
+//! prompt token (replicated backends, whose sequence-parallel attention
+//! exchange is inherently per-token); once the prompt is cached it flips
+//! to the decode phase and advances one generated token per step. Prefill
+//! chunks and decode steps of different sequences interleave within one
+//! scheduler step on the same fused exchanges — no separate prefill node,
+//! no BSP barrier anywhere. Decode tokens still run the paper's
+//! fully-fused distributed attention exchange per token (batch=1 decode,
+//! the paper's §5.3 setting).
 //!
-//! Reports per-request time-to-first-token and completion latency.
+//! Reports per-request time-to-first-token and completion latency in
+//! scheduler steps.
 
 use crate::iris::{run_node, IrisError, RankCtx};
 use crate::serve::queue::Request;
-use crate::serve::{build_serve_heap, decode_step_fused, make_shard};
+use crate::serve::{
+    build_serve_heap, decode_step_fused, make_shard, prefill_chunk_step, prefill_token_step,
+};
 use crate::tensor::Tensor;
-use crate::workloads::transformer::{token_embedding, KvShard, LocalCompute, TransformerConfig};
+use crate::workloads::transformer::{KvShard, LocalCompute, TransformerConfig};
 
 /// Outcome of one continuously-batched request.
 #[derive(Debug, Clone, PartialEq)]
@@ -47,15 +60,20 @@ impl ContinuousReport {
     }
 }
 
-/// One in-flight sequence.
+/// One in-flight sequence. `prefill_next` is the admission state: below
+/// `prompt_len` the sequence is in the **prefill** phase (the next chunk
+/// starts at that prompt position); at `prompt_len` it has flipped to the
+/// **decode** phase and `hidden` carries the last position's output.
 struct Active {
     id: usize,
-    remaining: usize,
+    prompt_len: usize,
+    total: usize,
     tokens_done: usize,
+    prefill_next: usize,
     admitted_step: usize,
     first_token_step: Option<usize>,
     shard: KvShard,
-    hidden: Tensor,
+    hidden: Option<Tensor>,
 }
 
 /// Run a continuous-batching session over `requests` with at most
@@ -104,34 +122,64 @@ fn scheduler_body<C: LocalCompute>(
     let mut step = 0usize;
 
     while !queue.is_empty() || !active.is_empty() {
-        // admission: fill free slots in FIFO order
+        // admission: fill free slots in FIFO order; a fresh sequence
+        // enters in the prefill phase (no hidden state yet — the prompt
+        // rows are its input)
         while active.len() < max_active {
             let Some(req) = queue.pop_front() else { break };
             active.push(Active {
                 id: req.id,
-                remaining: req.total_tokens(),
+                prompt_len: req.prompt_len,
+                total: req.total_tokens(),
                 tokens_done: 0,
+                prefill_next: 0,
                 admitted_step: step,
                 first_token_step: None,
                 shard: make_shard(cfg, compute, ctx.rank()),
-                hidden: token_embedding(cfg, req.id as u64),
+                hidden: None,
             });
         }
-        // one token for every active sequence, in slot order (identical on
-        // all ranks, keeping the flag protocol aligned)
+        // advance every active sequence, in slot order (identical on all
+        // ranks, keeping the flag protocol aligned): one prefill chunk
+        // for prefill-phase sequences, one token for decode-phase ones
         for seq in active.iter_mut() {
-            let owner = seq.tokens_done % cfg.world;
-            seq.hidden = decode_step_fused(
-                ctx,
-                cfg,
-                compute,
-                &mut seq.shard,
-                &seq.hidden,
-                owner,
-                &mut round,
-            )?;
-            seq.tokens_done += 1;
-            seq.remaining -= 1;
+            if seq.prefill_next < seq.prompt_len {
+                if compute.attn_sharded() {
+                    let (m, h) = prefill_chunk_step(
+                        ctx,
+                        cfg,
+                        compute,
+                        &mut seq.shard,
+                        seq.id as u64,
+                        seq.prefill_next,
+                        seq.prompt_len,
+                        &mut round,
+                    )?;
+                    seq.hidden = Some(h);
+                    seq.prefill_next += m;
+                    seq.tokens_done += m;
+                } else {
+                    let pos = seq.prefill_next;
+                    seq.hidden = Some(prefill_token_step(
+                        ctx,
+                        cfg,
+                        compute,
+                        &mut seq.shard,
+                        seq.id as u64,
+                        pos,
+                        &mut round,
+                    )?);
+                    seq.prefill_next += 1;
+                    seq.tokens_done += 1;
+                }
+            } else {
+                let owner = seq.tokens_done % cfg.world;
+                let h = seq.hidden.as_ref().expect("decode phase follows prefill");
+                let next =
+                    decode_step_fused(ctx, cfg, compute, &mut seq.shard, h, owner, &mut round)?;
+                seq.hidden = Some(next);
+                seq.tokens_done += 1;
+            }
             if seq.first_token_step.is_none() {
                 seq.first_token_step = Some(step);
             }
@@ -139,7 +187,7 @@ fn scheduler_body<C: LocalCompute>(
         // retire finished sequences (their slots free up this step)
         let mut i = 0;
         while i < active.len() {
-            if active[i].remaining == 0 {
+            if active[i].tokens_done == active[i].total {
                 let seq = active.remove(i);
                 done.push(ContinuousResult {
                     id: seq.id,
@@ -147,9 +195,9 @@ fn scheduler_body<C: LocalCompute>(
                     admitted_step: seq.admitted_step,
                     first_token_step: seq
                         .first_token_step
-                        .expect("finished sequence decoded at least one token"),
+                        .expect("finished sequence advanced at least one step"),
                     finished_step: step,
-                    final_hidden: seq.hidden,
+                    final_hidden: seq.hidden.expect("finished sequence has a hidden state"),
                 });
             } else {
                 i += 1;
@@ -208,9 +256,9 @@ mod tests {
         let cfg = TransformerConfig::tiny(2);
         let seed = 9;
         let mut q = RequestQueue::new();
-        q.submit(2, 3);
-        q.submit(3, 1);
-        q.submit(1, 2);
+        q.submit(2, 3).unwrap();
+        q.submit(3, 1).unwrap();
+        q.submit(1, 2).unwrap();
         let reqs = q.drain_batch(3);
         let report = serve_continuous(&cfg, reqs.clone(), 2, factory(&cfg, seed)).expect("serve");
         for req in &reqs {
@@ -218,10 +266,7 @@ mod tests {
                 cfg.clone(),
                 NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
             );
-            let mut h = token_embedding(&cfg, req.id as u64);
-            for _ in 0..req.total_tokens() {
-                h = dec.step(&h);
-            }
+            let h = dec.run_request(req.id as u64, req.prompt_len, req.gen_len);
             let got = &report.results[req.id].final_hidden;
             got.assert_allclose(&h, 1e-4, 1e-4);
         }
@@ -233,9 +278,9 @@ mod tests {
         // finish much earlier (no head-of-line blocking)
         let cfg = TransformerConfig::tiny(2);
         let mut q = RequestQueue::new();
-        q.submit(1, 20); // long
-        q.submit(1, 1); // short
-        q.submit(1, 1); // waits for a slot, then finishes fast
+        q.submit(1, 20).unwrap(); // long
+        q.submit(1, 1).unwrap(); // short
+        q.submit(1, 1).unwrap(); // waits for a slot, then finishes fast
         let reqs = q.drain_batch(3);
         let report = serve_continuous(&cfg, reqs, 2, factory(&cfg, 10)).expect("serve");
         let by_id = |id: usize| report.results.iter().find(|r| r.id == id).unwrap();
@@ -255,9 +300,9 @@ mod tests {
         let cfg = TransformerConfig::tiny_ragged(2);
         let seed = 14;
         let mut q = RequestQueue::new();
-        q.submit(2, 2);
-        q.submit(1, 2);
-        q.submit(3, 1);
+        q.submit(2, 2).unwrap();
+        q.submit(1, 2).unwrap();
+        q.submit(3, 1).unwrap();
         let reqs = q.drain_batch(3);
         let report = serve_continuous(&cfg, reqs.clone(), 2, tp_factory(&cfg, seed)).expect("serve");
         for req in &reqs {
@@ -265,11 +310,40 @@ mod tests {
                 cfg.clone(),
                 NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
             );
-            let mut h = token_embedding(&cfg, req.id as u64);
-            for _ in 0..req.total_tokens() {
-                h = dec.step(&h);
-            }
+            let h = dec.run_request(req.id as u64, req.prompt_len, req.gen_len);
             let got = &report.results[req.id].final_hidden;
+            got.assert_allclose(&h, 1e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn prefill_chunks_interleave_with_running_decodes() {
+        // the admission state machine: a long prompt admitted alongside a
+        // decoding sequence advances chunk-wise (prefill phase) while the
+        // other sequence decodes, then flips to decode — fewer scheduler
+        // steps than tokens (batching is real), and every result still
+        // equals the single-process oracle
+        let cfg = TransformerConfig::tiny(2); // prefill_chunk = 4
+        let seed = 15;
+        let mut q = RequestQueue::new();
+        q.submit(1, 6).unwrap(); // decodes from step 0
+        q.submit(11, 2).unwrap(); // prefills in chunks of 4+4+3 alongside
+        let reqs = q.drain_batch(2);
+        let total: usize = reqs.iter().map(|r| r.total_tokens()).sum();
+        let report =
+            serve_continuous(&cfg, reqs.clone(), 2, tp_factory(&cfg, seed)).expect("serve");
+        assert_eq!(report.total_tokens, total);
+        // chunked prefill compresses the schedule: request 1 needs
+        // 3 prefill steps + 2 decode steps, not 13
+        let r1 = report.results.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(r1.finished_step - r1.admitted_step + 1, 5, "3 chunks + 2 decode steps");
+        for req in &reqs {
+            let mut dec = ReferenceDecoder::new(
+                cfg.clone(),
+                NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
+            );
+            let h = dec.run_request(req.id as u64, req.prompt_len, req.gen_len);
+            let got = &report.results.iter().find(|r| r.id == req.id).unwrap().final_hidden;
             got.assert_allclose(&h, 1e-3, 1e-3);
         }
     }

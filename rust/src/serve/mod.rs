@@ -1,13 +1,29 @@
-//! Batched decode serving on the distributed node — the end-to-end system
-//! driver (DESIGN.md §6, row "E2E").
+//! Batched serving on the distributed node — the end-to-end system driver
+//! (see `docs/ARCHITECTURE.md`, row "E2E").
 //!
 //! The serving node stands up `world` rank engines over the iris heap. Each
 //! engine owns its KV-cache shard and its own [`LocalCompute`] (native tile
 //! kernels or PJRT artifacts — PJRT handles are not `Send`, so each engine
 //! builds its own via the [`ComputeFactory`]).
 //!
+//! **Prefill (M > 1).** Every request starts with a batched prompt
+//! prefill: chunks of up to [`TransformerConfig::prefill_chunk`] prompt
+//! rows run through each layer at real M ([`prefill_step_fused`]) —
+//! column-parallel QKV as one fat GEMM, causal attention for all chunk
+//! positions locally over the head shard
+//! (`KvShard::prefill_attention`), then the row-parallel Wo partials and
+//! the TP MLP through the same fused exchange with M-row tiles
+//! ([`fused_allreduce_exchange_rows`]) — filling the head-sharded KV
+//! cache in one pass before the request joins the decode loop. The
+//! gather phase of each exchange hands the next layer its full `[M,
+//! d_model]` activation, which the following column-parallel GEMM
+//! consumes directly — the paper's All-Gather + GEMM push pipeline
+//! (§4.1, [`crate::coordinator::ag_gemm`]) at serving granularity.
+//! Replicated-attention backends have no batched kernel; their prompts
+//! prefill token by token through the fused decode protocol.
+//!
 //! With a **head-sharded backend** ([`LocalCompute::attn_sharded`] —
-//! Megatron-style TP attention), per layer and token:
+//! Megatron-style TP attention), per layer and decode token:
 //!
 //! 1. every rank runs the column-parallel QKV projection for *its* head
 //!    slice and appends the new K/V to its head shard (full sequence);
@@ -51,7 +67,7 @@ use crate::kernels::combine::OnlineCombiner;
 use crate::metrics::Recorder;
 use crate::tensor::Tensor;
 use crate::workloads::transformer::{
-    rmsnorm, token_embedding, KvShard, LocalCompute, TransformerConfig,
+    prompt_embeddings, rmsnorm, rmsnorm_rows, KvShard, LocalCompute, TransformerConfig,
 };
 
 pub use queue::{Request, RequestQueue, RequestResult};
@@ -68,10 +84,13 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// Aggregate throughput over the whole session (prompt + generated
+    /// tokens per wall-clock second).
     pub fn tokens_per_s(&self) -> f64 {
         if self.wall_s <= 0.0 { 0.0 } else { self.total_tokens as f64 / self.wall_s }
     }
 
+    /// Paper-style per-request latency summary (ns percentiles).
     pub fn latency_summary(&self) -> crate::util::Summary {
         let ns: Vec<f64> = self.results.iter().map(|r| r.latency_ns as f64).collect();
         crate::util::Summary::of(&ns)
@@ -89,12 +108,16 @@ pub(crate) const FLAGS_REQ_DONE: &str = "serve_req_done";
 /// monotone flag round of a layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExchangeBufs {
-    /// Contribution staging area: `2 * world * seg_max` elements
-    /// (double-buffered by round parity, one `seg_max` slot per source).
+    /// Contribution staging area: `2 * world * slot_rows * seg_max`
+    /// elements (double-buffered by round parity, one
+    /// `slot_rows * seg_max` slot per source; `slot_rows` is 1 for a
+    /// decode-only heap and [`TransformerConfig::prefill_chunk`] on the
+    /// serving heap so an M-row prefill block fits the same slot).
     pub data: &'static str,
-    /// One monotone flag per source for the scatter phase.
+    /// One monotone flag per source for the scatter phase (an M-row block
+    /// costs the same flag traffic as one row).
     pub data_flags: &'static str,
-    /// Reduced-segment staging area: `2 * world * seg_max` elements.
+    /// Reduced-segment staging area, same size as `data`.
     pub gather: &'static str,
     /// One monotone flag per source for the gather phase.
     pub gather_flags: &'static str,
@@ -121,19 +144,28 @@ pub const MLP_EXCHANGE: ExchangeBufs = ExchangeBufs {
 /// partials, MLP down-projection partials). Every data buffer is
 /// double-buffered by round parity — a producer may run one layer ahead of
 /// a slow consumer, so slot (parity, source) guarantees it never
-/// overwrites data still being read (see `decode_step_fused`).
-pub(crate) fn build_serve_heap(cfg: &TransformerConfig) -> Arc<SymmetricHeap> {
+/// overwrites data still being read (see [`decode_step_fused`] /
+/// [`prefill_step_fused`]). Exchange staging slots hold up to
+/// [`TransformerConfig::prefill_chunk`] rows per source so a whole
+/// prefill chunk moves as one M-row block; decode steps use one row of
+/// the same slot. Public so embedding servers and tests can stand up the
+/// exact node layout the serving entry points use.
+pub fn build_serve_heap(cfg: &TransformerConfig) -> Arc<SymmetricHeap> {
     let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
     let seg_max = cfg.d_model.div_ceil(cfg.world);
+    // sized from the same expression the engines pass as `slot_rows`, so
+    // the two can never diverge (`cfg` is expected validated:
+    // prefill_chunk >= 1)
+    let slot = cfg.prefill_chunk * seg_max;
     let mut b = HeapBuilder::new(cfg.world)
         .buffer(BUF_INBOX, 2 * cfg.world * wire)
         .flags(FLAGS_PARTIAL, cfg.world)
         .flags(FLAGS_REQ_DONE, cfg.world);
     for bufs in [&ATTN_EXCHANGE, &MLP_EXCHANGE] {
         b = b
-            .buffer(bufs.data, 2 * cfg.world * seg_max)
+            .buffer(bufs.data, 2 * cfg.world * slot)
             .flags(bufs.data_flags, cfg.world)
-            .buffer(bufs.gather, 2 * cfg.world * seg_max)
+            .buffer(bufs.gather, 2 * cfg.world * slot)
             .flags(bufs.gather_flags, cfg.world);
     }
     Arc::new(b.build())
@@ -172,8 +204,10 @@ where
 /// payload on success (all ranks produce identical results), and on
 /// failure the **root-cause** error — the first structured (non-Timeout)
 /// error any rank reported — in preference to the secondary Timeouts its
-/// peers hit while waiting on the failed rank's flags.
-pub(crate) fn collect_node_outcomes<T>(
+/// peers hit while waiting on the failed rank's flags. Public so servers
+/// embedding their own engine bodies over [`build_serve_heap`] report
+/// failures with the same root-cause policy as [`serve`].
+pub fn collect_node_outcomes<T>(
     outs: Vec<Result<T, IrisError>>,
 ) -> Result<T, IrisError> {
     let mut payload: Option<T> = None;
@@ -211,6 +245,16 @@ pub(crate) fn validate_requests(
     requests: &[Request],
 ) -> Result<(), IrisError> {
     for req in requests {
+        if req.prompt_len == 0 {
+            // M = 0 prefill: nothing would seed the request's hidden
+            // state, so reject explicitly instead of admitting a
+            // degenerate decode-only request (satellite fix; the queue
+            // rejects these at submission too)
+            return Err(IrisError::InvalidLayout(format!(
+                "request {} has an empty prompt (M = 0): every request must prefill at least one token",
+                req.id
+            )));
+        }
         if req.total_tokens() > cfg.max_seq {
             return Err(IrisError::InvalidLayout(format!(
                 "request {} needs {} tokens but max_seq is {}",
@@ -238,8 +282,9 @@ pub(crate) fn make_shard<C: LocalCompute>(
     }
 }
 
-/// The per-rank serving engine: processes every request in order, running
-/// the fused decode protocol per token.
+/// The per-rank serving engine: processes every request in order —
+/// batched prompt prefill first ([`prefill_request`]), then the fused
+/// decode protocol per generated token.
 fn engine_body<C: LocalCompute>(
     ctx: &RankCtx,
     cfg: &TransformerConfig,
@@ -256,17 +301,16 @@ fn engine_body<C: LocalCompute>(
     for req in requests {
         let timer = crate::clock::WallTimer::start();
         let mut shard = make_shard(cfg, compute, ctx.rank());
-        let mut h = token_embedding(cfg, req.id as u64);
-        let total_tokens = req.prompt_len + req.gen_len;
-        for t in 0..total_tokens {
-            let owner = t % cfg.world;
+        let mut h = prefill_request(ctx, cfg, compute, &mut shard, req, &mut round)?;
+        for g in 0..req.gen_len {
+            let owner = (req.prompt_len + g) % cfg.world;
             h = recorder.time(|| {
                 decode_step_fused(ctx, cfg, compute, &mut shard, &h, owner, &mut round)
             })?;
         }
         results.push(RequestResult {
             id: req.id,
-            tokens: total_tokens,
+            tokens: req.total_tokens(),
             latency_ns: timer.elapsed_ns(),
         });
         // requests are serialized across the node by a *flag* fence, not a
@@ -293,7 +337,15 @@ fn engine_body<C: LocalCompute>(
 /// replicated-attention backends: the paper's fully-fused sequence-parallel
 /// attention exchange (Algorithm 4), then a local post-attention block or
 /// the TP-MLP exchange.
-pub(crate) fn decode_step_fused<C: LocalCompute>(
+///
+/// **Cross-rank contract.** Every rank must call this in lockstep with
+/// the same `cfg`, the same `owner`, and an identically advanced `round`
+/// counter over a heap built by [`build_serve_heap`]; the step advances
+/// `round` once per layer (shared with [`prefill_step_fused`], so decode
+/// steps and prefill chunks of different sequences may interleave on one
+/// node). `owner` names the rank whose sequence shard appends this
+/// token's KV (ignored by head-sharded backends, which all append).
+pub fn decode_step_fused<C: LocalCompute>(
     ctx: &RankCtx,
     cfg: &TransformerConfig,
     compute: &C,
@@ -326,8 +378,15 @@ pub(crate) fn decode_step_fused<C: LocalCompute>(
             // residual is added to the *reduced* projection (adding it to
             // each partial would count it `world` times)
             let wo_partial = compute.attn_out_partial(layer, &attn);
-            let proj =
-                fused_allreduce_exchange(ctx, &d_parts, wo_partial.data(), *round, &ATTN_EXCHANGE)?;
+            let proj = fused_allreduce_exchange_rows(
+                ctx,
+                &d_parts,
+                wo_partial.data(),
+                1,
+                cfg.prefill_chunk,
+                *round,
+                &ATTN_EXCHANGE,
+            )?;
             let mut h1 = h.clone();
             for (a, b) in h1.data_mut().iter_mut().zip(&proj) {
                 *a += b;
@@ -340,7 +399,15 @@ pub(crate) fn decode_step_fused<C: LocalCompute>(
             let x = rmsnorm(&h1);
             let p = compute.mlp_partial(layer, &x);
             let mlp = if compute.tp_sharded() {
-                fused_allreduce_exchange(ctx, &d_parts, p.data(), *round, &MLP_EXCHANGE)?
+                fused_allreduce_exchange_rows(
+                    ctx,
+                    &d_parts,
+                    p.data(),
+                    1,
+                    cfg.prefill_chunk,
+                    *round,
+                    &MLP_EXCHANGE,
+                )?
             } else {
                 p.data().to_vec()
             };
@@ -396,7 +463,15 @@ pub(crate) fn decode_step_fused<C: LocalCompute>(
             let h1 = compute.attn_out_proj(layer, &h, &attn);
             let x = rmsnorm(&h1);
             let p = compute.mlp_partial(layer, &x);
-            let mlp = fused_allreduce_exchange(ctx, &d_parts, p.data(), *round, &MLP_EXCHANGE)?;
+            let mlp = fused_allreduce_exchange_rows(
+                ctx,
+                &d_parts,
+                p.data(),
+                1,
+                cfg.prefill_chunk,
+                *round,
+                &MLP_EXCHANGE,
+            )?;
             let mut out = h1;
             for (a, b) in out.data_mut().iter_mut().zip(&mlp) {
                 *a += b;
@@ -409,10 +484,196 @@ pub(crate) fn decode_step_fused<C: LocalCompute>(
     Ok(h)
 }
 
+/// One batched prefill step for a head-sharded backend: `hs` is an
+/// `[m, d_model]` chunk of prompt-position embeddings (or the previous
+/// layer group's output), `m <= cfg.prefill_chunk`. Per layer:
+///
+/// 1. column-parallel QKV for this rank's heads as **one M-row GEMM**
+///    ([`LocalCompute::qkv_rows`] — the fat-GEMM regime of the paper's
+///    AG+GEMM pattern);
+/// 2. all `m` positions' K/V appended to the head shard, then causal
+///    attention for the whole chunk entirely locally
+///    (`KvShard::prefill_attention`);
+/// 3. the row-parallel Wo partials `[m, d_model]` summed through the
+///    fused GEMM+RS exchange with M-row tiles
+///    ([`fused_allreduce_exchange_rows`]), residual added to the reduced
+///    projection;
+/// 4. the TP MLP partials through the same exchange (disjoint
+///    [`MLP_EXCHANGE`] buffers), second residual.
+///
+/// Returns the chunk's `[m, d_model]` output; the last row seeds the
+/// decode loop. Bitwise-equal, position for position, to running the
+/// chunk token by token through [`decode_step_fused`] — the
+/// strategy-equivalence tests pin this down. Heap/protocol failures
+/// surface as typed [`IrisError`]s.
+pub fn prefill_step_fused<C: LocalCompute>(
+    ctx: &RankCtx,
+    cfg: &TransformerConfig,
+    compute: &C,
+    shard: &mut KvShard,
+    hs: &Tensor,
+    round: &mut u64,
+) -> Result<Tensor, IrisError> {
+    let m = hs.dims()[0];
+    if m == 0 || m > cfg.prefill_chunk {
+        return Err(IrisError::InvalidLayout(format!(
+            "prefill chunk of {m} rows outside 1..={} (prefill_chunk)",
+            cfg.prefill_chunk
+        )));
+    }
+    // real validation, like the exchange's: a replicated-attention backend
+    // at world > 1 would feed the FULL Wo projection into the cross-rank
+    // sum and come back world-times too large — silently. (At world 1 the
+    // "sum" has one source, so a full-weight backend is fine.)
+    if ctx.world() > 1 && !compute.attn_sharded() {
+        return Err(IrisError::InvalidLayout(
+            "prefill_step_fused needs a head-sharded backend at world > 1 \
+             (a replicated Wo partial would be summed world times); prefill \
+             replicated backends token by token through decode_step_fused"
+                .into(),
+        ));
+    }
+    let d_parts = cfg.d_model_partition();
+    let nh = shard.heads();
+    let mut h = hs.clone();
+    for layer in 0..cfg.n_layers {
+        *round += 1;
+        let (q, k_new, v_new) = compute.qkv_rows(layer, &h);
+        for i in 0..m {
+            shard.append(
+                layer,
+                &k_new.rows(i * nh, (i + 1) * nh),
+                &v_new.rows(i * nh, (i + 1) * nh),
+            );
+        }
+        let attn = shard.prefill_attention(layer, &q, m);
+        let wo_partial = compute.attn_out_partial_rows(layer, &attn, m);
+        let proj = fused_allreduce_exchange_rows(
+            ctx,
+            &d_parts,
+            wo_partial.data(),
+            m,
+            cfg.prefill_chunk,
+            *round,
+            &ATTN_EXCHANGE,
+        )?;
+        let mut h1 = h.clone();
+        for (a, b) in h1.data_mut().iter_mut().zip(&proj) {
+            *a += b;
+        }
+        let x = rmsnorm_rows(&h1);
+        let p = compute.mlp_partial_rows(layer, &x);
+        let mlp = if compute.tp_sharded() {
+            fused_allreduce_exchange_rows(
+                ctx,
+                &d_parts,
+                p.data(),
+                m,
+                cfg.prefill_chunk,
+                *round,
+                &MLP_EXCHANGE,
+            )?
+        } else {
+            p.data().to_vec()
+        };
+        let mut out = h1;
+        for (a, b) in out.data_mut().iter_mut().zip(&mlp) {
+            *a += b;
+        }
+        h = out;
+    }
+    Ok(h)
+}
+
+/// Run **one** prefill chunk of a head-sharded request: embeds prompt
+/// positions `p0 .. p0 + min(prefill_chunk, prompt_len - p0)` of
+/// `request_id`, runs them through [`prefill_step_fused`], and returns
+/// `(rows consumed, last row's hidden state)`. The single source of the
+/// chunk-sizing / embedding-id / last-row-seeding rule, shared by the
+/// FIFO path's whole-prompt loop ([`prefill_request`]) and the
+/// continuous-batching scheduler's one-chunk-per-step admission — so the
+/// two serve paths cannot desynchronize.
+pub(crate) fn prefill_chunk_step<C: LocalCompute>(
+    ctx: &RankCtx,
+    cfg: &TransformerConfig,
+    compute: &C,
+    shard: &mut KvShard,
+    request_id: u64,
+    p0: usize,
+    prompt_len: usize,
+    round: &mut u64,
+) -> Result<(usize, Tensor), IrisError> {
+    debug_assert!(p0 < prompt_len, "chunk start beyond the prompt");
+    let m = (prompt_len - p0).min(cfg.prefill_chunk);
+    let rows = prompt_embeddings(cfg, request_id, p0, m);
+    let out = prefill_step_fused(ctx, cfg, compute, shard, &rows, round)?;
+    Ok((m, out.rows(m - 1, m)))
+}
+
+/// Run **one** prompt token of a replicated (sequence-parallel) request:
+/// embeds position `pos` of `request_id` and runs it through the fused
+/// decode protocol with owner `pos % world`. The per-token counterpart of
+/// [`prefill_chunk_step`], equally shared by both serve paths.
+pub(crate) fn prefill_token_step<C: LocalCompute>(
+    ctx: &RankCtx,
+    cfg: &TransformerConfig,
+    compute: &C,
+    shard: &mut KvShard,
+    request_id: u64,
+    pos: usize,
+    round: &mut u64,
+) -> Result<Tensor, IrisError> {
+    let emb = prompt_embeddings(cfg, request_id, pos, 1);
+    decode_step_fused(ctx, cfg, compute, shard, &emb, pos % cfg.world, round)
+}
+
+/// Prefill one request's whole prompt into `shard` and return the hidden
+/// state of the last prompt position (the decode loop's seed). A
+/// head-sharded backend runs [`prefill_step_fused`] in chunks of
+/// [`TransformerConfig::prefill_chunk`] rows (the last chunk may be
+/// ragged); a replicated (sequence-parallel) backend prefills token by
+/// token through [`decode_step_fused`], since its distributed attention
+/// exchange is inherently per-token.
+pub(crate) fn prefill_request<C: LocalCompute>(
+    ctx: &RankCtx,
+    cfg: &TransformerConfig,
+    compute: &C,
+    shard: &mut KvShard,
+    req: &Request,
+    round: &mut u64,
+) -> Result<Tensor, IrisError> {
+    debug_assert!(req.prompt_len >= 1, "validate_requests rejects empty prompts");
+    if compute.attn_sharded() {
+        let mut p0 = 0;
+        let mut last: Option<Tensor> = None;
+        while p0 < req.prompt_len {
+            let (m, h) = prefill_chunk_step(
+                ctx,
+                cfg,
+                compute,
+                shard,
+                req.id as u64,
+                p0,
+                req.prompt_len,
+                round,
+            )?;
+            last = Some(h);
+            p0 += m;
+        }
+        Ok(last.expect("prompt_len >= 1"))
+    } else {
+        let mut h = prefill_token_step(ctx, cfg, compute, shard, req.id as u64, 0, round)?;
+        for p in 1..req.prompt_len {
+            h = prefill_token_step(ctx, cfg, compute, shard, req.id as u64, p, round)?;
+        }
+        Ok(h)
+    }
+}
+
 /// The fused GEMM+ReduceScatter + all-gather exchange of one partial sum
 /// (the serving-path twin of [`crate::coordinator::gemm_rs`]): every rank
 /// holds a full-width partial `contribution` (`parts` must be the
-/// [`crate::util::partition`] of its length over the world); segment s of
+/// [`crate::util::partition`] of its width over the world); segment s of
 /// the sum belongs to rank s. Producers push their segment contributions
 /// straight into the owning rank's heap with a signal flag; each rank
 /// reduces its own segment behind flags in canonical source order (one
@@ -426,6 +687,11 @@ pub(crate) fn decode_step_fused<C: LocalCompute>(
 /// declare any [`ExchangeBufs`] (each data buffer `2 * world * seg_max`
 /// elements, each flag array `world` flags).
 ///
+/// This is the one-row form of [`fused_allreduce_exchange_rows`]
+/// (`rows = slot_rows = 1`); the serving engine itself always calls the
+/// rows form so decode steps and M-row prefill chunks share one heap
+/// layout.
+///
 /// Heap errors (mis-sized buffer, dead peer timing out a wait) propagate
 /// as typed [`IrisError`]s.
 pub fn fused_allreduce_exchange(
@@ -435,20 +701,63 @@ pub fn fused_allreduce_exchange(
     round: u64,
     bufs: &ExchangeBufs,
 ) -> Result<Vec<f32>, IrisError> {
+    fused_allreduce_exchange_rows(ctx, parts, contribution, 1, 1, round, bufs)
+}
+
+/// M-row generalization of [`fused_allreduce_exchange`] — the exchange
+/// the batched prefill path runs. `contribution` is `rows` stacked
+/// partials of width `n` (row-major `[rows, n]`, `n` = what `parts`
+/// covers); the result is the row-wise cross-rank sum, same layout.
+///
+/// **Cross-rank contract.** Every rank must call with the same `parts`,
+/// `rows`, `slot_rows`, `round`, and `bufs` (the protocol exchanges no
+/// metadata; a mismatch corrupts the reduction). `slot_rows` is the
+/// staging-slot *capacity* in rows — fixed per heap
+/// ([`build_serve_heap`] sizes each data buffer
+/// `2 * world * slot_rows * seg_max` elements) — while `rows` is this
+/// call's actual payload, `1 <= rows <= slot_rows`; a decode step and a
+/// prefill chunk therefore interleave freely on the same buffers. For
+/// each destination d the producer packs its `[rows, len_d]` sub-block
+/// contiguously and ships it as **one** M-row tile with one signal — M
+/// rows cost the same flag traffic as one.
+///
+/// Validation is real (not `debug_assert`): a partition that is not
+/// contiguous-from-zero, over-wide segments that would spill into the
+/// next slot, coverage that does not match the contribution width, or
+/// `rows` outside the slot capacity all return a typed
+/// [`IrisError::InvalidLayout`] before any flag traffic.
+pub fn fused_allreduce_exchange_rows(
+    ctx: &RankCtx,
+    parts: &[(usize, usize)],
+    contribution: &[f32],
+    rows: usize,
+    slot_rows: usize,
+    round: u64,
+    bufs: &ExchangeBufs,
+) -> Result<Vec<f32>, IrisError> {
     let (r, w) = (ctx.rank(), ctx.world());
-    // real validation, not debug_assert: this is a public API, and a bad
-    // partition in release mode would otherwise sum silently wrong (or
-    // panic on a slice) instead of reporting the typed contract breach.
-    // The contract is exactly [`crate::util::partition`]'s shape: one
-    // segment per rank, contiguous from offset 0, covering every element
-    // (overlap or gaps would double-count or drop segments silently).
+    // The partition contract is exactly [`crate::util::partition`]'s
+    // shape: one segment per rank, contiguous from offset 0, covering
+    // every column (overlap or gaps would double-count or drop segments
+    // silently in release mode).
     if parts.len() != w {
         return Err(IrisError::InvalidLayout(format!(
             "fused_allreduce_exchange needs one partition segment per rank: got {} for world {w}",
             parts.len()
         )));
     }
-    let n = contribution.len();
+    if rows == 0 || rows > slot_rows {
+        return Err(IrisError::InvalidLayout(format!(
+            "fused_allreduce_exchange of {rows} rows outside the staging slot capacity 1..={slot_rows}"
+        )));
+    }
+    if contribution.len() % rows != 0 {
+        return Err(IrisError::InvalidLayout(format!(
+            "fused_allreduce_exchange contribution of {} elements is not {rows} equal rows",
+            contribution.len()
+        )));
+    }
+    let n = contribution.len() / rows;
     let seg_max = n.div_ceil(w);
     let mut covered = 0usize;
     for &(off, len) in parts {
@@ -458,8 +767,9 @@ pub fn fused_allreduce_exchange(
             )));
         }
         if len > seg_max {
-            // staging slots are strided seg_max: a longer segment would
-            // spill into the next source's slot and corrupt the reduction
+            // staging slots are strided seg_max columns: a longer segment
+            // would spill into the next source's slot and corrupt the
+            // reduction
             return Err(IrisError::InvalidLayout(format!(
                 "fused_allreduce_exchange segment of {len} elements exceeds the seg_max stride {seg_max}"
             )));
@@ -471,43 +781,69 @@ pub fn fused_allreduce_exchange(
             "fused_allreduce_exchange partition covers {covered} of {n} contribution elements"
         )));
     }
-    let base = ((round % 2) as usize) * w * seg_max;
+    let stride = slot_rows * seg_max;
+    let base = ((round % 2) as usize) * w * stride;
+    // one reused scratch buffer packs the [rows, len] sub-block for one
+    // destination contiguously — one store + one signal per destination
+    // regardless of M. For rows == 1 (every decode step) the sub-block
+    // IS a contribution slice, so nothing is copied at all.
+    let mut scratch = Vec::new();
+    let store =
+        |scratch: &mut Vec<f32>, dst: Option<usize>, off: usize, len: usize| -> Result<(), IrisError> {
+            let block: &[f32] = if rows == 1 {
+                &contribution[off..off + len]
+            } else {
+                scratch.clear();
+                for row in 0..rows {
+                    scratch.extend_from_slice(&contribution[row * n + off..row * n + off + len]);
+                }
+                scratch
+            };
+            match dst {
+                Some(d) => ctx.remote_store(d, bufs.data, base + r * stride, block),
+                None => ctx.store_local(bufs.data, base + r * stride, block),
+            }
+        };
 
-    // ---- reduce-scatter: push partial segments to their owners ----
+    // ---- reduce-scatter: push partial M-row blocks to their owners ----
     for d in ctx.peers() {
         let (off, len) = parts[d];
-        ctx.remote_store(d, bufs.data, base + r * seg_max, &contribution[off..off + len])?;
+        store(&mut scratch, Some(d), off, len)?;
         ctx.signal(d, bufs.data_flags, r)?;
     }
     let (my_off, my_len) = parts[r];
-    ctx.store_local(bufs.data, base + r * seg_max, &contribution[my_off..my_off + my_len])?;
+    store(&mut scratch, None, my_off, my_len)?;
     ctx.signal(r, bufs.data_flags, r)?;
 
-    // concurrent reduction of the owned segment behind flags
-    let mut acc = vec![0.0f32; my_len];
+    // concurrent reduction of the owned block behind flags, in canonical
+    // source order (every rank gathers identical bits afterwards)
+    let mut acc = vec![0.0f32; rows * my_len];
     for src in 0..w {
         ctx.wait_flag_ge(bufs.data_flags, src, round)?;
-        let contrib = ctx.load_local_vec(bufs.data, base + src * seg_max, my_len)?;
+        let contrib = ctx.load_local_vec(bufs.data, base + src * stride, rows * my_len)?;
         for (a, c) in acc.iter_mut().zip(&contrib) {
             *a += c;
         }
     }
 
-    // ---- all-gather the reduced segments (the next dense consumer needs
-    //      the full vector) ----
+    // ---- all-gather the reduced blocks (the next dense consumer needs
+    //      the full [rows, n] activation) ----
     for d in ctx.peers() {
-        ctx.remote_store(d, bufs.gather, base + r * seg_max, &acc)?;
+        ctx.remote_store(d, bufs.gather, base + r * stride, &acc)?;
         ctx.signal(d, bufs.gather_flags, r)?;
     }
-    ctx.store_local(bufs.gather, base + r * seg_max, &acc)?;
+    ctx.store_local(bufs.gather, base + r * stride, &acc)?;
     ctx.signal(r, bufs.gather_flags, r)?;
 
-    let mut out = vec![0.0f32; n];
+    let mut out = vec![0.0f32; rows * n];
     for src in 0..w {
         ctx.wait_flag_ge(bufs.gather_flags, src, round)?;
         let (off, len) = parts[src];
-        let seg = ctx.load_local_vec(bufs.gather, base + src * seg_max, len)?;
-        out[off..off + len].copy_from_slice(&seg);
+        let seg = ctx.load_local_vec(bufs.gather, base + src * stride, rows * len)?;
+        for row in 0..rows {
+            out[row * n + off..row * n + off + len]
+                .copy_from_slice(&seg[row * len..(row + 1) * len]);
+        }
     }
     Ok(out)
 }
@@ -515,7 +851,9 @@ pub fn fused_allreduce_exchange(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workloads::transformer::{NativeCompute, ReferenceDecoder, TransformerWeights};
+    use crate::workloads::transformer::{
+        token_embedding, NativeCompute, ReferenceDecoder, TransformerWeights,
+    };
 
     fn native_factory(
         cfg: &TransformerConfig,
@@ -693,6 +1031,112 @@ mod tests {
             collect_node_outcomes::<u32>(vec![Ok(1), Err(timeout())]),
             Err(IrisError::Timeout(_))
         ));
+    }
+
+    /// Drive one whole request (prefill + decode) on a node and return
+    /// every rank's final hidden state.
+    fn drive_request<F>(cfg: &TransformerConfig, req: Request, factory: F) -> Vec<Tensor>
+    where
+        F: Fn(usize) -> NativeCompute + Send + Sync + 'static,
+    {
+        let heap = build_serve_heap(cfg);
+        let cfg2 = cfg.clone();
+        run_node(heap, move |ctx| {
+            let compute = factory(ctx.rank());
+            let mut shard = make_shard(&cfg2, &compute, ctx.rank());
+            let mut round = 0u64;
+            let mut h = prefill_request(&ctx, &cfg2, &compute, &mut shard, &req, &mut round)
+                .expect("prefill");
+            for g in 0..req.gen_len {
+                let owner = (req.prompt_len + g) % cfg2.world;
+                h = decode_step_fused(&ctx, &cfg2, &compute, &mut shard, &h, owner, &mut round)
+                    .expect("decode step");
+            }
+            h
+        })
+    }
+
+    #[test]
+    fn batched_prefill_then_decode_matches_reference_request() {
+        // the tentpole, end to end on the node: chunked batched prefill
+        // (ragged chunks: prompt 7 over chunk 4 / 3) + decode must equal
+        // the single-process token-by-token oracle, for head-sharded TP
+        // backends at even and ragged geometry
+        let seed = 90;
+        for world in [1usize, 2, 3, 4] {
+            for cfg in [TransformerConfig::tiny(world), TransformerConfig::tiny_ragged(world)] {
+                let req = Request { id: 3, prompt_len: 7, gen_len: 3 };
+                let outs = drive_request(&cfg, req.clone(), tp_factory(&cfg, seed));
+                let mut dec = ReferenceDecoder::new(
+                    cfg.clone(),
+                    NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
+                );
+                let expect = dec.run_request(req.id as u64, req.prompt_len, req.gen_len);
+                for (rk, out) in outs.iter().enumerate() {
+                    out.assert_allclose(&expect, 1e-3, 1e-3);
+                    let _ = rk;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sequence_parallel_prefill_matches_reference_request() {
+        // replicated backends prefill token by token through the fused
+        // decode protocol; the request result must match the same oracle
+        let seed = 91;
+        for world in [1usize, 2, 3] {
+            let cfg = TransformerConfig::tiny(world);
+            let req = Request { id: 1, prompt_len: 5, gen_len: 2 };
+            let outs = drive_request(&cfg, req.clone(), native_factory(&cfg, seed));
+            let mut dec = ReferenceDecoder::new(
+                cfg.clone(),
+                NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
+            );
+            let expect = dec.run_request(req.id as u64, req.prompt_len, req.gen_len);
+            for out in &outs {
+                out.assert_allclose(&expect, 1e-4, 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_step_rejects_replicated_backend_at_world_gt_1() {
+        // the guard behind the public API: a replicated-attention backend
+        // at world > 1 would have its FULL Wo projection summed
+        // world-times by the exchange — that must be a typed error, not a
+        // silently wrong hidden state
+        let cfg = TransformerConfig::tiny(2);
+        let heap = build_serve_heap(&cfg);
+        let cfg2 = cfg.clone();
+        let factory = native_factory(&cfg, 3);
+        let outs = run_node(heap, move |ctx| {
+            let compute = factory(ctx.rank());
+            let mut shard = make_shard(&cfg2, &compute, ctx.rank());
+            let mut round = 0u64;
+            let rows = prompt_embeddings(&cfg2, 0, 0, 2);
+            prefill_step_fused(&ctx, &cfg2, &compute, &mut shard, &rows, &mut round)
+        });
+        for o in outs {
+            match o {
+                Err(IrisError::InvalidLayout(msg)) => {
+                    assert!(msg.contains("head-sharded"), "{msg}")
+                }
+                other => panic!("expected InvalidLayout, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn empty_prompt_rejected_before_decode() {
+        // the satellite fix: an M = 0 prompt is a typed admission error,
+        // not a silent decode-only request
+        let cfg = TransformerConfig::tiny(2);
+        let reqs = vec![Request { id: 0, prompt_len: 0, gen_len: 4 }];
+        match serve(&cfg, reqs, tp_factory(&cfg, 1)) {
+            Err(IrisError::InvalidLayout(msg)) => assert!(msg.contains("empty prompt"), "{msg}"),
+            other => panic!("expected InvalidLayout, got {other:?}"),
+        }
     }
 
     #[test]

@@ -3,7 +3,9 @@
 
 use crate::util::Prng;
 
-/// One decode request: a prompt to prefill and tokens to generate.
+/// One serving request: a prompt of `prompt_len` tokens to prefill
+/// (batched through the fused AG+GEMM push pipeline — must be at least
+/// one token) and `gen_len` tokens to generate.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Request {
     pub id: usize,
@@ -12,6 +14,8 @@ pub struct Request {
 }
 
 impl Request {
+    /// Total KV-cache footprint of the request in tokens
+    /// (`prompt_len + gen_len`).
     pub fn total_tokens(&self) -> usize {
         self.prompt_len + self.gen_len
     }
@@ -37,12 +41,18 @@ impl RequestQueue {
         RequestQueue::default()
     }
 
-    /// Enqueue a request; ids are assigned in admission order.
-    pub fn submit(&mut self, prompt_len: usize, gen_len: usize) -> usize {
+    /// Enqueue a request; ids are assigned in admission order. An empty
+    /// prompt (`prompt_len == 0`, an M = 0 prefill) is rejected here —
+    /// nothing would seed the request's hidden state, so it must not
+    /// reach the node as a degenerate decode-only admission.
+    pub fn submit(&mut self, prompt_len: usize, gen_len: usize) -> Result<usize, String> {
+        if prompt_len == 0 {
+            return Err("prompt_len must be >= 1 (an M = 0 prompt cannot be prefilled)".into());
+        }
         let id = self.next_id;
         self.next_id += 1;
         self.pending.push_back(Request { id, prompt_len, gen_len });
-        id
+        Ok(id)
     }
 
     pub fn len(&self) -> usize {
@@ -60,7 +70,9 @@ impl RequestQueue {
     }
 
     /// Fill with a synthetic workload: `n` requests with prompt/gen lengths
-    /// uniform in the given ranges (deterministic under `seed`).
+    /// uniform in the given ranges (deterministic under `seed`). Prompt
+    /// lengths below one are meaningless (see [`RequestQueue::submit`]);
+    /// `prompt_range.0` must be at least 1.
     pub fn fill_synthetic(
         &mut self,
         n: usize,
@@ -68,11 +80,12 @@ impl RequestQueue {
         gen_range: (usize, usize),
         seed: u64,
     ) {
+        assert!(prompt_range.0 >= 1, "synthetic prompts need at least one token");
         let mut rng = Prng::new(seed);
         for _ in 0..n {
             let p = rng.range(prompt_range.0, prompt_range.1 + 1);
             let g = rng.range(gen_range.0, gen_range.1 + 1);
-            self.submit(p, g);
+            self.submit(p, g).expect("synthetic prompts are non-empty");
         }
     }
 }
@@ -84,13 +97,24 @@ mod tests {
     #[test]
     fn fifo_order_and_ids() {
         let mut q = RequestQueue::new();
-        let a = q.submit(4, 2);
-        let b = q.submit(1, 1);
+        let a = q.submit(4, 2).unwrap();
+        let b = q.submit(1, 1).unwrap();
         assert_eq!((a, b), (0, 1));
         assert_eq!(q.len(), 2);
         let batch = q.drain_batch(1);
         assert_eq!(batch[0].id, 0);
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn empty_prompt_rejected_at_submission() {
+        // the satellite fix: M = 0 prompts never enter the queue, and the
+        // rejection burns no request id
+        let mut q = RequestQueue::new();
+        let err = q.submit(0, 5).unwrap_err();
+        assert!(err.contains("M = 0"), "{err}");
+        assert!(q.is_empty());
+        assert_eq!(q.submit(1, 0).unwrap(), 0, "rejection must not consume an id");
     }
 
     #[test]

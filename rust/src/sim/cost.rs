@@ -76,6 +76,34 @@ pub fn attention_partial_time(
     flop_time.max(mem_time)
 }
 
+/// Time for causal prefill attention on one rank: `m` new query rows per
+/// head attend over `kv_base` previously cached tokens plus their own
+/// causal prefix inside the chunk (`Σ_i (kv_base + i + 1)` key/value
+/// pairs in total). Unlike decode ([`attention_partial_time`]'s GEMV),
+/// prefill attention is matmul-shaped — the M query rows batch onto the
+/// MFMA path, so FLOPs are priced at matrix-engine throughput with the
+/// M-dependent efficiency curve, and K/V are streamed from HBM once.
+pub fn causal_attention_time(
+    hw: &HwConfig,
+    m: usize,
+    heads: usize,
+    dim: usize,
+    kv_base: usize,
+) -> f64 {
+    if m == 0 || heads == 0 || dim == 0 {
+        return 0.0;
+    }
+    // Σ_{i=0..m-1} (kv_base + i + 1) score/value pairs per head
+    let pairs = m as f64 * kv_base as f64 + (m as f64 * (m as f64 + 1.0)) / 2.0;
+    // 2 matmul-like passes (q·K^T and p·V), 2 FLOPs per MAC
+    let flops = 2.0 * 2.0 * heads as f64 * pairs * dim as f64;
+    let flop_time = flops / (hw.peak_fp16_flops * hw.gemm_eff.at(m));
+    // K and V of the whole visible context streamed once (fp16), per head
+    let bytes = 2.0 * 2.0 * heads as f64 * (kv_base + m) as f64 * dim as f64;
+    let mem_time = bytes / hw.hbm_bw;
+    flop_time.max(mem_time)
+}
+
 /// Time for the online-softmax combine of `world` partials on one rank.
 pub fn combine_time(hw: &HwConfig, batch: usize, heads: usize, dim: usize, world: usize) -> f64 {
     let rows = (batch * heads) as f64;
@@ -232,6 +260,25 @@ mod tests {
         assert_eq!(allreduce_time(&hw, 0, 8), 0.0);
         // more data takes longer
         assert!(allreduce_time(&hw, 1 << 22, 8) > allreduce_time(&hw, 1 << 12, 8));
+    }
+
+    #[test]
+    fn causal_attention_scales_and_degenerates() {
+        let hw = presets::mi300x();
+        // zero for degenerate shapes
+        assert_eq!(causal_attention_time(&hw, 0, 8, 128, 0), 0.0);
+        assert_eq!(causal_attention_time(&hw, 16, 0, 128, 0), 0.0);
+        // more rows and a longer cached base both take longer
+        let t64 = causal_attention_time(&hw, 64, 8, 128, 0);
+        let t512 = causal_attention_time(&hw, 512, 8, 128, 0);
+        assert!(t512 > t64);
+        assert!(causal_attention_time(&hw, 64, 8, 128, 1 << 16) > t64);
+        // one fat prefill chunk beats decoding the same tokens one by one
+        // (the point of batching: M rows amortize the KV stream)
+        let m = 256usize;
+        let serial: f64 =
+            (0..m).map(|i| attention_partial_time(&hw, 1, 8, 8, 128, i + 1)).sum();
+        assert!(causal_attention_time(&hw, m, 8, 128, 0) < serial);
     }
 
     #[test]

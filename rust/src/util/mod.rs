@@ -18,8 +18,32 @@ pub use table::{fmt_bytes, fmt_count, fmt_ns, Table};
 /// as evenly as possible: the first `n % parts` segments get one extra
 /// element. This is the canonical ragged-scatter layout shared by the
 /// collectives (`reduce_scatter_sum` with `n % world != 0`), the fused
-/// GEMM+ReduceScatter coordinator, and the tensor-parallel MLP sharding —
-/// one convention everywhere so segments always line up across layers.
+/// GEMM+ReduceScatter coordinator, the tensor-parallel head/MLP sharding,
+/// and the serving exchanges — one convention everywhere so segments
+/// always line up across layers.
+///
+/// # Examples
+///
+/// Even division, ragged remainder (front-loaded), and fewer elements
+/// than parts (empty tails — how `world > n_heads` gets its empty head
+/// shards):
+///
+/// ```
+/// use taxfree::util::partition;
+///
+/// assert_eq!(partition(8, 4), vec![(0, 2), (2, 2), (4, 2), (6, 2)]);
+/// assert_eq!(partition(10, 4), vec![(0, 3), (3, 3), (6, 2), (8, 2)]);
+/// assert_eq!(partition(2, 4), vec![(0, 1), (1, 1), (2, 0), (2, 0)]);
+///
+/// // segments always tile 0..n contiguously, whatever the raggedness
+/// let parts = partition(33, 5);
+/// let mut expect_off = 0;
+/// for (off, len) in parts {
+///     assert_eq!(off, expect_off);
+///     expect_off += len;
+/// }
+/// assert_eq!(expect_off, 33);
+/// ```
 pub fn partition(n: usize, parts: usize) -> Vec<(usize, usize)> {
     assert!(parts >= 1, "partition into zero parts");
     let base = n / parts;
@@ -38,8 +62,18 @@ pub fn partition(n: usize, parts: usize) -> Vec<(usize, usize)> {
 /// Column tiles `(col offset, width)` of a segment of `len` columns cut
 /// into `block`-wide tiles (last tile ragged). This is the single source
 /// of fused-push tile geometry shared by the GEMM+RS coordinator, its DES
-/// timing twin, and the TP-attention twin — one rule everywhere so flag
-/// indices and tile counts can never disagree across layers.
+/// timing twin, and the TP-attention/prefill twins — one rule everywhere
+/// so flag indices and tile counts can never disagree across layers.
+///
+/// # Examples
+///
+/// ```
+/// use taxfree::util::seg_tiles;
+///
+/// assert_eq!(seg_tiles(10, 3), vec![(0, 3), (3, 3), (6, 3), (9, 1)]);
+/// assert_eq!(seg_tiles(3, 3), vec![(0, 3)]);
+/// assert_eq!(seg_tiles(0, 4), Vec::<(usize, usize)>::new());
+/// ```
 pub fn seg_tiles(len: usize, block: usize) -> Vec<(usize, usize)> {
     assert!(block >= 1, "tile width must be positive");
     (0..len.div_ceil(block))

@@ -11,14 +11,21 @@
 //! * [`tp_attention`] — the head-sharded (Megatron-style) TP attention
 //!   block: BSP all-reduce of the Wo partials vs the fused GEMM+RS
 //!   pipeline;
-//! * [`transformer`] — a tiny tensor-parallel transformer decode model
-//!   built from the same pieces, used by the end-to-end serving example.
+//! * [`prefill`] — batched prompt prefill: a whole M-row prompt chunk
+//!   through a tensor-parallel layer (the fat-GEMM regime of the AG+GEMM
+//!   pattern), BSP AG→GEMM composition vs the fused push pipeline with
+//!   M-row tiles;
+//! * [`transformer`] — a tiny tensor-parallel transformer model (batched
+//!   prefill + decode) built from the same pieces, used by the
+//!   end-to-end serving example.
 
 pub mod ag_gemm;
 pub mod all_reduce;
 pub mod flash_decode;
 pub mod gemm_rs;
+pub mod prefill;
 pub mod tp_attention;
 pub mod transformer;
 
+pub use prefill::PrefillStrategy;
 pub use tp_attention::TpAttnStrategy;

@@ -43,8 +43,10 @@ pub enum TpAttnStrategy {
 }
 
 impl TpAttnStrategy {
+    /// Both strategies, baseline first.
     pub const ALL: [TpAttnStrategy; 2] = [TpAttnStrategy::BaselineBsp, TpAttnStrategy::FusedTiles];
 
+    /// Short name used in tables and trace labels.
     pub fn name(&self) -> &'static str {
         match self {
             TpAttnStrategy::BaselineBsp => "baseline_bsp",

@@ -35,6 +35,17 @@
 //! runs the fused GEMM+ReduceScatter exchange followed by a
 //! flag-synchronized all-gather of the reduced segments.
 //!
+//! **Prefill (M > 1).** Prompt positions have independent embeddings
+//! ([`prompt_embeddings`]), so a whole prompt chunk of
+//! [`TransformerConfig::prefill_chunk`] rows runs through each layer as
+//! one batch: the batched [`LocalCompute::qkv_rows`] /
+//! [`LocalCompute::attn_out_partial_rows`] / [`LocalCompute::mlp_partial_rows`]
+//! methods are real M-row GEMMs (the fat-GEMM regime of the paper's
+//! AG+GEMM pattern, §4.1), and [`KvShard::prefill_attention`] computes
+//! causal attention for all chunk positions locally over the head shard.
+//! Every batched method is bitwise-equal, row for row, to its M = 1
+//! counterpart — the strategy-equivalence tests pin this down.
+//!
 //! The local dense compute is abstracted behind [`LocalCompute`] so the
 //! serving path can execute it either natively ([`NativeCompute`]) or via
 //! the PJRT runtime running the AOT-compiled JAX artifact
@@ -44,7 +55,9 @@
 //! keeps the fully replicated layout (its artifact is the monolithic
 //! post-attention block).
 
-use crate::kernels::attention::{flash_decode_partial, PartialState};
+use crate::kernels::attention::{
+    flash_decode_partial, flash_decode_partial_strided, PartialState,
+};
 use crate::kernels::combine::OnlineCombiner;
 use crate::tensor::Tensor;
 use crate::util::{partition, Prng};
@@ -63,6 +76,12 @@ pub struct TransformerConfig {
     /// Maximum sequence length (shard capacity is `max_seq / world`,
     /// rounded up).
     pub max_seq: usize,
+    /// Maximum prompt rows one batched prefill step processes (the M of
+    /// the fat-GEMM regime). Longer prompts run as a sequence of chunks;
+    /// the serving heap's exchange buffers are sized for this many rows.
+    /// Must be positive — an M = 0 prefill step is meaningless and is
+    /// rejected by [`TransformerConfig::validate`].
+    pub prefill_chunk: usize,
 }
 
 impl TransformerConfig {
@@ -77,12 +96,15 @@ impl TransformerConfig {
             world,
             kv_block: 4,
             max_seq: 64,
+            prefill_chunk: 4,
         }
     }
 
     /// Ragged-sharding test config: `d_model` (33) and `ffn_hidden` (50)
     /// deliberately do not divide by common world sizes, exercising the
-    /// ragged partition layout of the TP MLP end to end.
+    /// ragged partition layout of the TP MLP end to end. `prefill_chunk`
+    /// (3) does not divide typical prompt lengths either, so chunked
+    /// prefill exercises ragged M.
     pub fn tiny_ragged(world: usize) -> TransformerConfig {
         TransformerConfig {
             d_model: 33,
@@ -93,6 +115,7 @@ impl TransformerConfig {
             world,
             kv_block: 4,
             max_seq: 48,
+            prefill_chunk: 3,
         }
     }
 
@@ -107,6 +130,7 @@ impl TransformerConfig {
             world,
             kv_block: 32,
             max_seq: 512,
+            prefill_chunk: 16,
         }
     }
 
@@ -133,6 +157,9 @@ impl TransformerConfig {
         }
         if self.max_seq == 0 {
             return Err("max_seq must be positive".into());
+        }
+        if self.prefill_chunk == 0 {
+            return Err("prefill_chunk must be positive (an M = 0 prefill step is rejected)".into());
         }
         Ok(())
     }
@@ -305,6 +332,59 @@ pub trait LocalCompute {
         }
         out
     }
+
+    // ---- batched (M > 1) prefill entry points -------------------------
+    //
+    // The prefill path runs whole prompt chunks through each layer at
+    // real M — the fat-GEMM regime of the paper's AG+GEMM pattern. The
+    // defaults loop the M = 1 methods row by row, so every backend is
+    // prefill-capable; [`NativeCompute`] overrides them with genuine
+    // M-row GEMMs. Because the shared GEMM inner loop computes each
+    // output row independently (i-k-j order), the batched overrides are
+    // bitwise-equal to the row-by-row defaults — the strategy-equivalence
+    // tests rely on this.
+
+    /// Batched QKV over `m = hs.dims()[0]` prompt rows. Each row is
+    /// pre-attention-normed independently and projected through this
+    /// backend's (possibly column-sharded) fused QKV. Returns
+    /// `(q, k, v)`, each `[m * local_heads, head_dim]` **position-major**:
+    /// row `i * local_heads + h` is position `i`, head `h`.
+    fn qkv_rows(&self, layer: usize, hs: &Tensor) -> (Tensor, Tensor, Tensor) {
+        let m = hs.dims()[0];
+        let (mut qs, mut ks, mut vs) = (Vec::with_capacity(m), Vec::new(), Vec::new());
+        for i in 0..m {
+            let (q, k, v) = self.qkv(layer, &hs.rows(i, i + 1));
+            qs.push(q);
+            ks.push(k);
+            vs.push(v);
+        }
+        (Tensor::concat_rows(&qs), Tensor::concat_rows(&ks), Tensor::concat_rows(&vs))
+    }
+
+    /// Batched (partial) output projection for `m` positions, **without**
+    /// the residual: `attn_rows` is `[m * local_heads, head_dim]`
+    /// position-major (the layout [`LocalCompute::qkv_rows`] and
+    /// `KvShard::prefill_attention` produce); the result is
+    /// `[m, d_model]`, one partial projection per position. As with
+    /// [`LocalCompute::attn_out_partial`], the cross-rank sum of the
+    /// per-rank partials reproduces the full projection.
+    fn attn_out_partial_rows(&self, layer: usize, attn_rows: &Tensor, m: usize) -> Tensor {
+        let per_pos = attn_rows.dims()[0] / m;
+        let parts: Vec<Tensor> = (0..m)
+            .map(|i| self.attn_out_partial(layer, &attn_rows.rows(i * per_pos, (i + 1) * per_pos)))
+            .collect();
+        Tensor::concat_rows(&parts)
+    }
+
+    /// Batched partial MLP for `m = x_rows.dims()[0]` already-normed
+    /// positions: `[m, d_model]`, one partial down-projection per row.
+    /// Summing all ranks' results gives the full MLP output per position.
+    fn mlp_partial_rows(&self, layer: usize, x_rows: &Tensor) -> Tensor {
+        let m = x_rows.dims()[0];
+        let parts: Vec<Tensor> =
+            (0..m).map(|i| self.mlp_partial(layer, &x_rows.rows(i, i + 1))).collect();
+        Tensor::concat_rows(&parts)
+    }
 }
 
 /// MLP weight residency of a [`NativeCompute`].
@@ -434,6 +514,26 @@ pub fn rmsnorm(x: &Tensor) -> Tensor {
     Tensor::from_vec(x.dims(), x.data().iter().map(|v| v * inv).collect())
 }
 
+/// Row-wise [`rmsnorm`] of an `[m, n]` matrix: every row is normalized
+/// independently, with the same accumulation order as `rmsnorm` on that
+/// row alone — so the batched prefill path is bitwise-equal to the
+/// token-by-token decode path on identical inputs. Public because the TP
+/// serving engine norms the whole prompt chunk between the attention and
+/// MLP exchanges.
+pub fn rmsnorm_rows(x: &Tensor) -> Tensor {
+    let (m, n) = (x.dims()[0], x.dims()[1]);
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let row = &x.data()[i * n..(i + 1) * n];
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / n as f32;
+        let inv = 1.0 / (ms + 1e-6).sqrt();
+        for (j, v) in row.iter().enumerate() {
+            out.set2(i, j, v * inv);
+        }
+    }
+    out
+}
+
 impl LocalCompute for NativeCompute {
     fn qkv(&self, layer: usize, h: &Tensor) -> (Tensor, Tensor, Tensor) {
         let cfg = &self.cfg;
@@ -500,6 +600,68 @@ impl LocalCompute for NativeCompute {
             MlpWeights::Sharded { w1, w2 } => (&w1[layer], &w2[layer]),
         };
         let mut mid = Self::dense(x_norm, w1);
+        for v in mid.data_mut().iter_mut() {
+            *v = gelu(*v);
+        }
+        Self::dense(&mid, w2)
+    }
+
+    fn qkv_rows(&self, layer: usize, hs: &Tensor) -> (Tensor, Tensor, Tensor) {
+        // one genuine M-row GEMM (the fat-GEMM regime of the prefill
+        // path), bitwise-equal per row to the M = 1 projection because
+        // the shared inner loop computes each output row independently
+        let cfg = &self.cfg;
+        let m = hs.dims()[0];
+        assert_eq!(hs.dims(), &[m, cfg.d_model]);
+        let x = rmsnorm_rows(hs);
+        let hd = cfg.head_dim;
+        let (fused, nh) = match &self.attn {
+            AttnWeights::Replicated => {
+                (Self::dense(&x, &self.weights.layers[layer].wqkv), cfg.n_heads)
+            }
+            AttnWeights::HeadSharded { wqkv, heads, .. } => {
+                (Self::dense(&x, &wqkv[layer]), *heads)
+            }
+        };
+        // split [m, 3 * nh * hd] into position-major [m * nh, hd] q/k/v
+        let split = |off: usize| {
+            let mut t = Tensor::zeros(&[m * nh, hd]);
+            for i in 0..m {
+                for head in 0..nh {
+                    for j in 0..hd {
+                        t.set2(i * nh + head, j, fused.at2(i, off + head * hd + j));
+                    }
+                }
+            }
+            t
+        };
+        (split(0), split(nh * hd), split(2 * nh * hd))
+    }
+
+    fn attn_out_partial_rows(&self, layer: usize, attn_rows: &Tensor, m: usize) -> Tensor {
+        let cfg = &self.cfg;
+        let (wo, nh) = match &self.attn {
+            AttnWeights::Replicated => (&self.weights.layers[layer].wo, cfg.n_heads),
+            AttnWeights::HeadSharded { wo, heads, .. } => (&wo[layer], *heads),
+        };
+        // position-major [m * nh, hd] flattens to [m, nh * hd] row-major
+        // without any data movement — each position's heads are already
+        // contiguous — so the whole chunk is one M-row GEMM against the
+        // Wo row slice
+        assert_eq!(attn_rows.dims(), &[m * nh, cfg.head_dim], "attention chunk layout");
+        let flat = Tensor::from_vec(&[m, nh * cfg.head_dim], attn_rows.data().to_vec());
+        Self::dense(&flat, wo)
+    }
+
+    fn mlp_partial_rows(&self, layer: usize, x_rows: &Tensor) -> Tensor {
+        let (w1, w2) = match &self.mlp {
+            MlpWeights::Replicated => {
+                let lw = &self.weights.layers[layer];
+                (&lw.w1, &lw.w2)
+            }
+            MlpWeights::Sharded { w1, w2 } => (&w1[layer], &w2[layer]),
+        };
+        let mut mid = Self::dense(x_rows, w1);
         for v in mid.data_mut().iter_mut() {
             *v = gelu(*v);
         }
@@ -605,6 +767,46 @@ impl KvShard {
         }
         Some(flash_decode_partial(q, &k, &v, self.heads, len, self.kv_block))
     }
+
+    /// Causal attention for the `m` most recently appended positions of
+    /// `layer` — the batched-prefill attention stage of the head-sharded
+    /// TP path, entirely local to this rank's head shard.
+    ///
+    /// `q_rows` is `[m * self.heads(), head_dim]` position-major (the
+    /// layout [`LocalCompute::qkv_rows`] returns); all `m` positions'
+    /// K/V must already be appended. Position `i` attends over the cache
+    /// prefix `0..len-m+i+1` (everything before the chunk plus itself and
+    /// its chunk predecessors — exactly what the token-by-token decode
+    /// path would have seen), using the same blocked online-softmax math
+    /// through the *strided* kernel
+    /// ([`flash_decode_partial_strided`]), which reads each causal
+    /// prefix straight out of the cache storage — no per-position prefix
+    /// copies — and is bitwise-equal to `m` sequential
+    /// [`KvShard::partial`] + combine steps. Returns the normalized
+    /// attention outputs `[m * heads, dim]`, position-major.
+    pub fn prefill_attention(&self, layer: usize, q_rows: &Tensor, m: usize) -> Tensor {
+        let (nh, hd, cap) = (self.heads, self.head_dim, self.cap);
+        assert_eq!(q_rows.dims(), &[m * nh, hd], "prefill query layout");
+        let len = self.len(layer);
+        assert!(m >= 1 && m <= len, "prefill chunk of {m} rows in a cache of {len}");
+        let base = len - m;
+        let (k, v, _) = &self.layers[layer];
+        let mut out = Tensor::zeros(&[m * nh, hd]);
+        for i in 0..m {
+            let q = q_rows.rows(i * nh, (i + 1) * nh);
+            let p =
+                flash_decode_partial_strided(&q, k, v, nh, base + i + 1, cap, self.kv_block);
+            let mut comb = OnlineCombiner::new(nh, hd);
+            comb.add(&p);
+            let attn = comb.finish();
+            for h in 0..nh {
+                for j in 0..hd {
+                    out.set2(i * nh + h, j, attn.at2(h, j));
+                }
+            }
+        }
+        out
+    }
 }
 
 /// Single-process reference decoder (world = 1 semantics): the oracle the
@@ -644,6 +846,34 @@ impl<C: LocalCompute> ReferenceDecoder<C> {
         self.tokens += 1;
         h
     }
+
+    /// Prefill `rows` (`[m, d_model]`, one prompt-position embedding per
+    /// row) token by token — the single-process oracle for the batched
+    /// prefill path. Causality is implicit: position `i` is stepped after
+    /// positions `0..i` are cached, so it attends exactly over its
+    /// prefix. Returns the hidden state after the last prompt position.
+    pub fn prefill(&mut self, rows: &Tensor) -> Tensor {
+        let m = rows.dims()[0];
+        assert!(m >= 1, "prefill needs at least one prompt row");
+        let mut h = self.step(&rows.rows(0, 1));
+        for i in 1..m {
+            h = self.step(&rows.rows(i, i + 1));
+        }
+        h
+    }
+
+    /// Run a whole request — prefill the prompt
+    /// ([`prompt_embeddings`]`(cfg, request_id, 0, prompt_len)`), then
+    /// chain `gen_len` decode steps — and return the final hidden state.
+    /// The oracle both serving paths are validated against.
+    pub fn run_request(&mut self, request_id: u64, prompt_len: usize, gen_len: usize) -> Tensor {
+        let rows = prompt_embeddings(&self.cfg, request_id, 0, prompt_len);
+        let mut h = self.prefill(&rows);
+        for _ in 0..gen_len {
+            h = self.step(&h);
+        }
+        h
+    }
 }
 
 /// Deterministic synthetic "embedding" for a token id (stands in for a
@@ -653,6 +883,20 @@ pub fn token_embedding(cfg: &TransformerConfig, token_id: u64) -> Tensor {
     let mut t = Tensor::rand(&[1, cfg.d_model], 0.5, &mut rng);
     t.quantize_f16();
     t
+}
+
+/// Embeddings for prompt positions `p0..p0 + m` of request `request_id`:
+/// an `[m, d_model]` matrix, one [`token_embedding`] row per position
+/// (position `p` maps to the synthetic token id `request_id << 32 | p`).
+/// Every prompt position has its own embedding — unlike generated tokens,
+/// whose "embedding" is the previous step's hidden state — which is what
+/// makes batched prefill possible: the M rows are independent inputs,
+/// coupled only through causal attention.
+pub fn prompt_embeddings(cfg: &TransformerConfig, request_id: u64, p0: usize, m: usize) -> Tensor {
+    let rows: Vec<Tensor> = (p0..p0 + m)
+        .map(|p| token_embedding(cfg, request_id.wrapping_shl(32).wrapping_add(p as u64)))
+        .collect();
+    Tensor::concat_rows(&rows)
 }
 
 #[cfg(test)]
@@ -673,6 +917,12 @@ mod tests {
         let mut bad = TransformerConfig::tiny(2);
         bad.max_seq = 0;
         assert!(bad.validate().is_err());
+        // the satellite fix: an M = 0 prefill geometry is rejected up
+        // front instead of silently degenerating to decode-only admission
+        let mut bad = TransformerConfig::tiny(2);
+        bad.prefill_chunk = 0;
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("prefill_chunk"), "{err}");
     }
 
     #[test]
@@ -920,6 +1170,142 @@ mod tests {
         assert_eq!(kv.len(0), 1);
         let partial = kv.partial(0, &q).expect("non-empty after append");
         assert_eq!(partial.o.dims(), &[0, cfg.head_dim]);
+    }
+
+    #[test]
+    fn batched_qkv_rows_bitwise_equal_per_row_qkv() {
+        // the prefill tentpole's correctness keystone: the M-row fused
+        // QKV GEMM must reproduce the M = 1 projections bit for bit (the
+        // shared inner loop computes each output row independently), for
+        // replicated and head-sharded backends, even and ragged heads
+        for cfg in [TransformerConfig::tiny(3), TransformerConfig::tiny_ragged(4)] {
+            let w = TransformerWeights::random(&cfg, 21);
+            let m = 5;
+            let rows = prompt_embeddings(&cfg, 3, 0, m);
+            for rank in 0..cfg.world {
+                let nc = NativeCompute::new_tp(cfg.clone(), w.clone(), rank);
+                let nh = cfg.head_partition()[rank].1;
+                let (q, k, v) = nc.qkv_rows(0, &rows);
+                assert_eq!(q.dims(), &[m * nh, cfg.head_dim]);
+                for i in 0..m {
+                    let (qi, ki, vi) = nc.qkv(0, &rows.rows(i, i + 1));
+                    assert_eq!(q.rows(i * nh, (i + 1) * nh), qi, "rank {rank} pos {i} q");
+                    assert_eq!(k.rows(i * nh, (i + 1) * nh), ki, "rank {rank} pos {i} k");
+                    assert_eq!(v.rows(i * nh, (i + 1) * nh), vi, "rank {rank} pos {i} v");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_partials_bitwise_equal_per_row_partials() {
+        // M-row Wo and MLP partials == their row-by-row counterparts
+        let cfg = TransformerConfig::tiny_ragged(2);
+        let w = TransformerWeights::random(&cfg, 22);
+        let m = 4;
+        for rank in 0..cfg.world {
+            let nc = NativeCompute::new_tp(cfg.clone(), w.clone(), rank);
+            let nh = cfg.head_partition()[rank].1;
+            let attn_rows = Tensor::rand(&[m * nh, cfg.head_dim], 0.5, &mut Prng::new(9));
+            let batched = nc.attn_out_partial_rows(0, &attn_rows, m);
+            assert_eq!(batched.dims(), &[m, cfg.d_model]);
+            for i in 0..m {
+                let single = nc.attn_out_partial(0, &attn_rows.rows(i * nh, (i + 1) * nh));
+                assert_eq!(batched.rows(i, i + 1), single, "rank {rank} pos {i} wo");
+            }
+            let x = rmsnorm_rows(&prompt_embeddings(&cfg, 5, 0, m));
+            let mlp = nc.mlp_partial_rows(0, &x);
+            for i in 0..m {
+                let single = nc.mlp_partial(0, &x.rows(i, i + 1));
+                assert_eq!(mlp.rows(i, i + 1), single, "rank {rank} pos {i} mlp");
+            }
+        }
+    }
+
+    #[test]
+    fn rmsnorm_rows_bitwise_equal_per_row_rmsnorm() {
+        let cfg = TransformerConfig::tiny_ragged(1);
+        let rows = prompt_embeddings(&cfg, 7, 0, 3);
+        let batched = rmsnorm_rows(&rows);
+        for i in 0..3 {
+            assert_eq!(batched.rows(i, i + 1), rmsnorm(&rows.rows(i, i + 1)), "row {i}");
+        }
+    }
+
+    #[test]
+    fn prefill_attention_bitwise_equal_sequential_decode_attention() {
+        // causal batched attention over the head shard == appending and
+        // attending token by token, including a non-empty cache base
+        // (second chunk of a chunked prompt) and an empty head shard
+        let cfg = TransformerConfig::tiny_ragged(4); // 3 heads on 4 ranks
+        let w = TransformerWeights::random(&cfg, 23);
+        for rank in [0usize, 3] {
+            let nc = NativeCompute::new_tp(cfg.clone(), w.clone(), rank);
+            let nh = cfg.head_partition()[rank].1;
+            let mut batched = KvShard::for_heads(&cfg, nh);
+            let mut sequential = KvShard::for_heads(&cfg, nh);
+            let mut seq_outs: Vec<Tensor> = Vec::new();
+            let (m0, m1) = (3usize, 2usize); // two ragged chunks
+            let rows = prompt_embeddings(&cfg, 1, 0, m0 + m1);
+            // sequential oracle: one decode-style step per position
+            for i in 0..m0 + m1 {
+                let (q, k, v) = nc.qkv(0, &rows.rows(i, i + 1));
+                sequential.append(0, &k, &v);
+                let p = sequential.partial(0, &q).expect("non-empty");
+                let mut comb = OnlineCombiner::new(nh, cfg.head_dim);
+                comb.add(&p);
+                seq_outs.push(comb.finish());
+            }
+            // batched path: two chunks through prefill_attention
+            for (p0, m) in [(0usize, m0), (m0, m1)] {
+                let (q, k, v) = nc.qkv_rows(0, &rows.rows(p0, p0 + m));
+                for i in 0..m {
+                    batched.append(0, &k.rows(i * nh, (i + 1) * nh), &v.rows(i * nh, (i + 1) * nh));
+                }
+                let attn = batched.prefill_attention(0, &q, m);
+                for i in 0..m {
+                    assert_eq!(
+                        attn.rows(i * nh, (i + 1) * nh),
+                        seq_outs[p0 + i],
+                        "rank {rank} pos {}",
+                        p0 + i
+                    );
+                }
+            }
+            // and the caches themselves are identical afterwards
+            assert_eq!(batched.valid_kv(0), sequential.valid_kv(0), "rank {rank} cache");
+        }
+    }
+
+    #[test]
+    fn reference_prefill_equals_sequential_steps() {
+        let cfg = TransformerConfig::tiny(1);
+        let w = TransformerWeights::random(&cfg, 24);
+        let rows = prompt_embeddings(&cfg, 2, 0, 4);
+        let mut a = ReferenceDecoder::new(cfg.clone(), NativeCompute::new(cfg.clone(), w.clone()));
+        let got = a.prefill(&rows);
+        let mut b = ReferenceDecoder::new(cfg.clone(), NativeCompute::new(cfg.clone(), w));
+        let mut h = b.step(&rows.rows(0, 1));
+        for i in 1..4 {
+            h = b.step(&rows.rows(i, i + 1));
+        }
+        assert_eq!(got, h);
+        assert_eq!(a.tokens(), 4);
+    }
+
+    #[test]
+    fn prompt_embeddings_are_per_position_and_deterministic() {
+        let cfg = TransformerConfig::tiny(1);
+        let a = prompt_embeddings(&cfg, 1, 0, 3);
+        let b = prompt_embeddings(&cfg, 1, 0, 3);
+        assert_eq!(a, b);
+        assert_eq!(a.dims(), &[3, cfg.d_model]);
+        // rows differ across positions and across requests
+        assert!(a.rows(0, 1).max_abs_diff(&a.rows(1, 2)) > 1e-3);
+        let other = prompt_embeddings(&cfg, 2, 0, 1);
+        assert!(a.rows(0, 1).max_abs_diff(&other) > 1e-3);
+        // a suffix slice matches the offset construction
+        assert_eq!(prompt_embeddings(&cfg, 1, 1, 2), a.rows(1, 3));
     }
 
     #[test]

@@ -9,8 +9,16 @@ use std::time::Duration;
 
 use taxfree::collectives;
 use taxfree::iris::{run_node, run_node_with_timeout, HeapBuilder, IrisError};
-use taxfree::serve::{fused_allreduce_exchange, ATTN_EXCHANGE};
+use taxfree::serve::{
+    build_serve_heap, collect_node_outcomes, fused_allreduce_exchange, prefill_step_fused,
+    ATTN_EXCHANGE,
+};
+use taxfree::tensor::Tensor;
 use taxfree::util::partition;
+use taxfree::workloads::transformer::{
+    prompt_embeddings, KvShard, LocalCompute, NativeCompute, TransformerConfig,
+    TransformerWeights,
+};
 
 #[test]
 fn dead_producer_hits_timeout_not_hang() {
@@ -203,6 +211,85 @@ fn missized_buffer_in_attention_exchange_reports_typed() {
             }
             other => panic!("expected OutOfBounds, got {other:?}"),
         }
+    }
+}
+
+/// A [`LocalCompute`] that delegates to a real TP shard but, when
+/// poisoned, emits a mis-shaped Wo partial — the stand-in for a rank
+/// whose compute goes wrong mid-prefill.
+struct PoisonedWo {
+    inner: NativeCompute,
+    poisoned: bool,
+}
+
+impl LocalCompute for PoisonedWo {
+    fn qkv(&self, layer: usize, h: &Tensor) -> (Tensor, Tensor, Tensor) {
+        self.inner.qkv(layer, h)
+    }
+
+    fn n_layers(&self) -> usize {
+        self.inner.n_layers()
+    }
+
+    fn tp_sharded(&self) -> bool {
+        self.inner.tp_sharded()
+    }
+
+    fn attn_sharded(&self) -> bool {
+        self.inner.attn_sharded()
+    }
+
+    fn attn_out_partial(&self, layer: usize, attn_out: &Tensor) -> Tensor {
+        let p = self.inner.attn_out_partial(layer, attn_out);
+        if self.poisoned {
+            // one extra column: the exchange's partition no longer covers
+            // the contribution, tripping its typed validation
+            Tensor::zeros(&[1, p.dims()[1] + 1])
+        } else {
+            p
+        }
+    }
+
+    fn mlp_partial(&self, layer: usize, x_norm: &Tensor) -> Tensor {
+        self.inner.mlp_partial(layer, x_norm)
+    }
+}
+
+#[test]
+fn rank_dying_mid_prefill_surfaces_root_cause_not_peer_timeout() {
+    // a rank that fails mid-prefill (here: a mis-shaped Wo partial caught
+    // by the exchange's validation, before it signals anything) must
+    // surface its structured root cause; its peers, stuck waiting on the
+    // dead rank's scatter flags, report only secondary timeouts — and
+    // the node-level outcome policy must prefer the root cause
+    let cfg = TransformerConfig::tiny(3);
+    let heap = build_serve_heap(&cfg);
+    let cfg2 = cfg.clone();
+    let outcomes = run_node_with_timeout(heap, Duration::from_millis(200), move |ctx| {
+        let rank = ctx.rank();
+        let inner =
+            NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, 3), rank);
+        let compute = PoisonedWo { inner, poisoned: rank == 1 };
+        let mut shard = KvShard::for_heads(&cfg2, cfg2.head_partition()[rank].1);
+        let mut round = 0u64;
+        let rows = prompt_embeddings(&cfg2, 0, 0, 3);
+        prefill_step_fused(&ctx, &cfg2, &compute, &mut shard, &rows, &mut round).map(|_| ())
+    });
+    match &outcomes[1] {
+        Err(IrisError::InvalidLayout(msg)) => assert!(msg.contains("covers"), "{msg}"),
+        other => panic!("expected the root-cause InvalidLayout on rank 1, got {other:?}"),
+    }
+    for rank in [0usize, 2] {
+        match &outcomes[rank] {
+            Err(IrisError::Timeout(t)) => {
+                assert_eq!(t.idx, 1, "rank {rank} waits on the dead rank's flag")
+            }
+            other => panic!("expected a secondary Timeout on rank {rank}, got {other:?}"),
+        }
+    }
+    match collect_node_outcomes(outcomes) {
+        Err(IrisError::InvalidLayout(msg)) => assert!(msg.contains("covers"), "{msg}"),
+        other => panic!("node outcome must be the root cause, got {other:?}"),
     }
 }
 

@@ -5,7 +5,8 @@
 use taxfree::config::presets;
 use taxfree::coordinator::FlashDecodeStrategy;
 use taxfree::experiments;
-use taxfree::serve::{serve, RequestQueue};
+use taxfree::iris::IrisError;
+use taxfree::serve::{serve, Request, RequestQueue};
 use taxfree::workloads::flash_decode as fd_sim;
 use taxfree::workloads::transformer::{NativeCompute, TransformerConfig, TransformerWeights};
 
@@ -15,6 +16,14 @@ fn native_factory(
 ) -> impl Fn(usize) -> NativeCompute + Send + Sync + 'static {
     let cfg = cfg.clone();
     move |_| NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed))
+}
+
+fn tp_factory(
+    cfg: &TransformerConfig,
+    seed: u64,
+) -> impl Fn(usize) -> NativeCompute + Send + Sync + 'static {
+    let cfg = cfg.clone();
+    move |rank| NativeCompute::new_tp(cfg.clone(), TransformerWeights::random(&cfg, seed), rank)
 }
 
 #[test]
@@ -60,9 +69,56 @@ fn kv_capacity_is_respected_under_max_length_requests() {
     let cfg = TransformerConfig::tiny(2); // max_seq 64 => 32/shard
     let mut q = RequestQueue::new();
     // total tokens exactly max_seq
-    q.submit(32, 32);
+    q.submit(32, 32).unwrap();
     let report = serve(&cfg, q.drain_batch(1), native_factory(&cfg, 7)).expect("serve");
     assert_eq!(report.total_tokens, 64);
+}
+
+#[test]
+fn tp_prefill_under_load_all_complete() {
+    // batched prefill under load: prompts shorter, equal to, and longer
+    // than the prefill chunk (4), head-sharded TP backend with a ragged
+    // head partition — every request completes with the right counts
+    let cfg = TransformerConfig::tiny(3); // 4 heads on 3 ranks
+    let mut q = RequestQueue::new();
+    q.fill_synthetic(9, (1, 13), (1, 4), 29);
+    let requests = q.drain_batch(9);
+    let expected: usize = requests.iter().map(|r| r.total_tokens()).sum();
+    let report = serve(&cfg, requests, tp_factory(&cfg, 12)).expect("serve");
+    assert_eq!(report.results.len(), 9);
+    assert_eq!(report.total_tokens, expected);
+}
+
+#[test]
+fn over_long_prompt_rejected_before_any_engine_runs() {
+    // prefill admission: a prompt that cannot fit any KV layout is a
+    // typed error raised before any engine thread spawns — proven by a
+    // factory that would panic if it were ever invoked, i.e. before any
+    // flag traffic can happen
+    let cfg = TransformerConfig::tiny(2); // max_seq 64
+    let reqs = vec![Request { id: 0, prompt_len: 65, gen_len: 0 }];
+    let out = serve(&cfg, reqs, |_rank| -> NativeCompute {
+        panic!("factory must not run: validation precedes engine spawn")
+    });
+    match out {
+        Err(IrisError::InvalidLayout(msg)) => assert!(msg.contains("max_seq"), "{msg}"),
+        other => panic!("expected InvalidLayout, got {other:?}"),
+    }
+}
+
+#[test]
+fn empty_prompt_rejected_before_any_engine_runs() {
+    // the M = 0 satellite at the serve boundary: typed rejection, no
+    // engine ever constructed
+    let cfg = TransformerConfig::tiny(2);
+    let reqs = vec![Request { id: 0, prompt_len: 0, gen_len: 3 }];
+    let out = serve(&cfg, reqs, |_rank| -> NativeCompute {
+        panic!("factory must not run: validation precedes engine spawn")
+    });
+    match out {
+        Err(IrisError::InvalidLayout(msg)) => assert!(msg.contains("empty prompt"), "{msg}"),
+        other => panic!("expected InvalidLayout, got {other:?}"),
+    }
 }
 
 #[test]

@@ -8,14 +8,16 @@ use taxfree::config::{AgGemmConfig, FlashDecodeConfig, GemmRsConfig};
 use taxfree::coordinator::{
     ag_gemm, flash_decode, gemm_rs, AgGemmStrategy, FlashDecodeStrategy, GemmRsStrategy,
 };
+use taxfree::iris::run_node;
 use taxfree::serve::continuous::serve_continuous;
-use taxfree::serve::Request;
+use taxfree::serve::{build_serve_heap, prefill_step_fused, Request};
 use taxfree::tensor::linalg::{decode_attention_ref, matmul};
 use taxfree::tensor::Tensor;
 use taxfree::util::propcheck::{check_no_shrink, Config, Verdict};
 use taxfree::util::Prng;
 use taxfree::workloads::transformer::{
-    token_embedding, NativeCompute, ReferenceDecoder, TransformerConfig, TransformerWeights,
+    prompt_embeddings, rmsnorm_rows, KvShard, LocalCompute, NativeCompute, ReferenceDecoder,
+    TransformerConfig, TransformerWeights,
 };
 
 /// Random valid AG+GEMM config: world in 1..=6, block-aligned dims.
@@ -269,14 +271,169 @@ fn tp_attention_matches_replicated_reference() {
                     cfg.clone(),
                     NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
                 );
-                let mut h = token_embedding(&cfg, req.id as u64);
-                for _ in 0..req.total_tokens() {
-                    h = dec.step(&h);
-                }
+                let h = dec.run_request(req.id as u64, req.prompt_len, req.gen_len);
                 let got = report.results.iter().find(|r| r.id == req.id).expect("result");
                 got.final_hidden.assert_allclose(&h, 1e-3, 1e-3);
             }
         }
+    }
+}
+
+/// Per-rank prefill observation: every chunk's `[m, d_model]` layer
+/// output plus the final per-layer KV cache contents.
+type PrefillTrace = (Vec<Tensor>, Vec<(Tensor, Tensor, usize)>);
+
+/// Run the *functional* fused prefill on a real node: every rank prefills
+/// `prompt_len` prompt rows in `cfg.prefill_chunk`-row chunks through
+/// [`prefill_step_fused`] and reports its trace.
+fn run_fused_prefill(cfg: &TransformerConfig, seed: u64, prompt_len: usize) -> Vec<PrefillTrace> {
+    let heap = build_serve_heap(cfg);
+    let cfg2 = cfg.clone();
+    run_node(heap, move |ctx| {
+        let rank = ctx.rank();
+        let compute =
+            NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, seed), rank);
+        let mut shard = KvShard::for_heads(&cfg2, cfg2.head_partition()[rank].1);
+        let mut round = 0u64;
+        let mut outs = Vec::new();
+        let mut p0 = 0;
+        while p0 < prompt_len {
+            let m = (prompt_len - p0).min(cfg2.prefill_chunk);
+            let rows = prompt_embeddings(&cfg2, 9, p0, m);
+            outs.push(
+                prefill_step_fused(&ctx, &cfg2, &compute, &mut shard, &rows, &mut round)
+                    .expect("prefill chunk"),
+            );
+            p0 += m;
+        }
+        let kv = (0..cfg2.n_layers).map(|l| shard.valid_kv(l)).collect::<Vec<_>>();
+        (outs, kv)
+    })
+}
+
+/// Single-threaded BSP AG→GEMM reference of the same prefill: identical
+/// sharded computes and chunking, but every exchange replaced by an
+/// in-order all-reduce (zero-initialized accumulator folded in canonical
+/// source order — the exact association the fused exchange uses, so the
+/// two must agree **bitwise**).
+fn bsp_prefill_reference(
+    cfg: &TransformerConfig,
+    seed: u64,
+    prompt_len: usize,
+) -> (Vec<Tensor>, Vec<Vec<(Tensor, Tensor, usize)>>) {
+    let w = cfg.world;
+    let computes: Vec<NativeCompute> = (0..w)
+        .map(|r| NativeCompute::new_tp(cfg.clone(), TransformerWeights::random(cfg, seed), r))
+        .collect();
+    let mut shards: Vec<KvShard> =
+        (0..w).map(|r| KvShard::for_heads(cfg, cfg.head_partition()[r].1)).collect();
+    let mut outs = Vec::new();
+    let mut p0 = 0;
+    while p0 < prompt_len {
+        let m = (prompt_len - p0).min(cfg.prefill_chunk);
+        let mut h = prompt_embeddings(cfg, 9, p0, m);
+        for layer in 0..cfg.n_layers {
+            let mut partials = Vec::with_capacity(w);
+            for r in 0..w {
+                let (q, k, v) = computes[r].qkv_rows(layer, &h);
+                let nh = shards[r].heads();
+                for i in 0..m {
+                    shards[r].append(
+                        layer,
+                        &k.rows(i * nh, (i + 1) * nh),
+                        &v.rows(i * nh, (i + 1) * nh),
+                    );
+                }
+                let attn = shards[r].prefill_attention(layer, &q, m);
+                partials.push(computes[r].attn_out_partial_rows(layer, &attn, m));
+            }
+            let mut proj = vec![0.0f32; m * cfg.d_model];
+            for p in &partials {
+                for (a, b) in proj.iter_mut().zip(p.data()) {
+                    *a += b;
+                }
+            }
+            let mut h1 = h.clone();
+            for (a, b) in h1.data_mut().iter_mut().zip(&proj) {
+                *a += b;
+            }
+            let x = rmsnorm_rows(&h1);
+            let mlp = if computes[0].tp_sharded() {
+                let mut acc = vec![0.0f32; m * cfg.d_model];
+                for c in &computes {
+                    let p = c.mlp_partial_rows(layer, &x);
+                    for (a, b) in acc.iter_mut().zip(p.data()) {
+                        *a += b;
+                    }
+                }
+                acc
+            } else {
+                computes[0].mlp_partial_rows(layer, &x).data().to_vec()
+            };
+            let mut out = h1;
+            for (a, b) in out.data_mut().iter_mut().zip(&mlp) {
+                *a += b;
+            }
+            h = out;
+        }
+        outs.push(h);
+        p0 += m;
+    }
+    let kv = shards
+        .iter()
+        .map(|s| (0..cfg.n_layers).map(|l| s.valid_kv(l)).collect())
+        .collect();
+    (outs, kv)
+}
+
+#[test]
+fn fused_prefill_bitwise_equals_bsp_reference() {
+    // the PR's acceptance criterion: the fused batched prefill's layer
+    // outputs AND its post-prefill KV cache must equal the replicated
+    // BSP AG->GEMM reference bit for bit — for world ∈ {1, 2, 4, 5}
+    // (world 4 and 5 exceed tiny_ragged's 3 heads: empty shards), for an
+    // even and a ragged geometry, and for two ragged prompt lengths
+    // (chunked as 4+1 / 4+3 and 3+2 / 3+3+1 respectively)
+    let seed = 777;
+    for world in [1usize, 2, 4, 5] {
+        for cfg in [TransformerConfig::tiny(world), TransformerConfig::tiny_ragged(world)] {
+            for prompt_len in [5usize, 7] {
+                let (ref_outs, ref_kv) = bsp_prefill_reference(&cfg, seed, prompt_len);
+                let got = run_fused_prefill(&cfg, seed, prompt_len);
+                assert_eq!(got.len(), world);
+                for (rank, (outs, kv)) in got.iter().enumerate() {
+                    assert_eq!(
+                        outs, &ref_outs,
+                        "world {world} M {prompt_len} rank {rank}: chunk outputs"
+                    );
+                    assert_eq!(
+                        kv, &ref_kv[rank],
+                        "world {world} M {prompt_len} rank {rank}: KV cache"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_prefill_matches_token_by_token_oracle() {
+    // semantic anchor for the bitwise test above: the last prefill row
+    // must also equal the single-process token-by-token decoder within
+    // float tolerance (ties the batched math to the actual model)
+    let seed = 778;
+    let cfg = TransformerConfig::tiny_ragged(3);
+    let prompt_len = 7;
+    let got = run_fused_prefill(&cfg, seed, prompt_len);
+    let mut dec = ReferenceDecoder::new(
+        cfg.clone(),
+        NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
+    );
+    let expect = dec.prefill(&prompt_embeddings(&cfg, 9, 0, prompt_len));
+    for (outs, _) in &got {
+        let last = outs.last().expect("at least one chunk");
+        let m = last.dims()[0];
+        last.rows(m - 1, m).assert_allclose(&expect, 1e-3, 1e-3);
     }
 }
 
