@@ -1,0 +1,78 @@
+//! Bench: the batched-decode figure (BSP / per-sequence fused / batch
+//! fused per scheduler step) on the calibrated model, plus wall-clock
+//! throughput of the *functional* continuous-batching node on
+//! decode-heavy traffic — how much fusing all active sequences into one
+//! M-row pass per layer compresses the schedule vs advancing them one
+//! fused pass per sequence. criterion is unavailable offline; this is a
+//! `harness = false` bench reporting through the crate's own
+//! Summary/Table.
+//!
+//! Run: `cargo bench --offline --bench batch_decode`
+
+use taxfree::clock::measure;
+use taxfree::config::presets;
+use taxfree::experiments::ext_batch_decode;
+use taxfree::serve::continuous::serve_continuous;
+use taxfree::serve::Request;
+use taxfree::util::{Summary, Table};
+use taxfree::workloads::transformer::{NativeCompute, TransformerConfig, TransformerWeights};
+
+fn main() {
+    let hw = presets::mi300x();
+    let seed = 7;
+
+    // the modeled figure (one Llama-70B-class layer per scheduler step)
+    let rows = ext_batch_decode::sweep(&hw, seed, 50);
+    ext_batch_decode::render(&rows, &hw).print();
+    let worst = rows.iter().map(|r| r.per_seq_rounds).max().unwrap_or(0);
+    println!(
+        "\nbatched exchange rounds: {} per step at every A (per-seq path pays up to {worst})",
+        rows.first().map(|r| r.batch_rounds).unwrap_or(0)
+    );
+
+    // functional: wall-clock of the real continuous-batching node on
+    // decode-heavy traffic (prompt 1, long generations), head-sharded TP
+    // backend — max_active 1 forces one fused pass per sequence; a full
+    // slot set runs one batched M-row pass per layer per step
+    let mut t = Table::new("functional continuous serve (tiny model, decode-heavy)").header(vec![
+        "world",
+        "max_active",
+        "tokens",
+        "sched steps",
+        "tok/s",
+    ]);
+    for world in [2usize, 4] {
+        let cfg = TransformerConfig::tiny(world); // decode_batch = 3
+        for max_active in [1usize, 3] {
+            let reqs: Vec<Request> =
+                (0..6).map(|id| Request { id, prompt_len: 1, gen_len: 15 }).collect();
+            let cfg2 = cfg.clone();
+            let report = serve_continuous(&cfg, reqs, max_active, move |rank| {
+                NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, 42), rank)
+            })
+            .expect("TP continuous serve");
+            t.row(vec![
+                world.to_string(),
+                max_active.to_string(),
+                report.total_tokens.to_string(),
+                report.total_steps.to_string(),
+                format!("{:.0}", report.tokens_per_s()),
+            ]);
+        }
+    }
+    println!();
+    t.print();
+
+    // harness cost: how fast the DES regenerates the whole figure
+    let samples = measure(2, 10, || {
+        let r = ext_batch_decode::sweep(&hw, seed, 10);
+        assert_eq!(r.len(), ext_batch_decode::A_SWEEP.len());
+    });
+    let s = Summary::of(&samples);
+    println!(
+        "\nbench batch_decode: full figure ({} A points x 3 strategies x 10 iters) in {:.2} ms mean, {:.2} ms p99",
+        ext_batch_decode::A_SWEEP.len(),
+        s.mean / 1e6,
+        s.p99 / 1e6
+    );
+}

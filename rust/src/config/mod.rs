@@ -355,6 +355,123 @@ impl PrefillConfig {
     }
 }
 
+/// Batched multi-sequence decode workload parameters — the DES twin of
+/// one continuous-batching scheduler step with `a` active decode-phase
+/// sequences ([`crate::serve::decode_batch_fused`]). Per layer every
+/// sequence needs a column-parallel QKV projection, fully local attention
+/// over its own head-sharded KV cache, and the row-parallel Wo + TP-MLP
+/// partial sums across ranks. The three strategies differ in how often
+/// that cross-rank machinery runs: the BSP composition and the
+/// per-sequence fused pipeline pay their launches/barriers/exchange
+/// rounds once **per sequence**, the batch-fused pipeline stacks all `a`
+/// rows and pays them once **per step** — the launch/signal tax
+/// amortizes like `1/a`, and each weight matrix is streamed from HBM
+/// once instead of `a` times. `n_heads` need not divide by `world`
+/// (ragged head shards, empty shards for `world > n_heads`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchDecodeConfig {
+    /// Active decode-phase sequences in the scheduler step (the M of the
+    /// batched projections).
+    pub a: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    /// FFN hidden width of the TP MLP (ragged shard per rank allowed).
+    pub ffn_hidden: usize,
+    /// Transformer layers one step advances through.
+    pub n_layers: usize,
+    pub world: usize,
+    /// KV tokens each sequence's head shard attends over (the caches are
+    /// per-sequence, so attention streams `a * kv_len` tokens total in
+    /// every strategy — batching amortizes projections and exchanges,
+    /// never the KV read).
+    pub kv_len: usize,
+    /// Column-tile width of one fused push (the communication granularity
+    /// of the producer-consumer pipeline).
+    pub block_n: usize,
+}
+
+impl BatchDecodeConfig {
+    /// A Llama-70B-class layer at a given decode batch: 64 heads of 128
+    /// (d_model 8192), FFN 28672, 16K tokens of KV per sequence, on 8
+    /// ranks — the decode-side companion of
+    /// [`PrefillConfig::paper_prefill`].
+    pub fn paper_step(a: usize) -> BatchDecodeConfig {
+        BatchDecodeConfig {
+            a,
+            n_heads: 64,
+            head_dim: 128,
+            ffn_hidden: 28672,
+            n_layers: 1,
+            world: 8,
+            kv_len: 1 << 14,
+            block_n: 256,
+        }
+    }
+
+    /// Small configuration for tests: 5 heads and an FFN of 10 are ragged
+    /// over common world sizes; a = 3 is ragged over typical tile widths.
+    pub fn tiny(world: usize) -> BatchDecodeConfig {
+        BatchDecodeConfig {
+            a: 3,
+            n_heads: 5,
+            head_dim: 8,
+            ffn_hidden: 10,
+            n_layers: 2,
+            world,
+            kv_len: 64,
+            block_n: 8,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.world == 0 {
+            return Err("world must be >= 1".into());
+        }
+        if self.a == 0 {
+            return Err("a must be positive (an A = 0 decode step does nothing)".into());
+        }
+        if self.n_heads == 0 || self.head_dim == 0 || self.ffn_hidden == 0 || self.n_layers == 0 {
+            return Err("n_heads, head_dim, ffn_hidden, n_layers must be positive".into());
+        }
+        if self.kv_len == 0 {
+            return Err("kv_len must be positive".into());
+        }
+        if self.block_n == 0 {
+            return Err("block_n must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// The model width the exchanges span.
+    pub fn d_model(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// Head slice per rank (ragged; tails may be empty).
+    pub fn head_partition(&self) -> Vec<(usize, usize)> {
+        crate::util::partition(self.n_heads, self.world)
+    }
+
+    /// FFN column/row shard per rank (ragged allowed).
+    pub fn ffn_partition(&self) -> Vec<(usize, usize)> {
+        crate::util::partition(self.ffn_hidden, self.world)
+    }
+
+    /// Column partition of both exchanges' sums (who owns which reduced
+    /// segment).
+    pub fn d_model_partition(&self) -> Vec<(usize, usize)> {
+        crate::util::partition(self.d_model(), self.world)
+    }
+
+    /// Column tiles (col offset, width) of a scatter segment of `len`
+    /// columns — the same shared [`crate::util::seg_tiles`] geometry rule
+    /// as [`GemmRsConfig::seg_tiles`]. With `a` batched rows each tile is
+    /// an A-row block but still one push + one signal.
+    pub fn seg_tiles(&self, len: usize) -> Vec<(usize, usize)> {
+        crate::util::seg_tiles(len, self.block_n)
+    }
+}
+
 /// Flash-Decode workload parameters (paper §4.2 / §5.3, Figs. 10–11).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlashDecodeConfig {
@@ -554,7 +671,31 @@ mod tests {
             GemmRsConfig::tiny(w).validate().unwrap();
             TpAttnConfig::tiny(w).validate().unwrap();
             PrefillConfig::tiny(w).validate().unwrap();
+            BatchDecodeConfig::tiny(w).validate().unwrap();
         }
+    }
+
+    #[test]
+    fn batch_decode_partitions_cover_heads_ffn_and_width() {
+        for w in [1usize, 3, 4, 8] {
+            let cfg = BatchDecodeConfig::tiny(w); // 5 heads, ffn 10: ragged
+            cfg.validate().unwrap();
+            assert_eq!(cfg.d_model(), 40);
+            assert_eq!(cfg.head_partition().iter().map(|(_, l)| l).sum::<usize>(), 5);
+            assert_eq!(cfg.ffn_partition().iter().map(|(_, l)| l).sum::<usize>(), 10);
+            assert_eq!(
+                cfg.d_model_partition().iter().map(|(_, l)| l).sum::<usize>(),
+                cfg.d_model()
+            );
+        }
+        // world > n_heads: empty head shards are part of the layout
+        assert_eq!(BatchDecodeConfig::tiny(8).head_partition()[7].1, 0);
+        for a in [1usize, 8, 64] {
+            BatchDecodeConfig::paper_step(a).validate().unwrap();
+        }
+        let mut bad = BatchDecodeConfig::tiny(2);
+        bad.a = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

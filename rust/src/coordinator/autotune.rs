@@ -11,9 +11,9 @@
 //! search over the practical grid is feasible — no need for the
 //! heuristics a wall-clock tuner needs.
 
-use crate::config::{AgGemmConfig, FlashDecodeConfig, HwConfig};
-use crate::coordinator::{AgGemmStrategy, FlashDecodeStrategy};
-use crate::workloads::{ag_gemm, flash_decode};
+use crate::config::{AgGemmConfig, FlashDecodeConfig, GemmRsConfig, HwConfig};
+use crate::coordinator::{AgGemmStrategy, FlashDecodeStrategy, GemmRsStrategy};
+use crate::workloads::{ag_gemm, flash_decode, gemm_rs};
 
 /// One evaluated AG+GEMM configuration.
 #[derive(Debug, Clone)]
@@ -45,6 +45,48 @@ pub fn tune_ag_gemm(
         }
     }
     assert!(!results.is_empty(), "no valid block_k for shard K = {shard_k}");
+    results.sort_by(|a, b| a.latency_s.partial_cmp(&b.latency_s).unwrap());
+    results
+}
+
+/// One evaluated GEMM+RS configuration.
+#[derive(Debug, Clone)]
+pub struct GemmRsTuneResult {
+    pub strategy: GemmRsStrategy,
+    pub block_n: usize,
+    pub latency_s: f64,
+}
+
+/// Tune the reduce direction (the mirror of [`tune_ag_gemm`]): strategy ×
+/// push-tile width (block_n — the communication granularity of the fused
+/// GEMM+ReduceScatter pipeline, which the serving path's Wo and TP-MLP
+/// exchanges both run). Unlike the all-gather side there is no shard
+/// divisibility constraint — the segment/tile geometry is ragged-safe
+/// ([`crate::util::seg_tiles`]) — so the grid is the standard widths
+/// below the widest scatter segment plus `seg_max` itself: the latter is
+/// the single-tile-per-segment schedule (one push + one signal per
+/// consumer), which exists for every shape and which all wider widths
+/// would merely duplicate. Returns all evaluated points sorted
+/// best-first.
+pub fn tune_gemm_rs(
+    base: &GemmRsConfig,
+    hw: &HwConfig,
+    seed: u64,
+    iters: usize,
+) -> Vec<GemmRsTuneResult> {
+    let seg_max = base.seg_max();
+    let mut widths: Vec<usize> =
+        [32usize, 64, 128, 256, 512].into_iter().filter(|&b| b < seg_max).collect();
+    widths.push(seg_max);
+    let mut results = Vec::new();
+    for strategy in GemmRsStrategy::ALL {
+        for &block_n in &widths {
+            let mut cfg = base.clone();
+            cfg.block_n = block_n;
+            let latency_s = gemm_rs::mean_latency_s(&cfg, hw, strategy, seed, iters);
+            results.push(GemmRsTuneResult { strategy, block_n, latency_s });
+        }
+    }
     results.sort_by(|a, b| a.latency_s.partial_cmp(&b.latency_s).unwrap());
     results
 }
@@ -86,6 +128,12 @@ pub fn best_ag_gemm(base: &AgGemmConfig, hw: &HwConfig, seed: u64) -> AgGemmTune
     tune_ag_gemm(base, hw, seed, 20).remove(0)
 }
 
+/// The tuner's top-line answer for the reduce direction: best strategy +
+/// push-tile width.
+pub fn best_gemm_rs(base: &GemmRsConfig, hw: &HwConfig, seed: u64) -> GemmRsTuneResult {
+    tune_gemm_rs(base, hw, seed, 20).remove(0)
+}
+
 /// The tuner's top-line answer for Flash Decode: best strategy + push
 /// granularity.
 pub fn best_flash_decode(base: &FlashDecodeConfig, hw: &HwConfig, seed: u64) -> FlashDecodeTuneResult {
@@ -111,6 +159,62 @@ mod tests {
         let hw = presets::mi325x();
         let mid = best_ag_gemm(&AgGemmConfig::paper_fig9(32), &hw, 1);
         assert_eq!(mid.strategy, AgGemmStrategy::BaselineBsp, "{mid:?}");
+    }
+
+    #[test]
+    fn gemm_rs_tuner_picks_fused_at_decode_and_prefill_m() {
+        // the reduce direction (the serving path's Wo / TP-MLP exchange):
+        // at M=1 the BSP composition drowns in launches + barrier skew,
+        // at fat M it pays the HBM staging of a huge partial — the fused
+        // pipeline must win both regimes (the torch window [8, 64] is
+        // where the vendor bonus makes the race interesting; the tuner
+        // exists precisely because no single point answers it)
+        let hw = presets::mi325x();
+        for m in [1usize, 4096] {
+            let best = best_gemm_rs(&GemmRsConfig::paper_down_proj(m), &hw, 1);
+            assert_eq!(best.strategy, GemmRsStrategy::FusedTiles, "M={m} {best:?}");
+        }
+    }
+
+    #[test]
+    fn gemm_rs_grid_is_sorted_and_complete() {
+        let hw = presets::mi325x();
+        // paper shape: seg_max = 1024 => the 5 standard widths plus the
+        // single-tile width 1024, per strategy => 2 x 6
+        let rs = tune_gemm_rs(&GemmRsConfig::paper_down_proj(512), &hw, 3, 5);
+        assert_eq!(rs.len(), 12);
+        assert!(rs.iter().filter(|r| r.block_n == 1024).count() == 2, "single-tile point");
+        for w in rs.windows(2) {
+            assert!(w[0].latency_s <= w[1].latency_s);
+        }
+        // tiny ragged shape (seg_max = 3): the single-tile width is the
+        // whole grid — no duplicate degenerate points
+        let rs = tune_gemm_rs(&GemmRsConfig::tiny(4), &hw, 3, 5);
+        assert_eq!(rs.len(), 2);
+        assert!(rs.iter().all(|r| r.block_n == 3));
+        // mid shape (seg_max = 40, between grid points): the single-tile
+        // schedule is still evaluated, not silently dropped
+        let mid = GemmRsConfig { m: 8, n: 320, k: 64, world: 8, block_n: 32 };
+        let rs = tune_gemm_rs(&mid, &hw, 3, 5);
+        assert_eq!(rs.len(), 4, "{{32, 40}} x 2 strategies");
+        assert!(rs.iter().any(|r| r.block_n == 40), "single-tile point priced");
+    }
+
+    #[test]
+    fn gemm_rs_block_n_changes_the_schedule_at_paper_shape() {
+        // granularity is a real axis, not a no-op: the evaluated fused
+        // points must not all collapse to one latency
+        let hw = presets::mi325x();
+        let rs = tune_gemm_rs(&GemmRsConfig::paper_down_proj(2048), &hw, 4, 10);
+        let fused: Vec<f64> = rs
+            .iter()
+            .filter(|r| r.strategy == GemmRsStrategy::FusedTiles)
+            .map(|r| r.latency_s)
+            .collect();
+        assert_eq!(fused.len(), 6);
+        let (min, max) =
+            fused.iter().fold((f64::MAX, 0.0f64), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+        assert!(max > min, "block_n grid collapsed to a single latency");
     }
 
     #[test]

@@ -1,0 +1,233 @@
+//! Extension figure: batched multi-sequence decode — one continuous-
+//! batching scheduler step with A active decode sequences, priced three
+//! ways: the BSP composition per sequence, the fused pipeline per
+//! sequence (the serving path before this PR), and one fused M-row pass
+//! per layer for the whole batch ([`crate::serve::decode_batch_fused`]).
+//! The headline is the amortization law: the batched path pays its
+//! kernel launches and exchange rounds once per step, so the
+//! launch/signal tax falls like `1/A` while the per-sequence paths pay
+//! it `A` times.
+//!
+//! This experiment also emits its rows as machine-readable JSON
+//! (`BENCH_batch_decode.json` by default) — the first perf-trajectory
+//! data point a CI run can diff across commits.
+
+use crate::config::{BatchDecodeConfig, HwConfig};
+use crate::util::Table;
+use crate::workloads::batch_decode::{self, BatchDecodeStrategy};
+
+/// One row of the batched-decode figure.
+#[derive(Debug, Clone)]
+pub struct BatchDecodeRow {
+    pub a: usize,
+    pub bsp_ms: f64,
+    pub per_seq_ms: f64,
+    pub batch_ms: f64,
+    /// batch-fused speedup over the per-sequence fused path (the gain of
+    /// THIS PR's tentpole; > 1 for every A > 1).
+    pub batch_vs_per_seq: f64,
+    /// batch-fused speedup over the BSP composition.
+    pub batch_vs_bsp: f64,
+    /// Kernel-launch tax (summed rank-microseconds) of one representative
+    /// simulated step per strategy — per-seq pays A× the batched tax.
+    pub per_seq_launch_us: f64,
+    pub batch_launch_us: f64,
+    /// Fused exchange rounds the step executed (per layer-pair: Wo + MLP).
+    pub per_seq_rounds: usize,
+    pub batch_rounds: usize,
+}
+
+/// The active-decode-batch sweep (1 = the paper's §5.3 batch=1 setting;
+/// beyond it the scheduler's fused batching regime).
+pub const A_SWEEP: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Run the sweep: one Llama-70B-class layer (64 heads × 128, FFN 28672,
+/// 16K KV per sequence, W=8) per scheduler step.
+pub fn sweep(hw: &HwConfig, seed: u64, iters: usize) -> Vec<BatchDecodeRow> {
+    A_SWEEP
+        .iter()
+        .map(|&a| {
+            let cfg = BatchDecodeConfig::paper_step(a);
+            let ms = |s| batch_decode::mean_latency_s(&cfg, hw, s, seed, iters) * 1e3;
+            let bsp_ms = ms(BatchDecodeStrategy::BaselineBsp);
+            let per_seq_ms = ms(BatchDecodeStrategy::PerSeqFused);
+            let batch_ms = ms(BatchDecodeStrategy::BatchFused);
+            let per_seq = batch_decode::simulate(&cfg, hw, BatchDecodeStrategy::PerSeqFused, seed);
+            let batch = batch_decode::simulate(&cfg, hw, BatchDecodeStrategy::BatchFused, seed);
+            BatchDecodeRow {
+                a,
+                bsp_ms,
+                per_seq_ms,
+                batch_ms,
+                batch_vs_per_seq: per_seq_ms / batch_ms,
+                batch_vs_bsp: bsp_ms / batch_ms,
+                per_seq_launch_us: per_seq.ledger.launch_s * 1e6,
+                batch_launch_us: batch.ledger.launch_s * 1e6,
+                per_seq_rounds: batch_decode::exchange_rounds(&per_seq, cfg.world),
+                batch_rounds: batch_decode::exchange_rounds(&batch, cfg.world),
+            }
+        })
+        .collect()
+}
+
+/// Render the figure as a table.
+pub fn render(rows: &[BatchDecodeRow], hw: &HwConfig) -> Table {
+    let mut t = Table::new(&format!(
+        "Batched decode — BSP / per-seq fused / batch fused per scheduler step \
+         (64 heads x 128, FFN 28672, 16K KV/seq, W=8, {})",
+        hw.name
+    ))
+    .header(vec![
+        "A",
+        "bsp ms",
+        "per-seq ms",
+        "batch ms",
+        "batch x per-seq",
+        "per-seq launch us",
+        "batch launch us",
+        "per-seq rounds",
+        "batch rounds",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.a.to_string(),
+            format!("{:.4}", r.bsp_ms),
+            format!("{:.4}", r.per_seq_ms),
+            format!("{:.4}", r.batch_ms),
+            format!("{:.3}", r.batch_vs_per_seq),
+            format!("{:.2}", r.per_seq_launch_us),
+            format!("{:.2}", r.batch_launch_us),
+            r.per_seq_rounds.to_string(),
+            r.batch_rounds.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Serialize the sweep as machine-readable JSON (hand-rolled — no serde
+/// offline; the format is flat and stable so CI can diff it across
+/// commits as a perf-trajectory point).
+pub fn to_json(rows: &[BatchDecodeRow], hw: &HwConfig, seed: u64, iters: usize) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"batch_decode\",\n");
+    s.push_str(&format!("  \"hw\": \"{}\",\n", hw.name));
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str(&format!("  \"iters\": {iters},\n"));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"a\": {}, \"bsp_ms\": {:.6}, \"per_seq_fused_ms\": {:.6}, \
+             \"batch_fused_ms\": {:.6}, \"batch_vs_per_seq\": {:.4}, \
+             \"batch_vs_bsp\": {:.4}, \"per_seq_launch_us\": {:.4}, \
+             \"batch_launch_us\": {:.4}, \"per_seq_exchange_rounds\": {}, \
+             \"batch_exchange_rounds\": {}}}{}",
+            r.a,
+            r.bsp_ms,
+            r.per_seq_ms,
+            r.batch_ms,
+            r.batch_vs_per_seq,
+            r.batch_vs_bsp,
+            r.per_seq_launch_us,
+            r.batch_launch_us,
+            r.per_seq_rounds,
+            r.batch_rounds,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Run and print the figure (the `experiments batch_decode` subcommand),
+/// writing the JSON point to `json_path` when given.
+pub fn run(hw: &HwConfig, seed: u64, iters: usize, json_path: Option<&str>) {
+    let rows = sweep(hw, seed, iters);
+    render(&rows, hw).print();
+    if let Some(path) = json_path {
+        match std::fs::write(path, to_json(&rows, hw, seed, iters)) {
+            Ok(()) => println!("wrote {path} (machine-readable perf point)"),
+            Err(e) => eprintln!("write {path}: {e}"),
+        }
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn batched_rounds_constant_and_per_seq_rounds_scale() {
+        // the acceptance criterion at figure scope: one exchange round
+        // per layer per step (×2 for Wo + MLP) regardless of A on the
+        // batched path; A× that on the per-sequence path
+        let rows = sweep(&presets::mi300x(), 1, 5);
+        assert_eq!(rows.len(), A_SWEEP.len());
+        for r in &rows {
+            assert_eq!(r.batch_rounds, 2, "A={}", r.a);
+            assert_eq!(r.per_seq_rounds, 2 * r.a, "A={}", r.a);
+        }
+    }
+
+    #[test]
+    fn launch_tax_falls_like_one_over_a() {
+        let rows = sweep(&presets::mi300x(), 2, 5);
+        for r in &rows {
+            let ratio = r.per_seq_launch_us / r.batch_launch_us;
+            assert!(
+                (ratio - r.a as f64).abs() < 1e-6,
+                "A={}: launch ratio {ratio} != A",
+                r.a
+            );
+        }
+        // and the batched tax itself is flat in A
+        for w in rows.windows(2) {
+            assert!((w[0].batch_launch_us - w[1].batch_launch_us).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn batch_fused_wins_for_every_a_above_one() {
+        let rows = sweep(&presets::mi300x(), 3, 10);
+        for r in rows.iter().filter(|r| r.a > 1) {
+            assert!(r.batch_vs_per_seq > 1.0, "A={}: {:.3}", r.a, r.batch_vs_per_seq);
+            assert!(r.batch_vs_bsp > 1.0, "A={}: {:.3}", r.a, r.batch_vs_bsp);
+        }
+    }
+
+    #[test]
+    fn json_point_is_well_formed_and_deterministic() {
+        let hw = presets::mi300x();
+        let rows = sweep(&hw, 4, 3);
+        let a = to_json(&rows, &hw, 4, 3);
+        let b = to_json(&sweep(&hw, 4, 3), &hw, 4, 3);
+        assert_eq!(a, b, "the perf point must be reproducible from (config, seed)");
+        // minimal structural checks without a JSON parser: balanced
+        // braces/brackets, one row object per sweep point, stable keys
+        assert_eq!(a.matches('{').count(), a.matches('}').count());
+        assert_eq!(a.matches('[').count(), a.matches(']').count());
+        assert_eq!(a.matches("\"a\":").count(), A_SWEEP.len());
+        for key in [
+            "\"bench\": \"batch_decode\"",
+            "\"hw\": \"mi300x\"",
+            "\"batch_fused_ms\"",
+            "\"per_seq_exchange_rounds\"",
+        ] {
+            assert!(a.contains(key), "missing {key} in {a}");
+        }
+        // no trailing comma before the closing bracket
+        assert!(!a.contains(",\n  ]"), "trailing comma would break parsers");
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let hw = presets::mi300x();
+        let rows = sweep(&hw, 5, 3);
+        let t = render(&rows, &hw);
+        assert_eq!(t.n_rows(), A_SWEEP.len());
+        assert!(t.render().contains("batch x per-seq"));
+    }
+}

@@ -35,6 +35,7 @@
 //! | Fused GEMM + Reduce-Scatter (TP MLP) | [`coordinator::gemm_rs`] | [`workloads::gemm_rs`] | `gemm_rs` |
 //! | Head-sharded TP attention (decode) | [`serve::decode_step_fused`] | [`workloads::tp_attention`] | `tp_attn` |
 //! | Batched prompt prefill (M > 1) | [`serve::prefill_step_fused`] | [`workloads::prefill`] | `prefill` |
+//! | Batched multi-sequence decode (A seqs/step) | [`serve::decode_batch_fused`] | [`workloads::batch_decode`] | `batch_decode` |
 //! | Bucketed gradient all-reduce (§6.2) | [`collectives`] | [`workloads::all_reduce`] | `allreduce` |
 //!
 //! ## Module map
@@ -58,7 +59,9 @@
 //! * [`serve`] — batched serving on top of the runtime: chunked M-row
 //!   prompt prefill through the fused AG+GEMM push pipeline, then
 //!   Megatron-style head-sharded TP decode through the fused GEMM+RS
-//!   exchange, with FIFO ([`serve::serve`]) and continuous-batching
+//!   exchange — all active decode sequences fused into one M-row pass
+//!   per layer per scheduler step ([`serve::decode_batch_fused`]) — with
+//!   FIFO ([`serve::serve`]) and continuous-batching
 //!   ([`serve::continuous`]) schedulers;
 //! * [`experiments`] — harnesses that regenerate every figure/table in
 //!   the paper's evaluation;

@@ -4,8 +4,8 @@
 //!
 //! ```text
 //! taxfree experiments <fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|
-//!         tp_attn|prefill|autotune|all> [--iters N] [--seed N]
-//!         [--config FILE] [--set section.key=value]...
+//!         tp_attn|prefill|batch_decode|autotune|all> [--iters N] [--seed N]
+//!         [--config FILE] [--set section.key=value]... [--json FILE]
 //! taxfree serve [--world N] [--requests N] [--backend native|pjrt]
 //!         [--artifacts DIR] [--seed N]
 //! taxfree selftest [--artifacts DIR]
@@ -43,7 +43,7 @@ fn print_help() {
     println!(
         "taxfree — reproduction of \"Eliminating Multi-GPU Performance Taxes\"\n\
          \n\
-         USAGE:\n  taxfree experiments <fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|autotune|all> [options]\n\
+         USAGE:\n  taxfree experiments <fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|batch_decode|autotune|all> [options]\n\
          \x20 taxfree serve [--world N] [--requests N] [--backend native|pjrt] [--artifacts DIR]\n\
          \x20 taxfree selftest [--artifacts DIR]\n\
          \n\
@@ -51,7 +51,9 @@ fn print_help() {
          \x20 --iters N              simulated iterations per point (default 50)\n\
          \x20 --seed N               master seed (default 7)\n\
          \x20 --config FILE          TOML-subset config file\n\
-         \x20 --set section.key=val  override (e.g. --set hw.preset=mi325x)\n"
+         \x20 --set section.key=val  override (e.g. --set hw.preset=mi325x)\n\
+         \x20 --json FILE            machine-readable output path for batch_decode\n\
+         \x20                        (default BENCH_batch_decode.json)\n"
     );
 }
 
@@ -146,7 +148,7 @@ fn cmd_experiments(args: &[String]) -> i32 {
         println!();
     };
     let run_autotune = || {
-        use taxfree::config::{AgGemmConfig, FlashDecodeConfig};
+        use taxfree::config::{AgGemmConfig, FlashDecodeConfig, GemmRsConfig};
         use taxfree::coordinator::autotune;
         for m in [16usize, 512, 8192] {
             let best = autotune::best_ag_gemm(&AgGemmConfig::paper_fig9(m), &hw9, seed);
@@ -154,6 +156,17 @@ fn cmd_experiments(args: &[String]) -> i32 {
                 "ag_gemm M={m}: best = {} block_k={} ({:.4} ms)",
                 best.strategy.name(),
                 best.block_k,
+                best.latency_s * 1e3
+            );
+        }
+        // the reduce direction (TP-MLP down-projection / Wo partial sum):
+        // M=1 is the decode hot loop, larger M the prefill/batched regime
+        for m in [1usize, 64, 4096] {
+            let best = autotune::best_gemm_rs(&GemmRsConfig::paper_down_proj(m), &hw9, seed);
+            println!(
+                "gemm_rs M={m}: best = {} block_n={} ({:.4} ms)",
+                best.strategy.name(),
+                best.block_n,
                 best.latency_s * 1e3
             );
         }
@@ -182,6 +195,15 @@ fn cmd_experiments(args: &[String]) -> i32 {
         // prefill is the fat-GEMM regime: like fig9 it defaults to the
         // MI325X preset the paper ran AG+GEMM on
         "prefill" => experiments::ext_prefill::run(&hw9, seed, iters),
+        // batched decode is latency-bound like fig10: MI300X default
+        "batch_decode" => {
+            let json = opts
+                .flags
+                .get("json")
+                .cloned()
+                .unwrap_or_else(|| "BENCH_batch_decode.json".to_string());
+            experiments::ext_batch_decode::run(hw, seed, iters, Some(json.as_str()));
+        }
         "autotune" => run_autotune(),
         "all" => {
             run_fig2();
@@ -193,11 +215,12 @@ fn cmd_experiments(args: &[String]) -> i32 {
             experiments::ext_gemm_rs::run(&hw9, seed, iters);
             experiments::ext_tp_attn::run(hw, seed, iters);
             experiments::ext_prefill::run(&hw9, seed, iters);
+            experiments::ext_batch_decode::run(hw, seed, iters, None);
             run_autotune();
         }
         other => {
             eprintln!(
-                "unknown experiment: {other} (want fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|autotune|all)"
+                "unknown experiment: {other} (want fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|batch_decode|autotune|all)"
             );
             return 2;
         }

@@ -15,9 +15,22 @@
 //! to the decode phase and advances one generated token per step. Prefill
 //! chunks and decode steps of different sequences interleave within one
 //! scheduler step on the same fused exchanges — no separate prefill node,
-//! no BSP barrier anywhere. Decode tokens still run the paper's
-//! fully-fused distributed attention exchange per token (batch=1 decode,
-//! the paper's §5.3 setting).
+//! no BSP barrier anywhere.
+//!
+//! **Decode-phase sequences are batched.** On a head-sharded backend the
+//! scheduler does not advance each decode sequence with its own
+//! per-layer protocol round: every step it stacks the hidden rows of all
+//! decode-phase sequences into one `[A, d_model]` batch (groups of up to
+//! [`TransformerConfig::decode_batch`] rows, in deterministic slot order
+//! on every rank) and runs [`crate::serve::decode_batch_fused`] — one
+//! batched QKV GEMM per layer (weights read once, not `A` times),
+//! per-sequence attention into each sequence's own KV shard, and **one**
+//! fused M-row exchange round per layer per step for the Wo and MLP
+//! partial sums, so the launch/signal tax of the decode hot loop
+//! amortizes like `1/A`. Replicated-attention backends keep the paper's
+//! per-token sequence-parallel flash-decode exchange (batch=1 decode,
+//! the §5.3 setting), since their distributed attention is inherently
+//! per sequence.
 //!
 //! Reports per-request time-to-first-token and completion latency in
 //! scheduler steps.
@@ -25,7 +38,8 @@
 use crate::iris::{run_node, IrisError, RankCtx};
 use crate::serve::queue::Request;
 use crate::serve::{
-    build_serve_heap, decode_step_fused, make_shard, prefill_chunk_step, prefill_token_step,
+    build_serve_heap, decode_batch_fused, decode_step_fused, make_shard, prefill_chunk_step,
+    prefill_token_step,
 };
 use crate::tensor::Tensor;
 use crate::workloads::transformer::{KvShard, LocalCompute, TransformerConfig};
@@ -139,49 +153,91 @@ fn scheduler_body<C: LocalCompute>(
                 hidden: None,
             });
         }
-        // advance every active sequence, in slot order (identical on all
-        // ranks, keeping the flag protocol aligned): one prefill chunk
-        // for prefill-phase sequences, one token for decode-phase ones
-        for seq in active.iter_mut() {
-            if seq.prefill_next < seq.prompt_len {
-                if compute.attn_sharded() {
-                    let (m, h) = prefill_chunk_step(
-                        ctx,
-                        cfg,
-                        compute,
-                        &mut seq.shard,
-                        seq.id as u64,
-                        seq.prefill_next,
-                        seq.prompt_len,
-                        &mut round,
-                    )?;
-                    seq.hidden = Some(h);
-                    seq.prefill_next += m;
-                    seq.tokens_done += m;
-                } else {
-                    let pos = seq.prefill_next;
-                    seq.hidden = Some(prefill_token_step(
-                        ctx,
-                        cfg,
-                        compute,
-                        &mut seq.shard,
-                        seq.id as u64,
-                        pos,
-                        &mut round,
-                    )?);
-                    seq.prefill_next += 1;
-                    seq.tokens_done += 1;
-                }
+        // phase membership is decided *before* anything advances, so a
+        // sequence whose prefill completes this step first decodes next
+        // step — every sequence still advances exactly once per step
+        let decode_phase: Vec<bool> =
+            active.iter().map(|s| s.prefill_next >= s.prompt_len).collect();
+
+        // prefill-phase sequences advance one chunk (head-sharded) or one
+        // prompt token (replicated) each, in slot order — identical on
+        // all ranks, keeping the flag protocol aligned
+        for (seq, _) in active.iter_mut().zip(&decode_phase).filter(|(_, d)| !**d) {
+            if compute.attn_sharded() {
+                let (m, h) = prefill_chunk_step(
+                    ctx,
+                    cfg,
+                    compute,
+                    &mut seq.shard,
+                    seq.id as u64,
+                    seq.prefill_next,
+                    seq.prompt_len,
+                    &mut round,
+                )?;
+                seq.hidden = Some(h);
+                seq.prefill_next += m;
+                seq.tokens_done += m;
             } else {
+                let pos = seq.prefill_next;
+                seq.hidden = Some(prefill_token_step(
+                    ctx,
+                    cfg,
+                    compute,
+                    &mut seq.shard,
+                    seq.id as u64,
+                    pos,
+                    &mut round,
+                )?);
+                seq.prefill_next += 1;
+                seq.tokens_done += 1;
+            }
+            if seq.first_token_step.is_none() {
+                seq.first_token_step = Some(step);
+            }
+        }
+
+        // decode-phase sequences advance one token each. Head-sharded
+        // backends fuse them into batched M-row passes (groups of up to
+        // cfg.decode_batch rows, slot order — one exchange round per
+        // layer per group instead of one per sequence); replicated
+        // backends keep the per-token sequence-parallel protocol.
+        let mut decoding: Vec<&mut Active> = active
+            .iter_mut()
+            .zip(&decode_phase)
+            .filter(|(_, d)| **d)
+            .map(|(s, _)| s)
+            .collect();
+        if compute.attn_sharded() {
+            for group in decoding.chunks_mut(cfg.decode_batch) {
+                let rows: Vec<Tensor> = group
+                    .iter()
+                    .map(|s| s.hidden.clone().expect("decode phase follows prefill"))
+                    .collect();
+                let hs = Tensor::concat_rows(&rows);
+                let out = {
+                    let mut shards: Vec<&mut KvShard> =
+                        group.iter_mut().map(|s| &mut s.shard).collect();
+                    decode_batch_fused(ctx, cfg, compute, &mut shards, &hs, &mut round)?
+                };
+                for (i, seq) in group.iter_mut().enumerate() {
+                    seq.hidden = Some(out.rows(i, i + 1));
+                    seq.tokens_done += 1;
+                    if seq.first_token_step.is_none() {
+                        seq.first_token_step = Some(step);
+                    }
+                }
+            }
+        } else {
+            for seq in decoding {
                 let owner = seq.tokens_done % cfg.world;
                 let h = seq.hidden.as_ref().expect("decode phase follows prefill");
                 let next =
                     decode_step_fused(ctx, cfg, compute, &mut seq.shard, h, owner, &mut round)?;
                 seq.hidden = Some(next);
                 seq.tokens_done += 1;
-            }
-            if seq.first_token_step.is_none() {
-                seq.first_token_step = Some(step);
+                if seq.first_token_step.is_none() {
+                    seq.first_token_step = Some(step);
+                }
             }
         }
         // retire finished sequences (their slots free up this step)
@@ -337,6 +393,101 @@ mod tests {
         // 3 prefill steps + 2 decode steps, not 13
         let r1 = report.results.iter().find(|r| r.id == 1).unwrap();
         assert_eq!(r1.finished_step - r1.admitted_step + 1, 5, "3 chunks + 2 decode steps");
+        for req in &reqs {
+            let mut dec = ReferenceDecoder::new(
+                cfg.clone(),
+                NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
+            );
+            let h = dec.run_request(req.id as u64, req.prompt_len, req.gen_len);
+            let got = &report.results.iter().find(|r| r.id == req.id).unwrap().final_hidden;
+            got.assert_allclose(&h, 1e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn batched_decode_groups_match_reference() {
+        // the tentpole through the scheduler: three sequences decode
+        // concurrently on tiny_ragged (decode_batch = 2, so every step
+        // fuses a ragged 2 + 1 group split; 3 heads on 2 ranks is a
+        // ragged head partition on top) — every per-sequence result must
+        // still equal the single-process oracle
+        let cfg = TransformerConfig::tiny_ragged(2);
+        let seed = 16;
+        let mut q = RequestQueue::new();
+        q.submit(1, 5).unwrap();
+        q.submit(1, 4).unwrap();
+        q.submit(1, 6).unwrap();
+        let reqs = q.drain_batch(3);
+        let report = serve_continuous(&cfg, reqs.clone(), 3, tp_factory(&cfg, seed)).expect("serve");
+        for req in &reqs {
+            let mut dec = ReferenceDecoder::new(
+                cfg.clone(),
+                NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
+            );
+            let h = dec.run_request(req.id as u64, req.prompt_len, req.gen_len);
+            let got = &report.results.iter().find(|r| r.id == req.id).unwrap().final_hidden;
+            got.assert_allclose(&h, 1e-3, 1e-3);
+        }
+        // all three decode from step 1 (prompt_len 1 = one prefill chunk);
+        // each advances exactly once per step, batched or not
+        for r in &report.results {
+            assert_eq!(r.finished_step - r.admitted_step + 1, 1 + reqs[r.id].gen_len);
+        }
+    }
+
+    #[test]
+    fn full_decode_batch_matches_reference() {
+        // A = max_active = decode_batch: one whole-batch fused pass per
+        // step, no ragged tail group
+        let cfg = TransformerConfig::tiny(2); // decode_batch = 3
+        let seed = 17;
+        let mut q = RequestQueue::new();
+        for _ in 0..3 {
+            q.submit(2, 4).unwrap();
+        }
+        let reqs = q.drain_batch(3);
+        let report = serve_continuous(&cfg, reqs.clone(), 3, tp_factory(&cfg, seed)).expect("serve");
+        for req in &reqs {
+            let mut dec = ReferenceDecoder::new(
+                cfg.clone(),
+                NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
+            );
+            let h = dec.run_request(req.id as u64, req.prompt_len, req.gen_len);
+            let got = &report.results.iter().find(|r| r.id == req.id).unwrap().final_hidden;
+            got.assert_allclose(&h, 1e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn prefill_completion_defers_decode_to_next_step() {
+        // phase membership is decided before anything advances: a
+        // sequence whose prefill finishes in step s decodes from step
+        // s + 1, so it still advances exactly once per scheduler step
+        // (prompt 4 = exactly one chunk, then gen 2 => 3 steps total)
+        let cfg = TransformerConfig::tiny(2); // prefill_chunk = 4
+        let mut q = RequestQueue::new();
+        q.submit(4, 2).unwrap();
+        let reqs = q.drain_batch(1);
+        let report = serve_continuous(&cfg, reqs, 1, tp_factory(&cfg, 18)).expect("serve");
+        assert_eq!(report.total_steps, 3, "1 prefill chunk + 2 decode steps");
+        assert_eq!(report.results[0].tokens, 6);
+    }
+
+    #[test]
+    fn mixed_prefill_and_batched_decode_steps_match_reference() {
+        // two sequences decode as one fused batch while a third works
+        // through a long chunked prefill in the same scheduler steps —
+        // the batched decode exchange and the M-row prefill exchange
+        // interleave on the same heap buffers; every result must equal
+        // the oracle
+        let cfg = TransformerConfig::tiny(2); // chunk 4, decode_batch 3
+        let seed = 19;
+        let mut q = RequestQueue::new();
+        q.submit(1, 8).unwrap(); // decodes from step 1
+        q.submit(1, 8).unwrap(); // decodes from step 1, batched with id 0
+        q.submit(11, 2).unwrap(); // prefills in chunks of 4+4+3 alongside
+        let reqs = q.drain_batch(3);
+        let report = serve_continuous(&cfg, reqs.clone(), 3, tp_factory(&cfg, seed)).expect("serve");
         for req in &reqs {
             let mut dec = ReferenceDecoder::new(
                 cfg.clone(),

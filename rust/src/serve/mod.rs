@@ -38,6 +38,16 @@
 //!    down-projection. No BSP barrier anywhere in the attention block or
 //!    the token loop.
 //!
+//! **Batched decode (A > 1).** The continuous-batching scheduler does not
+//! pay that per-layer protocol once per sequence: each scheduler step
+//! stacks the hidden rows of all active decode-phase sequences into one
+//! `[A, d_model]` batch and runs [`decode_batch_fused`] — one batched
+//! column-parallel QKV GEMM (weights read once, not `A` times),
+//! per-sequence attention into each sequence's own shard, and the Wo/MLP
+//! partials of *all* sequences summed through a **single** M-row exchange
+//! round per layer, so the kernel-launch and exchange-signal taxes of the
+//! decode hot loop amortize like `1/A`.
+//!
 //! With a **replicated-attention backend** (PJRT's monolithic artifact, or
 //! [`NativeCompute::new`]), attention is sequence-parallel: every rank runs
 //! the full QKV, the owning rank (token `t % world`) appends K/V to its
@@ -111,8 +121,9 @@ pub struct ExchangeBufs {
     /// Contribution staging area: `2 * world * slot_rows * seg_max`
     /// elements (double-buffered by round parity, one
     /// `slot_rows * seg_max` slot per source; `slot_rows` is 1 for a
-    /// decode-only heap and [`TransformerConfig::prefill_chunk`] on the
-    /// serving heap so an M-row prefill block fits the same slot).
+    /// decode-only heap and [`TransformerConfig::exchange_slot_rows`] on
+    /// the serving heap so an M-row prefill chunk *or* a whole batched
+    /// decode step fits the same slot).
     pub data: &'static str,
     /// One monotone flag per source for the scatter phase (an M-row block
     /// costs the same flag traffic as one row).
@@ -146,17 +157,19 @@ pub const MLP_EXCHANGE: ExchangeBufs = ExchangeBufs {
 /// a slow consumer, so slot (parity, source) guarantees it never
 /// overwrites data still being read (see [`decode_step_fused`] /
 /// [`prefill_step_fused`]). Exchange staging slots hold up to
-/// [`TransformerConfig::prefill_chunk`] rows per source so a whole
-/// prefill chunk moves as one M-row block; decode steps use one row of
-/// the same slot. Public so embedding servers and tests can stand up the
-/// exact node layout the serving entry points use.
+/// [`TransformerConfig::exchange_slot_rows`] rows per source so a whole
+/// prefill chunk *or* a whole batched decode step
+/// ([`decode_batch_fused`]) moves as one M-row block; single-sequence
+/// decode steps use one row of the same slot. Public so embedding servers
+/// and tests can stand up the exact node layout the serving entry points
+/// use.
 pub fn build_serve_heap(cfg: &TransformerConfig) -> Arc<SymmetricHeap> {
     let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
     let seg_max = cfg.d_model.div_ceil(cfg.world);
     // sized from the same expression the engines pass as `slot_rows`, so
     // the two can never diverge (`cfg` is expected validated:
-    // prefill_chunk >= 1)
-    let slot = cfg.prefill_chunk * seg_max;
+    // prefill_chunk >= 1, decode_batch >= 1)
+    let slot = cfg.exchange_slot_rows() * seg_max;
     let mut b = HeapBuilder::new(cfg.world)
         .buffer(BUF_INBOX, 2 * cfg.world * wire)
         .flags(FLAGS_PARTIAL, cfg.world)
@@ -330,10 +343,11 @@ fn engine_body<C: LocalCompute>(
     Ok(results)
 }
 
-/// One decode step. Per layer, for head-sharded backends: local QKV for
-/// this rank's heads, fully local flash decode over its head shard, then
-/// the fused GEMM+RS exchange of the Wo partials and (after the residual
-/// and norm) of the MLP partials — no BSP barrier anywhere. For
+/// One decode step. For head-sharded backends this is exactly a
+/// [`decode_batch_fused`] batch of one sequence — local QKV for this
+/// rank's heads, fully local flash decode over its head shard, then the
+/// fused GEMM+RS exchange of the Wo partials and (after the residual and
+/// norm) of the MLP partials — no BSP barrier anywhere. For
 /// replicated-attention backends: the paper's fully-fused sequence-parallel
 /// attention exchange (Algorithm 4), then a local post-attention block or
 /// the TP-MLP exchange.
@@ -341,10 +355,11 @@ fn engine_body<C: LocalCompute>(
 /// **Cross-rank contract.** Every rank must call this in lockstep with
 /// the same `cfg`, the same `owner`, and an identically advanced `round`
 /// counter over a heap built by [`build_serve_heap`]; the step advances
-/// `round` once per layer (shared with [`prefill_step_fused`], so decode
-/// steps and prefill chunks of different sequences may interleave on one
-/// node). `owner` names the rank whose sequence shard appends this
-/// token's KV (ignored by head-sharded backends, which all append).
+/// `round` once per layer (shared with [`prefill_step_fused`] and
+/// [`decode_batch_fused`], so decode steps and prefill chunks of
+/// different sequences may interleave on one node). `owner` names the
+/// rank whose sequence shard appends this token's KV (ignored by
+/// head-sharded backends, which all append).
 pub fn decode_step_fused<C: LocalCompute>(
     ctx: &RankCtx,
     cfg: &TransformerConfig,
@@ -354,70 +369,21 @@ pub fn decode_step_fused<C: LocalCompute>(
     owner: usize,
     round: &mut u64,
 ) -> Result<Tensor, IrisError> {
+    if compute.attn_sharded() {
+        // Megatron head-sharded attention: a decode step is a batch of
+        // one — the same M-row machinery the continuous-batching
+        // scheduler fuses A sequences through (bitwise-equal per row)
+        return decode_batch_fused(ctx, cfg, compute, &mut [shard], h, round);
+    }
     let r = ctx.rank();
     let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
     let d_parts = cfg.d_model_partition();
+    let slot_rows = cfg.exchange_slot_rows();
     let mut h = h.clone();
     for layer in 0..cfg.n_layers {
         *round += 1;
-        // 1) dense QKV — the full projection on replicated backends, this
-        //    rank's column-parallel head slice on head-sharded ones
+        // 1) dense QKV — the full replicated projection
         let (q, k_new, v_new) = compute.qkv(layer, &h);
-
-        if compute.attn_sharded() {
-            // ---- Megatron head-sharded attention ----
-            // every rank owns its heads' KV for the *full* sequence, so it
-            // appends every token and attention needs no cross-rank data:
-            shard.append(layer, &k_new, &v_new);
-            let p = shard.partial(layer, &q).expect("KV non-empty after append");
-            let mut comb = OnlineCombiner::new(shard.heads(), cfg.head_dim);
-            comb.add(&p);
-            let attn = comb.finish();
-            // row-parallel Wo: the partial [1, d_model] projections are
-            // summed through the fused GEMM+RS push pipeline, then the
-            // residual is added to the *reduced* projection (adding it to
-            // each partial would count it `world` times)
-            let wo_partial = compute.attn_out_partial(layer, &attn);
-            let proj = fused_allreduce_exchange_rows(
-                ctx,
-                &d_parts,
-                wo_partial.data(),
-                1,
-                cfg.prefill_chunk,
-                *round,
-                &ATTN_EXCHANGE,
-            )?;
-            let mut h1 = h.clone();
-            for (a, b) in h1.data_mut().iter_mut().zip(&proj) {
-                *a += b;
-            }
-            // MLP: the exchange only runs for a sharded MLP — the two
-            // sharding flags are independent, and summing a *replicated*
-            // backend's full MLP output across ranks would count it
-            // `world` times (disjoint buffers keep the two exchanges of
-            // one flag round apart)
-            let x = rmsnorm(&h1);
-            let p = compute.mlp_partial(layer, &x);
-            let mlp = if compute.tp_sharded() {
-                fused_allreduce_exchange_rows(
-                    ctx,
-                    &d_parts,
-                    p.data(),
-                    1,
-                    cfg.prefill_chunk,
-                    *round,
-                    &MLP_EXCHANGE,
-                )?
-            } else {
-                p.data().to_vec()
-            };
-            let mut out = h1;
-            for (a, b) in out.data_mut().iter_mut().zip(&mlp) {
-                *a += b;
-            }
-            h = out;
-            continue;
-        }
 
         // ---- sequence-parallel attention (replicated projections) ----
         // 2) owner appends this token's KV to its sequence shard
@@ -468,7 +434,7 @@ pub fn decode_step_fused<C: LocalCompute>(
                 &d_parts,
                 p.data(),
                 1,
-                cfg.prefill_chunk,
+                slot_rows,
                 *round,
                 &MLP_EXCHANGE,
             )?;
@@ -480,6 +446,159 @@ pub fn decode_step_fused<C: LocalCompute>(
         } else {
             compute.post_attn(layer, &h, &attn)
         };
+    }
+    Ok(h)
+}
+
+/// One **batched multi-sequence decode step**: `hs` stacks the hidden
+/// rows of `A = hs.dims()[0]` active decode sequences (`shards[i]` is
+/// sequence i's own KV shard), and the whole batch advances one token
+/// through every layer as a single fused M-row pass — the M > 1 decode
+/// regime of the continuous-batching scheduler. Per layer:
+///
+/// 1. column-parallel QKV for this rank's heads as **one batched M-row
+///    GEMM** ([`LocalCompute::qkv_rows`]) — every weight matrix is read
+///    once per step, not once per sequence;
+/// 2. each sequence's new K/V appended to *its own* head shard, then
+///    attention per sequence, entirely local to the head slice (the KV
+///    caches are disjoint, so attention cannot batch across sequences —
+///    but it needs no cross-rank data either);
+/// 3. the row-parallel Wo partials of **all** sequences `[A, d_model]`
+///    summed through a single M-row [`fused_allreduce_exchange_rows`]
+///    round — one push + one signal per (destination, row-block) instead
+///    of one full exchange round per sequence: the launch/signal tax of
+///    the decode hot loop amortizes like `1/A`;
+/// 4. residual, row-wise norm, and the TP MLP partials through the same
+///    single exchange on the disjoint [`MLP_EXCHANGE`] buffers.
+///
+/// Bitwise-equal, sequence for sequence (outputs *and* post-step KV
+/// caches), to advancing each sequence alone through
+/// [`decode_step_fused`] — the strategy-equivalence tests pin this down.
+/// The timing twin is [`crate::workloads::batch_decode`].
+///
+/// **Cross-rank contract.** Every rank must call this in lockstep with
+/// the same `cfg`, the same `A`, and an identically advanced `round`
+/// counter over a heap built by [`build_serve_heap`]; the step advances
+/// `round` once per layer **regardless of `A`**. `A` must fit the
+/// exchange staging slots (`1 ..= cfg.exchange_slot_rows()`); the
+/// scheduler processes larger active sets in
+/// [`TransformerConfig::decode_batch`]-sized groups. Like
+/// [`prefill_step_fused`], the batch must run on a head-sharded backend
+/// at `world > 1` (a replicated backend's full Wo projection would be
+/// summed `world` times); replicated backends decode sequence by
+/// sequence through [`decode_step_fused`]'s sequence-parallel protocol.
+pub fn decode_batch_fused<C: LocalCompute>(
+    ctx: &RankCtx,
+    cfg: &TransformerConfig,
+    compute: &C,
+    shards: &mut [&mut KvShard],
+    hs: &Tensor,
+    round: &mut u64,
+) -> Result<Tensor, IrisError> {
+    let a = hs.dims()[0];
+    let slot_rows = cfg.exchange_slot_rows();
+    if a == 0 || a > slot_rows {
+        return Err(IrisError::InvalidLayout(format!(
+            "decode batch of {a} sequences outside 1..={slot_rows} \
+             (max(prefill_chunk, decode_batch) rows fit one staging slot)"
+        )));
+    }
+    if shards.len() != a {
+        return Err(IrisError::InvalidLayout(format!(
+            "decode batch of {a} hidden rows but {} KV shards: every sequence \
+             in the batch needs exactly its own shard",
+            shards.len()
+        )));
+    }
+    // same real validation as the batched prefill path: a replicated-
+    // attention backend at world > 1 would feed its FULL Wo projection
+    // into the cross-rank sum and come back world-times too large
+    if ctx.world() > 1 && !compute.attn_sharded() {
+        return Err(IrisError::InvalidLayout(
+            "decode_batch_fused needs a head-sharded backend at world > 1 \
+             (a replicated Wo partial would be summed world times); decode \
+             replicated backends per sequence through decode_step_fused"
+                .into(),
+        ));
+    }
+    let d_parts = cfg.d_model_partition();
+    let nh = shards[0].heads();
+    let hd = cfg.head_dim;
+    // real validation, like the exchange's: a shard with a different head
+    // count would make the q/k/v row slices below address another
+    // sequence's heads and corrupt the batch silently in release mode
+    if let Some(bad) = shards.iter().find(|s| s.heads() != nh) {
+        return Err(IrisError::InvalidLayout(format!(
+            "decode batch mixes KV shards of {nh} and {} heads: every sequence \
+             in a batch must hold the same head slice",
+            bad.heads()
+        )));
+    }
+    let mut h = hs.clone();
+    for layer in 0..cfg.n_layers {
+        *round += 1;
+        // 1) one batched column-parallel QKV GEMM over all A rows
+        //    (position-major [A * nh, hd], row i*nh+h = sequence i, head h)
+        let (q, k_new, v_new) = compute.qkv_rows(layer, &h);
+        // 2) per-sequence append + fully local attention over each
+        //    sequence's own head shard
+        let mut attn_rows = Tensor::zeros(&[a * nh, hd]);
+        for (i, shard) in shards.iter_mut().enumerate() {
+            shard.append(
+                layer,
+                &k_new.rows(i * nh, (i + 1) * nh),
+                &v_new.rows(i * nh, (i + 1) * nh),
+            );
+            let p = shard
+                .partial(layer, &q.rows(i * nh, (i + 1) * nh))
+                .expect("KV non-empty after append");
+            let mut comb = OnlineCombiner::new(nh, hd);
+            comb.add(&p);
+            let attn = comb.finish();
+            for head in 0..nh {
+                for j in 0..hd {
+                    attn_rows.set2(i * nh + head, j, attn.at2(head, j));
+                }
+            }
+        }
+        // 3) one batched row-parallel Wo partial + ONE M-row exchange
+        //    round for the whole batch, residual added in place to the
+        //    reduced projection
+        let wo = compute.attn_out_partial_rows(layer, &attn_rows, a);
+        let proj = fused_allreduce_exchange_rows(
+            ctx,
+            &d_parts,
+            wo.data(),
+            a,
+            slot_rows,
+            *round,
+            &ATTN_EXCHANGE,
+        )?;
+        for (x, b) in h.data_mut().iter_mut().zip(&proj) {
+            *x += b;
+        }
+        // 4) TP MLP: one batched partial + one M-row exchange (disjoint
+        //    buffers keep the two exchanges of one flag round apart);
+        //    second residual in place — no per-layer clone of the
+        //    residual stream anywhere in this loop
+        let x_norm = rmsnorm_rows(&h);
+        let p = compute.mlp_partial_rows(layer, &x_norm);
+        let mlp = if compute.tp_sharded() {
+            fused_allreduce_exchange_rows(
+                ctx,
+                &d_parts,
+                p.data(),
+                a,
+                slot_rows,
+                *round,
+                &MLP_EXCHANGE,
+            )?
+        } else {
+            p.data().to_vec()
+        };
+        for (x, b) in h.data_mut().iter_mut().zip(&mlp) {
+            *x += b;
+        }
     }
     Ok(h)
 }
@@ -534,6 +653,7 @@ pub fn prefill_step_fused<C: LocalCompute>(
         ));
     }
     let d_parts = cfg.d_model_partition();
+    let slot_rows = cfg.exchange_slot_rows();
     let nh = shard.heads();
     let mut h = hs.clone();
     for layer in 0..cfg.n_layers {
@@ -553,15 +673,16 @@ pub fn prefill_step_fused<C: LocalCompute>(
             &d_parts,
             wo_partial.data(),
             m,
-            cfg.prefill_chunk,
+            slot_rows,
             *round,
             &ATTN_EXCHANGE,
         )?;
-        let mut h1 = h.clone();
-        for (a, b) in h1.data_mut().iter_mut().zip(&proj) {
+        // both residuals fold into the live residual stream in place —
+        // the hot loop allocates no per-layer clone of it
+        for (a, b) in h.data_mut().iter_mut().zip(&proj) {
             *a += b;
         }
-        let x = rmsnorm_rows(&h1);
+        let x = rmsnorm_rows(&h);
         let p = compute.mlp_partial_rows(layer, &x);
         let mlp = if compute.tp_sharded() {
             fused_allreduce_exchange_rows(
@@ -569,18 +690,16 @@ pub fn prefill_step_fused<C: LocalCompute>(
                 &d_parts,
                 p.data(),
                 m,
-                cfg.prefill_chunk,
+                slot_rows,
                 *round,
                 &MLP_EXCHANGE,
             )?
         } else {
             p.data().to_vec()
         };
-        let mut out = h1;
-        for (a, b) in out.data_mut().iter_mut().zip(&mlp) {
+        for (a, b) in h.data_mut().iter_mut().zip(&mlp) {
             *a += b;
         }
-        h = out;
     }
     Ok(h)
 }
@@ -1123,6 +1242,132 @@ mod tests {
                     assert!(msg.contains("head-sharded"), "{msg}")
                 }
                 other => panic!("expected InvalidLayout, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_rejects_replicated_backend_at_world_gt_1() {
+        // same guard as the batched prefill path: a replicated-attention
+        // backend at world > 1 would have its FULL Wo projection summed
+        // world-times by the single batched exchange
+        let cfg = TransformerConfig::tiny(2);
+        let heap = build_serve_heap(&cfg);
+        let cfg2 = cfg.clone();
+        let factory = native_factory(&cfg, 5);
+        let outs = run_node(heap, move |ctx| {
+            let compute = factory(ctx.rank());
+            let mut s0 = make_shard(&cfg2, &compute, ctx.rank());
+            let mut s1 = make_shard(&cfg2, &compute, ctx.rank());
+            let hs = Tensor::concat_rows(&[token_embedding(&cfg2, 0), token_embedding(&cfg2, 1)]);
+            let mut round = 0u64;
+            decode_batch_fused(&ctx, &cfg2, &compute, &mut [&mut s0, &mut s1], &hs, &mut round)
+        });
+        for o in outs {
+            match o {
+                Err(IrisError::InvalidLayout(msg)) => {
+                    assert!(msg.contains("head-sharded"), "{msg}")
+                }
+                other => panic!("expected InvalidLayout, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_validates_batch_geometry() {
+        // a batch wider than the staging slots, and a batch whose shard
+        // count disagrees with its hidden rows, are typed errors before
+        // any flag traffic — not corruption mid-exchange
+        let cfg = TransformerConfig::tiny(2); // exchange_slot_rows = 4
+        let heap = build_serve_heap(&cfg);
+        let cfg2 = cfg.clone();
+        let factory = tp_factory(&cfg, 6);
+        let outs = run_node(heap, move |ctx| {
+            let compute = factory(ctx.rank());
+            let mut round = 0u64;
+            // 5 rows > slot capacity 4
+            let mut shards: Vec<KvShard> =
+                (0..5).map(|_| make_shard(&cfg2, &compute, ctx.rank())).collect();
+            let rows: Vec<Tensor> = (0..5).map(|i| token_embedding(&cfg2, i)).collect();
+            let hs = Tensor::concat_rows(&rows);
+            let mut refs: Vec<&mut KvShard> = shards.iter_mut().collect();
+            let too_wide =
+                decode_batch_fused(&ctx, &cfg2, &compute, &mut refs, &hs, &mut round).unwrap_err();
+            // 2 rows but only 1 shard
+            let mut one = make_shard(&cfg2, &compute, ctx.rank());
+            let hs2 = Tensor::concat_rows(&[token_embedding(&cfg2, 0), token_embedding(&cfg2, 1)]);
+            let mismatched =
+                decode_batch_fused(&ctx, &cfg2, &compute, &mut [&mut one], &hs2, &mut round)
+                    .unwrap_err();
+            // shards with different head slices in one batch (release-mode
+            // typed error, not silent row-slice corruption)
+            let mut sa = make_shard(&cfg2, &compute, ctx.rank());
+            let mut sb = KvShard::for_heads(&cfg2, sa.heads() + 1);
+            let mixed = decode_batch_fused(
+                &ctx,
+                &cfg2,
+                &compute,
+                &mut [&mut sa, &mut sb],
+                &hs2,
+                &mut round,
+            )
+            .unwrap_err();
+            (too_wide, mismatched, mixed)
+        });
+        for (too_wide, mismatched, mixed) in outs {
+            match too_wide {
+                IrisError::InvalidLayout(msg) => assert!(msg.contains("staging slot"), "{msg}"),
+                other => panic!("expected InvalidLayout, got {other:?}"),
+            }
+            match mismatched {
+                IrisError::InvalidLayout(msg) => assert!(msg.contains("KV shard"), "{msg}"),
+                other => panic!("expected InvalidLayout, got {other:?}"),
+            }
+            match mixed {
+                IrisError::InvalidLayout(msg) => assert!(msg.contains("heads"), "{msg}"),
+                other => panic!("expected InvalidLayout, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_matches_reference_decoder_per_sequence() {
+        // semantic anchor on the node: three sequences advanced together
+        // by decode_batch_fused must each track the single-process
+        // reference decoder (bitwise equality vs the per-sequence fused
+        // path is pinned down in tests/strategy_equivalence.rs)
+        let seed = 92;
+        let steps = 4;
+        for world in [2usize, 3] {
+            let cfg = TransformerConfig::tiny(world); // decode_batch = 3
+            let heap = build_serve_heap(&cfg);
+            let cfg2 = cfg.clone();
+            let factory = tp_factory(&cfg, seed);
+            let outs = run_node(heap, move |ctx| {
+                let compute = factory(ctx.rank());
+                let mut shards: Vec<KvShard> =
+                    (0..3).map(|_| make_shard(&cfg2, &compute, ctx.rank())).collect();
+                let rows: Vec<Tensor> = (0..3).map(|i| token_embedding(&cfg2, i)).collect();
+                let mut hs = Tensor::concat_rows(&rows);
+                let mut round = 0u64;
+                for _ in 0..steps {
+                    let mut refs: Vec<&mut KvShard> = shards.iter_mut().collect();
+                    hs = decode_batch_fused(&ctx, &cfg2, &compute, &mut refs, &hs, &mut round)
+                        .expect("batched decode");
+                }
+                hs
+            });
+            for (i, token) in (0..3u64).enumerate() {
+                let w = TransformerWeights::random(&cfg, seed);
+                let mut dec =
+                    ReferenceDecoder::new(cfg.clone(), NativeCompute::new(cfg.clone(), w));
+                let mut h = token_embedding(&cfg, token);
+                for _ in 0..steps {
+                    h = dec.step(&h);
+                }
+                for out in &outs {
+                    out.rows(i, i + 1).assert_allclose(&h, 1e-3, 1e-3);
+                }
             }
         }
     }

@@ -142,6 +142,17 @@ pub fn reduce_accum_time(hw: &HwConfig, elems: usize, sources: usize) -> f64 {
     (flops / hw.peak_vec_flops).max(bytes / hw.hbm_bw)
 }
 
+/// Time to stream a `[k, n]` fp16 weight matrix from HBM once — the
+/// floor under any skinny-M GEMM against it, and the quantity batched
+/// decode amortizes: one `[A, n]` projection reads the weights once per
+/// step, while `A` separate `[1, n]` projections read them `A` times.
+/// (The full GEMM roofline is [`gemm_time`]; this isolates the B-read
+/// component so the batch-decode twin and its tests can attribute the
+/// batching win.)
+pub fn weight_stream_time(hw: &HwConfig, k: usize, n: usize) -> f64 {
+    2.0 * k as f64 * n as f64 / hw.hbm_bw
+}
+
 /// HBM round-trip time for `bytes` (write + read back) — the unit price of
 /// the Inter-Kernel Tax.
 pub fn hbm_roundtrip_time(hw: &HwConfig, bytes: u64) -> f64 {
@@ -279,6 +290,23 @@ mod tests {
         let serial: f64 =
             (0..m).map(|i| attention_partial_time(&hw, 1, 8, 8, 128, i + 1)).sum();
         assert!(causal_attention_time(&hw, m, 8, 128, 0) < serial);
+    }
+
+    #[test]
+    fn skinny_gemm_is_floored_by_the_weight_stream() {
+        // the premise of batched decode: at decode M a GEMM costs no less
+        // than streaming its weight once, so A batched rows cost far less
+        // than A separate single-row projections (which re-stream it A
+        // times)
+        let hw = presets::mi300x();
+        let (k, n) = (8192usize, 28672usize);
+        let w_read = weight_stream_time(&hw, k, n);
+        assert!(gemm_time(&hw, 1, n, k, GemmImpl::Tile) >= w_read * 0.99);
+        for a in [2usize, 8, 32] {
+            let batched = gemm_time(&hw, a, n, k, GemmImpl::Tile);
+            let separate = a as f64 * gemm_time(&hw, 1, n, k, GemmImpl::Tile);
+            assert!(batched < separate * 0.75, "a={a}: {batched} !<< {separate}");
+        }
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! Timing twin of the batched multi-sequence decode step: builds the
+//! discrete-event program for one continuous-batching scheduler step with
+//! `A` active decode sequences through `n_layers` tensor-parallel
+//! transformer layers and returns the simulated timeline + tax ledger.
+//! The functional twin — real data movement, same protocol — is the
+//! serving path's [`crate::serve::decode_batch_fused`] over the M-row
+//! [`crate::serve::fused_allreduce_exchange_rows`].
+//!
+//! Three strategies price the decode hot loop (the attention front
+//! mirrors [`crate::workloads::tp_attention`], the exchange mirrors
+//! [`crate::workloads::prefill`], both at decode M):
+//!
+//! * **BaselineBsp** — what a collective-library serving stack pays: for
+//!   *each* sequence, per layer, launch(QKV) → QKV GEMV (vendor) →
+//!   launch(attn) → local flash decode over that sequence's head shard →
+//!   launch(Wo) → partial projection → HBM round-trip → entry barrier →
+//!   launch(AR) → RCCL-shaped all-reduce → exit barrier — then the same
+//!   barrier-fenced sequence again for the TP MLP. All three taxes,
+//!   `A` times per layer per step.
+//! * **PerSeqFused** — the paper's fused pipeline applied one sequence at
+//!   a time (the serving path before batching): no barrier, no HBM
+//!   staging, but still two kernel launches and **one full exchange
+//!   round per layer per sequence** — the launch/signal tax scales with
+//!   `A`, and every weight matrix is streamed from HBM once per
+//!   sequence.
+//! * **BatchFused** — one fused M-row pass per layer per step
+//!   ([`crate::serve::decode_batch_fused`]): the QKV/Wo/MLP GEMMs run at
+//!   M = A (weights read once), attention still streams each sequence's
+//!   own KV cache, and the Wo/MLP partial sums of all sequences move
+//!   through a **single** exchange round with A-row tiles — one push +
+//!   one signal per (consumer, tile) regardless of `A`. The launch and
+//!   signal taxes amortize like `1/A`; that is the figure's headline.
+//!
+//! Ragged geometry is first-class: `n_heads % world != 0` skews per-rank
+//! compute and `world > n_heads` leaves empty head shards that still
+//! join the reductions.
+
+use crate::config::{BatchDecodeConfig, HwConfig};
+use crate::sim::cost::{self, GemmImpl};
+use crate::sim::{Sim, SimResult, TaskId};
+
+/// Execution strategy of one batched decode scheduler step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchDecodeStrategy {
+    /// BSP composition per sequence: barrier-fenced RCCL-shaped
+    /// all-reduces after every row-parallel projection, `A` times per
+    /// layer.
+    BaselineBsp,
+    /// The fused tile pipeline, one sequence at a time: no barriers, but
+    /// `A` launches and `A` exchange rounds per layer.
+    PerSeqFused,
+    /// One fused M-row pass per layer for the whole batch: launches and
+    /// exchange rounds are independent of `A`.
+    BatchFused,
+}
+
+impl BatchDecodeStrategy {
+    /// All strategies, baseline first.
+    pub const ALL: [BatchDecodeStrategy; 3] = [
+        BatchDecodeStrategy::BaselineBsp,
+        BatchDecodeStrategy::PerSeqFused,
+        BatchDecodeStrategy::BatchFused,
+    ];
+
+    /// Short name used in tables and trace labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchDecodeStrategy::BaselineBsp => "baseline_bsp",
+            BatchDecodeStrategy::PerSeqFused => "per_seq_fused",
+            BatchDecodeStrategy::BatchFused => "batch_fused",
+        }
+    }
+}
+
+/// Build and run the DES program for one scheduler step.
+pub fn simulate(
+    cfg: &BatchDecodeConfig,
+    hw: &HwConfig,
+    strategy: BatchDecodeStrategy,
+    seed: u64,
+) -> SimResult {
+    cfg.validate().expect("invalid BatchDecodeConfig");
+    let mut sim = Sim::new(hw, cfg.world, seed);
+    match strategy {
+        BatchDecodeStrategy::BaselineBsp => build_baseline(&mut sim, cfg, hw),
+        BatchDecodeStrategy::PerSeqFused => build_fused(&mut sim, cfg, hw, 1, cfg.a),
+        BatchDecodeStrategy::BatchFused => build_fused(&mut sim, cfg, hw, cfg.a, 1),
+    }
+    sim.run()
+}
+
+/// Mean makespan over `iters` simulated iterations (§5.1 protocol; jitter
+/// seeds differ per iteration).
+pub fn mean_latency_s(
+    cfg: &BatchDecodeConfig,
+    hw: &HwConfig,
+    strategy: BatchDecodeStrategy,
+    seed: u64,
+    iters: usize,
+) -> f64 {
+    assert!(iters > 0);
+    (0..iters)
+        .map(|i| simulate(cfg, hw, strategy, seed.wrapping_add(i as u64)).makespan_s)
+        .sum::<f64>()
+        / iters as f64
+}
+
+/// Fused exchange rounds the step executed, per layer-pair accounting:
+/// every fused exchange ends with exactly one gather multipush per rank,
+/// so `multipush count / world` is the number of exchange rounds the
+/// whole node paid. The acceptance criterion reads this: the batched
+/// path pays `2 * n_layers` rounds per step **regardless of A**, the
+/// per-sequence path pays `2 * n_layers * A`.
+pub fn exchange_rounds(result: &SimResult, world: usize) -> usize {
+    result.count_by_label("multipush") / world.max(1)
+}
+
+/// Per-rank modeled stage times of one layer at batch rows `m` for this
+/// rank's shards: (qkv, attn_per_seq, wo, mlp_up, mlp_down). Attention is
+/// per sequence (each sequence streams its own KV cache — batching never
+/// amortizes the KV read, only the projections and exchanges).
+fn stage_times(
+    cfg: &BatchDecodeConfig,
+    hw: &HwConfig,
+    m: usize,
+    heads_r: usize,
+    ffn_r: usize,
+    imp: GemmImpl,
+) -> (f64, f64, f64, f64, f64) {
+    let d = cfg.d_model();
+    let hd = cfg.head_dim;
+    let qkv = cost::gemm_time(hw, m, 3 * heads_r * hd, d, imp);
+    // zero heads => zero attention time (the empty shard still joins the
+    // exchange reductions)
+    let attn = cost::attention_partial_time(hw, 1, heads_r, heads_r, hd, cfg.kv_len);
+    let wo = cost::gemm_time(hw, m, d, (heads_r * hd).max(1), imp);
+    let up = cost::gemm_time(hw, m, ffn_r.max(1), d, imp);
+    let down = cost::gemm_time(hw, m, d, ffn_r.max(1), imp);
+    (qkv, attn, wo, up, down)
+}
+
+fn build_baseline(sim: &mut Sim, cfg: &BatchDecodeConfig, hw: &HwConfig) {
+    let w = cfg.world;
+    let d = cfg.d_model();
+    let head_parts = cfg.head_partition();
+    let ffn_parts = cfg.ffn_partition();
+    // per-rank dependency carried across sequences and layers (previous
+    // exit barrier task): the BSP stack advances one sequence at a time
+    let mut prev: Vec<Option<TaskId>> = vec![None; w];
+
+    for _seq in 0..cfg.a {
+        for _layer in 0..cfg.n_layers {
+            // local attention stage: three vendor kernels per rank,
+            // partial staged to HBM for the collective that follows
+            let mut arrivals = Vec::with_capacity(w);
+            for r in 0..w {
+                let heads_r = head_parts[r].1;
+                let (qkv, attn, wo, _, _) =
+                    stage_times(cfg, hw, 1, heads_r, ffn_parts[r].1, GemmImpl::Vendor);
+                let deps: Vec<TaskId> = prev[r].into_iter().collect();
+                let l1 = sim.launch(r, "bd_qkv_launch", &deps);
+                let dur = sim.jittered(qkv.max(hw.kernel_min_s));
+                let c1 = sim.compute(r, "bd_qkv_proj", dur, &[l1]);
+                let l2 = sim.launch(r, "bd_attn_launch", &[c1]);
+                let dur = sim.jittered(attn.max(hw.kernel_min_s));
+                let c2 = sim.compute(r, "bd_attn_local", dur, &[l2]);
+                let l3 = sim.launch(r, "bd_wo_launch", &[c2]);
+                let dur = sim.jittered(wo.max(hw.kernel_min_s));
+                let c3 = sim.compute(r, "bd_wo_partial", dur, &[l3]);
+                // the [1, d_model] partial is evicted to HBM and re-read
+                // by the collective: the Inter-Kernel Tax
+                arrivals.push(sim.hbm_roundtrip(r, (d * 2) as u64, &[c3]));
+            }
+            let entry = sim.barrier(&arrivals);
+            let mut coll = Vec::with_capacity(w);
+            for r in 0..w {
+                let l = sim.launch(r, "bd_allreduce_launch", &[entry[r]]);
+                let dur = cost::allreduce_time(hw, d, w);
+                let dur = sim.jittered(dur.max(hw.kernel_min_s));
+                coll.push(sim.compute(r, "bd_rccl_allreduce", dur, &[l]));
+            }
+            let exit_attn = sim.barrier(&coll);
+
+            // TP MLP stage: two vendor kernels per rank, partial staged
+            // to HBM, barrier-fenced all-reduce again
+            let mut arrivals = Vec::with_capacity(w);
+            for r in 0..w {
+                let (_, _, _, up, down) =
+                    stage_times(cfg, hw, 1, head_parts[r].1, ffn_parts[r].1, GemmImpl::Vendor);
+                let l4 = sim.launch(r, "bd_mlp_up_launch", &[exit_attn[r]]);
+                let dur = sim.jittered(up.max(hw.kernel_min_s));
+                let c4 = sim.compute(r, "bd_mlp_up", dur, &[l4]);
+                let l5 = sim.launch(r, "bd_mlp_down_launch", &[c4]);
+                let dur = sim.jittered(down.max(hw.kernel_min_s));
+                let c5 = sim.compute(r, "bd_mlp_down", dur, &[l5]);
+                arrivals.push(sim.hbm_roundtrip(r, (d * 2) as u64, &[c5]));
+            }
+            let entry = sim.barrier(&arrivals);
+            let mut coll = Vec::with_capacity(w);
+            for r in 0..w {
+                let l = sim.launch(r, "bd_allreduce_launch", &[entry[r]]);
+                let dur = cost::allreduce_time(hw, d, w);
+                let dur = sim.jittered(dur.max(hw.kernel_min_s));
+                coll.push(sim.compute(r, "bd_rccl_allreduce", dur, &[l]));
+            }
+            let exit_mlp = sim.barrier(&coll);
+            for r in 0..w {
+                prev[r] = Some(exit_mlp[r]);
+            }
+        }
+    }
+}
+
+/// The fused pipeline at `rows` batched rows per pass, repeated `passes`
+/// times per layer: (rows = 1, passes = A) is the per-sequence fused
+/// serving path, (rows = A, passes = 1) is the batched step. Identical
+/// protocol structure either way — the only difference is how often the
+/// per-pass launches and exchange rounds are paid, which is exactly the
+/// tax the figure prices.
+fn build_fused(sim: &mut Sim, cfg: &BatchDecodeConfig, hw: &HwConfig, rows: usize, passes: usize) {
+    let w = cfg.world;
+    let head_parts = cfg.head_partition();
+    let ffn_parts = cfg.ffn_partition();
+    let d_parts = cfg.d_model_partition();
+    let mut prev: Vec<Option<TaskId>> = vec![None; w];
+
+    for _pass in 0..passes {
+        for _layer in 0..cfg.n_layers {
+            // per pass and layer: one push kernel + one fused compute
+            // kernel per rank; one jitter draw per rank-kernel
+            let mut entry = Vec::with_capacity(w);
+            let mut jf = Vec::with_capacity(w);
+            let mut wo_total = Vec::with_capacity(w);
+            let mut down_total = Vec::with_capacity(w);
+            let mut up_times = Vec::with_capacity(w);
+            for r in 0..w {
+                let deps: Vec<TaskId> = prev[r].into_iter().collect();
+                let lp = sim.launch(r, "bd_push_launch", &deps);
+                let lf = sim.launch(r, "bd_fused_launch", &[lp]);
+                let j = sim.jittered(1.0);
+                let heads_r = head_parts[r].1;
+                let (qkv, attn, wo, up, down) =
+                    stage_times(cfg, hw, rows, heads_r, ffn_parts[r].1, GemmImpl::Tile);
+                // QKV + per-sequence attention proceed head by head inside
+                // the fused kernel; every batched row streams its own
+                // sequence's KV (an empty head shard skips straight to
+                // the exchange and still joins the reduction)
+                let mut head_prev = lf;
+                for _ in 0..heads_r {
+                    let dur = (qkv + rows as f64 * attn) / heads_r as f64 * j;
+                    head_prev = sim.compute(r, "bd_attn_head_chunk", dur, &[head_prev]);
+                }
+                entry.push(head_prev);
+                jf.push(j);
+                wo_total.push(wo);
+                down_total.push(down);
+                up_times.push(up);
+            }
+            // Wo partial sum: A-row tiles through the shared fused
+            // GEMM+RS pipeline stage — ONE exchange round for the whole
+            // pass
+            let attn_out = super::fused_exchange_stage(
+                sim,
+                hw,
+                cfg.d_model(),
+                &d_parts,
+                cfg.block_n,
+                rows,
+                &wo_total,
+                &entry,
+                &jf,
+                ("bd_wo_chunk", "bd_wo_reduce_chunk", "bd_attn_residual"),
+            );
+            // MLP: the up-projection is one on-chip chunk per rank, then
+            // the down-projection runs the same A-row-tile exchange
+            let mut mlp_entry = Vec::with_capacity(w);
+            for r in 0..w {
+                let dur = up_times[r] * jf[r];
+                mlp_entry.push(sim.compute(r, "bd_mlp_up_chunk", dur, &[attn_out[r]]));
+            }
+            let mlp_out = super::fused_exchange_stage(
+                sim,
+                hw,
+                cfg.d_model(),
+                &d_parts,
+                cfg.block_n,
+                rows,
+                &down_total,
+                &mlp_entry,
+                &jf,
+                ("bd_mlp_down_chunk", "bd_mlp_reduce_chunk", "bd_mlp_residual"),
+            );
+            for r in 0..w {
+                prev[r] = Some(mlp_out[r]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn paper(a: usize) -> BatchDecodeConfig {
+        BatchDecodeConfig::paper_step(a)
+    }
+
+    fn latency(a: usize, s: BatchDecodeStrategy) -> f64 {
+        mean_latency_s(&paper(a), &presets::mi300x(), s, 2026, 20)
+    }
+
+    #[test]
+    fn batch_fused_pays_one_exchange_round_per_layer_regardless_of_a() {
+        // the PR's acceptance criterion: 2 exchange rounds per layer per
+        // step (Wo + MLP) for the batched path no matter how many
+        // sequences are active; the per-sequence fused path pays A times
+        // that
+        let hw = presets::mi300x();
+        for a in [1usize, 2, 8, 32] {
+            let cfg = paper(a); // n_layers = 1
+            let batch = simulate(&cfg, &hw, BatchDecodeStrategy::BatchFused, 7);
+            let per_seq = simulate(&cfg, &hw, BatchDecodeStrategy::PerSeqFused, 7);
+            assert_eq!(exchange_rounds(&batch, cfg.world), 2 * cfg.n_layers, "A={a}");
+            assert_eq!(exchange_rounds(&per_seq, cfg.world), 2 * cfg.n_layers * a, "A={a}");
+        }
+    }
+
+    #[test]
+    fn launch_tax_amortizes_like_one_over_a() {
+        // 2 launches per rank per layer for the batched step, 2·A for the
+        // per-sequence path: the ledger must show exactly that ratio
+        let hw = presets::mi300x();
+        for a in [2usize, 8, 32] {
+            let cfg = paper(a);
+            let batch = simulate(&cfg, &hw, BatchDecodeStrategy::BatchFused, 3);
+            let per_seq = simulate(&cfg, &hw, BatchDecodeStrategy::PerSeqFused, 3);
+            assert_eq!(batch.ledger.launches, 2 * cfg.world * cfg.n_layers, "A={a}");
+            assert_eq!(per_seq.ledger.launches, 2 * cfg.world * cfg.n_layers * a, "A={a}");
+            assert!(
+                (per_seq.ledger.launch_s / batch.ledger.launch_s - a as f64).abs() < 1e-6,
+                "A={a}: launch tax must amortize exactly 1/A"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_fused_beats_per_seq_fused_which_beats_bsp() {
+        // the figure's ordering at every batch width above 1: batching
+        // amortizes launches, exchange latency floors, and weight reads
+        for a in [2usize, 4, 16] {
+            let bsp = latency(a, BatchDecodeStrategy::BaselineBsp);
+            let per_seq = latency(a, BatchDecodeStrategy::PerSeqFused);
+            let batch = latency(a, BatchDecodeStrategy::BatchFused);
+            assert!(per_seq < bsp, "A={a}: per-seq fused {per_seq} !< bsp {bsp}");
+            assert!(batch < per_seq, "A={a}: batch fused {batch} !< per-seq {per_seq}");
+        }
+    }
+
+    #[test]
+    fn strategies_coincide_at_a_equal_one() {
+        // a batch of one IS the per-sequence pipeline: identical program,
+        // identical makespan
+        let hw = presets::mi300x();
+        let a = simulate(&paper(1), &hw, BatchDecodeStrategy::PerSeqFused, 11);
+        let b = simulate(&paper(1), &hw, BatchDecodeStrategy::BatchFused, 11);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.ledger.launches, b.ledger.launches);
+    }
+
+    #[test]
+    fn bsp_pays_all_three_taxes_a_times() {
+        let r = simulate(&paper(4), &presets::mi300x(), BatchDecodeStrategy::BaselineBsp, 7);
+        // 7 launches per rank-layer-sequence
+        assert_eq!(r.ledger.launches, 7 * 8 * 4);
+        assert!(r.ledger.launch_s > 0.0);
+        assert!(r.ledger.bulk_sync_s > 0.0, "barrier skew must show up");
+        assert!(r.ledger.inter_kernel_s > 0.0, "partials staged through HBM");
+    }
+
+    #[test]
+    fn fused_paths_pay_zero_bulk_sync_and_inter_kernel_tax() {
+        let hw = presets::mi300x();
+        for a in [1usize, 8] {
+            for s in [BatchDecodeStrategy::PerSeqFused, BatchDecodeStrategy::BatchFused] {
+                let r = simulate(&paper(a), &hw, s, 13);
+                assert_eq!(r.ledger.bulk_sync_s, 0.0, "A={a} {s:?}: no barrier anywhere");
+                assert_eq!(r.ledger.inter_kernel_s, 0.0, "A={a} {s:?}: no HBM staging");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_projections_amortize_the_weight_stream() {
+        // the compute-side source of the batching win, attributed via
+        // cost::weight_stream_time: the per-sequence path re-streams the
+        // fused QKV weights once per sequence, the batched pass streams
+        // them once per step — so the modeled gap of the QKV+attention
+        // stage must be at least half of (A - 1) node-summed weight
+        // streams (half, to leave room for jitter and the gemm_eff flop
+        // component)
+        let hw = presets::mi300x();
+        let cfg = paper(8);
+        let heads_r = cfg.n_heads / cfg.world;
+        let w_qkv =
+            cost::weight_stream_time(&hw, cfg.d_model(), 3 * heads_r * cfg.head_dim);
+        let per_seq = simulate(&cfg, &hw, BatchDecodeStrategy::PerSeqFused, 21)
+            .time_by_label("bd_attn_head_chunk");
+        let batch = simulate(&cfg, &hw, BatchDecodeStrategy::BatchFused, 21)
+            .time_by_label("bd_attn_head_chunk");
+        let floor = 0.5 * (cfg.a - 1) as f64 * w_qkv * cfg.world as f64;
+        assert!(
+            per_seq - batch > floor,
+            "weight-stream amortization missing: gap {} !> floor {floor}",
+            per_seq - batch
+        );
+    }
+
+    #[test]
+    fn attention_kv_stream_is_not_amortized() {
+        // batching amortizes projections and exchanges, never the KV
+        // read: the batched attention stage must still scale with A
+        let hw = presets::mi300x();
+        let t1 = simulate(&paper(1), &hw, BatchDecodeStrategy::BatchFused, 5)
+            .time_by_label("bd_attn_head_chunk");
+        let t8 = simulate(&paper(8), &hw, BatchDecodeStrategy::BatchFused, 5)
+            .time_by_label("bd_attn_head_chunk");
+        assert!(t8 > 4.0 * t1, "attention must scale with A: {t8} vs {t1}");
+    }
+
+    #[test]
+    fn ragged_and_empty_head_shards_simulate() {
+        // 5 heads on 4 ranks (ragged) and on 8 ranks (three empty
+        // shards): tile/segment bookkeeping must stay consistent, empty
+        // ranks still join both reductions, and multiple layers chain
+        for world in [1usize, 3, 4, 8] {
+            let cfg = BatchDecodeConfig::tiny(world); // n_layers = 2, a = 3
+            for s in BatchDecodeStrategy::ALL {
+                let r = simulate(&cfg, &presets::mi300x(), s, 9);
+                assert!(r.makespan_s > 0.0 && r.makespan_s.is_finite(), "{s:?} world {world}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_fabric_bytes_match_analytic() {
+        // per pass and exchange: scatter ships every rank's partial of
+        // every remote segment once (2·rows·D·(W−1) bytes, fp16) and the
+        // gather multipushes every reduced segment to W−1 peers (another
+        // 2·rows·D·(W−1)); two exchanges per layer. The batch moves the
+        // same bytes as A per-sequence passes — fewer signals, not fewer
+        // bytes.
+        let cfg = paper(8);
+        let hw = presets::mi300x();
+        let expect = (8 * cfg.a * cfg.d_model() * (cfg.world - 1) * cfg.n_layers) as u64;
+        let batch = simulate(&cfg, &hw, BatchDecodeStrategy::BatchFused, 3);
+        assert_eq!(batch.ledger.fabric_bytes, expect);
+        let per_seq = simulate(&cfg, &hw, BatchDecodeStrategy::PerSeqFused, 3);
+        assert_eq!(per_seq.ledger.fabric_bytes, expect);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = simulate(&paper(8), &presets::mi300x(), BatchDecodeStrategy::BatchFused, 99);
+        let b = simulate(&paper(8), &presets::mi300x(), BatchDecodeStrategy::BatchFused, 99);
+        assert_eq!(a.makespan_s, b.makespan_s);
+    }
+
+    #[test]
+    fn world_one_degenerates_gracefully() {
+        let cfg = BatchDecodeConfig {
+            a: 4,
+            n_heads: 8,
+            head_dim: 16,
+            ffn_hidden: 64,
+            n_layers: 1,
+            world: 1,
+            kv_len: 256,
+            block_n: 16,
+        };
+        for s in BatchDecodeStrategy::ALL {
+            let r = simulate(&cfg, &presets::mi300x(), s, 5);
+            assert!(r.makespan_s > 0.0, "{s:?}");
+            assert_eq!(r.ledger.fabric_bytes, 0, "{s:?} moved bytes with world=1");
+        }
+    }
+}

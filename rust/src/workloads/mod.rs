@@ -15,17 +15,117 @@
 //!   through a tensor-parallel layer (the fat-GEMM regime of the AG+GEMM
 //!   pattern), BSP AG→GEMM composition vs the fused push pipeline with
 //!   M-row tiles;
+//! * [`batch_decode`] — one continuous-batching scheduler step with A
+//!   active decode sequences: BSP per sequence vs the fused pipeline per
+//!   sequence vs one batched M-row pass per layer (launch/signal tax
+//!   amortizing like 1/A);
 //! * [`transformer`] — a tiny tensor-parallel transformer model (batched
 //!   prefill + decode) built from the same pieces, used by the
 //!   end-to-end serving example.
 
 pub mod ag_gemm;
 pub mod all_reduce;
+pub mod batch_decode;
 pub mod flash_decode;
 pub mod gemm_rs;
 pub mod prefill;
 pub mod tp_attention;
 pub mod transformer;
 
+pub use batch_decode::BatchDecodeStrategy;
 pub use prefill::PrefillStrategy;
 pub use tp_attention::TpAttnStrategy;
+
+use crate::config::HwConfig;
+use crate::sim::{cost, Sim, TaskId};
+
+/// One fused GEMM+RS exchange stage of an M-row DES twin — shared by
+/// [`prefill`] (rows = the prompt-chunk M) and [`batch_decode`] (rows =
+/// the decode batch A), so the protocol model cannot drift between the
+/// two. Producers emit `rows`-row tiles of `producer_total`-priced
+/// compute, each pushed on stream 1 the moment it exists; consumers
+/// reduce behind per-tile dependencies and multipush the reduced
+/// segment back on stream 1; the per-rank residual add completes once
+/// every reduced segment has arrived (a per-tile flag wait, not a
+/// barrier). `d_parts` is the [`crate::util::partition`] of the `d`-wide
+/// sum (one segment per rank); tiles follow [`crate::util::seg_tiles`]
+/// at `block_n`. Returns the per-rank task after which the full
+/// `[rows, d]` result is resident.
+pub(crate) fn fused_exchange_stage(
+    sim: &mut Sim,
+    hw: &HwConfig,
+    d: usize,
+    d_parts: &[(usize, usize)],
+    block_n: usize,
+    rows: usize,
+    producer_total: &[f64],
+    entry: &[TaskId],
+    jf: &[f64],
+    label: (&'static str, &'static str, &'static str),
+) -> Vec<TaskId> {
+    let (chunk_label, reduce_label, residual_label) = label;
+    let w = d_parts.len();
+
+    // stage 1: tile-granular partial GEMM; each (consumer, tile) M-row
+    // block is pushed the moment it is computed — one push + one signal
+    // per tile regardless of the row count
+    let mut done: Vec<Vec<Vec<TaskId>>> = vec![vec![Vec::new(); w]; w];
+    let mut tail = Vec::with_capacity(w);
+    for r in 0..w {
+        let mut prev = entry[r];
+        for d_off in 0..w {
+            let dst = (r + d_off) % w;
+            let (_, len) = d_parts[dst];
+            for &(_c0, tl) in &crate::util::seg_tiles(len, block_n) {
+                let dur = producer_total[r] * (tl as f64 / d as f64) * jf[r];
+                let c = sim.compute(r, chunk_label, dur, &[prev]);
+                prev = c;
+                if dst == r {
+                    done[r][dst].push(c);
+                } else {
+                    // the push kernel on stream 1 ships the block the
+                    // moment the chunk exists (paper §4.1.4 concurrency)
+                    let p = sim.push_on(r, 1, dst, (rows * tl * 2) as u64, &[c]);
+                    done[r][dst].push(p);
+                }
+            }
+        }
+        tail.push(prev);
+    }
+
+    // stage 2: concurrent reduction — fold own tiles (already on-chip),
+    // then each remote (source, tile) behind its arrival; the reduced
+    // M-row segment is multipushed back on stream 1 for the gather
+    let mut gathered: Vec<TaskId> = Vec::with_capacity(w);
+    let mut reduce_tail = Vec::with_capacity(w);
+    for r in 0..w {
+        let tiles = crate::util::seg_tiles(d_parts[r].1, block_n);
+        let mut prev = tail[r];
+        for d_off in 0..w {
+            let s = (r + d_off) % w;
+            for (t, &(_c0, tl)) in tiles.iter().enumerate() {
+                let dur = cost::reduce_accum_time(hw, rows * tl, 1) * jf[r];
+                let deps = vec![prev, done[s][r][t]];
+                prev = sim.compute(r, reduce_label, dur, &deps);
+            }
+        }
+        reduce_tail.push(prev);
+        gathered.push(sim.multipush_on(r, 1, (rows * d_parts[r].1 * 2) as u64, &[prev]));
+    }
+
+    // stage 3: residual add once every reduced segment has arrived — a
+    // per-tile flag wait, not a barrier (no rank waits for ranks it does
+    // not consume data from)
+    let mut out = Vec::with_capacity(w);
+    for r in 0..w {
+        let mut deps = vec![reduce_tail[r]];
+        for (s, &g) in gathered.iter().enumerate() {
+            if s != r {
+                deps.push(g);
+            }
+        }
+        let dur = cost::reduce_accum_time(hw, rows * d, 1);
+        out.push(sim.compute(r, residual_label, dur, &deps));
+    }
+    out
+}

@@ -184,95 +184,11 @@ fn build_baseline(sim: &mut Sim, cfg: &PrefillConfig, hw: &HwConfig) {
     }
 }
 
-/// One fused exchange stage (Wo or MLP down-projection): producers emit
-/// M-row tiles of `producer_total`-priced compute, each tile pushed the
-/// moment it exists; consumers reduce behind per-tile dependencies and
-/// multipush the reduced segment back. Returns the per-rank task after
-/// which the full `[M, d_model]` result is resident (the residual add).
-fn fused_exchange_stage(
-    sim: &mut Sim,
-    cfg: &PrefillConfig,
-    hw: &HwConfig,
-    producer_total: &[f64],
-    entry: &[TaskId],
-    jf: &[f64],
-    label: (&'static str, &'static str, &'static str),
-) -> Vec<TaskId> {
-    let (chunk_label, reduce_label, residual_label) = label;
-    let w = cfg.world;
-    let d = cfg.d_model();
-    let d_parts = cfg.d_model_partition();
-
-    // stage 1: tile-granular partial GEMM; each (consumer, tile) M-row
-    // block is pushed on stream 1 the moment it is computed
-    let mut done: Vec<Vec<Vec<TaskId>>> = vec![vec![Vec::new(); w]; w];
-    let mut tail = Vec::with_capacity(w);
-    for r in 0..w {
-        let mut prev = entry[r];
-        for d_off in 0..w {
-            let dst = (r + d_off) % w;
-            let (_, len) = d_parts[dst];
-            for &(_c0, tl) in &cfg.seg_tiles(len) {
-                let dur = producer_total[r] * (tl as f64 / d as f64) * jf[r];
-                let c = sim.compute(r, chunk_label, dur, &[prev]);
-                prev = c;
-                if dst == r {
-                    done[r][dst].push(c);
-                } else {
-                    // M-row tile: M * tile_width fp16 elements, one push
-                    // (paper §4.1.4 concurrency — issue occupancy stays
-                    // off the compute stream)
-                    let p = sim.push_on(r, 1, dst, (cfg.m * tl * 2) as u64, &[c]);
-                    done[r][dst].push(p);
-                }
-            }
-        }
-        tail.push(prev);
-    }
-
-    // stage 2: concurrent reduction — fold own tiles (already on-chip),
-    // then each remote (source, tile) behind its arrival; the reduced
-    // M-row segment is multipushed back on stream 1 for the gather
-    let mut gathered: Vec<TaskId> = Vec::with_capacity(w);
-    let mut reduce_tail = Vec::with_capacity(w);
-    for r in 0..w {
-        let tiles = cfg.seg_tiles(d_parts[r].1);
-        let mut prev = tail[r];
-        for d_off in 0..w {
-            let s = (r + d_off) % w;
-            for (t, &(_c0, tl)) in tiles.iter().enumerate() {
-                let dur = cost::reduce_accum_time(hw, cfg.m * tl, 1) * jf[r];
-                let deps = vec![prev, done[s][r][t]];
-                prev = sim.compute(r, reduce_label, dur, &deps);
-            }
-        }
-        reduce_tail.push(prev);
-        gathered.push(sim.multipush_on(r, 1, (cfg.m * d_parts[r].1 * 2) as u64, &[prev]));
-    }
-
-    // stage 3: residual add once every reduced segment has arrived — a
-    // per-tile flag wait, not a barrier (no rank waits for ranks it does
-    // not consume data from); its output IS the next GEMM's [M, d_model]
-    // input: the all-gather + GEMM hand-off of the paper's Figure 9
-    // kernel
-    let mut out = Vec::with_capacity(w);
-    for r in 0..w {
-        let mut deps = vec![reduce_tail[r]];
-        for (s, &g) in gathered.iter().enumerate() {
-            if s != r {
-                deps.push(g);
-            }
-        }
-        let dur = cost::reduce_accum_time(hw, cfg.m * d, 1);
-        out.push(sim.compute(r, residual_label, dur, &deps));
-    }
-    out
-}
-
 fn build_fused(sim: &mut Sim, cfg: &PrefillConfig, hw: &HwConfig) {
     let w = cfg.world;
     let head_parts = cfg.head_partition();
     let ffn_parts = cfg.ffn_partition();
+    let d_parts = cfg.d_model_partition();
     let mut prev: Vec<Option<TaskId>> = vec![None; w];
 
     for _layer in 0..cfg.n_layers {
@@ -306,13 +222,23 @@ fn build_fused(sim: &mut Sim, cfg: &PrefillConfig, hw: &HwConfig) {
             down_total.push(down);
             up_times.push(up);
         }
-        // Wo partial sum: M-row tiles through the fused GEMM+RS pipeline
-        let attn_out =
-            fused_exchange_stage(sim, cfg, hw, &wo_total, &entry, &jf, (
-                "pf_wo_chunk",
-                "pf_wo_reduce_chunk",
-                "pf_attn_residual",
-            ));
+        // Wo partial sum: M-row tiles through the shared fused GEMM+RS
+        // pipeline stage (`workloads::fused_exchange_stage` — one model,
+        // also used by the batched-decode twin at rows = A); the residual
+        // output IS the next GEMM's [M, d_model] input: the all-gather +
+        // GEMM hand-off of the paper's Figure 9 kernel
+        let attn_out = super::fused_exchange_stage(
+            sim,
+            hw,
+            cfg.d_model(),
+            &d_parts,
+            cfg.block_n,
+            cfg.m,
+            &wo_total,
+            &entry,
+            &jf,
+            ("pf_wo_chunk", "pf_wo_reduce_chunk", "pf_attn_residual"),
+        );
         // MLP: the up-projection is one on-chip chunk per rank, then the
         // down-projection runs the same M-row-tile exchange
         let mut mlp_entry = Vec::with_capacity(w);
@@ -320,12 +246,18 @@ fn build_fused(sim: &mut Sim, cfg: &PrefillConfig, hw: &HwConfig) {
             let dur = up_times[r] * jf[r];
             mlp_entry.push(sim.compute(r, "pf_mlp_up_chunk", dur, &[attn_out[r]]));
         }
-        let mlp_out =
-            fused_exchange_stage(sim, cfg, hw, &down_total, &mlp_entry, &jf, (
-                "pf_mlp_down_chunk",
-                "pf_mlp_reduce_chunk",
-                "pf_mlp_residual",
-            ));
+        let mlp_out = super::fused_exchange_stage(
+            sim,
+            hw,
+            cfg.d_model(),
+            &d_parts,
+            cfg.block_n,
+            cfg.m,
+            &down_total,
+            &mlp_entry,
+            &jf,
+            ("pf_mlp_down_chunk", "pf_mlp_reduce_chunk", "pf_mlp_residual"),
+        );
         for r in 0..w {
             prev[r] = Some(mlp_out[r]);
         }

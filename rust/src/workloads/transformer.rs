@@ -82,6 +82,16 @@ pub struct TransformerConfig {
     /// Must be positive — an M = 0 prefill step is meaningless and is
     /// rejected by [`TransformerConfig::validate`].
     pub prefill_chunk: usize,
+    /// Maximum active decode sequences one batched decode step fuses into
+    /// a single M-row pass per layer (`serve::decode_batch_fused`). The
+    /// continuous-batching scheduler stacks the hidden rows of up to this
+    /// many decode-phase sequences and pays one fused exchange round per
+    /// layer per scheduler step instead of one per sequence; more active
+    /// sequences are processed in groups of this size. Together with
+    /// [`TransformerConfig::prefill_chunk`] it sizes the exchange staging
+    /// slots ([`TransformerConfig::exchange_slot_rows`]). Must be
+    /// positive.
+    pub decode_batch: usize,
 }
 
 impl TransformerConfig {
@@ -97,6 +107,7 @@ impl TransformerConfig {
             kv_block: 4,
             max_seq: 64,
             prefill_chunk: 4,
+            decode_batch: 3,
         }
     }
 
@@ -116,6 +127,9 @@ impl TransformerConfig {
             kv_block: 4,
             max_seq: 48,
             prefill_chunk: 3,
+            // 2 does not divide the 3-slot scheduler tests' active sets,
+            // so batched decode exercises ragged groups (2 + 1)
+            decode_batch: 2,
         }
     }
 
@@ -131,6 +145,7 @@ impl TransformerConfig {
             kv_block: 32,
             max_seq: 512,
             prefill_chunk: 16,
+            decode_batch: 8,
         }
     }
 
@@ -161,6 +176,11 @@ impl TransformerConfig {
         if self.prefill_chunk == 0 {
             return Err("prefill_chunk must be positive (an M = 0 prefill step is rejected)".into());
         }
+        if self.decode_batch == 0 {
+            return Err(
+                "decode_batch must be positive (an M = 0 batched decode step is rejected)".into(),
+            );
+        }
         Ok(())
     }
 
@@ -176,6 +196,18 @@ impl TransformerConfig {
     /// Per-rank KV shard capacity (tokens).
     pub fn shard_capacity(&self) -> usize {
         self.max_seq.div_ceil(self.world)
+    }
+
+    /// Row capacity of one fused-exchange staging slot — the single
+    /// sizing rule shared by `serve::build_serve_heap` and every caller of
+    /// `serve::fused_allreduce_exchange_rows`, so the heap layout and the
+    /// protocol's slot stride can never diverge. A slot must hold either a
+    /// whole prefill chunk ([`TransformerConfig::prefill_chunk`] rows) or
+    /// a whole batched decode step ([`TransformerConfig::decode_batch`]
+    /// rows), whichever is larger; a plain decode step uses one row of the
+    /// same slot.
+    pub fn exchange_slot_rows(&self) -> usize {
+        self.prefill_chunk.max(self.decode_batch)
     }
 
     /// Partition of `ffn_hidden` across ranks (TP shard of W1 cols /
@@ -923,6 +955,21 @@ mod tests {
         bad.prefill_chunk = 0;
         let err = bad.validate().unwrap_err();
         assert!(err.contains("prefill_chunk"), "{err}");
+        // likewise for the batched decode step's M
+        let mut bad = TransformerConfig::tiny(2);
+        bad.decode_batch = 0;
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("decode_batch"), "{err}");
+    }
+
+    #[test]
+    fn exchange_slot_rows_covers_both_batched_regimes() {
+        // the slot-capacity rule: whichever of prefill chunk / decode
+        // batch is larger sizes the exchange staging slots
+        let mut cfg = TransformerConfig::tiny(2); // chunk 4, batch 3
+        assert_eq!(cfg.exchange_slot_rows(), 4);
+        cfg.decode_batch = 9;
+        assert_eq!(cfg.exchange_slot_rows(), 9);
     }
 
     #[test]

@@ -10,8 +10,8 @@ use std::time::Duration;
 use taxfree::collectives;
 use taxfree::iris::{run_node, run_node_with_timeout, HeapBuilder, IrisError};
 use taxfree::serve::{
-    build_serve_heap, collect_node_outcomes, fused_allreduce_exchange, prefill_step_fused,
-    ATTN_EXCHANGE,
+    build_serve_heap, collect_node_outcomes, decode_batch_fused, fused_allreduce_exchange,
+    prefill_step_fused, ATTN_EXCHANGE,
 };
 use taxfree::tensor::Tensor;
 use taxfree::util::partition;
@@ -290,6 +290,90 @@ fn rank_dying_mid_prefill_surfaces_root_cause_not_peer_timeout() {
     match collect_node_outcomes(outcomes) {
         Err(IrisError::InvalidLayout(msg)) => assert!(msg.contains("covers"), "{msg}"),
         other => panic!("node outcome must be the root cause, got {other:?}"),
+    }
+}
+
+#[test]
+fn rank_dying_mid_batched_decode_exchange_surfaces_root_cause() {
+    // the batched-decode variant of the mid-prefill death: a rank whose
+    // compute goes wrong inside a batched multi-sequence step (mis-shaped
+    // batched Wo partial, caught by the M-row exchange's validation
+    // before it signals anything) must surface its structured root
+    // cause; the peers, stuck waiting on the dead rank's scatter flags
+    // for the batched round, report only secondary timeouts — and the
+    // node-level outcome policy prefers the root cause
+    let cfg = TransformerConfig::tiny(3); // decode_batch = 3
+    let heap = build_serve_heap(&cfg);
+    let cfg2 = cfg.clone();
+    let outcomes = run_node_with_timeout(heap, Duration::from_millis(200), move |ctx| {
+        let rank = ctx.rank();
+        let inner =
+            NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, 9), rank);
+        let compute = PoisonedWo { inner, poisoned: rank == 2 };
+        let mut shards: Vec<KvShard> =
+            (0..2).map(|_| KvShard::for_heads(&cfg2, cfg2.head_partition()[rank].1)).collect();
+        let hs = Tensor::concat_rows(&[
+            taxfree::workloads::transformer::token_embedding(&cfg2, 4),
+            taxfree::workloads::transformer::token_embedding(&cfg2, 5),
+        ]);
+        let mut refs: Vec<&mut KvShard> = shards.iter_mut().collect();
+        let mut round = 0u64;
+        decode_batch_fused(&ctx, &cfg2, &compute, &mut refs, &hs, &mut round).map(|_| ())
+    });
+    match &outcomes[2] {
+        Err(IrisError::InvalidLayout(msg)) => assert!(msg.contains("covers"), "{msg}"),
+        other => panic!("expected the root-cause InvalidLayout on rank 2, got {other:?}"),
+    }
+    for rank in [0usize, 1] {
+        match &outcomes[rank] {
+            Err(IrisError::Timeout(t)) => {
+                assert_eq!(t.flags, ATTN_EXCHANGE.data_flags, "rank {rank}");
+                assert_eq!(t.idx, 2, "rank {rank} waits on the dead rank's flag");
+            }
+            other => panic!("expected a secondary Timeout on rank {rank}, got {other:?}"),
+        }
+    }
+    match collect_node_outcomes(outcomes) {
+        Err(IrisError::InvalidLayout(msg)) => assert!(msg.contains("covers"), "{msg}"),
+        other => panic!("node outcome must be the root cause, got {other:?}"),
+    }
+}
+
+#[test]
+fn dead_rank_in_batched_decode_times_out_typed() {
+    // a rank that dies outright (never even enters the batched step):
+    // the survivors' batched M-row exchange must come back as a typed
+    // timeout naming the scatter flags of the dead producer — not hang,
+    // not panic, not corrupt the batch
+    let cfg = TransformerConfig::tiny(3);
+    let heap = build_serve_heap(&cfg);
+    let cfg2 = cfg.clone();
+    let outcomes = run_node_with_timeout(heap, Duration::from_millis(100), move |ctx| {
+        let rank = ctx.rank();
+        if rank == 1 {
+            return Ok(()); // dead rank: contributes nothing
+        }
+        let compute =
+            NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, 10), rank);
+        let mut shards: Vec<KvShard> =
+            (0..3).map(|_| KvShard::for_heads(&cfg2, cfg2.head_partition()[rank].1)).collect();
+        let rows: Vec<Tensor> = (0..3)
+            .map(|i| taxfree::workloads::transformer::token_embedding(&cfg2, 20 + i))
+            .collect();
+        let hs = Tensor::concat_rows(&rows);
+        let mut refs: Vec<&mut KvShard> = shards.iter_mut().collect();
+        let mut round = 0u64;
+        decode_batch_fused(&ctx, &cfg2, &compute, &mut refs, &hs, &mut round).map(|_| ())
+    });
+    assert!(outcomes[1].is_ok(), "the dead rank itself reported nothing");
+    for rank in [0usize, 2] {
+        match &outcomes[rank] {
+            Err(IrisError::Timeout(t)) => {
+                assert_eq!(t.flags, ATTN_EXCHANGE.data_flags, "rank {rank}");
+                assert_eq!(t.idx, 1, "rank {rank} waits on the dead producer");
+            }
+            other => panic!("expected Timeout on rank {rank}, got {other:?}"),
+        }
     }
 }
 

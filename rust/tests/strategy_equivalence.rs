@@ -10,7 +10,9 @@ use taxfree::coordinator::{
 };
 use taxfree::iris::run_node;
 use taxfree::serve::continuous::serve_continuous;
-use taxfree::serve::{build_serve_heap, prefill_step_fused, Request};
+use taxfree::serve::{
+    build_serve_heap, decode_batch_fused, decode_step_fused, prefill_step_fused, Request,
+};
 use taxfree::tensor::linalg::{decode_attention_ref, matmul};
 use taxfree::tensor::Tensor;
 use taxfree::util::propcheck::{check_no_shrink, Config, Verdict};
@@ -434,6 +436,176 @@ fn fused_prefill_matches_token_by_token_oracle() {
         let last = outs.last().expect("at least one chunk");
         let m = last.dims()[0];
         last.rows(m - 1, m).assert_allclose(&expect, 1e-3, 1e-3);
+    }
+}
+
+/// Per-rank batched-decode observation: the final `[A, d_model]` hidden
+/// batch plus every sequence's final per-layer KV cache contents.
+type BatchDecodeTrace = (Tensor, Vec<Vec<(Tensor, Tensor, usize)>>);
+
+/// Seed hidden rows for `a` independent decode sequences.
+fn decode_seeds(cfg: &TransformerConfig, a: usize) -> Tensor {
+    let rows: Vec<Tensor> =
+        (0..a).map(|i| taxfree::workloads::transformer::token_embedding(cfg, 1000 + i as u64)).collect();
+    Tensor::concat_rows(&rows)
+}
+
+/// One shard per sequence with the geometry both decode paths use (a
+/// head shard; at world = 1 this coincides with the sequence shard).
+fn decode_shards(cfg: &TransformerConfig, rank: usize, a: usize) -> Vec<KvShard> {
+    (0..a).map(|_| KvShard::for_heads(cfg, cfg.head_partition()[rank].1)).collect()
+}
+
+/// Advance `a` sequences `steps` tokens through ONE batched M-row pass
+/// per step ([`decode_batch_fused`]) on a real node.
+fn run_batched_decode(
+    cfg: &TransformerConfig,
+    seed: u64,
+    a: usize,
+    steps: usize,
+) -> Vec<BatchDecodeTrace> {
+    let heap = build_serve_heap(cfg);
+    let cfg2 = cfg.clone();
+    run_node(heap, move |ctx| {
+        let rank = ctx.rank();
+        let compute =
+            NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, seed), rank);
+        let mut shards = decode_shards(&cfg2, rank, a);
+        let mut hs = decode_seeds(&cfg2, a);
+        let mut round = 0u64;
+        for _ in 0..steps {
+            let mut refs: Vec<&mut KvShard> = shards.iter_mut().collect();
+            hs = decode_batch_fused(&ctx, &cfg2, &compute, &mut refs, &hs, &mut round)
+                .expect("batched decode step");
+        }
+        let kv = shards
+            .iter()
+            .map(|s| (0..cfg2.n_layers).map(|l| s.valid_kv(l)).collect())
+            .collect();
+        (hs, kv)
+    })
+}
+
+/// The per-sequence comparator: the same `a` sequences advanced one
+/// [`decode_step_fused`] call each per step (the pre-batching serving
+/// path — one full protocol round per layer per sequence).
+fn run_sequential_decode(
+    cfg: &TransformerConfig,
+    seed: u64,
+    a: usize,
+    steps: usize,
+) -> Vec<BatchDecodeTrace> {
+    let heap = build_serve_heap(cfg);
+    let cfg2 = cfg.clone();
+    run_node(heap, move |ctx| {
+        let rank = ctx.rank();
+        let compute =
+            NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, seed), rank);
+        let mut shards = decode_shards(&cfg2, rank, a);
+        let seeds = decode_seeds(&cfg2, a);
+        let mut hidden: Vec<Tensor> = (0..a).map(|i| seeds.rows(i, i + 1)).collect();
+        let mut round = 0u64;
+        for step in 0..steps {
+            for (i, shard) in shards.iter_mut().enumerate() {
+                let next = decode_step_fused(
+                    &ctx,
+                    &cfg2,
+                    &compute,
+                    shard,
+                    &hidden[i],
+                    step % cfg2.world,
+                    &mut round,
+                )
+                .expect("sequential decode step");
+                hidden[i] = next;
+            }
+        }
+        let kv = shards
+            .iter()
+            .map(|s| (0..cfg2.n_layers).map(|l| s.valid_kv(l)).collect())
+            .collect();
+        (Tensor::concat_rows(&hidden), kv)
+    })
+}
+
+#[test]
+fn batched_decode_bitwise_equals_sequential_fused_decode() {
+    // the PR's acceptance criterion: one fused [A, d_model] pass per
+    // layer per step must equal advancing each sequence alone through
+    // decode_step_fused BIT FOR BIT — outputs and post-step KV caches —
+    // for world ∈ {1, 2, 4, 5} (4 and 5 exceed tiny_ragged's 3 heads:
+    // empty shards), even and ragged geometry, and A ∈ {1, decode_batch}
+    let seed = 4100;
+    let steps = 3;
+    for world in [1usize, 2, 4, 5] {
+        for cfg in [TransformerConfig::tiny(world), TransformerConfig::tiny_ragged(world)] {
+            for a in [1usize, cfg.decode_batch] {
+                let batched = run_batched_decode(&cfg, seed, a, steps);
+                let sequential = run_sequential_decode(&cfg, seed, a, steps);
+                assert_eq!(batched.len(), world);
+                for (rank, (b, s)) in batched.iter().zip(&sequential).enumerate() {
+                    assert_eq!(b.0, s.0, "world {world} A {a} rank {rank}: hidden batch");
+                    assert_eq!(b.1, s.1, "world {world} A {a} rank {rank}: KV caches");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_decode_matches_token_by_token_oracle() {
+    // semantic anchor for the bitwise test above: each batched row must
+    // also track the single-process reference decoder within float
+    // tolerance (ties the batched math to the actual model)
+    let seed = 4101;
+    let cfg = TransformerConfig::tiny_ragged(3);
+    let (a, steps) = (3usize, 4usize);
+    let got = run_batched_decode(&cfg, seed, a, steps);
+    for i in 0..a {
+        let mut dec = ReferenceDecoder::new(
+            cfg.clone(),
+            NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
+        );
+        let mut h = taxfree::workloads::transformer::token_embedding(&cfg, 1000 + i as u64);
+        for _ in 0..steps {
+            h = dec.step(&h);
+        }
+        for (hs, _) in &got {
+            hs.rows(i, i + 1).assert_allclose(&h, 1e-3, 1e-3);
+        }
+    }
+}
+
+#[test]
+fn mixed_prefill_and_batched_decode_scheduler_equals_oracle() {
+    // the scheduler-level acceptance slice: decode-phase sequences fused
+    // into batched passes while another sequence's chunked prefill
+    // interleaves in the same steps, across even/ragged geometry and
+    // worlds with empty head shards — every per-sequence result equals
+    // the single-process oracle
+    let seed = 4102;
+    for world in [2usize, 5] {
+        for cfg in [TransformerConfig::tiny(world), TransformerConfig::tiny_ragged(world)] {
+            let reqs = vec![
+                Request { id: 0, prompt_len: 1, gen_len: 4 },
+                Request { id: 1, prompt_len: 1, gen_len: 3 },
+                Request { id: 2, prompt_len: 7, gen_len: 2 },
+            ];
+            let cfg2 = cfg.clone();
+            let report = serve_continuous(&cfg, reqs.clone(), 3, move |rank| {
+                NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, seed), rank)
+            })
+            .expect("batched continuous serve");
+            for req in &reqs {
+                let mut dec = ReferenceDecoder::new(
+                    cfg.clone(),
+                    NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
+                );
+                let h = dec.run_request(req.id as u64, req.prompt_len, req.gen_len);
+                let got = report.results.iter().find(|r| r.id == req.id).expect("result");
+                got.final_hidden.assert_allclose(&h, 1e-3, 1e-3);
+            }
+        }
     }
 }
 
