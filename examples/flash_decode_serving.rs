@@ -30,7 +30,7 @@ fn main() {
 
     println!("== distributed flash decode, 4 functional ranks, 256-token KV ==");
     for strategy in FlashDecodeStrategy::ALL {
-        let outs = flash_decode::run(&cfg, strategy, &q, &ks, &vs, 1);
+        let outs = flash_decode::run(&cfg, strategy, &q, &ks, &vs, 1).expect("flash_decode node");
         let worst = outs.iter().map(|o| o.max_abs_diff(&expect)).fold(0.0f32, f32::max);
         println!(
             "  {:<20} max |O - O_ref| = {:.2e} on all ranks  OK",

@@ -31,7 +31,7 @@ fn main() {
 
     println!("== functional node: C = all_gather(A_shards) . B on 4 ranks ==");
     for strategy in AgGemmStrategy::ALL {
-        let outs = ag_gemm::run(&cfg, strategy, &a, &b, 1);
+        let outs = ag_gemm::run(&cfg, strategy, &a, &b, 1).expect("ag_gemm node");
         let worst = outs
             .iter()
             .map(|c| c.max_abs_diff(&expect))

@@ -38,9 +38,9 @@ fn main() {
     let expect = matmul(&act, &w);
 
     println!("== TP layer forward on 8 functional ranks ==");
-    let pull = ag_gemm::run(&cfg, AgGemmStrategy::Pull, &act, &w, 1);
-    let push = ag_gemm::run(&cfg, AgGemmStrategy::Push, &act, &w, 1);
-    let base = ag_gemm::run(&cfg, AgGemmStrategy::BaselineBsp, &act, &w, 1);
+    let pull = ag_gemm::run(&cfg, AgGemmStrategy::Pull, &act, &w, 1).expect("pull node");
+    let push = ag_gemm::run(&cfg, AgGemmStrategy::Push, &act, &w, 1).expect("push node");
+    let base = ag_gemm::run(&cfg, AgGemmStrategy::BaselineBsp, &act, &w, 1).expect("bsp node");
     assert_eq!(pull, push, "pull and push must agree bitwise (same tile kernel)");
     for (name, outs) in [("baseline", &base), ("pull", &pull), ("push", &push)] {
         let worst = outs.iter().map(|c| c.max_abs_diff(&expect)).fold(0.0f32, f32::max);
@@ -89,8 +89,8 @@ fn main() {
     let expect2 = matmul(&act2, &w2);
 
     println!("\n== TP layer down-projection (GEMM+RS) on 8 functional ranks ==");
-    let bsp = gemm_rs::run(&rs_cfg, GemmRsStrategy::BaselineBsp, &act2, &w2, 1);
-    let fused = gemm_rs::run(&rs_cfg, GemmRsStrategy::FusedTiles, &act2, &w2, 1);
+    let bsp = gemm_rs::run(&rs_cfg, GemmRsStrategy::BaselineBsp, &act2, &w2, 1).expect("bsp node");
+    let fused = gemm_rs::run(&rs_cfg, GemmRsStrategy::FusedTiles, &act2, &w2, 1).expect("fused node");
     assert_eq!(bsp, fused, "fused GEMM+RS must agree bitwise with the BSP composition");
     let worst = gemm_rs::gather_output(&fused).max_abs_diff(&expect2);
     println!("  fused == BSP bitwise; max error vs dense reference {worst:.2e} (ragged N/K)");

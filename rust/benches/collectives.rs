@@ -64,7 +64,7 @@ fn main() {
     for strategy in AgGemmStrategy::ALL {
         let rounds = 20u64;
         let timer = taxfree::clock::WallTimer::start();
-        let _ = ag_gemm::run(&cfg, strategy, &a, &b, rounds);
+        let _ = ag_gemm::run(&cfg, strategy, &a, &b, rounds).expect("ag_gemm node");
         t2.row(vec![
             strategy.name().to_string(),
             format!("{:.1} us", timer.elapsed_s() / rounds as f64 * 1e6),
@@ -78,7 +78,7 @@ fn main() {
     for strategy in FlashDecodeStrategy::ALL {
         let rounds = 50u64;
         let timer = taxfree::clock::WallTimer::start();
-        let _ = flash_decode::run(&fcfg, strategy, &q, &ks, &vs, rounds);
+        let _ = flash_decode::run(&fcfg, strategy, &q, &ks, &vs, rounds).expect("flash_decode node");
         t3.row(vec![
             strategy.name().to_string(),
             format!("{:.1} us", timer.elapsed_s() / rounds as f64 * 1e6),

@@ -37,7 +37,7 @@ fn main() {
     for strategy in GemmRsStrategy::ALL {
         let rounds = 20u64;
         let timer = taxfree::clock::WallTimer::start();
-        let _ = gemm_rs::run(&cfg, strategy, &a, &b, rounds);
+        let _ = gemm_rs::run(&cfg, strategy, &a, &b, rounds).expect("gemm_rs node");
         t.row(vec![
             strategy.name().to_string(),
             format!("{:.1} us", timer.elapsed_s() / rounds as f64 * 1e6),

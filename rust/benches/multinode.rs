@@ -1,0 +1,86 @@
+//! Bench: the two-tier fabric figure (flat vs hierarchical all-reduce
+//! across (nodes × gpus_per_node) grids) on the calibrated model, plus
+//! wall-clock of the *functional* hierarchical collective vs the flat
+//! fold on a simulated NIC-bridged world — and the bitwise-equality
+//! spot-check that makes the swap safe. criterion is unavailable
+//! offline; this is a `harness = false` bench reporting through the
+//! crate's own Summary/Table.
+//!
+//! Run: `cargo bench --offline --bench multinode`
+
+use taxfree::clock::measure;
+use taxfree::collectives::{all_reduce_hierarchical, all_reduce_sum, hier_allreduce_heap};
+use taxfree::config::presets;
+use taxfree::experiments::ext_multinode;
+use taxfree::fabric::Topology;
+use taxfree::iris::{run_node, HeapBuilder};
+use taxfree::util::{Prng, Summary};
+
+fn main() {
+    let hw = presets::mi300x();
+    let seed = 7;
+
+    // the modeled figure (Llama-70B-class prefill-chunk exchange)
+    let rows = ext_multinode::sweep(&hw, seed, 50);
+    ext_multinode::render(&rows, &hw).print();
+    if let Some(best) = rows
+        .iter()
+        .filter(|r| r.nodes > 1)
+        .max_by(|a, b| a.nic_saving.partial_cmp(&b.nic_saving).unwrap())
+    {
+        println!(
+            "\nbest NIC saving: {:.2}x at ({} nodes x {} GPUs)",
+            best.nic_saving, best.nodes, best.gpus_per_node
+        );
+    }
+
+    // functional: the hierarchical collective really produces the flat
+    // fold's bits on a 2x4 world (and how fast the simulated node runs it)
+    let topo = Topology::hierarchical(2, 4);
+    let n = 4096usize;
+    let send = |rank: usize| -> Vec<f32> {
+        let mut rng = Prng::new(99 ^ rank as u64);
+        (0..n).map(|i| (rng.next_f32() - 0.5) * (1.0 + (i % 5) as f32)).collect()
+    };
+    let seg_max = n.div_ceil(topo.world());
+    let flat_heap = std::sync::Arc::new(
+        HeapBuilder::new(topo.world())
+            .buffer("ar", 2 * topo.world() * seg_max)
+            .flags("arf", 2 * topo.world())
+            .build(),
+    );
+    let flat = run_node(flat_heap, move |ctx| {
+        all_reduce_sum(&ctx, &send(ctx.rank()), "ar", "arf", 1)
+    });
+    let hier = run_node(hier_allreduce_heap(&topo, n), move |ctx| {
+        all_reduce_hierarchical(&ctx, &send(ctx.rank()), 1).expect("hier all-reduce")
+    });
+    assert_eq!(flat, hier, "hierarchical must reproduce the flat fold bitwise");
+    println!("\nfunctional 2x4 hierarchical all-reduce: bitwise-equal to the flat fold ({n} lanes)");
+
+    let samples = measure(2, 8, || {
+        let outs = run_node(hier_allreduce_heap(&topo, n), move |ctx| {
+            all_reduce_hierarchical(&ctx, &send(ctx.rank()), 1).expect("hier all-reduce")
+        });
+        assert_eq!(outs.len(), topo.world());
+    });
+    let s = Summary::of(&samples);
+    println!(
+        "functional node wall-clock: {:.2} ms mean, {:.2} ms p99 per all-reduce",
+        s.mean / 1e6,
+        s.p99 / 1e6
+    );
+
+    // harness cost: how fast the DES regenerates the whole figure
+    let samples = measure(2, 10, || {
+        let r = ext_multinode::sweep(&hw, seed, 10);
+        assert_eq!(r.len(), ext_multinode::GRID.len());
+    });
+    let s = Summary::of(&samples);
+    println!(
+        "\nbench multinode: full figure ({} grid points x 2 strategies x 10 iters) in {:.2} ms mean, {:.2} ms p99",
+        ext_multinode::GRID.len(),
+        s.mean / 1e6,
+        s.p99 / 1e6
+    );
+}

@@ -1,6 +1,6 @@
 //! Collective operations over the iris substrate.
 //!
-//! Two families:
+//! Three families:
 //!
 //! * **BSP collectives** (`*_bsp`) — the RCCL-like baseline: a global
 //!   barrier on entry (wait for all producers), the data exchange as a
@@ -13,6 +13,14 @@
 //!   signal flags instead of global barriers, so a consumer *may* proceed
 //!   per-source. Used both standalone and as the building block of the
 //!   fine-grained strategies.
+//! * **Hierarchical collectives** ([`all_reduce_hierarchical`]) — the
+//!   multi-node tier: when the heap's [`crate::fabric::Topology`] spans
+//!   NIC-bridged nodes, the flat push order would drag every peer's
+//!   contribution over the NIC; the hierarchical schedule keeps raw
+//!   gathers on the intra-node fabric, crosses each NIC once per segment
+//!   group per hop, and relays on the far side — bit-identical results
+//!   at a fraction of the NIC traffic (see the function docs for why
+//!   bit-exactness forbids the classic intra-node pre-reduction).
 //!
 //! **Buffer conventions.** Collectives operate on named symmetric-heap
 //! buffers declared by the caller. An all-gather over segments of `len`
@@ -43,8 +51,58 @@
 //! collectives treat them as fatal protocol bugs and `expect()` them,
 //! which fails the engine loudly with the structured message.
 
-use crate::iris::{IrisError, RankCtx};
+use std::sync::Arc;
+
+use crate::fabric::Topology;
+use crate::iris::{HeapBuilder, IrisError, RankCtx, SymmetricHeap};
 use crate::util::partition;
+
+// ---- hierarchical all-reduce heap layout (see all_reduce_hierarchical) ----
+
+/// Stage-A staging: raw per-source contributions gathered on each node's
+/// segment representatives, `world * ceil(n/world)` elements (one slot per
+/// (represented segment, local source)).
+pub const HIER_STAGE: &str = "hier_stage";
+/// One flag per (represented segment, local source): `world` flags.
+pub const HIER_STAGE_FLAGS: &str = "hier_stage_ready";
+/// Stage-B chain staging: the running cross-node accumulator, one slot per
+/// represented segment (`nodes * ceil(n/world)` elements).
+pub const HIER_CHAIN: &str = "hier_chain";
+/// One flag per represented segment: `nodes` flags.
+pub const HIER_CHAIN_FLAGS: &str = "hier_chain_ready";
+/// Final-total delivery slot (each rank owns exactly one segment):
+/// `ceil(n/world)` elements.
+pub const HIER_TOTAL: &str = "hier_total";
+/// One flag: the owner's total arrived.
+pub const HIER_TOTAL_FLAGS: &str = "hier_total_ready";
+/// Stage-C gather staging: every reduced segment, `world * ceil(n/world)`
+/// elements (slot per segment).
+pub const HIER_OUT: &str = "hier_out";
+/// One flag per segment: `world` flags.
+pub const HIER_OUT_FLAGS: &str = "hier_out_ready";
+
+/// Declare the [`all_reduce_hierarchical`] buffers on a heap builder for a
+/// payload of `n` elements over `topo` (callers embedding the collective
+/// in a larger heap chain this onto their own declarations).
+pub fn declare_hier_allreduce(b: HeapBuilder, topo: &Topology, n: usize) -> HeapBuilder {
+    let w = topo.world();
+    let seg_max = n.div_ceil(w);
+    b.buffer(HIER_STAGE, w * seg_max)
+        .flags(HIER_STAGE_FLAGS, w)
+        .buffer(HIER_CHAIN, topo.nodes() * seg_max)
+        .flags(HIER_CHAIN_FLAGS, topo.nodes())
+        .buffer(HIER_TOTAL, seg_max)
+        .flags(HIER_TOTAL_FLAGS, 1)
+        .buffer(HIER_OUT, w * seg_max)
+        .flags(HIER_OUT_FLAGS, w)
+}
+
+/// Build a standalone heap for [`all_reduce_hierarchical`] over `topo`
+/// with payloads of `n` elements.
+pub fn hier_allreduce_heap(topo: &Topology, n: usize) -> Arc<SymmetricHeap> {
+    let b = HeapBuilder::new(topo.world()).topology(topo.clone());
+    Arc::new(declare_hier_allreduce(b, topo, n).build())
+}
 
 /// Direct (clique) all-gather with push semantics and flag completion.
 /// Rank r stores its `send` segment into slot r of every peer's `data_buf`
@@ -96,7 +154,7 @@ pub fn all_gather_pull(
     }
     let mut out = vec![0.0f32; w * len];
     out[r * len..(r + 1) * len].copy_from_slice(send);
-    for s in ctx.peers().collect::<Vec<_>>() {
+    for s in ctx.peers() {
         ctx.wait_flag_ge(flag_buf, s, round).expect("all_gather_pull wait");
         let seg = ctx.remote_load_vec(s, data_buf, s * len, len).expect("all_gather_pull load");
         out[s * len..(s + 1) * len].copy_from_slice(&seg);
@@ -259,6 +317,160 @@ pub fn all_reduce_sum(
         }
     }
     out
+}
+
+/// Hierarchical all-reduce (sum) over a two-tier
+/// [`Topology`]: intra-node traffic rides the Infinity-Fabric clique, and
+/// only one running accumulator per segment group plus one reduced
+/// segment per (owner, remote node) ever crosses a NIC — about `1/g` of
+/// the NIC bytes the flat exchange moves on a `nodes × g` world.
+///
+/// **Bitwise contract.** The result is *bit-identical* to the flat
+/// [`all_reduce_sum`] / [`crate::serve::fused_allreduce_exchange`] fold
+/// (contributions summed in global rank order into a zeroed accumulator).
+/// f32 addition is not associative, so a classic intra-node
+/// *pre-reduction* would change the association and the bits; instead the
+/// schedule moves the association's *state* rather than re-associating:
+///
+/// 1. **Intra-node gather** (tier 1): every rank hands its raw
+///    contribution of segment `s` to its node's representative of `s`
+///    (the node-mate sharing `s`'s local index) — no summing yet.
+/// 2. **Cross-node chain** (tier 2): for each segment, the
+///    representatives chain in node order; each receives the running
+///    accumulator from the previous node, folds its node's raw
+///    contributions on top *in rank order*, and forwards it. Ranks are
+///    node-major, so this replays the flat fold's exact operation
+///    sequence. The last node delivers the total to the segment's owner.
+/// 3. **Intra-node all-gather** (tiers 2 then 1): each owner pushes its
+///    reduced segment to its node-mates directly and *once per remote
+///    node* over the NIC, where that node's representative relays it to
+///    its own mates.
+///
+/// The chain serializes `nodes - 1` NIC hops per segment — the latency
+/// price of bit-exactness; the DES twin
+/// ([`crate::workloads::multinode`]) prices both it and the NIC-byte
+/// saving against the flat push order.
+///
+/// **Cross-rank contract.** Every rank calls with the same `n =
+/// send.len()` and `round` over a heap declaring the
+/// [`declare_hier_allreduce`] layout (and the matching
+/// [`crate::iris::HeapBuilder::topology`]); segments follow
+/// [`crate::util::partition`] (ragged tails and `n < world` included;
+/// empty segments still run the full signal protocol). Data slots are
+/// reused across rounds — like the other collectives, repeated rounds
+/// with changing payloads need a barrier between rounds.
+pub fn all_reduce_hierarchical(
+    ctx: &RankCtx,
+    send: &[f32],
+    round: u64,
+) -> Result<Vec<f32>, IrisError> {
+    let topo = ctx.topology().clone();
+    let (r, w) = (ctx.rank(), ctx.world());
+    let (g, nn) = (topo.gpus_per_node(), topo.nodes());
+    let (nd, li) = (topo.node_of(r), topo.local_index(r));
+    let n = send.len();
+    let parts = partition(n, w);
+    let seg_max = n.div_ceil(w);
+
+    // ---- stage A: intra-node gather of raw contributions (tier 1) ----
+    // my slice of segment s goes to my node's representative of s (the
+    // node-mate sharing s's local index), slot (segment group, my local
+    // index) — raw, unsummed, so stage B can replay the flat fold
+    for s in 0..w {
+        let rep = nd * g + s % g;
+        let (off, len) = parts[s];
+        let slot = ((s / g) * g + li) * seg_max;
+        let piece = &send[off..off + len];
+        if rep == r {
+            ctx.store_local(HIER_STAGE, slot, piece)?;
+        } else {
+            ctx.remote_store(rep, HIER_STAGE, slot, piece)?;
+        }
+        ctx.signal(rep, HIER_STAGE_FLAGS, (s / g) * g + li)?;
+    }
+
+    // ---- stage B: cross-node chain in node order (tier 2) ----
+    // I represent segment m*g + li of every segment group m on my node
+    for m in 0..nn {
+        let s = m * g + li;
+        let len = parts[s].1;
+        let mut acc = if nd == 0 {
+            // head of the chain: the flat fold's zeroed accumulator
+            vec![0.0f32; len]
+        } else {
+            ctx.wait_flag_ge(HIER_CHAIN_FLAGS, m, round)?;
+            ctx.load_local_vec(HIER_CHAIN, m * seg_max, len)?
+        };
+        // fold this node's raw contributions in global rank order — the
+        // exact operation sequence of the flat reduction, continued
+        for j in 0..g {
+            ctx.wait_flag_ge(HIER_STAGE_FLAGS, m * g + j, round)?;
+            let contrib = ctx.load_local_vec(HIER_STAGE, (m * g + j) * seg_max, len)?;
+            for (a, c) in acc.iter_mut().zip(&contrib) {
+                *a += c;
+            }
+        }
+        if nd + 1 < nn {
+            let next = (nd + 1) * g + li;
+            ctx.remote_store(next, HIER_CHAIN, m * seg_max, &acc)?;
+            ctx.signal(next, HIER_CHAIN_FLAGS, m)?;
+        } else if s == r {
+            // last node and I own the segment: the total stays here
+            ctx.store_local(HIER_TOTAL, 0, &acc)?;
+            ctx.signal(r, HIER_TOTAL_FLAGS, 0)?;
+        } else {
+            ctx.remote_store(s, HIER_TOTAL, 0, &acc)?;
+            ctx.signal(s, HIER_TOTAL_FLAGS, 0)?;
+        }
+    }
+
+    // ---- stage C: hierarchical all-gather of the reduced segments ----
+    // owner: node-mates directly (tier 1), one push per remote node
+    // (tier 2) to that node's representative, which relays locally
+    let my_len = parts[r].1;
+    ctx.wait_flag_ge(HIER_TOTAL_FLAGS, 0, round)?;
+    let total = ctx.load_local_vec(HIER_TOTAL, 0, my_len)?;
+    ctx.store_local(HIER_OUT, r * seg_max, &total)?;
+    ctx.signal(r, HIER_OUT_FLAGS, r)?;
+    for j in 0..g {
+        let mate = nd * g + j;
+        if mate != r {
+            ctx.remote_store(mate, HIER_OUT, r * seg_max, &total)?;
+            ctx.signal(mate, HIER_OUT_FLAGS, r)?;
+        }
+    }
+    for dn in 1..nn {
+        let rep = ((nd + dn) % nn) * g + li;
+        ctx.remote_store(rep, HIER_OUT, r * seg_max, &total)?;
+        ctx.signal(rep, HIER_OUT_FLAGS, r)?;
+    }
+    // relay duties: forward each remote-owned segment I represent to my
+    // node-mates as soon as its owner's NIC push lands
+    for m in 0..nn {
+        if m == nd {
+            continue;
+        }
+        let s = m * g + li;
+        let len = parts[s].1;
+        ctx.wait_flag_ge(HIER_OUT_FLAGS, s, round)?;
+        let seg = ctx.load_local_vec(HIER_OUT, s * seg_max, len)?;
+        for j in 0..g {
+            let mate = nd * g + j;
+            if mate != r {
+                ctx.remote_store(mate, HIER_OUT, s * seg_max, &seg)?;
+                ctx.signal(mate, HIER_OUT_FLAGS, s)?;
+            }
+        }
+    }
+    // assemble the full sum
+    let mut out = vec![0.0f32; n];
+    for s in 0..w {
+        ctx.wait_flag_ge(HIER_OUT_FLAGS, s, round)?;
+        let (off, len) = parts[s];
+        let seg = ctx.load_local_vec(HIER_OUT, s * seg_max, len)?;
+        out[off..off + len].copy_from_slice(&seg);
+    }
+    Ok(out)
 }
 
 /// Reduce-scatter (sum): returns this rank's reduced segment (segment `r`
@@ -610,6 +822,89 @@ mod tests {
             .collect();
         for o in outs {
             assert_eq!(o, expect);
+        }
+    }
+
+    /// Per-rank payload with mixed magnitudes so f32 addition order is
+    /// observable: any re-association of the sum changes low-order bits.
+    fn hier_send(rank: usize, n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::Prng::new(seed ^ (rank as u64).wrapping_mul(0x9E37));
+        (0..n).map(|i| (rng.next_f32() - 0.5) * (1.0 + (i % 5) as f32 * 7.25)).collect()
+    }
+
+    #[test]
+    fn hierarchical_allreduce_bitwise_equals_flat_for_all_grid_shapes() {
+        // the acceptance criterion: the hierarchical exchange reproduces
+        // the flat fused fold BIT FOR BIT — world ∈ {1, 2, 4, 8} via
+        // (nodes, gpus_per_node) ∈ {(1,1), (2,1), (1,2), (1,4), (2,2),
+        // (2,4), (4,2)}, with even, ragged, and n < world segment splits
+        for (nn, g) in [(1usize, 1usize), (2, 1), (1, 2), (1, 4), (2, 2), (2, 4), (4, 2)] {
+            let topo = Topology::hierarchical(nn, g);
+            let w = topo.world();
+            for n in [40usize, 37, 5] {
+                let seed = 7_000 + (nn * 100 + g * 10) as u64 + n as u64;
+                // flat reference on a clique heap
+                let flat_heap = reduce_heap(w, n);
+                let flat = run_node(flat_heap, move |ctx| {
+                    all_reduce_sum(&ctx, &hier_send(ctx.rank(), n, seed), "ar", "arf", 1)
+                });
+                // hierarchical on the two-tier heap
+                let hier = run_node(hier_allreduce_heap(&topo, n), move |ctx| {
+                    all_reduce_hierarchical(&ctx, &hier_send(ctx.rank(), n, seed), 1)
+                        .expect("hierarchical all-reduce")
+                });
+                // exact reference: the flat fold replayed locally —
+                // contributions summed in rank order into a zeroed acc
+                let sends: Vec<Vec<f32>> = (0..w).map(|r| hier_send(r, n, seed)).collect();
+                let mut expect = vec![0.0f32; n];
+                for s in &sends {
+                    for (a, c) in expect.iter_mut().zip(s) {
+                        *a += c;
+                    }
+                }
+                for r in 0..w {
+                    assert_eq!(flat[r], expect, "flat ({nn},{g}) n={n} rank {r}");
+                    assert_eq!(hier[r], expect, "hier ({nn},{g}) n={n} rank {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_allreduce_repeated_rounds() {
+        let topo = Topology::hierarchical(2, 2);
+        let n = 9usize;
+        let outs = run_node(hier_allreduce_heap(&topo, n), move |ctx| {
+            let mut last = Vec::new();
+            for round in 1..=4u64 {
+                let send: Vec<f32> =
+                    (0..n).map(|i| (ctx.rank() * n + i) as f32 + round as f32).collect();
+                last = all_reduce_hierarchical(&ctx, &send, round).expect("hier round");
+                ctx.barrier(); // payload changes between rounds
+            }
+            last
+        });
+        let expect: Vec<f32> =
+            (0..n).map(|i| (0..4).map(|r| (r * n + i) as f32 + 4.0).sum()).collect();
+        for o in outs {
+            assert_eq!(o, expect);
+        }
+    }
+
+    #[test]
+    fn hierarchical_allreduce_empty_payload_keeps_flags_in_lockstep() {
+        let topo = Topology::hierarchical(2, 2);
+        // heap sized for the larger round; the empty round still signals
+        let n = 4usize;
+        let outs = run_node(hier_allreduce_heap(&topo, n), move |ctx| {
+            let empty = all_reduce_hierarchical(&ctx, &[], 1).expect("empty round");
+            assert!(empty.is_empty());
+            ctx.barrier();
+            let send: Vec<f32> = (0..n).map(|i| (ctx.rank() + i) as f32).collect();
+            all_reduce_hierarchical(&ctx, &send, 2).expect("second round")
+        });
+        for o in outs {
+            assert_eq!(o.len(), n);
         }
     }
 

@@ -44,6 +44,18 @@ pub struct HwConfig {
     /// Aggregate fabric bandwidth cap per GPU, bytes/second. With 7 peers a
     /// rank cannot exceed this even if all links are busy.
     pub fabric_aggregate_bw: f64,
+    /// Tier-2 NIC bandwidth per node-pair link, bytes/second per direction
+    /// (RDMA over a 400 GbE-class NIC). Only exercised when the
+    /// [`crate::fabric::Topology`] spans more than one node: every
+    /// cross-node transfer is priced at this rate instead of `link_bw`.
+    pub nic_bw: f64,
+    /// Per-message latency of a cross-node NIC transfer, seconds (an order
+    /// of magnitude above `link_latency_s`: host NIC, switch, and far-side
+    /// delivery).
+    pub nic_latency_s: f64,
+    /// Achievable fraction of `nic_bw` for RDMA payloads (protocol and
+    /// congestion overheads; the NIC analogue of `rma_store_eff`).
+    pub nic_eff: f64,
     /// Remote *store* efficiency relative to `link_bw` (§5.2: pushes move
     /// data more efficiently than pulls on this fabric).
     pub rma_store_eff: f64,
@@ -115,6 +127,15 @@ impl HwConfig {
         if self.rma_store_eff <= 0.0 || self.rma_load_eff <= 0.0 {
             errs.push("rma efficiencies must be positive".to_string());
         }
+        if self.nic_bw <= 0.0 {
+            errs.push("nic_bw must be positive".to_string());
+        }
+        if self.nic_latency_s < 0.0 {
+            errs.push("nic_latency_s must be non-negative".to_string());
+        }
+        if !(0.0 < self.nic_eff && self.nic_eff <= 1.0) {
+            errs.push("nic_eff must be in (0,1]".to_string());
+        }
         if !(0.0 < self.pull_eff_penalty && self.pull_eff_penalty <= 1.0) {
             errs.push("pull_eff_penalty must be in (0,1]".to_string());
         }
@@ -144,6 +165,9 @@ impl HwConfig {
             "link_bw" => self.link_bw = fv()?,
             "link_latency_s" => self.link_latency_s = fv()?,
             "fabric_aggregate_bw" => self.fabric_aggregate_bw = fv()?,
+            "nic_bw" => self.nic_bw = fv()?,
+            "nic_latency_s" => self.nic_latency_s = fv()?,
+            "nic_eff" => self.nic_eff = fv()?,
             "rma_store_eff" => self.rma_store_eff = fv()?,
             "rma_load_eff" => self.rma_load_eff = fv()?,
             "skew_sigma" => self.skew_sigma = fv()?,
@@ -203,5 +227,28 @@ mod tests {
         let mut hw2 = presets::mi300x();
         hw2.fabric_aggregate_bw = hw2.link_bw / 2.0;
         assert!(hw2.validate().is_err());
+    }
+
+    #[test]
+    fn nic_fields_parse_and_validate() {
+        let mut hw = presets::mi300x();
+        // the second tier is an order of magnitude below the first
+        assert!(hw.nic_bw < hw.link_bw);
+        assert!(hw.nic_latency_s > hw.link_latency_s);
+        hw.set_field("nic_bw", "1e11").unwrap();
+        hw.set_field("nic_latency_s", "5e-6").unwrap();
+        hw.set_field("nic_eff", "0.9").unwrap();
+        assert_eq!(hw.nic_bw, 1e11);
+        assert_eq!(hw.nic_latency_s, 5e-6);
+        assert_eq!(hw.nic_eff, 0.9);
+        hw.validate().unwrap();
+        hw.nic_bw = 0.0;
+        assert!(hw.validate().unwrap_err().contains("nic_bw"));
+        let mut hw2 = presets::mi300x();
+        hw2.nic_eff = 1.5;
+        assert!(hw2.validate().unwrap_err().contains("nic_eff"));
+        let mut hw3 = presets::mi300x();
+        hw3.nic_latency_s = -1.0;
+        assert!(hw3.validate().is_err());
     }
 }

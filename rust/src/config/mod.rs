@@ -472,6 +472,63 @@ impl BatchDecodeConfig {
     }
 }
 
+/// Multi-node all-reduce exchange parameters — the DES twin of the
+/// two-tier fabric ([`crate::workloads::multinode`]): one cross-rank
+/// partial-sum exchange of `elems` f32 lanes (an `[M, d_model]`
+/// activation's Wo/MLP partials) on a `nodes × gpus_per_node` world,
+/// priced two ways — the flat fused push order (every peer treated as one
+/// hop, the single-clique assumption) vs the hierarchical schedule
+/// (intra-node gather, one accumulator chain hop per NIC, relay on the
+/// far side — the functional twin is
+/// [`crate::collectives::all_reduce_hierarchical`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultinodeConfig {
+    /// Elements of the all-reduced activation (M rows × d_model).
+    pub elems: usize,
+    /// Compute nodes (NIC-bridged; one link per node pair).
+    pub nodes: usize,
+    /// GPUs per node (the intra-node Infinity-Fabric clique).
+    pub gpus_per_node: usize,
+}
+
+impl MultinodeConfig {
+    /// A Llama-70B-class prefill chunk's exchange: 64 rows of d_model
+    /// 8192, on `nodes` nodes of 8 GPUs.
+    pub fn paper_multinode(nodes: usize) -> MultinodeConfig {
+        MultinodeConfig { elems: 64 * 8192, nodes, gpus_per_node: 8 }
+    }
+
+    /// Small configuration for tests: 40 elements is ragged over every
+    /// world this grid produces.
+    pub fn tiny(nodes: usize, gpus_per_node: usize) -> MultinodeConfig {
+        MultinodeConfig { elems: 40, nodes, gpus_per_node }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes == 0 || self.gpus_per_node == 0 {
+            return Err("nodes and gpus_per_node must be positive".into());
+        }
+        if self.elems == 0 {
+            return Err("elems must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// The two-tier world this exchange runs on.
+    pub fn topology(&self) -> crate::fabric::Topology {
+        crate::fabric::Topology::hierarchical(self.nodes, self.gpus_per_node)
+    }
+
+    pub fn world(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Segment per rank (ragged; tails may be empty).
+    pub fn partition(&self) -> Vec<(usize, usize)> {
+        crate::util::partition(self.elems, self.world())
+    }
+}
+
 /// Flash-Decode workload parameters (paper §4.2 / §5.3, Figs. 10–11).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlashDecodeConfig {
@@ -673,6 +730,26 @@ mod tests {
             PrefillConfig::tiny(w).validate().unwrap();
             BatchDecodeConfig::tiny(w).validate().unwrap();
         }
+    }
+
+    #[test]
+    fn multinode_config_validates_and_partitions() {
+        for (nn, g) in [(1usize, 4usize), (2, 2), (2, 4), (4, 2)] {
+            let cfg = MultinodeConfig::tiny(nn, g);
+            cfg.validate().unwrap();
+            assert_eq!(cfg.world(), nn * g);
+            assert_eq!(cfg.topology().nodes(), nn);
+            assert_eq!(cfg.partition().iter().map(|(_, l)| l).sum::<usize>(), cfg.elems);
+        }
+        for nodes in [2usize, 4] {
+            MultinodeConfig::paper_multinode(nodes).validate().unwrap();
+        }
+        let mut bad = MultinodeConfig::tiny(2, 2);
+        bad.elems = 0;
+        assert!(bad.validate().is_err());
+        bad = MultinodeConfig::tiny(2, 2);
+        bad.nodes = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -33,6 +33,12 @@ pub fn mi300x() -> HwConfig {
         link_bw: 128e9,
         link_latency_s: 2e-6,
         fabric_aggregate_bw: 896e9,
+        // tier 2: 400 GbE-class RDMA NIC per node pair (50 GB/s), an
+        // order of magnitude below Infinity Fabric in both bandwidth and
+        // latency — the regime arXiv:2507.14392 / 2408.10197 characterize
+        nic_bw: 50e9,
+        nic_latency_s: 10e-6,
+        nic_eff: 0.85,
         // paper §5.2: stores beat loads; calibrated 15% edge
         rma_store_eff: 0.92,
         rma_load_eff: 0.80,
@@ -61,6 +67,9 @@ pub fn mi325x() -> HwConfig {
         link_bw: 128e9,
         link_latency_s: 2e-6,
         fabric_aggregate_bw: 896e9,
+        nic_bw: 50e9,
+        nic_latency_s: 10e-6,
+        nic_eff: 0.85,
         rma_store_eff: 0.92,
         rma_load_eff: 0.80,
         skew_sigma: 0.06,
@@ -79,6 +88,8 @@ pub fn slow_fabric() -> HwConfig {
     hw.link_bw /= 2.0;
     hw.fabric_aggregate_bw /= 2.0;
     hw.link_latency_s *= 2.0;
+    hw.nic_bw /= 2.0;
+    hw.nic_latency_s *= 2.0;
     hw
 }
 

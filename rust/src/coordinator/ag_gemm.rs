@@ -19,7 +19,9 @@
 use std::sync::Arc;
 
 use crate::config::AgGemmConfig;
-use crate::iris::{run_node, HeapBuilder, RankCtx, SymmetricHeap};
+use crate::iris::{
+    collect_rank_outcomes, run_node, HeapBuilder, IrisError, RankCtx, SymmetricHeap,
+};
 use crate::kernels::gemm_tile::gemm_tile_acc_prequant;
 use crate::tensor::linalg::matmul;
 use crate::tensor::Tensor;
@@ -53,11 +55,12 @@ impl AgGemmStrategy {
     }
 }
 
-/// Heap buffer names used by the AG+GEMM protocols.
-const BUF_SHARD: &str = "ag_a_shard"; // own shard, panel-major
-const BUF_INBOX: &str = "ag_inbox"; // W shard slots, panel-major
-const FLAGS_PANEL: &str = "ag_panel_ready"; // W * n_panels
-const FLAGS_AG: &str = "ag_collective"; // W (baseline collective)
+/// Heap buffer names used by the AG+GEMM protocols (public so failure
+/// tests can assert which flag array a dead producer starved).
+pub const BUF_SHARD: &str = "ag_a_shard"; // own shard, panel-major
+pub const BUF_INBOX: &str = "ag_inbox"; // W shard slots, panel-major
+pub const FLAGS_PANEL: &str = "ag_panel_ready"; // W * n_panels
+pub const FLAGS_AG: &str = "ag_collective"; // W (baseline collective)
 
 /// Panel geometry of one shard.
 #[derive(Debug, Clone, Copy)]
@@ -137,32 +140,35 @@ fn b_rows_for(b: &Tensor, cfg: &AgGemmConfig, s: usize, panel: usize) -> Tensor 
 
 /// The per-rank engine body: runs `rounds` iterations of `strategy` and
 /// returns the final C. `round` starts at 1 (flag targets are monotone).
-fn engine_body(
+/// Public so failure-injection tests can drive individual ranks (and kill
+/// some mid-protocol); heap errors and dead-peer waits surface as typed
+/// [`IrisError`]s, never panics.
+pub fn run_rank(
     ctx: &RankCtx,
     cfg: &AgGemmConfig,
     strategy: AgGemmStrategy,
     a_shard_pm: &[f32],
     b: &Tensor,
     rounds: u64,
-) -> Tensor {
+) -> Result<Tensor, IrisError> {
     let p = Panels::of(cfg);
     // publish own shard in own heap region once (weights/activations are
     // resident before the operation starts)
-    ctx.store_local(BUF_SHARD, 0, a_shard_pm).expect("publish A shard");
+    ctx.store_local(BUF_SHARD, 0, a_shard_pm)?;
     ctx.barrier();
 
     let mut c = Tensor::zeros(&[cfg.m, cfg.n]);
     for round in 1..=rounds {
         c = match strategy {
-            AgGemmStrategy::BaselineBsp => baseline_round(ctx, cfg, p, a_shard_pm, b, round),
-            AgGemmStrategy::Pull => pull_round(ctx, cfg, p, b),
-            AgGemmStrategy::Push => push_round(ctx, cfg, p, a_shard_pm, b, round),
+            AgGemmStrategy::BaselineBsp => baseline_round(ctx, cfg, p, a_shard_pm, b, round)?,
+            AgGemmStrategy::Pull => pull_round(ctx, cfg, p, b)?,
+            AgGemmStrategy::Push => push_round(ctx, cfg, p, a_shard_pm, b, round)?,
         };
         // iterations of the same op are serialized per the measurement
         // protocol (§5.1 times one op at a time)
         ctx.barrier();
     }
-    c
+    Ok(c)
 }
 
 /// Baseline: blocking collective, then vendor GEMM (paper §4.1.2).
@@ -173,30 +179,34 @@ fn baseline_round(
     a_shard_pm: &[f32],
     b: &Tensor,
     round: u64,
-) -> Tensor {
+) -> Result<Tensor, IrisError> {
     let gathered =
         crate::collectives::all_gather_bsp(ctx, a_shard_pm, BUF_INBOX, FLAGS_AG, round);
     let a_full = assemble_full_a(&gathered, cfg, p);
     // torch.matmul analogue: one monolithic dense GEMM
-    matmul(&a_full, b)
+    Ok(matmul(&a_full, b))
 }
 
 /// Algorithm 1 — Pull model. The inner loop's `tl.load` of A is replaced
 /// by a remote load from the owning rank; sync is implicit (the load
 /// blocks until data arrives).
-fn pull_round(ctx: &RankCtx, cfg: &AgGemmConfig, p: Panels, b: &Tensor) -> Tensor {
+fn pull_round(
+    ctx: &RankCtx,
+    cfg: &AgGemmConfig,
+    p: Panels,
+    b: &Tensor,
+) -> Result<Tensor, IrisError> {
     let mut acc = vec![0.0f32; cfg.m * cfg.n];
     for s in 0..cfg.world {
         for panel in 0..p.n_panels {
             // RemotePull(A_s(k)) — local copy when s == rank
-            let a_panel = ctx
-                .remote_load_vec(s, BUF_SHARD, panel * p.panel_elems, p.panel_elems)
-                .expect("pull A panel");
+            let a_panel =
+                ctx.remote_load_vec(s, BUF_SHARD, panel * p.panel_elems, p.panel_elems)?;
             let b_rows = b_rows_for(b, cfg, s, panel);
             gemm_tile_acc_prequant(&mut acc, &a_panel, b_rows.data(), p.m, p.block_k, cfg.n);
         }
     }
-    Tensor::from_vec(&[cfg.m, cfg.n], acc)
+    Ok(Tensor::from_vec(&[cfg.m, cfg.n], acc))
 }
 
 /// Algorithms 2+3 — Push model: stage-1 push kernel + stage-2 wait&compute.
@@ -210,21 +220,20 @@ fn push_round(
     a_shard_pm: &[f32],
     b: &Tensor,
     round: u64,
-) -> Tensor {
+) -> Result<Tensor, IrisError> {
     let r = ctx.rank();
     let shard_elems = p.m * p.k_shard;
 
     // ---- Stage 1: push kernel (Algorithm 2) ----
+    // peer order from the topology: intra-node first, then cross-node
     for panel in 0..p.n_panels {
         let tile = &a_shard_pm[panel * p.panel_elems..(panel + 1) * p.panel_elems];
         // own inbox slot first (RemotePush is a local copy for s == r)
-        ctx.store_local(BUF_INBOX, r * shard_elems + panel * p.panel_elems, tile)
-            .expect("push panel to own inbox");
-        ctx.signal(r, FLAGS_PANEL, r * p.n_panels + panel).expect("signal own panel");
+        ctx.store_local(BUF_INBOX, r * shard_elems + panel * p.panel_elems, tile)?;
+        ctx.signal(r, FLAGS_PANEL, r * p.n_panels + panel)?;
         for d in ctx.peers() {
-            ctx.remote_store(d, BUF_INBOX, r * shard_elems + panel * p.panel_elems, tile)
-                .expect("push panel to peer");
-            ctx.signal(d, FLAGS_PANEL, r * p.n_panels + panel).expect("signal peer panel");
+            ctx.remote_store(d, BUF_INBOX, r * shard_elems + panel * p.panel_elems, tile)?;
+            ctx.signal(d, FLAGS_PANEL, r * p.n_panels + panel)?;
         }
     }
 
@@ -232,16 +241,14 @@ fn push_round(
     let mut acc = vec![0.0f32; cfg.m * cfg.n];
     for s in 0..cfg.world {
         for panel in 0..p.n_panels {
-            ctx.wait_flag_ge(FLAGS_PANEL, s * p.n_panels + panel, round)
-                .expect("push-model panel wait");
+            ctx.wait_flag_ge(FLAGS_PANEL, s * p.n_panels + panel, round)?;
             let base = s * shard_elems + panel * p.panel_elems;
-            let a_panel =
-                ctx.load_local_vec(BUF_INBOX, base, p.panel_elems).expect("load inbox panel");
+            let a_panel = ctx.load_local_vec(BUF_INBOX, base, p.panel_elems)?;
             let b_rows = b_rows_for(b, cfg, s, panel);
             gemm_tile_acc_prequant(&mut acc, &a_panel, b_rows.data(), p.m, p.block_k, cfg.n);
         }
     }
-    Tensor::from_vec(&[cfg.m, cfg.n], acc)
+    Ok(Tensor::from_vec(&[cfg.m, cfg.n], acc))
 }
 
 /// Run one AG+GEMM operation on a fresh functional node; returns every
@@ -251,14 +258,17 @@ fn push_round(
 /// panel from its owner on demand; Push producers `remote_store` each
 /// panel into every peer's inbox slot and `signal` the (source, panel)
 /// flag, with consumers spin-waiting per panel — flags are monotone per
-/// `round`, so repeated rounds need no reset.
+/// `round`, so repeated rounds need no reset. A heap/protocol failure on
+/// any rank comes back as the node's **root-cause** [`IrisError`]
+/// (structured errors outrank the secondary timeouts peers hit waiting on
+/// the failed rank) instead of a panic.
 pub fn run(
     cfg: &AgGemmConfig,
     strategy: AgGemmStrategy,
     a: &Tensor,
     b: &Tensor,
     rounds: u64,
-) -> Vec<Tensor> {
+) -> Result<Vec<Tensor>, IrisError> {
     cfg.validate().expect("invalid AgGemmConfig");
     assert_eq!(a.dims(), &[cfg.m, cfg.k]);
     assert_eq!(b.dims(), &[cfg.k, cfg.n]);
@@ -273,10 +283,10 @@ pub fn run(
         a.shard_cols(cfg.world).iter().map(|s| to_panel_major(s, p)).collect();
     let heap = build_heap(cfg);
     let cfg = cfg.clone();
-    run_node(heap, move |ctx| {
+    collect_rank_outcomes(run_node(heap, move |ctx| {
         let shard = &shards[ctx.rank()];
-        engine_body(&ctx, &cfg, strategy, shard, &b, rounds)
-    })
+        run_rank(&ctx, &cfg, strategy, shard, &b, rounds)
+    }))
 }
 
 #[cfg(test)]
@@ -296,7 +306,7 @@ mod tests {
     fn check_strategy(cfg: &AgGemmConfig, strategy: AgGemmStrategy, seed: u64) {
         let (a, b) = inputs(cfg, seed);
         let expect = matmul(&a, &b);
-        let outs = run(cfg, strategy, &a, &b, 1);
+        let outs = run(cfg, strategy, &a, &b, 1).expect("ag_gemm node");
         assert_eq!(outs.len(), cfg.world);
         for (r, c) in outs.iter().enumerate() {
             // fp16 operands, f32 accumulate: tolerance scales with K
@@ -332,12 +342,12 @@ mod tests {
         // baseline differs only by monolithic-GEMM summation order.
         let cfg = AgGemmConfig { m: 6, n: 10, k: 16, world: 4, block_m: 4, block_n: 4, block_k: 2 };
         let (a, b) = inputs(&cfg, 80);
-        let pull = run(&cfg, AgGemmStrategy::Pull, &a, &b, 1);
-        let push = run(&cfg, AgGemmStrategy::Push, &a, &b, 1);
+        let pull = run(&cfg, AgGemmStrategy::Pull, &a, &b, 1).expect("pull node");
+        let push = run(&cfg, AgGemmStrategy::Push, &a, &b, 1).expect("push node");
         for (cp, cq) in pull.iter().zip(&push) {
             assert_eq!(cp, cq, "pull and push must agree bitwise");
         }
-        let base = run(&cfg, AgGemmStrategy::BaselineBsp, &a, &b, 1);
+        let base = run(&cfg, AgGemmStrategy::BaselineBsp, &a, &b, 1).expect("bsp node");
         base[0].assert_allclose(&pull[0], 1e-3, 1e-3);
     }
 
@@ -346,7 +356,7 @@ mod tests {
         let cfg = AgGemmConfig::tiny(4);
         let (a, b) = inputs(&cfg, 81);
         let expect = matmul(&a, &b);
-        let outs = run(&cfg, AgGemmStrategy::Push, &a, &b, 5);
+        let outs = run(&cfg, AgGemmStrategy::Push, &a, &b, 5).expect("push node");
         for c in outs {
             c.assert_allclose(&expect, 1e-2, 2e-2);
         }

@@ -11,7 +11,9 @@
 use std::sync::Arc;
 
 use crate::config::FlashDecodeConfig;
-use crate::iris::{run_node, HeapBuilder, RankCtx, SymmetricHeap};
+use crate::iris::{
+    collect_rank_outcomes, run_node, HeapBuilder, IrisError, RankCtx, SymmetricHeap,
+};
 use crate::kernels::attention::{flash_decode_partial, PartialState};
 use crate::kernels::combine::{combine_all, OnlineCombiner};
 use crate::tensor::Tensor;
@@ -53,9 +55,11 @@ impl FlashDecodeStrategy {
     }
 }
 
-const BUF_INBOX: &str = "fd_inbox"; // W partial-state slots (wire layout)
-const FLAGS_PARTIAL: &str = "fd_ready"; // W flags: partial s arrived
-const FLAGS_AG: &str = "fd_collective"; // W flags for the BSP collective
+/// Heap buffer names (public so failure tests can assert which flag
+/// array a dead producer starved).
+pub const BUF_INBOX: &str = "fd_inbox"; // W partial-state slots (wire layout)
+pub const FLAGS_PARTIAL: &str = "fd_ready"; // W flags: partial s arrived
+pub const FLAGS_AG: &str = "fd_collective"; // W flags for the BSP collective
 
 /// Build the symmetric heap for a Flash-Decode node.
 pub fn build_heap(cfg: &FlashDecodeConfig) -> Arc<SymmetricHeap> {
@@ -85,7 +89,7 @@ fn bsp_round(
     v: &Tensor,
     round: u64,
     rccl: bool,
-) -> Tensor {
+) -> Result<Tensor, IrisError> {
     let p = local_partial(cfg, q, k, v);
     let wire = p.to_wire();
     let gathered = if rccl {
@@ -99,7 +103,7 @@ fn bsp_round(
     let partials: Vec<PartialState> = (0..cfg.world)
         .map(|s| PartialState::from_wire(&gathered[s * wl..(s + 1) * wl], cfg.q_heads, cfg.head_dim))
         .collect();
-    combine_all(&partials, cfg.q_heads, cfg.head_dim)
+    Ok(combine_all(&partials, cfg.q_heads, cfg.head_dim))
 }
 
 /// §4.2.4 Fine-Grained Waits: push side unchanged in spirit (a producer
@@ -113,30 +117,31 @@ fn fine_grained_round(
     k: &Tensor,
     v: &Tensor,
     round: u64,
-) -> Tensor {
+) -> Result<Tensor, IrisError> {
     let r = ctx.rank();
     let wl = PartialState::wire_len(cfg.q_heads, cfg.head_dim);
     let p = local_partial(cfg, q, k, v);
     let wire = p.to_wire();
 
-    // producer side: deliver to own inbox + all peers, signalling per tile
-    ctx.store_local(BUF_INBOX, r * wl, &wire).expect("publish own partial");
-    ctx.signal(r, FLAGS_PARTIAL, r).expect("signal own partial");
+    // producer side: deliver to own inbox + all peers (topology push
+    // order: intra-node first), signalling per tile
+    ctx.store_local(BUF_INBOX, r * wl, &wire)?;
+    ctx.signal(r, FLAGS_PARTIAL, r)?;
     for d in ctx.peers() {
-        ctx.remote_store(d, BUF_INBOX, r * wl, &wire).expect("push partial");
-        ctx.signal(d, FLAGS_PARTIAL, r).expect("signal partial");
+        ctx.remote_store(d, BUF_INBOX, r * wl, &wire)?;
+        ctx.signal(d, FLAGS_PARTIAL, r)?;
     }
 
     // consumer side: fine-grained waits — fold in source s as soon as its
     // flag arrives (own partial is already local, fold it first)
     let mut comb = OnlineCombiner::new(cfg.q_heads, cfg.head_dim);
     comb.add(&p);
-    for s in ctx.peers().collect::<Vec<_>>() {
-        ctx.wait_flag_ge(FLAGS_PARTIAL, s, round).expect("fine-grained wait");
-        let data = ctx.load_local_vec(BUF_INBOX, s * wl, wl).expect("load partial");
+    for s in ctx.peers() {
+        ctx.wait_flag_ge(FLAGS_PARTIAL, s, round)?;
+        let data = ctx.load_local_vec(BUF_INBOX, s * wl, wl)?;
         comb.add(&PartialState::from_wire(&data, cfg.q_heads, cfg.head_dim));
     }
-    comb.finish()
+    Ok(comb.finish())
 }
 
 /// §4.2.5 / Algorithm 4 — Fully Fused: one logical kernel. Part 1 computes
@@ -154,36 +159,68 @@ fn fused_round(
     k: &Tensor,
     v: &Tensor,
     round: u64,
-) -> Tensor {
+) -> Result<Tensor, IrisError> {
     let r = ctx.rank();
     let wl = PartialState::wire_len(cfg.q_heads, cfg.head_dim);
 
-    // Part 1: fused local attention + asynchronous push
+    // Part 1: fused local attention + asynchronous push (topology push
+    // order: intra-node peers drain before the NIC tier)
     let p = local_partial(cfg, q, k, v);
     let wire = p.to_wire();
     for d in ctx.peers() {
-        ctx.remote_store(d, BUF_INBOX, r * wl, &wire).expect("fused push partial");
-        ctx.signal(d, FLAGS_PARTIAL, r).expect("fused signal partial");
+        ctx.remote_store(d, BUF_INBOX, r * wl, &wire)?;
+        ctx.signal(d, FLAGS_PARTIAL, r)?;
     }
     // own slot is a local copy
-    ctx.store_local(BUF_INBOX, r * wl, &wire).expect("fused publish own partial");
-    ctx.signal(r, FLAGS_PARTIAL, r).expect("fused signal own partial");
+    ctx.store_local(BUF_INBOX, r * wl, &wire)?;
+    ctx.signal(r, FLAGS_PARTIAL, r)?;
 
     // Part 2: concurrent global reduction (spin-wait per source, fold on
     // arrival; iteration order staggered by rank)
     let mut comb = OnlineCombiner::new(cfg.q_heads, cfg.head_dim);
     for s in std::iter::once(r).chain(ctx.peers()) {
-        ctx.wait_flag_ge(FLAGS_PARTIAL, s, round).expect("fused reduction wait");
-        let data = ctx.load_local_vec(BUF_INBOX, s * wl, wl).expect("fused load partial");
+        ctx.wait_flag_ge(FLAGS_PARTIAL, s, round)?;
+        let data = ctx.load_local_vec(BUF_INBOX, s * wl, wl)?;
         comb.add(&PartialState::from_wire(&data, cfg.q_heads, cfg.head_dim));
     }
-    comb.finish()
+    Ok(comb.finish())
+}
+
+/// The per-rank engine body: `rounds` iterations of `strategy` over this
+/// rank's KV shard. Public so failure-injection tests can drive
+/// individual ranks (and kill some mid-protocol); heap errors and
+/// dead-peer waits surface as typed [`IrisError`]s, never panics.
+pub fn run_rank(
+    ctx: &RankCtx,
+    cfg: &FlashDecodeConfig,
+    strategy: FlashDecodeStrategy,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    rounds: u64,
+) -> Result<Tensor, IrisError> {
+    let mut out = Tensor::zeros(&[cfg.q_heads, cfg.head_dim]);
+    for round in 1..=rounds {
+        out = match strategy {
+            FlashDecodeStrategy::BaselineBsp => bsp_round(ctx, cfg, q, k, v, round, true)?,
+            FlashDecodeStrategy::IrisAgBsp => bsp_round(ctx, cfg, q, k, v, round, false)?,
+            FlashDecodeStrategy::FineGrainedWaits => {
+                fine_grained_round(ctx, cfg, q, k, v, round)?
+            }
+            FlashDecodeStrategy::FullyFused => fused_round(ctx, cfg, q, k, v, round)?,
+        };
+        ctx.barrier(); // serialize iterations (measurement protocol)
+    }
+    Ok(out)
 }
 
 /// Run `rounds` iterations of `strategy` on a fresh functional node.
 /// `k_shards[r]` / `v_shards[r]` are rank r's KV shard, shaped
 /// [heads * kv_len_local, dim]. Returns every rank's final output
-/// [heads, dim] (identical across ranks up to combine order).
+/// [heads, dim] (identical across ranks up to combine order). A
+/// heap/protocol failure on any rank comes back as the node's
+/// **root-cause** [`IrisError`] (structured errors outrank the secondary
+/// timeouts peers hit waiting on the failed rank) instead of a panic.
 pub fn run(
     cfg: &FlashDecodeConfig,
     strategy: FlashDecodeStrategy,
@@ -191,7 +228,7 @@ pub fn run(
     k_shards: &[Tensor],
     v_shards: &[Tensor],
     rounds: u64,
-) -> Vec<Tensor> {
+) -> Result<Vec<Tensor>, IrisError> {
     cfg.validate().expect("invalid FlashDecodeConfig");
     assert_eq!(
         cfg.kv_heads, cfg.q_heads,
@@ -204,23 +241,10 @@ pub fn run(
     let q = q.clone();
     let k_shards = k_shards.to_vec();
     let v_shards = v_shards.to_vec();
-    run_node(heap, move |ctx| {
+    collect_rank_outcomes(run_node(heap, move |ctx| {
         let r = ctx.rank();
-        let (k, v) = (&k_shards[r], &v_shards[r]);
-        let mut out = Tensor::zeros(&[cfg.q_heads, cfg.head_dim]);
-        for round in 1..=rounds {
-            out = match strategy {
-                FlashDecodeStrategy::BaselineBsp => bsp_round(&ctx, &cfg, &q, k, v, round, true),
-                FlashDecodeStrategy::IrisAgBsp => bsp_round(&ctx, &cfg, &q, k, v, round, false),
-                FlashDecodeStrategy::FineGrainedWaits => {
-                    fine_grained_round(&ctx, &cfg, &q, k, v, round)
-                }
-                FlashDecodeStrategy::FullyFused => fused_round(&ctx, &cfg, &q, k, v, round),
-            };
-            ctx.barrier(); // serialize iterations (measurement protocol)
-        }
-        out
-    })
+        run_rank(&ctx, &cfg, strategy, &q, &k_shards[r], &v_shards[r], rounds)
+    }))
 }
 
 /// Build random fp16 Q and per-rank KV shards plus the concatenated full
@@ -269,7 +293,7 @@ mod tests {
     fn check(cfg: &FlashDecodeConfig, strategy: FlashDecodeStrategy, seed: u64) {
         let (q, ks, vs, kf, vf) = make_inputs(cfg, seed);
         let expect = decode_attention_ref(&q, &kf, &vf, cfg.q_heads, cfg.kv_len_global);
-        let outs = run(cfg, strategy, &q, &ks, &vs, 1);
+        let outs = run(cfg, strategy, &q, &ks, &vs, 1).expect("flash_decode node");
         assert_eq!(outs.len(), cfg.world);
         for o in outs {
             o.assert_allclose(&expect, 3e-3, 3e-3);
@@ -312,13 +336,14 @@ mod tests {
     fn all_strategies_agree_closely() {
         let cfg = FlashDecodeConfig::tiny(4);
         let (q, ks, vs, _, _) = make_inputs(&cfg, 130);
-        let base = run(&cfg, FlashDecodeStrategy::BaselineBsp, &q, &ks, &vs, 1);
+        let base = run(&cfg, FlashDecodeStrategy::BaselineBsp, &q, &ks, &vs, 1)
+            .expect("bsp node");
         for s in [
             FlashDecodeStrategy::IrisAgBsp,
             FlashDecodeStrategy::FineGrainedWaits,
             FlashDecodeStrategy::FullyFused,
         ] {
-            let outs = run(&cfg, s, &q, &ks, &vs, 1);
+            let outs = run(&cfg, s, &q, &ks, &vs, 1).expect("node");
             for (a, b) in outs.iter().zip(&base) {
                 a.assert_allclose(b, 1e-5, 1e-5);
             }
@@ -330,7 +355,8 @@ mod tests {
         let cfg = FlashDecodeConfig::tiny(4);
         let (q, ks, vs, kf, vf) = make_inputs(&cfg, 131);
         let expect = decode_attention_ref(&q, &kf, &vf, cfg.q_heads, cfg.kv_len_global);
-        let outs = run(&cfg, FlashDecodeStrategy::FullyFused, &q, &ks, &vs, 7);
+        let outs = run(&cfg, FlashDecodeStrategy::FullyFused, &q, &ks, &vs, 7)
+            .expect("fused node");
         for o in outs {
             o.assert_allclose(&expect, 3e-3, 3e-3);
         }

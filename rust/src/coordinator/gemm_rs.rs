@@ -33,7 +33,9 @@
 use std::sync::Arc;
 
 use crate::config::GemmRsConfig;
-use crate::iris::{run_node, HeapBuilder, RankCtx, SymmetricHeap};
+use crate::iris::{
+    collect_rank_outcomes, run_node, HeapBuilder, IrisError, RankCtx, SymmetricHeap,
+};
 use crate::kernels::gemm_tile::gemm_tile_acc_prequant;
 use crate::tensor::Tensor;
 
@@ -60,10 +62,11 @@ impl GemmRsStrategy {
     }
 }
 
-/// Heap buffer names used by the GEMM+RS protocols.
-const BUF_PART: &str = "rs_partial_inbox"; // W producer slots of M × seg_max
-const FLAGS_TILE: &str = "rs_tile_ready"; // W * tiles_max (fused path)
-const FLAGS_BSP: &str = "rs_collective"; // W (baseline block exchange)
+/// Heap buffer names used by the GEMM+RS protocols (public so failure
+/// tests can assert which flag array a dead producer starved).
+pub const BUF_PART: &str = "rs_partial_inbox"; // W producer slots of M × seg_max
+pub const FLAGS_TILE: &str = "rs_tile_ready"; // W * tiles_max (fused path)
+pub const FLAGS_BSP: &str = "rs_collective"; // W (baseline block exchange)
 
 /// Build the symmetric heap for a GEMM+RS node.
 pub fn build_heap(cfg: &GemmRsConfig) -> Arc<SymmetricHeap> {
@@ -94,32 +97,34 @@ fn partial_block(
 }
 
 /// The per-rank engine body: runs `rounds` iterations and returns this
-/// rank's reduced segment [M, len_r].
-fn engine_body(
+/// rank's reduced segment [M, len_r]. Public so failure-injection tests
+/// can drive individual ranks (and kill some mid-protocol); heap errors
+/// and dead-peer waits surface as typed [`IrisError`]s, never panics.
+pub fn run_rank(
     ctx: &RankCtx,
     cfg: &GemmRsConfig,
     strategy: GemmRsStrategy,
     a_shard: &Tensor,
     b_shard: &Tensor,
     rounds: u64,
-) -> Tensor {
+) -> Result<Tensor, IrisError> {
     let parts = cfg.n_partition();
     let my_len = parts[ctx.rank()].1;
     let mut seg = Tensor::zeros(&[cfg.m, my_len]);
     for round in 1..=rounds {
         seg = match strategy {
             GemmRsStrategy::BaselineBsp => {
-                bsp_round(ctx, cfg, &parts, a_shard, b_shard, round)
+                bsp_round(ctx, cfg, &parts, a_shard, b_shard, round)?
             }
             GemmRsStrategy::FusedTiles => {
-                fused_round(ctx, cfg, &parts, a_shard, b_shard, round)
+                fused_round(ctx, cfg, &parts, a_shard, b_shard, round)?
             }
         };
         // iterations of the same op are serialized per the measurement
         // protocol (data slots are reused; flags are monotone)
         ctx.barrier();
     }
-    seg
+    Ok(seg)
 }
 
 /// Baseline: monolithic partial GEMM, then a barrier-wrapped block
@@ -131,7 +136,7 @@ fn bsp_round(
     a_shard: &Tensor,
     b_shard: &Tensor,
     round: u64,
-) -> Tensor {
+) -> Result<Tensor, IrisError> {
     let (r, w) = (ctx.rank(), ctx.world());
     let (m, seg_max) = (cfg.m, cfg.seg_max());
     let k_r = a_shard.dims()[1];
@@ -145,9 +150,9 @@ fn bsp_round(
     ctx.barrier();
 
     // 3) the exchange "kernel": each rank delivers segment s of its
-    //    partial into rank s's slot r
-    for d in 0..w {
-        let s = (r + d) % w;
+    //    partial into rank s's slot r (own segment first, then peers in
+    //    the topology's node-aware order)
+    for s in std::iter::once(r).chain(ctx.peers()) {
         let (off, len) = parts[s];
         if len > 0 {
             let mut block = Vec::with_capacity(m * len);
@@ -155,14 +160,12 @@ fn bsp_round(
                 block.extend_from_slice(&partial[i * cfg.n + off..i * cfg.n + off + len]);
             }
             if s == r {
-                ctx.store_local(BUF_PART, r * m * seg_max, &block)
-                    .expect("bsp local block store");
+                ctx.store_local(BUF_PART, r * m * seg_max, &block)?;
             } else {
-                ctx.remote_store(s, BUF_PART, r * m * seg_max, &block)
-                    .expect("bsp block push");
+                ctx.remote_store(s, BUF_PART, r * m * seg_max, &block)?;
             }
         }
-        ctx.signal(s, FLAGS_BSP, r).expect("bsp block signal");
+        ctx.signal(s, FLAGS_BSP, r)?;
     }
 
     // 4) exit barrier: wait for the whole collective to complete
@@ -173,17 +176,15 @@ fn bsp_round(
     let (_, my_len) = parts[r];
     let mut acc = vec![0.0f32; cfg.m * my_len];
     for src in 0..w {
-        ctx.wait_flag_ge(FLAGS_BSP, src, round).expect("bsp reduce wait");
+        ctx.wait_flag_ge(FLAGS_BSP, src, round)?;
         if my_len > 0 {
-            let contrib = ctx
-                .load_local_vec(BUF_PART, src * m * seg_max, m * my_len)
-                .expect("bsp contribution load");
+            let contrib = ctx.load_local_vec(BUF_PART, src * m * seg_max, m * my_len)?;
             for (a, c) in acc.iter_mut().zip(&contrib) {
                 *a += c;
             }
         }
     }
-    Tensor::from_vec(&[cfg.m, my_len], acc)
+    Ok(Tensor::from_vec(&[cfg.m, my_len], acc))
 }
 
 /// Fused: compute one (consumer, tile) block at a time, push it into the
@@ -198,25 +199,26 @@ fn fused_round(
     a_shard: &Tensor,
     b_shard: &Tensor,
     round: u64,
-) -> Tensor {
+) -> Result<Tensor, IrisError> {
     let (r, w) = (ctx.rank(), ctx.world());
     let (m, seg_max, tiles_max) = (cfg.m, cfg.seg_max(), cfg.tiles_max());
     let k_r = a_shard.dims()[1];
 
     // ---- producer: tile-granular compute + immediate push ----
-    // staggered consumer order spreads link load (own segment first)
-    for d in 0..w {
-        let s = (r + d) % w;
+    // consumer order from the topology (own segment first, then
+    // intra-node peers, then cross-node ranks): cheap links drain first,
+    // and NIC serialization never delays an Infinity-Fabric push
+    for s in std::iter::once(r).chain(ctx.peers()) {
         let (off, len) = parts[s];
         for (t, &(c0, tl)) in cfg.seg_tiles(len).iter().enumerate() {
             let block = partial_block(a_shard, b_shard, m, k_r, off, c0, tl);
             let slot = s_slot(r, m, seg_max) + m * c0;
             if s == r {
-                ctx.store_local(BUF_PART, slot, &block).expect("fused local tile store");
+                ctx.store_local(BUF_PART, slot, &block)?;
             } else {
-                ctx.remote_store(s, BUF_PART, slot, &block).expect("fused tile push");
+                ctx.remote_store(s, BUF_PART, slot, &block)?;
             }
-            ctx.signal(s, FLAGS_TILE, r * tiles_max + t).expect("fused tile signal");
+            ctx.signal(s, FLAGS_TILE, r * tiles_max + t)?;
         }
     }
 
@@ -229,11 +231,8 @@ fn fused_round(
     let tiles = cfg.seg_tiles(my_len);
     for src in 0..w {
         for (t, &(c0, tl)) in tiles.iter().enumerate() {
-            ctx.wait_flag_ge(FLAGS_TILE, src * tiles_max + t, round)
-                .expect("fused reduce wait");
-            let blk = ctx
-                .load_local_vec(BUF_PART, s_slot(src, m, seg_max) + m * c0, m * tl)
-                .expect("fused tile load");
+            ctx.wait_flag_ge(FLAGS_TILE, src * tiles_max + t, round)?;
+            let blk = ctx.load_local_vec(BUF_PART, s_slot(src, m, seg_max) + m * c0, m * tl)?;
             for i in 0..m {
                 for j in 0..tl {
                     acc[i * my_len + c0 + j] += blk[i * tl + j];
@@ -241,7 +240,7 @@ fn fused_round(
             }
         }
     }
-    Tensor::from_vec(&[cfg.m, my_len], acc)
+    Ok(Tensor::from_vec(&[cfg.m, my_len], acc))
 }
 
 /// Offset of producer `src`'s staging slot in a consumer's inbox.
@@ -252,14 +251,17 @@ fn s_slot(src: usize, m: usize, seg_max: usize) -> usize {
 /// Run one GEMM+RS operation on a fresh functional node; returns every
 /// rank's reduced column segment ([M, len_r] per [`GemmRsConfig::n_partition`]).
 /// `a` is the full (M, K) activation (column-sharded internally), `b` the
-/// full (K, N) weight (row-sharded internally).
+/// full (K, N) weight (row-sharded internally). A heap/protocol failure on
+/// any rank comes back as the node's **root-cause** [`IrisError`]
+/// (structured errors outrank the secondary timeouts peers hit waiting on
+/// the failed rank) instead of a panic.
 pub fn run(
     cfg: &GemmRsConfig,
     strategy: GemmRsStrategy,
     a: &Tensor,
     b: &Tensor,
     rounds: u64,
-) -> Vec<Tensor> {
+) -> Result<Vec<Tensor>, IrisError> {
     cfg.validate().expect("invalid GemmRsConfig");
     assert_eq!(a.dims(), &[cfg.m, cfg.k]);
     assert_eq!(b.dims(), &[cfg.k, cfg.n]);
@@ -273,10 +275,10 @@ pub fn run(
     let b_shards = b.shard_rows_ragged(&k_parts);
     let heap = build_heap(cfg);
     let cfg = cfg.clone();
-    run_node(heap, move |ctx| {
+    collect_rank_outcomes(run_node(heap, move |ctx| {
         let r = ctx.rank();
-        engine_body(&ctx, &cfg, strategy, &a_shards[r], &b_shards[r], rounds)
-    })
+        run_rank(&ctx, &cfg, strategy, &a_shards[r], &b_shards[r], rounds)
+    }))
 }
 
 /// Reassemble the full (M, N) sum from the per-rank segments (test /
@@ -304,7 +306,7 @@ mod tests {
     fn check_strategy(cfg: &GemmRsConfig, strategy: GemmRsStrategy, seed: u64) {
         let (a, b) = inputs(cfg, seed);
         let expect = matmul(&a, &b);
-        let outs = run(cfg, strategy, &a, &b, 1);
+        let outs = run(cfg, strategy, &a, &b, 1).expect("gemm_rs node");
         assert_eq!(outs.len(), cfg.world);
         let parts = cfg.n_partition();
         for (r, seg) in outs.iter().enumerate() {
@@ -338,8 +340,8 @@ mod tests {
         for w in [1usize, 2, 3, 4, 8] {
             let cfg = GemmRsConfig { m: 4, n: 13, k: 9, world: w, block_n: 2 };
             let (a, b) = inputs(&cfg, 220 + w as u64);
-            let bsp = run(&cfg, GemmRsStrategy::BaselineBsp, &a, &b, 1);
-            let fused = run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 1);
+            let bsp = run(&cfg, GemmRsStrategy::BaselineBsp, &a, &b, 1).expect("bsp node");
+            let fused = run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 1).expect("fused node");
             for (r, (x, y)) in bsp.iter().zip(&fused).enumerate() {
                 assert_eq!(x, y, "world {w} rank {r}: BSP and fused must agree bitwise");
             }
@@ -350,8 +352,8 @@ mod tests {
     fn multi_round_flags_stay_consistent() {
         let cfg = GemmRsConfig::tiny(4);
         let (a, b) = inputs(&cfg, 230);
-        let expect = run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 1);
-        let many = run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 7);
+        let expect = run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 1).expect("fused node");
+        let many = run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 7).expect("fused node");
         assert_eq!(expect, many);
     }
 
@@ -366,7 +368,7 @@ mod tests {
     fn n_smaller_than_world_leaves_empty_segments() {
         let cfg = GemmRsConfig { m: 2, n: 3, k: 8, world: 4, block_n: 2 };
         let (a, b) = inputs(&cfg, 242);
-        let outs = run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 1);
+        let outs = run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 1).expect("fused node");
         assert_eq!(outs[3].dims(), &[2, 0], "tail rank owns an empty segment");
         gather_output(&outs).assert_allclose(&matmul(&a, &b), 1e-2, 2e-2);
     }
@@ -385,7 +387,8 @@ mod tests {
         let b_shards = b.shard_rows_ragged(&k_parts);
         let traffic = run_node(heap, move |ctx| {
             let r = ctx.rank();
-            engine_body(&ctx, &cfg2, GemmRsStrategy::FusedTiles, &a_shards[r], &b_shards[r], 1);
+            run_rank(&ctx, &cfg2, GemmRsStrategy::FusedTiles, &a_shards[r], &b_shards[r], 1)
+                .expect("fused engine");
             ctx.barrier();
             (ctx.traffic().total_bytes(), ctx.traffic().total_messages())
         });

@@ -1,0 +1,221 @@
+//! Extension figure: the two-tier multi-node fabric — one Wo/MLP
+//! partial-sum all-reduce priced across (nodes × gpus_per_node) grids,
+//! two ways: the flat single-clique push order (what a coordinator blind
+//! to the node boundary pays) vs the hierarchical schedule
+//! ([`crate::workloads::multinode`]; functional twin
+//! [`crate::collectives::all_reduce_hierarchical`], bitwise-equal to the
+//! flat fold). The headline is the NIC column: the flat order drags
+//! `~2·gpus_per_node·(nodes-1)/nodes` payloads over the node-pair NICs
+//! while the hierarchical schedule crosses each NIC once per segment
+//! group per hop — a `~gpus_per_node×` traffic saving that turns into
+//! wall-clock once the NIC is the bottleneck resource.
+//!
+//! Like `batch_decode`, this experiment emits its rows as
+//! machine-readable JSON (`BENCH_multinode.json` by default) — the
+//! second perf-trajectory point CI diffs across commits.
+
+use crate::config::{HwConfig, MultinodeConfig};
+use crate::util::Table;
+use crate::workloads::multinode::{self, MultinodeStrategy};
+
+/// One row of the multinode figure.
+#[derive(Debug, Clone)]
+pub struct MultinodeRow {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub flat_ms: f64,
+    pub hier_ms: f64,
+    /// hierarchical speedup over the flat push order (> 1 once the NIC
+    /// dominates; the single-node row is exactly 1-ish by construction).
+    pub hier_vs_flat: f64,
+    /// NIC megabytes per all-reduce, per strategy (one representative
+    /// simulated exchange — traffic is seed-independent).
+    pub flat_nic_mb: f64,
+    pub hier_nic_mb: f64,
+    /// flat / hierarchical NIC traffic (the ~gpus_per_node× saving).
+    pub nic_saving: f64,
+}
+
+/// The (nodes, gpus_per_node) grid the figure sweeps — from the paper's
+/// single 8-GPU node out to a 4×8 NIC-bridged world.
+pub const GRID: [(usize, usize); 5] = [(1, 8), (2, 4), (2, 8), (4, 4), (4, 8)];
+
+/// Run the sweep: a Llama-70B-class prefill-chunk exchange (64 × 8192
+/// lanes) per grid point.
+pub fn sweep(hw: &HwConfig, seed: u64, iters: usize) -> Vec<MultinodeRow> {
+    GRID.iter()
+        .map(|&(nodes, gpus_per_node)| {
+            let cfg = MultinodeConfig { elems: 64 * 8192, nodes, gpus_per_node };
+            // one sweep per strategy: the first iteration's ledger rides
+            // along (traffic is seed-independent), so no extra simulation
+            // is spent on the NIC columns
+            let (flat_s, flat) = multinode::mean_latency_with_ledger(
+                &cfg,
+                hw,
+                MultinodeStrategy::FlatPush,
+                seed,
+                iters,
+            );
+            let (hier_s, hier) = multinode::mean_latency_with_ledger(
+                &cfg,
+                hw,
+                MultinodeStrategy::Hierarchical,
+                seed,
+                iters,
+            );
+            let (flat_ms, hier_ms) = (flat_s * 1e3, hier_s * 1e3);
+            let flat_nic_mb = flat.ledger.nic_bytes as f64 / 1e6;
+            let hier_nic_mb = hier.ledger.nic_bytes as f64 / 1e6;
+            MultinodeRow {
+                nodes,
+                gpus_per_node,
+                flat_ms,
+                hier_ms,
+                hier_vs_flat: flat_ms / hier_ms,
+                flat_nic_mb,
+                hier_nic_mb,
+                nic_saving: if hier_nic_mb > 0.0 { flat_nic_mb / hier_nic_mb } else { 1.0 },
+            }
+        })
+        .collect()
+}
+
+/// Render the figure as a table.
+pub fn render(rows: &[MultinodeRow], hw: &HwConfig) -> Table {
+    let mut t = Table::new(&format!(
+        "Two-tier fabric — flat vs hierarchical all-reduce per (nodes x gpus/node) \
+         (64 x 8192 lanes, {})",
+        hw.name
+    ))
+    .header(vec![
+        "nodes",
+        "gpus/node",
+        "flat ms",
+        "hier ms",
+        "hier x flat",
+        "flat NIC MB",
+        "hier NIC MB",
+        "NIC saving",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.nodes.to_string(),
+            r.gpus_per_node.to_string(),
+            format!("{:.4}", r.flat_ms),
+            format!("{:.4}", r.hier_ms),
+            format!("{:.3}", r.hier_vs_flat),
+            format!("{:.3}", r.flat_nic_mb),
+            format!("{:.3}", r.hier_nic_mb),
+            format!("{:.2}", r.nic_saving),
+        ]);
+    }
+    t
+}
+
+/// Serialize the sweep as machine-readable JSON (hand-rolled — no serde
+/// offline; flat and stable so CI can diff it across commits as a
+/// perf-trajectory point).
+pub fn to_json(rows: &[MultinodeRow], hw: &HwConfig, seed: u64, iters: usize) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"multinode\",\n");
+    s.push_str(&format!("  \"hw\": \"{}\",\n", hw.name));
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str(&format!("  \"iters\": {iters},\n"));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"nodes\": {}, \"gpus_per_node\": {}, \"flat_ms\": {:.6}, \
+             \"hier_ms\": {:.6}, \"hier_vs_flat\": {:.4}, \"flat_nic_mb\": {:.4}, \
+             \"hier_nic_mb\": {:.4}, \"nic_saving\": {:.4}}}{}",
+            r.nodes,
+            r.gpus_per_node,
+            r.flat_ms,
+            r.hier_ms,
+            r.hier_vs_flat,
+            r.flat_nic_mb,
+            r.hier_nic_mb,
+            r.nic_saving,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Run and print the figure (the `experiments multinode` subcommand),
+/// writing the JSON point to `json_path` when given.
+pub fn run(hw: &HwConfig, seed: u64, iters: usize, json_path: Option<&str>) {
+    let rows = sweep(hw, seed, iters);
+    render(&rows, hw).print();
+    if let Some(path) = json_path {
+        match std::fs::write(path, to_json(&rows, hw, seed, iters)) {
+            Ok(()) => println!("wrote {path} (machine-readable perf point)"),
+            Err(e) => eprintln!("write {path}: {e}"),
+        }
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn multi_node_rows_show_the_nic_saving() {
+        let rows = sweep(&presets::mi300x(), 1, 3);
+        assert_eq!(rows.len(), GRID.len());
+        for r in &rows {
+            if r.nodes == 1 {
+                assert_eq!(r.flat_nic_mb, 0.0);
+                assert_eq!(r.hier_nic_mb, 0.0);
+            } else {
+                assert!(r.hier_nic_mb < r.flat_nic_mb, "({}, {})", r.nodes, r.gpus_per_node);
+                // ~g× traffic saving: 2g / (2 + 1/nodes)
+                let expect =
+                    2.0 * r.gpus_per_node as f64 / (2.0 + 1.0 / r.nodes as f64);
+                assert!(
+                    (r.nic_saving - expect).abs() / expect < 0.05,
+                    "({}, {}): saving {} vs analytic {expect}",
+                    r.nodes,
+                    r.gpus_per_node,
+                    r.nic_saving
+                );
+                // wall-clock win asserted where the NIC margin is
+                // structural (two nodes: ~5× on the bottleneck link);
+                // deeper grids are reported, their traffic win is
+                // asserted above
+                if r.nodes == 2 {
+                    assert!(r.hier_vs_flat > 1.0, "({}, {})", r.nodes, r.gpus_per_node);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn json_point_is_well_formed_and_deterministic() {
+        let hw = presets::mi300x();
+        let rows = sweep(&hw, 4, 2);
+        let a = to_json(&rows, &hw, 4, 2);
+        let b = to_json(&sweep(&hw, 4, 2), &hw, 4, 2);
+        assert_eq!(a, b, "the perf point must be reproducible from (config, seed)");
+        assert_eq!(a.matches('{').count(), a.matches('}').count());
+        assert_eq!(a.matches('[').count(), a.matches(']').count());
+        assert_eq!(a.matches("\"nodes\":").count(), GRID.len());
+        for key in ["\"bench\": \"multinode\"", "\"hier_ms\"", "\"nic_saving\""] {
+            assert!(a.contains(key), "missing {key} in {a}");
+        }
+        assert!(!a.contains(",\n  ]"), "trailing comma would break parsers");
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let hw = presets::mi300x();
+        let rows = sweep(&hw, 5, 2);
+        let t = render(&rows, &hw);
+        assert_eq!(t.n_rows(), GRID.len());
+        assert!(t.render().contains("NIC saving"));
+    }
+}

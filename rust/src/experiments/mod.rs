@@ -9,6 +9,7 @@ pub mod ablations;
 pub mod ext_allreduce;
 pub mod ext_batch_decode;
 pub mod ext_gemm_rs;
+pub mod ext_multinode;
 pub mod ext_prefill;
 pub mod ext_tp_attn;
 pub mod fig10_flash_decode;

@@ -1,58 +1,151 @@
-//! Fabric topology description.
+//! Fabric topology description — a two-tier hierarchy of compute nodes.
 //!
-//! The MI300X node is a fully-connected clique: every GPU has a direct
-//! Infinity-Fabric link to every other (7 peers × 128 GB/s = the paper's
-//! 896 GB/s aggregate). [`Topology`] captures that structure plus the ring
-//! ordering used by the ring-based collectives; timing of transfers lives
-//! in [`crate::sim::cost`], traffic accounting in [`crate::iris::Traffic`].
+//! Tier 1 is the intra-node fabric: each node is a fully-connected clique
+//! of GPUs (on an MI300X node every GPU has a direct Infinity-Fabric link
+//! to every other — 7 peers × 128 GB/s = the paper's 896 GB/s aggregate).
+//! Tier 2 is the inter-node fabric: one NIC link per *node pair*, an order
+//! of magnitude slower and higher-latency than the intra-node links.
+//! [`Topology::clique`] describes the paper's single-node testbed;
+//! [`Topology::hierarchical`] describes a NIC-bridged multi-node world.
+//!
+//! The topology answers three questions the rest of the stack asks:
+//! which tier a (src, dst) pair crosses ([`Topology::same_node`]), what
+//! order a producer should push to its peers in ([`Topology::peers_of`]:
+//! intra-node neighbours first, staggered, then cross-node ranks —
+//! cheap-links-first so NIC serialization never blocks an
+//! Infinity-Fabric push behind it), and the ring ordering used by the
+//! ring-based collectives. Timing of transfers lives in
+//! [`crate::sim::cost`] (which routes each pair over the correct tier),
+//! traffic accounting in [`crate::iris::Traffic`], and the hierarchical
+//! collectives built on top in [`crate::collectives`].
+//!
+//! Ranks are numbered node-major: rank `r` lives on node `r / gpus_per_node`
+//! at local index `r % gpus_per_node`, so each node owns a contiguous rank
+//! range — the layout every launcher (torchrun, mpirun) produces.
 
-/// Node topology: a fully-connected clique of `world` ranks.
+/// Node topology: `nodes` fully-connected cliques of `gpus_per_node` ranks
+/// each, bridged by one NIC link per node pair.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Topology {
-    world: usize,
+    nodes: usize,
+    gpus_per_node: usize,
 }
 
 impl Topology {
+    /// A single fully-connected clique of `world` ranks (the paper's
+    /// one-node testbed) — identical to `hierarchical(1, world)`.
     pub fn clique(world: usize) -> Topology {
-        assert!(world >= 1);
-        Topology { world }
+        Topology::hierarchical(1, world)
+    }
+
+    /// A two-tier world: `nodes` cliques of `gpus_per_node` ranks, one NIC
+    /// link per node pair. `world() = nodes * gpus_per_node`.
+    pub fn hierarchical(nodes: usize, gpus_per_node: usize) -> Topology {
+        assert!(nodes >= 1, "at least one node");
+        assert!(gpus_per_node >= 1, "at least one GPU per node");
+        Topology { nodes, gpus_per_node }
     }
 
     pub fn world(&self) -> usize {
-        self.world
+        self.nodes * self.gpus_per_node
     }
 
-    /// Number of peer links per rank.
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn gpus_per_node(&self) -> usize {
+        self.gpus_per_node
+    }
+
+    /// Node hosting `rank` (ranks are node-major).
+    pub fn node_of(&self, rank: usize) -> usize {
+        debug_assert!(rank < self.world());
+        rank / self.gpus_per_node
+    }
+
+    /// Index of `rank` within its node.
+    pub fn local_index(&self, rank: usize) -> usize {
+        debug_assert!(rank < self.world());
+        rank % self.gpus_per_node
+    }
+
+    /// Whether `a` and `b` share a node (their link is tier-1
+    /// Infinity-Fabric rather than a tier-2 NIC hop).
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Ranks hosted on `node` (a contiguous range; ranks are node-major).
+    pub fn node_ranks(&self, node: usize) -> std::ops::Range<usize> {
+        debug_assert!(node < self.nodes);
+        node * self.gpus_per_node..(node + 1) * self.gpus_per_node
+    }
+
+    /// Number of direct intra-node fabric links per rank.
     pub fn links_per_rank(&self) -> usize {
-        self.world - 1
+        self.gpus_per_node - 1
     }
 
-    /// Ring successor of `rank`.
+    /// Number of NIC links per node (one per other node).
+    pub fn nic_links_per_node(&self) -> usize {
+        self.nodes - 1
+    }
+
+    /// Ring successor of `rank` (global ring over the whole world).
     pub fn ring_next(&self, rank: usize) -> usize {
-        (rank + 1) % self.world
+        (rank + 1) % self.world()
     }
 
     /// Ring predecessor of `rank`.
     pub fn ring_prev(&self, rank: usize) -> usize {
-        (rank + self.world - 1) % self.world
+        (rank + self.world() - 1) % self.world()
     }
 
-    /// Peers of `rank` in staggered order (rank+1, rank+2, ... wrap).
+    /// Peers of `rank` in node-aware push order: intra-node peers first
+    /// (staggered from the rank's local index, so node-mates don't all
+    /// hammer local index 0), then cross-node ranks node by node
+    /// (staggered from the rank's node, same local stagger within each).
+    /// For a single-node clique this is exactly the staggered order
+    /// `(rank + d) % world` the paper's push loops use.
     pub fn peers_of(&self, rank: usize) -> Vec<usize> {
-        (1..self.world).map(|d| (rank + d) % self.world).collect()
+        debug_assert!(rank < self.world());
+        let g = self.gpus_per_node;
+        let (node, li) = (rank / g, rank % g);
+        let mut peers = Vec::with_capacity(self.world() - 1);
+        // tier 1: node-mates, staggered
+        for d in 1..g {
+            peers.push(node * g + (li + d) % g);
+        }
+        // tier 2: remote nodes in staggered node order, each node's ranks
+        // staggered from this rank's local index
+        for nd in 1..self.nodes {
+            let remote = (node + nd) % self.nodes;
+            for d in 0..g {
+                peers.push(remote * g + (li + d) % g);
+            }
+        }
+        peers
     }
 
-    /// All directed (src, dst) pairs.
+    /// All directed (src, dst) pairs of the world, both tiers.
     pub fn directed_links(&self) -> Vec<(usize, usize)> {
-        let mut v = Vec::with_capacity(self.world * (self.world - 1));
-        for s in 0..self.world {
-            for d in 0..self.world {
+        let w = self.world();
+        let mut v = Vec::with_capacity(w * (w - 1));
+        for s in 0..w {
+            for d in 0..w {
                 if s != d {
                     v.push((s, d));
                 }
             }
         }
         v
+    }
+
+    /// Directed cross-node (src, dst) rank pairs — every transfer that
+    /// crosses a NIC link.
+    pub fn cross_node_links(&self) -> Vec<(usize, usize)> {
+        self.directed_links().into_iter().filter(|&(s, d)| !self.same_node(s, d)).collect()
     }
 }
 
@@ -65,6 +158,8 @@ mod tests {
         let t = Topology::clique(8);
         assert_eq!(t.links_per_rank(), 7);
         assert_eq!(t.directed_links().len(), 56);
+        assert_eq!(t.nic_links_per_node(), 0);
+        assert!(t.cross_node_links().is_empty());
     }
 
     #[test]
@@ -90,10 +185,86 @@ mod tests {
     }
 
     #[test]
+    fn clique_peers_match_the_flat_stagger() {
+        // the order the paper's hand-rolled (r + d) % world loops used:
+        // hierarchical(1, w) must reproduce it exactly, so switching the
+        // protocols to peers_of is bitwise-invisible on one node
+        for w in [1usize, 2, 5, 8] {
+            let t = Topology::clique(w);
+            for r in 0..w {
+                let expect: Vec<usize> = (1..w).map(|d| (r + d) % w).collect();
+                assert_eq!(t.peers_of(r), expect, "world {w} rank {r}");
+            }
+        }
+    }
+
+    #[test]
     fn world_one_has_no_links() {
         let t = Topology::clique(1);
         assert_eq!(t.links_per_rank(), 0);
         assert!(t.directed_links().is_empty());
         assert_eq!(t.ring_next(0), 0);
+    }
+
+    #[test]
+    fn node_of_round_trips() {
+        let t = Topology::hierarchical(3, 4);
+        assert_eq!(t.world(), 12);
+        for r in 0..t.world() {
+            let (nd, li) = (t.node_of(r), t.local_index(r));
+            assert_eq!(nd * t.gpus_per_node() + li, r);
+            assert!(t.node_ranks(nd).contains(&r));
+            assert!(t.same_node(r, nd * t.gpus_per_node()));
+        }
+        assert!(!t.same_node(0, 4));
+        assert!(t.same_node(4, 7));
+        assert_eq!(t.nic_links_per_node(), 2);
+    }
+
+    #[test]
+    fn hierarchical_peers_intra_first_then_remote() {
+        let t = Topology::hierarchical(2, 4);
+        let p = t.peers_of(5); // node 1, local index 1
+        assert_eq!(p.len(), 7);
+        // intra-node first (staggered from local index 1)
+        assert_eq!(&p[..3], &[6, 7, 4]);
+        // then the remote node, staggered by the same local index
+        assert_eq!(&p[3..], &[1, 2, 3, 0]);
+        // completeness
+        let mut sorted = p.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4, 6, 7]);
+    }
+
+    #[test]
+    fn hierarchical_peers_complete_for_many_shapes() {
+        for (n, g) in [(1usize, 4usize), (2, 2), (2, 4), (4, 2), (3, 5)] {
+            let t = Topology::hierarchical(n, g);
+            for r in 0..t.world() {
+                let p = t.peers_of(r);
+                assert_eq!(p.len(), t.world() - 1, "({n},{g}) rank {r}");
+                let mut sorted = p.clone();
+                sorted.sort();
+                let expect: Vec<usize> = (0..t.world()).filter(|&x| x != r).collect();
+                assert_eq!(sorted, expect, "({n},{g}) rank {r}");
+                // every intra-node peer precedes every cross-node peer
+                let first_cross =
+                    p.iter().position(|&d| !t.same_node(r, d)).unwrap_or(p.len());
+                assert!(
+                    p[first_cross..].iter().all(|&d| !t.same_node(r, d)),
+                    "({n},{g}) rank {r}: cross-node peer before an intra-node one"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cross_node_links_count() {
+        let t = Topology::hierarchical(2, 4);
+        // each of 8 ranks reaches 4 remote ranks
+        assert_eq!(t.cross_node_links().len(), 32);
+        for (s, d) in t.cross_node_links() {
+            assert!(!t.same_node(s, d));
+        }
     }
 }

@@ -75,6 +75,9 @@ pub struct RankCtx {
     heap: Arc<SymmetricHeap>,
     traffic: Arc<Traffic>,
     wait_timeout: Duration,
+    /// Peer push order, precomputed from the heap's topology so the hot
+    /// protocol loops iterate it without allocating.
+    peers: Vec<usize>,
 }
 
 impl RankCtx {
@@ -94,11 +97,22 @@ impl RankCtx {
         &self.traffic
     }
 
-    /// Ranks other than this one, in increasing order starting after self
-    /// (the canonical peer iteration order of the paper's push loops:
-    /// staggering by rank avoids every rank hammering rank 0 first).
+    /// The node layout of this world (a single-node clique unless the
+    /// heap was built with [`crate::iris::HeapBuilder::topology`]).
+    pub fn topology(&self) -> &crate::fabric::Topology {
+        self.heap.topology()
+    }
+
+    /// Peers of this rank in the topology's node-aware push order
+    /// ([`crate::fabric::Topology::peers_of`]): intra-node peers first,
+    /// staggered, then cross-node ranks — so NIC serialization never
+    /// blocks an Infinity-Fabric push behind it. On a single-node clique
+    /// this is the canonical staggered order of the paper's push loops
+    /// (`(rank + d) % world`: staggering by rank avoids every rank
+    /// hammering rank 0 first). Precomputed at context construction —
+    /// iterating it allocates nothing.
     pub fn peers(&self) -> impl Iterator<Item = usize> + '_ {
-        (1..self.world).map(move |d| (self.rank + d) % self.world)
+        self.peers.iter().copied()
     }
 
     // ---- local memory ----
@@ -251,6 +265,7 @@ where
         let ctx = RankCtx {
             rank,
             world,
+            peers: heap.topology().peers_of(rank),
             heap: Arc::clone(&heap),
             traffic: Arc::clone(&traffic),
             wait_timeout,

@@ -25,6 +25,7 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
+use crate::fabric::Topology;
 use crate::iris::error::IrisError;
 
 /// One named buffer: `world` regions of `len` f32 elements each.
@@ -45,6 +46,7 @@ struct FlagRegion {
 /// before rank engines start).
 pub struct HeapBuilder {
     world: usize,
+    topology: Option<Topology>,
     buffers: Vec<(String, usize)>,
     flags: Vec<(String, usize)>,
 }
@@ -52,7 +54,18 @@ pub struct HeapBuilder {
 impl HeapBuilder {
     pub fn new(world: usize) -> HeapBuilder {
         assert!(world >= 1, "world must be >= 1");
-        HeapBuilder { world, buffers: Vec::new(), flags: Vec::new() }
+        HeapBuilder { world, topology: None, buffers: Vec::new(), flags: Vec::new() }
+    }
+
+    /// Declare the node layout of the world (defaults to a single-node
+    /// clique). The topology shapes push orders ([`crate::iris::RankCtx::peers`]
+    /// iterates intra-node peers first) and tells hierarchical collectives
+    /// which tier each pair crosses; it does not change the heap's memory
+    /// layout.
+    pub fn topology(mut self, topo: Topology) -> HeapBuilder {
+        assert_eq!(topo.world(), self.world, "topology world must match the heap world");
+        self.topology = Some(topo);
+        self
     }
 
     /// Declare a named f32 buffer of `len` elements on every rank.
@@ -83,6 +96,7 @@ impl HeapBuilder {
         };
         SymmetricHeap {
             world: self.world,
+            topology: self.topology.unwrap_or_else(|| Topology::clique(self.world)),
             regions: self
                 .buffers
                 .into_iter()
@@ -102,6 +116,7 @@ impl HeapBuilder {
 /// The node-wide symmetric heap. Shared (via `Arc`) by all rank engines.
 pub struct SymmetricHeap {
     world: usize,
+    topology: Topology,
     regions: HashMap<String, Region>,
     flag_regions: HashMap<String, FlagRegion>,
     // sense-reversing barrier state (see `barrier_wait`)
@@ -112,6 +127,12 @@ pub struct SymmetricHeap {
 impl SymmetricHeap {
     pub fn world(&self) -> usize {
         self.world
+    }
+
+    /// The node layout the heap was declared over (a single-node clique
+    /// unless [`HeapBuilder::topology`] said otherwise).
+    pub fn topology(&self) -> &Topology {
+        &self.topology
     }
 
     fn region(&self, buf: &str) -> Result<&Region, IrisError> {
@@ -286,6 +307,21 @@ mod tests {
     #[should_panic(expected = "duplicate buffer")]
     fn duplicate_buffer_rejected() {
         HeapBuilder::new(2).buffer("a", 1).buffer("a", 2);
+    }
+
+    #[test]
+    fn topology_defaults_to_clique_and_is_settable() {
+        let heap = HeapBuilder::new(4).build();
+        assert_eq!(heap.topology(), &Topology::clique(4));
+        let heap2 = HeapBuilder::new(4).topology(Topology::hierarchical(2, 2)).build();
+        assert_eq!(heap2.topology().nodes(), 2);
+        assert_eq!(heap2.topology().gpus_per_node(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "topology world must match")]
+    fn mismatched_topology_rejected() {
+        let _ = HeapBuilder::new(4).topology(Topology::hierarchical(2, 4));
     }
 
     #[test]

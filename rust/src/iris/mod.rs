@@ -21,3 +21,67 @@ pub mod heap;
 pub use ctx::{run_node, run_node_with_timeout, RankCtx, Traffic, DEFAULT_WAIT_TIMEOUT};
 pub use error::{IrisError, WaitTimeout};
 pub use heap::{HeapBuilder, SymmetricHeap};
+
+/// Collapse per-rank engine outcomes into all ranks' payloads, preferring
+/// the **root-cause** error on failure: the first structured (non-Timeout)
+/// error any rank reported outranks the secondary Timeouts its peers hit
+/// while waiting on the failed rank's flags; if only Timeouts occurred,
+/// the first is the best information available. The all-ranks counterpart
+/// of [`crate::serve::collect_node_outcomes`] (which keeps only rank 0's
+/// payload), used by the functional coordinators whose per-rank results
+/// genuinely differ (e.g. reduce-scatter segments).
+pub fn collect_rank_outcomes<T>(outs: Vec<Result<T, IrisError>>) -> Result<Vec<T>, IrisError> {
+    let mut payloads = Vec::with_capacity(outs.len());
+    let mut timeout: Option<IrisError> = None;
+    for o in outs {
+        match o {
+            Ok(v) => payloads.push(v),
+            Err(e @ IrisError::Timeout(_)) => {
+                if timeout.is_none() {
+                    timeout = Some(e);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    if let Some(e) = timeout {
+        return Err(e);
+    }
+    Ok(payloads)
+}
+
+#[cfg(test)]
+mod outcome_tests {
+    use super::*;
+
+    fn timeout() -> IrisError {
+        IrisError::Timeout(WaitTimeout {
+            rank: 0,
+            flags: "f".into(),
+            idx: 1,
+            target: 2,
+            seen: 0,
+        })
+    }
+
+    #[test]
+    fn all_ok_returns_every_payload() {
+        assert_eq!(collect_rank_outcomes(vec![Ok(1u32), Ok(2), Ok(3)]).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn structured_error_outranks_timeouts() {
+        let outs: Vec<Result<u32, IrisError>> =
+            vec![Err(timeout()), Err(IrisError::UnknownBuffer("b".into())), Ok(1)];
+        match collect_rank_outcomes(outs) {
+            Err(IrisError::UnknownBuffer(b)) => assert_eq!(b, "b"),
+            other => panic!("expected root cause, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn only_timeouts_reports_the_first() {
+        let outs: Vec<Result<u32, IrisError>> = vec![Ok(1), Err(timeout())];
+        assert!(matches!(collect_rank_outcomes(outs), Err(IrisError::Timeout(_))));
+    }
+}

@@ -36,6 +36,7 @@
 //! | Head-sharded TP attention (decode) | [`serve::decode_step_fused`] | [`workloads::tp_attention`] | `tp_attn` |
 //! | Batched prompt prefill (M > 1) | [`serve::prefill_step_fused`] | [`workloads::prefill`] | `prefill` |
 //! | Batched multi-sequence decode (A seqs/step) | [`serve::decode_batch_fused`] | [`workloads::batch_decode`] | `batch_decode` |
+//! | Two-tier multi-node exchange | [`collectives::all_reduce_hierarchical`] | [`workloads::multinode`] | `multinode` |
 //! | Bucketed gradient all-reduce (§6.2) | [`collectives`] | [`workloads::all_reduce`] | `allreduce` |
 //!
 //! ## Module map
@@ -43,8 +44,14 @@
 //! * [`iris`] — the RMA substrate (symmetric heap, remote load/store,
 //!   signal flags, barriers) over a simulated 8-rank node, with typed
 //!   [`iris::IrisError`]s;
-//! * [`collectives`] — BSP collectives (the RCCL-like baseline) and
-//!   flag-synchronized fused variants, ragged lengths included;
+//! * [`collectives`] — BSP collectives (the RCCL-like baseline),
+//!   flag-synchronized fused variants (ragged lengths included), and the
+//!   hierarchical two-tier all-reduce for NIC-bridged multi-node worlds
+//!   (bitwise-equal to the flat fold at ~`gpus_per_node`× fewer NIC
+//!   bytes);
+//! * [`fabric`] — the two-tier topology (intra-node Infinity-Fabric
+//!   clique + one NIC link per node pair) that shapes push orders and
+//!   tells the cost model which tier every transfer crosses;
 //! * [`coordinator`] — rank engines and the execution strategies from
 //!   the paper's evolution (BSP baseline → fully fused), plus autotuning;
 //! * [`sim`] — the calibrated discrete-event performance model that

@@ -4,8 +4,8 @@
 //!
 //! ```text
 //! taxfree experiments <fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|
-//!         tp_attn|prefill|batch_decode|autotune|all> [--iters N] [--seed N]
-//!         [--config FILE] [--set section.key=value]... [--json FILE]
+//!         tp_attn|prefill|batch_decode|multinode|autotune|all> [--iters N]
+//!         [--seed N] [--config FILE] [--set section.key=value]... [--json FILE]
 //! taxfree serve [--world N] [--requests N] [--backend native|pjrt]
 //!         [--artifacts DIR] [--seed N]
 //! taxfree selftest [--artifacts DIR]
@@ -43,7 +43,7 @@ fn print_help() {
     println!(
         "taxfree — reproduction of \"Eliminating Multi-GPU Performance Taxes\"\n\
          \n\
-         USAGE:\n  taxfree experiments <fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|batch_decode|autotune|all> [options]\n\
+         USAGE:\n  taxfree experiments <fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|batch_decode|multinode|autotune|all> [options]\n\
          \x20 taxfree serve [--world N] [--requests N] [--backend native|pjrt] [--artifacts DIR]\n\
          \x20 taxfree selftest [--artifacts DIR]\n\
          \n\
@@ -52,9 +52,33 @@ fn print_help() {
          \x20 --seed N               master seed (default 7)\n\
          \x20 --config FILE          TOML-subset config file\n\
          \x20 --set section.key=val  override (e.g. --set hw.preset=mi325x)\n\
-         \x20 --json FILE            machine-readable output path for batch_decode\n\
-         \x20                        (default BENCH_batch_decode.json)\n"
+         \x20 --json FILE            machine-readable output path for the\n\
+         \x20                        perf-point experiments (defaults:\n\
+         \x20                        batch_decode -> BENCH_batch_decode.json,\n\
+         \x20                        multinode -> BENCH_multinode.json)\n"
     );
+}
+
+/// Experiments that emit a machine-readable perf point: subcommand name
+/// → default JSON path. This is the table the CI perf-trajectory gate
+/// regenerates (`scripts/regen_bench.sh`) and diffs against the
+/// committed seed points; add a row here when an experiment grows a
+/// `--json` emission.
+const JSON_BENCHES: [(&str, &str); 2] = [
+    ("batch_decode", "BENCH_batch_decode.json"),
+    ("multinode", "BENCH_multinode.json"),
+];
+
+/// Resolve the JSON output path for a perf-point experiment: an explicit
+/// `--json FILE` wins, otherwise the table's default.
+fn json_path_for(which: &str, opts: &Opts) -> String {
+    opts.flags.get("json").cloned().unwrap_or_else(|| {
+        JSON_BENCHES
+            .iter()
+            .find(|(name, _)| *name == which)
+            .map(|(_, path)| path.to_string())
+            .expect("subcommand registered in JSON_BENCHES")
+    })
 }
 
 /// Pull `--flag value` pairs and `--set k=v` overrides out of argv.
@@ -197,12 +221,13 @@ fn cmd_experiments(args: &[String]) -> i32 {
         "prefill" => experiments::ext_prefill::run(&hw9, seed, iters),
         // batched decode is latency-bound like fig10: MI300X default
         "batch_decode" => {
-            let json = opts
-                .flags
-                .get("json")
-                .cloned()
-                .unwrap_or_else(|| "BENCH_batch_decode.json".to_string());
+            let json = json_path_for("batch_decode", &opts);
             experiments::ext_batch_decode::run(hw, seed, iters, Some(json.as_str()));
+        }
+        // the two-tier fabric figure (flat vs hierarchical exchange)
+        "multinode" => {
+            let json = json_path_for("multinode", &opts);
+            experiments::ext_multinode::run(hw, seed, iters, Some(json.as_str()));
         }
         "autotune" => run_autotune(),
         "all" => {
@@ -216,11 +241,12 @@ fn cmd_experiments(args: &[String]) -> i32 {
             experiments::ext_tp_attn::run(hw, seed, iters);
             experiments::ext_prefill::run(&hw9, seed, iters);
             experiments::ext_batch_decode::run(hw, seed, iters, None);
+            experiments::ext_multinode::run(hw, seed, iters, None);
             run_autotune();
         }
         other => {
             eprintln!(
-                "unknown experiment: {other} (want fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|batch_decode|autotune|all)"
+                "unknown experiment: {other} (want fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|batch_decode|multinode|autotune|all)"
             );
             return 2;
         }

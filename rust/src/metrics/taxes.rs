@@ -36,8 +36,13 @@ pub struct TaxLedger {
     /// Seconds of useful work (compute + required data movement), summed
     /// over ranks.
     pub busy_s: f64,
-    /// Bytes moved across the fabric.
+    /// Bytes moved across the fabric (both tiers).
     pub fabric_bytes: u64,
+    /// The subset of `fabric_bytes` that crossed a tier-2 NIC link
+    /// (zero on a single-node topology). The quantity hierarchical
+    /// collectives minimize: on a NIC-bridged world this is the scarce
+    /// resource, not aggregate fabric bandwidth.
+    pub nic_bytes: u64,
     /// Bytes round-tripped through HBM due to kernel separation.
     pub inter_kernel_bytes: u64,
     /// End-to-end virtual (or wall) seconds of the whole operation.
@@ -63,6 +68,7 @@ impl TaxLedger {
         self.flag_idle_s += other.flag_idle_s;
         self.busy_s += other.busy_s;
         self.fabric_bytes += other.fabric_bytes;
+        self.nic_bytes += other.nic_bytes;
         self.inter_kernel_bytes += other.inter_kernel_bytes;
         self.makespan_s = self.makespan_s.max(other.makespan_s);
     }
@@ -77,6 +83,7 @@ impl TaxLedger {
             flag_idle_s: self.flag_idle_s * f,
             busy_s: self.busy_s * f,
             fabric_bytes: self.fabric_bytes,
+            nic_bytes: self.nic_bytes,
             inter_kernel_bytes: self.inter_kernel_bytes,
             makespan_s: self.makespan_s * f,
         }
@@ -115,6 +122,7 @@ mod tests {
             flag_idle_s: 5e-6,
             busy_s: 800e-6,
             fabric_bytes: 1 << 20,
+            nic_bytes: 1 << 18,
             inter_kernel_bytes: 1 << 16,
             makespan_s: 120e-6,
         }
@@ -134,6 +142,7 @@ mod tests {
         assert_eq!(a.launches, 6);
         assert!((a.launch_s - 48e-6).abs() < 1e-12);
         assert_eq!(a.fabric_bytes, 2 << 20);
+        assert_eq!(a.nic_bytes, 2 << 18);
         assert!((a.makespan_s - 120e-6).abs() < 1e-18); // max, not sum
     }
 

@@ -838,7 +838,12 @@ pub fn fused_allreduce_exchange(
 /// prefill chunk therefore interleave freely on the same buffers. For
 /// each destination d the producer packs its `[rows, len_d]` sub-block
 /// contiguously and ships it as **one** M-row tile with one signal — M
-/// rows cost the same flag traffic as one.
+/// rows cost the same flag traffic as one. Push order comes from the
+/// heap's [`crate::fabric::Topology`] ([`crate::iris::RankCtx::peers`]:
+/// intra-node peers first, then cross-node ranks), so on a NIC-bridged
+/// world the cheap tier drains before any transfer queues on a NIC; the
+/// reduction still folds sources in canonical rank order, so the bits
+/// never depend on the topology.
 ///
 /// Validation is real (not `debug_assert`): a partition that is not
 /// contiguous-from-zero, over-wide segments that would spill into the

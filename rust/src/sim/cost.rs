@@ -7,6 +7,7 @@
 //! transfers, skew) that the paper's Three Taxes framework is about.
 
 use crate::config::HwConfig;
+use crate::fabric::Topology;
 
 /// Which GEMM implementation's efficiency profile to charge.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -112,20 +113,116 @@ pub fn combine_time(hw: &HwConfig, batch: usize, heads: usize, dim: usize, world
     (flops / hw.peak_vec_flops).max(bytes / hw.hbm_bw)
 }
 
-/// Remote-transfer time over one peer link.
+/// Remote-transfer time over one intra-node peer link.
 pub fn link_transfer_time(hw: &HwConfig, bytes: u64, eff: f64) -> f64 {
     hw.link_latency_s + bytes as f64 / (hw.link_bw * eff)
 }
 
-/// Broadcast of `bytes_per_dst` to all `world-1` peers at aggregate fabric
-/// bandwidth (a push kernel's threadblocks drive all links concurrently).
-pub fn multipush_time(hw: &HwConfig, bytes_per_dst: u64, world: usize, eff: f64) -> f64 {
-    if world <= 1 {
-        return 0.0;
+/// Remote-transfer time over one cross-node NIC link (per-pair RDMA).
+/// The intra-node store/load efficiencies do not apply on this tier;
+/// `nic_eff` is the NIC's own protocol efficiency.
+pub fn nic_transfer_time(hw: &HwConfig, bytes: u64) -> f64 {
+    hw.nic_latency_s + bytes as f64 / (hw.nic_bw * hw.nic_eff)
+}
+
+/// Remote-transfer time between `src` and `dst` routed over the correct
+/// tier of `topo`: the Infinity-Fabric link (with the caller's RMA
+/// efficiency `eff`) when the pair shares a node, the node pair's NIC
+/// link otherwise.
+pub fn pair_transfer_time(
+    hw: &HwConfig,
+    topo: &Topology,
+    src: usize,
+    dst: usize,
+    bytes: u64,
+    eff: f64,
+) -> f64 {
+    if topo.same_node(src, dst) {
+        link_transfer_time(hw, bytes, eff)
+    } else {
+        nic_transfer_time(hw, bytes)
     }
-    let total = bytes_per_dst as f64 * (world - 1) as f64;
-    let agg = hw.fabric_aggregate_bw.min(hw.link_bw * (world - 1) as f64);
-    hw.link_latency_s + total / (agg * eff)
+}
+
+/// Per-message latency of the (src, dst) pair's tier.
+pub fn pair_latency(hw: &HwConfig, topo: &Topology, src: usize, dst: usize) -> f64 {
+    if topo.same_node(src, dst) { hw.link_latency_s } else { hw.nic_latency_s }
+}
+
+/// Broadcast of `bytes_per_dst` to all `world-1` peers of a single-node
+/// clique at aggregate fabric bandwidth (a push kernel's threadblocks
+/// drive all links concurrently). The flat special case of
+/// [`multipush_time_topo`]; callers whose world may span nodes must use
+/// the topology-aware form — this one would silently price every peer at
+/// intra-node rates.
+pub fn multipush_time(hw: &HwConfig, bytes_per_dst: u64, world: usize, eff: f64) -> f64 {
+    multipush_time_topo(hw, &Topology::clique(world), bytes_per_dst, eff)
+}
+
+/// Per-message latency floor of a topology-routed multipush: the slowest
+/// tier the broadcast touches.
+pub fn multipush_latency(hw: &HwConfig, topo: &Topology) -> f64 {
+    let has_intra = topo.gpus_per_node() > 1;
+    let has_cross = topo.nodes() > 1;
+    match (has_intra, has_cross) {
+        (true, true) => hw.link_latency_s.max(hw.nic_latency_s),
+        (true, false) => hw.link_latency_s,
+        (false, true) => hw.nic_latency_s,
+        (false, false) => 0.0,
+    }
+}
+
+/// The per-tier completion times of a topology-routed multipush:
+/// `(intra, cross)`, each including its own per-message latency (zero for
+/// a tier with no destinations). The intra-node portion runs at aggregate
+/// fabric bandwidth capped by the *intra-node* peer count (the old flat
+/// cap of `link_bw * (world - 1)` silently overstated bandwidth once the
+/// world spanned nodes); the cross-node portion serializes through the
+/// source node's NIC links at `nic_bw` per destination node pair — a
+/// single source rank's push kernel cannot drive more than one node
+/// pair's worth of NIC bandwidth at once, so the cross bytes are priced
+/// at one NIC link. The engine uses the split to hold each tier's links
+/// for that tier's own wire time.
+pub fn multipush_tier_times(
+    hw: &HwConfig,
+    topo: &Topology,
+    bytes_per_dst: u64,
+    eff: f64,
+) -> (f64, f64) {
+    let w = topo.world();
+    if w <= 1 {
+        return (0.0, 0.0);
+    }
+    let intra_peers = topo.gpus_per_node() - 1;
+    let cross_peers = w - topo.gpus_per_node();
+    let intra = if intra_peers > 0 {
+        let total = bytes_per_dst as f64 * intra_peers as f64;
+        let agg = hw.fabric_aggregate_bw.min(hw.link_bw * intra_peers as f64);
+        hw.link_latency_s + total / (agg * eff)
+    } else {
+        0.0
+    };
+    let cross = if cross_peers > 0 {
+        let total = bytes_per_dst as f64 * cross_peers as f64;
+        hw.nic_latency_s + total / (hw.nic_bw * hw.nic_eff)
+    } else {
+        0.0
+    };
+    (intra, cross)
+}
+
+/// Broadcast of `bytes_per_dst` from one rank to every other rank of
+/// `topo`, each destination routed over its tier
+/// ([`multipush_tier_times`]). The two tiers' engines proceed
+/// concurrently: the multipush completes when the slower tier drains.
+pub fn multipush_time_topo(
+    hw: &HwConfig,
+    topo: &Topology,
+    bytes_per_dst: u64,
+    eff: f64,
+) -> f64 {
+    let (intra, cross) = multipush_tier_times(hw, topo, bytes_per_dst, eff);
+    intra.max(cross)
 }
 
 /// Time to fold `sources` partial contributions of `elems` f32 elements
@@ -160,17 +257,28 @@ pub fn hbm_roundtrip_time(hw: &HwConfig, bytes: u64) -> f64 {
 }
 
 /// RCCL-shaped all-reduce (direct reduce-scatter + all-gather) of `elems`
-/// fp16 elements on one rank: two segment multipushes plus the fold of
-/// `world - 1` remote contributions into the owned segment. The collective
-/// kernel the BSP Megatron attention/MLP blocks invoke after their partial
-/// output projections; the fused serving path replaces it with the
-/// tile-granular GEMM+RS pipeline.
+/// fp16 elements on one rank of a single-node clique. The flat special
+/// case of [`allreduce_time_topo`]; see there for the model.
 pub fn allreduce_time(hw: &HwConfig, elems: usize, world: usize) -> f64 {
+    allreduce_time_topo(hw, &Topology::clique(world), elems)
+}
+
+/// RCCL-shaped all-reduce (direct reduce-scatter + all-gather) of `elems`
+/// fp16 elements on one rank, each transfer routed over the correct tier
+/// of `topo`: two segment multipushes ([`multipush_time_topo`]) plus the
+/// fold of `world - 1` remote contributions into the owned segment. The
+/// collective kernel the BSP Megatron attention/MLP blocks invoke after
+/// their partial output projections; the fused serving path replaces it
+/// with the tile-granular GEMM+RS pipeline. On a multi-node topology the
+/// NIC tier dominates — the cost the flat model used to hide by pricing
+/// every peer at Infinity-Fabric rates.
+pub fn allreduce_time_topo(hw: &HwConfig, topo: &Topology, elems: usize) -> f64 {
+    let world = topo.world();
     if world <= 1 || elems == 0 {
         return 0.0;
     }
     let seg = elems.div_ceil(world);
-    let comm = 2.0 * multipush_time(hw, (seg * 2) as u64, world, hw.rma_store_eff);
+    let comm = 2.0 * multipush_time_topo(hw, topo, (seg * 2) as u64, hw.rma_store_eff);
     let red = reduce_accum_time(hw, seg, world - 1);
     comm + red
 }
@@ -241,6 +349,83 @@ mod tests {
         let serial: f64 = (0..7).map(|_| link_transfer_time(&hw, per, 1.0)).sum();
         assert!(t < serial * 0.5, "multipush {t} should beat serial {serial}");
         assert_eq!(multipush_time(&hw, per, 1, 1.0), 0.0);
+    }
+
+    #[test]
+    fn two_node_multipush_is_nic_bound_not_fabric_bound() {
+        // the satellite bugfix's regression: the flat model capped
+        // aggregate bandwidth at fabric_aggregate_bw.min(link_bw * (w-1)),
+        // silently pricing a 2-node world at intra-node rates. The
+        // topology-aware path must route the 4 cross-node destinations
+        // over the NIC, whose drain time dominates the whole broadcast.
+        let hw = presets::mi300x();
+        let per = 1u64 << 26; // 64 MiB per destination
+        let topo = Topology::hierarchical(2, 4);
+        let t = multipush_time_topo(&hw, &topo, per, 1.0);
+        let flat = multipush_time(&hw, per, 8, 1.0);
+        assert!(t > 3.0 * flat, "2-node multipush {t} must be NIC-bound, flat was {flat}");
+        // exactly the NIC drain: 4 remote ranks' bytes through one NIC
+        let nic = hw.nic_latency_s + (4 * per) as f64 / (hw.nic_bw * hw.nic_eff);
+        assert_eq!(t, nic, "cross tier must set the completion time");
+        // the intra-node portion alone is the 3-peer flat broadcast
+        let intra = multipush_time(&hw, per, 4, 1.0);
+        assert!(nic > intra);
+    }
+
+    #[test]
+    fn flat_multipush_unchanged_by_topology_refactor() {
+        // multipush_time now delegates to the topology-aware path with a
+        // single-node clique; the numbers the single-node twins were
+        // calibrated against must be bit-identical
+        let hw = presets::mi300x();
+        for w in [2usize, 4, 8] {
+            for per in [1u64 << 10, 1 << 20, 1 << 26] {
+                let total = per as f64 * (w - 1) as f64;
+                let agg = hw.fabric_aggregate_bw.min(hw.link_bw * (w - 1) as f64);
+                let legacy = hw.link_latency_s + total / (agg * hw.rma_store_eff);
+                assert_eq!(multipush_time(&hw, per, w, hw.rma_store_eff), legacy);
+            }
+        }
+        assert_eq!(multipush_time(&hw, 1 << 20, 1, 1.0), 0.0);
+    }
+
+    #[test]
+    fn pair_transfer_routes_by_tier() {
+        let hw = presets::mi300x();
+        let topo = Topology::hierarchical(2, 2);
+        let bytes = 1u64 << 20;
+        let intra = pair_transfer_time(&hw, &topo, 0, 1, bytes, hw.rma_store_eff);
+        let cross = pair_transfer_time(&hw, &topo, 0, 2, bytes, hw.rma_store_eff);
+        assert_eq!(intra, link_transfer_time(&hw, bytes, hw.rma_store_eff));
+        assert_eq!(cross, nic_transfer_time(&hw, bytes));
+        assert!(cross > intra, "the NIC tier must be slower: {cross} vs {intra}");
+        assert_eq!(pair_latency(&hw, &topo, 0, 1), hw.link_latency_s);
+        assert_eq!(pair_latency(&hw, &topo, 1, 2), hw.nic_latency_s);
+    }
+
+    #[test]
+    fn hierarchical_allreduce_cost_dominated_by_nic() {
+        let hw = presets::mi300x();
+        let elems = 1 << 20;
+        let flat = allreduce_time(&hw, elems, 8);
+        let topo = Topology::hierarchical(2, 4);
+        let two_node = allreduce_time_topo(&hw, &topo, elems);
+        assert!(two_node > flat, "NIC tier must make the all-reduce slower");
+        // the flat form is exactly the clique special case
+        assert_eq!(allreduce_time_topo(&hw, &Topology::clique(8), elems), flat);
+        assert_eq!(allreduce_time_topo(&hw, &topo, 0), 0.0);
+    }
+
+    #[test]
+    fn multipush_latency_tracks_the_slowest_tier() {
+        let hw = presets::mi300x();
+        assert_eq!(multipush_latency(&hw, &Topology::clique(8)), hw.link_latency_s);
+        assert_eq!(
+            multipush_latency(&hw, &Topology::hierarchical(2, 4)),
+            hw.link_latency_s.max(hw.nic_latency_s)
+        );
+        assert_eq!(multipush_latency(&hw, &Topology::hierarchical(4, 1)), hw.nic_latency_s);
+        assert_eq!(multipush_latency(&hw, &Topology::clique(1)), 0.0);
     }
 
     #[test]

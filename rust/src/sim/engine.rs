@@ -8,6 +8,16 @@
 //! single-threaded, deterministic given (program, seed), and attributes
 //! every second of rank-stream time to the Three-Taxes ledger.
 //!
+//! The engine is topology-aware ([`Sim::with_topology`]): every transfer
+//! is routed over the tier its (src, dst) pair crosses. Intra-node pairs
+//! occupy a directed Infinity-Fabric link; cross-node pairs occupy the
+//! directed NIC link of their *node pair* — all transfers between the
+//! same two nodes serialize on it, which is exactly the contention a
+//! flat push order creates and a hierarchical schedule avoids. Bytes
+//! that cross a NIC land in [`TaxLedger::nic_bytes`].
+//!
+//! [`TaxLedger::nic_bytes`]: crate::metrics::TaxLedger::nic_bytes
+//!
 //! Strategies build a program through the builder methods
 //! ([`Sim::launch`], [`Sim::compute`], [`Sim::push`], [`Sim::pull`],
 //! [`Sim::multipush`], [`Sim::barrier`], [`Sim::hbm_roundtrip`]) and then
@@ -17,6 +27,7 @@ use std::collections::BinaryHeap;
 
 use crate::clock::VTime;
 use crate::config::HwConfig;
+use crate::fabric::Topology;
 use crate::metrics::TaxLedger;
 use crate::sim::cost;
 use crate::util::Prng;
@@ -43,8 +54,8 @@ enum Kind {
     Push { src: usize, dst: usize, bytes: u64 },
     /// Remote load: consumer stream fully occupied (stalled), link occupied.
     Pull { src: usize, dst: usize, bytes: u64 },
-    /// Broadcast push to all peers at aggregate fabric bandwidth.
-    MultiPush { src: usize, bytes_total: u64 },
+    /// Broadcast push to all peers, each tier at its own bandwidth.
+    MultiPush { src: usize, bytes_per_dst: u64 },
     /// Zero-duration arrival marker on the rank stream.
     BarrierArrive,
     /// Join node (no resources): completes when all arrivals complete.
@@ -122,15 +133,25 @@ impl SimResult {
 /// Program builder + engine.
 pub struct Sim {
     hw: HwConfig,
+    topo: Topology,
     world: usize,
     tasks: Vec<Task>,
     rng: Prng,
 }
 
 impl Sim {
+    /// A single-node clique of `world` ranks (the paper's testbed).
     pub fn new(hw: &HwConfig, world: usize, seed: u64) -> Sim {
+        Sim::with_topology(hw, Topology::clique(world), seed)
+    }
+
+    /// A world shaped by `topo`: transfers route over the tier their
+    /// (src, dst) pair crosses, cross-node bytes are attributed to the
+    /// NIC ledger, and same-node-pair transfers contend for one NIC link.
+    pub fn with_topology(hw: &HwConfig, topo: Topology, seed: u64) -> Sim {
+        let world = topo.world();
         assert!(world >= 1);
-        Sim { hw: hw.clone(), world, tasks: Vec::new(), rng: Prng::new(seed) }
+        Sim { hw: hw.clone(), topo, world, tasks: Vec::new(), rng: Prng::new(seed) }
     }
 
     pub fn world(&self) -> usize {
@@ -139,6 +160,10 @@ impl Sim {
 
     pub fn hw(&self) -> &HwConfig {
         &self.hw
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
     }
 
     /// Apply per-stage lognormal jitter to a modeled duration (the compute
@@ -226,7 +251,8 @@ impl Sim {
         deps: &[TaskId],
     ) -> TaskId {
         assert_ne!(src, dst, "push to self");
-        let dur = cost::link_transfer_time(&self.hw, bytes, self.hw.rma_store_eff);
+        let dur =
+            cost::pair_transfer_time(&self.hw, &self.topo, src, dst, bytes, self.hw.rma_store_eff);
         self.add_on(Kind::Push { src, dst, bytes }, Some(src), stream, dur, deps, "push")
     }
 
@@ -234,7 +260,8 @@ impl Sim {
     /// The consumer stream stalls for the full duration.
     pub fn pull(&mut self, dst: usize, src: usize, bytes: u64, deps: &[TaskId]) -> TaskId {
         assert_ne!(src, dst, "pull from self");
-        let dur = cost::link_transfer_time(&self.hw, bytes, self.hw.rma_load_eff);
+        let dur =
+            cost::pair_transfer_time(&self.hw, &self.topo, src, dst, bytes, self.hw.rma_load_eff);
         self.add(Kind::Pull { src, dst, bytes }, Some(dst), dur, deps, "pull")
     }
 
@@ -253,9 +280,9 @@ impl Sim {
         bytes_per_dst: u64,
         deps: &[TaskId],
     ) -> TaskId {
-        let dur = cost::multipush_time(&self.hw, bytes_per_dst, self.world, self.hw.rma_store_eff);
-        let total = bytes_per_dst * (self.world.saturating_sub(1)) as u64;
-        self.add_on(Kind::MultiPush { src, bytes_total: total }, Some(src), stream, dur, deps, "multipush")
+        let dur =
+            cost::multipush_time_topo(&self.hw, &self.topo, bytes_per_dst, self.hw.rma_store_eff);
+        self.add_on(Kind::MultiPush { src, bytes_per_dst }, Some(src), stream, dur, deps, "multipush")
     }
 
     /// Global barrier: rank `r` arrives after `arrivals[r]`; returns the
@@ -299,7 +326,19 @@ impl Sim {
         // resource free-times; one entry per (rank, stream)
         let mut rank_free = vec![0.0f64; world * STREAMS_PER_RANK];
         let sk = |r: usize, stream: usize| r * STREAMS_PER_RANK + stream;
+        // directed link resources: an intra-node pair occupies its own
+        // Infinity-Fabric link (keyed by rank pair); a cross-node pair
+        // occupies the directed NIC link of its NODE pair (keyed past the
+        // rank range so the two keyspaces cannot collide) — every
+        // transfer between the same two nodes serializes there
         let mut link_free = std::collections::HashMap::<(usize, usize), f64>::new();
+        let link_key = |src: usize, dst: usize| {
+            if self.topo.same_node(src, dst) {
+                (src, dst)
+            } else {
+                (world + self.topo.node_of(src), world + self.topo.node_of(dst))
+            }
+        };
 
         // attribution
         let mut ledger = TaxLedger::default();
@@ -338,11 +377,11 @@ impl Sim {
             // resource availability
             let res_free = match (&task.kind, task.rank) {
                 (Kind::Push { src, dst, .. }, _) => {
-                    let lf = *link_free.get(&(*src, *dst)).unwrap_or(&0.0);
+                    let lf = *link_free.get(&link_key(*src, *dst)).unwrap_or(&0.0);
                     rank_free[sk(*src, task.stream)].max(lf)
                 }
                 (Kind::Pull { src, dst, .. }, _) => {
-                    let lf = *link_free.get(&(*src, *dst)).unwrap_or(&0.0);
+                    let lf = *link_free.get(&link_key(*src, *dst)).unwrap_or(&0.0);
                     rank_free[sk(*dst, task.stream)].max(lf)
                 }
                 (Kind::BarrierJoin, _) => 0.0,
@@ -398,37 +437,66 @@ impl Sim {
                 }
                 Kind::Push { src, dst, bytes } => {
                     ledger.fabric_bytes += bytes;
+                    if !self.topo.same_node(*src, *dst) {
+                        ledger.nic_bytes += bytes;
+                    }
                     // the per-message latency pipelines: it delays the
                     // consumer-visible completion (`end`) but occupies
                     // neither the issuer nor the link wire-time beyond the
                     // serialization (bytes/bw) component
-                    let wire = (task.dur - self.hw.link_latency_s).max(0.0);
+                    let lat = cost::pair_latency(&self.hw, &self.topo, *src, *dst);
+                    let wire = (task.dur - lat).max(0.0);
                     let issue = wire * PUSH_ISSUER_OCCUPANCY;
                     rank_busy[*src] += issue;
                     ledger.busy_s += issue;
                     rank_free[sk(*src, task.stream)] = start + issue;
-                    link_free.insert((*src, *dst), start + wire);
+                    link_free.insert(link_key(*src, *dst), start + wire);
                 }
                 Kind::Pull { src, dst, bytes } => {
                     ledger.fabric_bytes += bytes;
+                    if !self.topo.same_node(*src, *dst) {
+                        ledger.nic_bytes += bytes;
+                    }
                     // the consumer stalls for the full round trip; the link
                     // is occupied for the wire time only
-                    let wire = (task.dur - self.hw.link_latency_s).max(0.0);
+                    let lat = cost::pair_latency(&self.hw, &self.topo, *src, *dst);
+                    let wire = (task.dur - lat).max(0.0);
                     rank_busy[*dst] += task.dur;
                     ledger.busy_s += task.dur;
                     rank_free[sk(*dst, task.stream)] = end;
-                    link_free.insert((*src, *dst), start + wire);
+                    link_free.insert(link_key(*src, *dst), start + wire);
                 }
-                Kind::MultiPush { src, bytes_total } => {
-                    ledger.fabric_bytes += bytes_total;
-                    let wire = (task.dur - self.hw.link_latency_s).max(0.0);
-                    rank_busy[*src] += wire;
-                    ledger.busy_s += wire;
-                    rank_free[sk(*src, task.stream)] = start + wire;
-                    // all out-links of src busy for the wire time
+                Kind::MultiPush { src, bytes_per_dst } => {
+                    let cross_peers = (world - self.topo.gpus_per_node()) as u64;
+                    ledger.fabric_bytes += bytes_per_dst * (world as u64 - 1);
+                    ledger.nic_bytes += bytes_per_dst * cross_peers;
+                    // per-tier wire times: each tier's links are held for
+                    // that tier's own serialization component (subtracting
+                    // one conflated max-tier latency would understate the
+                    // faster tier's occupancy whenever it dominates)
+                    let (intra_t, cross_t) = cost::multipush_tier_times(
+                        &self.hw,
+                        &self.topo,
+                        *bytes_per_dst,
+                        self.hw.rma_store_eff,
+                    );
+                    let intra_wire = (intra_t - self.hw.link_latency_s).max(0.0);
+                    let cross_wire = (cross_t - self.hw.nic_latency_s).max(0.0);
+                    let busy = intra_wire.max(cross_wire);
+                    rank_busy[*src] += busy;
+                    ledger.busy_s += busy;
+                    rank_free[sk(*src, task.stream)] = start + busy;
+                    // all out-links of src busy for their tier's wire
+                    // time: intra-node fabric links plus the node's NIC
+                    // links
                     for d in 0..world {
                         if d != *src {
-                            link_free.insert((*src, d), start + wire);
+                            let wire = if self.topo.same_node(*src, d) {
+                                intra_wire
+                            } else {
+                                cross_wire
+                            };
+                            link_free.insert(link_key(*src, d), start + wire);
                         }
                     }
                 }
@@ -664,6 +732,79 @@ mod tests {
     fn forward_dep_rejected() {
         let mut s = sim(1);
         s.compute(0, "x", 1.0, &[5]);
+    }
+
+    #[test]
+    fn cross_node_push_routed_over_nic_and_attributed() {
+        let hw = presets::mi300x();
+        let topo = Topology::hierarchical(2, 2);
+        let mut s = Sim::with_topology(&hw, topo, 1);
+        let bytes = 1u64 << 24;
+        let intra = s.push(0, 1, bytes, &[]);
+        let cross = s.push(0, 2, bytes, &[]);
+        let r = s.run();
+        let t_intra = r.times[intra].end - r.times[intra].start;
+        let t_cross = r.times[cross].end - r.times[cross].start;
+        assert_eq!(t_intra, cost::link_transfer_time(&hw, bytes, hw.rma_store_eff));
+        assert_eq!(t_cross, cost::nic_transfer_time(&hw, bytes));
+        assert!(t_cross > t_intra);
+        assert_eq!(r.ledger.fabric_bytes, 2 * bytes);
+        assert_eq!(r.ledger.nic_bytes, bytes, "only the cross-node push crosses the NIC");
+    }
+
+    #[test]
+    fn node_pair_nic_link_serializes_all_its_transfers() {
+        // two different rank pairs, same node pair: one NIC link — the
+        // wire times must serialize (this is the contention hierarchical
+        // collectives avoid by sending one exchange per node pair)
+        let hw = presets::mi300x();
+        let topo = Topology::hierarchical(2, 2);
+        let mut s = Sim::with_topology(&hw, topo, 1);
+        let bytes = 1u64 << 24;
+        let p1 = s.push(0, 2, bytes, &[]);
+        let p2 = s.push(1, 3, bytes, &[]);
+        let r = s.run();
+        assert!(
+            r.times[p2].start >= r.times[p1].end - hw.nic_latency_s - 1e-12,
+            "same node pair must serialize on its NIC link: p1 end {} p2 start {}",
+            r.times[p1].end,
+            r.times[p2].start
+        );
+        // distinct node pairs do not contend
+        let topo3 = Topology::hierarchical(3, 1);
+        let mut s3 = Sim::with_topology(&hw, topo3, 1);
+        let q1 = s3.push(0, 1, bytes, &[]);
+        let q2 = s3.push(0, 2, bytes, &[]);
+        let r3 = s3.run();
+        // both issue from rank 0's stream (issue occupancy serializes a
+        // little) but the wires overlap: q2 ends well before 2 full wires
+        let wire = cost::nic_transfer_time(&hw, bytes) - hw.nic_latency_s;
+        assert!(r3.times[q2].end < r3.times[q1].start + 2.0 * wire, "NIC links are per node pair");
+    }
+
+    #[test]
+    fn multipush_on_two_tier_topology_counts_nic_bytes() {
+        let hw = presets::mi300x();
+        let topo = Topology::hierarchical(2, 4);
+        let per = 1u64 << 20;
+        let expect_dur = cost::multipush_time_topo(&hw, &topo, per, hw.rma_store_eff);
+        let mut s = Sim::with_topology(&hw, topo, 1);
+        let m = s.multipush(0, per, &[]);
+        let r = s.run();
+        assert_eq!(r.ledger.fabric_bytes, 7 * per);
+        assert_eq!(r.ledger.nic_bytes, 4 * per, "4 of 7 destinations are remote");
+        assert_eq!(r.times[m].end - r.times[m].start, expect_dur);
+    }
+
+    #[test]
+    fn single_node_sim_has_zero_nic_bytes() {
+        let hw = presets::mi300x();
+        let mut s = Sim::new(&hw, 4, 1);
+        s.push(0, 1, 1 << 20, &[]);
+        s.multipush(2, 1 << 16, &[]);
+        let r = s.run();
+        assert!(r.ledger.fabric_bytes > 0);
+        assert_eq!(r.ledger.nic_bytes, 0);
     }
 
     #[test]

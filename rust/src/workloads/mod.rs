@@ -19,6 +19,10 @@
 //!   active decode sequences: BSP per sequence vs the fused pipeline per
 //!   sequence vs one batched M-row pass per layer (launch/signal tax
 //!   amortizing like 1/A);
+//! * [`multinode`] — the two-tier fabric: one partial-sum all-reduce on a
+//!   NIC-bridged `nodes × gpus_per_node` world, the flat single-clique
+//!   push order vs the hierarchical intra-node-gather / accumulator-chain
+//!   / relay schedule (NIC bytes fall ~`gpus_per_node`×);
 //! * [`transformer`] — a tiny tensor-parallel transformer model (batched
 //!   prefill + decode) built from the same pieces, used by the
 //!   end-to-end serving example.
@@ -28,11 +32,13 @@ pub mod all_reduce;
 pub mod batch_decode;
 pub mod flash_decode;
 pub mod gemm_rs;
+pub mod multinode;
 pub mod prefill;
 pub mod tp_attention;
 pub mod transformer;
 
 pub use batch_decode::BatchDecodeStrategy;
+pub use multinode::MultinodeStrategy;
 pub use prefill::PrefillStrategy;
 pub use tp_attention::TpAttnStrategy;
 

@@ -8,7 +8,12 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use taxfree::collectives;
-use taxfree::iris::{run_node, run_node_with_timeout, HeapBuilder, IrisError};
+use taxfree::config::{AgGemmConfig, GemmRsConfig};
+use taxfree::coordinator::{ag_gemm, gemm_rs, AgGemmStrategy, GemmRsStrategy};
+use taxfree::iris::{
+    collect_rank_outcomes as collect_all_ranks, run_node, run_node_with_timeout, HeapBuilder,
+    IrisError,
+};
 use taxfree::serve::{
     build_serve_heap, collect_node_outcomes, decode_batch_fused, fused_allreduce_exchange,
     prefill_step_fused, ATTN_EXCHANGE,
@@ -373,6 +378,110 @@ fn dead_rank_in_batched_decode_times_out_typed() {
                 assert_eq!(t.idx, 1, "rank {rank} waits on the dead producer");
             }
             other => panic!("expected Timeout on rank {rank}, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn rank_dying_mid_ag_gemm_surfaces_typed_timeout_not_panic() {
+    // the satellite bugfix's proof: the AG+GEMM push model used to
+    // `.expect("push-model panel wait")` on every heap/ctx operation — a
+    // dead peer took the whole node down with a panic. Now rank 1 joins
+    // the shard-publication barrier and then dies; the survivors' panel
+    // waits must come back as typed Timeouts naming the starved panel
+    // flag of the dead producer.
+    let cfg = AgGemmConfig::tiny(3); // k_shard 8, block_k 4 -> 2 panels
+    let n_panels = (cfg.k / cfg.world) / cfg.block_k;
+    let heap = ag_gemm::build_heap(&cfg);
+    let cfg2 = cfg.clone();
+    let outcomes = run_node_with_timeout(heap, Duration::from_millis(150), move |ctx| {
+        if ctx.rank() == 1 {
+            // dead rank: participates in the engine prologue's barrier
+            // (shard publication) and then contributes nothing
+            ctx.barrier();
+            return Ok(Tensor::zeros(&[cfg2.m, cfg2.n]));
+        }
+        let shard = vec![0.0f32; cfg2.m * (cfg2.k / cfg2.world)];
+        let b = Tensor::zeros(&[cfg2.k, cfg2.n]);
+        ag_gemm::run_rank(&ctx, &cfg2, AgGemmStrategy::Push, &shard, &b, 1)
+    });
+    assert!(outcomes[1].is_ok(), "the dead rank itself reported nothing");
+    for rank in [0usize, 2] {
+        match &outcomes[rank] {
+            Err(IrisError::Timeout(t)) => {
+                assert_eq!(t.flags, ag_gemm::FLAGS_PANEL, "rank {rank}");
+                assert!(
+                    (n_panels..2 * n_panels).contains(&t.idx),
+                    "rank {rank} must starve on a dead-producer panel flag, got idx {}",
+                    t.idx
+                );
+            }
+            other => panic!("expected typed Timeout on rank {rank}, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn rank_failing_mid_ag_gemm_surfaces_root_cause_over_peer_timeouts() {
+    // a rank whose own heap operation fails mid-AG-GEMM (here: a store to
+    // a buffer that was never declared) must surface its structured root
+    // cause, and the node-level outcome policy must prefer it over the
+    // secondary Timeouts the peers report
+    let cfg = AgGemmConfig::tiny(3);
+    let heap = ag_gemm::build_heap(&cfg);
+    let cfg2 = cfg.clone();
+    let outcomes = run_node_with_timeout(heap, Duration::from_millis(150), move |ctx| {
+        if ctx.rank() == 1 {
+            ctx.barrier(); // join the prologue, then fail with a typed error
+            ctx.store_local("ag_inbxo", 0, &[1.0])?; // misnamed buffer
+            unreachable!("the store above must fail");
+        }
+        let shard = vec![0.0f32; cfg2.m * (cfg2.k / cfg2.world)];
+        let b = Tensor::zeros(&[cfg2.k, cfg2.n]);
+        ag_gemm::run_rank(&ctx, &cfg2, AgGemmStrategy::Push, &shard, &b, 1)
+    });
+    match &outcomes[1] {
+        Err(IrisError::UnknownBuffer(b)) => assert_eq!(b, "ag_inbxo"),
+        other => panic!("expected the root-cause UnknownBuffer on rank 1, got {other:?}"),
+    }
+    match collect_all_ranks(outcomes) {
+        Err(IrisError::UnknownBuffer(b)) => assert_eq!(b, "ag_inbxo"),
+        other => panic!("node outcome must be the root cause, got {other:?}"),
+    }
+}
+
+#[test]
+fn rank_dying_mid_gemm_rs_surfaces_typed_timeout() {
+    // same proof for the reduce direction: the fused GEMM+RS pipeline has
+    // no entry barrier, so a rank that dies before pushing anything
+    // starves its peers' per-(source, tile) waits — typed Timeouts naming
+    // the tile flags, not panics
+    let cfg = GemmRsConfig::tiny(3); // n=10, seg_max 4, tiles_max 2
+    let tiles_max = cfg.tiles_max();
+    let heap = gemm_rs::build_heap(&cfg);
+    let cfg2 = cfg.clone();
+    let outcomes = run_node_with_timeout(heap, Duration::from_millis(150), move |ctx| {
+        let rank = ctx.rank();
+        if rank == 2 {
+            return Ok(Tensor::zeros(&[cfg2.m, 0])); // dead before any push
+        }
+        let k_len = cfg2.k_partition()[rank].1;
+        let a_shard = Tensor::zeros(&[cfg2.m, k_len]);
+        let b_shard = Tensor::zeros(&[k_len, cfg2.n]);
+        gemm_rs::run_rank(&ctx, &cfg2, GemmRsStrategy::FusedTiles, &a_shard, &b_shard, 1)
+    });
+    assert!(outcomes[2].is_ok());
+    for rank in [0usize, 1] {
+        match &outcomes[rank] {
+            Err(IrisError::Timeout(t)) => {
+                assert_eq!(t.flags, gemm_rs::FLAGS_TILE, "rank {rank}");
+                assert!(
+                    (2 * tiles_max..3 * tiles_max).contains(&t.idx),
+                    "rank {rank} must starve on the dead producer's tile flag, got {}",
+                    t.idx
+                );
+            }
+            other => panic!("expected typed Timeout on rank {rank}, got {other:?}"),
         }
     }
 }

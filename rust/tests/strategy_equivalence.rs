@@ -55,7 +55,7 @@ fn ag_gemm_all_strategies_match_reference_property() {
             b.quantize_f16();
             let expect = matmul(&a, &b);
             for strategy in AgGemmStrategy::ALL {
-                let outs = ag_gemm::run(cfg, strategy, &a, &b, 1);
+                let outs = ag_gemm::run(cfg, strategy, &a, &b, 1).expect("ag_gemm node");
                 for (r, c) in outs.iter().enumerate() {
                     let diff = c.max_abs_diff(&expect);
                     let tol = 1e-2 * (cfg.k as f32).sqrt();
@@ -87,8 +87,8 @@ fn ag_gemm_pull_push_bitwise_identical_property() {
             let mut rng = Prng::new(*seed);
             let a = Tensor::rand(&[cfg.m, cfg.k], 1.0, &mut rng);
             let b = Tensor::rand(&[cfg.k, cfg.n], 1.0, &mut rng);
-            let pull = ag_gemm::run(cfg, AgGemmStrategy::Pull, &a, &b, 1);
-            let push = ag_gemm::run(cfg, AgGemmStrategy::Push, &a, &b, 1);
+            let pull = ag_gemm::run(cfg, AgGemmStrategy::Pull, &a, &b, 1).expect("pull node");
+            let push = ag_gemm::run(cfg, AgGemmStrategy::Push, &a, &b, 1).expect("push node");
             Verdict::check(pull == push, || format!("pull != push for {cfg:?}"))
         },
     );
@@ -125,7 +125,7 @@ fn flash_decode_all_strategies_match_reference_property() {
             let (q, ks, vs, kf, vf) = flash_decode::make_inputs(cfg, *seed);
             let expect = decode_attention_ref(&q, &kf, &vf, cfg.q_heads, cfg.kv_len_global);
             for strategy in FlashDecodeStrategy::ALL {
-                let outs = flash_decode::run(cfg, strategy, &q, &ks, &vs, 1);
+                let outs = flash_decode::run(cfg, strategy, &q, &ks, &vs, 1).expect("flash_decode node");
                 for (r, o) in outs.iter().enumerate() {
                     let diff = o.max_abs_diff(&expect);
                     if diff > 5e-3 {
@@ -155,7 +155,7 @@ fn flash_decode_ranks_agree_exactly_within_strategy() {
         |(cfg, seed)| {
             let (q, ks, vs, _, _) = flash_decode::make_inputs(cfg, *seed);
             for strategy in [FlashDecodeStrategy::BaselineBsp, FlashDecodeStrategy::FullyFused] {
-                let outs = flash_decode::run(cfg, strategy, &q, &ks, &vs, 1);
+                let outs = flash_decode::run(cfg, strategy, &q, &ks, &vs, 1).expect("flash_decode node");
                 for o in &outs[1..] {
                     let diff = o.max_abs_diff(&outs[0]);
                     if diff > 1e-5 {
@@ -186,8 +186,8 @@ fn gemm_rs_matches_dense_reference_worlds_1_2_4_ragged() {
             a.quantize_f16();
             b.quantize_f16();
             let expect = matmul(&a, &b);
-            let bsp = gemm_rs::run(&cfg, GemmRsStrategy::BaselineBsp, &a, &b, 1);
-            let fused = gemm_rs::run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 1);
+            let bsp = gemm_rs::run(&cfg, GemmRsStrategy::BaselineBsp, &a, &b, 1).expect("bsp node");
+            let fused = gemm_rs::run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 1).expect("fused node");
             // fused == BSP bitwise (same tile kernel, same fold order)
             assert_eq!(bsp, fused, "world {world} m {m} n {n} k {k}");
             // both == dense reference within fp16/f32 tolerance
@@ -222,8 +222,8 @@ fn gemm_rs_strategy_equivalence_property() {
             a.quantize_f16();
             b.quantize_f16();
             let expect = matmul(&a, &b);
-            let bsp = gemm_rs::run(cfg, GemmRsStrategy::BaselineBsp, &a, &b, 1);
-            let fused = gemm_rs::run(cfg, GemmRsStrategy::FusedTiles, &a, &b, 1);
+            let bsp = gemm_rs::run(cfg, GemmRsStrategy::BaselineBsp, &a, &b, 1).expect("bsp node");
+            let fused = gemm_rs::run(cfg, GemmRsStrategy::FusedTiles, &a, &b, 1).expect("fused node");
             if bsp != fused {
                 return Verdict::Fail(format!("bsp != fused for {cfg:?}"));
             }
@@ -243,8 +243,8 @@ fn gemm_rs_repeated_rounds_are_stable() {
     let mut b = Tensor::rand(&[cfg.k, cfg.n], 1.0, &mut rng);
     a.quantize_f16();
     b.quantize_f16();
-    let once = gemm_rs::run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 1);
-    let many = gemm_rs::run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 10);
+    let once = gemm_rs::run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 1).expect("fused node");
+    let many = gemm_rs::run(&cfg, GemmRsStrategy::FusedTiles, &a, &b, 10).expect("fused node");
     assert_eq!(once, many);
 }
 
@@ -616,7 +616,66 @@ fn repeated_rounds_are_stable() {
     let mut rng = Prng::new(31337);
     let a = Tensor::rand(&[cfg.m, cfg.k], 1.0, &mut rng);
     let b = Tensor::rand(&[cfg.k, cfg.n], 1.0, &mut rng);
-    let expect = ag_gemm::run(&cfg, AgGemmStrategy::Push, &a, &b, 1);
-    let many = ag_gemm::run(&cfg, AgGemmStrategy::Push, &a, &b, 10);
+    let expect = ag_gemm::run(&cfg, AgGemmStrategy::Push, &a, &b, 1).expect("push node");
+    let many = ag_gemm::run(&cfg, AgGemmStrategy::Push, &a, &b, 10).expect("push node");
     assert_eq!(expect, many);
+}
+
+// ---- two-tier fabric: hierarchical vs flat fused exchange ----
+
+/// Mixed-magnitude per-rank partial so any re-association of the f32 sum
+/// is visible in the low-order bits.
+fn hier_partial(rank: usize, n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Prng::new(seed ^ (rank as u64).wrapping_mul(0xD1B5));
+    (0..n).map(|i| (rng.next_f32() - 0.5) * (1.0 + (i % 7) as f32 * 3.5)).collect()
+}
+
+#[test]
+fn hierarchical_allreduce_bitwise_equals_serve_fused_exchange() {
+    // the tentpole acceptance criterion at integration scope: the
+    // two-tier hierarchical exchange must reproduce the serving path's
+    // flat fused GEMM+RS exchange BIT FOR BIT, for every tested
+    // (nodes, gpus_per_node) grid shape and ragged widths — so a
+    // multi-node deployment can swap exchanges without perturbing a
+    // single activation bit
+    use taxfree::collectives::{all_reduce_hierarchical, hier_allreduce_heap};
+    use taxfree::fabric::Topology;
+    use taxfree::iris::HeapBuilder;
+    use taxfree::serve::{fused_allreduce_exchange, ATTN_EXCHANGE};
+    use taxfree::util::partition;
+
+    for (nn, g) in [(1usize, 1usize), (2, 1), (1, 2), (1, 4), (2, 2), (2, 4), (4, 2)] {
+        let topo = Topology::hierarchical(nn, g);
+        let w = topo.world();
+        for n in [48usize, 37, 3] {
+            let seed = 9_100 + (nn * 100 + g * 10 + n) as u64;
+            // flat: the serving path's fused exchange on a clique heap
+            let seg_max = n.div_ceil(w);
+            let flat_heap = std::sync::Arc::new(
+                HeapBuilder::new(w)
+                    .buffer(ATTN_EXCHANGE.data, 2 * w * seg_max)
+                    .flags(ATTN_EXCHANGE.data_flags, w)
+                    .buffer(ATTN_EXCHANGE.gather, 2 * w * seg_max)
+                    .flags(ATTN_EXCHANGE.gather_flags, w)
+                    .build(),
+            );
+            let flat = run_node(flat_heap, move |ctx| {
+                let parts = partition(n, ctx.world());
+                let p = hier_partial(ctx.rank(), n, seed);
+                fused_allreduce_exchange(&ctx, &parts, &p, 1, &ATTN_EXCHANGE)
+                    .expect("flat fused exchange")
+            });
+            // hierarchical on the two-tier heap
+            let hier = run_node(hier_allreduce_heap(&topo, n), move |ctx| {
+                all_reduce_hierarchical(&ctx, &hier_partial(ctx.rank(), n, seed), 1)
+                    .expect("hierarchical exchange")
+            });
+            for r in 0..w {
+                assert_eq!(
+                    flat[r], hier[r],
+                    "({nn},{g}) n={n} rank {r}: hierarchical must be bitwise-equal to the flat fused exchange"
+                );
+            }
+        }
+    }
 }

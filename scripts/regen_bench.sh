@@ -1,0 +1,15 @@
+#!/usr/bin/env sh
+# Regenerate the committed machine-readable perf-trajectory points.
+#
+# The seed points are pinned to the jitter-free model (hw.skew_sigma=0,
+# one iteration): with per-rank skew disabled the simulated timeline is a
+# pure deterministic function of (config, seed), so the emitted JSON is
+# byte-stable across machines and safe for CI to diff against the
+# committed copies. Run from the repo root; CI fails the build when the
+# regenerated files drift from the committed ones.
+set -eu
+
+cargo run --release --quiet -- experiments batch_decode \
+    --iters 1 --seed 7 --set hw.skew_sigma=0 --json BENCH_batch_decode.json
+cargo run --release --quiet -- experiments multinode \
+    --iters 1 --seed 7 --set hw.skew_sigma=0 --json BENCH_multinode.json
