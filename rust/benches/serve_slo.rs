@@ -1,0 +1,74 @@
+//! Bench: the serving-SLO figure — TTFT/TPOT tail percentiles of
+//! page-pressure admission vs worst-case static reservation under Poisson
+//! and diurnal-burst arrival traces, on the calibrated paper-scale serve
+//! node — plus wall-clock throughput of the *functional*
+//! continuous-batching node under a page-tight pool (real swap-out
+//! preemption, not the DES twin). criterion is unavailable offline; this
+//! is a `harness = false` bench reporting through the crate's own
+//! Summary/Table.
+//!
+//! Run: `cargo bench --offline --bench serve_slo`
+
+use taxfree::clock::measure;
+use taxfree::config::presets;
+use taxfree::experiments::ext_serve_slo;
+use taxfree::serve::continuous::serve_continuous;
+use taxfree::serve::Request;
+use taxfree::util::{Summary, Table};
+use taxfree::workloads::transformer::{NativeCompute, TransformerConfig, TransformerWeights};
+
+fn main() {
+    let hw = presets::mi300x();
+    let seed = 7;
+
+    // the modeled figure (paper-scale node, both traces, the load sweep)
+    let rows = ext_serve_slo::sweep(&hw, seed, 3);
+    ext_serve_slo::render(&rows, &hw).print();
+    let best = rows
+        .iter()
+        .map(|r| r.ttft_p99_gain)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!("\nbest p99-TTFT gain of paged admission over static reservation: {best:.3}x");
+
+    // functional: the real continuous-batching node under a page-tight
+    // pool — the tiny model with kv_pages at the validation floor, so the
+    // scheduler actually preempts and resumes through the heap swap tier
+    let mut t = Table::new("functional continuous serve under page pressure (tiny model)")
+        .header(vec!["kv_pages", "tokens", "sched steps", "preempt", "stalls", "tok/s"]);
+    for tight in [true, false] {
+        let mut cfg = TransformerConfig::tiny(2);
+        if tight {
+            cfg.kv_pages = cfg.pages_per_max_seq();
+        }
+        let reqs: Vec<Request> =
+            (0..10).map(|id| Request { id, prompt_len: 8, gen_len: 8 }).collect();
+        let cfg2 = cfg.clone();
+        let report = serve_continuous(&cfg, reqs, 8, move |rank| {
+            NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, 42), rank)
+        })
+        .expect("TP continuous serve");
+        t.row(vec![
+            cfg.kv_pages.to_string(),
+            report.total_tokens.to_string(),
+            report.total_steps.to_string(),
+            report.preemptions.to_string(),
+            report.page_stall_steps.to_string(),
+            format!("{:.0}", report.tokens_per_s()),
+        ]);
+    }
+    println!();
+    t.print();
+
+    // harness cost: how fast the DES regenerates the whole figure
+    let samples = measure(2, 10, || {
+        let r = ext_serve_slo::sweep(&hw, seed, 1);
+        assert_eq!(r.len(), 2 * ext_serve_slo::LOAD_SWEEP.len());
+    });
+    let s = Summary::of(&samples);
+    println!(
+        "\nbench serve_slo: full figure (2 traces x {} loads x 2 strategies) in {:.2} ms mean, {:.2} ms p99",
+        ext_serve_slo::LOAD_SWEEP.len(),
+        s.mean / 1e6,
+        s.p99 / 1e6
+    );
+}

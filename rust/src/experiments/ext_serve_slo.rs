@@ -1,0 +1,268 @@
+//! Extension figure: serving SLOs under load — the paged-KV admission
+//! policy ([`crate::workloads::serve_slo`], the DES twin of
+//! [`crate::serve::serve_continuous`]) against worst-case static
+//! reservation, swept over arrival trace (Poisson and diurnal-burst) and
+//! load scale. Reported per point: TTFT and TPOT tail percentiles
+//! (p50/p95/p99), peak admitted concurrency, and preemption counts —
+//! the SLO face of the tentpole's page-pressure admission control.
+//!
+//! Emits a machine-readable perf point (`BENCH_serve_slo.json` by
+//! default) for the CI perf-trajectory gate.
+
+use crate::config::HwConfig;
+use crate::util::stats::Percentiles;
+use crate::util::Table;
+use crate::workloads::serve_slo::{
+    self, ArrivalTrace, ServeSloConfig, ServeSloStrategy,
+};
+
+/// One row of the SLO figure: one (trace, load scale) point, both
+/// strategies side by side.
+#[derive(Debug, Clone)]
+pub struct ServeSloRow {
+    pub trace: &'static str,
+    pub load: f64,
+    pub static_ttft: Percentiles,
+    pub paged_ttft: Percentiles,
+    pub static_tpot: Percentiles,
+    pub paged_tpot: Percentiles,
+    /// p99-TTFT improvement of paged admission over static reservation
+    /// (> 1 when paged wins).
+    pub ttft_p99_gain: f64,
+    pub static_peak_active: usize,
+    pub paged_peak_active: usize,
+    /// Swap-out preemptions the paged policy paid (summed over iters).
+    pub preemptions: usize,
+}
+
+/// Load multipliers applied to the base traces (1.0 = the calibrated
+/// moderate-load point; 2.0 pushes the paged policy into preemption).
+pub const LOAD_SWEEP: [f64; 3] = [0.5, 1.0, 2.0];
+
+/// Base arrival traces of the sweep, calibrated against the paper-scale
+/// serving node of [`ServeSloConfig::paper_serve`].
+pub fn base_traces() -> [ArrivalTrace; 2] {
+    [
+        ArrivalTrace::Poisson { rate_rps: 24.0 },
+        ArrivalTrace::DiurnalBurst {
+            base_rps: 12.0,
+            burst_rps: 60.0,
+            period_s: 2.0,
+            duty: 0.25,
+        },
+    ]
+}
+
+/// Run the sweep: every (trace, load) point simulated `iters` times per
+/// strategy (seeds `seed..seed+iters`, samples pooled before the
+/// percentile cut).
+pub fn sweep(hw: &HwConfig, seed: u64, iters: usize) -> Vec<ServeSloRow> {
+    assert!(iters > 0);
+    let mut rows = Vec::new();
+    for trace in base_traces() {
+        for &load in &LOAD_SWEEP {
+            let cfg = ServeSloConfig::paper_serve(trace.scaled(load));
+            let run = |strategy| {
+                let mut ttft = Vec::new();
+                let mut tpot = Vec::new();
+                let mut peak = 0usize;
+                let mut preempt = 0usize;
+                for i in 0..iters {
+                    let r =
+                        serve_slo::simulate(&cfg, hw, strategy, seed.wrapping_add(i as u64));
+                    ttft.extend_from_slice(&r.ttft_ms);
+                    tpot.extend_from_slice(&r.tpot_ms);
+                    peak = peak.max(r.peak_active);
+                    preempt += r.preemptions;
+                }
+                (Percentiles::of(&ttft), Percentiles::of(&tpot), peak, preempt)
+            };
+            let (static_ttft, static_tpot, static_peak, _) = run(ServeSloStrategy::StaticSlots);
+            let (paged_ttft, paged_tpot, paged_peak, preemptions) =
+                run(ServeSloStrategy::PagePressure);
+            rows.push(ServeSloRow {
+                trace: trace.name(),
+                load,
+                ttft_p99_gain: static_ttft.p99 / paged_ttft.p99,
+                static_ttft,
+                paged_ttft,
+                static_tpot,
+                paged_tpot,
+                static_peak_active: static_peak,
+                paged_peak_active: paged_peak,
+                preemptions,
+            });
+        }
+    }
+    rows
+}
+
+/// Render the figure as a table.
+pub fn render(rows: &[ServeSloRow], hw: &HwConfig) -> Table {
+    let mut t = Table::new(&format!(
+        "Serving SLOs — static reservation vs page-pressure admission \
+         (paper serve node: 64 heads x 128, FFN 28672, 4 layers, W=8, {})",
+        hw.name
+    ))
+    .header(vec![
+        "trace",
+        "load",
+        "static ttft p50/p99 ms",
+        "paged ttft p50/p99 ms",
+        "ttft p99 gain",
+        "static tpot p99 ms",
+        "paged tpot p99 ms",
+        "peak act s/p",
+        "preempt",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.trace.to_string(),
+            format!("{:.1}", r.load),
+            format!("{:.1} / {:.1}", r.static_ttft.p50, r.static_ttft.p99),
+            format!("{:.1} / {:.1}", r.paged_ttft.p50, r.paged_ttft.p99),
+            format!("{:.3}", r.ttft_p99_gain),
+            format!("{:.2}", r.static_tpot.p99),
+            format!("{:.2}", r.paged_tpot.p99),
+            format!("{} / {}", r.static_peak_active, r.paged_peak_active),
+            r.preemptions.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Serialize the sweep as machine-readable JSON (hand-rolled — no serde
+/// offline; flat and stable so CI can diff it across commits).
+pub fn to_json(rows: &[ServeSloRow], hw: &HwConfig, seed: u64, iters: usize) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"serve_slo\",\n");
+    s.push_str(&format!("  \"hw\": \"{}\",\n", hw.name));
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str(&format!("  \"iters\": {iters},\n"));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"trace\": \"{}\", \"load\": {:.2}, \
+             \"static_ttft_p50_ms\": {:.4}, \"static_ttft_p95_ms\": {:.4}, \
+             \"static_ttft_p99_ms\": {:.4}, \
+             \"paged_ttft_p50_ms\": {:.4}, \"paged_ttft_p95_ms\": {:.4}, \
+             \"paged_ttft_p99_ms\": {:.4}, \
+             \"static_tpot_p50_ms\": {:.4}, \"static_tpot_p95_ms\": {:.4}, \
+             \"static_tpot_p99_ms\": {:.4}, \
+             \"paged_tpot_p50_ms\": {:.4}, \"paged_tpot_p95_ms\": {:.4}, \
+             \"paged_tpot_p99_ms\": {:.4}, \
+             \"ttft_p99_gain\": {:.4}, \"static_peak_active\": {}, \
+             \"paged_peak_active\": {}, \"preemptions\": {}}}{}",
+            r.trace,
+            r.load,
+            r.static_ttft.p50,
+            r.static_ttft.p95,
+            r.static_ttft.p99,
+            r.paged_ttft.p50,
+            r.paged_ttft.p95,
+            r.paged_ttft.p99,
+            r.static_tpot.p50,
+            r.static_tpot.p95,
+            r.static_tpot.p99,
+            r.paged_tpot.p50,
+            r.paged_tpot.p95,
+            r.paged_tpot.p99,
+            r.ttft_p99_gain,
+            r.static_peak_active,
+            r.paged_peak_active,
+            r.preemptions,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Run and print the figure (the `experiments serve_slo` subcommand),
+/// writing the JSON point to `json_path` when given.
+pub fn run(hw: &HwConfig, seed: u64, iters: usize, json_path: Option<&str>) {
+    let rows = sweep(hw, seed, iters);
+    render(&rows, hw).print();
+    if let Some(path) = json_path {
+        match std::fs::write(path, to_json(&rows, hw, seed, iters)) {
+            Ok(()) => println!("wrote {path} (machine-readable perf point)"),
+            Err(e) => eprintln!("write {path}: {e}"),
+        }
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn sweep_covers_both_traces_and_every_load() {
+        let rows = sweep(&presets::mi300x(), 7, 1);
+        assert_eq!(rows.len(), 2 * LOAD_SWEEP.len());
+        assert_eq!(rows.iter().filter(|r| r.trace == "poisson").count(), LOAD_SWEEP.len());
+        assert_eq!(
+            rows.iter().filter(|r| r.trace == "diurnal_burst").count(),
+            LOAD_SWEEP.len()
+        );
+        for r in &rows {
+            assert!(r.static_ttft.p99 >= r.static_ttft.p50, "{:?}", r.trace);
+            assert!(r.paged_ttft.p99 >= r.paged_ttft.p50);
+            assert!(r.paged_tpot.p99.is_finite() && r.paged_tpot.p99 > 0.0);
+        }
+    }
+
+    #[test]
+    fn heavy_load_shows_the_paged_win_and_preemptions() {
+        // at 2x load the static policy's 4 slots queue far deeper than
+        // the paged policy's page-bounded concurrency
+        let rows = sweep(&presets::mi300x(), 7, 1);
+        for r in rows.iter().filter(|r| r.load >= 2.0) {
+            assert!(
+                r.ttft_p99_gain > 1.0,
+                "{} load {}: paged must win p99 TTFT, gain {}",
+                r.trace,
+                r.load,
+                r.ttft_p99_gain
+            );
+            assert!(r.paged_peak_active > r.static_peak_active, "{}", r.trace);
+        }
+        assert!(
+            rows.iter().any(|r| r.preemptions > 0),
+            "the sweep must exercise preemption somewhere"
+        );
+    }
+
+    #[test]
+    fn json_point_is_well_formed_and_deterministic() {
+        let hw = presets::mi300x();
+        let rows = sweep(&hw, 4, 1);
+        let a = to_json(&rows, &hw, 4, 1);
+        let b = to_json(&sweep(&hw, 4, 1), &hw, 4, 1);
+        assert_eq!(a, b, "the perf point must be reproducible from (config, seed)");
+        assert_eq!(a.matches('{').count(), a.matches('}').count());
+        assert_eq!(a.matches('[').count(), a.matches(']').count());
+        assert_eq!(a.matches("\"trace\":").count(), rows.len());
+        for key in [
+            "\"bench\": \"serve_slo\"",
+            "\"hw\": \"mi300x\"",
+            "\"paged_ttft_p99_ms\"",
+            "\"preemptions\"",
+        ] {
+            assert!(a.contains(key), "missing {key} in {a}");
+        }
+        assert!(!a.contains(",\n  ]"), "trailing comma would break parsers");
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let hw = presets::mi300x();
+        let rows = sweep(&hw, 5, 1);
+        let t = render(&rows, &hw);
+        assert_eq!(t.n_rows(), 2 * LOAD_SWEEP.len());
+        assert!(t.render().contains("ttft p99 gain"));
+    }
+}

@@ -11,6 +11,7 @@ pub mod ext_batch_decode;
 pub mod ext_gemm_rs;
 pub mod ext_multinode;
 pub mod ext_prefill;
+pub mod ext_serve_slo;
 pub mod ext_tp_attn;
 pub mod fig10_flash_decode;
 pub mod fig11_scaling;

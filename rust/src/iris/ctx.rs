@@ -93,6 +93,12 @@ impl RankCtx {
         &self.heap
     }
 
+    /// Owning handle to the shared heap, for components that outlive a
+    /// single call (e.g. the KV page pool a rank's shards share).
+    pub fn heap_arc(&self) -> Arc<SymmetricHeap> {
+        Arc::clone(&self.heap)
+    }
+
     pub fn traffic(&self) -> &Traffic {
         &self.traffic
     }

@@ -51,6 +51,13 @@ pub enum IrisError {
     /// whose segment list is not a partition, or a serving request beyond
     /// the model's KV capacity.
     InvalidLayout(String),
+    /// A KV page allocation could not be satisfied: the free list of the
+    /// heap-backed page pool held fewer pages than requested. The
+    /// continuous-batching scheduler avoids this by admission control
+    /// (it never advances a sequence whose next-step growth exceeds the
+    /// free count), so reaching it signals a policy bug or a caller
+    /// bypassing admission.
+    OutOfPages { requested: usize, free: usize },
     /// A flag wait timed out (peer death / protocol deadlock).
     Timeout(WaitTimeout),
 }
@@ -72,6 +79,9 @@ impl fmt::Display for IrisError {
                 write!(f, "rank {rank} out of range for world {world}")
             }
             IrisError::InvalidLayout(what) => write!(f, "invalid collective layout: {what}"),
+            IrisError::OutOfPages { requested, free } => {
+                write!(f, "KV page pool exhausted: requested {requested} pages, {free} free")
+            }
             IrisError::Timeout(t) => t.fmt(f),
         }
     }
@@ -100,6 +110,8 @@ mod tests {
         assert!(IrisError::from(t).to_string().contains("timeout"));
         let l = IrisError::InvalidLayout("ring needs world | n".into());
         assert!(l.to_string().contains("invalid collective layout"));
+        let p = IrisError::OutOfPages { requested: 3, free: 1 };
+        assert!(p.to_string().contains("requested 3 pages, 1 free"));
     }
 
     #[test]

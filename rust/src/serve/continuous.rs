@@ -32,17 +32,39 @@
 //! the §5.3 setting), since their distributed attention is inherently
 //! per sequence.
 //!
+//! **Admission is driven by page pressure, not static slots.** On a
+//! paged head-sharded backend every rank's KV shards draw fixed-size
+//! pages from the shared heap pool
+//! ([`crate::serve::BUF_KV_PAGES`] / [`crate::workloads::kv_page`]), and
+//! the scheduler admits the queue head only while the free list covers
+//! the whole active set's next-step page growth plus the newcomer's
+//! first prefill chunk. When a waiting prefill would starve, the
+//! **latest-admitted decode-phase** sequence is preempted: its pages are
+//! copied to the swap tier ([`KvShard::swap_out`]), freed, and the
+//! sequence parks until pressure clears, then resumes (swap-in) ahead of
+//! any fresh admission. A per-step pressure guard preempts the same way
+//! if the active set's own growth would outrun the free list, so a
+//! well-formed config ([`TransformerConfig::kv_pages`] ≥ one max-length
+//! sequence) can never hit [`crate::iris::IrisError::OutOfPages`]. All
+//! decisions read only request metadata and the *logical* free-page
+//! count — identical on every rank — so admission, preemption, and
+//! resume stay in lockstep with zero control-plane traffic.
+//!
 //! Reports per-request time-to-first-token and completion latency in
-//! scheduler steps.
+//! scheduler steps, plus the preemption/stall counters the SLO twin and
+//! the page-pressure tests read.
+
+use std::collections::VecDeque;
 
 use crate::iris::{run_node, IrisError, RankCtx};
 use crate::serve::queue::Request;
 use crate::serve::{
-    build_serve_heap, decode_batch_fused, decode_step_fused, make_shard, prefill_chunk_step,
-    prefill_token_step,
+    build_serve_heap, decode_batch_fused, decode_step_fused, make_kv_pools, make_shard,
+    prefill_chunk_step, prefill_token_step,
 };
 use crate::tensor::Tensor;
-use crate::workloads::transformer::{KvShard, LocalCompute, TransformerConfig};
+use crate::workloads::kv_page::page_growth;
+use crate::workloads::transformer::{KvShard, LocalCompute, SwappedKv, TransformerConfig};
 
 /// Outcome of one continuously-batched request.
 #[derive(Debug, Clone, PartialEq)]
@@ -66,6 +88,14 @@ pub struct ContinuousReport {
     pub total_tokens: usize,
     pub total_steps: usize,
     pub wall_s: f64,
+    /// Times a sequence was preempted (swapped out to the heap's swap
+    /// tier) to relieve page pressure. Always 0 on unpaged backends.
+    pub preemptions: usize,
+    /// Scheduler steps on which the queue head could not be admitted
+    /// because the free page list would not cover its first prefill
+    /// chunk on top of the active set's growth. Always 0 on unpaged
+    /// backends.
+    pub page_stall_steps: usize,
 }
 
 impl ContinuousReport {
@@ -114,44 +144,159 @@ where
         scheduler_body(&ctx, &cfg2, &compute, &requests, max_active)
     });
     let wall_s = t0.elapsed_s();
-    let (results, total_steps) = crate::serve::collect_node_outcomes(outs)?;
+    let (results, total_steps, preemptions, page_stall_steps) =
+        crate::serve::collect_node_outcomes(outs)?;
     let total_tokens = results.iter().map(|r| r.tokens).sum();
-    Ok(ContinuousReport { results, total_tokens, total_steps, wall_s })
+    Ok(ContinuousReport {
+        results,
+        total_tokens,
+        total_steps,
+        wall_s,
+        preemptions,
+        page_stall_steps,
+    })
 }
 
-/// The per-rank scheduler: identical decisions on every rank (admission is
-/// deterministic), so no cross-rank control-plane traffic is needed — the
-/// data plane (fused attention) is the only communication.
+/// A sequence parked by preemption: its scheduler state plus the swap-
+/// tier page tables holding its KV cache. Resumed FIFO, ahead of any
+/// fresh admission.
+struct Parked {
+    seq: Active,
+    saved: SwappedKv,
+}
+
+/// Pages the sequence's *next* scheduler step will allocate: the page
+/// growth of its next prefill chunk (head-sharded backends prefill
+/// `prefill_chunk` rows per step) or of its next decode token. The
+/// quantity the admission policy sums over the active set as the
+/// committed budget.
+fn next_step_growth(seq: &Active, cfg: &TransformerConfig) -> usize {
+    let next = if seq.prefill_next < seq.prompt_len {
+        seq.tokens_done + (seq.prompt_len - seq.prefill_next).min(cfg.prefill_chunk)
+    } else {
+        seq.tokens_done + 1
+    };
+    page_growth(seq.tokens_done, next, cfg.kv_block, cfg.n_layers)
+}
+
+fn committed_growth(active: &[Active], cfg: &TransformerConfig) -> usize {
+    active.iter().map(|s| next_step_growth(s, cfg)).sum()
+}
+
+/// The per-rank scheduler: identical decisions on every rank (admission
+/// and preemption read only request metadata and the logical free-page
+/// count), so no cross-rank control-plane traffic is needed — the data
+/// plane (fused attention) is the only communication.
 fn scheduler_body<C: LocalCompute>(
     ctx: &RankCtx,
     cfg: &TransformerConfig,
     compute: &C,
     requests: &[Request],
     max_active: usize,
-) -> Result<(Vec<ContinuousResult>, usize), IrisError> {
-    let mut queue: std::collections::VecDeque<&Request> = requests.iter().collect();
+) -> Result<(Vec<ContinuousResult>, usize, usize, usize), IrisError> {
+    let mut queue: VecDeque<&Request> = requests.iter().collect();
     let mut active: Vec<Active> = Vec::new();
+    let mut parked: VecDeque<Parked> = VecDeque::new();
     let mut done: Vec<ContinuousResult> = Vec::new();
     let mut round: u64 = 0;
     let mut step = 0usize;
+    let mut preemptions = 0usize;
+    let mut page_stall_steps = 0usize;
+    // the paged KV tier: head-sharded backends draw pages from the
+    // rank-shared pool; replicated backends (and kv_paged = false) keep
+    // contiguous shards and degrade to pure slot-count admission
+    let pools = if compute.attn_sharded() && cfg.kv_paged {
+        Some(make_kv_pools(cfg, ctx.heap_arc(), ctx.rank())?)
+    } else {
+        None
+    };
+    let rank_heads = cfg.head_partition()[ctx.rank()].1;
+    let admit = |req: &Request, step: usize, shard: KvShard| Active {
+        id: req.id,
+        prompt_len: req.prompt_len,
+        total: req.total_tokens(),
+        tokens_done: 0,
+        prefill_next: 0,
+        admitted_step: step,
+        first_token_step: None,
+        shard,
+        hidden: None,
+    };
 
-    while !queue.is_empty() || !active.is_empty() {
-        // admission: fill free slots in FIFO order; a fresh sequence
-        // enters in the prefill phase (no hidden state yet — the prompt
-        // rows are its input)
-        while active.len() < max_active {
-            let Some(req) = queue.pop_front() else { break };
-            active.push(Active {
-                id: req.id,
-                prompt_len: req.prompt_len,
-                total: req.total_tokens(),
-                tokens_done: 0,
-                prefill_next: 0,
-                admitted_step: step,
-                first_token_step: None,
-                shard: make_shard(cfg, compute, ctx.rank()),
-                hidden: None,
-            });
+    while !queue.is_empty() || !active.is_empty() || !parked.is_empty() {
+        if let Some((pool, swap)) = &pools {
+            // (a) resume parked sequences FIFO, ahead of any fresh
+            // admission, once the free list covers their pages coming
+            // back *and* everyone's next-step growth
+            while active.len() < max_active {
+                let Some(p) = parked.front() else { break };
+                let need = p.saved.pages() + next_step_growth(&p.seq, cfg);
+                if pool.borrow().free_pages() < committed_growth(&active, cfg) + need {
+                    break;
+                }
+                let mut p = parked.pop_front().expect("peeked above");
+                p.seq.shard = KvShard::swap_in(cfg, rank_heads, pool, swap, p.saved)?;
+                active.push(p.seq);
+            }
+            // (b) page-pressure admission: admit the queue head while
+            // the free list covers the active set's committed growth
+            // plus the newcomer's first prefill chunk; when it does not,
+            // preempt latest-admitted decodes so the prefill is not
+            // starved. Parked sequences have resume priority, so no
+            // fresh admission overtakes them.
+            let mut stalled = false;
+            while active.len() < max_active && parked.is_empty() {
+                let Some(req) = queue.front() else { break };
+                let first_m = req.prompt_len.min(cfg.prefill_chunk);
+                let need = page_growth(0, first_m, cfg.kv_block, cfg.n_layers);
+                while pool.borrow().free_pages() < committed_growth(&active, cfg) + need {
+                    // victim: the latest-admitted decode-phase sequence
+                    // (prefills are never preempted for admission)
+                    let Some(v) = active.iter().rposition(|s| s.prefill_next >= s.prompt_len)
+                    else {
+                        stalled = true;
+                        break;
+                    };
+                    let mut seq = active.remove(v);
+                    let saved = seq.shard.swap_out(swap)?;
+                    preemptions += 1;
+                    parked.push_back(Parked { seq, saved });
+                }
+                if stalled {
+                    break;
+                }
+                let req = queue.pop_front().expect("peeked above");
+                active.push(admit(req, step, make_shard(cfg, compute, ctx.rank(), Some(pool))));
+            }
+            if stalled {
+                page_stall_steps += 1;
+            }
+            // (c) pressure guard: the step about to run must not outrun
+            // the free list — preempt from the back (latest-admitted
+            // decode first, latest-admitted otherwise) until this step's
+            // growth fits. The config floor (kv_pages holds one
+            // max-length sequence) guarantees a lone survivor always
+            // fits, so this terminates with a sequence still advancing.
+            while pool.borrow().free_pages() < committed_growth(&active, cfg) {
+                debug_assert!(active.len() > 1, "a single sequence always fits kv_pages");
+                let v = active
+                    .iter()
+                    .rposition(|s| s.prefill_next >= s.prompt_len)
+                    .filter(|&v| v > 0)
+                    .unwrap_or(active.len() - 1);
+                let mut seq = active.remove(v);
+                let saved = seq.shard.swap_out(swap)?;
+                preemptions += 1;
+                parked.push_back(Parked { seq, saved });
+            }
+        } else {
+            // static-slot admission: fill free slots in FIFO order; a
+            // fresh sequence enters in the prefill phase (no hidden
+            // state yet — the prompt rows are its input)
+            while active.len() < max_active {
+                let Some(req) = queue.pop_front() else { break };
+                active.push(admit(req, step, make_shard(cfg, compute, ctx.rank(), None)));
+            }
         }
         // phase membership is decided *before* anything advances, so a
         // sequence whose prefill completes this step first decodes next
@@ -262,7 +407,7 @@ fn scheduler_body<C: LocalCompute>(
         step += 1;
     }
     done.sort_by_key(|r| r.id);
-    Ok((done, step))
+    Ok((done, step, preemptions, page_stall_steps))
 }
 
 #[cfg(test)]

@@ -69,6 +69,8 @@
 pub mod continuous;
 pub mod queue;
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::sync::Arc;
 
 use crate::iris::{run_node, HeapBuilder, IrisError, RankCtx, SymmetricHeap};
@@ -76,6 +78,7 @@ use crate::kernels::attention::PartialState;
 use crate::kernels::combine::OnlineCombiner;
 use crate::metrics::Recorder;
 use crate::tensor::Tensor;
+use crate::workloads::kv_page::KvPagePool;
 use crate::workloads::transformer::{
     prompt_embeddings, rmsnorm, rmsnorm_rows, KvShard, LocalCompute, TransformerConfig,
 };
@@ -110,6 +113,13 @@ impl ServeReport {
 pub(crate) const BUF_INBOX: &str = "serve_inbox";
 pub(crate) const FLAGS_PARTIAL: &str = "serve_ready";
 pub(crate) const FLAGS_REQ_DONE: &str = "serve_req_done";
+/// The dynamic KV page region: [`TransformerConfig::kv_pages`] fixed-size
+/// pages per rank, shared by every paged [`KvShard`] on that rank (the
+/// continuous-batching scheduler's cache tier).
+pub const BUF_KV_PAGES: &str = "serve_kv_pages";
+/// The swap-out staging tier: same page geometry as [`BUF_KV_PAGES`],
+/// holding the pages of preempted sequences until page pressure clears.
+pub const BUF_KV_SWAP: &str = "serve_kv_swap";
 
 /// The heap buffers of one fused reduce-scatter + all-gather exchange
 /// ([`fused_allreduce_exchange`]). The serving heap carries two disjoint
@@ -160,9 +170,15 @@ pub const MLP_EXCHANGE: ExchangeBufs = ExchangeBufs {
 /// [`TransformerConfig::exchange_slot_rows`] rows per source so a whole
 /// prefill chunk *or* a whole batched decode step
 /// ([`decode_batch_fused`]) moves as one M-row block; single-sequence
-/// decode steps use one row of the same slot. Public so embedding servers
-/// and tests can stand up the exact node layout the serving entry points
-/// use.
+/// decode steps use one row of the same slot. The KV tier is **dynamic**:
+/// instead of `max_seq`-per-slot capacity, [`BUF_KV_PAGES`] (and its
+/// same-sized swap twin [`BUF_KV_SWAP`]) hold
+/// [`TransformerConfig::kv_pages`] fixed-size pages sized for the
+/// *widest* head shard in the world — the heap is symmetric, so every
+/// rank carries the same region and narrower shards simply use a shorter
+/// page stride (validated by [`KvPagePool::new`]). Public so embedding
+/// servers and tests can stand up the exact node layout the serving
+/// entry points use.
 pub fn build_serve_heap(cfg: &TransformerConfig) -> Arc<SymmetricHeap> {
     let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
     let seg_max = cfg.d_model.div_ceil(cfg.world);
@@ -170,10 +186,14 @@ pub fn build_serve_heap(cfg: &TransformerConfig) -> Arc<SymmetricHeap> {
     // the two can never diverge (`cfg` is expected validated:
     // prefill_chunk >= 1, decode_batch >= 1)
     let slot = cfg.exchange_slot_rows() * seg_max;
+    let widest = cfg.head_partition().iter().map(|(_, l)| *l).max().unwrap_or(0);
+    let page_region = cfg.kv_pages * cfg.kv_page_elems(widest);
     let mut b = HeapBuilder::new(cfg.world)
         .buffer(BUF_INBOX, 2 * cfg.world * wire)
         .flags(FLAGS_PARTIAL, cfg.world)
-        .flags(FLAGS_REQ_DONE, cfg.world);
+        .flags(FLAGS_REQ_DONE, cfg.world)
+        .buffer(BUF_KV_PAGES, page_region)
+        .buffer(BUF_KV_SWAP, page_region);
     for bufs in [&ATTN_EXCHANGE, &MLP_EXCHANGE] {
         b = b
             .buffer(bufs.data, 2 * cfg.world * slot)
@@ -182,6 +202,32 @@ pub fn build_serve_heap(cfg: &TransformerConfig) -> Arc<SymmetricHeap> {
             .flags(bufs.gather_flags, cfg.world);
     }
     Arc::new(b.build())
+}
+
+/// Build this rank's (main, swap) KV page pools over the serving heap's
+/// [`BUF_KV_PAGES`] / [`BUF_KV_SWAP`] regions, strided for the rank's own
+/// head-shard width. Logical page counts are identical on every rank
+/// whatever the width ([`TransformerConfig::kv_pages`] each), which is
+/// what lets every rank make the same admission decision from its local
+/// free-list count alone.
+pub fn make_kv_pools(
+    cfg: &TransformerConfig,
+    heap: Arc<SymmetricHeap>,
+    rank: usize,
+) -> Result<(Rc<RefCell<KvPagePool>>, Rc<RefCell<KvPagePool>>), IrisError> {
+    let heads = cfg.head_partition()[rank].1;
+    let mk = |buf: &str| -> Result<Rc<RefCell<KvPagePool>>, IrisError> {
+        Ok(Rc::new(RefCell::new(KvPagePool::new(
+            Arc::clone(&heap),
+            rank,
+            buf,
+            heads,
+            cfg.head_dim,
+            cfg.kv_block,
+            cfg.kv_pages,
+        )?)))
+    };
+    Ok((mk(BUF_KV_PAGES)?, mk(BUF_KV_SWAP)?))
 }
 
 /// Serve a queue of requests on a fresh distributed node. `factory` builds
@@ -281,15 +327,24 @@ pub(crate) fn validate_requests(
 }
 
 /// Build the KV shard matching the backend's attention layout: a head
-/// shard (this rank's heads, full sequence) for head-sharded backends, a
-/// sequence shard (all heads, `max_seq / world` tokens) otherwise.
+/// shard (this rank's heads, full sequence) for head-sharded backends —
+/// **paged** over the rank's shared pool when one is supplied (the
+/// continuous-batching scheduler's layout), contiguous otherwise — or a
+/// contiguous sequence shard (all heads, `max_seq / world` tokens) for
+/// replicated backends, whose sequence-parallel protocol keeps static
+/// per-request storage.
 pub(crate) fn make_shard<C: LocalCompute>(
     cfg: &TransformerConfig,
     compute: &C,
     rank: usize,
+    pool: Option<&Rc<RefCell<KvPagePool>>>,
 ) -> KvShard {
     if compute.attn_sharded() {
-        KvShard::for_heads(cfg, cfg.head_partition()[rank].1)
+        let heads = cfg.head_partition()[rank].1;
+        match pool {
+            Some(p) => KvShard::paged(cfg, heads, p),
+            None => KvShard::for_heads(cfg, heads),
+        }
     } else {
         KvShard::new(cfg)
     }
@@ -313,7 +368,7 @@ fn engine_body<C: LocalCompute>(
 
     for req in requests {
         let timer = crate::clock::WallTimer::start();
-        let mut shard = make_shard(cfg, compute, ctx.rank());
+        let mut shard = make_shard(cfg, compute, ctx.rank(), None);
         let mut h = prefill_request(ctx, cfg, compute, &mut shard, req, &mut round)?;
         for g in 0..req.gen_len {
             let owner = (req.prompt_len + g) % cfg.world;
@@ -388,11 +443,11 @@ pub fn decode_step_fused<C: LocalCompute>(
         // ---- sequence-parallel attention (replicated projections) ----
         // 2) owner appends this token's KV to its sequence shard
         if r == owner {
-            shard.append(layer, &k_new, &v_new);
+            shard.append(layer, &k_new, &v_new)?;
         }
         // 3) fused distributed flash decode (Algorithm 4):
         //    part 1 — local partial + immediate push to every peer
-        let partial = shard.partial(layer, &q);
+        let partial = shard.partial(layer, &q)?;
         let wire_data = match &partial {
             Some(p) => p.to_wire(),
             // empty shard: identity partial (m = -inf, l = 0)
@@ -548,9 +603,9 @@ pub fn decode_batch_fused<C: LocalCompute>(
                 layer,
                 &k_new.rows(i * nh, (i + 1) * nh),
                 &v_new.rows(i * nh, (i + 1) * nh),
-            );
+            )?;
             let p = shard
-                .partial(layer, &q.rows(i * nh, (i + 1) * nh))
+                .partial(layer, &q.rows(i * nh, (i + 1) * nh))?
                 .expect("KV non-empty after append");
             let mut comb = OnlineCombiner::new(nh, hd);
             comb.add(&p);
@@ -664,9 +719,9 @@ pub fn prefill_step_fused<C: LocalCompute>(
                 layer,
                 &k_new.rows(i * nh, (i + 1) * nh),
                 &v_new.rows(i * nh, (i + 1) * nh),
-            );
+            )?;
         }
-        let attn = shard.prefill_attention(layer, &q, m);
+        let attn = shard.prefill_attention(layer, &q, m)?;
         let wo_partial = compute.attn_out_partial_rows(layer, &attn, m);
         let proj = fused_allreduce_exchange_rows(
             ctx,
@@ -1038,7 +1093,7 @@ mod tests {
         let cfg2 = cfg.clone();
         run_node(heap, move |ctx| {
             let compute = factory(ctx.rank());
-            let mut shard = make_shard(&cfg2, &compute, ctx.rank());
+            let mut shard = make_shard(&cfg2, &compute, ctx.rank(), None);
             let mut h = token_embedding(&cfg2, 0);
             let mut round = 0u64;
             for t in 0..steps {
@@ -1167,7 +1222,7 @@ mod tests {
         let cfg2 = cfg.clone();
         run_node(heap, move |ctx| {
             let compute = factory(ctx.rank());
-            let mut shard = make_shard(&cfg2, &compute, ctx.rank());
+            let mut shard = make_shard(&cfg2, &compute, ctx.rank(), None);
             let mut round = 0u64;
             let mut h = prefill_request(&ctx, &cfg2, &compute, &mut shard, &req, &mut round)
                 .expect("prefill");
@@ -1236,7 +1291,7 @@ mod tests {
         let factory = native_factory(&cfg, 3);
         let outs = run_node(heap, move |ctx| {
             let compute = factory(ctx.rank());
-            let mut shard = make_shard(&cfg2, &compute, ctx.rank());
+            let mut shard = make_shard(&cfg2, &compute, ctx.rank(), None);
             let mut round = 0u64;
             let rows = prompt_embeddings(&cfg2, 0, 0, 2);
             prefill_step_fused(&ctx, &cfg2, &compute, &mut shard, &rows, &mut round)
@@ -1262,8 +1317,8 @@ mod tests {
         let factory = native_factory(&cfg, 5);
         let outs = run_node(heap, move |ctx| {
             let compute = factory(ctx.rank());
-            let mut s0 = make_shard(&cfg2, &compute, ctx.rank());
-            let mut s1 = make_shard(&cfg2, &compute, ctx.rank());
+            let mut s0 = make_shard(&cfg2, &compute, ctx.rank(), None);
+            let mut s1 = make_shard(&cfg2, &compute, ctx.rank(), None);
             let hs = Tensor::concat_rows(&[token_embedding(&cfg2, 0), token_embedding(&cfg2, 1)]);
             let mut round = 0u64;
             decode_batch_fused(&ctx, &cfg2, &compute, &mut [&mut s0, &mut s1], &hs, &mut round)
@@ -1292,21 +1347,21 @@ mod tests {
             let mut round = 0u64;
             // 5 rows > slot capacity 4
             let mut shards: Vec<KvShard> =
-                (0..5).map(|_| make_shard(&cfg2, &compute, ctx.rank())).collect();
+                (0..5).map(|_| make_shard(&cfg2, &compute, ctx.rank(), None)).collect();
             let rows: Vec<Tensor> = (0..5).map(|i| token_embedding(&cfg2, i)).collect();
             let hs = Tensor::concat_rows(&rows);
             let mut refs: Vec<&mut KvShard> = shards.iter_mut().collect();
             let too_wide =
                 decode_batch_fused(&ctx, &cfg2, &compute, &mut refs, &hs, &mut round).unwrap_err();
             // 2 rows but only 1 shard
-            let mut one = make_shard(&cfg2, &compute, ctx.rank());
+            let mut one = make_shard(&cfg2, &compute, ctx.rank(), None);
             let hs2 = Tensor::concat_rows(&[token_embedding(&cfg2, 0), token_embedding(&cfg2, 1)]);
             let mismatched =
                 decode_batch_fused(&ctx, &cfg2, &compute, &mut [&mut one], &hs2, &mut round)
                     .unwrap_err();
             // shards with different head slices in one batch (release-mode
             // typed error, not silent row-slice corruption)
-            let mut sa = make_shard(&cfg2, &compute, ctx.rank());
+            let mut sa = make_shard(&cfg2, &compute, ctx.rank(), None);
             let mut sb = KvShard::for_heads(&cfg2, sa.heads() + 1);
             let mixed = decode_batch_fused(
                 &ctx,
@@ -1351,7 +1406,7 @@ mod tests {
             let outs = run_node(heap, move |ctx| {
                 let compute = factory(ctx.rank());
                 let mut shards: Vec<KvShard> =
-                    (0..3).map(|_| make_shard(&cfg2, &compute, ctx.rank())).collect();
+                    (0..3).map(|_| make_shard(&cfg2, &compute, ctx.rank(), None)).collect();
                 let rows: Vec<Tensor> = (0..3).map(|i| token_embedding(&cfg2, i)).collect();
                 let mut hs = Tensor::concat_rows(&rows);
                 let mut round = 0u64;
@@ -1452,7 +1507,7 @@ mod tests {
         let factory = tp_factory(&cfg, 83);
         run_node(heap2, move |ctx| {
             let compute = factory(ctx.rank());
-            let mut shard = make_shard(&cfg2, &compute, ctx.rank());
+            let mut shard = make_shard(&cfg2, &compute, ctx.rank(), None);
             let mut h = token_embedding(&cfg2, 0);
             let mut round = 0u64;
             for t in 0..3 {

@@ -1,6 +1,7 @@
 //! Request queue for the serving loop: FIFO admission with a simple
 //! max-batch policy and synthetic workload generation.
 
+use crate::iris::IrisError;
 use crate::util::Prng;
 
 /// One serving request: a prompt of `prompt_len` tokens to prefill
@@ -42,12 +43,16 @@ impl RequestQueue {
     }
 
     /// Enqueue a request; ids are assigned in admission order. An empty
-    /// prompt (`prompt_len == 0`, an M = 0 prefill) is rejected here —
-    /// nothing would seed the request's hidden state, so it must not
-    /// reach the node as a degenerate decode-only admission.
-    pub fn submit(&mut self, prompt_len: usize, gen_len: usize) -> Result<usize, String> {
+    /// prompt (`prompt_len == 0`, an M = 0 prefill) is rejected here as a
+    /// typed [`IrisError::InvalidLayout`] — matching the typed-error
+    /// contract of the rest of the serve stack — because nothing would
+    /// seed the request's hidden state, so it must not reach the node as
+    /// a degenerate decode-only admission.
+    pub fn submit(&mut self, prompt_len: usize, gen_len: usize) -> Result<usize, IrisError> {
         if prompt_len == 0 {
-            return Err("prompt_len must be >= 1 (an M = 0 prompt cannot be prefilled)".into());
+            return Err(IrisError::InvalidLayout(
+                "prompt_len must be >= 1 (an M = 0 prompt cannot be prefilled)".into(),
+            ));
         }
         let id = self.next_id;
         self.next_id += 1;
@@ -61,6 +66,13 @@ impl RequestQueue {
 
     pub fn is_empty(&self) -> bool {
         self.pending.is_empty()
+    }
+
+    /// The request that would be admitted next, without dequeuing it —
+    /// what the page-pressure admission policy inspects to decide whether
+    /// the head's first prefill chunk fits the free page budget.
+    pub fn peek(&self) -> Option<&Request> {
+        self.pending.front()
     }
 
     /// Drain up to `max_batch` requests in FIFO order.
@@ -108,13 +120,27 @@ mod tests {
 
     #[test]
     fn empty_prompt_rejected_at_submission() {
-        // the satellite fix: M = 0 prompts never enter the queue, and the
-        // rejection burns no request id
+        // the satellite fix: M = 0 prompts never enter the queue (as a
+        // typed, matchable error), and the rejection burns no request id
         let mut q = RequestQueue::new();
-        let err = q.submit(0, 5).unwrap_err();
-        assert!(err.contains("M = 0"), "{err}");
+        match q.submit(0, 5) {
+            Err(IrisError::InvalidLayout(msg)) => assert!(msg.contains("M = 0"), "{msg}"),
+            other => panic!("expected typed InvalidLayout, got {other:?}"),
+        }
         assert!(q.is_empty());
         assert_eq!(q.submit(1, 0).unwrap(), 0, "rejection must not consume an id");
+    }
+
+    #[test]
+    fn peek_sees_the_head_without_dequeuing() {
+        let mut q = RequestQueue::new();
+        assert!(q.peek().is_none());
+        q.submit(4, 2).unwrap();
+        q.submit(8, 1).unwrap();
+        assert_eq!(q.peek().map(|r| (r.id, r.prompt_len)), Some((0, 4)));
+        assert_eq!(q.len(), 2, "peek must not consume");
+        q.drain_batch(1);
+        assert_eq!(q.peek().map(|r| r.id), Some(1));
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod stats;
 pub mod table;
 
 pub use prng::Prng;
-pub use stats::{geomean, LatencyHistogram, Summary};
+pub use stats::{geomean, tail_percentiles, LatencyHistogram, Percentiles, Summary};
 pub use table::{fmt_bytes, fmt_count, fmt_ns, Table};
 
 /// Partition `n` elements into `parts` contiguous (offset, len) segments,

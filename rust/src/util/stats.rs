@@ -142,6 +142,51 @@ impl LatencyHistogram {
     }
 }
 
+/// The serving-SLO tail triple: p50 / p95 / p99 of a latency sample.
+/// Production serving dashboards report exactly these three, so the
+/// TTFT / TPOT metrics of the `serve_slo` experiment carry them as a
+/// unit instead of re-deriving percentiles ad hoc at each call site.
+///
+/// ```
+/// use taxfree::util::stats::Percentiles;
+/// let p = Percentiles::of(&[1.0, 2.0, 3.0, 4.0]);
+/// assert!((p.p50 - 2.5).abs() < 1e-12);
+/// assert!((p.p95 - 3.85).abs() < 1e-12);
+/// assert!((p.p99 - 3.97).abs() < 1e-12);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    /// Tail percentiles of an (unsorted) sample by linear interpolation
+    /// ([`percentile_sorted`]). Panics on an empty sample (caller bug).
+    pub fn of(samples: &[f64]) -> Percentiles {
+        assert!(!samples.is_empty(), "Percentiles::of on empty sample");
+        let mut xs = samples.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+        Percentiles {
+            p50: percentile_sorted(&xs, 0.50),
+            p95: percentile_sorted(&xs, 0.95),
+            p99: percentile_sorted(&xs, 0.99),
+        }
+    }
+}
+
+/// p50/p95/p99 of a sample in one call — sugar over [`Percentiles::of`].
+///
+/// ```
+/// use taxfree::util::stats::tail_percentiles;
+/// let p = tail_percentiles(&[5.0]);
+/// assert_eq!((p.p50, p.p95, p.p99), (5.0, 5.0, 5.0));
+/// ```
+pub fn tail_percentiles(samples: &[f64]) -> Percentiles {
+    Percentiles::of(samples)
+}
+
 /// Geometric mean of strictly positive values (speedup aggregation).
 pub fn geomean(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty());

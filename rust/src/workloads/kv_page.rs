@@ -1,0 +1,331 @@
+//! Paged KV-cache storage: a free-list page allocator over a region of
+//! the Iris symmetric heap, plus the pure page-accounting helpers the
+//! admission policy and its DES twin share.
+//!
+//! **Geometry.** A *page* holds [`TransformerConfig::kv_block`] tokens of
+//! one layer of one sequence — K and V rows for every head this rank
+//! stores — so the attention kernel's block unit and the allocator's page
+//! unit coincide and a page is always consumed (or skipped) whole. Page
+//! `p` lives at element offset `p * page_elems` of the named heap buffer,
+//! K rows first then V rows, head-major within each half:
+//!
+//! ```text
+//! offset(p, half, head, slot) =
+//!     p * 2*heads*kv_block*head_dim
+//!   + half * heads*kv_block*head_dim      // 0 = K, 1 = V
+//!   + head * kv_block*head_dim
+//!   + slot * head_dim
+//! ```
+//!
+//! **Cross-rank determinism.** Page accounting is *logical*: every rank's
+//! pool holds the same `n_pages` count regardless of how many heads its
+//! shard stores (an empty head shard still consumes logical pages, it
+//! just writes zero-length rows). The free list starts as
+//! `n_pages-1, …, 1, 0` and allocation pops the back, so two pools that
+//! execute the same alloc/free sequence — which the deterministic
+//! scheduler guarantees — report the same [`KvPagePool::free_pages`] at
+//! every decision point on every rank, with zero control-plane traffic.
+//!
+//! [`TransformerConfig::kv_block`]: crate::workloads::transformer::TransformerConfig::kv_block
+
+use std::sync::Arc;
+
+use crate::iris::{IrisError, SymmetricHeap};
+
+/// Index of one page in a [`KvPagePool`].
+pub type PageId = u32;
+
+/// Which half of a page a row belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvHalf {
+    K,
+    V,
+}
+
+impl KvHalf {
+    fn index(self) -> usize {
+        match self {
+            KvHalf::K => 0,
+            KvHalf::V => 1,
+        }
+    }
+}
+
+/// Tokens → pages at the given page size (`kv_block` tokens per page).
+pub fn pages_for_tokens(tokens: usize, kv_block: usize) -> usize {
+    tokens.div_ceil(kv_block)
+}
+
+/// Pages a sequence must allocate (across all `n_layers` page tables) to
+/// grow from `cur_tokens` to `next_tokens` cached tokens — the quantity
+/// the admission policy budgets against [`KvPagePool::free_pages`] before
+/// advancing a scheduler step. Zero when the next tokens still fit in the
+/// current tail pages.
+pub fn page_growth(cur_tokens: usize, next_tokens: usize, kv_block: usize, n_layers: usize) -> usize {
+    debug_assert!(next_tokens >= cur_tokens);
+    (pages_for_tokens(next_tokens, kv_block) - pages_for_tokens(cur_tokens, kv_block)) * n_layers
+}
+
+/// Free-list page allocator over the heap buffer `buf` on `rank`.
+///
+/// The pool owns no storage: pages are element ranges of the symmetric
+/// heap, so every row write/read is a fallible typed heap operation (a
+/// truncated region or misnamed buffer surfaces as
+/// [`IrisError::OutOfBounds`] / [`IrisError::UnknownBuffer`], not a
+/// panic). One pool instance is shared by all of a rank's paged
+/// [`KvShard`]s via `Rc<RefCell<…>>`; a second pool over a second buffer
+/// serves as the swap-out staging tier (see [`KvShard::swap_out`]).
+///
+/// [`KvShard`]: crate::workloads::transformer::KvShard
+/// [`KvShard::swap_out`]: crate::workloads::transformer::KvShard::swap_out
+pub struct KvPagePool {
+    heap: Arc<SymmetricHeap>,
+    rank: usize,
+    buf: String,
+    heads: usize,
+    head_dim: usize,
+    kv_block: usize,
+    n_pages: usize,
+    /// Free page ids; `alloc` pops the back, `free` pushes. Initialized
+    /// descending so pages are first handed out as `0, 1, 2, …`.
+    free: Vec<PageId>,
+}
+
+impl KvPagePool {
+    /// Build a pool of `n_pages` pages for a `heads`-head shard, after
+    /// validating the named region really holds that many pages (the
+    /// heap sizes the buffer for the *widest* head shard in the world;
+    /// narrower shards use a shorter stride and waste the tail).
+    pub fn new(
+        heap: Arc<SymmetricHeap>,
+        rank: usize,
+        buf: &str,
+        heads: usize,
+        head_dim: usize,
+        kv_block: usize,
+        n_pages: usize,
+    ) -> Result<KvPagePool, IrisError> {
+        if rank >= heap.world() {
+            return Err(IrisError::BadRank { rank, world: heap.world() });
+        }
+        let capacity = heap.buffer_len(buf)?;
+        let need = n_pages * 2 * heads * kv_block * head_dim;
+        if need > capacity {
+            return Err(IrisError::InvalidLayout(format!(
+                "page region {buf} holds {capacity} elems, {n_pages} pages of \
+                 {heads} heads x {kv_block} tokens x {head_dim} need {need}"
+            )));
+        }
+        Ok(KvPagePool {
+            heap,
+            rank,
+            buf: buf.to_string(),
+            heads,
+            head_dim,
+            kv_block,
+            n_pages,
+            free: (0..n_pages as PageId).rev().collect(),
+        })
+    }
+
+    /// Total logical pages in the pool.
+    pub fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    /// Pages currently on the free list — the admission signal.
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Pages currently allocated to shards.
+    pub fn pages_in_use(&self) -> usize {
+        self.n_pages - self.free.len()
+    }
+
+    /// Tokens one page holds.
+    pub fn kv_block(&self) -> usize {
+        self.kv_block
+    }
+
+    /// Heads stored per token on this rank's pool.
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    /// Pop one page off the free list.
+    pub fn alloc(&mut self) -> Result<PageId, IrisError> {
+        self.free.pop().ok_or(IrisError::OutOfPages { requested: 1, free: 0 })
+    }
+
+    /// Return a page to the free list.
+    pub fn free(&mut self, page: PageId) {
+        debug_assert!((page as usize) < self.n_pages, "freeing foreign page {page}");
+        debug_assert!(!self.free.contains(&page), "double free of page {page}");
+        self.free.push(page);
+    }
+
+    fn row_offset(&self, page: PageId, half: KvHalf, head: usize, slot: usize) -> usize {
+        debug_assert!(head < self.heads && slot < self.kv_block);
+        let half_elems = self.heads * self.kv_block * self.head_dim;
+        page as usize * 2 * half_elems
+            + half.index() * half_elems
+            + head * self.kv_block * self.head_dim
+            + slot * self.head_dim
+    }
+
+    /// Write one `[head_dim]` row into `slot` of `page` (a typed heap
+    /// store — fallible).
+    pub fn write_row(
+        &self,
+        page: PageId,
+        half: KvHalf,
+        head: usize,
+        slot: usize,
+        row: &[f32],
+    ) -> Result<(), IrisError> {
+        debug_assert_eq!(row.len(), self.head_dim);
+        self.heap.store(self.rank, &self.buf, self.row_offset(page, half, head, slot), row)
+    }
+
+    /// Read one `[head_dim]` row out of `slot` of `page`.
+    pub fn read_row(
+        &self,
+        page: PageId,
+        half: KvHalf,
+        head: usize,
+        slot: usize,
+        out: &mut [f32],
+    ) -> Result<(), IrisError> {
+        debug_assert_eq!(out.len(), self.head_dim);
+        self.heap.load(self.rank, &self.buf, self.row_offset(page, half, head, slot), out)
+    }
+
+    /// Copy the full contents of `page` into `dst_page` of `dst` (the
+    /// swap path: same rank, different heap region, same geometry).
+    pub fn copy_page_to(
+        &self,
+        page: PageId,
+        dst: &KvPagePool,
+        dst_page: PageId,
+    ) -> Result<(), IrisError> {
+        debug_assert_eq!(
+            (self.heads, self.head_dim, self.kv_block),
+            (dst.heads, dst.head_dim, dst.kv_block),
+            "swap tiers must share the page geometry"
+        );
+        let elems = 2 * self.heads * self.kv_block * self.head_dim;
+        if elems == 0 {
+            return Ok(());
+        }
+        let mut scratch = vec![0.0f32; elems];
+        self.heap.load(self.rank, &self.buf, page as usize * elems, &mut scratch)?;
+        dst.heap.store(dst.rank, &dst.buf, dst_page as usize * elems, &scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iris::HeapBuilder;
+
+    fn pool(n_pages: usize, heads: usize) -> KvPagePool {
+        let heap = Arc::new(HeapBuilder::new(1).buffer("pages", n_pages * 2 * heads * 4 * 3).build());
+        KvPagePool::new(heap, 0, "pages", heads, 3, 4, n_pages).expect("pool")
+    }
+
+    #[test]
+    fn alloc_is_ascending_and_free_recycles() {
+        let mut p = pool(3, 2);
+        assert_eq!(p.free_pages(), 3);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_eq!((a, b), (0, 1), "fresh pools hand out pages in id order");
+        p.free(a);
+        assert_eq!(p.alloc().unwrap(), 0, "freed page is reused first (LIFO)");
+        assert_eq!(p.pages_in_use(), 2);
+    }
+
+    #[test]
+    fn exhaustion_is_a_typed_error() {
+        let mut p = pool(1, 1);
+        p.alloc().unwrap();
+        match p.alloc() {
+            Err(IrisError::OutOfPages { requested: 1, free: 0 }) => {}
+            other => panic!("expected OutOfPages, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rows_roundtrip_through_the_heap() {
+        let mut p = pool(2, 2);
+        let pg = p.alloc().unwrap();
+        p.write_row(pg, KvHalf::K, 1, 3, &[1.0, 2.0, 3.0]).unwrap();
+        p.write_row(pg, KvHalf::V, 0, 0, &[4.0, 5.0, 6.0]).unwrap();
+        let mut out = [0.0f32; 3];
+        p.read_row(pg, KvHalf::K, 1, 3, &mut out).unwrap();
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+        p.read_row(pg, KvHalf::V, 0, 0, &mut out).unwrap();
+        assert_eq!(out, [4.0, 5.0, 6.0]);
+        // the other half/head/slot stayed zero
+        p.read_row(pg, KvHalf::K, 0, 0, &mut out).unwrap();
+        assert_eq!(out, [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn misnamed_or_truncated_region_is_typed() {
+        let heap = Arc::new(HeapBuilder::new(1).buffer("pages", 10).build());
+        match KvPagePool::new(heap.clone(), 0, "nope", 1, 3, 4, 1) {
+            Err(IrisError::UnknownBuffer(b)) => assert_eq!(b, "nope"),
+            other => panic!("expected UnknownBuffer, got {other:?}"),
+        }
+        match KvPagePool::new(heap, 0, "pages", 1, 3, 4, 1) {
+            Err(IrisError::InvalidLayout(msg)) => assert!(msg.contains("pages")),
+            other => panic!("expected InvalidLayout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn copy_page_moves_whole_pages_between_tiers() {
+        let heap = Arc::new(
+            HeapBuilder::new(1)
+                .buffer("main", 2 * 2 * 1 * 4 * 3)
+                .buffer("swap", 2 * 2 * 1 * 4 * 3)
+                .build(),
+        );
+        let mut main = KvPagePool::new(heap.clone(), 0, "main", 1, 3, 4, 2).unwrap();
+        let mut swap = KvPagePool::new(heap, 0, "swap", 1, 3, 4, 2).unwrap();
+        let a = main.alloc().unwrap();
+        main.write_row(a, KvHalf::K, 0, 2, &[7.0, 8.0, 9.0]).unwrap();
+        let s = swap.alloc().unwrap();
+        main.copy_page_to(a, &swap, s).unwrap();
+        let mut out = [0.0f32; 3];
+        swap.read_row(s, KvHalf::K, 0, 2, &mut out).unwrap();
+        assert_eq!(out, [7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn growth_math_counts_page_boundaries_only() {
+        // kv_block 4, 2 layers: growing 0→1 opens a page per layer;
+        // 1→4 stays inside it; 4→5 opens the next
+        assert_eq!(page_growth(0, 1, 4, 2), 2);
+        assert_eq!(page_growth(1, 4, 4, 2), 0);
+        assert_eq!(page_growth(4, 5, 4, 2), 2);
+        assert_eq!(page_growth(0, 9, 4, 2), 6);
+        assert_eq!(pages_for_tokens(0, 4), 0);
+        assert_eq!(pages_for_tokens(8, 4), 2);
+    }
+
+    #[test]
+    fn zero_head_pool_tracks_logical_pages() {
+        // an empty head shard's pool still counts pages — the admission
+        // signal must be identical on every rank
+        let heap = Arc::new(HeapBuilder::new(1).buffer("pages", 0).build());
+        let mut p = KvPagePool::new(heap, 0, "pages", 0, 3, 4, 2).unwrap();
+        assert_eq!(p.free_pages(), 2);
+        let a = p.alloc().unwrap();
+        assert_eq!(p.free_pages(), 1);
+        p.free(a);
+        assert_eq!(p.free_pages(), 2);
+    }
+}

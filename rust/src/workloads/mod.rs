@@ -25,21 +25,30 @@
 //!   / relay schedule (NIC bytes fall ~`gpus_per_node`×);
 //! * [`transformer`] — a tiny tensor-parallel transformer model (batched
 //!   prefill + decode) built from the same pieces, used by the
-//!   end-to-end serving example.
+//!   end-to-end serving example;
+//! * [`kv_page`] — the paged KV-cache substrate: a free-list page
+//!   allocator over the Iris symmetric heap plus the pure page-growth
+//!   accounting the admission policy and its DES twin share;
+//! * [`serve_slo`] — the serving-SLO twin: Poisson and diurnal-burst
+//!   arrival traces through an analytic continuous-batching clock,
+//!   static-slot vs page-pressure admission, TTFT / TPOT percentiles.
 
 pub mod ag_gemm;
 pub mod all_reduce;
 pub mod batch_decode;
 pub mod flash_decode;
 pub mod gemm_rs;
+pub mod kv_page;
 pub mod multinode;
 pub mod prefill;
+pub mod serve_slo;
 pub mod tp_attention;
 pub mod transformer;
 
 pub use batch_decode::BatchDecodeStrategy;
 pub use multinode::MultinodeStrategy;
 pub use prefill::PrefillStrategy;
+pub use serve_slo::ServeSloStrategy;
 pub use tp_attention::TpAttnStrategy;
 
 use crate::config::HwConfig;

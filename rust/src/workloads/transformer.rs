@@ -55,12 +55,17 @@
 //! keeps the fully replicated layout (its artifact is the monolithic
 //! post-attention block).
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::iris::IrisError;
 use crate::kernels::attention::{
     flash_decode_partial, flash_decode_partial_strided, PartialState,
 };
 use crate::kernels::combine::OnlineCombiner;
 use crate::tensor::Tensor;
 use crate::util::{partition, Prng};
+use crate::workloads::kv_page::{KvHalf, KvPagePool, PageId};
 
 /// Model geometry.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -92,6 +97,25 @@ pub struct TransformerConfig {
     /// slots ([`TransformerConfig::exchange_slot_rows`]). Must be
     /// positive.
     pub decode_batch: usize,
+    /// Logical KV pages per rank in the serving heap's dynamic page
+    /// region ([`crate::workloads::kv_page::KvPagePool`]). One page holds
+    /// [`TransformerConfig::kv_block`] tokens of one layer of one
+    /// sequence, so a full-length sequence consumes
+    /// `ceil(max_seq / kv_block) * n_layers` pages
+    /// ([`TransformerConfig::pages_per_max_seq`]); `validate` requires at
+    /// least that many, guaranteeing any admissible request can always
+    /// run to completion once every other sequence is preempted. The
+    /// count is *logical* — identical on every rank regardless of its
+    /// head-shard width — so page-pressure admission decisions need no
+    /// control-plane traffic.
+    pub kv_pages: usize,
+    /// Whether the continuous-batching scheduler stores head-sharded KV
+    /// caches as pages over the shared heap pool (`true`, the production
+    /// layout) or as legacy contiguous per-sequence allocations (`false`
+    /// — the equivalence tests flip this to pin bitwise-identical
+    /// outputs across the two layouts). Replicated-attention backends
+    /// always use contiguous sequence shards.
+    pub kv_paged: bool,
 }
 
 impl TransformerConfig {
@@ -108,6 +132,9 @@ impl TransformerConfig {
             max_seq: 64,
             prefill_chunk: 4,
             decode_batch: 3,
+            // 3 full-length sequences worth (16 pages/layer x 2 layers each)
+            kv_pages: 96,
+            kv_paged: true,
         }
     }
 
@@ -130,6 +157,9 @@ impl TransformerConfig {
             // 2 does not divide the 3-slot scheduler tests' active sets,
             // so batched decode exercises ragged groups (2 + 1)
             decode_batch: 2,
+            // 3 full-length sequences worth (12 pages/layer x 2 layers each)
+            kv_pages: 72,
+            kv_paged: true,
         }
     }
 
@@ -146,6 +176,9 @@ impl TransformerConfig {
             max_seq: 512,
             prefill_chunk: 16,
             decode_batch: 8,
+            // 8 full-length sequences worth (16 pages/layer x 4 layers each)
+            kv_pages: 512,
+            kv_paged: true,
         }
     }
 
@@ -181,6 +214,15 @@ impl TransformerConfig {
                 "decode_batch must be positive (an M = 0 batched decode step is rejected)".into(),
             );
         }
+        if self.kv_pages < self.pages_per_max_seq() {
+            return Err(format!(
+                "kv_pages ({}) must hold at least one max-length sequence \
+                 ({} = ceil(max_seq/kv_block) * n_layers), or preemption could \
+                 never free enough pages for an admissible request to finish",
+                self.kv_pages,
+                self.pages_per_max_seq()
+            ));
+        }
         Ok(())
     }
 
@@ -196,6 +238,21 @@ impl TransformerConfig {
     /// Per-rank KV shard capacity (tokens).
     pub fn shard_capacity(&self) -> usize {
         self.max_seq.div_ceil(self.world)
+    }
+
+    /// KV pages one max-length sequence consumes across all layers — the
+    /// floor [`TransformerConfig::validate`] enforces on
+    /// [`TransformerConfig::kv_pages`].
+    pub fn pages_per_max_seq(&self) -> usize {
+        self.max_seq.div_ceil(self.kv_block) * self.n_layers
+    }
+
+    /// Elements one KV page occupies for a `heads`-head shard (K and V
+    /// halves of `kv_block` tokens) — the per-page stride of the serving
+    /// heap's page region, which `serve::build_serve_heap` sizes for the
+    /// widest head shard in the world.
+    pub fn kv_page_elems(&self, heads: usize) -> usize {
+        2 * heads * self.kv_block * self.head_dim
     }
 
     /// Row capacity of one fused-exchange staging slot — the single
@@ -701,35 +758,94 @@ impl LocalCompute for NativeCompute {
     }
 }
 
-/// Per-rank KV cache shard: per layer, appended (K, V) rows for the tokens
-/// this shard covers, stored [heads * capacity, dim] with a length counter.
+/// Storage behind a [`KvShard`]: the legacy contiguous allocation, or a
+/// page-table view over a shared heap-backed [`KvPagePool`].
+enum KvStore {
+    /// One contiguous `[heads * cap, dim]` tensor pair per layer, plus a
+    /// length counter.
+    Contig(Vec<(Tensor, Tensor, usize)>),
+    /// Fixed-size pages on the Iris heap: per layer, the sequence's page
+    /// table (pages in sequence order — walking it front to back replays
+    /// the contiguous token order exactly) and the cached length.
+    Paged { pool: Rc<RefCell<KvPagePool>>, layers: Vec<(Vec<PageId>, usize)> },
+}
+
+/// Page tables of a swapped-out (preempted) sequence: for each layer, the
+/// sequence's pages *in the swap tier* plus its cached length. Produced
+/// by [`KvShard::swap_out`], held by the scheduler while the sequence is
+/// stalled, consumed by [`KvShard::swap_in`].
+pub struct SwappedKv {
+    layers: Vec<(Vec<PageId>, usize)>,
+}
+
+impl SwappedKv {
+    /// Pages this sequence will re-allocate from the main pool on resume.
+    pub fn pages(&self) -> usize {
+        self.layers.iter().map(|(t, _)| t.len()).sum()
+    }
+
+    /// Cached tokens of the swapped sequence.
+    pub fn tokens(&self) -> usize {
+        self.layers.first().map(|(_, l)| *l).unwrap_or(0)
+    }
+}
+
+/// Per-rank KV cache shard: per layer, appended (K, V) rows for the
+/// tokens this shard covers. Storage is either the legacy contiguous
+/// allocation or — the serving path's layout — a **page-table view** over
+/// a rank-shared [`KvPagePool`] on the Iris symmetric heap
+/// ([`KvShard::paged`]), where fixed-size pages of
+/// [`TransformerConfig::kv_block`] tokens are allocated on demand as the
+/// sequence grows and returned to the free list when the shard drops.
+/// Either way every read materializes the same contiguous
+/// `[heads * len, dim]` view and feeds the same kernels with pages walked
+/// in sequence order, so paged attention is **bitwise-equal** to the
+/// contiguous layout.
 ///
-/// Two geometries share this type: the **sequence shard** of replicated
-/// attention ([`KvShard::new`]: all heads, `max_seq / world` tokens) and
-/// the **head shard** of Megatron-style TP attention
-/// ([`KvShard::for_heads`]: this rank's heads only — possibly zero — over
-/// the full `max_seq` sequence).
+/// Three geometries share this type: the **sequence shard** of replicated
+/// attention ([`KvShard::new`]: all heads, `max_seq / world` tokens,
+/// contiguous), and the **head shard** of Megatron-style TP attention —
+/// this rank's heads only (possibly zero) over the full `max_seq`
+/// sequence — contiguous ([`KvShard::for_heads`]) or paged
+/// ([`KvShard::paged`]).
 pub struct KvShard {
     heads: usize,
     head_dim: usize,
     kv_block: usize,
     cap: usize,
-    /// per layer: (k, v, len)
-    layers: Vec<(Tensor, Tensor, usize)>,
+    store: KvStore,
 }
 
 impl KvShard {
     /// Sequence-sharded cache: all heads, capacity `max_seq / world`
-    /// (rounded up).
+    /// (rounded up), contiguous storage.
     pub fn new(cfg: &TransformerConfig) -> KvShard {
         Self::with_geometry(cfg, cfg.n_heads, cfg.shard_capacity())
     }
 
     /// Head-sharded cache: `heads` heads (this rank's
     /// [`TransformerConfig::head_partition`] slice; zero is allowed) over
-    /// the full sequence.
+    /// the full sequence, contiguous storage.
     pub fn for_heads(cfg: &TransformerConfig, heads: usize) -> KvShard {
         Self::with_geometry(cfg, heads, cfg.max_seq)
+    }
+
+    /// Head-sharded cache backed by `pool`'s heap pages: no storage is
+    /// reserved up front — pages are allocated one `kv_block` of tokens
+    /// at a time as the sequence grows, and freed back to the pool when
+    /// the shard is dropped (or moved to the swap tier by
+    /// [`KvShard::swap_out`]).
+    pub fn paged(cfg: &TransformerConfig, heads: usize, pool: &Rc<RefCell<KvPagePool>>) -> KvShard {
+        KvShard {
+            heads,
+            head_dim: cfg.head_dim,
+            kv_block: cfg.kv_block,
+            cap: cfg.max_seq,
+            store: KvStore::Paged {
+                pool: Rc::clone(pool),
+                layers: (0..cfg.n_layers).map(|_| (Vec::new(), 0)).collect(),
+            },
+        }
     }
 
     fn with_geometry(cfg: &TransformerConfig, heads: usize, cap: usize) -> KvShard {
@@ -742,7 +858,7 @@ impl KvShard {
                 )
             })
             .collect();
-        KvShard { heads, head_dim: cfg.head_dim, kv_block: cfg.kv_block, cap, layers }
+        KvShard { heads, head_dim: cfg.head_dim, kv_block: cfg.kv_block, cap, store: KvStore::Contig(layers) }
     }
 
     /// Heads stored per token in this shard.
@@ -751,53 +867,133 @@ impl KvShard {
     }
 
     pub fn len(&self, layer: usize) -> usize {
-        self.layers[layer].2
+        match &self.store {
+            KvStore::Contig(layers) => layers[layer].2,
+            KvStore::Paged { layers, .. } => layers[layer].1,
+        }
     }
 
     pub fn is_empty(&self, layer: usize) -> bool {
         self.len(layer) == 0
     }
 
-    /// Append one token's K/V rows ([heads, dim] each) for `layer`.
-    pub fn append(&mut self, layer: usize, k_new: &Tensor, v_new: &Tensor) {
-        let (cap, nh, hd) = (self.cap, self.heads, self.head_dim);
-        let (k, v, len) = &mut self.layers[layer];
-        assert!(*len < cap, "KV shard overflow (cap {cap})");
-        for h in 0..nh {
-            for j in 0..hd {
-                k.set2(h * cap + *len, j, k_new.at2(h, j));
-                v.set2(h * cap + *len, j, v_new.at2(h, j));
+    /// Pages this shard currently holds in the main pool (0 for
+    /// contiguous shards).
+    pub fn pages_in_use(&self) -> usize {
+        match &self.store {
+            KvStore::Contig(_) => 0,
+            KvStore::Paged { layers, .. } => layers.iter().map(|(t, _)| t.len()).sum(),
+        }
+    }
+
+    /// Whether this shard is a page-table view over a [`KvPagePool`].
+    pub fn is_paged(&self) -> bool {
+        matches!(self.store, KvStore::Paged { .. })
+    }
+
+    /// Append one token's K/V rows ([heads, dim] each) for `layer`. On a
+    /// paged shard a `kv_block`-boundary append allocates the next page
+    /// from the pool ([`IrisError::OutOfPages`] when the free list is
+    /// empty — the admission policy budgets to prevent this) and every
+    /// row write is a fallible heap store.
+    pub fn append(&mut self, layer: usize, k_new: &Tensor, v_new: &Tensor) -> Result<(), IrisError> {
+        let (cap, nh, hd, kb) = (self.cap, self.heads, self.head_dim, self.kv_block);
+        match &mut self.store {
+            KvStore::Contig(layers) => {
+                let (k, v, len) = &mut layers[layer];
+                if *len >= cap {
+                    return Err(IrisError::InvalidLayout(format!("KV shard overflow (cap {cap})")));
+                }
+                for h in 0..nh {
+                    for j in 0..hd {
+                        k.set2(h * cap + *len, j, k_new.at2(h, j));
+                        v.set2(h * cap + *len, j, v_new.at2(h, j));
+                    }
+                }
+                *len += 1;
+                Ok(())
+            }
+            KvStore::Paged { pool, layers } => {
+                let (table, len) = &mut layers[layer];
+                if *len >= cap {
+                    return Err(IrisError::InvalidLayout(format!("KV shard overflow (cap {cap})")));
+                }
+                let mut pool = pool.borrow_mut();
+                if *len % kb == 0 {
+                    table.push(pool.alloc()?);
+                }
+                let (page, slot) = (table[*len / kb], *len % kb);
+                let mut row = vec![0.0f32; hd];
+                for h in 0..nh {
+                    for (j, r) in row.iter_mut().enumerate() {
+                        *r = k_new.at2(h, j);
+                    }
+                    pool.write_row(page, KvHalf::K, h, slot, &row)?;
+                    for (j, r) in row.iter_mut().enumerate() {
+                        *r = v_new.at2(h, j);
+                    }
+                    pool.write_row(page, KvHalf::V, h, slot, &row)?;
+                }
+                *len += 1;
+                Ok(())
             }
         }
-        *len += 1;
     }
 
     /// Contiguous view [heads * len, dim] of the valid K (and V) prefix.
-    pub fn valid_kv(&self, layer: usize) -> (Tensor, Tensor, usize) {
-        let (cap, nh, hd) = (self.cap, self.heads, self.head_dim);
-        let (k, v, len) = &self.layers[layer];
-        let mut ck = Tensor::zeros(&[nh * len, hd]);
-        let mut cv = Tensor::zeros(&[nh * len, hd]);
-        for h in 0..nh {
-            for r in 0..*len {
-                for j in 0..hd {
-                    ck.set2(h * len + r, j, k.at2(h * cap + r, j));
-                    cv.set2(h * len + r, j, v.at2(h * cap + r, j));
+    /// For a paged shard the pages are walked in sequence order, so the
+    /// materialized view — and everything computed from it — is bitwise
+    /// identical to the contiguous layout's.
+    pub fn valid_kv(&self, layer: usize) -> Result<(Tensor, Tensor, usize), IrisError> {
+        let (cap, nh, hd, kb) = (self.cap, self.heads, self.head_dim, self.kv_block);
+        match &self.store {
+            KvStore::Contig(layers) => {
+                let (k, v, len) = &layers[layer];
+                let mut ck = Tensor::zeros(&[nh * len, hd]);
+                let mut cv = Tensor::zeros(&[nh * len, hd]);
+                for h in 0..nh {
+                    for r in 0..*len {
+                        for j in 0..hd {
+                            ck.set2(h * len + r, j, k.at2(h * cap + r, j));
+                            cv.set2(h * len + r, j, v.at2(h * cap + r, j));
+                        }
+                    }
                 }
+                Ok((ck, cv, *len))
+            }
+            KvStore::Paged { pool, layers } => {
+                let (table, len) = &layers[layer];
+                let pool = pool.borrow();
+                let mut ck = Tensor::zeros(&[nh * len, hd]);
+                let mut cv = Tensor::zeros(&[nh * len, hd]);
+                let mut row = vec![0.0f32; hd];
+                for h in 0..nh {
+                    for r in 0..*len {
+                        let (page, slot) = (table[r / kb], r % kb);
+                        pool.read_row(page, KvHalf::K, h, slot, &mut row)?;
+                        for (j, &x) in row.iter().enumerate() {
+                            ck.set2(h * len + r, j, x);
+                        }
+                        pool.read_row(page, KvHalf::V, h, slot, &mut row)?;
+                        for (j, &x) in row.iter().enumerate() {
+                            cv.set2(h * len + r, j, x);
+                        }
+                    }
+                }
+                Ok((ck, cv, *len))
             }
         }
-        (ck, cv, *len)
     }
 
-    /// Local partial attention over this shard (no tokens yet → None).
-    /// `q` must be `[self.heads(), head_dim]`; a zero-head shard yields an
-    /// empty `[0, head_dim]` partial.
-    pub fn partial(&self, layer: usize, q: &Tensor) -> Option<PartialState> {
-        let (k, v, len) = self.valid_kv(layer);
+    /// Local partial attention over this shard (no tokens yet →
+    /// `Ok(None)`). `q` must be `[self.heads(), head_dim]`; a zero-head
+    /// shard yields an empty `[0, head_dim]` partial.
+    pub fn partial(&self, layer: usize, q: &Tensor) -> Result<Option<PartialState>, IrisError> {
+        let (k, v, len) = self.valid_kv(layer)?;
         if len == 0 {
-            return None;
+            return Ok(None);
         }
-        Some(flash_decode_partial(q, &k, &v, self.heads, len, self.kv_block))
+        Ok(Some(flash_decode_partial(q, &k, &v, self.heads, len, self.kv_block)))
     }
 
     /// Causal attention for the `m` most recently appended positions of
@@ -812,22 +1008,41 @@ impl KvShard {
     /// path would have seen), using the same blocked online-softmax math
     /// through the *strided* kernel
     /// ([`flash_decode_partial_strided`]), which reads each causal
-    /// prefix straight out of the cache storage — no per-position prefix
-    /// copies — and is bitwise-equal to `m` sequential
-    /// [`KvShard::partial`] + combine steps. Returns the normalized
-    /// attention outputs `[m * heads, dim]`, position-major.
-    pub fn prefill_attention(&self, layer: usize, q_rows: &Tensor, m: usize) -> Tensor {
-        let (nh, hd, cap) = (self.heads, self.head_dim, self.cap);
+    /// prefix straight out of the cache view — the contiguous storage at
+    /// stride `cap`, or the paged shard's sequence-order materialization
+    /// at stride `len`; the stride only addresses rows, so both are
+    /// bitwise-equal to `m` sequential [`KvShard::partial`] + combine
+    /// steps. Returns the normalized attention outputs `[m * heads, dim]`,
+    /// position-major.
+    pub fn prefill_attention(
+        &self,
+        layer: usize,
+        q_rows: &Tensor,
+        m: usize,
+    ) -> Result<Tensor, IrisError> {
+        let (nh, hd) = (self.heads, self.head_dim);
         assert_eq!(q_rows.dims(), &[m * nh, hd], "prefill query layout");
         let len = self.len(layer);
         assert!(m >= 1 && m <= len, "prefill chunk of {m} rows in a cache of {len}");
         let base = len - m;
-        let (k, v, _) = &self.layers[layer];
+        // contiguous shards attend straight out of storage (stride cap);
+        // paged shards attend out of the sequence-order materialization
+        // (stride len) — same values, same per-head operation order
+        let (kc, vc, stride) = match &self.store {
+            KvStore::Contig(layers) => {
+                let (k, v, _) = &layers[layer];
+                (k.clone(), v.clone(), self.cap)
+            }
+            KvStore::Paged { .. } => {
+                let (k, v, len) = self.valid_kv(layer)?;
+                (k, v, len)
+            }
+        };
         let mut out = Tensor::zeros(&[m * nh, hd]);
         for i in 0..m {
             let q = q_rows.rows(i * nh, (i + 1) * nh);
             let p =
-                flash_decode_partial_strided(&q, k, v, nh, base + i + 1, cap, self.kv_block);
+                flash_decode_partial_strided(&q, &kc, &vc, nh, base + i + 1, stride, self.kv_block);
             let mut comb = OnlineCombiner::new(nh, hd);
             comb.add(&p);
             let attn = comb.finish();
@@ -837,7 +1052,99 @@ impl KvShard {
                 }
             }
         }
-        out
+        Ok(out)
+    }
+
+    /// Preempt this (paged) shard: copy every page to the swap tier in
+    /// sequence order, free the main-pool pages, and return the swap
+    /// page tables. The shard is empty afterwards; the caller keeps the
+    /// [`SwappedKv`] and rebuilds via [`KvShard::swap_in`] once page
+    /// pressure clears. Contiguous shards cannot be swapped (typed
+    /// [`IrisError::InvalidLayout`]).
+    pub fn swap_out(&mut self, swap: &Rc<RefCell<KvPagePool>>) -> Result<SwappedKv, IrisError> {
+        let KvStore::Paged { pool, layers } = &mut self.store else {
+            return Err(IrisError::InvalidLayout(
+                "swap-out needs a paged KV shard (contiguous shards are not pool-backed)".into(),
+            ));
+        };
+        let pool = Rc::clone(pool);
+        let mut out = Vec::with_capacity(layers.len());
+        {
+            let pool = pool.borrow();
+            let mut swap_pool = swap.borrow_mut();
+            for (table, len) in layers.iter() {
+                let mut swapped = Vec::with_capacity(table.len());
+                for &page in table.iter() {
+                    let dst = swap_pool.alloc()?;
+                    pool.copy_page_to(page, &swap_pool, dst)?;
+                    swapped.push(dst);
+                }
+                out.push((swapped, *len));
+            }
+        }
+        // free only after every copy succeeded, so a failed swap-out
+        // never leaves half the sequence unreachable
+        let mut pool = pool.borrow_mut();
+        for (table, len) in layers.iter_mut() {
+            for page in table.drain(..) {
+                pool.free(page);
+            }
+            *len = 0;
+        }
+        Ok(SwappedKv { layers: out })
+    }
+
+    /// Resume a preempted sequence: allocate fresh main-pool pages (the
+    /// ids may differ — the data and its order are what's restored),
+    /// copy the swap pages back in sequence order, and free the swap
+    /// tier. The caller must budget `saved.pages()` against the main
+    /// pool's free list first; like all pool operations this is
+    /// deterministic across ranks.
+    pub fn swap_in(
+        cfg: &TransformerConfig,
+        heads: usize,
+        pool: &Rc<RefCell<KvPagePool>>,
+        swap: &Rc<RefCell<KvPagePool>>,
+        saved: SwappedKv,
+    ) -> Result<KvShard, IrisError> {
+        let mut layers = Vec::with_capacity(saved.layers.len());
+        {
+            let mut main = pool.borrow_mut();
+            let mut swap_pool = swap.borrow_mut();
+            for (swapped, len) in saved.layers {
+                let mut table = Vec::with_capacity(swapped.len());
+                for src in swapped {
+                    let dst = main.alloc()?;
+                    swap_pool.copy_page_to(src, &main, dst)?;
+                    swap_pool.free(src);
+                    table.push(dst);
+                }
+                layers.push((table, len));
+            }
+        }
+        Ok(KvShard {
+            heads,
+            head_dim: cfg.head_dim,
+            kv_block: cfg.kv_block,
+            cap: cfg.max_seq,
+            store: KvStore::Paged { pool: Rc::clone(pool), layers },
+        })
+    }
+}
+
+impl Drop for KvShard {
+    /// A paged shard returns its pages to the free list when it goes out
+    /// of scope (a retired sequence's pages are available to the very
+    /// next admission decision).
+    fn drop(&mut self) {
+        if let KvStore::Paged { pool, layers } = &mut self.store {
+            let mut pool = pool.borrow_mut();
+            for (table, _) in layers.iter_mut() {
+                for page in table.drain(..) {
+                    pool.free(page);
+                }
+            }
+        }
     }
 }
 
@@ -868,8 +1175,12 @@ impl<C: LocalCompute> ReferenceDecoder<C> {
         let mut h = h.clone();
         for layer in 0..self.cfg.n_layers {
             let (q, k_new, v_new) = self.compute.qkv(layer, &h);
-            self.shard.append(layer, &k_new, &v_new);
-            let p = self.shard.partial(layer, &q).expect("non-empty after append");
+            self.shard.append(layer, &k_new, &v_new).expect("reference cache within capacity");
+            let p = self
+                .shard
+                .partial(layer, &q)
+                .expect("contiguous reads are infallible")
+                .expect("non-empty after append");
             let mut comb = OnlineCombiner::new(self.cfg.n_heads, self.cfg.head_dim);
             comb.add(&p);
             let attn = comb.finish();
@@ -933,6 +1244,8 @@ pub fn prompt_embeddings(cfg: &TransformerConfig, request_id: u64, p0: usize, m:
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
 
     #[test]
@@ -960,6 +1273,20 @@ mod tests {
         bad.decode_batch = 0;
         let err = bad.validate().unwrap_err();
         assert!(err.contains("decode_batch"), "{err}");
+        // the page pool must hold at least one max-length sequence, or
+        // preemption could never make an admissible request finishable
+        let mut bad = TransformerConfig::tiny(2);
+        bad.kv_pages = bad.pages_per_max_seq() - 1;
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("kv_pages"), "{err}");
+    }
+
+    #[test]
+    fn page_accounting_helpers() {
+        let cfg = TransformerConfig::tiny(2); // max_seq 64, kv_block 4, 2 layers
+        assert_eq!(cfg.pages_per_max_seq(), (64usize.div_ceil(4)) * 2);
+        assert_eq!(cfg.kv_page_elems(3), 2 * 3 * cfg.kv_block * cfg.head_dim);
+        assert_eq!(cfg.kv_page_elems(0), 0, "empty head shards hold zero-size pages");
     }
 
     #[test]
@@ -1019,11 +1346,11 @@ mod tests {
         assert!(shard.is_empty(0));
         let k = Tensor::full(&[cfg.n_heads, cfg.head_dim], 1.5);
         let v = Tensor::full(&[cfg.n_heads, cfg.head_dim], 2.5);
-        shard.append(0, &k, &v);
-        shard.append(0, &k, &v);
+        shard.append(0, &k, &v).unwrap();
+        shard.append(0, &k, &v).unwrap();
         assert_eq!(shard.len(0), 2);
         assert_eq!(shard.len(1), 0, "layers independent");
-        let (ck, cv, len) = shard.valid_kv(0);
+        let (ck, cv, len) = shard.valid_kv(0).unwrap();
         assert_eq!(len, 2);
         assert_eq!(ck.dims(), &[cfg.n_heads * 2, cfg.head_dim]);
         assert!(ck.data().iter().all(|&x| x == 1.5));
@@ -1031,15 +1358,150 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "overflow")]
-    fn kv_shard_overflow_detected() {
+    fn kv_shard_overflow_is_typed() {
         let mut cfg = TransformerConfig::tiny(1);
         cfg.max_seq = 2;
         let mut shard = KvShard::new(&cfg);
         let k = Tensor::zeros(&[cfg.n_heads, cfg.head_dim]);
-        for _ in 0..3 {
-            shard.append(0, &k, &k);
+        shard.append(0, &k, &k).unwrap();
+        shard.append(0, &k, &k).unwrap();
+        match shard.append(0, &k, &k) {
+            Err(IrisError::InvalidLayout(msg)) => assert!(msg.contains("overflow"), "{msg}"),
+            other => panic!("expected typed overflow, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn paged_shard_matches_contiguous_bitwise() {
+        // the tentpole invariant, at the unit level: a paged shard fed
+        // the same appends materializes bit-identical views, partials,
+        // and prefill attention, and returns its pages on drop
+        let cfg = TransformerConfig::tiny(1);
+        let heads = cfg.n_heads;
+        let heap = Arc::new(
+            crate::iris::HeapBuilder::new(1)
+                .buffer("pages", cfg.kv_pages * cfg.kv_page_elems(heads))
+                .build(),
+        );
+        let pool = Rc::new(RefCell::new(
+            KvPagePool::new(heap, 0, "pages", heads, cfg.head_dim, cfg.kv_block, cfg.kv_pages)
+                .unwrap(),
+        ));
+        let mut contig = KvShard::for_heads(&cfg, heads);
+        {
+            let mut paged = KvShard::paged(&cfg, heads, &pool);
+            assert!(paged.is_paged() && !contig.is_paged());
+            let mut rng = Prng::new(99);
+            // 9 tokens with kv_block 4: two full pages + a partial third
+            for t in 0..9 {
+                let k = Tensor::rand(&[heads, cfg.head_dim], 1.0, &mut rng);
+                let v = Tensor::rand(&[heads, cfg.head_dim], 1.0, &mut rng);
+                contig.append(0, &k, &v).unwrap();
+                paged.append(0, &k, &v).unwrap();
+                let q = Tensor::rand(&[heads, cfg.head_dim], 1.0, &mut rng);
+                let pc = contig.partial(0, &q).unwrap().unwrap();
+                let pp = paged.partial(0, &q).unwrap().unwrap();
+                assert_eq!(pc.o, pp.o, "token {t} partial must be bitwise equal");
+                assert_eq!((pc.m, pc.l), (pp.m, pp.l));
+            }
+            assert_eq!(contig.valid_kv(0).unwrap(), paged.valid_kv(0).unwrap());
+            let m = 3;
+            let mut rng = Prng::new(7);
+            let q_rows = Tensor::rand(&[m * heads, cfg.head_dim], 1.0, &mut rng);
+            assert_eq!(
+                contig.prefill_attention(0, &q_rows, m).unwrap(),
+                paged.prefill_attention(0, &q_rows, m).unwrap(),
+                "chunked prefill attention must be bitwise equal"
+            );
+            assert_eq!(paged.pages_in_use(), 3, "9 tokens @ block 4 = 3 pages (layer 0 only)");
+        }
+        assert_eq!(pool.borrow().free_pages(), pool.borrow().n_pages(), "drop frees pages");
+    }
+
+    #[test]
+    fn paged_shard_swaps_out_and_back_in_losslessly() {
+        let cfg = TransformerConfig::tiny(1);
+        let heads = cfg.n_heads;
+        let elems = cfg.kv_pages * cfg.kv_page_elems(heads);
+        let heap = Arc::new(
+            crate::iris::HeapBuilder::new(1).buffer("main", elems).buffer("swap", elems).build(),
+        );
+        let pool = |buf: &str| {
+            Rc::new(RefCell::new(
+                KvPagePool::new(
+                    Arc::clone(&heap),
+                    0,
+                    buf,
+                    heads,
+                    cfg.head_dim,
+                    cfg.kv_block,
+                    cfg.kv_pages,
+                )
+                .unwrap(),
+            ))
+        };
+        let (main, swap) = (pool("main"), pool("swap"));
+        let mut shard = KvShard::paged(&cfg, heads, &main);
+        let mut rng = Prng::new(5);
+        let mut appended = Vec::new();
+        for layer in 0..cfg.n_layers {
+            for _ in 0..6 {
+                let k = Tensor::rand(&[heads, cfg.head_dim], 1.0, &mut rng);
+                let v = Tensor::rand(&[heads, cfg.head_dim], 1.0, &mut rng);
+                shard.append(layer, &k, &v).unwrap();
+                appended.push((layer, k, v));
+            }
+        }
+        let before: Vec<_> = (0..cfg.n_layers).map(|l| shard.valid_kv(l).unwrap()).collect();
+        let held = shard.pages_in_use();
+        let saved = shard.swap_out(&swap).unwrap();
+        assert_eq!(saved.pages(), held);
+        assert_eq!(saved.tokens(), 6);
+        assert_eq!(shard.pages_in_use(), 0, "swap-out empties the shard");
+        assert_eq!(main.borrow().free_pages(), main.borrow().n_pages());
+        assert_eq!(swap.borrow().pages_in_use(), held);
+        let restored = KvShard::swap_in(&cfg, heads, &main, &swap, saved).unwrap();
+        for (l, want) in before.iter().enumerate() {
+            assert_eq!(&restored.valid_kv(l).unwrap(), want, "layer {l} restored bitwise");
+        }
+        assert_eq!(swap.borrow().pages_in_use(), 0, "swap tier released");
+        // a contiguous shard cannot be swapped
+        let mut c = KvShard::for_heads(&cfg, heads);
+        match c.swap_out(&swap) {
+            Err(IrisError::InvalidLayout(msg)) => assert!(msg.contains("paged"), "{msg}"),
+            other => panic!("expected InvalidLayout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn paged_append_surfaces_pool_exhaustion() {
+        let mut cfg = TransformerConfig::tiny(1);
+        cfg.kv_pages = cfg.pages_per_max_seq(); // exactly one max-length sequence
+        cfg.validate().unwrap();
+        let heads = cfg.n_heads;
+        let heap = Arc::new(
+            crate::iris::HeapBuilder::new(1)
+                .buffer("pages", cfg.kv_pages * cfg.kv_page_elems(heads))
+                .build(),
+        );
+        let pool = Rc::new(RefCell::new(
+            KvPagePool::new(heap, 0, "pages", heads, cfg.head_dim, cfg.kv_block, cfg.kv_pages)
+                .unwrap(),
+        ));
+        let mut a = KvShard::paged(&cfg, heads, &pool);
+        let k = Tensor::zeros(&[heads, cfg.head_dim]);
+        for layer in 0..cfg.n_layers {
+            for _ in 0..cfg.max_seq {
+                a.append(layer, &k, &k).unwrap();
+            }
+        }
+        assert_eq!(pool.borrow().free_pages(), 0);
+        let mut b = KvShard::paged(&cfg, heads, &pool);
+        match b.append(0, &k, &k) {
+            Err(IrisError::OutOfPages { .. }) => {}
+            other => panic!("expected OutOfPages, got {other:?}"),
+        }
+        assert_eq!(b.len(0), 0, "failed append leaves the shard unchanged");
     }
 
     #[test]
@@ -1213,9 +1675,9 @@ mod tests {
         assert!(p.data().iter().all(|&x| x == 0.0));
         // and the head-sharded KV cache for zero heads stays functional
         let mut kv = KvShard::for_heads(&cfg, 0);
-        kv.append(0, &k, &v);
+        kv.append(0, &k, &v).unwrap();
         assert_eq!(kv.len(0), 1);
-        let partial = kv.partial(0, &q).expect("non-empty after append");
+        let partial = kv.partial(0, &q).unwrap().expect("non-empty after append");
         assert_eq!(partial.o.dims(), &[0, cfg.head_dim]);
     }
 
@@ -1297,8 +1759,8 @@ mod tests {
             // sequential oracle: one decode-style step per position
             for i in 0..m0 + m1 {
                 let (q, k, v) = nc.qkv(0, &rows.rows(i, i + 1));
-                sequential.append(0, &k, &v);
-                let p = sequential.partial(0, &q).expect("non-empty");
+                sequential.append(0, &k, &v).unwrap();
+                let p = sequential.partial(0, &q).unwrap().expect("non-empty");
                 let mut comb = OnlineCombiner::new(nh, cfg.head_dim);
                 comb.add(&p);
                 seq_outs.push(comb.finish());
@@ -1307,9 +1769,11 @@ mod tests {
             for (p0, m) in [(0usize, m0), (m0, m1)] {
                 let (q, k, v) = nc.qkv_rows(0, &rows.rows(p0, p0 + m));
                 for i in 0..m {
-                    batched.append(0, &k.rows(i * nh, (i + 1) * nh), &v.rows(i * nh, (i + 1) * nh));
+                    batched
+                        .append(0, &k.rows(i * nh, (i + 1) * nh), &v.rows(i * nh, (i + 1) * nh))
+                        .unwrap();
                 }
-                let attn = batched.prefill_attention(0, &q, m);
+                let attn = batched.prefill_attention(0, &q, m).unwrap();
                 for i in 0..m {
                     assert_eq!(
                         attn.rows(i * nh, (i + 1) * nh),
@@ -1320,7 +1784,11 @@ mod tests {
                 }
             }
             // and the caches themselves are identical afterwards
-            assert_eq!(batched.valid_kv(0), sequential.valid_kv(0), "rank {rank} cache");
+            assert_eq!(
+                batched.valid_kv(0).unwrap(),
+                sequential.valid_kv(0).unwrap(),
+                "rank {rank} cache"
+            );
         }
     }
 
@@ -1364,10 +1832,10 @@ mod tests {
         assert_eq!(kv.heads(), 1);
         let k = Tensor::full(&[1, cfg.head_dim], 0.5);
         for _ in 0..cfg.max_seq {
-            kv.append(0, &k, &k); // seq shard would overflow at max_seq/4
+            kv.append(0, &k, &k).unwrap(); // seq shard would overflow at max_seq/4
         }
         assert_eq!(kv.len(0), cfg.max_seq);
-        let (ck, _, len) = kv.valid_kv(0);
+        let (ck, _, len) = kv.valid_kv(0).unwrap();
         assert_eq!(len, cfg.max_seq);
         assert_eq!(ck.dims(), &[cfg.max_seq, cfg.head_dim]);
     }

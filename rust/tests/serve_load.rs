@@ -2,13 +2,25 @@
 //! worlds, determinism, and the figure-level claims the experiments
 //! depend on holding together end to end.
 
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Duration;
+
 use taxfree::config::presets;
 use taxfree::coordinator::FlashDecodeStrategy;
 use taxfree::experiments;
-use taxfree::iris::IrisError;
-use taxfree::serve::{serve, Request, RequestQueue};
+use taxfree::iris::{run_node, run_node_with_timeout, IrisError};
+use taxfree::serve::continuous::serve_continuous;
+use taxfree::serve::{
+    build_serve_heap, collect_node_outcomes, decode_batch_fused, make_kv_pools,
+    prefill_step_fused, serve, Request, RequestQueue,
+};
 use taxfree::workloads::flash_decode as fd_sim;
-use taxfree::workloads::transformer::{NativeCompute, TransformerConfig, TransformerWeights};
+use taxfree::workloads::kv_page::KvPagePool;
+use taxfree::workloads::serve_slo::ArrivalTrace;
+use taxfree::workloads::transformer::{
+    prompt_embeddings, KvShard, NativeCompute, TransformerConfig, TransformerWeights,
+};
 
 fn native_factory(
     cfg: &TransformerConfig,
@@ -159,6 +171,256 @@ fn slow_fabric_ablation_increases_fused_advantage_at_large_kv() {
         s_slow >= s_normal * 0.98,
         "slow fabric shrank the fused advantage: {s_slow:.3} vs {s_normal:.3}"
     );
+}
+
+#[test]
+fn continuous_serving_absorbs_poisson_load() {
+    // load generator: Poisson arrivals order and shape a request mix that
+    // the continuous scheduler must drain completely
+    let times = ArrivalTrace::Poisson { rate_rps: 16.0 }.arrivals(12, 11);
+    assert_eq!(times.len(), 12);
+    assert!(times.iter().all(|&t| t > 0.0));
+    assert!(times.windows(2).all(|w| w[1] >= w[0]), "arrivals must be nondecreasing");
+    let requests: Vec<Request> = times
+        .iter()
+        .enumerate()
+        .map(|(i, _)| Request { id: i, prompt_len: 1 + (i % 5), gen_len: 2 + (i % 4) })
+        .collect();
+    let expected: usize = requests.iter().map(|r| r.total_tokens()).sum();
+    let cfg = TransformerConfig::tiny(2);
+    let report = serve_continuous(&cfg, requests, 3, tp_factory(&cfg, 41)).expect("serve");
+    assert_eq!(report.results.len(), 12);
+    assert_eq!(report.total_tokens, expected);
+    assert!(report.total_steps > 0);
+    for (i, r) in report.results.iter().enumerate() {
+        assert_eq!(r.id, i);
+        assert!(r.finished_step >= r.first_token_step);
+    }
+}
+
+#[test]
+fn continuous_serving_absorbs_diurnal_burst_load() {
+    // load generator: burst-window arrivals carry long prompts (the
+    // prefill storm the admission policy must absorb), trough arrivals
+    // short chatty ones — the mix the diurnal trace is for
+    let trace =
+        ArrivalTrace::DiurnalBurst { base_rps: 10.0, burst_rps: 30.0, period_s: 0.4, duty: 0.25 };
+    let times = trace.arrivals(10, 13);
+    let requests: Vec<Request> = times
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| {
+            if trace.rate_at(t) > 10.0 {
+                Request { id: i, prompt_len: 9 + (i % 3), gen_len: 2 }
+            } else {
+                Request { id: i, prompt_len: 1 + (i % 3), gen_len: 3 + (i % 3) }
+            }
+        })
+        .collect();
+    let longs = requests.iter().filter(|r| r.prompt_len > 8).count();
+    assert!(
+        longs > 0 && longs < requests.len(),
+        "the trace must sample both the burst and the trough, got {longs}/10 long"
+    );
+    let expected: usize = requests.iter().map(|r| r.total_tokens()).sum();
+    let cfg = TransformerConfig::tiny(2);
+    let report = serve_continuous(&cfg, requests, 3, tp_factory(&cfg, 43)).expect("serve");
+    assert_eq!(report.results.len(), 10);
+    assert_eq!(report.total_tokens, expected);
+}
+
+#[test]
+fn paged_serving_is_bitwise_equal_to_contiguous() {
+    // the tentpole's correctness bar end to end: the same request stream
+    // served over paged KV and over contiguous per-sequence KV must
+    // produce IDENTICAL bits — across even, ragged, and empty-head-shard
+    // worlds (tiny(5) puts 4 heads on 5 ranks, tiny_ragged(5) 3 on 5)
+    for cfg in [
+        TransformerConfig::tiny(1),
+        TransformerConfig::tiny(2),
+        TransformerConfig::tiny(4),
+        TransformerConfig::tiny(5),
+        TransformerConfig::tiny_ragged(2),
+        TransformerConfig::tiny_ragged(5),
+    ] {
+        let run = |paged: bool| {
+            let mut c = cfg.clone();
+            c.kv_paged = paged;
+            let mut q = RequestQueue::new();
+            q.fill_synthetic(6, (1, 9), (1, 6), 37);
+            serve_continuous(&c, q.drain_batch(6), 3, tp_factory(&c, 19)).expect("serve")
+        };
+        let paged = run(true);
+        let contig = run(false);
+        assert_eq!(paged.results.len(), contig.results.len());
+        for (p, c) in paged.results.iter().zip(&contig.results) {
+            assert_eq!(p.id, c.id);
+            assert_eq!(p.tokens, c.tokens);
+            assert_eq!(
+                p.final_hidden, c.final_hidden,
+                "world {}: paged KV must be bitwise-identical to contiguous (request {})",
+                cfg.world, p.id
+            );
+        }
+    }
+}
+
+#[test]
+fn paged_shard_caches_match_contiguous_after_fused_steps() {
+    // the same equivalence one level down: drive a paged and a contiguous
+    // head shard through the SAME fused prefill + batched decode steps on
+    // a live node and compare outputs AND the post-step caches
+    // (`valid_kv`) bitwise — for even, ragged, and empty head shards
+    for world in [1usize, 2, 4, 5] {
+        for cfg in [TransformerConfig::tiny(world), TransformerConfig::tiny_ragged(world)] {
+            let heap = build_serve_heap(&cfg);
+            let cfg2 = cfg.clone();
+            let outs = run_node(heap, move |ctx| -> Result<(), IrisError> {
+                let compute = NativeCompute::new_tp(
+                    cfg2.clone(),
+                    TransformerWeights::random(&cfg2, 23),
+                    ctx.rank(),
+                );
+                let (pool, _swap) = make_kv_pools(&cfg2, ctx.heap_arc(), ctx.rank())?;
+                let heads = cfg2.head_partition()[ctx.rank()].1;
+                let mut paged = KvShard::paged(&cfg2, heads, &pool);
+                let mut contig = KvShard::for_heads(&cfg2, heads);
+                let mut round = 0u64;
+                let m = cfg2.prefill_chunk;
+                let rows = prompt_embeddings(&cfg2, 9, 0, m);
+                let a = prefill_step_fused(&ctx, &cfg2, &compute, &mut paged, &rows, &mut round)?;
+                let b = prefill_step_fused(&ctx, &cfg2, &compute, &mut contig, &rows, &mut round)?;
+                assert_eq!(a, b, "prefill outputs must match bitwise");
+                let mut ha = a.rows(m - 1, m);
+                let mut hb = ha.clone();
+                for _ in 0..3 {
+                    ha = decode_batch_fused(&ctx, &cfg2, &compute, &mut [&mut paged], &ha, &mut round)?;
+                    hb = decode_batch_fused(&ctx, &cfg2, &compute, &mut [&mut contig], &hb, &mut round)?;
+                    assert_eq!(ha, hb, "decode outputs must match bitwise");
+                }
+                for layer in 0..cfg2.n_layers {
+                    assert_eq!(
+                        paged.valid_kv(layer)?,
+                        contig.valid_kv(layer)?,
+                        "post-step cache of layer {layer} must match bitwise"
+                    );
+                }
+                Ok(())
+            });
+            for (r, o) in outs.into_iter().enumerate() {
+                o.unwrap_or_else(|e| panic!("world {world} rank {r}: {e:?}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn page_exhaustion_preempts_then_resumes_deterministically() {
+    // tighten the pool to exactly one worst-case sequence (the validation
+    // floor): 10 requests of 16 tokens each want 80 pages against 32, so
+    // admission must stop at page exhaustion and the pressure guard must
+    // swap decode-phase sequences out — and every preempted sequence must
+    // still finish with bits identical to an unpressured run
+    let mut cfg = TransformerConfig::tiny(2);
+    cfg.kv_pages = cfg.pages_per_max_seq(); // 32 for tiny: max_seq 64 / kv_block 4 * 2 layers
+    cfg.validate().expect("floor config must be valid");
+    let requests: Vec<Request> =
+        (0..10).map(|id| Request { id, prompt_len: 8, gen_len: 8 }).collect();
+    let tight = serve_continuous(&cfg, requests.clone(), 8, tp_factory(&cfg, 61)).expect("serve");
+    assert_eq!(tight.results.len(), 10);
+    assert_eq!(tight.total_tokens, 10 * 16);
+    assert!(
+        tight.preemptions > 0,
+        "an 80-page demand against a 32-page pool must preempt (got {} preemptions, {} stalls)",
+        tight.preemptions,
+        tight.page_stall_steps
+    );
+    assert!(
+        tight.results.iter().any(|r| r.admitted_step > 0),
+        "admission must stall while the pool is exhausted and resume once pages free"
+    );
+
+    // resumed sequences decode from bitwise-restored pages: results equal
+    // an unpressured (wide-pool) run and a contiguous run exactly
+    let mut wide = cfg.clone();
+    wide.kv_pages = 96;
+    let unpressured = serve_continuous(&wide, requests.clone(), 8, tp_factory(&wide, 61)).expect("serve");
+    assert_eq!(unpressured.preemptions, 0, "96 pages fit the whole load");
+    let mut unpaged = cfg.clone();
+    unpaged.kv_paged = false;
+    let contig = serve_continuous(&unpaged, requests.clone(), 8, tp_factory(&unpaged, 61)).expect("serve");
+    for ((t, u), c) in tight.results.iter().zip(&unpressured.results).zip(&contig.results) {
+        assert_eq!((t.id, t.tokens), (u.id, u.tokens));
+        assert_eq!(t.final_hidden, u.final_hidden, "request {}: swap round-trip changed bits", t.id);
+        assert_eq!(t.final_hidden, c.final_hidden, "request {}: paged vs contiguous bits", t.id);
+    }
+
+    // and the whole pressured schedule is deterministic: same config, same
+    // requests => same steps, same preemptions, same bits
+    let again = serve_continuous(&cfg, requests, 8, tp_factory(&cfg, 61)).expect("serve");
+    assert_eq!(again.preemptions, tight.preemptions);
+    assert_eq!(again.page_stall_steps, tight.page_stall_steps);
+    assert_eq!(again.total_steps, tight.total_steps);
+    for (a, t) in again.results.iter().zip(&tight.results) {
+        assert_eq!(a.final_hidden, t.final_hidden);
+        assert_eq!(
+            (a.admitted_step, a.first_token_step, a.finished_step),
+            (t.admitted_step, t.first_token_step, t.finished_step)
+        );
+    }
+}
+
+#[test]
+fn rank_death_mid_swap_surfaces_root_cause_over_peer_timeouts() {
+    // failure injection: one rank's swap tier was built over a misspelled
+    // heap region, so it dies with a typed UnknownBuffer at the swap-out
+    // boundary while its peers run on into the next fused step and time
+    // out waiting on its flags. The node must report the ROOT CAUSE, not
+    // the secondary timeouts.
+    let cfg = TransformerConfig::tiny(2);
+    let heap = build_serve_heap(&cfg);
+    let cfg2 = cfg.clone();
+    let outs = run_node_with_timeout(heap, Duration::from_millis(200), move |ctx| -> Result<(), IrisError> {
+        let compute = NativeCompute::new_tp(
+            cfg2.clone(),
+            TransformerWeights::random(&cfg2, 31),
+            ctx.rank(),
+        );
+        let heads = cfg2.head_partition()[ctx.rank()].1;
+        let (pool, swap) = make_kv_pools(&cfg2, ctx.heap_arc(), ctx.rank())?;
+        let mut shard = KvShard::paged(&cfg2, heads, &pool);
+        let mut round = 0u64;
+        let m = cfg2.prefill_chunk;
+        let rows = prompt_embeddings(&cfg2, 3, 0, m);
+        let h = prefill_step_fused(&ctx, &cfg2, &compute, &mut shard, &rows, &mut round)?;
+        // the scheduler decides to preempt; rank 1's swap pool points at a
+        // region that does not exist, and dies right here
+        let swap = if ctx.rank() == 1 {
+            drop(swap);
+            Rc::new(RefCell::new(KvPagePool::new(
+                ctx.heap_arc(),
+                ctx.rank(),
+                "serve_kv_swap_typo",
+                heads,
+                cfg2.head_dim,
+                cfg2.kv_block,
+                cfg2.kv_pages,
+            )?))
+        } else {
+            swap
+        };
+        let saved = shard.swap_out(&swap)?;
+        let mut shard = KvShard::swap_in(&cfg2, heads, &pool, &swap, saved)?;
+        let h = h.rows(m - 1, m);
+        let _ = decode_batch_fused(&ctx, &cfg2, &compute, &mut [&mut shard], &h, &mut round)?;
+        Ok(())
+    });
+    match collect_node_outcomes(outs) {
+        Err(IrisError::UnknownBuffer(b)) => {
+            assert!(b.contains("serve_kv_swap_typo"), "{b}");
+        }
+        other => panic!("expected the dead rank's UnknownBuffer root cause, got {other:?}"),
+    }
 }
 
 #[test]

@@ -308,7 +308,9 @@ fn run_fused_prefill(cfg: &TransformerConfig, seed: u64, prompt_len: usize) -> V
             );
             p0 += m;
         }
-        let kv = (0..cfg2.n_layers).map(|l| shard.valid_kv(l)).collect::<Vec<_>>();
+        let kv = (0..cfg2.n_layers)
+            .map(|l| shard.valid_kv(l).expect("contiguous valid_kv"))
+            .collect::<Vec<_>>();
         (outs, kv)
     })
 }
@@ -340,13 +342,16 @@ fn bsp_prefill_reference(
                 let (q, k, v) = computes[r].qkv_rows(layer, &h);
                 let nh = shards[r].heads();
                 for i in 0..m {
-                    shards[r].append(
-                        layer,
-                        &k.rows(i * nh, (i + 1) * nh),
-                        &v.rows(i * nh, (i + 1) * nh),
-                    );
+                    shards[r]
+                        .append(
+                            layer,
+                            &k.rows(i * nh, (i + 1) * nh),
+                            &v.rows(i * nh, (i + 1) * nh),
+                        )
+                        .expect("reference cache within capacity");
                 }
-                let attn = shards[r].prefill_attention(layer, &q, m);
+                let attn =
+                    shards[r].prefill_attention(layer, &q, m).expect("reference attention");
                 partials.push(computes[r].attn_out_partial_rows(layer, &attn, m));
             }
             let mut proj = vec![0.0f32; m * cfg.d_model];
@@ -383,7 +388,7 @@ fn bsp_prefill_reference(
     }
     let kv = shards
         .iter()
-        .map(|s| (0..cfg.n_layers).map(|l| s.valid_kv(l)).collect())
+        .map(|s| (0..cfg.n_layers).map(|l| s.valid_kv(l).expect("valid_kv")).collect())
         .collect();
     (outs, kv)
 }
@@ -480,7 +485,7 @@ fn run_batched_decode(
         }
         let kv = shards
             .iter()
-            .map(|s| (0..cfg2.n_layers).map(|l| s.valid_kv(l)).collect())
+            .map(|s| (0..cfg2.n_layers).map(|l| s.valid_kv(l).expect("valid_kv")).collect())
             .collect();
         (hs, kv)
     })
@@ -522,7 +527,7 @@ fn run_sequential_decode(
         }
         let kv = shards
             .iter()
-            .map(|s| (0..cfg2.n_layers).map(|l| s.valid_kv(l)).collect())
+            .map(|s| (0..cfg2.n_layers).map(|l| s.valid_kv(l).expect("valid_kv")).collect())
             .collect();
         (Tensor::concat_rows(&hidden), kv)
     })
