@@ -21,7 +21,7 @@ fn bench_all_gather(world: usize, seg_elems: usize, rounds: u64) -> (f64, f64) {
         HeapBuilder::new(world)
             .buffer("ag", world * seg_elems)
             .flags("agf", world)
-            .build(),
+            .build().unwrap(),
     );
     let t0 = taxfree::clock::WallTimer::start();
     run_node(heap, move |ctx| {
@@ -91,7 +91,7 @@ fn main() {
     let samples: Vec<f64> = (0..20)
         .map(|_| {
             let timer = taxfree::clock::WallTimer::start();
-            let heap = Arc::new(HeapBuilder::new(8).buffer("x", 16).build());
+            let heap = Arc::new(HeapBuilder::new(8).buffer("x", 16).build().unwrap());
             run_node(heap, |ctx| ctx.rank());
             timer.elapsed_ns() as f64
         })

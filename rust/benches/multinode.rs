@@ -47,7 +47,7 @@ fn main() {
         HeapBuilder::new(topo.world())
             .buffer("ar", 2 * topo.world() * seg_max)
             .flags("arf", 2 * topo.world())
-            .build(),
+            .build().unwrap(),
     );
     let flat = run_node(flat_heap, move |ctx| {
         all_reduce_sum(&ctx, &send(ctx.rank()), "ar", "arf", 1)

@@ -1,0 +1,243 @@
+//! Sanitized-run drivers: every shipped protocol under the dynamic
+//! happens-before checker.
+//!
+//! Each driver builds the protocol's own symmetric heap, installs the
+//! event recorder ([`crate::iris::SymmetricHeap::enable_sanitizer`])
+//! *before* any rank engine starts, drives the real functional protocol
+//! through [`crate::iris::run_node`], and replays the log with
+//! [`crate::analysis::hb::analyze`]. A driver panics if the protocol run
+//! itself fails (these are the shipped, known-good protocols — a typed
+//! [`IrisError`] here is a bug, and wait timeouts additionally surface as
+//! [`crate::analysis::FindingClass::UnsatisfiedWait`] findings in the
+//! returned report).
+//!
+//! `tests/protocol_sanity.rs` holds every driver at zero findings across
+//! world sizes and 2-node topologies, and seeds deliberate protocol
+//! mutations (hand-written against the same heap API) to prove each
+//! diagnostic class fires. The `taxfree analyze` CLI subcommand runs the
+//! same drivers from the command line.
+
+use std::sync::Arc;
+
+use crate::analysis::{hb, Report};
+use crate::config::{AgGemmConfig, FlashDecodeConfig, GemmRsConfig};
+use crate::coordinator::ag_gemm::{self, AgGemmStrategy};
+use crate::coordinator::flash_decode::{self, FlashDecodeStrategy};
+use crate::coordinator::gemm_rs::{self, GemmRsStrategy};
+use crate::fabric::Topology;
+use crate::iris::{collect_rank_outcomes, run_node, HeapBuilder, IrisError, SymmetricHeap};
+use crate::serve::{self, ExchangeBufs};
+use crate::tensor::Tensor;
+use crate::util::{partition, Prng};
+use crate::workloads::transformer::{KvShard, TransformerConfig};
+
+/// Replay the recorder installed on `heap` (panics if none was installed
+/// — drivers always install one before running).
+fn report_of(heap: &SymmetricHeap) -> Report {
+    let rec = heap.recorder().expect("driver installed a recorder");
+    hb::analyze(heap.world(), &rec.events())
+}
+
+/// Run the functional AG+GEMM coordinator (all data movement real) under
+/// the checker: `rounds` iterations of `strategy` at `AgGemmConfig::tiny
+/// (world)` geometry.
+pub fn sanitize_ag_gemm(strategy: AgGemmStrategy, world: usize, rounds: u64) -> Report {
+    let cfg = AgGemmConfig::tiny(world);
+    let mut rng = Prng::new(0xA6 + world as u64);
+    let mut a = Tensor::rand(&[cfg.m, cfg.k], 1.0, &mut rng);
+    let mut b = Tensor::rand(&[cfg.k, cfg.n], 1.0, &mut rng);
+    a.quantize_f16();
+    b.quantize_f16();
+    // panel-major packing, the layout `run_rank` expects (the shard is a
+    // sequence of contiguous M x block_k column panels)
+    let k_shard = cfg.k / cfg.world;
+    let n_panels = k_shard / cfg.block_k;
+    let shards: Vec<Vec<f32>> = a
+        .shard_cols(cfg.world)
+        .iter()
+        .map(|s| {
+            let mut pm = Vec::with_capacity(cfg.m * k_shard);
+            for p in 0..n_panels {
+                let c0 = p * cfg.block_k;
+                pm.extend_from_slice(s.cols(c0, c0 + cfg.block_k).data());
+            }
+            pm
+        })
+        .collect();
+    let heap = ag_gemm::build_heap(&cfg);
+    heap.enable_sanitizer();
+    let outs = run_node(Arc::clone(&heap), move |ctx| {
+        ag_gemm::run_rank(&ctx, &cfg, strategy, &shards[ctx.rank()], &b, rounds)
+    });
+    collect_rank_outcomes(outs).expect("ag_gemm protocol run");
+    report_of(&heap)
+}
+
+/// Run the functional GEMM+ReduceScatter coordinator under the checker.
+pub fn sanitize_gemm_rs(strategy: GemmRsStrategy, world: usize, rounds: u64) -> Report {
+    let cfg = GemmRsConfig::tiny(world);
+    let mut rng = Prng::new(0x65 + world as u64);
+    let mut a = Tensor::rand(&[cfg.m, cfg.k], 1.0, &mut rng);
+    let mut b = Tensor::rand(&[cfg.k, cfg.n], 1.0, &mut rng);
+    a.quantize_f16();
+    b.quantize_f16();
+    let k_parts = cfg.k_partition();
+    let a_shards = a.shard_cols_ragged(&k_parts);
+    let b_shards = b.shard_rows_ragged(&k_parts);
+    let heap = gemm_rs::build_heap(&cfg);
+    heap.enable_sanitizer();
+    let outs = run_node(Arc::clone(&heap), move |ctx| {
+        let r = ctx.rank();
+        gemm_rs::run_rank(&ctx, &cfg, strategy, &a_shards[r], &b_shards[r], rounds)
+    });
+    collect_rank_outcomes(outs).expect("gemm_rs protocol run");
+    report_of(&heap)
+}
+
+/// Run the functional distributed Flash-Decode coordinator under the
+/// checker.
+pub fn sanitize_flash_decode(strategy: FlashDecodeStrategy, world: usize, rounds: u64) -> Report {
+    let cfg = FlashDecodeConfig::tiny(world);
+    let (q, k_shards, v_shards, _, _) = flash_decode::make_inputs(&cfg, 0xFD + world as u64);
+    let heap = flash_decode::build_heap(&cfg);
+    heap.enable_sanitizer();
+    let outs = run_node(Arc::clone(&heap), move |ctx| {
+        let r = ctx.rank();
+        flash_decode::run_rank(&ctx, &cfg, strategy, &q, &k_shards[r], &v_shards[r], rounds)
+    });
+    collect_rank_outcomes(outs).expect("flash_decode protocol run");
+    report_of(&heap)
+}
+
+/// Run the hierarchical two-tier all-reduce under the checker over an
+/// arbitrary topology (pass a 2-node [`Topology::hierarchical`] to cover
+/// the NIC-tier chain path). Rounds are barrier-separated, matching the
+/// measurement protocol every coordinator uses for repeated iterations.
+pub fn sanitize_hier_allreduce(topo: &Topology, n: usize, rounds: u64) -> Report {
+    let heap = crate::collectives::hier_allreduce_heap(topo, n);
+    heap.enable_sanitizer();
+    let outs = run_node(Arc::clone(&heap), move |ctx| -> Result<Vec<f32>, IrisError> {
+        let r = ctx.rank();
+        let send: Vec<f32> = (0..n).map(|i| ((r + 1) * (i + 3)) as f32 * 0.01).collect();
+        let mut out = Vec::new();
+        for round in 1..=rounds {
+            out = crate::collectives::all_reduce_hierarchical(&ctx, &send, round)?;
+            ctx.barrier();
+        }
+        Ok(out)
+    });
+    collect_rank_outcomes(outs).expect("hierarchical all-reduce protocol run");
+    report_of(&heap)
+}
+
+/// Run the serve-path fused all-reduce exchange under the checker:
+/// `rounds` back-to-back rounds of [`serve::fused_allreduce_exchange_rows`]
+/// over a minimal double-buffered exchange heap shaped like the serving
+/// heap's staging areas. No barrier between rounds — this deliberately
+/// exercises the parity-slot reuse protocol (round r+2 may only overwrite
+/// a slot once round r's consumers acquired it through the gather flags),
+/// the subtlest happens-before argument on the serve path.
+pub fn sanitize_serve_exchange(topo: &Topology, n: usize, rows: usize, rounds: u64) -> Report {
+    let world = topo.world();
+    let seg_max = n.div_ceil(world);
+    let bufs: &'static ExchangeBufs = &serve::ATTN_EXCHANGE;
+    let slot = rows * seg_max;
+    let heap = Arc::new(
+        HeapBuilder::new(world)
+            .topology(topo.clone())
+            .buffer(bufs.data, 2 * world * slot)
+            .flags(bufs.data_flags, world)
+            .buffer(bufs.gather, 2 * world * slot)
+            .flags(bufs.gather_flags, world)
+            .build()
+            .expect("exchange heap layout"),
+    );
+    heap.enable_sanitizer();
+    let parts = partition(n, world);
+    let outs = run_node(Arc::clone(&heap), move |ctx| -> Result<Vec<f32>, IrisError> {
+        let r = ctx.rank();
+        let contribution: Vec<f32> =
+            (0..rows * n).map(|i| ((r + 1) * (i + 1)) as f32 * 1e-3).collect();
+        let mut out = Vec::new();
+        for round in 1..=rounds {
+            out = serve::fused_allreduce_exchange_rows(
+                &ctx,
+                &parts,
+                &contribution,
+                rows,
+                rows,
+                round,
+                bufs,
+            )?;
+        }
+        Ok(out)
+    });
+    collect_rank_outcomes(outs).expect("fused exchange protocol run");
+    report_of(&heap)
+}
+
+/// Run the paged-KV swap-out/swap-in path under the checker on the real
+/// serving heap: every rank grows a paged KV shard past a page boundary,
+/// swaps it out to the swap region, swaps it back in, and appends again —
+/// all page traffic flows through the instrumented heap.
+pub fn sanitize_kv_swap(world: usize) -> Report {
+    let cfg = TransformerConfig::tiny(world);
+    let heap = serve::build_serve_heap(&cfg);
+    heap.enable_sanitizer();
+    let outs = run_node(Arc::clone(&heap), move |ctx| -> Result<usize, IrisError> {
+        let r = ctx.rank();
+        let heads = cfg.head_partition()[r].1;
+        let (pool, swap) = serve::make_kv_pools(&cfg, ctx.heap_arc(), r)?;
+        let mut shard = KvShard::paged(&cfg, heads, &pool);
+        let mut rng = Prng::new(0x5A + r as u64);
+        // cross a page boundary on every layer (kv_block + 2 tokens)
+        let tokens = cfg.kv_block + 2;
+        for _ in 0..tokens {
+            for layer in 0..cfg.n_layers {
+                let mut k = Tensor::rand(&[heads, cfg.head_dim], 1.0, &mut rng);
+                let mut v = Tensor::rand(&[heads, cfg.head_dim], 1.0, &mut rng);
+                k.quantize_f16();
+                v.quantize_f16();
+                shard.append(layer, &k, &v)?;
+            }
+        }
+        let saved = shard.swap_out(&swap)?;
+        let pages = saved.pages();
+        let mut shard = KvShard::swap_in(&cfg, heads, &pool, &swap, saved)?;
+        // the restored shard must still be appendable (pages re-linked)
+        for layer in 0..cfg.n_layers {
+            let k = Tensor::rand(&[heads, cfg.head_dim], 1.0, &mut rng);
+            let v = Tensor::rand(&[heads, cfg.head_dim], 1.0, &mut rng);
+            shard.append(layer, &k, &v)?;
+        }
+        ctx.barrier();
+        Ok(pages)
+    });
+    let pages = collect_rank_outcomes(outs).expect("paged-KV swap protocol run");
+    let cfg = TransformerConfig::tiny(world);
+    let expect_pages = cfg.n_layers * (cfg.kv_block + 2).div_ceil(cfg.kv_block);
+    for (r, p) in pages.iter().enumerate() {
+        assert_eq!(*p, expect_pages, "rank {r} swapped an unexpected page count");
+    }
+    report_of(&heap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // cheap smoke checks; the full matrix lives in tests/protocol_sanity.rs
+    #[test]
+    fn ag_gemm_push_clean_under_checker() {
+        let r = sanitize_ag_gemm(AgGemmStrategy::Push, 2, 1);
+        assert!(r.is_clean(), "{:?}", r.findings);
+        assert!(r.events > 0, "recorder saw nothing");
+    }
+
+    #[test]
+    fn kv_swap_clean_under_checker() {
+        let r = sanitize_kv_swap(2);
+        assert!(r.is_clean(), "{:?}", r.findings);
+        assert!(r.events > 0, "recorder saw nothing");
+    }
+}

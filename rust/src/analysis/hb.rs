@@ -1,0 +1,496 @@
+//! Vector-clock happens-before replay of a recorded protocol run.
+//!
+//! # The memory model being checked
+//!
+//! The iris heap stores data with `Relaxed` atomics and publishes it with
+//! `Release` flag increments / `Acquire` flag reads (see
+//! [`crate::iris::SymmetricHeap`]). A data access is therefore only
+//! *meaningful* — guaranteed to observe the intended value — when a
+//! release/acquire chain orders it after the store that produced the
+//! value. This replay reconstructs exactly those chains from the event
+//! log and flags every access the chains do not cover.
+//!
+//! # Happens-before rules
+//!
+//! Each rank carries a vector clock, advanced once per event. Edges:
+//!
+//! * **Program order**: events of one rank are ordered as logged.
+//! * **Flag release/acquire**: every `flag_add` on a flag cell appends
+//!   `(post-value, C)` to the cell's release list, where `C` is the join
+//!   of the adder's clock with all earlier adds on that cell —
+//!   cumulative, because a waiter whose threshold was reached by *several*
+//!   increments acquires from all of them. A satisfied `wait_flag_ge`
+//!   (or plain `flag` read) that observed value `v` joins the clock of
+//!   the largest post ≤ `v`. The recorder logs the wait with a re-read
+//!   under its own lock, so every contributing `flag_add` is guaranteed
+//!   to sit earlier in the log — the replay never misses an edge.
+//! * **Barriers**: arrivals of epoch `e` join into an epoch clock;
+//!   exits join the epoch clock back — everyone leaves ordered after
+//!   everything anyone did before arriving.
+//! * **`flags_reset`** starts a new *generation* of the array: release
+//!   lists restart (post-values restart from zero, so old edges must not
+//!   leak into new rounds).
+//!
+//! # Findings
+//!
+//! * a load not ordered after the last store of any touched element →
+//!   [`FindingClass::UnpublishedStore`] when the writer issued *no*
+//!   releasing `flag_add` between the store and the read, otherwise
+//!   [`FindingClass::RaceRead`];
+//! * a store not ordered after the previous store, or after every read
+//!   of the previous value → [`FindingClass::SlotReuseWaw`];
+//! * a wait timeout → [`FindingClass::UnsatisfiedWait`], reconstructing
+//!   which ranks signaled the cell how much this generation and which
+//!   never did.
+//!
+//! Findings are deduplicated per access event (one finding per class per
+//! logged range, summarizing the racy elements) and capped at
+//! [`MAX_FINDINGS`].
+
+use std::collections::HashMap;
+
+use crate::analysis::record::{AccessKind, Event};
+use crate::analysis::{Finding, FindingClass, Report};
+
+/// Hard cap on reported findings: a broken protocol races on every
+/// element of every round; past this point more copies add nothing.
+pub const MAX_FINDINGS: usize = 64;
+
+type Clock = Vec<u64>;
+
+fn join(into: &mut Clock, from: &Clock) {
+    for (a, b) in into.iter_mut().zip(from) {
+        if *b > *a {
+            *a = *b;
+        }
+    }
+}
+
+/// Did the event stamped (`rank`, `time`) happen-before the holder of
+/// `clock`? (Standard vector-clock test: the holder has seen at least
+/// `time` of `rank`'s history.)
+fn ordered(rank: usize, time: u64, clock: &Clock) -> bool {
+    clock[rank] >= time
+}
+
+struct WriteInfo {
+    rank: usize,
+    time: u64,
+    /// The writer's releasing-signal count at store time; if unchanged
+    /// when a racy read arrives, the store was never published at all.
+    rel: u64,
+}
+
+/// Latest read per reader rank (monotone per-rank times make the latest
+/// read the hardest to order after — checking it covers earlier ones).
+struct ReadInfo {
+    rank: usize,
+    time: u64,
+}
+
+#[derive(Default)]
+struct ElemState {
+    write: Option<WriteInfo>,
+    reads: Vec<ReadInfo>,
+}
+
+/// One generation of one flag cell.
+#[derive(Default)]
+struct CellGen {
+    /// `(post-value, cumulative joined clock)` per `flag_add`, in log
+    /// order; post-values are strictly increasing (atomic adds are
+    /// linearized by the recorder lock).
+    releases: Vec<(u64, Clock)>,
+    /// Per-adder-rank summed deltas (timeout reconstruction).
+    contrib: HashMap<usize, u64>,
+}
+
+/// Replay `events` (a [`crate::analysis::record::Recorder`] log from a
+/// `world`-rank run) and report every access the release/acquire and
+/// barrier edges fail to order, plus a reconstruction of every timed-out
+/// wait.
+pub fn analyze(world: usize, events: &[Event]) -> Report {
+    let mut clocks: Vec<Clock> = vec![vec![0; world]; world];
+    let mut rel_count: Vec<u64> = vec![0; world];
+    // (buffer, region rank) -> per-element access state
+    let mut buffers: HashMap<(String, usize), Vec<ElemState>> = HashMap::new();
+    // flags name -> current generation (bumped by flags_reset)
+    let mut generation: HashMap<String, usize> = HashMap::new();
+    // (flags, region rank, idx, generation) -> release list
+    let mut cells: HashMap<(String, usize, usize, usize), CellGen> = HashMap::new();
+    // barrier epoch -> join of all arrivals
+    let mut epochs: HashMap<u64, Clock> = HashMap::new();
+    let mut findings: Vec<Finding> = Vec::new();
+
+    for ev in events {
+        match ev {
+            Event::Access { rank, target, kind, buf, offset, len } => {
+                let (rank, target) = (*rank, *target);
+                clocks[rank][rank] += 1;
+                let states = buffers.entry((buf.clone(), target)).or_default();
+                if states.len() < offset + len {
+                    states.resize_with(offset + len, ElemState::default);
+                }
+                // per-class summary of racy elements across this range
+                let mut racy: HashMap<FindingClass, (usize, usize, usize, String)> =
+                    HashMap::new();
+                let mut note = |class: FindingClass, elem: usize, detail: String| {
+                    racy.entry(class)
+                        .and_modify(|(_, last, n, _)| {
+                            *last = elem;
+                            *n += 1;
+                        })
+                        .or_insert((elem, elem, 1, detail));
+                };
+                for i in *offset..offset + len {
+                    let st = &mut states[i];
+                    match kind {
+                        AccessKind::Load => {
+                            if let Some(w) = &st.write {
+                                if !ordered(w.rank, w.time, &clocks[rank]) {
+                                    let class = if rel_count[w.rank] == w.rel {
+                                        FindingClass::UnpublishedStore
+                                    } else {
+                                        FindingClass::RaceRead
+                                    };
+                                    note(class, i, format!("store by rank {}", w.rank));
+                                }
+                            }
+                            let now = clocks[rank][rank];
+                            match st.reads.iter_mut().find(|r| r.rank == rank) {
+                                Some(r) => r.time = now,
+                                None => st.reads.push(ReadInfo { rank, time: now }),
+                            }
+                        }
+                        AccessKind::Store => {
+                            if let Some(w) = &st.write {
+                                if !ordered(w.rank, w.time, &clocks[rank]) {
+                                    note(
+                                        FindingClass::SlotReuseWaw,
+                                        i,
+                                        format!("previous store by rank {}", w.rank),
+                                    );
+                                }
+                            }
+                            for r in &st.reads {
+                                if !ordered(r.rank, r.time, &clocks[rank]) {
+                                    note(
+                                        FindingClass::SlotReuseWaw,
+                                        i,
+                                        format!("unacquired read by rank {}", r.rank),
+                                    );
+                                    break;
+                                }
+                            }
+                            st.write = Some(WriteInfo {
+                                rank,
+                                time: clocks[rank][rank],
+                                rel: rel_count[rank],
+                            });
+                            st.reads.clear();
+                        }
+                    }
+                }
+                let verb = match kind {
+                    AccessKind::Load => "read",
+                    AccessKind::Store => "overwrote",
+                };
+                let mut classes: Vec<_> = racy.into_iter().collect();
+                classes.sort_by_key(|(c, _)| format!("{c}"));
+                for (class, (first, last, n, detail)) in classes {
+                    if findings.len() >= MAX_FINDINGS {
+                        break;
+                    }
+                    findings.push(Finding {
+                        class,
+                        message: format!(
+                            "rank {rank} {verb} {buf}[{first}..{}] on rank {target} \
+                             unordered with the {detail} ({n} racy elements)",
+                            last + 1
+                        ),
+                    });
+                }
+            }
+            Event::FlagAdd { rank, target, flags, idx, delta, post } => {
+                let rank = *rank;
+                clocks[rank][rank] += 1;
+                rel_count[rank] += 1;
+                let gen = *generation.get(flags).unwrap_or(&0);
+                let cell = cells.entry((flags.clone(), *target, *idx, gen)).or_default();
+                let mut cum = match cell.releases.last() {
+                    Some((_, c)) => c.clone(),
+                    None => vec![0; world],
+                };
+                join(&mut cum, &clocks[rank]);
+                cell.releases.push((*post, cum));
+                *cell.contrib.entry(rank).or_insert(0) += delta;
+            }
+            Event::WaitSat { rank, flags, idx, seen, .. }
+            | Event::FlagRead { rank, flags, idx, seen } => {
+                let rank = *rank;
+                clocks[rank][rank] += 1;
+                let gen = *generation.get(flags).unwrap_or(&0);
+                if let Some(cell) = cells.get(&(flags.clone(), rank, *idx, gen)) {
+                    // acquire from the largest post-value <= seen: the
+                    // cumulative clock already joins every earlier add
+                    let k = cell.releases.partition_point(|(p, _)| p <= seen);
+                    if k > 0 {
+                        let from = cell.releases[k - 1].1.clone();
+                        join(&mut clocks[rank], &from);
+                    }
+                }
+            }
+            Event::WaitTimeout { rank, flags, idx, target_value, seen } => {
+                let rank = *rank;
+                clocks[rank][rank] += 1;
+                let gen = *generation.get(flags).unwrap_or(&0);
+                let empty = CellGen::default();
+                let cell =
+                    cells.get(&(flags.clone(), rank, *idx, gen)).unwrap_or(&empty);
+                let mut signaled: Vec<_> =
+                    cell.contrib.iter().map(|(r, d)| (*r, *d)).collect();
+                signaled.sort_unstable();
+                let silent: Vec<String> = (0..world)
+                    .filter(|r| !cell.contrib.contains_key(r))
+                    .map(|r| r.to_string())
+                    .collect();
+                let got: Vec<String> = signaled
+                    .iter()
+                    .map(|(r, d)| format!("rank {r} signaled {d}"))
+                    .collect();
+                let got = if got.is_empty() { "nobody signaled".to_string() } else { got.join(", ") };
+                if findings.len() < MAX_FINDINGS {
+                    findings.push(Finding {
+                        class: FindingClass::UnsatisfiedWait,
+                        message: format!(
+                            "rank {rank} timed out waiting for {flags}[{idx}] >= \
+                             {target_value} (seen {seen}, short by {}); this \
+                             generation: {got}; ranks that never signaled it: [{}]",
+                            target_value - seen,
+                            silent.join(", ")
+                        ),
+                    });
+                }
+            }
+            Event::FlagsReset { flags } => {
+                // new generation: release lists restart with the counters
+                *generation.entry(flags.clone()).or_insert(0) += 1;
+            }
+            Event::BarrierArrive { rank, epoch } => {
+                let rank = *rank;
+                clocks[rank][rank] += 1;
+                let ep = epochs.entry(*epoch).or_insert_with(|| vec![0; world]);
+                let snapshot = clocks[rank].clone();
+                join(ep, &snapshot);
+            }
+            Event::BarrierExit { rank, epoch } => {
+                let rank = *rank;
+                clocks[rank][rank] += 1;
+                if let Some(ep) = epochs.get(epoch) {
+                    let from = ep.clone();
+                    join(&mut clocks[rank], &from);
+                }
+            }
+        }
+    }
+
+    Report { findings, events: events.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::record::AccessKind as K;
+
+    fn store(rank: usize, target: usize, buf: &str, offset: usize, len: usize) -> Event {
+        Event::Access { rank, target, kind: K::Store, buf: buf.into(), offset, len }
+    }
+
+    fn load(rank: usize, target: usize, buf: &str, offset: usize, len: usize) -> Event {
+        Event::Access { rank, target, kind: K::Load, buf: buf.into(), offset, len }
+    }
+
+    fn add(rank: usize, target: usize, flags: &str, idx: usize, post: u64) -> Event {
+        Event::FlagAdd { rank, target, flags: flags.into(), idx, delta: 1, post }
+    }
+
+    fn sat(rank: usize, flags: &str, idx: usize, target_value: u64, seen: u64) -> Event {
+        Event::WaitSat { rank, flags: flags.into(), idx, target_value, seen }
+    }
+
+    #[test]
+    fn published_handshake_is_clean() {
+        // rank 0 stores into rank 1's inbox, signals; rank 1 waits, reads
+        let log = vec![
+            store(0, 1, "inbox", 0, 4),
+            add(0, 1, "f", 0, 1),
+            sat(1, "f", 0, 1, 1),
+            load(1, 1, "inbox", 0, 4),
+        ];
+        let r = analyze(2, &log);
+        assert!(r.is_clean(), "{:?}", r.findings);
+        assert_eq!(r.events, 4);
+    }
+
+    #[test]
+    fn missing_signal_is_unpublished_store() {
+        let log = vec![store(0, 1, "inbox", 0, 4), load(1, 1, "inbox", 0, 4)];
+        let r = analyze(2, &log);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].class, FindingClass::UnpublishedStore);
+        assert!(r.findings[0].message.contains("inbox[0..4]"), "{}", r.findings[0]);
+    }
+
+    #[test]
+    fn unacquired_read_after_some_signal_is_race_read() {
+        // writer released *a* flag after the store, but the reader never
+        // acquired it — a chain exists, the reader just isn't on it
+        let log = vec![
+            store(0, 1, "inbox", 0, 2),
+            add(0, 1, "f", 0, 1),
+            load(1, 1, "inbox", 0, 2),
+        ];
+        let r = analyze(2, &log);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].class, FindingClass::RaceRead);
+    }
+
+    #[test]
+    fn cumulative_acquire_joins_all_contributors() {
+        // both writers store then signal the same cell; the consumer's
+        // threshold-2 wait must acquire *both* stores
+        let log = vec![
+            store(0, 2, "inbox", 0, 1),
+            add(0, 2, "f", 0, 1),
+            store(1, 2, "inbox", 1, 1),
+            add(1, 2, "f", 0, 2),
+            sat(2, "f", 0, 2, 2),
+            load(2, 2, "inbox", 0, 2),
+        ];
+        assert!(analyze(3, &log).is_clean());
+    }
+
+    #[test]
+    fn partial_acquire_still_races_the_unacquired_half() {
+        // consumer waited for 1 of 2 signals then read both slots
+        let log = vec![
+            store(0, 2, "inbox", 0, 1),
+            add(0, 2, "f", 0, 1),
+            sat(2, "f", 0, 1, 1),
+            store(1, 2, "inbox", 1, 1),
+            add(1, 2, "f", 0, 2),
+            load(2, 2, "inbox", 0, 2),
+        ];
+        let r = analyze(3, &log);
+        assert_eq!(r.count(FindingClass::RaceRead), 1);
+    }
+
+    #[test]
+    fn unordered_overwrite_is_slot_reuse_waw() {
+        let log = vec![store(0, 1, "slot", 0, 4), store(2, 1, "slot", 0, 4)];
+        let r = analyze(3, &log);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].class, FindingClass::SlotReuseWaw);
+    }
+
+    #[test]
+    fn overwrite_under_unacquired_reader_is_slot_reuse_waw() {
+        // rank 1 published its read position nowhere; rank 0's second
+        // store reuses the slot while the read is unordered
+        let log = vec![
+            store(0, 1, "slot", 0, 1),
+            add(0, 1, "f", 0, 1),
+            sat(1, "f", 0, 1, 1),
+            load(1, 1, "slot", 0, 1),
+            store(0, 1, "slot", 0, 1),
+        ];
+        let r = analyze(2, &log);
+        assert_eq!(r.count(FindingClass::SlotReuseWaw), 1);
+    }
+
+    #[test]
+    fn acked_slot_reuse_is_clean() {
+        // same as above but the consumer acks and the producer waits
+        let log = vec![
+            store(0, 1, "slot", 0, 1),
+            add(0, 1, "f", 0, 1),
+            sat(1, "f", 0, 1, 1),
+            load(1, 1, "slot", 0, 1),
+            add(1, 0, "ack", 0, 1),
+            sat(0, "ack", 0, 1, 1),
+            store(0, 1, "slot", 0, 1),
+        ];
+        assert!(analyze(2, &log).is_clean());
+    }
+
+    #[test]
+    fn barrier_orders_everything() {
+        let log = vec![
+            store(0, 0, "shard", 0, 4),
+            Event::BarrierArrive { rank: 0, epoch: 0 },
+            Event::BarrierArrive { rank: 1, epoch: 0 },
+            Event::BarrierExit { rank: 0, epoch: 0 },
+            Event::BarrierExit { rank: 1, epoch: 0 },
+            load(1, 0, "shard", 0, 4),
+        ];
+        assert!(analyze(2, &log).is_clean());
+    }
+
+    #[test]
+    fn flags_reset_starts_a_new_generation() {
+        // an acquire after the reset must NOT pick up the old release
+        // edge: post-values restarted, so seen=1 maps to generation 1
+        let log = vec![
+            store(0, 1, "inbox", 0, 1),
+            add(0, 1, "f", 0, 1),
+            Event::FlagsReset { flags: "f".into() },
+            store(0, 1, "inbox", 1, 1),
+            add(0, 1, "f", 0, 1),
+            sat(1, "f", 0, 1, 1),
+            load(1, 1, "inbox", 0, 1),
+        ];
+        let r = analyze(2, &log);
+        // slot 0's store was published in generation 0 only; the reader
+        // acquired only the generation-1 release, which does cover the
+        // second store but (through cumulative program order of rank 0)
+        // also the first — rank 0 performed both, so program order
+        // publishes slot 0 transitively. Clean.
+        assert!(r.is_clean(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn timeout_reconstruction_names_the_hole() {
+        let log = vec![
+            add(0, 2, "f", 0, 1),
+            Event::WaitTimeout {
+                rank: 2,
+                flags: "f".into(),
+                idx: 0,
+                target_value: 2,
+                seen: 1,
+            },
+        ];
+        let r = analyze(3, &log);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].class, FindingClass::UnsatisfiedWait);
+        let msg = &r.findings[0].message;
+        assert!(msg.contains("f[0] >= 2"), "{msg}");
+        assert!(msg.contains("short by 1"), "{msg}");
+        assert!(msg.contains("rank 0 signaled 1"), "{msg}");
+        assert!(msg.contains("never signaled it: [1, 2]"), "{msg}");
+    }
+
+    #[test]
+    fn findings_are_deduped_per_range_and_capped() {
+        let mut log = Vec::new();
+        for _ in 0..100 {
+            log.push(store(0, 1, "slot", 0, 64));
+            log.push(store(2, 1, "slot", 0, 64));
+        }
+        let r = analyze(3, &log);
+        // one finding per racy store event (not per element), capped
+        assert!(r.findings.len() <= MAX_FINDINGS);
+        assert!(r.findings.iter().all(|f| f.class == FindingClass::SlotReuseWaw));
+        assert!(r.findings[0].message.contains("(64 racy elements)"));
+    }
+}

@@ -1,0 +1,406 @@
+//! Static lint over DES protocol programs.
+//!
+//! A DES twin's program ([`crate::sim::Sim`]) is a data structure before
+//! it is a schedule: every push, signal, wait, and compute is an
+//! [`Op`] with explicit dependency edges. This pass walks that op list —
+//! no schedule ever runs — and rejects the two protocol holes a schedule
+//! cannot repair:
+//!
+//! * [`LintClass::UnsatisfiableWait`] — a [`OpKind::Wait`] whose
+//!   threshold exceeds the *total* number of [`OpKind::Signal`]s any
+//!   schedule can ever deliver to its flag cell. At run time this is a
+//!   deadlock (the engine fails the run; the functional twin times out);
+//!   statically it is a counting argument.
+//! * [`LintClass::OrphanPush`] — a [`OpKind::Push`] whose arrival no
+//!   task on the destination rank ever (transitively) depends on, or a
+//!   [`OpKind::MultiPush`] no task on any other rank consumes. Dead
+//!   traffic at best; at worst the consumer exists but synchronizes on
+//!   nothing, which is the race the dynamic checker
+//!   ([`crate::analysis::hb`]) flags from the other side. Reachability
+//!   follows dependency edges plus synthetic signal→waiter edges (a
+//!   consumer gated by a wait on the signalled cell counts as consuming
+//!   the push that the signal publishes).
+//!
+//! `tests` below hold every shipped workload twin at zero findings;
+//! `tests/protocol_sanity.rs` proves detection on seeded mutations.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::sim::{Op, OpKind, TaskId};
+
+/// The diagnostic class of a static-lint finding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LintClass {
+    /// A wait threshold exceeds the signals the whole program delivers
+    /// to its cell — a guaranteed deadlock.
+    UnsatisfiableWait,
+    /// A push (or multipush) whose payload no destination-rank task
+    /// ever consumes.
+    OrphanPush,
+}
+
+impl fmt::Display for LintClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            LintClass::UnsatisfiableWait => "unsatisfiable-wait",
+            LintClass::OrphanPush => "orphan-push",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One static-lint finding: the class, the offending op's index in the
+/// program, and a human-readable diagnosis.
+#[derive(Debug, Clone)]
+pub struct LintFinding {
+    pub class: LintClass,
+    /// Index of the offending op in the linted program.
+    pub op: TaskId,
+    pub message: String,
+}
+
+impl fmt::Display for LintFinding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] op {}: {}", self.class, self.op, self.message)
+    }
+}
+
+/// Lint a DES program (from [`crate::sim::Sim::ops`] or
+/// [`crate::sim::SimResult::ops`]) against the rules above. `world` is
+/// the program's rank count; findings come back in op order.
+pub fn lint_program(world: usize, ops: &[Op]) -> Vec<LintFinding> {
+    let mut findings = Vec::new();
+
+    // Total signals the program can ever deliver to each flag cell.
+    let mut totals: HashMap<(usize, &'static str, usize), u64> = HashMap::new();
+    for op in ops {
+        if let OpKind::Signal { dst, flags, idx } = op.kind {
+            *totals.entry((dst, flags, idx)).or_insert(0) += 1;
+        }
+    }
+
+    // Waiters per cell (targets of the synthetic signal→waiter edges),
+    // checking thresholds against the totals on the way through.
+    let mut waiters: HashMap<(usize, &'static str, usize), Vec<usize>> = HashMap::new();
+    for (id, op) in ops.iter().enumerate() {
+        if let OpKind::Wait { flags, idx, threshold } = op.kind {
+            let r = op.rank.expect("a wait occupies a rank stream");
+            waiters.entry((r, flags, idx)).or_default().push(id);
+            let have = totals.get(&(r, flags, idx)).copied().unwrap_or(0);
+            if threshold > have {
+                findings.push(LintFinding {
+                    class: LintClass::UnsatisfiableWait,
+                    op: id,
+                    message: format!(
+                        "rank {r} waits for {flags}[{idx}] >= {threshold} but the whole \
+                         program only signals that cell {have} time(s) — no schedule can \
+                         satisfy this wait"
+                    ),
+                });
+            }
+        }
+    }
+
+    // Forward edges: dependents, plus signal → same-cell waiter.
+    let mut edges: Vec<Vec<usize>> = vec![Vec::new(); ops.len()];
+    for (id, op) in ops.iter().enumerate() {
+        for &d in &op.deps {
+            edges[d].push(id);
+        }
+        if let OpKind::Signal { dst, flags, idx } = op.kind {
+            if let Some(ws) = waiters.get(&(dst, flags, idx)) {
+                edges[id].extend(ws.iter().copied());
+            }
+        }
+    }
+
+    // Does any op satisfying `pred` sit in `from`'s forward cone?
+    let reaches = |from: usize, pred: &dyn Fn(&Op) -> bool| -> bool {
+        let mut seen = vec![false; ops.len()];
+        let mut stack = vec![from];
+        seen[from] = true;
+        while let Some(x) = stack.pop() {
+            if pred(&ops[x]) {
+                return true;
+            }
+            for &y in &edges[x] {
+                if !seen[y] {
+                    seen[y] = true;
+                    stack.push(y);
+                }
+            }
+        }
+        false
+    };
+
+    for (id, op) in ops.iter().enumerate() {
+        match op.kind {
+            // The push op itself runs on src's stream and src != dst,
+            // so seeding the search with `id` cannot self-satisfy it.
+            OpKind::Push { src, dst, .. } => {
+                if !reaches(id, &|o: &Op| o.rank == Some(dst)) {
+                    findings.push(LintFinding {
+                        class: LintClass::OrphanPush,
+                        op: id,
+                        message: format!(
+                            "push {src}->{dst} ('{}') is never consumed: no task on rank \
+                             {dst} depends on its arrival, even transitively — dead \
+                             traffic or a missing wait",
+                            op.label
+                        ),
+                    });
+                }
+            }
+            // A multipush in a single-rank world has zero destinations —
+            // there is nobody who could consume it, so it is exempt.
+            OpKind::MultiPush { src, .. } if world > 1 => {
+                if !reaches(id, &|o: &Op| o.rank.is_some() && o.rank != Some(src)) {
+                    findings.push(LintFinding {
+                        class: LintClass::OrphanPush,
+                        op: id,
+                        message: format!(
+                            "multipush from rank {src} ('{}') is never consumed: no task \
+                             on any other rank depends on its arrival, even transitively",
+                            op.label
+                        ),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+
+    findings.sort_by_key(|f| f.op);
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::sim::{Sim, SimResult};
+
+    fn sim(world: usize) -> Sim {
+        Sim::new(&presets::ideal(), world, 1)
+    }
+
+    fn classes(world: usize, ops: &[Op]) -> Vec<LintClass> {
+        lint_program(world, ops).iter().map(|f| f.class).collect()
+    }
+
+    #[test]
+    fn clean_handshake_has_no_findings() {
+        let mut s = sim(2);
+        let p = s.compute(0, "produce", 1.0, &[]);
+        let push = s.push(0, 1, 64, &[p]);
+        s.signal(0, 1, "f", 0, &[push]);
+        let w = s.wait_flag_ge(1, "f", 0, 1, &[]);
+        s.compute(1, "consume", 1.0, &[w]);
+        assert!(lint_program(2, &s.ops()).is_empty());
+    }
+
+    #[test]
+    fn threshold_above_total_signals_is_unsatisfiable() {
+        let mut s = sim(2);
+        let p = s.compute(0, "produce", 1.0, &[]);
+        s.signal(0, 1, "f", 0, &[p]);
+        let w = s.wait_flag_ge(1, "f", 0, 2, &[]);
+        s.compute(1, "consume", 1.0, &[w]);
+        let f = lint_program(2, &s.ops());
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].class, LintClass::UnsatisfiableWait);
+        assert_eq!(f[0].op, w);
+        assert!(f[0].message.contains("f[0] >= 2"), "{}", f[0].message);
+        assert!(f[0].message.contains("1 time(s)"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn wait_on_a_never_signaled_cell_is_unsatisfiable() {
+        let mut s = sim(2);
+        let p = s.compute(0, "produce", 1.0, &[]);
+        s.signal(0, 1, "f", 0, &[p]); // signaller posts f[0]; waiter watches f[1]
+        s.wait_flag_ge(1, "f", 1, 1, &[]);
+        assert_eq!(classes(2, &s.ops()), vec![LintClass::UnsatisfiableWait]);
+    }
+
+    #[test]
+    fn push_nobody_consumes_is_an_orphan() {
+        let mut s = sim(2);
+        let p = s.compute(0, "produce", 1.0, &[]);
+        s.push(0, 1, 64, &[p]);
+        s.compute(1, "unrelated", 1.0, &[]);
+        let f = lint_program(2, &s.ops());
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].class, LintClass::OrphanPush);
+        assert!(f[0].message.contains("push 0->1"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn push_consumed_through_the_flag_cell_is_clean() {
+        // The consumer depends only on its wait; the push reaches it
+        // through the synthetic signal→waiter edge.
+        let mut s = sim(2);
+        let p = s.compute(0, "produce", 1.0, &[]);
+        let push = s.push(0, 1, 64, &[p]);
+        s.signal(0, 1, "tile", 7, &[push]);
+        let w = s.wait_flag_ge(1, "tile", 7, 1, &[]);
+        s.compute(1, "consume", 1.0, &[w]);
+        assert!(lint_program(2, &s.ops()).is_empty());
+    }
+
+    #[test]
+    fn reachability_must_land_on_the_destination_rank() {
+        // Push a's only dependent is push b (still on rank 0's stream),
+        // and b's arrival is consumed on rank 2 — nothing in a's forward
+        // cone runs on rank 1, so a's payload is provably dead.
+        let mut s = sim(3);
+        let a = s.push(0, 1, 64, &[]);
+        let b = s.push(0, 2, 64, &[a]);
+        s.compute(2, "consume_b", 1.0, &[b]);
+        let f = lint_program(3, &s.ops());
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].class, LintClass::OrphanPush);
+        assert_eq!(f[0].op, a);
+    }
+
+    #[test]
+    fn multipush_needs_a_consumer_on_some_peer() {
+        let mut s = sim(2);
+        let p = s.compute(0, "produce", 1.0, &[]);
+        s.multipush(0, 64, &[p]);
+        assert_eq!(classes(2, &s.ops()), vec![LintClass::OrphanPush]);
+
+        let mut s2 = sim(2);
+        let p = s2.compute(0, "produce", 1.0, &[]);
+        let m = s2.multipush(0, 64, &[p]);
+        s2.compute(1, "consume", 1.0, &[m]);
+        assert!(lint_program(2, &s2.ops()).is_empty());
+    }
+
+    #[test]
+    fn world_one_multipush_is_not_an_orphan() {
+        // A single-rank world has no peers to consume a multipush; the
+        // ag_gemm push twin builds exactly this degenerate shape.
+        let mut s = sim(1);
+        let p = s.compute(0, "produce", 1.0, &[]);
+        s.multipush(0, 64, &[p]);
+        assert!(lint_program(1, &s.ops()).is_empty());
+    }
+
+    // ---- every shipped workload twin must be lint-clean ----
+
+    fn assert_clean(name: String, world: usize, r: &SimResult) {
+        let f = lint_program(world, &r.ops);
+        assert!(
+            f.is_empty(),
+            "{name}: {}",
+            f.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("; ")
+        );
+    }
+
+    #[test]
+    fn ag_gemm_twins_are_lint_clean() {
+        use crate::coordinator::ag_gemm::AgGemmStrategy;
+        let hw = presets::mi300x();
+        for w in [1usize, 2, 4, 8] {
+            let cfg = crate::config::AgGemmConfig::tiny(w);
+            for s in AgGemmStrategy::ALL {
+                let r = crate::workloads::ag_gemm::simulate(&cfg, &hw, s, 7);
+                assert_clean(format!("ag_gemm/{}/w{w}", s.name()), w, &r);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_rs_twins_are_lint_clean() {
+        use crate::coordinator::gemm_rs::GemmRsStrategy;
+        let hw = presets::mi300x();
+        for w in [1usize, 2, 4, 8] {
+            let cfg = crate::config::GemmRsConfig::tiny(w);
+            for s in GemmRsStrategy::ALL {
+                let r = crate::workloads::gemm_rs::simulate(&cfg, &hw, s, 7);
+                assert_clean(format!("gemm_rs/{}/w{w}", s.name()), w, &r);
+            }
+        }
+    }
+
+    #[test]
+    fn flash_decode_twins_are_lint_clean() {
+        use crate::coordinator::flash_decode::FlashDecodeStrategy;
+        let hw = presets::mi300x();
+        for w in [2usize, 4, 8] {
+            let cfg = crate::config::FlashDecodeConfig::tiny(w);
+            for s in FlashDecodeStrategy::ALL {
+                let r = crate::workloads::flash_decode::simulate(&cfg, &hw, s, 7);
+                assert_clean(format!("flash_decode/{}/w{w}", s.name()), w, &r);
+            }
+        }
+    }
+
+    #[test]
+    fn tp_attention_twins_are_lint_clean() {
+        use crate::workloads::tp_attention::TpAttnStrategy;
+        let hw = presets::mi300x();
+        for w in [2usize, 4, 8] {
+            let cfg = crate::config::TpAttnConfig::tiny(w);
+            for s in TpAttnStrategy::ALL {
+                let r = crate::workloads::tp_attention::simulate(&cfg, &hw, s, 7);
+                assert_clean(format!("tp_attention/{}/w{w}", s.name()), w, &r);
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_twins_are_lint_clean() {
+        use crate::workloads::prefill::PrefillStrategy;
+        let hw = presets::mi300x();
+        for w in [2usize, 4] {
+            let cfg = crate::config::PrefillConfig::tiny(w);
+            for s in PrefillStrategy::ALL {
+                let r = crate::workloads::prefill::simulate(&cfg, &hw, s, 7);
+                assert_clean(format!("prefill/{}/w{w}", s.name()), w, &r);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_decode_twins_are_lint_clean() {
+        use crate::workloads::batch_decode::BatchDecodeStrategy;
+        let hw = presets::mi300x();
+        for w in [2usize, 4] {
+            let cfg = crate::config::BatchDecodeConfig::tiny(w);
+            for s in BatchDecodeStrategy::ALL {
+                let r = crate::workloads::batch_decode::simulate(&cfg, &hw, s, 7);
+                assert_clean(format!("batch_decode/{}/w{w}", s.name()), w, &r);
+            }
+        }
+    }
+
+    #[test]
+    fn multinode_twins_are_lint_clean() {
+        use crate::workloads::multinode::MultinodeStrategy;
+        let hw = presets::mi300x();
+        for (nodes, g) in [(2usize, 2usize), (2, 4), (3, 2)] {
+            let cfg = crate::config::MultinodeConfig::tiny(nodes, g);
+            for s in MultinodeStrategy::ALL {
+                let r = crate::workloads::multinode::simulate(&cfg, &hw, s, 7);
+                assert_clean(format!("multinode/{}/{nodes}x{g}", s.name()), nodes * g, &r);
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_twins_are_lint_clean() {
+        use crate::workloads::all_reduce::{AllReduceConfig, AllReduceStrategy};
+        let hw = presets::mi300x();
+        for w in [2usize, 4] {
+            let cfg =
+                AllReduceConfig { grad_elems: 4096, buckets: 4, world: w, backward_s: 1e-3 };
+            for s in AllReduceStrategy::ALL {
+                let r = crate::workloads::all_reduce::simulate(&cfg, &hw, s, 7);
+                assert_clean(format!("all_reduce/{}/w{w}", s.name()), w, &r);
+            }
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! The dynamic event recorder behind the iris heap and rank contexts.
+//!
+//! When a [`Recorder`] is installed on a [`crate::iris::SymmetricHeap`]
+//! (via `enable_sanitizer`), every data access, flag operation, satisfied
+//! wait, and barrier crossing is appended to one shared event log. The
+//! recorder's mutex is held *around* the underlying atomic operation and
+//! the log append together, so the log is a true linearization of the
+//! run: an event's position in the log is consistent with the order the
+//! heap actually observed. The happens-before replay
+//! ([`crate::analysis::hb`]) depends on exactly this property — e.g. a
+//! satisfied wait appears in the log after every `flag_add` whose value
+//! it could have observed.
+//!
+//! When no recorder is installed the cost is a single relaxed
+//! `OnceLock::get` pointer check per heap operation — no locking, no
+//! allocation, nothing on the data path (the "zero-cost when off"
+//! contract the benches rely on).
+//!
+//! The *acting* rank of an event is taken from a thread-local set by
+//! [`crate::iris::run_node`] for each rank engine thread. Heap operations
+//! performed outside a rank engine (single-threaded tests, pool setup)
+//! fall back to attributing the access to the target rank, which is
+//! correct for local accesses — the only kind such code performs.
+
+use std::cell::Cell;
+use std::sync::{Mutex, MutexGuard};
+
+thread_local! {
+    /// The rank engine this thread belongs to (set by `run_node`).
+    static CURRENT_RANK: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Mark the current thread as rank `rank`'s engine for event attribution.
+pub fn set_thread_rank(rank: usize) {
+    CURRENT_RANK.with(|c| c.set(Some(rank)));
+}
+
+/// The acting rank of the current thread, falling back to `local` (the
+/// target rank of the operation) outside rank engines.
+pub fn thread_rank_or(local: usize) -> usize {
+    CURRENT_RANK.with(|c| c.get()).unwrap_or(local)
+}
+
+/// Whether a data access reads or writes the byte range.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    Store,
+    Load,
+}
+
+/// One recorded heap operation. `rank` is always the *acting* rank (who
+/// executed the operation); `target` is the rank whose heap region was
+/// touched (`rank == target` for local accesses).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A data store/load of `len` elements of `buf` at `offset` on rank
+    /// `target`'s region.
+    Access { rank: usize, target: usize, kind: AccessKind, buf: String, offset: usize, len: usize },
+    /// A releasing `flag_add` of `delta` to `flags[idx]` on rank
+    /// `target`'s region; `post` is the cell value after the add.
+    FlagAdd { rank: usize, target: usize, flags: String, idx: usize, delta: u64, post: u64 },
+    /// A satisfied `wait_flag_ge` (acquire): the waiter observed `seen >=
+    /// target_value` on its local `flags[idx]`. Logged with a re-read of
+    /// the flag under the recorder lock, so every `FlagAdd` contributing
+    /// to `seen` precedes this event in the log.
+    WaitSat { rank: usize, flags: String, idx: usize, target_value: u64, seen: u64 },
+    /// A `wait_flag_ge` that timed out at `seen < target_value`.
+    WaitTimeout { rank: usize, flags: String, idx: usize, target_value: u64, seen: u64 },
+    /// An acquiring plain flag read (`RankCtx::flag`).
+    FlagRead { rank: usize, flags: String, idx: usize, seen: u64 },
+    /// A collective `flags_reset`: every cell of `flags` on every rank
+    /// restarts at zero (a new flag generation).
+    FlagsReset { flags: String },
+    /// Rank `rank` arrived at global barrier number `epoch`.
+    BarrierArrive { rank: usize, epoch: u64 },
+    /// Rank `rank` left global barrier number `epoch`.
+    BarrierExit { rank: usize, epoch: u64 },
+}
+
+/// Append-only event log shared by all rank engines of one heap.
+#[derive(Default)]
+pub struct Recorder {
+    log: Mutex<Vec<Event>>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    /// Lock the log for a combined "atomic op + append" critical section.
+    /// The iris heap performs the instrumented operation while holding
+    /// this guard so log order is a true linearization.
+    pub fn lock(&self) -> MutexGuard<'_, Vec<Event>> {
+        self.log.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Append one event (shorthand when no operation needs the lock held).
+    pub fn push(&self, ev: Event) {
+        self.lock().push(ev);
+    }
+
+    /// Snapshot of the log so far.
+    pub fn events(&self) -> Vec<Event> {
+        self.lock().clone()
+    }
+
+    /// Number of events recorded so far.
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_rank_falls_back_to_target() {
+        // this test thread never registered as a rank engine
+        assert_eq!(thread_rank_or(3), 3);
+        let h = std::thread::spawn(|| {
+            set_thread_rank(1);
+            thread_rank_or(7)
+        });
+        assert_eq!(h.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn log_is_append_ordered() {
+        let rec = Recorder::new();
+        rec.push(Event::FlagsReset { flags: "f".into() });
+        rec.push(Event::BarrierArrive { rank: 0, epoch: 0 });
+        assert_eq!(rec.len(), 2);
+        assert!(matches!(rec.events()[0], Event::FlagsReset { .. }));
+        assert!(!rec.is_empty());
+    }
+}

@@ -101,7 +101,7 @@ pub fn declare_hier_allreduce(b: HeapBuilder, topo: &Topology, n: usize) -> Heap
 /// with payloads of `n` elements.
 pub fn hier_allreduce_heap(topo: &Topology, n: usize) -> Arc<SymmetricHeap> {
     let b = HeapBuilder::new(topo.world()).topology(topo.clone());
-    Arc::new(declare_hier_allreduce(b, topo, n).build())
+    Arc::new(declare_hier_allreduce(b, topo, n).build().expect("static hier-allreduce heap layout"))
 }
 
 /// Direct (clique) all-gather with push semantics and flag completion.
@@ -242,7 +242,7 @@ pub fn all_gather_bsp(
 ///     HeapBuilder::new(world)
 ///         .buffer("ar", 2 * world * seg_max)
 ///         .flags("arf", 2 * world)
-///         .build(),
+///         .build().unwrap(),
 /// );
 /// let outs = run_node(heap, move |ctx| {
 ///     let send: Vec<f32> = (0..n).map(|i| (ctx.rank() + i) as f32).collect();
@@ -549,7 +549,7 @@ pub fn reduce_scatter_sum(
 ///     HeapBuilder::new(world)
 ///         .buffer("a2a", world * seg_max)
 ///         .flags("a2af", world)
-///         .build(),
+///         .build().unwrap(),
 /// );
 /// let outs = run_node(heap, move |ctx| {
 ///     // element i of rank r carries r*10 + i
@@ -683,7 +683,7 @@ mod tests {
             HeapBuilder::new(world)
                 .buffer("ag", world * len)
                 .flags("agf", world)
-                .build(),
+                .build().unwrap(),
         )
     }
 
@@ -764,7 +764,7 @@ mod tests {
             HeapBuilder::new(world)
                 .buffer("ar", 2 * world * seg_max)
                 .flags("arf", 2 * world)
-                .build(),
+                .build().unwrap(),
         )
     }
 
@@ -913,7 +913,7 @@ mod tests {
         let world = 4;
         let n = world * 2;
         let heap = Arc::new(
-            HeapBuilder::new(world).buffer("rs", n).flags("rsf", world).build(),
+            HeapBuilder::new(world).buffer("rs", n).flags("rsf", world).build().unwrap(),
         );
         let outs = run_node(heap, move |ctx| {
             let send: Vec<f32> = (0..n).map(|i| ((ctx.rank() + 1) * (i + 1)) as f32).collect();
@@ -936,7 +936,7 @@ mod tests {
                 HeapBuilder::new(world)
                     .buffer("rs", world * seg_max)
                     .flags("rsf", world)
-                    .build(),
+                    .build().unwrap(),
             );
             let outs = run_node(heap, move |ctx| {
                 let send: Vec<f32> =
@@ -961,7 +961,7 @@ mod tests {
         for world in [2usize, 4, 8] {
             let seg = 3;
             let heap = Arc::new(
-                HeapBuilder::new(world).buffer("a2a", world * seg).flags("a2af", world).build(),
+                HeapBuilder::new(world).buffer("a2a", world * seg).flags("a2af", world).build().unwrap(),
             );
             let outs = run_node(heap, move |ctx| {
                 // rank r's segment d carries value r*10 + d
@@ -993,7 +993,7 @@ mod tests {
                 HeapBuilder::new(world)
                     .buffer("a2a", world * seg_max)
                     .flags("a2af", world)
-                    .build(),
+                    .build().unwrap(),
             );
             let outs = run_node(heap, move |ctx| {
                 // rank r's element i carries the value r*1000 + i
@@ -1024,7 +1024,7 @@ mod tests {
         // counter that fell behind the round number
         let world = 3;
         let heap = Arc::new(
-            HeapBuilder::new(world).buffer("a2a", world).flags("a2af", world).build(),
+            HeapBuilder::new(world).buffer("a2a", world).flags("a2af", world).build().unwrap(),
         );
         let outs = run_node(heap, move |ctx| {
             let empty = all_to_all(&ctx, &[], "a2a", "a2af", 1);
@@ -1045,7 +1045,7 @@ mod tests {
         // comes back as a typed error instead of a panic
         let world = 4;
         let heap = Arc::new(
-            HeapBuilder::new(world).buffer("rsr", 12).flags("rsrf", world).build(),
+            HeapBuilder::new(world).buffer("rsr", 12).flags("rsrf", world).build().unwrap(),
         );
         let outs = run_node(heap, move |ctx| {
             reduce_scatter_ring(&ctx, &[1.0; 10], "rsr", "rsrf", 1)
@@ -1065,7 +1065,7 @@ mod tests {
         for world in [2usize, 3, 4, 8] {
             let n = world * 2;
             let heap = Arc::new(
-                HeapBuilder::new(world).buffer("rsr", n).flags("rsrf", world).build(),
+                HeapBuilder::new(world).buffer("rsr", n).flags("rsrf", world).build().unwrap(),
             );
             let outs = run_node(heap, move |ctx| {
                 let send: Vec<f32> =
@@ -1085,7 +1085,7 @@ mod tests {
     #[test]
     fn broadcast_delivers_root_data() {
         let world = 5;
-        let heap = Arc::new(HeapBuilder::new(world).buffer("bc", 4).flags("bcf", 1).build());
+        let heap = Arc::new(HeapBuilder::new(world).buffer("bc", 4).flags("bcf", 1).build().unwrap());
         let outs = run_node(heap, move |ctx| {
             let payload = if ctx.rank() == 2 { [3.0, 1.0, 4.0, 1.0] } else { [0.0; 4] };
             broadcast(&ctx, 2, &payload, "bc", "bcf", 1)

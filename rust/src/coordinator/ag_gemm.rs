@@ -127,7 +127,7 @@ pub fn build_heap(cfg: &AgGemmConfig) -> Arc<SymmetricHeap> {
             .buffer(BUF_INBOX, cfg.world * shard_elems)
             .flags(FLAGS_PANEL, cfg.world * p.n_panels)
             .flags(FLAGS_AG, cfg.world)
-            .build(),
+            .build().expect("static ag_gemm heap layout"),
     )
 }
 

@@ -69,7 +69,7 @@ pub fn build_heap(cfg: &FlashDecodeConfig) -> Arc<SymmetricHeap> {
             .buffer(BUF_INBOX, cfg.world * wire)
             .flags(FLAGS_PARTIAL, cfg.world)
             .flags(FLAGS_AG, cfg.world)
-            .build(),
+            .build().expect("static flash_decode heap layout"),
     )
 }
 

@@ -75,7 +75,7 @@ pub fn build_heap(cfg: &GemmRsConfig) -> Arc<SymmetricHeap> {
             .buffer(BUF_PART, cfg.world * cfg.m * cfg.seg_max())
             .flags(FLAGS_TILE, cfg.world * cfg.tiles_max())
             .flags(FLAGS_BSP, cfg.world)
-            .build(),
+            .build().expect("static gemm_rs heap layout"),
     )
 }
 

@@ -14,6 +14,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::analysis::record::{self, Event};
 use crate::iris::error::{IrisError, WaitTimeout};
 use crate::iris::heap::SymmetricHeap;
 
@@ -205,7 +206,22 @@ impl RankCtx {
 
     /// Read a local flag (Acquire).
     pub fn flag(&self, flags: &str, idx: usize) -> Result<u64, IrisError> {
-        self.heap.flag_read(self.rank, flags, idx)
+        match self.heap.recorder() {
+            None => self.heap.flag_read(self.rank, flags, idx),
+            Some(rec) => {
+                // read under the recorder lock so every flag_add folded
+                // into `seen` already sits earlier in the log
+                let mut log = rec.lock();
+                let seen = self.heap.flag_read(self.rank, flags, idx)?;
+                log.push(Event::FlagRead {
+                    rank: self.rank,
+                    flags: flags.to_string(),
+                    idx,
+                    seen,
+                });
+                Ok(seen)
+            }
+        }
     }
 
     /// Spin/yield-wait until local flag `idx` reaches `target`
@@ -217,13 +233,22 @@ impl RankCtx {
         loop {
             let v = self.heap.flag_read(self.rank, flags, idx)?;
             if v >= target {
-                return Ok(v);
+                return Ok(self.log_wait_sat(flags, idx, target, v));
             }
             spins += 1;
             if spins > 64 {
                 std::thread::yield_now();
             }
             if spins % 1024 == 0 && start.elapsed() > self.wait_timeout {
+                if let Some(rec) = self.heap.recorder() {
+                    rec.push(Event::WaitTimeout {
+                        rank: self.rank,
+                        flags: flags.to_string(),
+                        idx,
+                        target_value: target,
+                        seen: v,
+                    });
+                }
                 return Err(IrisError::Timeout(WaitTimeout {
                     rank: self.rank,
                     flags: flags.to_string(),
@@ -235,9 +260,44 @@ impl RankCtx {
         }
     }
 
+    /// Record a satisfied wait. The flag is *re-read under the recorder
+    /// lock*: `flag_add` appends its event inside the same lock, so every
+    /// increment folded into the logged `seen` value is guaranteed to sit
+    /// earlier in the log — the property the happens-before replay uses to
+    /// attribute acquire edges. Returns the (possibly newer) seen value.
+    fn log_wait_sat(&self, flags: &str, idx: usize, target: u64, observed: u64) -> u64 {
+        match self.heap.recorder() {
+            None => observed,
+            Some(rec) => {
+                let mut log = rec.lock();
+                let seen =
+                    self.heap.flag_read(self.rank, flags, idx).unwrap_or(observed);
+                log.push(Event::WaitSat {
+                    rank: self.rank,
+                    flags: flags.to_string(),
+                    idx,
+                    target_value: target,
+                    seen,
+                });
+                seen
+            }
+        }
+    }
+
     /// Global barrier (the BSP synchronization point).
     pub fn barrier(&self) {
-        self.heap.barrier_wait();
+        match self.heap.recorder() {
+            None => self.heap.barrier_wait(),
+            Some(rec) => {
+                // the sequence number read before arrival is this
+                // barrier's epoch: it cannot advance until this rank
+                // arrives, so every participant stamps the same value
+                let epoch = self.heap.barrier_epoch();
+                rec.push(Event::BarrierArrive { rank: self.rank, epoch });
+                self.heap.barrier_wait();
+                rec.push(Event::BarrierExit { rank: self.rank, epoch });
+            }
+        }
     }
 }
 
@@ -280,7 +340,12 @@ where
         handles.push(
             std::thread::Builder::new()
                 .name(format!("rank{rank}"))
-                .spawn(move || body(ctx))
+                .spawn(move || {
+                    // attribute this thread's heap operations to its rank
+                    // (the sanitizer's acting-rank thread-local)
+                    record::set_thread_rank(rank);
+                    body(ctx)
+                })
                 .expect("spawn rank engine"),
         );
     }
@@ -305,7 +370,7 @@ mod tests {
 
     #[test]
     fn peers_iterates_everyone_else_staggered() {
-        let heap = Arc::new(HeapBuilder::new(4).build());
+        let heap = Arc::new(HeapBuilder::new(4).build().unwrap());
         let orders = run_node(heap, |ctx| ctx.peers().collect::<Vec<_>>());
         assert_eq!(orders[0], vec![1, 2, 3]);
         assert_eq!(orders[1], vec![2, 3, 0]);
@@ -317,7 +382,7 @@ mod tests {
         // rank 0 pushes a tile to every peer's inbox and signals; peers
         // wait on the flag then read — the paper's push-model handshake.
         let world = 4;
-        let heap = Arc::new(HeapBuilder::new(world).buffer("inbox", 8).flags("ready", 1).build());
+        let heap = Arc::new(HeapBuilder::new(world).buffer("inbox", 8).flags("ready", 1).build().unwrap());
         let outs = run_node(heap, move |ctx| {
             if ctx.rank() == 0 {
                 for d in 1..ctx.world() {
@@ -338,7 +403,7 @@ mod tests {
     #[test]
     fn pull_reads_remote_shard() {
         let world = 3;
-        let heap = Arc::new(HeapBuilder::new(world).buffer("shard", 4).build());
+        let heap = Arc::new(HeapBuilder::new(world).buffer("shard", 4).build().unwrap());
         let outs = run_node(heap, move |ctx| {
             let r = ctx.rank();
             ctx.store_local("shard", 0, &[r as f32; 4]).unwrap();
@@ -357,7 +422,7 @@ mod tests {
     fn misnamed_buffer_surfaces_as_recoverable_error() {
         // the satellite case: a coordinator typo must come back as a typed
         // error value the engine can handle, not a poisoned node
-        let heap = Arc::new(HeapBuilder::new(2).buffer("good", 4).build());
+        let heap = Arc::new(HeapBuilder::new(2).buffer("good", 4).build().unwrap());
         let outs = run_node(heap, |ctx| {
             match ctx.store_local("goood", 0, &[1.0]) {
                 Err(IrisError::UnknownBuffer(name)) => name,
@@ -372,7 +437,7 @@ mod tests {
     #[test]
     fn traffic_accounting_counts_remote_only() {
         let world = 2;
-        let heap = Arc::new(HeapBuilder::new(world).buffer("b", 16).flags("f", 1).build());
+        let heap = Arc::new(HeapBuilder::new(world).buffer("b", 16).flags("f", 1).build().unwrap());
         let traffics = run_node(heap, move |ctx| {
             if ctx.rank() == 0 {
                 ctx.remote_store(1, "b", 0, &[1.0; 16]).unwrap(); // 32 bytes
@@ -397,7 +462,7 @@ mod tests {
 
     #[test]
     fn wait_timeout_fails_loudly() {
-        let heap = Arc::new(HeapBuilder::new(1).flags("f", 1).build());
+        let heap = Arc::new(HeapBuilder::new(1).flags("f", 1).build().unwrap());
         let res = run_node_with_timeout(heap, Duration::from_millis(50), |ctx| {
             ctx.wait_flag_ge("f", 0, 1)
         });
@@ -415,7 +480,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "engine boom")]
     fn engine_panic_propagates() {
-        let heap = Arc::new(HeapBuilder::new(2).build());
+        let heap = Arc::new(HeapBuilder::new(2).build().unwrap());
         run_node(heap, |ctx| {
             if ctx.rank() == 1 {
                 panic!("engine boom");

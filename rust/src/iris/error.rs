@@ -35,6 +35,14 @@ impl std::error::Error for WaitTimeout {}
 /// Error from a symmetric-heap or rank-context operation.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum IrisError {
+    /// Two buffers of the same name were declared on one heap layout
+    /// (reported by [`crate::iris::HeapBuilder::build`]; a duplicate
+    /// would silently alias two protocols' staging areas).
+    DuplicateBuffer(String),
+    /// Two flag arrays of the same name were declared on one heap layout.
+    DuplicateFlags(String),
+    /// A heap layout declared over zero ranks.
+    ZeroWorld,
     /// No buffer with this name was declared on the heap.
     UnknownBuffer(String),
     /// No flag array with this name was declared on the heap.
@@ -65,6 +73,9 @@ pub enum IrisError {
 impl fmt::Display for IrisError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
+            IrisError::DuplicateBuffer(name) => write!(f, "duplicate buffer name: {name}"),
+            IrisError::DuplicateFlags(name) => write!(f, "duplicate flag array name: {name}"),
+            IrisError::ZeroWorld => write!(f, "symmetric heap needs world >= 1"),
             IrisError::UnknownBuffer(name) => write!(f, "unknown buffer: {name}"),
             IrisError::UnknownFlags(name) => write!(f, "unknown flag array: {name}"),
             IrisError::OutOfBounds { buf, offset, len, capacity } => write!(
@@ -112,6 +123,15 @@ mod tests {
         assert!(l.to_string().contains("invalid collective layout"));
         let p = IrisError::OutOfPages { requested: 3, free: 1 };
         assert!(p.to_string().contains("requested 3 pages, 1 free"));
+        assert_eq!(
+            IrisError::DuplicateBuffer("x".into()).to_string(),
+            "duplicate buffer name: x"
+        );
+        assert_eq!(
+            IrisError::DuplicateFlags("f".into()).to_string(),
+            "duplicate flag array name: f"
+        );
+        assert!(IrisError::ZeroWorld.to_string().contains("world >= 1"));
     }
 
     #[test]

@@ -24,7 +24,9 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 
+use crate::analysis::record::{self, AccessKind, Event, Recorder};
 use crate::fabric::Topology;
 use crate::iris::error::IrisError;
 
@@ -52,8 +54,11 @@ pub struct HeapBuilder {
 }
 
 impl HeapBuilder {
+    /// Start a layout over `world` ranks. A zero world is reported as a
+    /// typed [`IrisError::ZeroWorld`] by [`HeapBuilder::build`] (builder
+    /// methods stay chainable; all layout validation happens at build
+    /// time).
     pub fn new(world: usize) -> HeapBuilder {
-        assert!(world >= 1, "world must be >= 1");
         HeapBuilder { world, topology: None, buffers: Vec::new(), flags: Vec::new() }
     }
 
@@ -69,23 +74,41 @@ impl HeapBuilder {
     }
 
     /// Declare a named f32 buffer of `len` elements on every rank.
+    /// A duplicate name is reported at [`HeapBuilder::build`] time as a
+    /// typed [`IrisError::DuplicateBuffer`].
     pub fn buffer(mut self, name: &str, len: usize) -> HeapBuilder {
-        assert!(
-            !self.buffers.iter().any(|(n, _)| n == name),
-            "duplicate buffer name: {name}"
-        );
         self.buffers.push((name.to_string(), len));
         self
     }
 
     /// Declare a named flag array of `len` u64 flags on every rank.
+    /// A duplicate name is reported at [`HeapBuilder::build`] time as a
+    /// typed [`IrisError::DuplicateFlags`].
     pub fn flags(mut self, name: &str, len: usize) -> HeapBuilder {
-        assert!(!self.flags.iter().any(|(n, _)| n == name), "duplicate flag name: {name}");
         self.flags.push((name.to_string(), len));
         self
     }
 
-    pub fn build(self) -> SymmetricHeap {
+    /// Materialize the heap. Layout defects — a zero world, a buffer or
+    /// flag array declared twice — come back as typed [`IrisError`]
+    /// values here instead of panicking mid-declaration, consistent with
+    /// the repo-wide no-hot-path-panic rule (protocol builders that treat
+    /// a bad layout as fatal `expect()` the result, which still fails
+    /// loudly with the typed message).
+    pub fn build(self) -> Result<SymmetricHeap, IrisError> {
+        if self.world == 0 {
+            return Err(IrisError::ZeroWorld);
+        }
+        for (i, (name, _)) in self.buffers.iter().enumerate() {
+            if self.buffers[..i].iter().any(|(n, _)| n == name) {
+                return Err(IrisError::DuplicateBuffer(name.clone()));
+            }
+        }
+        for (i, (name, _)) in self.flags.iter().enumerate() {
+            if self.flags[..i].iter().any(|(n, _)| n == name) {
+                return Err(IrisError::DuplicateFlags(name.clone()));
+            }
+        }
         let mk_region = |len: usize| {
             (0..self.world)
                 .map(|_| (0..len).map(|_| AtomicU32::new(0f32.to_bits())).collect())
@@ -94,7 +117,7 @@ impl HeapBuilder {
         let mk_flags = |len: usize| {
             (0..self.world).map(|_| (0..len).map(|_| AtomicU64::new(0)).collect()).collect()
         };
-        SymmetricHeap {
+        Ok(SymmetricHeap {
             world: self.world,
             topology: self.topology.unwrap_or_else(|| Topology::clique(self.world)),
             regions: self
@@ -109,7 +132,8 @@ impl HeapBuilder {
                 .collect(),
             barrier_seq: AtomicU64::new(0),
             barrier_arrived: AtomicU64::new(0),
-        }
+            recorder: OnceLock::new(),
+        })
     }
 }
 
@@ -122,11 +146,37 @@ pub struct SymmetricHeap {
     // sense-reversing barrier state (see `barrier_wait`)
     barrier_seq: AtomicU64,
     barrier_arrived: AtomicU64,
+    /// Optional protocol-sanitizer event log ([`crate::analysis`]). When
+    /// absent every operation pays exactly one `OnceLock::get` pointer
+    /// check; when present the recorder mutex is held around the atomic
+    /// operation + log append so the log is a true linearization.
+    recorder: OnceLock<Arc<Recorder>>,
 }
 
 impl SymmetricHeap {
     pub fn world(&self) -> usize {
         self.world
+    }
+
+    /// Install (or fetch) the protocol-sanitizer event recorder on this
+    /// heap. From this point every data access, flag operation, satisfied
+    /// wait, and barrier crossing is logged; feed the events to
+    /// [`crate::analysis::hb::analyze`] after the run. Idempotent — the
+    /// first recorder wins, later calls return the same one.
+    pub fn enable_sanitizer(&self) -> Arc<Recorder> {
+        Arc::clone(self.recorder.get_or_init(|| Arc::new(Recorder::new())))
+    }
+
+    /// The installed sanitizer recorder, if any.
+    pub fn recorder(&self) -> Option<&Arc<Recorder>> {
+        self.recorder.get()
+    }
+
+    /// Current global-barrier number (used by the sanitizer to stamp
+    /// arrive/exit events; a barrier cannot complete without the calling
+    /// rank, so the value read before arrival is the barrier's epoch).
+    pub(crate) fn barrier_epoch(&self) -> u64 {
+        self.barrier_seq.load(Ordering::Acquire)
     }
 
     /// The node layout the heap was declared over (a single-node clique
@@ -186,8 +236,27 @@ impl SymmetricHeap {
             }
         }
         let cells = &region.per_rank[rank];
-        for (i, v) in data.iter().enumerate() {
-            cells[offset + i].store(v.to_bits(), Ordering::Relaxed);
+        let body = || {
+            for (i, v) in data.iter().enumerate() {
+                cells[offset + i].store(v.to_bits(), Ordering::Relaxed);
+            }
+        };
+        match self.recorder.get() {
+            None => body(),
+            Some(rec) => {
+                // op + append under one lock: the log stays a true
+                // linearization of what the heap observed
+                let mut log = rec.lock();
+                body();
+                log.push(Event::Access {
+                    rank: record::thread_rank_or(rank),
+                    target: rank,
+                    kind: AccessKind::Store,
+                    buf: buf.to_string(),
+                    offset,
+                    len: data.len(),
+                });
+            }
         }
         Ok(())
     }
@@ -214,8 +283,25 @@ impl SymmetricHeap {
             }
         }
         let cells = &region.per_rank[rank];
-        for (i, slot) in out.iter_mut().enumerate() {
-            *slot = f32::from_bits(cells[offset + i].load(Ordering::Relaxed));
+        let read = |out: &mut [f32]| {
+            for (i, slot) in out.iter_mut().enumerate() {
+                *slot = f32::from_bits(cells[offset + i].load(Ordering::Relaxed));
+            }
+        };
+        match self.recorder.get() {
+            None => read(out),
+            Some(rec) => {
+                let mut log = rec.lock();
+                read(out);
+                log.push(Event::Access {
+                    rank: record::thread_rank_or(rank),
+                    target: rank,
+                    kind: AccessKind::Load,
+                    buf: buf.to_string(),
+                    offset,
+                    len: out.len(),
+                });
+            }
         }
         Ok(())
     }
@@ -239,7 +325,23 @@ impl SymmetricHeap {
                 len: fr.len,
             });
         }
-        Ok(fr.per_rank[rank][idx].fetch_add(delta, Ordering::Release))
+        let cell = &fr.per_rank[rank][idx];
+        match self.recorder.get() {
+            None => Ok(cell.fetch_add(delta, Ordering::Release)),
+            Some(rec) => {
+                let mut log = rec.lock();
+                let prev = cell.fetch_add(delta, Ordering::Release);
+                log.push(Event::FlagAdd {
+                    rank: record::thread_rank_or(rank),
+                    target: rank,
+                    flags: flags.to_string(),
+                    idx,
+                    delta,
+                    post: prev + delta,
+                });
+                Ok(prev)
+            }
+        }
     }
 
     /// Read flag `idx` on rank `rank` with Acquire ordering.
@@ -260,9 +362,19 @@ impl SymmetricHeap {
     /// iterations; collective — caller must ensure quiescence).
     pub fn flags_reset(&self, flags: &str) -> Result<(), IrisError> {
         let fr = self.flag_region(flags)?;
-        for rank in 0..self.world {
-            for f in &fr.per_rank[rank] {
-                f.store(0, Ordering::Release);
+        let zero = || {
+            for rank in 0..self.world {
+                for f in &fr.per_rank[rank] {
+                    f.store(0, Ordering::Release);
+                }
+            }
+        };
+        match self.recorder.get() {
+            None => zero(),
+            Some(rec) => {
+                let mut log = rec.lock();
+                zero();
+                log.push(Event::FlagsReset { flags: flags.to_string() });
             }
         }
         Ok(())
@@ -297,23 +409,63 @@ mod tests {
 
     #[test]
     fn builder_allocates_per_rank_regions() {
-        let heap = HeapBuilder::new(4).buffer("a", 16).flags("f", 8).build();
+        let heap = HeapBuilder::new(4).buffer("a", 16).flags("f", 8).build().unwrap();
         assert_eq!(heap.world(), 4);
         assert_eq!(heap.buffer_len("a").unwrap(), 16);
         assert_eq!(heap.flags_len("f").unwrap(), 8);
     }
 
     #[test]
-    #[should_panic(expected = "duplicate buffer")]
-    fn duplicate_buffer_rejected() {
-        HeapBuilder::new(2).buffer("a", 1).buffer("a", 2);
+    fn duplicate_names_and_zero_world_are_typed_errors() {
+        let err = HeapBuilder::new(2).buffer("a", 1).buffer("a", 2).build().unwrap_err();
+        assert_eq!(err, IrisError::DuplicateBuffer("a".to_string()));
+        let err = HeapBuilder::new(2).flags("f", 1).flags("f", 2).build().unwrap_err();
+        assert_eq!(err, IrisError::DuplicateFlags("f".to_string()));
+        let err = HeapBuilder::new(0).buffer("a", 1).build().unwrap_err();
+        assert_eq!(err, IrisError::ZeroWorld);
+        // same buffer name on a *different* region kind is fine
+        assert!(HeapBuilder::new(2).buffer("a", 1).flags("a", 1).build().is_ok());
+    }
+
+    #[test]
+    fn sanitizer_recorder_logs_heap_ops() {
+        let heap = HeapBuilder::new(2).buffer("x", 4).flags("f", 2).build().unwrap();
+        assert!(heap.recorder().is_none(), "recorder must be off by default");
+        let rec = heap.enable_sanitizer();
+        heap.store(1, "x", 1, &[2.0, 3.0]).unwrap();
+        let mut out = [0.0f32; 2];
+        heap.load(1, "x", 1, &mut out).unwrap();
+        heap.flag_add(0, "f", 1, 3).unwrap();
+        heap.flags_reset("f").unwrap();
+        let events = rec.events();
+        assert_eq!(events.len(), 4);
+        assert_eq!(
+            events[0],
+            Event::Access {
+                rank: 1, // falls back to the target rank outside rank engines
+                target: 1,
+                kind: AccessKind::Store,
+                buf: "x".to_string(),
+                offset: 1,
+                len: 2,
+            }
+        );
+        assert!(matches!(events[1], Event::Access { kind: AccessKind::Load, .. }));
+        assert!(matches!(
+            events[2],
+            Event::FlagAdd { target: 0, idx: 1, delta: 3, post: 3, .. }
+        ));
+        assert_eq!(events[3], Event::FlagsReset { flags: "f".to_string() });
+        // enable_sanitizer is idempotent: same recorder comes back
+        let rec2 = heap.enable_sanitizer();
+        assert_eq!(rec2.len(), 4);
     }
 
     #[test]
     fn topology_defaults_to_clique_and_is_settable() {
-        let heap = HeapBuilder::new(4).build();
+        let heap = HeapBuilder::new(4).build().unwrap();
         assert_eq!(heap.topology(), &Topology::clique(4));
-        let heap2 = HeapBuilder::new(4).topology(Topology::hierarchical(2, 2)).build();
+        let heap2 = HeapBuilder::new(4).topology(Topology::hierarchical(2, 2)).build().unwrap();
         assert_eq!(heap2.topology().nodes(), 2);
         assert_eq!(heap2.topology().gpus_per_node(), 2);
     }
@@ -326,7 +478,7 @@ mod tests {
 
     #[test]
     fn unknown_buffer_is_typed_error() {
-        let heap = HeapBuilder::new(2).build();
+        let heap = HeapBuilder::new(2).build().unwrap();
         let err = heap.store(0, "nope", 0, &[1.0]).unwrap_err();
         assert_eq!(err, IrisError::UnknownBuffer("nope".to_string()));
         assert!(err.to_string().contains("unknown buffer: nope"));
@@ -340,7 +492,7 @@ mod tests {
 
     #[test]
     fn unknown_flags_is_typed_error() {
-        let heap = HeapBuilder::new(2).build();
+        let heap = HeapBuilder::new(2).build().unwrap();
         assert!(matches!(heap.flag_add(0, "nf", 0, 1), Err(IrisError::UnknownFlags(_))));
         assert!(matches!(heap.flag_read(0, "nf", 0), Err(IrisError::UnknownFlags(_))));
         assert!(matches!(heap.flags_reset("nf"), Err(IrisError::UnknownFlags(_))));
@@ -349,7 +501,7 @@ mod tests {
 
     #[test]
     fn bad_rank_is_typed_error() {
-        let heap = HeapBuilder::new(2).buffer("x", 4).flags("f", 1).build();
+        let heap = HeapBuilder::new(2).buffer("x", 4).flags("f", 1).build().unwrap();
         assert!(matches!(
             heap.store(2, "x", 0, &[1.0]),
             Err(IrisError::BadRank { rank: 2, world: 2 })
@@ -359,7 +511,7 @@ mod tests {
 
     #[test]
     fn regions_are_independent_per_rank() {
-        let heap = HeapBuilder::new(3).buffer("x", 4).build();
+        let heap = HeapBuilder::new(3).buffer("x", 4).build().unwrap();
         heap.store(0, "x", 0, &[1.0, 2.0]).unwrap();
         heap.store(1, "x", 0, &[9.0, 8.0]).unwrap();
         let mut out = [0.0f32; 2];
@@ -373,7 +525,7 @@ mod tests {
 
     #[test]
     fn store_bounds_is_typed_error() {
-        let heap = HeapBuilder::new(1).buffer("x", 4).build();
+        let heap = HeapBuilder::new(1).buffer("x", 4).build().unwrap();
         let err = heap.store(0, "x", 3, &[1.0, 2.0]).unwrap_err();
         match err {
             IrisError::OutOfBounds { buf, offset, len, capacity } => {
@@ -394,7 +546,7 @@ mod tests {
 
     #[test]
     fn flags_add_and_read() {
-        let heap = HeapBuilder::new(2).flags("f", 4).build();
+        let heap = HeapBuilder::new(2).flags("f", 4).build().unwrap();
         assert_eq!(heap.flag_read(1, "f", 2).unwrap(), 0);
         let prev = heap.flag_add(1, "f", 2, 1).unwrap();
         assert_eq!(prev, 0);
@@ -408,7 +560,7 @@ mod tests {
     #[test]
     fn barrier_synchronizes_threads() {
         let world = 4;
-        let heap = Arc::new(HeapBuilder::new(world).flags("f", 1).build());
+        let heap = Arc::new(HeapBuilder::new(world).flags("f", 1).build().unwrap());
         let mut handles = Vec::new();
         for r in 0..world {
             let h = Arc::clone(&heap);
@@ -430,7 +582,7 @@ mod tests {
     #[test]
     fn barrier_reusable_many_rounds() {
         let world = 3;
-        let heap = Arc::new(HeapBuilder::new(world).buffer("x", 1).build());
+        let heap = Arc::new(HeapBuilder::new(world).buffer("x", 1).build().unwrap());
         let mut handles = Vec::new();
         for r in 0..world {
             let h = Arc::clone(&heap);

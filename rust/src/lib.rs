@@ -21,6 +21,11 @@
 //! | **Bulk-Synchronous Tax** | every rank idling at entry/exit barriers for the slowest peer | per-tile **signal flags** replace barriers: producers `remote_store` + `signal`, consumers `wait_flag_ge` per tile ([`iris::RankCtx`]; [`serve::fused_allreduce_exchange`]; the flag fences in [`serve`]) | [`Sim::barrier`] skew; [`TaxLedger::bulk_sync_s`] — the fused twins assert **zero** |
 //! | **Inter-Kernel (data-locality) Tax** | the collective re-reading from HBM what the GEMM just wrote | tiles are pushed the moment they are computed, straight into the consumer's heap slot — no staging of the full partial ([`coordinator::gemm_rs`], [`serve::fused_allreduce_exchange_rows`]) | [`Sim::hbm_roundtrip`]; [`TaxLedger::inter_kernel_s`] |
 //!
+//! The price of eliminating the Bulk-Synchronous Tax is dozens of
+//! hand-rolled flag handshakes where one barrier used to be; the
+//! [`analysis`] sanitizer machine-checks every one of them
+//! (happens-before replay + static lint, `docs/ANALYSIS.md`).
+//!
 //! ## Workload → DES twin → figure
 //!
 //! Every fused pattern ships three times: a functional coordinator
@@ -44,6 +49,11 @@
 //! * [`iris`] — the RMA substrate (symmetric heap, remote load/store,
 //!   signal flags, barriers) over a simulated 8-rank node, with typed
 //!   [`iris::IrisError`]s;
+//! * [`analysis`] — the protocol sanitizer: a dynamic happens-before
+//!   checker (vector-clock replay of recorded runs; zero-cost when off)
+//!   plus a static lint over DES programs, with sanitized-run drivers
+//!   for every shipped protocol ([`analysis::drivers`], the `taxfree
+//!   analyze` subcommand, and `IRIS_SANITIZE=1` serving runs);
 //! * [`collectives`] — BSP collectives (the RCCL-like baseline),
 //!   flag-synchronized fused variants (ragged lengths included), and the
 //!   hierarchical two-tier all-reduce for NIC-bridged multi-node worlds
@@ -79,7 +89,9 @@
 //!
 //! `docs/ARCHITECTURE.md` expands this map (heap layouts, protocol
 //! walk-throughs, the substitution map from the paper's testbed to this
-//! repo); `docs/EXPERIMENTS.md` documents every experiment subcommand.
+//! repo); `docs/EXPERIMENTS.md` documents every experiment subcommand;
+//! `docs/ANALYSIS.md` documents the sanitizer's memory model and
+//! happens-before rules.
 //!
 //! [`TaxLedger::launch_s`]: crate::metrics::TaxLedger::launch_s
 //! [`TaxLedger::bulk_sync_s`]: crate::metrics::TaxLedger::bulk_sync_s
@@ -88,6 +100,7 @@
 //! [`Sim::barrier`]: crate::sim::Sim::barrier
 //! [`Sim::hbm_roundtrip`]: crate::sim::Sim::hbm_roundtrip
 
+pub mod analysis;
 pub mod clock;
 pub mod collectives;
 pub mod config;

@@ -8,9 +8,17 @@
 //!         [--seed N] [--config FILE] [--set section.key=value]... [--json FILE]
 //! taxfree serve [--world N] [--requests N] [--backend native|pjrt]
 //!         [--artifacts DIR] [--seed N]
+//! taxfree analyze [ag_gemm|gemm_rs|flash_decode|allreduce|serve_exchange|
+//!         kv_swap|lint|all] [--world N] [--rounds N] [--nodes N] [--elems N]
+//!         [--rows N]
 //! taxfree selftest [--artifacts DIR]
 //! taxfree help
 //! ```
+//!
+//! `analyze` runs the shipped dataflow protocols under the dynamic
+//! happens-before checker and prints every finding (see
+//! `docs/ANALYSIS.md`); `serve` additionally honors `IRIS_SANITIZE=1` to
+//! sanitize a full serving run.
 
 use taxfree::config::ExperimentConfig;
 use taxfree::experiments;
@@ -24,6 +32,7 @@ fn main() {
     let code = match args.first().map(String::as_str) {
         Some("experiments") => cmd_experiments(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("analyze") => cmd_analyze(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
         Some("selftest") => cmd_selftest(&args[1..]),
         Some("help") | None => {
@@ -45,7 +54,17 @@ fn print_help() {
          \n\
          USAGE:\n  taxfree experiments <fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|batch_decode|multinode|serve_slo|autotune|all> [options]\n\
          \x20 taxfree serve [--world N] [--requests N] [--backend native|pjrt] [--artifacts DIR]\n\
+         \x20 taxfree analyze [ag_gemm|gemm_rs|flash_decode|allreduce|serve_exchange|kv_swap|lint|all] [options]\n\
          \x20 taxfree selftest [--artifacts DIR]\n\
+         \n\
+         OPTIONS (analyze):\n\
+         \x20 --world N              ranks to run each protocol over (default 4)\n\
+         \x20 --rounds N             protocol rounds per run (default 2)\n\
+         \x20 --nodes N              split --world across N nodes (default 1)\n\
+         \x20 --elems N              collective payload elements (default 4096)\n\
+         \x20 --rows N               rows per serve-exchange slot (default 4)\n\
+         \x20 (exit 1 if the happens-before checker or lint reports anything;\n\
+         \x20 `IRIS_SANITIZE=1 taxfree serve ...` sanitizes a serving run)\n\
          \n\
          OPTIONS (experiments):\n\
          \x20 --iters N              simulated iterations per point (default 50)\n\
@@ -260,6 +279,138 @@ fn cmd_experiments(args: &[String]) -> i32 {
         }
     }
     0
+}
+
+/// `taxfree analyze [target]` — run the shipped dataflow protocols under
+/// the dynamic happens-before checker ([`taxfree::analysis::hb`]) and
+/// print every finding, or `analyze lint` to run the static program lint
+/// over the DES twins. Exit code 1 when anything fires — the CLI face of
+/// `tests/protocol_sanity.rs` (see `docs/ANALYSIS.md`).
+fn cmd_analyze(args: &[String]) -> i32 {
+    use taxfree::analysis::{drivers, Report};
+    use taxfree::coordinator::{AgGemmStrategy, FlashDecodeStrategy, GemmRsStrategy};
+    use taxfree::fabric::Topology;
+
+    let (pos, opts) = match parse_opts(args) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let which = pos.first().map(String::as_str).unwrap_or("all");
+    let world: usize = opts.flags.get("world").map(|s| s.parse().unwrap_or(4)).unwrap_or(4);
+    let rounds: u64 = opts.flags.get("rounds").map(|s| s.parse().unwrap_or(2)).unwrap_or(2);
+    let nodes: usize = opts.flags.get("nodes").map(|s| s.parse().unwrap_or(1)).unwrap_or(1);
+    let elems: usize =
+        opts.flags.get("elems").map(|s| s.parse().unwrap_or(4096)).unwrap_or(4096);
+    let rows: usize = opts.flags.get("rows").map(|s| s.parse().unwrap_or(4)).unwrap_or(4);
+    if world == 0 || nodes == 0 || world % nodes != 0 {
+        eprintln!("--nodes must divide --world (got world={world}, nodes={nodes})");
+        return 2;
+    }
+    let topo = Topology::hierarchical(nodes, world / nodes);
+
+    let mut dirty = 0usize;
+    let mut show = |name: String, r: Report| {
+        if r.is_clean() {
+            println!("{name:<32} clean ({} events)", r.events);
+        } else {
+            dirty += r.findings.len();
+            println!("{name:<32} {} finding(s) over {} events", r.findings.len(), r.events);
+            for f in &r.findings {
+                println!("    {f}");
+            }
+        }
+    };
+
+    let all = which == "all";
+    let mut matched = false;
+    if all || which == "ag_gemm" {
+        matched = true;
+        for s in AgGemmStrategy::ALL {
+            let name = format!("ag_gemm/{}/w{world}", s.name());
+            show(name, drivers::sanitize_ag_gemm(s, world, rounds));
+        }
+    }
+    if all || which == "gemm_rs" {
+        matched = true;
+        for s in GemmRsStrategy::ALL {
+            let name = format!("gemm_rs/{}/w{world}", s.name());
+            show(name, drivers::sanitize_gemm_rs(s, world, rounds));
+        }
+    }
+    if all || which == "flash_decode" {
+        matched = true;
+        for s in FlashDecodeStrategy::ALL {
+            let name = format!("flash_decode/{}/w{world}", s.name());
+            show(name, drivers::sanitize_flash_decode(s, world, rounds));
+        }
+    }
+    if all || which == "allreduce" {
+        matched = true;
+        let name = format!("hier_allreduce/{nodes}x{}", world / nodes);
+        show(name, drivers::sanitize_hier_allreduce(&topo, elems, rounds));
+    }
+    if all || which == "serve_exchange" {
+        matched = true;
+        let name = format!("serve_exchange/{nodes}x{}/r{rows}", world / nodes);
+        show(name, drivers::sanitize_serve_exchange(&topo, elems, rows, rounds));
+    }
+    if all || which == "kv_swap" {
+        matched = true;
+        // tiny() has 4 KV heads; larger worlds would leave ranks headless
+        let w = world.min(4);
+        show(format!("kv_swap/w{w}"), drivers::sanitize_kv_swap(w));
+    }
+    if all || which == "lint" {
+        matched = true;
+        use taxfree::analysis::lint::lint_program;
+        use taxfree::config::{AgGemmConfig, FlashDecodeConfig, GemmRsConfig};
+        let hw = taxfree::config::presets::mi300x();
+        let mut lint_of = |name: String, r: &taxfree::sim::SimResult| {
+            let fs = lint_program(world, &r.ops);
+            if fs.is_empty() {
+                println!("{name:<32} lint clean ({} ops)", r.ops.len());
+            } else {
+                dirty += fs.len();
+                println!("{name:<32} {} lint finding(s)", fs.len());
+                for f in &fs {
+                    println!("    {f}");
+                }
+            }
+        };
+        for s in AgGemmStrategy::ALL {
+            let r = taxfree::workloads::ag_gemm::simulate(&AgGemmConfig::tiny(world), &hw, s, 7);
+            lint_of(format!("lint/ag_gemm/{}", s.name()), &r);
+        }
+        for s in GemmRsStrategy::ALL {
+            let r = taxfree::workloads::gemm_rs::simulate(&GemmRsConfig::tiny(world), &hw, s, 7);
+            lint_of(format!("lint/gemm_rs/{}", s.name()), &r);
+        }
+        for s in FlashDecodeStrategy::ALL {
+            let r = taxfree::workloads::flash_decode::simulate(
+                &FlashDecodeConfig::tiny(world),
+                &hw,
+                s,
+                7,
+            );
+            lint_of(format!("lint/flash_decode/{}", s.name()), &r);
+        }
+    }
+    if !matched {
+        eprintln!(
+            "unknown analyze target: {which} (want ag_gemm|gemm_rs|flash_decode|allreduce|serve_exchange|kv_swap|lint|all)"
+        );
+        return 2;
+    }
+    if dirty > 0 {
+        eprintln!("\n{dirty} finding(s) — protocol sanitation FAILED");
+        1
+    } else {
+        println!("\nall analyzed protocols clean");
+        0
+    }
 }
 
 fn cmd_serve(args: &[String]) -> i32 {

@@ -201,7 +201,7 @@ pub fn build_serve_heap(cfg: &TransformerConfig) -> Arc<SymmetricHeap> {
             .buffer(bufs.gather, 2 * cfg.world * slot)
             .flags(bufs.gather_flags, cfg.world);
     }
-    Arc::new(b.build())
+    Arc::new(b.build().expect("static serve heap layout"))
 }
 
 /// Build this rank's (main, swap) KV page pools over the serving heap's
@@ -247,13 +247,32 @@ where
     cfg.validate().expect("invalid TransformerConfig");
     validate_requests(cfg, &requests)?;
     let heap = build_serve_heap(cfg);
+    // IRIS_SANITIZE=1 runs the whole serving node under the dynamic
+    // happens-before checker (docs/ANALYSIS.md): findings go to stderr
+    // after the run, even when a rank failed — that is when the replay is
+    // most useful.
+    let sanitize = std::env::var("IRIS_SANITIZE").is_ok_and(|v| v == "1");
+    if sanitize {
+        heap.enable_sanitizer();
+    }
     let cfg2 = cfg.clone();
     let t0 = crate::clock::WallTimer::start();
-    let outs = run_node(heap, move |ctx| {
+    let outs = run_node(Arc::clone(&heap), move |ctx| {
         let compute = factory(ctx.rank());
         engine_body(&ctx, &cfg2, &compute, &requests)
     });
     let wall_s = t0.elapsed_s();
+    if let Some(rec) = heap.recorder() {
+        let report = crate::analysis::hb::analyze(heap.world(), &rec.events());
+        eprintln!(
+            "IRIS_SANITIZE: replayed {} events, {} finding(s)",
+            report.events,
+            report.findings.len()
+        );
+        for f in &report.findings {
+            eprintln!("  {f}");
+        }
+    }
     let results = collect_node_outcomes(outs)?;
     let total_tokens = results.iter().map(|r| r.tokens).sum();
     Ok(ServeReport { results, total_tokens, wall_s })

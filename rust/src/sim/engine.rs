@@ -20,8 +20,11 @@
 //!
 //! Strategies build a program through the builder methods
 //! ([`Sim::launch`], [`Sim::compute`], [`Sim::push`], [`Sim::pull`],
-//! [`Sim::multipush`], [`Sim::barrier`], [`Sim::hbm_roundtrip`]) and then
-//! call [`Sim::run`].
+//! [`Sim::multipush`], [`Sim::barrier`], [`Sim::hbm_roundtrip`], and the
+//! explicit flag primitives [`Sim::signal`] / [`Sim::wait_flag_ge`]) and
+//! then call [`Sim::run`]. The finished program is also a data structure:
+//! [`Sim::ops`] / [`SimResult::ops`] expose it as an [`Op`] list for the
+//! static protocol lint ([`crate::analysis::lint`]).
 
 use std::collections::BinaryHeap;
 
@@ -42,8 +45,11 @@ pub type TaskId = usize;
 /// exploit.
 const PUSH_ISSUER_OCCUPANCY: f64 = 0.15;
 
-#[derive(Debug, Clone, PartialEq)]
-enum Kind {
+/// The operation a task performs — public so the static lint
+/// ([`crate::analysis::lint`]) can walk a program's op list
+/// ([`Sim::ops`] / [`SimResult::ops`]) without running a schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
     /// Host dispatch: occupies the rank stream for the launch overhead.
     Launch,
     /// Kernel / tile compute on the rank stream.
@@ -56,12 +62,38 @@ enum Kind {
     Pull { src: usize, dst: usize, bytes: u64 },
     /// Broadcast push to all peers, each tier at its own bandwidth.
     MultiPush { src: usize, bytes_per_dst: u64 },
+    /// Post one +1 signal onto flag cell `(dst, flags, idx)` — the DES
+    /// image of [`crate::iris::RankCtx::signal`]. Zero duration on the
+    /// posting rank's stream; an [`OpKind::Wait`] on the cell observes
+    /// its completion time.
+    Signal { dst: usize, flags: &'static str, idx: usize },
+    /// Block the owning rank's stream until `threshold` signals have
+    /// completed on flag cell `(rank, flags, idx)` — the DES image of
+    /// [`crate::iris::RankCtx::wait_flag_ge`].
+    Wait { flags: &'static str, idx: usize, threshold: u64 },
     /// Zero-duration arrival marker on the rank stream.
     BarrierArrive,
     /// Join node (no resources): completes when all arrivals complete.
     BarrierJoin,
     /// Resumption on the rank stream; its wait is the Bulk Synchronous Tax.
     BarrierExit,
+}
+
+/// One program operation with its dependency edges — the static view of
+/// a task that [`crate::analysis::lint::lint_program`] walks. Obtained
+/// pre-run from [`Sim::ops`] or post-run from [`SimResult::ops`].
+#[derive(Debug, Clone)]
+pub struct Op {
+    /// What the operation does (and to whom).
+    pub kind: OpKind,
+    /// Rank whose stream it occupies (None for barrier joins).
+    pub rank: Option<usize>,
+    /// Stream within the rank (0 = compute queue, 1 = comm kernels).
+    pub stream: usize,
+    /// Earlier operations this one depends on.
+    pub deps: Vec<TaskId>,
+    /// Human-readable label.
+    pub label: &'static str,
 }
 
 /// Streams per rank: a real GPU runs concurrent kernels (e.g. the push
@@ -71,7 +103,7 @@ pub const STREAMS_PER_RANK: usize = 2;
 
 #[derive(Debug, Clone)]
 struct Task {
-    kind: Kind,
+    kind: OpKind,
     /// Rank whose stream this task occupies (None for BarrierJoin).
     rank: Option<usize>,
     /// Stream within the rank (0 = compute queue, 1 = comm kernel queue).
@@ -107,6 +139,10 @@ pub struct SimResult {
     pub rank_busy: Vec<VTime>,
     /// Per-rank idle attributed per category [launch, bulk_sync, flag].
     pub rank_idle: Vec<[VTime; 3]>,
+    /// The program that produced this result, one [`Op`] per task — the
+    /// workload twins return only a `SimResult`, so the op list rides
+    /// along for [`crate::analysis::lint::lint_program`].
+    pub ops: Vec<Op>,
 }
 
 impl SimResult {
@@ -176,13 +212,13 @@ impl Sim {
         }
     }
 
-    fn add(&mut self, kind: Kind, rank: Option<usize>, dur: VTime, deps: &[TaskId], label: &'static str) -> TaskId {
+    fn add(&mut self, kind: OpKind, rank: Option<usize>, dur: VTime, deps: &[TaskId], label: &'static str) -> TaskId {
         self.add_on(kind, rank, 0, dur, deps, label)
     }
 
     fn add_on(
         &mut self,
-        kind: Kind,
+        kind: OpKind,
         rank: Option<usize>,
         stream: usize,
         dur: VTime,
@@ -203,13 +239,13 @@ impl Sim {
     /// Host kernel dispatch (Launch Tax carrier).
     pub fn launch(&mut self, rank: usize, label: &'static str, deps: &[TaskId]) -> TaskId {
         let dur = self.hw.launch_overhead_s;
-        self.add(Kind::Launch, Some(rank), dur, deps, label)
+        self.add(OpKind::Launch, Some(rank), dur, deps, label)
     }
 
     /// Compute on the rank's default stream for `dur` seconds.
     pub fn compute(&mut self, rank: usize, label: &'static str, dur: VTime, deps: &[TaskId]) -> TaskId {
         assert!(dur >= 0.0 && dur.is_finite(), "bad duration {dur}");
-        self.add(Kind::Compute, Some(rank), dur, deps, label)
+        self.add(OpKind::Compute, Some(rank), dur, deps, label)
     }
 
     /// Compute on an explicit stream of the rank (stream 1 = a concurrent
@@ -223,13 +259,13 @@ impl Sim {
         deps: &[TaskId],
     ) -> TaskId {
         assert!(dur >= 0.0 && dur.is_finite(), "bad duration {dur}");
-        self.add_on(Kind::Compute, Some(rank), stream, dur, deps, label)
+        self.add_on(OpKind::Compute, Some(rank), stream, dur, deps, label)
     }
 
     /// Producer→consumer hand-off through HBM (write + read back).
     pub fn hbm_roundtrip(&mut self, rank: usize, bytes: u64, deps: &[TaskId]) -> TaskId {
         let dur = cost::hbm_roundtrip_time(&self.hw, bytes);
-        self.add(Kind::HbmRoundTrip { bytes }, Some(rank), dur, deps, "hbm_roundtrip")
+        self.add(OpKind::HbmRoundTrip { bytes }, Some(rank), dur, deps, "hbm_roundtrip")
     }
 
     /// Remote store of `bytes` from `src` to `dst` (store efficiency).
@@ -253,7 +289,7 @@ impl Sim {
         assert_ne!(src, dst, "push to self");
         let dur =
             cost::pair_transfer_time(&self.hw, &self.topo, src, dst, bytes, self.hw.rma_store_eff);
-        self.add_on(Kind::Push { src, dst, bytes }, Some(src), stream, dur, deps, "push")
+        self.add_on(OpKind::Push { src, dst, bytes }, Some(src), stream, dur, deps, "push")
     }
 
     /// Remote load of `bytes` by `dst` from `src` (load efficiency).
@@ -262,7 +298,7 @@ impl Sim {
         assert_ne!(src, dst, "pull from self");
         let dur =
             cost::pair_transfer_time(&self.hw, &self.topo, src, dst, bytes, self.hw.rma_load_eff);
-        self.add(Kind::Pull { src, dst, bytes }, Some(dst), dur, deps, "pull")
+        self.add(OpKind::Pull { src, dst, bytes }, Some(dst), dur, deps, "pull")
     }
 
     /// Broadcast `bytes_per_dst` from `src` to every peer at aggregate
@@ -282,7 +318,7 @@ impl Sim {
     ) -> TaskId {
         let dur =
             cost::multipush_time_topo(&self.hw, &self.topo, bytes_per_dst, self.hw.rma_store_eff);
-        self.add_on(Kind::MultiPush { src, bytes_per_dst }, Some(src), stream, dur, deps, "multipush")
+        self.add_on(OpKind::MultiPush { src, bytes_per_dst }, Some(src), stream, dur, deps, "multipush")
     }
 
     /// Global barrier: rank `r` arrives after `arrivals[r]`; returns the
@@ -291,11 +327,62 @@ impl Sim {
     pub fn barrier(&mut self, arrivals: &[TaskId]) -> Vec<TaskId> {
         assert_eq!(arrivals.len(), self.world, "one arrival per rank");
         let arrive: Vec<TaskId> = (0..self.world)
-            .map(|r| self.add(Kind::BarrierArrive, Some(r), 0.0, &[arrivals[r]], "barrier_arrive"))
+            .map(|r| self.add(OpKind::BarrierArrive, Some(r), 0.0, &[arrivals[r]], "barrier_arrive"))
             .collect();
-        let join = self.add(Kind::BarrierJoin, None, 0.0, &arrive, "barrier_join");
+        let join = self.add(OpKind::BarrierJoin, None, 0.0, &arrive, "barrier_join");
         (0..self.world)
-            .map(|r| self.add(Kind::BarrierExit, Some(r), 0.0, &[join], "barrier_exit"))
+            .map(|r| self.add(OpKind::BarrierExit, Some(r), 0.0, &[join], "barrier_exit"))
+            .collect()
+    }
+
+    /// Post a +1 signal from `src` onto flag cell `(dst, flags, idx)`
+    /// (the DES image of [`crate::iris::RankCtx::signal`]): zero duration
+    /// on `src`'s stream; its completion is what a [`Sim::wait_flag_ge`]
+    /// on the cell observes.
+    pub fn signal(
+        &mut self,
+        src: usize,
+        dst: usize,
+        flags: &'static str,
+        idx: usize,
+        deps: &[TaskId],
+    ) -> TaskId {
+        assert!(dst < self.world, "signal dst {dst} out of range");
+        self.add(OpKind::Signal { dst, flags, idx }, Some(src), 0.0, deps, "signal")
+    }
+
+    /// Block rank `rank`'s stream until `threshold` signals have landed
+    /// on flag cell `(rank, flags, idx)` (the DES image of
+    /// [`crate::iris::RankCtx::wait_flag_ge`]); blocked stream time is
+    /// attributed as flag-wait idle. A wait no schedule can satisfy —
+    /// fewer than `threshold` [`Sim::signal`]s ever target the cell —
+    /// fails the run, and is exactly what
+    /// [`crate::analysis::lint::lint_program`] rejects statically.
+    pub fn wait_flag_ge(
+        &mut self,
+        rank: usize,
+        flags: &'static str,
+        idx: usize,
+        threshold: u64,
+        deps: &[TaskId],
+    ) -> TaskId {
+        assert!(threshold >= 1, "wait threshold must be >= 1");
+        self.add(OpKind::Wait { flags, idx, threshold }, Some(rank), 0.0, deps, "wait_flag_ge")
+    }
+
+    /// The program as built so far, one [`Op`] per task — the input to
+    /// [`crate::analysis::lint::lint_program`] for pre-run linting (a
+    /// completed run carries the same list in [`SimResult::ops`]).
+    pub fn ops(&self) -> Vec<Op> {
+        self.tasks
+            .iter()
+            .map(|t| Op {
+                kind: t.kind,
+                rank: t.rank,
+                stream: t.stream,
+                deps: t.deps.clone(),
+                label: t.label,
+            })
             .collect()
     }
 
@@ -369,22 +456,49 @@ impl Sim {
             }
         }
 
+        // signal/wait bookkeeping: completion times of the signals landed
+        // on each flag cell (rank, flags, idx), plus waits parked until
+        // enough signals complete
+        let mut flag_ends =
+            std::collections::HashMap::<(usize, &'static str, usize), Vec<f64>>::new();
+        let mut parked =
+            std::collections::HashMap::<(usize, &'static str, usize), Vec<TaskId>>::new();
+        // completion time of the k-th (1-based) signal on a cell
+        fn kth_end(ends: &[f64], k: u64) -> f64 {
+            let mut v = ends.to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).expect("finite times"));
+            v[k as usize - 1]
+        }
+
         let mut completed = 0usize;
-        while let Some(Ready(ready, id)) = heap.pop() {
+        while let Some(Ready(mut ready, id)) = heap.pop() {
             debug_assert!(!done[id]);
             let task = &self.tasks[id];
 
+            // a wait pops once its deps are met; if its flag cell has not
+            // yet accumulated `threshold` completed signals it parks until
+            // the signal that satisfies it completes
+            if let OpKind::Wait { flags, idx, threshold } = &task.kind {
+                let cell = (task.rank.expect("wait occupies a rank stream"), *flags, *idx);
+                let ends = flag_ends.get(&cell).map(Vec::as_slice).unwrap_or(&[]);
+                if (ends.len() as u64) < *threshold {
+                    parked.entry(cell).or_default().push(id);
+                    continue;
+                }
+                ready = ready.max(kth_end(ends, *threshold));
+            }
+
             // resource availability
             let res_free = match (&task.kind, task.rank) {
-                (Kind::Push { src, dst, .. }, _) => {
+                (OpKind::Push { src, dst, .. }, _) => {
                     let lf = *link_free.get(&link_key(*src, *dst)).unwrap_or(&0.0);
                     rank_free[sk(*src, task.stream)].max(lf)
                 }
-                (Kind::Pull { src, dst, .. }, _) => {
+                (OpKind::Pull { src, dst, .. }, _) => {
                     let lf = *link_free.get(&link_key(*src, *dst)).unwrap_or(&0.0);
                     rank_free[sk(*dst, task.stream)].max(lf)
                 }
-                (Kind::BarrierJoin, _) => 0.0,
+                (OpKind::BarrierJoin, _) => 0.0,
                 (_, Some(r)) => rank_free[sk(r, task.stream)],
                 (_, None) => 0.0,
             };
@@ -399,7 +513,7 @@ impl Sim {
                 let gap = (start - rank_free[sk(r, task.stream)]).max(0.0);
                 if gap > 0.0 {
                     match task.kind {
-                        Kind::BarrierExit => {
+                        OpKind::BarrierExit => {
                             ledger.bulk_sync_s += gap;
                             rank_idle[r][1] += gap;
                         }
@@ -413,7 +527,7 @@ impl Sim {
 
             // busy / tax attribution of the task body + resource updates
             match &task.kind {
-                Kind::Launch => {
+                OpKind::Launch => {
                     ledger.launches += 1;
                     ledger.launch_s += task.dur;
                     if let Some(r) = task.rank {
@@ -421,21 +535,21 @@ impl Sim {
                         rank_free[sk(r, task.stream)] = end;
                     }
                 }
-                Kind::Compute | Kind::BarrierArrive | Kind::BarrierExit => {
+                OpKind::Compute | OpKind::Wait { .. } | OpKind::BarrierArrive | OpKind::BarrierExit => {
                     if let Some(r) = task.rank {
                         rank_busy[r] += task.dur;
                         ledger.busy_s += task.dur;
                         rank_free[sk(r, task.stream)] = end;
                     }
                 }
-                Kind::HbmRoundTrip { bytes } => {
+                OpKind::HbmRoundTrip { bytes } => {
                     ledger.inter_kernel_s += task.dur;
                     ledger.inter_kernel_bytes += bytes;
                     if let Some(r) = task.rank {
                         rank_free[sk(r, task.stream)] = end;
                     }
                 }
-                Kind::Push { src, dst, bytes } => {
+                OpKind::Push { src, dst, bytes } => {
                     ledger.fabric_bytes += bytes;
                     if !self.topo.same_node(*src, *dst) {
                         ledger.nic_bytes += bytes;
@@ -452,7 +566,7 @@ impl Sim {
                     rank_free[sk(*src, task.stream)] = start + issue;
                     link_free.insert(link_key(*src, *dst), start + wire);
                 }
-                Kind::Pull { src, dst, bytes } => {
+                OpKind::Pull { src, dst, bytes } => {
                     ledger.fabric_bytes += bytes;
                     if !self.topo.same_node(*src, *dst) {
                         ledger.nic_bytes += bytes;
@@ -466,7 +580,7 @@ impl Sim {
                     rank_free[sk(*dst, task.stream)] = end;
                     link_free.insert(link_key(*src, *dst), start + wire);
                 }
-                Kind::MultiPush { src, bytes_per_dst } => {
+                OpKind::MultiPush { src, bytes_per_dst } => {
                     let cross_peers = (world - self.topo.gpus_per_node()) as u64;
                     ledger.fabric_bytes += bytes_per_dst * (world as u64 - 1);
                     ledger.nic_bytes += bytes_per_dst * cross_peers;
@@ -500,7 +614,38 @@ impl Sim {
                         }
                     }
                 }
-                Kind::BarrierJoin => {}
+                OpKind::Signal { dst, flags, idx } => {
+                    if let Some(r) = task.rank {
+                        rank_free[sk(r, task.stream)] = end;
+                    }
+                    let cell = (*dst, *flags, *idx);
+                    let ends = flag_ends.entry(cell).or_default();
+                    ends.push(end);
+                    let count = ends.len() as u64;
+                    // wake every parked waiter this signal satisfies
+                    if let Some(waiters) = parked.get_mut(&cell) {
+                        let mut i = 0;
+                        while i < waiters.len() {
+                            let wid = waiters[i];
+                            let th = match self.tasks[wid].kind {
+                                OpKind::Wait { threshold, .. } => threshold,
+                                _ => unreachable!("only waits park"),
+                            };
+                            if th <= count {
+                                waiters.swap_remove(i);
+                                let dep_ready = self.tasks[wid]
+                                    .deps
+                                    .iter()
+                                    .map(|&d| times[d].end)
+                                    .fold(0.0f64, f64::max);
+                                heap.push(Ready(dep_ready.max(kth_end(ends, th)), wid));
+                            } else {
+                                i += 1;
+                            }
+                        }
+                    }
+                }
+                OpKind::BarrierJoin => {}
             }
 
             if let Some(r) = task.rank {
@@ -520,18 +665,31 @@ impl Sim {
                 }
             }
         }
-        assert_eq!(completed, n, "cycle in sim program: {} tasks never ready", n - completed);
+        assert_eq!(
+            completed,
+            n,
+            "cycle or unsatisfiable wait in sim program: {} tasks never ready",
+            n - completed
+        );
 
         ledger.makespan_s = times.iter().map(|t| t.end).fold(0.0, f64::max);
+        let labels: Vec<&'static str> = self.tasks.iter().map(|t| t.label).collect();
+        let ranks: Vec<Option<usize>> = self.tasks.iter().map(|t| t.rank).collect();
+        let ops: Vec<Op> = self
+            .tasks
+            .into_iter()
+            .map(|t| Op { kind: t.kind, rank: t.rank, stream: t.stream, deps: t.deps, label: t.label })
+            .collect();
         SimResult {
-            labels: self.tasks.iter().map(|t| t.label).collect(),
-            ranks: self.tasks.iter().map(|t| t.rank).collect(),
+            labels,
+            ranks,
             makespan_s: ledger.makespan_s,
             ledger,
             times,
             rank_end,
             rank_busy,
             rank_idle,
+            ops,
         }
     }
 }
@@ -831,6 +989,77 @@ mod tests {
         assert_eq!(r.times[c].start, 0.0);
         assert_eq!(r.times[p].start, 0.0, "streams must not serialize");
         assert_eq!(r.makespan_s, 3.0);
+    }
+
+    #[test]
+    fn wait_observes_signal_completion_time() {
+        let mut s = sim(2);
+        let p = s.compute(0, "produce", 2.0, &[]);
+        let sig = s.signal(0, 1, "tile_ready", 0, &[p]);
+        let w = s.wait_flag_ge(1, "tile_ready", 0, 1, &[]);
+        let c = s.compute(1, "consume", 1.0, &[w]);
+        let r = s.run();
+        assert_eq!(r.times[sig].end, 2.0);
+        assert_eq!(r.times[w].start, 2.0);
+        assert_eq!(r.times[c].start, 2.0);
+        assert_eq!(r.makespan_s, 3.0);
+        // the blocked consumer stream is flag-wait idle
+        assert!((r.ledger.flag_idle_s - 2.0).abs() < 1e-12, "{}", r.ledger.flag_idle_s);
+        assert_eq!(r.rank_idle[1][2], 2.0);
+    }
+
+    #[test]
+    fn wait_threshold_counts_cumulative_signals() {
+        let build = |threshold: u64| {
+            let mut s = sim(3);
+            let a = s.compute(0, "a", 1.0, &[]);
+            s.signal(0, 2, "f", 0, &[a]);
+            let b = s.compute(1, "b", 3.0, &[]);
+            s.signal(1, 2, "f", 0, &[b]);
+            let w = s.wait_flag_ge(2, "f", 0, threshold, &[]);
+            let r = s.run();
+            r.times[w].start
+        };
+        // ge 2 needs both contributors; ge 1 is satisfied by the first
+        assert_eq!(build(2), 3.0);
+        assert_eq!(build(1), 1.0);
+    }
+
+    #[test]
+    fn satisfied_wait_still_respects_dependencies() {
+        let mut s = sim(2);
+        let p = s.compute(0, "p", 1.0, &[]);
+        s.signal(0, 1, "f", 0, &[p]);
+        let own = s.compute(1, "own", 5.0, &[]);
+        let w = s.wait_flag_ge(1, "f", 0, 1, &[own]);
+        let r = s.run();
+        assert_eq!(r.times[w].start, 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsatisfiable wait")]
+    fn unsatisfiable_wait_fails_the_run() {
+        let mut s = sim(2);
+        let p = s.compute(0, "p", 1.0, &[]);
+        s.signal(0, 1, "f", 0, &[p]);
+        s.wait_flag_ge(1, "f", 0, 2, &[]);
+        s.run();
+    }
+
+    #[test]
+    fn signal_wait_ops_are_exposed_to_the_lint() {
+        let mut s = sim(2);
+        let p = s.compute(0, "p", 1.0, &[]);
+        let g = s.signal(0, 1, "f", 3, &[p]);
+        let w = s.wait_flag_ge(1, "f", 3, 1, &[]);
+        let ops = s.ops();
+        assert_eq!(ops.len(), 3);
+        assert_eq!(ops[g].kind, OpKind::Signal { dst: 1, flags: "f", idx: 3 });
+        assert_eq!(ops[w].kind, OpKind::Wait { flags: "f", idx: 3, threshold: 1 });
+        assert_eq!(ops[g].deps, vec![p]);
+        let r = s.run();
+        assert_eq!(r.ops.len(), 3, "the run result carries the same op list");
+        assert_eq!(r.ops[w].rank, Some(1));
     }
 
     #[test]

@@ -15,4 +15,4 @@ pub mod engine;
 pub mod trace;
 
 pub use cost::GemmImpl;
-pub use engine::{Sim, SimResult, TaskId, TaskTime};
+pub use engine::{Op, OpKind, Sim, SimResult, TaskId, TaskTime};

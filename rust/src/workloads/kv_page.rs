@@ -230,7 +230,7 @@ mod tests {
     use crate::iris::HeapBuilder;
 
     fn pool(n_pages: usize, heads: usize) -> KvPagePool {
-        let heap = Arc::new(HeapBuilder::new(1).buffer("pages", n_pages * 2 * heads * 4 * 3).build());
+        let heap = Arc::new(HeapBuilder::new(1).buffer("pages", n_pages * 2 * heads * 4 * 3).build().unwrap());
         KvPagePool::new(heap, 0, "pages", heads, 3, 4, n_pages).expect("pool")
     }
 
@@ -274,7 +274,7 @@ mod tests {
 
     #[test]
     fn misnamed_or_truncated_region_is_typed() {
-        let heap = Arc::new(HeapBuilder::new(1).buffer("pages", 10).build());
+        let heap = Arc::new(HeapBuilder::new(1).buffer("pages", 10).build().unwrap());
         match KvPagePool::new(heap.clone(), 0, "nope", 1, 3, 4, 1) {
             Err(IrisError::UnknownBuffer(b)) => assert_eq!(b, "nope"),
             other => panic!("expected UnknownBuffer, got {other:?}"),
@@ -291,7 +291,7 @@ mod tests {
             HeapBuilder::new(1)
                 .buffer("main", 2 * 2 * 1 * 4 * 3)
                 .buffer("swap", 2 * 2 * 1 * 4 * 3)
-                .build(),
+                .build().unwrap(),
         );
         let mut main = KvPagePool::new(heap.clone(), 0, "main", 1, 3, 4, 2).unwrap();
         let mut swap = KvPagePool::new(heap, 0, "swap", 1, 3, 4, 2).unwrap();
@@ -320,7 +320,7 @@ mod tests {
     fn zero_head_pool_tracks_logical_pages() {
         // an empty head shard's pool still counts pages — the admission
         // signal must be identical on every rank
-        let heap = Arc::new(HeapBuilder::new(1).buffer("pages", 0).build());
+        let heap = Arc::new(HeapBuilder::new(1).buffer("pages", 0).build().unwrap());
         let mut p = KvPagePool::new(heap, 0, "pages", 0, 3, 4, 2).unwrap();
         assert_eq!(p.free_pages(), 2);
         let a = p.alloc().unwrap();

@@ -1381,7 +1381,7 @@ mod tests {
         let heap = Arc::new(
             crate::iris::HeapBuilder::new(1)
                 .buffer("pages", cfg.kv_pages * cfg.kv_page_elems(heads))
-                .build(),
+                .build().unwrap(),
         );
         let pool = Rc::new(RefCell::new(
             KvPagePool::new(heap, 0, "pages", heads, cfg.head_dim, cfg.kv_block, cfg.kv_pages)
@@ -1424,7 +1424,7 @@ mod tests {
         let heads = cfg.n_heads;
         let elems = cfg.kv_pages * cfg.kv_page_elems(heads);
         let heap = Arc::new(
-            crate::iris::HeapBuilder::new(1).buffer("main", elems).buffer("swap", elems).build(),
+            crate::iris::HeapBuilder::new(1).buffer("main", elems).buffer("swap", elems).build().unwrap(),
         );
         let pool = |buf: &str| {
             Rc::new(RefCell::new(
@@ -1482,7 +1482,7 @@ mod tests {
         let heap = Arc::new(
             crate::iris::HeapBuilder::new(1)
                 .buffer("pages", cfg.kv_pages * cfg.kv_page_elems(heads))
-                .build(),
+                .build().unwrap(),
         );
         let pool = Rc::new(RefCell::new(
             KvPagePool::new(heap, 0, "pages", heads, cfg.head_dim, cfg.kv_block, cfg.kv_pages)

@@ -29,7 +29,7 @@ use taxfree::workloads::transformer::{
 fn dead_producer_hits_timeout_not_hang() {
     // rank 1 "dies" (never pushes); consumers must get a typed timeout
     let world = 3;
-    let heap = Arc::new(HeapBuilder::new(world).buffer("b", 4).flags("f", world).build());
+    let heap = Arc::new(HeapBuilder::new(world).buffer("b", 4).flags("f", world).build().unwrap());
     let outcomes = run_node_with_timeout(heap, Duration::from_millis(100), move |ctx| {
         if ctx.rank() == 1 {
             return Ok(0); // dead rank: contributes nothing
@@ -58,7 +58,7 @@ fn misnamed_buffer_is_recoverable_per_rank() {
     // a typo'd buffer name in one engine surfaces as a typed error on that
     // rank; the other ranks' correct traffic is unaffected
     let world = 2;
-    let heap = Arc::new(HeapBuilder::new(world).buffer("inbox", 4).flags("f", 1).build());
+    let heap = Arc::new(HeapBuilder::new(world).buffer("inbox", 4).flags("f", 1).build().unwrap());
     let outcomes = run_node(heap, move |ctx| {
         if ctx.rank() == 0 {
             // correct protocol half
@@ -81,7 +81,7 @@ fn slow_rank_delays_but_never_corrupts() {
     let seg = 8;
     for slow_rank in 0..world {
         let heap = Arc::new(
-            HeapBuilder::new(world).buffer("ag", world * seg).flags("agf", world).build(),
+            HeapBuilder::new(world).buffer("ag", world * seg).flags("agf", world).build().unwrap(),
         );
         let outs = run_node(heap, move |ctx| {
             if ctx.rank() == slow_rank {
@@ -105,7 +105,7 @@ fn interleaved_waiters_make_progress() {
     // Any flag-ordering bug deadlocks; the timeout converts that to a
     // failure instead of a hung suite.
     let world = 6;
-    let heap = Arc::new(HeapBuilder::new(world).flags("chain", world).build());
+    let heap = Arc::new(HeapBuilder::new(world).flags("chain", world).build().unwrap());
     let outs = run_node_with_timeout(heap, Duration::from_secs(10), move |ctx| {
         let r = ctx.rank();
         if r == 0 {
@@ -130,7 +130,7 @@ fn flag_counts_are_conserved_under_contention() {
     // hammer one flag from every rank; the final count must be exact
     let world = 8;
     let per_rank = 500u64;
-    let heap = Arc::new(HeapBuilder::new(world).flags("c", 1).build());
+    let heap = Arc::new(HeapBuilder::new(world).flags("c", 1).build().unwrap());
     let counter = Arc::new(AtomicUsize::new(0));
     let c2 = Arc::clone(&counter);
     let outs = run_node(heap, move |ctx| {
@@ -156,7 +156,7 @@ fn attn_exchange_heap(world: usize, seg_max: usize) -> Arc<taxfree::iris::Symmet
             .flags(ATTN_EXCHANGE.data_flags, world)
             .buffer(ATTN_EXCHANGE.gather, 2 * world * seg_max)
             .flags(ATTN_EXCHANGE.gather_flags, world)
-            .build(),
+            .build().unwrap(),
     )
 }
 
@@ -202,7 +202,7 @@ fn missized_buffer_in_attention_exchange_reports_typed() {
             .flags(ATTN_EXCHANGE.data_flags, world)
             .buffer(ATTN_EXCHANGE.gather, 2 * world * seg_max)
             .flags(ATTN_EXCHANGE.gather_flags, world)
-            .build(),
+            .build().unwrap(),
     );
     let outcomes = run_node(heap, move |ctx| {
         let parts = partition(n, ctx.world());
@@ -489,7 +489,7 @@ fn rank_dying_mid_gemm_rs_surfaces_typed_timeout() {
 #[test]
 #[should_panic(expected = "injected engine failure")]
 fn engine_panic_propagates_to_caller() {
-    let heap = Arc::new(HeapBuilder::new(3).build());
+    let heap = Arc::new(HeapBuilder::new(3).build().unwrap());
     run_node(heap, |ctx| {
         if ctx.rank() == 2 {
             panic!("injected engine failure");

@@ -1,0 +1,403 @@
+//! Protocol sanity: every shipped fine-grained protocol runs under the
+//! dynamic happens-before checker with **zero findings**, and seeded
+//! protocol mutations prove the checker actually detects each defect
+//! class (no false negatives).
+//!
+//! Two halves:
+//!
+//! * **Zero-finding regression** — the [`taxfree::analysis::drivers`]
+//!   harness runs the real functional protocols (all three coordinators,
+//!   the hierarchical all-reduce, the fused serve exchanges incl. the
+//!   M-row variant, the paged-KV swap path) across world sizes {2, 4, 5}
+//!   and 2-node topologies, multi-round, and requires a clean report.
+//! * **Mutation kill suite** — hand-written protocols against the same
+//!   instrumented heap with one deliberate defect each: dropped signal,
+//!   wrong wait threshold, early `flags_reset`, skipped slot-reuse
+//!   acquire (the parity/double-buffer bug), a store never published by
+//!   any signal, and a slot overrun. Rank steps are sequenced with a
+//!   `std::sync::Barrier` *outside* the heap — real-time order the
+//!   happens-before model cannot see — so each mutation deterministically
+//!   produces its diagnostic class.
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use taxfree::analysis::drivers::{
+    sanitize_ag_gemm, sanitize_flash_decode, sanitize_gemm_rs, sanitize_hier_allreduce,
+    sanitize_kv_swap, sanitize_serve_exchange,
+};
+use taxfree::analysis::{hb, FindingClass, Report};
+use taxfree::coordinator::ag_gemm::AgGemmStrategy;
+use taxfree::coordinator::flash_decode::FlashDecodeStrategy;
+use taxfree::coordinator::gemm_rs::GemmRsStrategy;
+use taxfree::fabric::Topology;
+use taxfree::iris::{
+    run_node, run_node_with_timeout, HeapBuilder, IrisError, SymmetricHeap,
+};
+
+fn assert_clean(name: &str, r: &Report) {
+    assert!(r.events > 0, "{name}: recorder saw no events");
+    assert!(
+        r.is_clean(),
+        "{name}: expected zero findings, got {}",
+        r.findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("; ")
+    );
+}
+
+// ---------------- zero-finding regression ----------------
+
+#[test]
+fn ag_gemm_protocols_are_race_free() {
+    for world in [2usize, 4, 5] {
+        for s in AgGemmStrategy::ALL {
+            let r = sanitize_ag_gemm(s, world, 2);
+            assert_clean(&format!("ag_gemm/{}/w{world}", s.name()), &r);
+        }
+    }
+}
+
+#[test]
+fn gemm_rs_protocols_are_race_free() {
+    for world in [2usize, 4, 5] {
+        for s in GemmRsStrategy::ALL {
+            let r = sanitize_gemm_rs(s, world, 2);
+            assert_clean(&format!("gemm_rs/{}/w{world}", s.name()), &r);
+        }
+    }
+}
+
+#[test]
+fn flash_decode_protocols_are_race_free() {
+    for world in [2usize, 4, 5] {
+        for s in FlashDecodeStrategy::ALL {
+            let r = sanitize_flash_decode(s, world, 2);
+            assert_clean(&format!("flash_decode/{}/w{world}", s.name()), &r);
+        }
+    }
+}
+
+#[test]
+fn hierarchical_allreduce_is_race_free() {
+    // single-node cliques plus real 2-node fabrics (the NIC-tier chain)
+    for topo in [
+        Topology::clique(2),
+        Topology::clique(4),
+        Topology::clique(5),
+        Topology::hierarchical(2, 2),
+        Topology::hierarchical(2, 3),
+    ] {
+        let name = format!("hier_allreduce/{}x{}", topo.nodes(), topo.gpus_per_node());
+        let r = sanitize_hier_allreduce(&topo, 13, 2);
+        assert_clean(&name, &r);
+    }
+}
+
+#[test]
+fn serve_fused_exchange_is_race_free() {
+    // single-row exchange (decode shape), many rounds back-to-back: the
+    // barrier-free parity-slot reuse is exactly what multi-round probes
+    for world in [2usize, 4, 5] {
+        let topo = Topology::clique(world);
+        let r = sanitize_serve_exchange(&topo, 13, 1, 6);
+        assert_clean(&format!("serve_exchange/w{world}"), &r);
+    }
+}
+
+#[test]
+fn serve_fused_exchange_rows_is_race_free() {
+    // M-row variant (prefill-chunk / batched-decode shape), incl. 2-node
+    for (topo, rows) in [
+        (Topology::clique(4), 3usize),
+        (Topology::hierarchical(2, 2), 4),
+        (Topology::hierarchical(2, 3), 2),
+    ] {
+        let name = format!(
+            "serve_exchange_rows/{}x{}/r{rows}",
+            topo.nodes(),
+            topo.gpus_per_node()
+        );
+        let r = sanitize_serve_exchange(&topo, 11, rows, 5);
+        assert_clean(&name, &r);
+    }
+}
+
+#[test]
+fn paged_kv_swap_is_race_free() {
+    for world in [2usize, 4] {
+        let r = sanitize_kv_swap(world);
+        assert_clean(&format!("kv_swap/w{world}"), &r);
+    }
+}
+
+// ---------------- mutation kill suite ----------------
+
+/// Replay the heap's recorder into a report.
+fn report_of(heap: &SymmetricHeap) -> Report {
+    let rec = heap.recorder().expect("sanitizer installed");
+    hb::analyze(heap.world(), &rec.events())
+}
+
+/// Classes present in a report, deduplicated.
+fn classes(r: &Report) -> Vec<FindingClass> {
+    let mut cs: Vec<FindingClass> = Vec::new();
+    for f in &r.findings {
+        if !cs.contains(&f.class) {
+            cs.push(f.class);
+        }
+    }
+    cs
+}
+
+/// Mutation 1 — **unpublished store**: the producer pushes a tile into
+/// the consumer's inbox and never issues any releasing signal at all.
+#[test]
+fn mutation_unpublished_store_is_flagged() {
+    let heap =
+        Arc::new(HeapBuilder::new(2).buffer("inbox", 4).build().expect("heap"));
+    heap.enable_sanitizer();
+    let gate = Arc::new(Barrier::new(2));
+    let outs = run_node(Arc::clone(&heap), move |ctx| -> Result<(), IrisError> {
+        if ctx.rank() == 0 {
+            ctx.remote_store(1, "inbox", 0, &[1.0, 2.0, 3.0, 4.0])?;
+            // MUTATION: the publishing `ctx.signal(...)` is deleted
+            gate.wait();
+        } else {
+            gate.wait();
+            let _ = ctx.load_local_vec("inbox", 0, 4)?;
+        }
+        Ok(())
+    });
+    for o in outs {
+        o.expect("no heap errors in this mutant");
+    }
+    let r = report_of(&heap);
+    assert_eq!(classes(&r), [FindingClass::UnpublishedStore], "{:?}", r.findings);
+    assert!(r.findings[0].message.contains("inbox[0..4]"), "{}", r.findings[0]);
+}
+
+/// Mutation 2 — **wrong wait threshold**: two producers feed one inbox
+/// cell; the consumer waits for 1 signal where the protocol needs 2, so
+/// its read of the second slot is not covered by any acquire.
+#[test]
+fn mutation_wrong_threshold_is_flagged_as_race_read() {
+    let heap = Arc::new(
+        HeapBuilder::new(3).buffer("inbox", 2).flags("arrived", 1).build().expect("heap"),
+    );
+    heap.enable_sanitizer();
+    let gate = Arc::new(Barrier::new(3));
+    let outs = run_node(Arc::clone(&heap), move |ctx| -> Result<(), IrisError> {
+        match ctx.rank() {
+            0 => {
+                ctx.remote_store(2, "inbox", 0, &[10.0])?;
+                ctx.signal(2, "arrived", 0)?;
+                gate.wait(); // consumer waits (sees 1 signal)
+                gate.wait(); // producer 1 stores + signals
+                gate.wait(); // consumer reads both slots
+            }
+            1 => {
+                gate.wait();
+                gate.wait();
+                ctx.remote_store(2, "inbox", 1, &[20.0])?;
+                ctx.signal(2, "arrived", 0)?;
+                gate.wait();
+            }
+            _ => {
+                gate.wait();
+                // MUTATION: threshold 1 — the protocol needs 2
+                ctx.wait_flag_ge("arrived", 0, 1)?;
+                gate.wait();
+                gate.wait();
+                let _ = ctx.load_local_vec("inbox", 0, 2)?;
+            }
+        }
+        Ok(())
+    });
+    for o in outs {
+        o.expect("no heap errors in this mutant");
+    }
+    let r = report_of(&heap);
+    assert_eq!(classes(&r), [FindingClass::RaceRead], "{:?}", r.findings);
+    assert!(r.findings[0].message.contains("inbox[1..2]"), "{}", r.findings[0]);
+}
+
+/// Mutation 3 — **dropped signal**: the producer pushes two panels but
+/// signals only the first; the consumer's second per-panel wait starves.
+/// The timeout must surface as a typed error carrying the flag cell and
+/// observed value (the satellite contract) *and* as an unsatisfied-wait
+/// finding naming the silent ranks.
+#[test]
+fn mutation_dropped_signal_is_flagged_as_unsatisfied_wait() {
+    let heap = Arc::new(
+        HeapBuilder::new(2).buffer("inbox", 8).flags("panel", 2).build().expect("heap"),
+    );
+    heap.enable_sanitizer();
+    let outs = run_node_with_timeout(
+        Arc::clone(&heap),
+        Duration::from_millis(150),
+        move |ctx| -> Result<(), IrisError> {
+            if ctx.rank() == 0 {
+                ctx.remote_store(1, "inbox", 0, &[1.0; 4])?;
+                ctx.signal(1, "panel", 0)?;
+                ctx.remote_store(1, "inbox", 4, &[2.0; 4])?;
+                // MUTATION: the panel-1 signal is deleted
+                Ok(())
+            } else {
+                ctx.wait_flag_ge("panel", 0, 1)?;
+                let _ = ctx.load_local_vec("inbox", 0, 4)?;
+                ctx.wait_flag_ge("panel", 1, 1)?; // starves
+                let _ = ctx.load_local_vec("inbox", 4, 4)?;
+                Ok(())
+            }
+        },
+    );
+    assert!(outs[0].is_ok());
+    match outs[1].as_ref().expect_err("the starved wait must time out") {
+        IrisError::Timeout(t) => {
+            // satellite: the timeout names the cell and both values
+            assert_eq!(t.flags, "panel");
+            assert_eq!(t.idx, 1);
+            assert_eq!(t.target, 1);
+            assert_eq!(t.seen, 0);
+        }
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    let r = report_of(&heap);
+    assert_eq!(classes(&r), [FindingClass::UnsatisfiedWait], "{:?}", r.findings);
+    let msg = &r.findings[0].message;
+    assert!(msg.contains("panel[1] >= 1"), "{msg}");
+    assert!(msg.contains("nobody signaled"), "{msg}");
+}
+
+/// Mutation 4 — **early `flags_reset`**: the gate flag is wiped between
+/// the producer's signal and the consumer's wait (a reset belongs after
+/// global quiescence, not mid-handshake). The wait starves in the new
+/// flag generation.
+#[test]
+fn mutation_early_flags_reset_is_flagged_as_unsatisfied_wait() {
+    let heap = Arc::new(
+        HeapBuilder::new(2).buffer("inbox", 2).flags("gate", 1).build().expect("heap"),
+    );
+    heap.enable_sanitizer();
+    let gate = Arc::new(Barrier::new(2));
+    let outs = run_node_with_timeout(
+        Arc::clone(&heap),
+        Duration::from_millis(150),
+        move |ctx| -> Result<(), IrisError> {
+            if ctx.rank() == 0 {
+                ctx.remote_store(1, "inbox", 0, &[5.0, 6.0])?;
+                ctx.signal(1, "gate", 0)?;
+                // MUTATION: reset before the consumer ever waited
+                ctx.heap().flags_reset("gate")?;
+                gate.wait();
+                Ok(())
+            } else {
+                gate.wait();
+                ctx.wait_flag_ge("gate", 0, 1)?; // starves: the signal was wiped
+                let _ = ctx.load_local_vec("inbox", 0, 2)?;
+                Ok(())
+            }
+        },
+    );
+    assert!(outs[0].is_ok());
+    assert!(matches!(outs[1], Err(IrisError::Timeout(_))));
+    let r = report_of(&heap);
+    assert_eq!(classes(&r), [FindingClass::UnsatisfiedWait], "{:?}", r.findings);
+    // the reconstruction is per generation: the pre-reset signal does not
+    // count, so the new generation has no contributors at all
+    assert!(r.findings[0].message.contains("nobody signaled"), "{}", r.findings[0]);
+}
+
+/// Mutation 5 — **skipped slot-reuse acquire** (the parity/double-buffer
+/// bug): the producer reuses a data slot for the next round without
+/// waiting for the consumer's ack, overwriting bytes whose read was never
+/// ordered with it.
+#[test]
+fn mutation_parity_skip_is_flagged_as_slot_reuse_waw() {
+    let heap = Arc::new(
+        HeapBuilder::new(2)
+            .buffer("slot", 4)
+            .flags("ready", 1)
+            .flags("ack", 1)
+            .build()
+            .expect("heap"),
+    );
+    heap.enable_sanitizer();
+    let gate = Arc::new(Barrier::new(2));
+    let outs = run_node(Arc::clone(&heap), move |ctx| -> Result<(), IrisError> {
+        if ctx.rank() == 0 {
+            ctx.remote_store(1, "slot", 0, &[1.0; 4])?;
+            ctx.signal(1, "ready", 0)?;
+            gate.wait(); // consumer reads (and acks)
+            gate.wait();
+            // MUTATION: `ctx.wait_flag_ge("ack", 0, 1)` is deleted — round
+            // 2 reuses the slot with the consumer's read unacquired
+            ctx.remote_store(1, "slot", 0, &[2.0; 4])?;
+        } else {
+            gate.wait();
+            ctx.wait_flag_ge("ready", 0, 1)?;
+            let _ = ctx.load_local_vec("slot", 0, 4)?;
+            ctx.signal(0, "ack", 0)?;
+            gate.wait();
+        }
+        Ok(())
+    });
+    for o in outs {
+        o.expect("no heap errors in this mutant");
+    }
+    let r = report_of(&heap);
+    assert_eq!(classes(&r), [FindingClass::SlotReuseWaw], "{:?}", r.findings);
+    assert!(r.findings[0].message.contains("slot[0..4]"), "{}", r.findings[0]);
+}
+
+/// Mutation 6 — **slot overrun**: a producer's store runs past its own
+/// slot into a neighbor's, an unordered write-after-write over the
+/// neighbor's bytes.
+#[test]
+fn mutation_slot_overrun_is_flagged_as_slot_reuse_waw() {
+    let heap =
+        Arc::new(HeapBuilder::new(2).buffer("slots", 16).build().expect("heap"));
+    heap.enable_sanitizer();
+    let gate = Arc::new(Barrier::new(2));
+    let outs = run_node(Arc::clone(&heap), move |ctx| -> Result<(), IrisError> {
+        if ctx.rank() == 1 {
+            // owner fills its own slot [0..8)
+            ctx.store_local("slots", 0, &[9.0; 8])?;
+            gate.wait();
+        } else {
+            gate.wait();
+            // MUTATION: rank 0's slot is [8..16) but the store is 8 wide
+            // starting at 4 — it tramples the tail of slot 0 unordered
+            ctx.remote_store(1, "slots", 4, &[7.0; 8])?;
+        }
+        Ok(())
+    });
+    for o in outs {
+        o.expect("no heap errors in this mutant");
+    }
+    let r = report_of(&heap);
+    assert_eq!(classes(&r), [FindingClass::SlotReuseWaw], "{:?}", r.findings);
+    let msg = &r.findings[0].message;
+    assert!(msg.contains("slots[4..8]"), "{msg}");
+    assert!(msg.contains("(4 racy elements)"), "{msg}");
+}
+
+/// The checker's zero-cost-when-off contract: without `enable_sanitizer`
+/// a full protocol run records nothing and produces no recorder at all.
+#[test]
+fn recorder_absent_by_default() {
+    let heap = Arc::new(HeapBuilder::new(2).buffer("b", 2).flags("f", 1).build().expect("heap"));
+    let outs = run_node(Arc::clone(&heap), move |ctx| -> Result<(), IrisError> {
+        if ctx.rank() == 0 {
+            ctx.remote_store(1, "b", 0, &[1.0])?;
+            ctx.signal(1, "f", 0)?;
+        } else {
+            ctx.wait_flag_ge("f", 0, 1)?;
+            let _ = ctx.load_local_vec("b", 0, 1)?;
+        }
+        Ok(())
+    });
+    for o in outs {
+        o.expect("clean protocol");
+    }
+    assert!(heap.recorder().is_none(), "no recorder may appear unrequested");
+}

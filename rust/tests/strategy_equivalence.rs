@@ -662,7 +662,7 @@ fn hierarchical_allreduce_bitwise_equals_serve_fused_exchange() {
                     .flags(ATTN_EXCHANGE.data_flags, w)
                     .buffer(ATTN_EXCHANGE.gather, 2 * w * seg_max)
                     .flags(ATTN_EXCHANGE.gather_flags, w)
-                    .build(),
+                    .build().unwrap(),
             );
             let flat = run_node(flat_heap, move |ctx| {
                 let parts = partition(n, ctx.world());
