@@ -136,22 +136,28 @@ pub fn sanitize_hier_allreduce(topo: &Topology, n: usize, rounds: u64) -> Report
 /// heap's staging areas. No barrier between rounds — this deliberately
 /// exercises the parity-slot reuse protocol (round r+2 may only overwrite
 /// a slot once round r's consumers acquired it through the gather flags),
-/// the subtlest happens-before argument on the serve path.
+/// the subtlest happens-before argument on the serve path. A multi-node
+/// `topo` dispatches to the hierarchical two-tier protocol exactly as the
+/// serving engine does, so this driver doubles as the hierarchical
+/// serve-exchange sanitizer (chain hand-offs, NIC relays, and their
+/// parity reuse all land in the same event log).
 pub fn sanitize_serve_exchange(topo: &Topology, n: usize, rows: usize, rounds: u64) -> Report {
     let world = topo.world();
     let seg_max = n.div_ceil(world);
     let bufs: &'static ExchangeBufs = &serve::ATTN_EXCHANGE;
     let slot = rows * seg_max;
-    let heap = Arc::new(
-        HeapBuilder::new(world)
-            .topology(topo.clone())
-            .buffer(bufs.data, 2 * world * slot)
-            .flags(bufs.data_flags, world)
-            .buffer(bufs.gather, 2 * world * slot)
-            .flags(bufs.gather_flags, world)
-            .build()
-            .expect("exchange heap layout"),
-    );
+    let mut b = HeapBuilder::new(world)
+        .topology(topo.clone())
+        .buffer(bufs.data, 2 * world * slot)
+        .flags(bufs.data_flags, world)
+        .buffer(bufs.gather, 2 * world * slot)
+        .flags(bufs.gather_flags, world);
+    if topo.nodes() > 1 {
+        // the dispatched hierarchical protocol needs its chain/total
+        // staging, mirroring serve::build_serve_heap
+        b = crate::collectives::declare_hier_exchange(b, topo, n, rows, bufs);
+    }
+    let heap = Arc::new(b.build().expect("exchange heap layout"));
     heap.enable_sanitizer();
     let parts = partition(n, world);
     let outs = run_node(Arc::clone(&heap), move |ctx| -> Result<Vec<f32>, IrisError> {

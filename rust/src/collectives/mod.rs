@@ -104,6 +104,29 @@ pub fn hier_allreduce_heap(topo: &Topology, n: usize) -> Arc<SymmetricHeap> {
     Arc::new(declare_hier_allreduce(b, topo, n).build().expect("static hier-allreduce heap layout"))
 }
 
+/// Declare the staging [`all_reduce_hierarchical_rows`] needs *on top of*
+/// the flat [`crate::serve::ExchangeBufs`] layout: the hierarchical serve
+/// exchange reuses `bufs.data` (intra-node gather, slot per (segment
+/// group, local source)) and `bufs.gather` (reduced-segment relay) with
+/// their flat geometry, so only the NIC-chain accumulator and the
+/// total-delivery slot are new — both double-buffered by round parity
+/// like every other exchange buffer. `n` is the contribution width
+/// (`d_model` on the serving heap), `slot_rows` the staging-slot row
+/// capacity ([`crate::workloads::transformer::TransformerConfig::exchange_slot_rows`]).
+pub fn declare_hier_exchange(
+    b: HeapBuilder,
+    topo: &Topology,
+    n: usize,
+    slot_rows: usize,
+    bufs: &crate::serve::ExchangeBufs,
+) -> HeapBuilder {
+    let stride = slot_rows * n.div_ceil(topo.world());
+    b.buffer(bufs.chain, 2 * topo.nodes() * stride)
+        .flags(bufs.chain_flags, topo.nodes())
+        .buffer(bufs.total, 2 * stride)
+        .flags(bufs.total_flags, 1)
+}
+
 /// Direct (clique) all-gather with push semantics and flag completion.
 /// Rank r stores its `send` segment into slot r of every peer's `data_buf`
 /// and signals `flag_buf[r]` there. Returns once *all* segments have
@@ -371,6 +394,14 @@ pub fn all_reduce_hierarchical(
     let n = send.len();
     let parts = partition(n, w);
     let seg_max = n.div_ceil(w);
+    check_chain_shape(ctx, &topo, HIER_CHAIN, HIER_CHAIN_FLAGS, nn * seg_max)?;
+    if ctx.heap().buffer_len(HIER_TOTAL)? < seg_max {
+        return Err(IrisError::InvalidLayout(format!(
+            "hierarchical total slot {HIER_TOTAL} holds {} elements but segments are up to \
+             {seg_max} wide — the heap was declared for a smaller payload",
+            ctx.heap().buffer_len(HIER_TOTAL)?
+        )));
+    }
 
     // ---- stage A: intra-node gather of raw contributions (tier 1) ----
     // my slice of segment s goes to my node's representative of s (the
@@ -469,6 +500,239 @@ pub fn all_reduce_hierarchical(
         let (off, len) = parts[s];
         let seg = ctx.load_local_vec(HIER_OUT, s * seg_max, len)?;
         out[off..off + len].copy_from_slice(&seg);
+    }
+    Ok(out)
+}
+
+/// Guard both hierarchical variants against a heap declared for a
+/// different topology shape: the chain protocol indexes one flag per
+/// segment group per node, so a mismatched node count would deadlock
+/// (waits on flags nobody signals) or trip flag bounds mid-protocol. The
+/// declared chain-flag count is the node shape's fingerprint; checking it
+/// up front turns the hang into a typed [`IrisError::InvalidLayout`]
+/// before any flag traffic.
+fn check_chain_shape(
+    ctx: &RankCtx,
+    topo: &Topology,
+    chain_buf: &str,
+    chain_flags: &str,
+    chain_elems: usize,
+) -> Result<(), IrisError> {
+    let declared = ctx.heap().flags_len(chain_flags)?;
+    if declared != topo.nodes() {
+        return Err(IrisError::InvalidLayout(format!(
+            "hierarchical all-reduce over a {}x{} topology needs {} chain flags in \
+             {chain_flags}, but the heap declared {declared} — the heap was laid out for a \
+             different node shape",
+            topo.nodes(),
+            topo.gpus_per_node(),
+            topo.nodes()
+        )));
+    }
+    let cap = ctx.heap().buffer_len(chain_buf)?;
+    if cap < chain_elems {
+        return Err(IrisError::InvalidLayout(format!(
+            "hierarchical chain staging {chain_buf} holds {cap} elements but the {}x{} \
+             protocol needs {chain_elems} — the heap was declared for a different shape or a \
+             smaller payload",
+            topo.nodes(),
+            topo.gpus_per_node()
+        )));
+    }
+    Ok(())
+}
+
+/// M-row, parity-double-buffered hierarchical all-reduce — the serve-path
+/// twin of [`all_reduce_hierarchical`], and what
+/// [`crate::serve::fused_allreduce_exchange_rows`] dispatches to when the
+/// serving heap's topology spans nodes.
+///
+/// Same three-stage schedule as the scalar variant (intra-node gather of
+/// raw contributions, one running accumulator chain per segment group
+/// over the NICs folding in global rank order — the flat fold's exact f32
+/// operation sequence, so results are bit-identical to
+/// [`crate::serve::fused_allreduce_exchange_rows_flat`] — then owner
+/// delivery and local relay), generalized two ways to match the serving
+/// hot loop:
+///
+/// * **M-row blocks**: each staging slot carries a packed `[rows, len]`
+///   tile and one signal, so a prefill chunk or batched decode step costs
+///   the same flag traffic as one row (`rows <= slot_rows`, the heap's
+///   fixed slot capacity).
+/// * **Parity double-buffering**: every staging area alternates halves by
+///   `round % 2`, so back-to-back rounds need no barrier — exactly the
+///   flat exchange's reuse discipline. (The scalar variant instead
+///   requires a barrier between rounds.)
+///
+/// Buffer reuse: stage A stages raw contributions in `bufs.data` (slot
+/// `(segment group, local source)`, reinterpreting the flat layout's
+/// per-source slots) and stage C relays reduced segments through
+/// `bufs.gather` with the flat slot math, so a multi-node heap only adds
+/// the chain and total staging ([`declare_hier_exchange`]).
+///
+/// A starved chain wait maps its timeout to
+/// [`IrisError::ChainStarved`] naming the previous node's representative
+/// — the rank that died mid-chain — so node-outcome collection surfaces
+/// the root cause instead of the cascade of peer timeouts it causes.
+pub fn all_reduce_hierarchical_rows(
+    ctx: &RankCtx,
+    parts: &[(usize, usize)],
+    contribution: &[f32],
+    rows: usize,
+    slot_rows: usize,
+    round: u64,
+    bufs: &crate::serve::ExchangeBufs,
+) -> Result<Vec<f32>, IrisError> {
+    let topo = ctx.topology().clone();
+    let (r, w) = (ctx.rank(), ctx.world());
+    let (g, nn) = (topo.gpus_per_node(), topo.nodes());
+    let (nd, li) = (topo.node_of(r), topo.local_index(r));
+    if nn == 1 {
+        // single node: the flat schedule IS the intra-node tier
+        return crate::serve::fused_allreduce_exchange_rows_flat(
+            ctx,
+            parts,
+            contribution,
+            rows,
+            slot_rows,
+            round,
+            bufs,
+        );
+    }
+    let n = crate::serve::validate_exchange_rows(w, parts, contribution.len(), rows, slot_rows)?;
+    let seg_max = n.div_ceil(w);
+    let stride = slot_rows * seg_max;
+    check_chain_shape(ctx, &topo, bufs.chain, bufs.chain_flags, 2 * nn * stride)?;
+    if ctx.heap().buffer_len(bufs.total)? < 2 * stride {
+        return Err(IrisError::InvalidLayout(format!(
+            "hierarchical total slot {} holds {} elements but the double-buffered \
+             {rows}-row exchange needs {} — the heap was declared for a different shape",
+            bufs.total,
+            ctx.heap().buffer_len(bufs.total)?,
+            2 * stride
+        )));
+    }
+    let parity = (round % 2) as usize;
+    let slot_base = parity * w * stride; // data and gather share this layout
+    let chain_base = parity * nn * stride;
+    let total_base = parity * stride;
+
+    // ---- stage A: intra-node gather of raw contributions (tier 1) ----
+    // my [rows, len_s] tile of segment s goes to my node's representative
+    // of s, slot (segment group, my local index) — raw, unsummed, so
+    // stage B can replay the flat fold
+    let mut scratch = Vec::new();
+    for s in 0..w {
+        let rep = topo.segment_rep(nd, s);
+        let (off, len) = parts[s];
+        let slot = slot_base + ((s / g) * g + li) * stride;
+        let block: &[f32] = if rows == 1 {
+            &contribution[off..off + len]
+        } else {
+            scratch.clear();
+            for row in 0..rows {
+                scratch.extend_from_slice(&contribution[row * n + off..row * n + off + len]);
+            }
+            &scratch
+        };
+        if rep == r {
+            ctx.store_local(bufs.data, slot, block)?;
+        } else {
+            ctx.remote_store(rep, bufs.data, slot, block)?;
+        }
+        ctx.signal(rep, bufs.data_flags, (s / g) * g + li)?;
+    }
+
+    // ---- stage B: cross-node chain in node order (tier 2) ----
+    // I represent segment m*g + li of every segment group m on my node
+    for m in 0..nn {
+        let s = m * g + li;
+        let len = parts[s].1;
+        let mut acc = if let Some(prev) = topo.chain_prev(r) {
+            ctx.wait_flag_ge(bufs.chain_flags, m, round).map_err(|e| match e {
+                IrisError::Timeout(t) => IrisError::ChainStarved {
+                    producer: prev,
+                    node: topo.node_of(prev),
+                    timeout: t,
+                },
+                other => other,
+            })?;
+            ctx.load_local_vec(bufs.chain, chain_base + m * stride, rows * len)?
+        } else {
+            // head of the chain: the flat fold's zeroed accumulator
+            vec![0.0f32; rows * len]
+        };
+        // fold this node's raw contributions in global rank order — the
+        // exact operation sequence of the flat reduction, continued
+        for j in 0..g {
+            ctx.wait_flag_ge(bufs.data_flags, m * g + j, round)?;
+            let contrib =
+                ctx.load_local_vec(bufs.data, slot_base + (m * g + j) * stride, rows * len)?;
+            for (a, c) in acc.iter_mut().zip(&contrib) {
+                *a += c;
+            }
+        }
+        if let Some(next) = topo.chain_next(r) {
+            ctx.remote_store(next, bufs.chain, chain_base + m * stride, &acc)?;
+            ctx.signal(next, bufs.chain_flags, m)?;
+        } else if s == r {
+            // last node and I own the segment: the total stays here
+            ctx.store_local(bufs.total, total_base, &acc)?;
+            ctx.signal(r, bufs.total_flags, 0)?;
+        } else {
+            ctx.remote_store(s, bufs.total, total_base, &acc)?;
+            ctx.signal(s, bufs.total_flags, 0)?;
+        }
+    }
+
+    // ---- stage C: hierarchical all-gather of the reduced blocks ----
+    // owner: node-mates directly (tier 1), one push per remote node
+    // (tier 2) to that node's representative, which relays locally
+    let my_len = parts[r].1;
+    ctx.wait_flag_ge(bufs.total_flags, 0, round)?;
+    let total = ctx.load_local_vec(bufs.total, total_base, rows * my_len)?;
+    ctx.store_local(bufs.gather, slot_base + r * stride, &total)?;
+    ctx.signal(r, bufs.gather_flags, r)?;
+    for j in 0..g {
+        let mate = nd * g + j;
+        if mate != r {
+            ctx.remote_store(mate, bufs.gather, slot_base + r * stride, &total)?;
+            ctx.signal(mate, bufs.gather_flags, r)?;
+        }
+    }
+    for dn in 1..nn {
+        let rep = topo.segment_rep((nd + dn) % nn, r);
+        ctx.remote_store(rep, bufs.gather, slot_base + r * stride, &total)?;
+        ctx.signal(rep, bufs.gather_flags, r)?;
+    }
+    // relay duties: forward each remote-owned segment I represent to my
+    // node-mates as soon as its owner's NIC push lands
+    for m in 0..nn {
+        if m == nd {
+            continue;
+        }
+        let s = m * g + li;
+        let len = parts[s].1;
+        ctx.wait_flag_ge(bufs.gather_flags, s, round)?;
+        let seg = ctx.load_local_vec(bufs.gather, slot_base + s * stride, rows * len)?;
+        for j in 0..g {
+            let mate = nd * g + j;
+            if mate != r {
+                ctx.remote_store(mate, bufs.gather, slot_base + s * stride, &seg)?;
+                ctx.signal(mate, bufs.gather_flags, s)?;
+            }
+        }
+    }
+    // assemble the full [rows, n] sum
+    let mut out = vec![0.0f32; rows * n];
+    for s in 0..w {
+        ctx.wait_flag_ge(bufs.gather_flags, s, round)?;
+        let (off, len) = parts[s];
+        let seg = ctx.load_local_vec(bufs.gather, slot_base + s * stride, rows * len)?;
+        for row in 0..rows {
+            out[row * n + off..row * n + off + len]
+                .copy_from_slice(&seg[row * len..(row + 1) * len]);
+        }
     }
     Ok(out)
 }

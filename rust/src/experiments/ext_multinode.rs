@@ -14,9 +14,15 @@
 //! machine-readable JSON (`BENCH_multinode.json` by default) — the
 //! second perf-trajectory point CI diffs across commits.
 
+use std::sync::Arc;
+
 use crate::config::{HwConfig, MultinodeConfig};
-use crate::util::Table;
+use crate::fabric::Topology;
+use crate::iris::{collect_rank_outcomes, run_node, HeapBuilder, IrisError};
+use crate::serve::{self, ExchangeBufs};
+use crate::util::{partition, Table};
 use crate::workloads::multinode::{self, MultinodeStrategy};
+use crate::workloads::transformer::TransformerConfig;
 
 /// One row of the multinode figure.
 #[derive(Debug, Clone)]
@@ -80,6 +86,163 @@ pub fn sweep(hw: &HwConfig, seed: u64, iters: usize) -> Vec<MultinodeRow> {
         .collect()
 }
 
+/// The serve-path rider of the figure: the decode-step exchange of the
+/// serving hot loop on a NIC-bridged world, flat vs hierarchical.
+/// Wall-clock columns come from the DES twin at `decode_rows × d_model`
+/// lanes; the NIC-byte columns are **measured** on the functional
+/// exchange ([`serve::fused_allreduce_exchange_rows`] against its flat
+/// fold) — real data movement on the instrumented heap, fp16 payloads
+/// plus 8-byte flag signals — with the two protocols' outputs checked
+/// bitwise-equal on the same run.
+#[derive(Debug, Clone)]
+pub struct ServePathPoint {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// The NIC-aware decode batch
+    /// ([`crate::serve::continuous::nic_aware_decode_batch`]) the
+    /// scheduler would run at this geometry.
+    pub decode_rows: usize,
+    pub d_model: usize,
+    pub flat_ms: f64,
+    pub hier_ms: f64,
+    pub hier_vs_flat: f64,
+    pub flat_nic_bytes: u64,
+    pub hier_nic_bytes: u64,
+    pub nic_saving: f64,
+}
+
+/// The Llama-70B-class serving geometry of the serve-path point: the
+/// d_model-8192 decode exchange on a 2×4 NIC-bridged world.
+fn serve_path_cfg() -> TransformerConfig {
+    TransformerConfig {
+        d_model: 8192,
+        n_heads: 64,
+        head_dim: 128,
+        n_layers: 80,
+        ffn_hidden: 28672,
+        world: 8,
+        nodes: 2,
+        kv_block: 16,
+        max_seq: 512,
+        prefill_chunk: 64,
+        decode_batch: 8,
+        kv_pages: 4096,
+        kv_paged: false,
+    }
+}
+
+/// Cross-node bytes the functional serve exchange moves for one
+/// `rows`-row fused all-reduce over `n` lanes, plus every rank's output
+/// (so the caller can hold the flat/hier bitwise guarantee on the very
+/// run it measured).
+fn measure_exchange_nic(
+    topo: &Topology,
+    n: usize,
+    rows: usize,
+    hier: bool,
+) -> (u64, Vec<Vec<f32>>) {
+    let world = topo.world();
+    let seg_max = n.div_ceil(world);
+    let slot = rows * seg_max;
+    let bufs: &'static ExchangeBufs = &serve::ATTN_EXCHANGE;
+    let mut b = HeapBuilder::new(world)
+        .topology(topo.clone())
+        .buffer(bufs.data, 2 * world * slot)
+        .flags(bufs.data_flags, world)
+        .buffer(bufs.gather, 2 * world * slot)
+        .flags(bufs.gather_flags, world);
+    if hier {
+        b = crate::collectives::declare_hier_exchange(b, topo, n, rows, bufs);
+    }
+    let heap = Arc::new(b.build().expect("exchange heap layout"));
+    let parts = partition(n, world);
+    let topo2 = topo.clone();
+    let outs = run_node(Arc::clone(&heap), move |ctx| -> Result<(u64, Vec<f32>), IrisError> {
+        let r = ctx.rank();
+        let contribution: Vec<f32> =
+            (0..rows * n).map(|i| ((r + 1) * (i + 1)) as f32 * 1e-3).collect();
+        let out = if hier {
+            serve::fused_allreduce_exchange_rows(&ctx, &parts, &contribution, rows, rows, 1, bufs)?
+        } else {
+            serve::fused_allreduce_exchange_rows_flat(
+                &ctx,
+                &parts,
+                &contribution,
+                rows,
+                rows,
+                1,
+                bufs,
+            )?
+        };
+        // every rank's pushes must have landed before reading the ledger
+        ctx.barrier();
+        let t = ctx.traffic();
+        let mut bytes = 0u64;
+        for src in 0..world {
+            for dst in 0..world {
+                if !topo2.same_node(src, dst) {
+                    bytes += t.bytes_between(src, dst);
+                }
+            }
+        }
+        Ok((bytes, out))
+    });
+    let per_rank = collect_rank_outcomes(outs).expect("serve exchange run");
+    let bytes = per_rank[0].0;
+    (bytes, per_rank.into_iter().map(|(_, o)| o).collect())
+}
+
+/// Build the serve-path point: size the decode batch for the NIC tier,
+/// price the exchange with the DES twin, and measure the real hot loop.
+pub fn serve_path_point(hw: &HwConfig, seed: u64, iters: usize) -> ServePathPoint {
+    let cfg = serve_path_cfg();
+    let (nodes, g) = (cfg.nodes, cfg.world / cfg.nodes);
+    let rows = crate::serve::continuous::nic_aware_decode_batch(&cfg, hw, None)
+        .expect("NIC-aware sizing of a valid geometry");
+    let mn = MultinodeConfig { elems: rows * cfg.d_model, nodes, gpus_per_node: g };
+    let (flat_s, _) =
+        multinode::mean_latency_with_ledger(&mn, hw, MultinodeStrategy::FlatPush, seed, iters);
+    let (hier_s, _) =
+        multinode::mean_latency_with_ledger(&mn, hw, MultinodeStrategy::Hierarchical, seed, iters);
+    let topo = cfg.topology();
+    let (flat_nic, flat_outs) = measure_exchange_nic(&topo, cfg.d_model, rows, false);
+    let (hier_nic, hier_outs) = measure_exchange_nic(&topo, cfg.d_model, rows, true);
+    for (r, (f, h)) in flat_outs.iter().zip(&hier_outs).enumerate() {
+        assert!(f == h, "rank {r}: hierarchical serve exchange diverged from the flat fold");
+    }
+    let (flat_ms, hier_ms) = (flat_s * 1e3, hier_s * 1e3);
+    ServePathPoint {
+        nodes,
+        gpus_per_node: g,
+        decode_rows: rows,
+        d_model: cfg.d_model,
+        flat_ms,
+        hier_ms,
+        hier_vs_flat: flat_ms / hier_ms,
+        flat_nic_bytes: flat_nic,
+        hier_nic_bytes: hier_nic,
+        nic_saving: flat_nic as f64 / hier_nic as f64,
+    }
+}
+
+/// One-line footer of the serve-path point for the printed figure.
+pub fn render_serve_path(p: &ServePathPoint) -> String {
+    format!(
+        "serve path {}x{}: decode batch {} x d_model {} — flat {:.4} ms / hier {:.4} ms \
+         ({:.2}x), NIC {} -> {} bytes ({:.2}x fewer, measured on the functional exchange)",
+        p.nodes,
+        p.gpus_per_node,
+        p.decode_rows,
+        p.d_model,
+        p.flat_ms,
+        p.hier_ms,
+        p.hier_vs_flat,
+        p.flat_nic_bytes,
+        p.hier_nic_bytes,
+        p.nic_saving
+    )
+}
+
 /// Render the figure as a table.
 pub fn render(rows: &[MultinodeRow], hw: &HwConfig) -> Table {
     let mut t = Table::new(&format!(
@@ -115,13 +278,34 @@ pub fn render(rows: &[MultinodeRow], hw: &HwConfig) -> Table {
 /// Serialize the sweep as machine-readable JSON (hand-rolled — no serde
 /// offline; flat and stable so CI can diff it across commits as a
 /// perf-trajectory point).
-pub fn to_json(rows: &[MultinodeRow], hw: &HwConfig, seed: u64, iters: usize) -> String {
+pub fn to_json(
+    rows: &[MultinodeRow],
+    sp: &ServePathPoint,
+    hw: &HwConfig,
+    seed: u64,
+    iters: usize,
+) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"multinode\",\n");
     s.push_str(&format!("  \"hw\": \"{}\",\n", hw.name));
     s.push_str(&format!("  \"seed\": {seed},\n"));
     s.push_str(&format!("  \"iters\": {iters},\n"));
+    s.push_str(&format!(
+        "  \"serve_path\": {{\"nodes\": {}, \"gpus_per_node\": {}, \"decode_rows\": {}, \
+         \"d_model\": {}, \"flat_ms\": {:.6}, \"hier_ms\": {:.6}, \"hier_vs_flat\": {:.4}, \
+         \"flat_nic_bytes\": {}, \"hier_nic_bytes\": {}, \"nic_saving\": {:.4}}},\n",
+        sp.nodes,
+        sp.gpus_per_node,
+        sp.decode_rows,
+        sp.d_model,
+        sp.flat_ms,
+        sp.hier_ms,
+        sp.hier_vs_flat,
+        sp.flat_nic_bytes,
+        sp.hier_nic_bytes,
+        sp.nic_saving
+    ));
     s.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
@@ -149,8 +333,10 @@ pub fn to_json(rows: &[MultinodeRow], hw: &HwConfig, seed: u64, iters: usize) ->
 pub fn run(hw: &HwConfig, seed: u64, iters: usize, json_path: Option<&str>) {
     let rows = sweep(hw, seed, iters);
     render(&rows, hw).print();
+    let sp = serve_path_point(hw, seed, iters);
+    println!("{}", render_serve_path(&sp));
     if let Some(path) = json_path {
-        match std::fs::write(path, to_json(&rows, hw, seed, iters)) {
+        match std::fs::write(path, to_json(&rows, &sp, hw, seed, iters)) {
             Ok(()) => println!("wrote {path} (machine-readable perf point)"),
             Err(e) => eprintln!("write {path}: {e}"),
         }
@@ -198,16 +384,57 @@ mod tests {
     fn json_point_is_well_formed_and_deterministic() {
         let hw = presets::mi300x();
         let rows = sweep(&hw, 4, 2);
-        let a = to_json(&rows, &hw, 4, 2);
-        let b = to_json(&sweep(&hw, 4, 2), &hw, 4, 2);
+        let sp = serve_path_point(&hw, 4, 2);
+        let a = to_json(&rows, &sp, &hw, 4, 2);
+        let b = to_json(&sweep(&hw, 4, 2), &sp, &hw, 4, 2);
         assert_eq!(a, b, "the perf point must be reproducible from (config, seed)");
         assert_eq!(a.matches('{').count(), a.matches('}').count());
         assert_eq!(a.matches('[').count(), a.matches(']').count());
-        assert_eq!(a.matches("\"nodes\":").count(), GRID.len());
-        for key in ["\"bench\": \"multinode\"", "\"hier_ms\"", "\"nic_saving\""] {
+        assert_eq!(
+            a.matches("\"nodes\":").count(),
+            GRID.len() + 1,
+            "grid rows plus the serve-path point"
+        );
+        for key in [
+            "\"bench\": \"multinode\"",
+            "\"hier_ms\"",
+            "\"nic_saving\"",
+            "\"serve_path\"",
+            "\"decode_rows\"",
+            "\"flat_nic_bytes\"",
+        ] {
             assert!(a.contains(key), "missing {key} in {a}");
         }
         assert!(!a.contains(",\n  ]"), "trailing comma would break parsers");
+    }
+
+    #[test]
+    fn serve_path_point_wins_wall_clock_and_nic_on_the_functional_exchange() {
+        let hw = presets::mi300x();
+        let p = serve_path_point(&hw, 7, 1);
+        // NIC-aware sizing at this geometry: a decode row's chain-hop
+        // share is a 2048-byte fp16 [1, 1024] tile, so the batch grows to
+        // ceil(10us × 42.5 GB/s / 2048 B) = 208 rows
+        assert_eq!((p.nodes, p.gpus_per_node, p.d_model), (2, 4, 8192));
+        assert_eq!(p.decode_rows, 208);
+        // multi-node wall-clock win of the hierarchical hot loop
+        assert!(
+            p.hier_ms < p.flat_ms,
+            "hierarchical {} ms must beat flat {} ms on the NIC-bound exchange",
+            p.hier_ms,
+            p.flat_ms
+        );
+        // measured hot-loop traffic matches the exact wire accounting:
+        // one fp16 [rows, seg_max] payload plus an 8-byte signal per
+        // cross-node store — 2·w·g flat messages vs 2·w + g hierarchical
+        // (chain hops + totals to node-0 owners + one relay per rank)
+        let seg = (p.decode_rows * p.d_model / 8) as u64;
+        let msg = 2 * seg + 8;
+        let (w, g) = (8u64, 4u64);
+        assert_eq!(p.flat_nic_bytes, 2 * w * g * msg);
+        assert_eq!(p.hier_nic_bytes, (2 * w + g) * msg);
+        assert!(p.hier_nic_bytes < p.flat_nic_bytes);
+        assert!((p.nic_saving - 3.2).abs() < 1e-3, "saving {}", p.nic_saving);
     }
 
     #[test]

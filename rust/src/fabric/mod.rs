@@ -128,6 +128,33 @@ impl Topology {
         peers
     }
 
+    /// Representative of global segment `s` on `node`: the rank at local
+    /// index `s % gpus_per_node`. The hierarchical collectives assign
+    /// each segment group to one local index per node — exactly one rank
+    /// per node folds and relays a given segment — and this names it, so
+    /// the serve-path and scalar protocols can never disagree on who
+    /// represents what.
+    pub fn segment_rep(&self, node: usize, segment: usize) -> usize {
+        debug_assert!(node < self.nodes);
+        node * self.gpus_per_node + segment % self.gpus_per_node
+    }
+
+    /// NIC-chain predecessor of `rank` for its segment group: the same
+    /// local index on the previous node. `None` on node 0 — the chain
+    /// head starts its running accumulator from zeros.
+    pub fn chain_prev(&self, rank: usize) -> Option<usize> {
+        let nd = self.node_of(rank);
+        (nd > 0).then(|| rank - self.gpus_per_node)
+    }
+
+    /// NIC-chain successor of `rank` for its segment group: the same
+    /// local index on the next node. `None` on the last node — the chain
+    /// tail holds the finished total and delivers it to the segment owner.
+    pub fn chain_next(&self, rank: usize) -> Option<usize> {
+        let nd = self.node_of(rank);
+        (nd + 1 < self.nodes).then(|| rank + self.gpus_per_node)
+    }
+
     /// All directed (src, dst) pairs of the world, both tiers.
     pub fn directed_links(&self) -> Vec<(usize, usize)> {
         let w = self.world();
@@ -255,6 +282,31 @@ mod tests {
                     "({n},{g}) rank {r}: cross-node peer before an intra-node one"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn segment_reps_and_chain_links_agree() {
+        let t = Topology::hierarchical(3, 4);
+        for s in 0..t.world() {
+            // the reps of segment s form one chain: same local index on
+            // every node, linked front to back by chain_next/chain_prev
+            let reps: Vec<usize> = (0..t.nodes()).map(|nd| t.segment_rep(nd, s)).collect();
+            for r in &reps {
+                assert_eq!(t.local_index(*r), s % t.gpus_per_node());
+            }
+            assert_eq!(t.chain_prev(reps[0]), None);
+            assert_eq!(t.chain_next(*reps.last().unwrap()), None);
+            for w in reps.windows(2) {
+                assert_eq!(t.chain_next(w[0]), Some(w[1]));
+                assert_eq!(t.chain_prev(w[1]), Some(w[0]));
+            }
+        }
+        // a clique has no chain links at all
+        let c = Topology::clique(4);
+        for r in 0..4 {
+            assert_eq!(c.chain_prev(r), None);
+            assert_eq!(c.chain_next(r), None);
         }
     }
 

@@ -68,6 +68,13 @@ pub enum IrisError {
     OutOfPages { requested: usize, free: usize },
     /// A flag wait timed out (peer death / protocol deadlock).
     Timeout(WaitTimeout),
+    /// The hierarchical exchange's cross-node accumulator chain starved:
+    /// the previous node's representative never handed off the running
+    /// partial sum over the NIC. Unlike a generic [`IrisError::Timeout`]
+    /// this names the rank that owed the hand-off — the root cause when a
+    /// rank dies mid-chain — so outcome collection surfaces the dead rank
+    /// instead of whichever peer timed out first.
+    ChainStarved { producer: usize, node: usize, timeout: WaitTimeout },
 }
 
 impl fmt::Display for IrisError {
@@ -94,6 +101,11 @@ impl fmt::Display for IrisError {
                 write!(f, "KV page pool exhausted: requested {requested} pages, {free} free")
             }
             IrisError::Timeout(t) => t.fmt(f),
+            IrisError::ChainStarved { producer, node, timeout } => write!(
+                f,
+                "accumulator chain starved: rank {producer} (node {node}) never handed off \
+                 the NIC-chain partial ({timeout})"
+            ),
         }
     }
 }
@@ -132,6 +144,13 @@ mod tests {
             "duplicate flag array name: f"
         );
         assert!(IrisError::ZeroWorld.to_string().contains("world >= 1"));
+        let starved = IrisError::ChainStarved {
+            producer: 4,
+            node: 1,
+            timeout: WaitTimeout { rank: 6, flags: "c".into(), idx: 0, target: 2, seen: 1 },
+        };
+        assert!(starved.to_string().contains("rank 4 (node 1)"));
+        assert!(starved.to_string().contains("chain starved"));
     }
 
     #[test]

@@ -104,6 +104,76 @@ impl ContinuousReport {
     }
 }
 
+/// NIC-aware decode batch for an `cfg.nodes`-node world, driven by the
+/// DES cost model ([`crate::sim::cost::nic_transfer_time`]).
+///
+/// On a NIC-bridged world every fused exchange round pays the
+/// hierarchical protocol's accumulator chain: `nodes - 1` serialized NIC
+/// hops, each costing `nic_latency_s` plus the `[A, seg_max]` tile's
+/// serialization time. The fixed latency is per *hop*, the serialization
+/// per *row* — so batching `A` decode sequences amortizes the latency
+/// share like `1/A` while the bandwidth share stays constant per token.
+/// The scheduler therefore grows the decode batch until the amortized
+/// per-token latency falls below the per-token serialization cost it can
+/// never avoid: the smallest `A` with
+/// `nic_latency_s / A <= row_serialization_time`, clamped to
+/// `[cfg.decode_batch, cfg.max_seq]` (never below the configured batch —
+/// that is the heap's slot floor — and never beyond the active set a
+/// `max_seq` world can hold).
+///
+/// `override_batch` is the validated operator knob: `Some(a)` bypasses
+/// the model entirely after checking `1 <= a <= cfg.max_seq` (a typed
+/// [`IrisError::InvalidLayout`] otherwise). Single-node worlds pay no NIC
+/// tax and keep `cfg.decode_batch` unchanged.
+pub fn nic_aware_decode_batch(
+    cfg: &TransformerConfig,
+    hw: &crate::config::HwConfig,
+    override_batch: Option<usize>,
+) -> Result<usize, IrisError> {
+    if let Some(a) = override_batch {
+        if a == 0 || a > cfg.max_seq {
+            return Err(IrisError::InvalidLayout(format!(
+                "decode_batch override {a} outside 1..={} (a zero-row decode step is \
+                 meaningless; more rows than max_seq can never be active at once)",
+                cfg.max_seq
+            )));
+        }
+        return Ok(a);
+    }
+    if cfg.nodes <= 1 {
+        return Ok(cfg.decode_batch);
+    }
+    let seg_max = cfg.d_model.div_ceil(cfg.world);
+    // one decode row's share of one chain hop: an fp16 [1, seg_max] tile
+    let row_bytes = (2 * seg_max) as u64;
+    let row_s = crate::sim::cost::nic_transfer_time(hw, row_bytes) - hw.nic_latency_s;
+    let target = if row_s > 0.0 {
+        (hw.nic_latency_s / row_s).ceil() as usize
+    } else {
+        // a zero-size tile (degenerate geometry): latency is the whole
+        // cost, so batch as wide as the world allows
+        cfg.max_seq
+    };
+    Ok(target.clamp(cfg.decode_batch, cfg.max_seq))
+}
+
+/// Copy of `cfg` with [`nic_aware_decode_batch`] applied — the form the
+/// serving entry points consume. Sizing must happen *before*
+/// [`crate::serve::build_serve_heap`]: the decode batch sizes the
+/// exchange staging slots
+/// ([`TransformerConfig::exchange_slot_rows`]), so resizing after the
+/// heap exists could overflow a slot. The returned config is re-validated.
+pub fn nic_sized(
+    cfg: &TransformerConfig,
+    hw: &crate::config::HwConfig,
+    override_batch: Option<usize>,
+) -> Result<TransformerConfig, IrisError> {
+    let mut out = cfg.clone();
+    out.decode_batch = nic_aware_decode_batch(cfg, hw, override_batch)?;
+    out.validate().map_err(IrisError::InvalidLayout)?;
+    Ok(out)
+}
+
 /// One in-flight sequence. `prefill_next` is the admission state: below
 /// `prompt_len` the sequence is in the **prefill** phase (the next chunk
 /// starts at that prompt position); at `prompt_len` it has flipped to the
@@ -155,6 +225,29 @@ where
         preemptions,
         page_stall_steps,
     })
+}
+
+/// [`serve_continuous`] with the scheduler's decode batch sized for the
+/// config's node topology first ([`nic_sized`]): on a NIC-bridged world
+/// the batch grows until the chain hops' fixed `nic_latency_s` amortizes
+/// below the per-row serialization cost, `override_batch` pins it
+/// instead (validated). This is the multi-node serving entry point — the
+/// heap is built *after* sizing, so the exchange slots match the batch
+/// the scheduler will actually run.
+pub fn serve_continuous_nic_aware<C, F>(
+    cfg: &TransformerConfig,
+    hw: &crate::config::HwConfig,
+    override_batch: Option<usize>,
+    requests: Vec<Request>,
+    max_active: usize,
+    factory: F,
+) -> Result<ContinuousReport, IrisError>
+where
+    C: LocalCompute,
+    F: Fn(usize) -> C + Send + Sync + 'static,
+{
+    let sized = nic_sized(cfg, hw, override_batch)?;
+    serve_continuous(&sized, requests, max_active, factory)
 }
 
 /// A sequence parked by preemption: its scheduler state plus the swap-
@@ -658,5 +751,114 @@ mod tests {
         }
         let total: usize = reqs.iter().map(|r| r.total_tokens()).sum();
         assert_eq!(report.total_steps, total);
+    }
+
+    // --- NIC-aware decode-batch sizing ------------------------------
+
+    #[test]
+    fn single_node_world_keeps_configured_decode_batch() {
+        let cfg = TransformerConfig::tiny(2);
+        let hw = crate::config::presets::mi300x();
+        assert_eq!(nic_aware_decode_batch(&cfg, &hw, None).unwrap(), cfg.decode_batch);
+    }
+
+    #[test]
+    fn nic_bridged_world_grows_decode_batch() {
+        // tiny geometry: seg_max = 32/4 = 8 elems, so a 16-byte fp16 row
+        // serializes in sub-nanosecond time against a 10 us NIC hop —
+        // the amortization target dwarfs max_seq and clamps to it
+        let cfg = TransformerConfig::tiny(4).on_nodes(2);
+        let hw = crate::config::presets::mi300x();
+        let a = nic_aware_decode_batch(&cfg, &hw, None).unwrap();
+        assert_eq!(a, cfg.max_seq);
+        assert!(a >= cfg.decode_batch, "never below the heap's slot floor");
+    }
+
+    #[test]
+    fn decode_batch_target_amortizes_nic_latency_per_row() {
+        // interior value: d_model 65536 on 8 ranks -> seg_max 8192, a
+        // 16 KiB fp16 row. target = ceil(nic_latency / row_serialization)
+        // = ceil(10us * 42.5 GB/s / 16384 B) = 26, strictly between the
+        // configured floor (3) and the max_seq ceiling (64)
+        let mut cfg = TransformerConfig::tiny(8).on_nodes(2);
+        cfg.d_model = 65536;
+        let hw = crate::config::presets::mi300x();
+        let a = nic_aware_decode_batch(&cfg, &hw, None).unwrap();
+        assert_eq!(a, 26);
+        assert!(cfg.decode_batch < a && a < cfg.max_seq);
+        // a higher-latency NIC needs a wider batch to amortize the hop
+        let mut slow = hw.clone();
+        slow.nic_latency_s *= 2.0;
+        assert!(nic_aware_decode_batch(&cfg, &slow, None).unwrap() > a);
+    }
+
+    #[test]
+    fn operator_override_pins_decode_batch() {
+        let cfg = TransformerConfig::tiny(4).on_nodes(2);
+        let hw = crate::config::presets::mi300x();
+        assert_eq!(nic_aware_decode_batch(&cfg, &hw, Some(5)).unwrap(), 5);
+        // the knob bypasses the model on single-node worlds too
+        let single = TransformerConfig::tiny(2);
+        assert_eq!(nic_aware_decode_batch(&single, &hw, Some(1)).unwrap(), 1);
+    }
+
+    #[test]
+    fn out_of_range_override_is_invalid_layout() {
+        let cfg = TransformerConfig::tiny(4).on_nodes(2);
+        let hw = crate::config::presets::mi300x();
+        for bad in [0, cfg.max_seq + 1] {
+            match nic_aware_decode_batch(&cfg, &hw, Some(bad)) {
+                Err(IrisError::InvalidLayout(msg)) => {
+                    assert!(msg.contains(&format!("override {bad}")), "{msg}");
+                }
+                other => panic!("expected InvalidLayout for override {bad}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn nic_sized_config_revalidates_with_grown_batch() {
+        let cfg = TransformerConfig::tiny(4).on_nodes(2);
+        let hw = crate::config::presets::mi300x();
+        let sized = nic_sized(&cfg, &hw, None).expect("sized config validates");
+        assert_eq!(sized.decode_batch, cfg.max_seq);
+        // sizing touches only the decode batch
+        assert_eq!(sized.d_model, cfg.d_model);
+        assert_eq!(sized.nodes, cfg.nodes);
+        assert_eq!(sized.kv_pages, cfg.kv_pages);
+    }
+
+    #[test]
+    fn serve_continuous_nic_aware_matches_reference_on_two_nodes() {
+        // the multi-node entry point end to end: sizing runs first, the
+        // heap is built after it, and the hierarchical exchange serves
+        // the hot loop — every result must still equal the single-
+        // process oracle. The override pins the batch at the tiny
+        // default so the schedule stays small.
+        let cfg = TransformerConfig::tiny(4).on_nodes(2);
+        let hw = crate::config::presets::mi300x();
+        let seed = 21;
+        let mut q = RequestQueue::new();
+        q.submit(2, 3).unwrap();
+        q.submit(1, 4).unwrap();
+        let reqs = q.drain_batch(2);
+        let report = serve_continuous_nic_aware(
+            &cfg,
+            &hw,
+            Some(cfg.decode_batch),
+            reqs.clone(),
+            2,
+            tp_factory(&cfg, seed),
+        )
+        .expect("serve");
+        for req in &reqs {
+            let mut dec = ReferenceDecoder::new(
+                cfg.clone(),
+                NativeCompute::new(cfg.clone(), TransformerWeights::random(&cfg, seed)),
+            );
+            let h = dec.run_request(req.id as u64, req.prompt_len, req.gen_len);
+            let got = &report.results.iter().find(|r| r.id == req.id).unwrap().final_hidden;
+            got.assert_allclose(&h, 1e-3, 1e-3);
+        }
     }
 }

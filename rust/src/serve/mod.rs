@@ -142,6 +142,22 @@ pub struct ExchangeBufs {
     pub gather: &'static str,
     /// One monotone flag per source for the gather phase.
     pub gather_flags: &'static str,
+    /// NIC-chain staging of the hierarchical variant
+    /// ([`crate::collectives::all_reduce_hierarchical_rows`]): the running
+    /// cross-node accumulator, one `slot_rows * seg_max` slot per
+    /// represented segment group, double-buffered —
+    /// `2 * nodes * slot_rows * seg_max` elements. Declared only when the
+    /// heap's topology spans nodes ([`build_serve_heap`]); on a clique
+    /// the name stays undeclared and the flat protocol never touches it.
+    pub chain: &'static str,
+    /// One monotone flag per segment group: `nodes` flags.
+    pub chain_flags: &'static str,
+    /// Final-total delivery slot of the hierarchical variant (each rank
+    /// owns one segment): `2 * slot_rows * seg_max` elements,
+    /// double-buffered. Declared only on a multi-node heap.
+    pub total: &'static str,
+    /// One monotone flag: this rank's reduced total arrived.
+    pub total_flags: &'static str,
 }
 
 /// The attention output-projection (row-parallel Wo) exchange.
@@ -150,6 +166,10 @@ pub const ATTN_EXCHANGE: ExchangeBufs = ExchangeBufs {
     data_flags: "serve_attn_partial_ready",
     gather: "serve_attn_gather",
     gather_flags: "serve_attn_gather_ready",
+    chain: "serve_attn_chain",
+    chain_flags: "serve_attn_chain_ready",
+    total: "serve_attn_total",
+    total_flags: "serve_attn_total_ready",
 };
 
 /// The MLP down-projection exchange.
@@ -158,6 +178,10 @@ pub const MLP_EXCHANGE: ExchangeBufs = ExchangeBufs {
     data_flags: "serve_mlp_partial_ready",
     gather: "serve_mlp_gather",
     gather_flags: "serve_mlp_gather_ready",
+    chain: "serve_mlp_chain",
+    chain_flags: "serve_mlp_chain_ready",
+    total: "serve_mlp_total",
+    total_flags: "serve_mlp_total_ready",
 };
 
 /// Build the serving heap: the attention partial inbox (sequence-parallel
@@ -188,7 +212,9 @@ pub fn build_serve_heap(cfg: &TransformerConfig) -> Arc<SymmetricHeap> {
     let slot = cfg.exchange_slot_rows() * seg_max;
     let widest = cfg.head_partition().iter().map(|(_, l)| *l).max().unwrap_or(0);
     let page_region = cfg.kv_pages * cfg.kv_page_elems(widest);
+    let topo = cfg.topology();
     let mut b = HeapBuilder::new(cfg.world)
+        .topology(topo.clone())
         .buffer(BUF_INBOX, 2 * cfg.world * wire)
         .flags(FLAGS_PARTIAL, cfg.world)
         .flags(FLAGS_REQ_DONE, cfg.world)
@@ -200,6 +226,18 @@ pub fn build_serve_heap(cfg: &TransformerConfig) -> Arc<SymmetricHeap> {
             .flags(bufs.data_flags, cfg.world)
             .buffer(bufs.gather, 2 * cfg.world * slot)
             .flags(bufs.gather_flags, cfg.world);
+        if topo.nodes() > 1 {
+            // the NIC-chain and total-delivery staging only the
+            // hierarchical exchange uses — same double-buffered slot
+            // geometry, sized by node count instead of world
+            b = crate::collectives::declare_hier_exchange(
+                b,
+                &topo,
+                cfg.d_model,
+                cfg.exchange_slot_rows(),
+                bufs,
+            );
+        }
     }
     Arc::new(b.build().expect("static serve heap layout"))
 }
@@ -924,6 +962,15 @@ pub fn fused_allreduce_exchange(
 /// next slot, coverage that does not match the contribution width, or
 /// `rows` outside the slot capacity all return a typed
 /// [`IrisError::InvalidLayout`] before any flag traffic.
+///
+/// **Topology dispatch.** When the heap's topology spans nodes
+/// (`ctx.topology().nodes() > 1` — [`build_serve_heap`] installs
+/// [`TransformerConfig::topology`]), the call runs
+/// [`crate::collectives::all_reduce_hierarchical_rows`] instead of the
+/// flat push schedule: bitwise-identical results (the chain replays the
+/// flat fold's exact f32 operation sequence), same parity
+/// double-buffering, ~`gpus_per_node`x fewer NIC bytes. On a clique the
+/// flat schedule runs unchanged.
 pub fn fused_allreduce_exchange_rows(
     ctx: &RankCtx,
     parts: &[(usize, usize)],
@@ -933,7 +980,33 @@ pub fn fused_allreduce_exchange_rows(
     round: u64,
     bufs: &ExchangeBufs,
 ) -> Result<Vec<f32>, IrisError> {
-    let (r, w) = (ctx.rank(), ctx.world());
+    if ctx.topology().nodes() > 1 {
+        // NIC-bridged world: same arguments, same bits, ~gpus_per_node x
+        // fewer NIC bytes (see the hierarchical variant's docs)
+        crate::collectives::all_reduce_hierarchical_rows(
+            ctx,
+            parts,
+            contribution,
+            rows,
+            slot_rows,
+            round,
+            bufs,
+        )
+    } else {
+        fused_allreduce_exchange_rows_flat(ctx, parts, contribution, rows, slot_rows, round, bufs)
+    }
+}
+
+/// Shared argument validation of the fused exchange (flat and
+/// hierarchical run the identical contract — the dispatch must never
+/// change which calls are rejected). Returns the contribution width `n`.
+pub(crate) fn validate_exchange_rows(
+    w: usize,
+    parts: &[(usize, usize)],
+    contribution_len: usize,
+    rows: usize,
+    slot_rows: usize,
+) -> Result<usize, IrisError> {
     // The partition contract is exactly [`crate::util::partition`]'s
     // shape: one segment per rank, contiguous from offset 0, covering
     // every column (overlap or gaps would double-count or drop segments
@@ -949,13 +1022,12 @@ pub fn fused_allreduce_exchange_rows(
             "fused_allreduce_exchange of {rows} rows outside the staging slot capacity 1..={slot_rows}"
         )));
     }
-    if contribution.len() % rows != 0 {
+    if contribution_len % rows != 0 {
         return Err(IrisError::InvalidLayout(format!(
-            "fused_allreduce_exchange contribution of {} elements is not {rows} equal rows",
-            contribution.len()
+            "fused_allreduce_exchange contribution of {contribution_len} elements is not {rows} equal rows"
         )));
     }
-    let n = contribution.len() / rows;
+    let n = contribution_len / rows;
     let seg_max = n.div_ceil(w);
     let mut covered = 0usize;
     for &(off, len) in parts {
@@ -979,6 +1051,28 @@ pub fn fused_allreduce_exchange_rows(
             "fused_allreduce_exchange partition covers {covered} of {n} contribution elements"
         )));
     }
+    Ok(n)
+}
+
+/// The flat (topology-oblivious) fused exchange: every producer pushes a
+/// partial block straight to each segment owner, whatever tier the link
+/// crosses. This is what [`fused_allreduce_exchange_rows`] runs on a
+/// single-node clique; it stays callable directly as the baseline the
+/// multi-node experiments and equivalence tests measure the hierarchical
+/// protocol against (on a NIC-bridged heap it is correct but pays the
+/// full flat NIC-byte bill).
+pub fn fused_allreduce_exchange_rows_flat(
+    ctx: &RankCtx,
+    parts: &[(usize, usize)],
+    contribution: &[f32],
+    rows: usize,
+    slot_rows: usize,
+    round: u64,
+    bufs: &ExchangeBufs,
+) -> Result<Vec<f32>, IrisError> {
+    let (r, w) = (ctx.rank(), ctx.world());
+    let n = validate_exchange_rows(w, parts, contribution.len(), rows, slot_rows)?;
+    let seg_max = n.div_ceil(w);
     let stride = slot_rows * seg_max;
     let base = ((round % 2) as usize) * w * stride;
     // one reused scratch buffer packs the [rows, len] sub-block for one

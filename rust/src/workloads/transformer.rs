@@ -76,6 +76,15 @@ pub struct TransformerConfig {
     pub n_layers: usize,
     pub ffn_hidden: usize,
     pub world: usize,
+    /// Nodes the world spans ([`TransformerConfig::topology`] is
+    /// `hierarchical(nodes, world / nodes)`, so `world % nodes == 0` is
+    /// required). At `nodes == 1` (every preset) the serving heap is a
+    /// single-node clique and the fused exchange runs the flat fold; at
+    /// `nodes > 1` `serve::build_serve_heap` declares the NIC-chain
+    /// staging areas and the exchange dispatches to the two-tier
+    /// hierarchical protocol (bitwise-identical results, ~`gpus_per_node`x
+    /// fewer NIC bytes).
+    pub nodes: usize,
     /// KV block the attention kernel iterates in.
     pub kv_block: usize,
     /// Maximum sequence length (shard capacity is `max_seq / world`,
@@ -128,6 +137,7 @@ impl TransformerConfig {
             n_layers: 2,
             ffn_hidden: 64,
             world,
+            nodes: 1,
             kv_block: 4,
             max_seq: 64,
             prefill_chunk: 4,
@@ -151,6 +161,7 @@ impl TransformerConfig {
             n_layers: 2,
             ffn_hidden: 50,
             world,
+            nodes: 1,
             kv_block: 4,
             max_seq: 48,
             prefill_chunk: 3,
@@ -172,6 +183,7 @@ impl TransformerConfig {
             n_layers: 4,
             ffn_hidden: 1024,
             world,
+            nodes: 1,
             kv_block: 32,
             max_seq: 512,
             prefill_chunk: 16,
@@ -196,6 +208,13 @@ impl TransformerConfig {
         }
         if self.world == 0 || self.n_layers == 0 {
             return Err("world and n_layers must be positive".into());
+        }
+        if self.nodes == 0 || self.world % self.nodes != 0 {
+            return Err(format!(
+                "nodes ({}) must be positive and divide world ({}): the node-major \
+                 hierarchical topology needs equal-width nodes",
+                self.nodes, self.world
+            ));
         }
         if self.n_heads == 0 || self.head_dim == 0 {
             return Err("n_heads and head_dim must be positive".into());
@@ -224,6 +243,22 @@ impl TransformerConfig {
             ));
         }
         Ok(())
+    }
+
+    /// The node layout of this config's world: a single-node clique when
+    /// `nodes == 1`, otherwise `hierarchical(nodes, world / nodes)`
+    /// node-major. `serve::build_serve_heap` installs this on the serving
+    /// heap, which is what flips the fused exchange to the two-tier
+    /// protocol.
+    pub fn topology(&self) -> crate::fabric::Topology {
+        crate::fabric::Topology::hierarchical(self.nodes, self.world / self.nodes)
+    }
+
+    /// Builder-style copy with the world spread over `nodes` nodes (test
+    /// and experiment convenience; the presets all default to one node).
+    pub fn on_nodes(mut self, nodes: usize) -> TransformerConfig {
+        self.nodes = nodes;
+        self
     }
 
     /// Parameter count of the dense weights.

@@ -486,6 +486,215 @@ fn rank_dying_mid_gemm_rs_surfaces_typed_timeout() {
     }
 }
 
+/// Serve-exchange heap on a NIC-bridged topology: the flat staging plus
+/// the hierarchical chain/total areas, exactly as `build_serve_heap` lays
+/// them out for a multi-node world.
+fn hier_exchange_heap(
+    topo: &taxfree::fabric::Topology,
+    n: usize,
+    slot_rows: usize,
+) -> Arc<taxfree::iris::SymmetricHeap> {
+    let w = topo.world();
+    let stride = slot_rows * n.div_ceil(w);
+    let b = HeapBuilder::new(w)
+        .topology(topo.clone())
+        .buffer(ATTN_EXCHANGE.data, 2 * w * stride)
+        .flags(ATTN_EXCHANGE.data_flags, w)
+        .buffer(ATTN_EXCHANGE.gather, 2 * w * stride)
+        .flags(ATTN_EXCHANGE.gather_flags, w);
+    Arc::new(
+        collectives::declare_hier_exchange(b, topo, n, slot_rows, &ATTN_EXCHANGE)
+            .build()
+            .unwrap(),
+    )
+}
+
+#[test]
+fn rank_dying_mid_nic_chain_surfaces_chain_starved_root_cause() {
+    // a rank that completes the intra-node gather but dies before running
+    // the NIC chain (stage B): the downstream node's representative
+    // starves waiting for the accumulator hand-off. That wait must come
+    // back as the typed ChainStarved error NAMING THE DEAD RANK — the
+    // root cause — while the other survivors report only generic
+    // secondary timeouts; node-outcome collection must surface the
+    // ChainStarved over the peer timeouts.
+    let topo = taxfree::fabric::Topology::hierarchical(2, 2);
+    let n = 8usize; // seg_max 2, world 4
+    let heap = hier_exchange_heap(&topo, n, 1);
+    let outcomes = run_node_with_timeout(heap, Duration::from_millis(150), move |ctx| {
+        let r = ctx.rank();
+        let parts = partition(n, ctx.world());
+        if r == 0 {
+            // rank 0 (node 0, chain head for its segment groups) performs
+            // stage A by hand — the intra-node gather its node-mates
+            // consume — then dies without ever folding or forwarding the
+            // chain accumulator to rank 2
+            let (w, g, li) = (4usize, 2usize, 0usize);
+            let seg_max = n.div_ceil(w);
+            let slot_base = w * seg_max; // round 1 => odd parity half
+            let contribution: Vec<f32> = (0..n).map(|i| (i + 1) as f32).collect();
+            for s in 0..w {
+                let rep = s % g; // node 0's representative of s
+                let (off, len) = parts[s];
+                let slot = slot_base + ((s / g) * g + li) * seg_max;
+                if rep == r {
+                    ctx.store_local(ATTN_EXCHANGE.data, slot, &contribution[off..off + len])?;
+                } else {
+                    ctx.remote_store(
+                        rep,
+                        ATTN_EXCHANGE.data,
+                        slot,
+                        &contribution[off..off + len],
+                    )?;
+                }
+                ctx.signal(rep, ATTN_EXCHANGE.data_flags, (s / g) * g + li)?;
+            }
+            return Ok(Vec::new()); // died mid-protocol
+        }
+        let contribution: Vec<f32> = (0..n).map(|i| ((r + 1) * (i + 1)) as f32).collect();
+        taxfree::serve::fused_allreduce_exchange_rows(
+            &ctx,
+            &parts,
+            &contribution,
+            1,
+            1,
+            1,
+            &ATTN_EXCHANGE,
+        )
+    });
+    assert!(outcomes[0].is_ok(), "the dead rank itself reported nothing");
+    // rank 2 is rank 0's chain successor: its starved accumulator wait
+    // must carry the root cause, naming the dead rank and its node
+    match &outcomes[2] {
+        Err(IrisError::ChainStarved { producer, node, timeout }) => {
+            assert_eq!(*producer, 0, "the chain names the dead producer");
+            assert_eq!(*node, 0, "and the dead producer's node");
+            assert_eq!(timeout.flags, ATTN_EXCHANGE.chain_flags);
+            assert_eq!(timeout.seen, 0);
+        }
+        other => panic!("expected ChainStarved on rank 2, got {other:?}"),
+    }
+    let msg = outcomes[2].as_ref().unwrap_err().to_string();
+    assert!(msg.contains("rank 0"), "the message must name the dead rank: {msg}");
+    assert!(msg.contains("chain starved"), "{msg}");
+    // ranks 1 and 3 are stuck downstream of the missing totals/relays:
+    // generic secondary timeouts only
+    for rank in [1usize, 3] {
+        assert!(
+            matches!(&outcomes[rank], Err(IrisError::Timeout(_))),
+            "expected a secondary Timeout on rank {rank}, got {:?}",
+            outcomes[rank]
+        );
+    }
+    // the node-level policy surfaces the root cause, not the cascade
+    match collect_node_outcomes(outcomes) {
+        Err(IrisError::ChainStarved { producer: 0, .. }) => {}
+        other => panic!("node outcome must be the ChainStarved root cause, got {other:?}"),
+    }
+}
+
+#[test]
+fn hierarchical_allreduce_on_mismatched_heap_shape_reports_invalid_layout() {
+    // regression (satellite fix): a heap whose hierarchical staging was
+    // declared for a DIFFERENT node shape (same world!) used to starve
+    // waits on chain flags nobody signals — a hang cut short only by the
+    // generic timeout. The shape check must turn it into an immediate
+    // typed InvalidLayout naming the mismatch, before any flag traffic.
+    let run_topo = taxfree::fabric::Topology::hierarchical(2, 4);
+    let declared_for = taxfree::fabric::Topology::hierarchical(4, 2); // same world 8
+    let n = 16usize;
+    let b = HeapBuilder::new(8).topology(run_topo);
+    let heap = Arc::new(collectives::declare_hier_allreduce(b, &declared_for, n).build().unwrap());
+    let outcomes = run_node_with_timeout(heap, Duration::from_millis(150), move |ctx| {
+        let send: Vec<f32> = (0..n).map(|i| (ctx.rank() * 10 + i) as f32).collect();
+        collectives::all_reduce_hierarchical(&ctx, &send, 1)
+    });
+    for (rank, o) in outcomes.iter().enumerate() {
+        match o.as_ref().expect_err("mismatched shape must be rejected") {
+            IrisError::InvalidLayout(msg) => {
+                assert!(msg.contains("2x4"), "rank {rank}: names the running topology: {msg}");
+                assert!(
+                    msg.contains("different node shape"),
+                    "rank {rank}: names the cause: {msg}"
+                );
+            }
+            other => panic!("expected InvalidLayout on rank {rank}, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn hierarchical_serve_exchange_on_mismatched_heap_shape_reports_invalid_layout() {
+    // the rows/serve variant of the regression above: the serving heap's
+    // chain staging declared for a different node shape must be rejected
+    // with a typed InvalidLayout by the dispatched exchange (every rank,
+    // before any flag traffic — no hang, no corruption)
+    let run_topo = taxfree::fabric::Topology::hierarchical(4, 2);
+    let declared_for = taxfree::fabric::Topology::hierarchical(2, 4); // same world 8
+    let n = 16usize;
+    let w = run_topo.world();
+    let stride = n.div_ceil(w);
+    let b = HeapBuilder::new(w)
+        .topology(run_topo)
+        .buffer(ATTN_EXCHANGE.data, 2 * w * stride)
+        .flags(ATTN_EXCHANGE.data_flags, w)
+        .buffer(ATTN_EXCHANGE.gather, 2 * w * stride)
+        .flags(ATTN_EXCHANGE.gather_flags, w);
+    let heap = Arc::new(
+        collectives::declare_hier_exchange(b, &declared_for, n, 1, &ATTN_EXCHANGE)
+            .build()
+            .unwrap(),
+    );
+    let outcomes = run_node_with_timeout(heap, Duration::from_millis(150), move |ctx| {
+        let parts = partition(n, ctx.world());
+        let p = vec![ctx.rank() as f32 + 1.0; n];
+        taxfree::serve::fused_allreduce_exchange_rows(&ctx, &parts, &p, 1, 1, 1, &ATTN_EXCHANGE)
+    });
+    for (rank, o) in outcomes.iter().enumerate() {
+        match o.as_ref().expect_err("mismatched shape must be rejected") {
+            IrisError::InvalidLayout(msg) => {
+                assert!(msg.contains("4x2"), "rank {rank}: names the running topology: {msg}");
+            }
+            other => panic!("expected InvalidLayout on rank {rank}, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn hierarchical_serve_exchange_without_chain_staging_reports_unknown_flags() {
+    // a clique-shaped serve heap (no chain/total staging at all) driven
+    // with a multi-node topology: the dispatch must come back with the
+    // typed unknown-flags error from the shape check — not a panic, not
+    // a hang on undeclared staging
+    let topo = taxfree::fabric::Topology::hierarchical(2, 2);
+    let n = 8usize;
+    let w = topo.world();
+    let seg_max = n.div_ceil(w);
+    let heap = Arc::new(
+        HeapBuilder::new(w)
+            .topology(topo)
+            .buffer(ATTN_EXCHANGE.data, 2 * w * seg_max)
+            .flags(ATTN_EXCHANGE.data_flags, w)
+            .buffer(ATTN_EXCHANGE.gather, 2 * w * seg_max)
+            .flags(ATTN_EXCHANGE.gather_flags, w)
+            .build()
+            .unwrap(),
+    );
+    let outcomes = run_node_with_timeout(heap, Duration::from_millis(150), move |ctx| {
+        let parts = partition(n, ctx.world());
+        let p = vec![1.0f32; n];
+        taxfree::serve::fused_allreduce_exchange_rows(&ctx, &parts, &p, 1, 1, 1, &ATTN_EXCHANGE)
+    });
+    for (rank, o) in outcomes.iter().enumerate() {
+        match o.as_ref().expect_err("missing staging must be rejected") {
+            IrisError::UnknownFlags(f) => {
+                assert_eq!(f, ATTN_EXCHANGE.chain_flags, "rank {rank}");
+            }
+            other => panic!("expected UnknownFlags on rank {rank}, got {other:?}"),
+        }
+    }
+}
+
 #[test]
 #[should_panic(expected = "injected engine failure")]
 fn engine_panic_propagates_to_caller() {

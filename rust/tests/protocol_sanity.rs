@@ -129,6 +129,29 @@ fn paged_kv_swap_is_race_free() {
     }
 }
 
+#[test]
+fn hierarchical_serve_exchange_is_race_free() {
+    // the serve-path hierarchical dispatch under the checker: 2- and
+    // 4-node fabrics, single-row (decode) and M-row (prefill-chunk)
+    // shapes, 5-6 rounds BACK-TO-BACK with no barrier — chain hand-offs,
+    // owner totals, NIC relays, and the parity reuse of all four staging
+    // areas land in one event log and must replay clean
+    for (topo, rows, rounds) in [
+        (Topology::hierarchical(2, 2), 1usize, 6u64),
+        (Topology::hierarchical(2, 3), 3, 5),
+        (Topology::hierarchical(2, 4), 4, 5),
+        (Topology::hierarchical(4, 2), 2, 6),
+    ] {
+        let name = format!(
+            "hier_serve_exchange/{}x{}/r{rows}",
+            topo.nodes(),
+            topo.gpus_per_node()
+        );
+        let r = sanitize_serve_exchange(&topo, 13, rows, rounds);
+        assert_clean(&name, &r);
+    }
+}
+
 // ---------------- mutation kill suite ----------------
 
 /// Replay the heap's recorder into a report.
@@ -379,6 +402,115 @@ fn mutation_slot_overrun_is_flagged_as_slot_reuse_waw() {
     let msg = &r.findings[0].message;
     assert!(msg.contains("slots[4..8]"), "{msg}");
     assert!(msg.contains("(4 racy elements)"), "{msg}");
+}
+
+/// Mutation 7 — **dropped NIC-chain signal**: the upstream node's
+/// representative forwards its running accumulator over the NIC but the
+/// publishing chain signal is deleted, so the downstream node's chain
+/// wait starves — the hierarchical serve exchange's tier-2 hand-off bug.
+/// The starvation must surface as a typed timeout naming the chain cell
+/// *and* as an unsatisfied-wait finding.
+#[test]
+fn mutation_dropped_chain_signal_is_flagged_as_unsatisfied_wait() {
+    // two single-GPU nodes: rank 0 is the chain head, rank 1 the tail
+    let heap = Arc::new(
+        HeapBuilder::new(2)
+            .topology(Topology::hierarchical(2, 1))
+            .buffer("chain", 4)
+            .flags("chain_ready", 1)
+            .build()
+            .expect("heap"),
+    );
+    heap.enable_sanitizer();
+    let outs = run_node_with_timeout(
+        Arc::clone(&heap),
+        Duration::from_millis(150),
+        move |ctx| -> Result<(), IrisError> {
+            if ctx.rank() == 0 {
+                // fold the node's contributions, forward the accumulator
+                ctx.remote_store(1, "chain", 0, &[1.5; 4])?;
+                // MUTATION: `ctx.signal(1, "chain_ready", 0)` is deleted
+                Ok(())
+            } else {
+                ctx.wait_flag_ge("chain_ready", 0, 1)?; // starves
+                let _ = ctx.load_local_vec("chain", 0, 4)?;
+                Ok(())
+            }
+        },
+    );
+    assert!(outs[0].is_ok());
+    match outs[1].as_ref().expect_err("the starved chain wait must time out") {
+        IrisError::Timeout(t) => {
+            assert_eq!(t.flags, "chain_ready");
+            assert_eq!(t.idx, 0);
+            assert_eq!(t.seen, 0);
+        }
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    let r = report_of(&heap);
+    assert_eq!(classes(&r), [FindingClass::UnsatisfiedWait], "{:?}", r.findings);
+    let msg = &r.findings[0].message;
+    assert!(msg.contains("chain_ready[0] >= 1"), "{msg}");
+    assert!(msg.contains("nobody signaled"), "{msg}");
+}
+
+/// Mutation 8 — **premature relay read**: the remote node's
+/// representative relays the owner's reduced segment to its node-mates
+/// without acquiring the owner's gather signal first. Real-time order
+/// (barrier-sequenced after the owner's NIC push, so the bytes are
+/// already there) hides the bug from value checks — only the
+/// happens-before replay sees the unordered read.
+#[test]
+fn mutation_premature_relay_read_is_flagged_as_race_read() {
+    // one owner (rank 0), one remote representative (rank 1) with a
+    // node-mate (rank 2) to relay to: nodes (0), (1, 2) of a 1+2 world
+    let heap = Arc::new(
+        HeapBuilder::new(3)
+            .buffer("gather", 4)
+            .flags("gathered", 1)
+            .build()
+            .expect("heap"),
+    );
+    heap.enable_sanitizer();
+    let gate = Arc::new(Barrier::new(3));
+    let outs = run_node(Arc::clone(&heap), move |ctx| -> Result<(), IrisError> {
+        match ctx.rank() {
+            0 => {
+                // owner pushes its reduced segment over the NIC
+                ctx.remote_store(1, "gather", 0, &[3.0; 4])?;
+                ctx.signal(1, "gathered", 0)?;
+                gate.wait();
+            }
+            1 => {
+                gate.wait(); // real time: the owner's push already landed
+                // MUTATION: `ctx.wait_flag_ge("gathered", 0, 1)` is
+                // deleted — the relay reads the slot unacquired
+                let seg = ctx.load_local_vec("gather", 0, 4)?;
+                ctx.remote_store(2, "gather", 0, &seg)?;
+                ctx.signal(2, "gathered", 0)?;
+            }
+            _ => {
+                ctx.wait_flag_ge("gathered", 0, 1)?;
+                let _ = ctx.load_local_vec("gather", 0, 4)?;
+                gate.wait();
+            }
+        }
+        Ok(())
+    });
+    for o in outs {
+        o.expect("no heap errors in this mutant");
+    }
+    let r = report_of(&heap);
+    assert!(
+        classes(&r).contains(&FindingClass::RaceRead),
+        "premature relay read must replay as a race: {:?}",
+        r.findings
+    );
+    assert!(
+        r.findings.iter().any(|f| f.message.contains("gather[0..4]")),
+        "{:?}",
+        r.findings
+    );
 }
 
 /// The checker's zero-cost-when-off contract: without `enable_sanitizer`

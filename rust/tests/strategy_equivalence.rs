@@ -684,3 +684,187 @@ fn hierarchical_allreduce_bitwise_equals_serve_fused_exchange() {
         }
     }
 }
+
+// ---- hierarchical serve exchange: the two-tier protocol in the real
+//      serving hot loop ----
+
+/// The serve-path acceptance grid: every `(nodes, gpus_per_node)` shape
+/// the multi-node serving engine must hold bitwise on, `(1, 2)` being the
+/// degenerate clique control (the dispatch must leave it untouched).
+const SERVE_NODE_GRID: [(usize, usize); 4] = [(1, 2), (2, 2), (2, 4), (4, 2)];
+
+#[test]
+fn hierarchical_serve_prefill_bitwise_equals_flat() {
+    // tentpole acceptance: the fused prefill hot loop on a NIC-bridged
+    // world (exchanges dispatched to the hierarchical two-tier protocol
+    // by build_serve_heap's topology) must reproduce the single-clique
+    // run BIT FOR BIT — chunk outputs and post-prefill KV caches — for
+    // every grid shape, even and ragged geometry (worlds past
+    // tiny_ragged's 3 heads leave empty head shards), and M ∈
+    // {1, prefill_chunk, prefill_chunk + ragged tail}
+    let seed = 8800;
+    for (nn, g) in SERVE_NODE_GRID {
+        let world = nn * g;
+        for base in [TransformerConfig::tiny(world), TransformerConfig::tiny_ragged(world)] {
+            let multi = base.clone().on_nodes(nn);
+            for prompt_len in [1usize, base.prefill_chunk, base.prefill_chunk + 2] {
+                let flat = run_fused_prefill(&base, seed, prompt_len);
+                let hier = run_fused_prefill(&multi, seed, prompt_len);
+                for (rank, (f, h)) in flat.iter().zip(&hier).enumerate() {
+                    assert_eq!(
+                        f.0, h.0,
+                        "({nn},{g}) M {prompt_len} rank {rank}: prefill chunk outputs"
+                    );
+                    assert_eq!(f.1, h.1, "({nn},{g}) M {prompt_len} rank {rank}: KV cache");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hierarchical_serve_batched_decode_bitwise_equals_flat() {
+    // the decode half of the tentpole acceptance: batched decode steps on
+    // the NIC-bridged world — multi-round parity-slot reuse included
+    // (steps > 2 wraps the round parity) — bitwise equal to the clique
+    // run, outputs and post-step KV caches, A ∈ {1, decode_batch}
+    let seed = 8801;
+    let steps = 3;
+    for (nn, g) in SERVE_NODE_GRID {
+        let world = nn * g;
+        for base in [TransformerConfig::tiny(world), TransformerConfig::tiny_ragged(world)] {
+            let multi = base.clone().on_nodes(nn);
+            for a in [1usize, base.decode_batch] {
+                let flat = run_batched_decode(&base, seed, a, steps);
+                let hier = run_batched_decode(&multi, seed, a, steps);
+                for (rank, (f, h)) in flat.iter().zip(&hier).enumerate() {
+                    assert_eq!(f.0, h.0, "({nn},{g}) A {a} rank {rank}: hidden batch");
+                    assert_eq!(f.1, h.1, "({nn},{g}) A {a} rank {rank}: KV caches");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hierarchical_serve_continuous_bitwise_equals_flat() {
+    // scheduler-level acceptance: the full continuous-batching engine
+    // (chunked prefill interleaved with batched decode, request
+    // completion, KV reclaim) on a multi-node world must emit the exact
+    // final hidden state of every request the clique run emits
+    let seed = 8802;
+    for (nn, g) in SERVE_NODE_GRID {
+        let world = nn * g;
+        for base in [TransformerConfig::tiny(world), TransformerConfig::tiny_ragged(world)] {
+            let reqs = vec![
+                Request { id: 0, prompt_len: 1, gen_len: 4 },
+                Request { id: 1, prompt_len: 5, gen_len: 2 },
+                Request { id: 2, prompt_len: 7, gen_len: 3 },
+            ];
+            let cfg2 = base.clone();
+            let flat = serve_continuous(&base, reqs.clone(), 3, move |rank| {
+                NativeCompute::new_tp(cfg2.clone(), TransformerWeights::random(&cfg2, seed), rank)
+            })
+            .expect("clique serve");
+            let multi = base.clone().on_nodes(nn);
+            let cfg3 = multi.clone();
+            let hier = serve_continuous(&multi, reqs.clone(), 3, move |rank| {
+                NativeCompute::new_tp(cfg3.clone(), TransformerWeights::random(&cfg3, seed), rank)
+            })
+            .expect("multi-node serve");
+            for req in &reqs {
+                let f = flat.results.iter().find(|r| r.id == req.id).expect("clique result");
+                let h = hier.results.iter().find(|r| r.id == req.id).expect("multi result");
+                assert_eq!(f.tokens, h.tokens, "({nn},{g}) req {}: token count", req.id);
+                assert_eq!(
+                    f.final_hidden, h.final_hidden,
+                    "({nn},{g}) req {}: final hidden must be bitwise-identical",
+                    req.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hierarchical_serve_exchange_moves_fewer_nic_bytes_in_the_hot_loop() {
+    // the traffic half of the acceptance criterion, measured on the REAL
+    // exchange (not the DES twin): per exchange round, the dispatched
+    // hierarchical protocol must move strictly fewer cross-node bytes
+    // than the flat push order on the same NIC-bridged world
+    use taxfree::fabric::Topology;
+    use taxfree::iris::HeapBuilder;
+    use taxfree::serve::{
+        fused_allreduce_exchange_rows, fused_allreduce_exchange_rows_flat, ATTN_EXCHANGE,
+    };
+    use taxfree::util::partition;
+
+    let n = 96;
+    let rows = 3;
+    let rounds = 4u64;
+    for (nn, g) in [(2usize, 2usize), (2, 4), (4, 2)] {
+        let topo = Topology::hierarchical(nn, g);
+        let w = topo.world();
+        let seg_max = n.div_ceil(w);
+        let stride = rows * seg_max;
+        // cross-node bytes of `rounds` rounds, measured inside the node:
+        // rank 0 sums the NIC cells of the per-run traffic matrix after a
+        // closing barrier (every rank's pushes have landed)
+        let nic_bytes = |hier: bool| -> u64 {
+            let mut b = HeapBuilder::new(w)
+                .topology(topo.clone())
+                .buffer(ATTN_EXCHANGE.data, 2 * w * stride)
+                .flags(ATTN_EXCHANGE.data_flags, w)
+                .buffer(ATTN_EXCHANGE.gather, 2 * w * stride)
+                .flags(ATTN_EXCHANGE.gather_flags, w);
+            if hier {
+                b = taxfree::collectives::declare_hier_exchange(b, &topo, n, rows, &ATTN_EXCHANGE);
+            }
+            let heap = std::sync::Arc::new(b.build().unwrap());
+            let topo2 = topo.clone();
+            let per_rank = run_node(heap, move |ctx| {
+                let r = ctx.rank();
+                let parts = partition(n, ctx.world());
+                let contribution: Vec<f32> =
+                    (0..rows * n).map(|i| ((r + 1) * (i + 1)) as f32 * 1e-3).collect();
+                for round in 1..=rounds {
+                    if hier {
+                        // dispatches on the heap's multi-node topology
+                        fused_allreduce_exchange_rows(
+                            &ctx, &parts, &contribution, rows, rows, round, &ATTN_EXCHANGE,
+                        )
+                        .expect("hierarchical exchange");
+                    } else {
+                        // the topology-oblivious baseline on the same world
+                        fused_allreduce_exchange_rows_flat(
+                            &ctx, &parts, &contribution, rows, rows, round, &ATTN_EXCHANGE,
+                        )
+                        .expect("flat exchange");
+                    }
+                }
+                ctx.barrier();
+                let mut nic = 0u64;
+                for src in 0..ctx.world() {
+                    for dst in 0..ctx.world() {
+                        if !topo2.same_node(src, dst) {
+                            nic += ctx.traffic().bytes_between(src, dst);
+                        }
+                    }
+                }
+                nic
+            });
+            per_rank[0]
+        };
+        let flat = nic_bytes(false);
+        let hier = nic_bytes(true);
+        assert!(
+            hier < flat,
+            "({nn},{g}): hierarchical serve exchange moved {hier} NIC bytes over {rounds} \
+             rounds, flat {flat} — must be strictly fewer"
+        );
+        // per-round: traffic is identical every round (same schedule), so
+        // the per-round criterion is the total divided by rounds
+        assert_eq!(hier % rounds, 0, "({nn},{g}): hier NIC bytes not round-uniform");
+        assert_eq!(flat % rounds, 0, "({nn},{g}): flat NIC bytes not round-uniform");
+    }
+}
