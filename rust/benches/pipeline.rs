@@ -1,0 +1,83 @@
+//! Bench: the TP×PP chooser figure (full-world TP vs per-node pipeline
+//! stages across (nodes × gpus_per_node × M) points) on the calibrated
+//! model, plus the DES wall-clock of simulating the fat prefill chunk
+//! both ways — the traffic win the closed forms predict, reproduced by
+//! the event-level twin. criterion is unavailable offline; this is a
+//! `harness = false` bench reporting through the crate's own
+//! Summary/Table.
+//!
+//! Run: `cargo bench --offline --bench pipeline`
+
+use taxfree::clock::measure;
+use taxfree::config::{presets, PipelineConfig};
+use taxfree::experiments::ext_pipeline;
+use taxfree::util::Summary;
+use taxfree::workloads::pipeline::{self, PipelineStrategy};
+
+fn main() {
+    let hw = presets::mi300x();
+    let seed = 7;
+
+    // the closed-form figure (jitter-free: a function of grid × hw)
+    let rows = ext_pipeline::sweep(&hw);
+    ext_pipeline::render(&rows, &hw).print();
+    if let Some(best) = rows
+        .iter()
+        .filter(|r| r.nodes > 1)
+        .max_by(|a, b| a.nic_saving.partial_cmp(&b.nic_saving).unwrap())
+    {
+        println!(
+            "\nbest NIC saving: {:.2}x at ({} nodes x {} GPUs, M={})",
+            best.nic_saving, best.nodes, best.gpus_per_node, best.m
+        );
+    }
+
+    // the DES twin on the fat prefill chunk: the simulated wall-clock
+    // behind the chooser's tp_pp verdict
+    let fat = PipelineConfig {
+        m: 512,
+        d_model: 8192,
+        n_layers: 80,
+        nodes: 2,
+        gpus_per_node: 8,
+        microbatch: 128,
+    };
+    let tp = pipeline::simulate(&fat, &hw, PipelineStrategy::TpOnly, seed);
+    let pp = pipeline::simulate(&fat, &hw, PipelineStrategy::TpPp, seed);
+    assert!(pp.makespan_s < tp.makespan_s, "the NIC-bound chunk must pipeline");
+    println!(
+        "\nDES 2x8 M=512: tp_only {:.4} ms ({} NIC bytes) / tp_pp {:.4} ms ({} NIC bytes)",
+        tp.makespan_s * 1e3,
+        tp.ledger.nic_bytes,
+        pp.makespan_s * 1e3,
+        pp.ledger.nic_bytes
+    );
+
+    // harness cost: how fast the DES re-simulates a small grid point
+    let tiny = PipelineConfig::tiny(2, 4);
+    let samples = measure(2, 10, || {
+        for s in PipelineStrategy::ALL {
+            let r = pipeline::simulate(&tiny, &hw, s, seed);
+            assert!(r.makespan_s > 0.0);
+        }
+    });
+    let s = Summary::of(&samples);
+    println!(
+        "\nbench pipeline: tiny 2x4 point (both strategies) in {:.2} ms mean, {:.2} ms p99",
+        s.mean / 1e6,
+        s.p99 / 1e6
+    );
+
+    // and how fast the whole closed-form figure regenerates
+    let samples = measure(2, 10, || {
+        let r = ext_pipeline::sweep(&hw);
+        assert_eq!(r.len(), ext_pipeline::GRID.len());
+    });
+    let s = Summary::of(&samples);
+    println!(
+        "bench pipeline: full closed-form figure ({} points) in {:.3} ms mean, {:.3} ms p99",
+        ext_pipeline::GRID.len(),
+        s.mean / 1e6,
+        s.p99 / 1e6
+    );
+}

@@ -29,7 +29,9 @@ use crate::iris::{collect_rank_outcomes, run_node, HeapBuilder, IrisError, Symme
 use crate::serve::{self, ExchangeBufs};
 use crate::tensor::Tensor;
 use crate::util::{partition, Prng};
-use crate::workloads::transformer::{KvShard, TransformerConfig};
+use crate::workloads::transformer::{
+    prompt_embeddings, KvShard, NativeCompute, TransformerConfig, TransformerWeights,
+};
 
 /// Replay the recorder installed on `heap` (panics if none was installed
 /// — drivers always install one before running).
@@ -182,6 +184,41 @@ pub fn sanitize_serve_exchange(topo: &Topology, n: usize, rows: usize, rounds: u
     report_of(&heap)
 }
 
+/// Run the TP×PP stage-boundary activation protocol under the checker on
+/// the real serving heap: `steps` fused microbatches (one ragged prefill
+/// chunk, then single-row batched decode steps) stream through `stages`
+/// pipeline stages of `g`-wide TP cliques — the stage-confined exchanges,
+/// the counterpart+relay forward hand-offs, and the last stage's
+/// loop-back broadcast all land in one event log, so the checker proves
+/// the parity-slot reuse across microbatches is ordered by real
+/// happens-before edges, not by luck.
+pub fn sanitize_stage_pipeline(stages: usize, g: usize, steps: usize) -> Report {
+    let mut cfg = TransformerConfig::tiny(stages * g).on_nodes(stages);
+    cfg.pp_stages = stages;
+    // every stage needs at least one layer (tiny ships 2); the bump keeps
+    // deep-pipeline grids like 4 stages x 2 GPUs inside the validator
+    cfg.n_layers = cfg.n_layers.max(stages);
+    cfg.validate().expect("valid TP x PP config");
+    let heap = serve::build_serve_heap(&cfg);
+    heap.enable_sanitizer();
+    let outs = run_node(Arc::clone(&heap), move |ctx| -> Result<Tensor, IrisError> {
+        let w = TransformerWeights::random(&cfg, 0x99);
+        let compute = NativeCompute::new_tp(cfg.tp_view(), w, cfg.tp_local_index(ctx.rank()));
+        let mut shard = serve::make_shard(&cfg, &compute, ctx.rank(), None);
+        let mut round = 0u64;
+        let m = cfg.prefill_chunk.min(3);
+        let rows = prompt_embeddings(&cfg, 0, 0, m);
+        let out = serve::prefill_step_fused(&ctx, &cfg, &compute, &mut shard, &rows, &mut round)?;
+        let mut h = out.rows(m - 1, m);
+        for _ in 1..steps {
+            h = serve::decode_step_fused(&ctx, &cfg, &compute, &mut shard, &h, 0, &mut round)?;
+        }
+        Ok(h)
+    });
+    collect_rank_outcomes(outs).expect("stage pipeline protocol run");
+    report_of(&heap)
+}
+
 /// Run the paged-KV swap-out/swap-in path under the checker on the real
 /// serving heap: every rank grows a paged KV shard past a page boundary,
 /// swaps it out to the swap region, swaps it back in, and appends again —
@@ -243,6 +280,13 @@ mod tests {
     #[test]
     fn kv_swap_clean_under_checker() {
         let r = sanitize_kv_swap(2);
+        assert!(r.is_clean(), "{:?}", r.findings);
+        assert!(r.events > 0, "recorder saw nothing");
+    }
+
+    #[test]
+    fn stage_pipeline_clean_under_checker() {
+        let r = sanitize_stage_pipeline(2, 2, 2);
         assert!(r.is_clean(), "{:?}", r.findings);
         assert!(r.events > 0, "recorder saw nothing");
     }

@@ -14,6 +14,20 @@ pub mod presets;
 pub use hw::{GemmEff, HwConfig};
 pub use parse::RawConfig;
 
+/// Shared positivity rule for workload-config validation: reject if any
+/// listed field is zero, naming the whole group in one message (the
+/// geometry fields of a workload validate as a unit). Every `validate`
+/// with a "must be positive" group routes through here so a new rule —
+/// like [`PipelineConfig`]'s — is written once, not copy-pasted per
+/// config.
+fn validate_positive(fields: &[(&str, usize)]) -> Result<(), String> {
+    if fields.iter().any(|&(_, v)| v == 0) {
+        let names: Vec<&str> = fields.iter().map(|&(n, _)| n).collect();
+        return Err(format!("{} must be positive", names.join(", ")));
+    }
+    Ok(())
+}
+
 /// Measurement protocol (mirrors paper §5.1: 500 iterations + 100 warmup).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunProtocol {
@@ -316,9 +330,12 @@ impl PrefillConfig {
         if self.m == 0 {
             return Err("m must be positive (an M = 0 prefill chunk is rejected)".into());
         }
-        if self.n_heads == 0 || self.head_dim == 0 || self.ffn_hidden == 0 || self.n_layers == 0 {
-            return Err("n_heads, head_dim, ffn_hidden, n_layers must be positive".into());
-        }
+        validate_positive(&[
+            ("n_heads", self.n_heads),
+            ("head_dim", self.head_dim),
+            ("ffn_hidden", self.ffn_hidden),
+            ("n_layers", self.n_layers),
+        ])?;
         if self.block_n == 0 {
             return Err("block_n must be positive".into());
         }
@@ -430,9 +447,12 @@ impl BatchDecodeConfig {
         if self.a == 0 {
             return Err("a must be positive (an A = 0 decode step does nothing)".into());
         }
-        if self.n_heads == 0 || self.head_dim == 0 || self.ffn_hidden == 0 || self.n_layers == 0 {
-            return Err("n_heads, head_dim, ffn_hidden, n_layers must be positive".into());
-        }
+        validate_positive(&[
+            ("n_heads", self.n_heads),
+            ("head_dim", self.head_dim),
+            ("ffn_hidden", self.ffn_hidden),
+            ("n_layers", self.n_layers),
+        ])?;
         if self.kv_len == 0 {
             return Err("kv_len must be positive".into());
         }
@@ -526,6 +546,103 @@ impl MultinodeConfig {
     /// Segment per rank (ragged; tails may be empty).
     pub fn partition(&self) -> Vec<(usize, usize)> {
         crate::util::partition(self.elems, self.world())
+    }
+}
+
+/// TP-only vs TP×PP serving parameters — the DES twin of the pipelined
+/// layer-sharded serving stack ([`crate::workloads::pipeline`]). One
+/// `m`-row prompt chunk runs through all `n_layers` on a
+/// `nodes × gpus_per_node` world two ways: TP-only (every rank runs every
+/// layer, one hierarchical `O(d_model)` exchange over the NICs **per
+/// layer**) vs TP×PP (stages map onto nodes, TP exchanges stay on the
+/// intra-node clique, and only `microbatch × d_model` activation rows
+/// cross the NIC **per stage boundary per microbatch** — plus the
+/// fill/drain bubble of `(nodes - 1)` stage-times the pipeline pays to
+/// start up). The twin prices both so the model can *choose* a strategy
+/// per (nodes, gpus_per_node, M) point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineConfig {
+    /// Prompt rows of the chunk (the M streamed through the pipeline).
+    pub m: usize,
+    /// Model width (each boundary hand-off moves `rows × d_model` lanes).
+    pub d_model: usize,
+    /// Transformer layers, sharded contiguously over `nodes` stages under
+    /// TP×PP (ragged allowed; every stage needs at least one layer).
+    pub n_layers: usize,
+    /// Compute nodes — and, under TP×PP, pipeline stages (one per node).
+    pub nodes: usize,
+    /// GPUs per node (the TP width of one stage under TP×PP).
+    pub gpus_per_node: usize,
+    /// Rows per microbatch the TP×PP schedule streams across a stage
+    /// boundary (stage `s+1` starts consuming microbatch `q` while stage
+    /// `s` is still producing `q+1`). The last microbatch may be ragged.
+    pub microbatch: usize,
+}
+
+impl PipelineConfig {
+    /// A Llama-70B-class prefill chunk on `nodes` nodes of 8 GPUs:
+    /// 64 rows of d_model 8192 through 80 layers, 16-row microbatches.
+    pub fn paper_pipeline(nodes: usize) -> PipelineConfig {
+        PipelineConfig {
+            m: 64,
+            d_model: 8192,
+            n_layers: 80,
+            nodes,
+            gpus_per_node: 8,
+            microbatch: 16,
+        }
+    }
+
+    /// Small configuration for tests: m = 5 rows and 5 layers are ragged
+    /// over 2-row microbatches and 2- or 4-node stage grids.
+    pub fn tiny(nodes: usize, gpus_per_node: usize) -> PipelineConfig {
+        PipelineConfig { m: 5, d_model: 24, n_layers: 5, nodes, gpus_per_node, microbatch: 2 }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        validate_positive(&[
+            ("m", self.m),
+            ("d_model", self.d_model),
+            ("n_layers", self.n_layers),
+            ("nodes", self.nodes),
+            ("gpus_per_node", self.gpus_per_node),
+            ("microbatch", self.microbatch),
+        ])?;
+        if self.n_layers < self.nodes {
+            return Err(format!(
+                "n_layers ({}) must be >= nodes ({}): every TP×PP stage must \
+                 own at least one layer",
+                self.n_layers, self.nodes
+            ));
+        }
+        Ok(())
+    }
+
+    /// The two-tier world this serving point runs on.
+    pub fn topology(&self) -> crate::fabric::Topology {
+        crate::fabric::Topology::hierarchical(self.nodes, self.gpus_per_node)
+    }
+
+    pub fn world(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Microbatches the TP×PP schedule streams (`ceil(m / microbatch)`;
+    /// the last one holds the ragged remainder).
+    pub fn microbatches(&self) -> usize {
+        self.m.div_ceil(self.microbatch)
+    }
+
+    /// Rows of microbatch `q` (the last one may be ragged).
+    pub fn microbatch_rows(&self, q: usize) -> usize {
+        debug_assert!(q < self.microbatches());
+        (self.m - q * self.microbatch).min(self.microbatch)
+    }
+
+    /// Contiguous layer range per TP×PP stage (ragged
+    /// [`crate::util::partition`] of `n_layers` over `nodes`).
+    pub fn stage_layers(&self) -> Vec<(usize, usize)> {
+        crate::util::partition(self.n_layers, self.nodes)
     }
 }
 
@@ -749,6 +866,33 @@ mod tests {
         assert!(bad.validate().is_err());
         bad = MultinodeConfig::tiny(2, 2);
         bad.nodes = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn pipeline_config_validates_and_schedules() {
+        for (nn, g) in [(1usize, 4usize), (2, 2), (2, 4), (4, 2)] {
+            let cfg = PipelineConfig::tiny(nn, g);
+            cfg.validate().unwrap();
+            assert_eq!(cfg.world(), nn * g);
+            assert_eq!(cfg.topology().gpus_per_node(), g);
+            // microbatches cover m exactly (ragged tail)
+            let rows: usize = (0..cfg.microbatches()).map(|q| cfg.microbatch_rows(q)).sum();
+            assert_eq!(rows, cfg.m);
+            // stages cover the layer stack contiguously
+            let layers: usize = cfg.stage_layers().iter().map(|(_, l)| l).sum();
+            assert_eq!(layers, cfg.n_layers);
+            assert!(cfg.stage_layers().iter().all(|&(_, l)| l >= 1));
+        }
+        for nodes in [2usize, 4] {
+            PipelineConfig::paper_pipeline(nodes).validate().unwrap();
+        }
+        let mut bad = PipelineConfig::tiny(2, 2);
+        bad.microbatch = 0;
+        assert!(bad.validate().is_err());
+        // a stage without a layer is rejected
+        bad = PipelineConfig::tiny(2, 2);
+        bad.n_layers = 1;
         assert!(bad.validate().is_err());
     }
 

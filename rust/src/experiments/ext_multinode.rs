@@ -122,6 +122,7 @@ fn serve_path_cfg() -> TransformerConfig {
         ffn_hidden: 28672,
         world: 8,
         nodes: 2,
+        pp_stages: 1,
         kv_block: 16,
         max_seq: 512,
         prefill_chunk: 64,

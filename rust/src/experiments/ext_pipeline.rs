@@ -1,0 +1,279 @@
+//! Extension figure: the TP×PP chooser — for each (nodes, gpus_per_node,
+//! M) point, the closed-form price of running every layer tensor-parallel
+//! over the full world (two hierarchical NIC exchanges per layer,
+//! `O(m · d_model · n_layers)` NIC bytes) vs sharding the layers into
+//! per-node pipeline stages with intra-clique TP and streamed microbatch
+//! hand-offs (`O(m · d_model)` NIC bytes plus the fill/drain bubble),
+//! and which of the two the model picks ([`pipeline::choose`]). The DES
+//! twin behind the closed forms is [`crate::workloads::pipeline`]; the
+//! functional twin — real layer sharding, bitwise-checked against
+//! TP-only — is the `pp_stages > 1` serving path.
+//!
+//! Every column of the emitted `BENCH_pipeline.json` is jitter-free
+//! closed-form arithmetic (integer NIC bytes, analytic estimates), so
+//! the perf-trajectory point is reproducible from the config alone; the
+//! printed figure adds a simulated spotlight of the fat prefill chunk
+//! that the JSON deliberately omits.
+
+use crate::config::{HwConfig, PipelineConfig};
+use crate::util::Table;
+use crate::workloads::pipeline::{self, PipelineStrategy};
+
+/// One row of the chooser figure.
+#[derive(Debug, Clone)]
+pub struct PipelineRow {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub m: usize,
+    pub microbatch: usize,
+    /// closed-form NIC bytes, TP over the full world (per layer ×2)
+    pub tp_only_nic_bytes: u64,
+    /// closed-form NIC bytes, TP×PP (per microbatch boundary + loop-back)
+    pub tp_pp_nic_bytes: u64,
+    /// TP-only / TP×PP NIC traffic (1.0 on one node: both move nothing)
+    pub nic_saving: f64,
+    pub tp_only_est_ms: f64,
+    pub tp_pp_est_ms: f64,
+    /// the fill bubble inside `tp_pp_est_ms`, priced separately
+    pub bubble_ms: f64,
+    /// the strategy [`pipeline::choose`] picks at this point
+    pub choice: &'static str,
+}
+
+/// The (nodes, gpus_per_node, m, microbatch) grid — the paper's 8-GPU
+/// node out to 4×8 NIC-bridged worlds, at the 64-row decode-ish chunk
+/// and the 512-row fat prefill chunk (Q = 4 microbatches either way).
+pub const GRID: [(usize, usize, usize, usize); 6] = [
+    (1, 8, 64, 16),
+    (2, 4, 64, 16),
+    (2, 8, 64, 16),
+    (2, 8, 512, 128),
+    (4, 4, 64, 16),
+    (4, 8, 512, 128),
+];
+
+fn grid_cfg(nodes: usize, gpus_per_node: usize, m: usize, microbatch: usize) -> PipelineConfig {
+    PipelineConfig {
+        m,
+        d_model: 8192,
+        n_layers: 80,
+        nodes,
+        gpus_per_node,
+        microbatch,
+    }
+}
+
+/// Build the sweep. Pure closed-form arithmetic — no simulation, no
+/// jitter, no seed: the rows are a function of (grid, hw) alone.
+pub fn sweep(hw: &HwConfig) -> Vec<PipelineRow> {
+    GRID.iter()
+        .map(|&(nodes, gpus_per_node, m, microbatch)| {
+            let cfg = grid_cfg(nodes, gpus_per_node, m, microbatch);
+            cfg.validate().expect("grid configs are valid");
+            let tp_nic = pipeline::tp_only_nic_bytes(&cfg);
+            let pp_nic = pipeline::tp_pp_nic_bytes(&cfg);
+            PipelineRow {
+                nodes,
+                gpus_per_node,
+                m,
+                microbatch,
+                tp_only_nic_bytes: tp_nic,
+                tp_pp_nic_bytes: pp_nic,
+                nic_saving: if pp_nic > 0 { tp_nic as f64 / pp_nic as f64 } else { 1.0 },
+                tp_only_est_ms: pipeline::tp_only_estimate_s(&cfg, hw) * 1e3,
+                tp_pp_est_ms: pipeline::tp_pp_estimate_s(&cfg, hw) * 1e3,
+                bubble_ms: pipeline::tp_pp_bubble_s(&cfg, hw) * 1e3,
+                choice: pipeline::choose(&cfg, hw).name(),
+            }
+        })
+        .collect()
+}
+
+/// Render the figure as a table.
+pub fn render(rows: &[PipelineRow], hw: &HwConfig) -> Table {
+    let mut t = Table::new(&format!(
+        "TP x PP chooser — full-world TP vs per-node pipeline stages per \
+         (nodes x gpus/node x M) (d_model 8192, 80 layers, {})",
+        hw.name
+    ))
+    .header(vec![
+        "nodes",
+        "gpus/node",
+        "M",
+        "ubatch",
+        "tp_only NIC MB",
+        "tp_pp NIC MB",
+        "NIC saving",
+        "tp_only est ms",
+        "tp_pp est ms",
+        "bubble ms",
+        "choice",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.nodes.to_string(),
+            r.gpus_per_node.to_string(),
+            r.m.to_string(),
+            r.microbatch.to_string(),
+            format!("{:.3}", r.tp_only_nic_bytes as f64 / 1e6),
+            format!("{:.3}", r.tp_pp_nic_bytes as f64 / 1e6),
+            format!("{:.2}", r.nic_saving),
+            format!("{:.4}", r.tp_only_est_ms),
+            format!("{:.4}", r.tp_pp_est_ms),
+            format!("{:.4}", r.bubble_ms),
+            r.choice.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Serialize the sweep as machine-readable JSON (hand-rolled — no serde
+/// offline; flat and stable so CI can diff it across commits as a
+/// perf-trajectory point). `seed` and `iters` ride along for header
+/// parity with the other perf points; every value below them is
+/// jitter-free closed form.
+pub fn to_json(rows: &[PipelineRow], hw: &HwConfig, seed: u64, iters: usize) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"pipeline\",\n");
+    s.push_str(&format!("  \"hw\": \"{}\",\n", hw.name));
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str(&format!("  \"iters\": {iters},\n"));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"nodes\": {}, \"gpus_per_node\": {}, \"m\": {}, \"microbatch\": {}, \
+             \"tp_only_nic_bytes\": {}, \"tp_pp_nic_bytes\": {}, \"nic_saving\": {:.4}, \
+             \"tp_only_est_ms\": {:.6}, \"tp_pp_est_ms\": {:.6}, \"bubble_ms\": {:.6}, \
+             \"choice\": \"{}\"}}{}",
+            r.nodes,
+            r.gpus_per_node,
+            r.m,
+            r.microbatch,
+            r.tp_only_nic_bytes,
+            r.tp_pp_nic_bytes,
+            r.nic_saving,
+            r.tp_only_est_ms,
+            r.tp_pp_est_ms,
+            r.bubble_ms,
+            r.choice,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Run and print the figure (the `experiments pipeline` subcommand),
+/// writing the JSON point to `json_path` when given. The spotlight line
+/// runs the DES twin on the fat prefill chunk — the simulated wall-clock
+/// behind the closed-form choice — and is intentionally not part of the
+/// JSON point.
+pub fn run(hw: &HwConfig, seed: u64, iters: usize, json_path: Option<&str>) {
+    let rows = sweep(hw);
+    render(&rows, hw).print();
+    let spot = grid_cfg(2, 8, 512, 128);
+    let tp_ms = pipeline::mean_latency_s(&spot, hw, PipelineStrategy::TpOnly, seed, iters) * 1e3;
+    let pp_ms = pipeline::mean_latency_s(&spot, hw, PipelineStrategy::TpPp, seed, iters) * 1e3;
+    println!(
+        "DES spotlight 2x8, M=512: tp_only {:.4} ms / tp_pp {:.4} ms ({:.2}x) — the NIC \
+         traffic win turned into simulated wall-clock",
+        tp_ms,
+        pp_ms,
+        tp_ms / pp_ms
+    );
+    if let Some(path) = json_path {
+        match std::fs::write(path, to_json(&rows, hw, seed, iters)) {
+            Ok(()) => println!("wrote {path} (machine-readable perf point)"),
+            Err(e) => eprintln!("write {path}: {e}"),
+        }
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn rows_cover_the_grid_and_the_chooser_is_consistent() {
+        let hw = presets::mi300x();
+        let rows = sweep(&hw);
+        assert_eq!(rows.len(), GRID.len());
+        for r in &rows {
+            if r.nodes == 1 {
+                // one node: neither strategy touches a NIC and the
+                // chooser must not pipeline
+                assert_eq!(r.tp_only_nic_bytes, 0);
+                assert_eq!(r.tp_pp_nic_bytes, 0);
+                assert_eq!(r.nic_saving, 1.0);
+                assert_eq!(r.choice, "tp_only");
+                assert_eq!(r.bubble_ms, 0.0);
+            } else {
+                // multi-node: TP x PP always moves fewer NIC bytes…
+                assert!(
+                    r.tp_pp_nic_bytes < r.tp_only_nic_bytes,
+                    "({}, {}, {})",
+                    r.nodes,
+                    r.gpus_per_node,
+                    r.m
+                );
+                assert!(r.nic_saving > 1.0);
+                assert!(r.bubble_ms > 0.0);
+                // …and the chooser picks exactly the cheaper estimate
+                let want =
+                    if r.tp_pp_est_ms <= r.tp_only_est_ms { "tp_pp" } else { "tp_only" };
+                assert_eq!(r.choice, want, "({}, {}, {})", r.nodes, r.gpus_per_node, r.m);
+            }
+            assert!(r.tp_only_est_ms > 0.0 && r.tp_pp_est_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn the_fat_chunk_rows_choose_the_pipeline() {
+        // at M=512 the per-layer NIC exchanges dominate TP-only and the
+        // chooser must flip to TP x PP on every multi-node fat row
+        let rows = sweep(&presets::mi300x());
+        let fat: Vec<_> = rows.iter().filter(|r| r.m == 512).collect();
+        assert!(!fat.is_empty());
+        for r in fat {
+            assert_eq!(r.choice, "tp_pp", "({}, {})", r.nodes, r.gpus_per_node);
+            assert!(r.tp_pp_est_ms < r.tp_only_est_ms);
+        }
+    }
+
+    #[test]
+    fn json_point_is_well_formed_and_deterministic() {
+        let hw = presets::mi300x();
+        let a = to_json(&sweep(&hw), &hw, 7, 1);
+        let b = to_json(&sweep(&hw), &hw, 7, 1);
+        assert_eq!(a, b, "the perf point must be reproducible from (config, hw)");
+        assert_eq!(a.matches('{').count(), a.matches('}').count());
+        assert_eq!(a.matches('[').count(), a.matches(']').count());
+        assert_eq!(a.matches("\"nodes\":").count(), GRID.len());
+        for key in [
+            "\"bench\": \"pipeline\"",
+            "\"tp_only_nic_bytes\"",
+            "\"tp_pp_nic_bytes\"",
+            "\"nic_saving\"",
+            "\"tp_only_est_ms\"",
+            "\"tp_pp_est_ms\"",
+            "\"bubble_ms\"",
+            "\"choice\": \"tp_pp\"",
+            "\"choice\": \"tp_only\"",
+        ] {
+            assert!(a.contains(key), "missing {key} in {a}");
+        }
+        assert!(!a.contains(",\n  ]"), "trailing comma would break parsers");
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let hw = presets::mi300x();
+        let t = render(&sweep(&hw), &hw);
+        assert_eq!(t.n_rows(), GRID.len());
+        assert!(t.render().contains("choice"));
+    }
+}

@@ -10,6 +10,7 @@ pub mod ext_allreduce;
 pub mod ext_batch_decode;
 pub mod ext_gemm_rs;
 pub mod ext_multinode;
+pub mod ext_pipeline;
 pub mod ext_prefill;
 pub mod ext_serve_slo;
 pub mod ext_tp_attn;

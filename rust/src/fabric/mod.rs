@@ -155,6 +155,30 @@ impl Topology {
         (nd + 1 < self.nodes).then(|| rank + self.gpus_per_node)
     }
 
+    /// Pipeline stage hosting `rank` under the TP×PP mapping: stages map
+    /// one-to-one onto nodes (stage `s` *is* node `s`), so a stage's TP
+    /// clique is its node's intra-node fabric and a stage boundary is
+    /// exactly one NIC hop. Alias of [`Topology::node_of`] — named so
+    /// serving code reads in pipeline terms.
+    pub fn stage_of(&self, rank: usize) -> usize {
+        self.node_of(rank)
+    }
+
+    /// Ranks of pipeline stage `stage` (the node's contiguous range).
+    pub fn stage_ranks(&self, stage: usize) -> std::ops::Range<usize> {
+        self.node_ranks(stage)
+    }
+
+    /// `rank`'s counterpart on pipeline stage `stage`: the rank at the
+    /// same local index on that stage's node. Stage-boundary activation
+    /// hand-offs pair counterparts so each of the `gpus_per_node` NIC
+    /// lanes between adjacent nodes carries exactly one producer's
+    /// activation segment — no lane is serialized behind another's push.
+    pub fn counterpart(&self, rank: usize, stage: usize) -> usize {
+        debug_assert!(stage < self.nodes);
+        stage * self.gpus_per_node + self.local_index(rank)
+    }
+
     /// All directed (src, dst) pairs of the world, both tiers.
     pub fn directed_links(&self) -> Vec<(usize, usize)> {
         let w = self.world();
@@ -307,6 +331,22 @@ mod tests {
         for r in 0..4 {
             assert_eq!(c.chain_prev(r), None);
             assert_eq!(c.chain_next(r), None);
+        }
+    }
+
+    #[test]
+    fn stage_mapping_pairs_counterparts_by_local_index() {
+        let t = Topology::hierarchical(3, 4);
+        for r in 0..t.world() {
+            assert_eq!(t.stage_of(r), t.node_of(r));
+            assert!(t.stage_ranks(t.stage_of(r)).contains(&r));
+            for s in 0..t.nodes() {
+                let c = t.counterpart(r, s);
+                assert_eq!(t.stage_of(c), s);
+                assert_eq!(t.local_index(c), t.local_index(r));
+            }
+            // counterpart on the own stage is the rank itself
+            assert_eq!(t.counterpart(r, t.stage_of(r)), r);
         }
     }
 

@@ -75,6 +75,14 @@ pub enum IrisError {
     /// rank dies mid-chain — so outcome collection surfaces the dead rank
     /// instead of whichever peer timed out first.
     ChainStarved { producer: usize, node: usize, timeout: WaitTimeout },
+    /// A pipeline stage's activation hand-off starved: the producer rank
+    /// on the previous stage never pushed (or never signalled) its
+    /// activation segment for the microbatch the consumer is waiting on.
+    /// Like [`IrisError::ChainStarved`] this names the rank that owed the
+    /// push — the root cause when a rank dies mid-stage-boundary — so
+    /// outcome collection surfaces the dead producer instead of whichever
+    /// downstream peer timed out first.
+    StageStarved { producer: usize, stage: usize, timeout: WaitTimeout },
 }
 
 impl fmt::Display for IrisError {
@@ -105,6 +113,11 @@ impl fmt::Display for IrisError {
                 f,
                 "accumulator chain starved: rank {producer} (node {node}) never handed off \
                  the NIC-chain partial ({timeout})"
+            ),
+            IrisError::StageStarved { producer, stage, timeout } => write!(
+                f,
+                "stage hand-off starved: rank {producer} (stage {stage}) never pushed \
+                 its activation segment across the stage boundary ({timeout})"
             ),
         }
     }
@@ -151,6 +164,13 @@ mod tests {
         };
         assert!(starved.to_string().contains("rank 4 (node 1)"));
         assert!(starved.to_string().contains("chain starved"));
+        let stage = IrisError::StageStarved {
+            producer: 2,
+            stage: 0,
+            timeout: WaitTimeout { rank: 5, flags: "s".into(), idx: 1, target: 3, seen: 2 },
+        };
+        assert!(stage.to_string().contains("rank 2 (stage 0)"));
+        assert!(stage.to_string().contains("stage hand-off starved"));
     }
 
     #[test]

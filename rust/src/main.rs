@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! taxfree experiments <fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|
-//!         tp_attn|prefill|batch_decode|multinode|serve_slo|autotune|all> [--iters N]
+//!         tp_attn|prefill|batch_decode|multinode|pipeline|serve_slo|autotune|all> [--iters N]
 //!         [--seed N] [--config FILE] [--set section.key=value]... [--json FILE]
 //! taxfree serve [--world N] [--requests N] [--backend native|pjrt]
 //!         [--artifacts DIR] [--seed N]
@@ -52,7 +52,7 @@ fn print_help() {
     println!(
         "taxfree — reproduction of \"Eliminating Multi-GPU Performance Taxes\"\n\
          \n\
-         USAGE:\n  taxfree experiments <fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|batch_decode|multinode|serve_slo|autotune|all> [options]\n\
+         USAGE:\n  taxfree experiments <fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|batch_decode|multinode|pipeline|serve_slo|autotune|all> [options]\n\
          \x20 taxfree serve [--world N] [--requests N] [--backend native|pjrt] [--artifacts DIR]\n\
          \x20 taxfree analyze [ag_gemm|gemm_rs|flash_decode|allreduce|serve_exchange|kv_swap|lint|all] [options]\n\
          \x20 taxfree selftest [--artifacts DIR]\n\
@@ -75,6 +75,7 @@ fn print_help() {
          \x20                        perf-point experiments (defaults:\n\
          \x20                        batch_decode -> BENCH_batch_decode.json,\n\
          \x20                        multinode -> BENCH_multinode.json,\n\
+         \x20                        pipeline -> BENCH_pipeline.json,\n\
          \x20                        serve_slo -> BENCH_serve_slo.json)\n"
     );
 }
@@ -84,9 +85,10 @@ fn print_help() {
 /// regenerates (`scripts/regen_bench.sh`) and diffs against the
 /// committed seed points; add a row here when an experiment grows a
 /// `--json` emission.
-const JSON_BENCHES: [(&str, &str); 3] = [
+const JSON_BENCHES: [(&str, &str); 4] = [
     ("batch_decode", "BENCH_batch_decode.json"),
     ("multinode", "BENCH_multinode.json"),
+    ("pipeline", "BENCH_pipeline.json"),
     ("serve_slo", "BENCH_serve_slo.json"),
 ];
 
@@ -250,6 +252,11 @@ fn cmd_experiments(args: &[String]) -> i32 {
             let json = json_path_for("multinode", &opts);
             experiments::ext_multinode::run(hw, seed, iters, Some(json.as_str()));
         }
+        // the TP x PP chooser (full-world TP vs per-node pipeline stages)
+        "pipeline" => {
+            let json = json_path_for("pipeline", &opts);
+            experiments::ext_pipeline::run(hw, seed, iters, Some(json.as_str()));
+        }
         // serving SLOs under the paged-KV admission policy
         "serve_slo" => {
             let json = json_path_for("serve_slo", &opts);
@@ -268,12 +275,13 @@ fn cmd_experiments(args: &[String]) -> i32 {
             experiments::ext_prefill::run(&hw9, seed, iters);
             experiments::ext_batch_decode::run(hw, seed, iters, None);
             experiments::ext_multinode::run(hw, seed, iters, None);
+            experiments::ext_pipeline::run(hw, seed, iters, None);
             experiments::ext_serve_slo::run(hw, seed, iters, None);
             run_autotune();
         }
         other => {
             eprintln!(
-                "unknown experiment: {other} (want fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|batch_decode|multinode|serve_slo|autotune|all)"
+                "unknown experiment: {other} (want fig2|fig9|fig10|fig11|ablations|allreduce|gemm_rs|tp_attn|prefill|batch_decode|multinode|pipeline|serve_slo|autotune|all)"
             );
             return 2;
         }

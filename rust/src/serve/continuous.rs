@@ -298,12 +298,18 @@ fn scheduler_body<C: LocalCompute>(
     // the paged KV tier: head-sharded backends draw pages from the
     // rank-shared pool; replicated backends (and kv_paged = false) keep
     // contiguous shards and degrade to pure slot-count admission
-    let pools = if compute.attn_sharded() && cfg.kv_paged {
+    // the paged tier stays TP-only for now: admission reads the local
+    // free-page count, and under TP×PP a stage appends only its own
+    // layers' KV — stages would drain their pools at different rates and
+    // the (deliberately communication-free) admission decisions would
+    // diverge across stages, desynchronizing the flag protocol. Pipeline
+    // serving degrades to static-slot admission.
+    let pools = if compute.attn_sharded() && cfg.kv_paged && cfg.pp_stages == 1 {
         Some(make_kv_pools(cfg, ctx.heap_arc(), ctx.rank())?)
     } else {
         None
     };
-    let rank_heads = cfg.head_partition()[ctx.rank()].1;
+    let rank_heads = cfg.tp_head_partition()[cfg.tp_local_index(ctx.rank())].1;
     let admit = |req: &Request, step: usize, shard: KvShard| Active {
         id: req.id,
         prompt_len: req.prompt_len,

@@ -113,6 +113,24 @@ impl ServeReport {
 pub(crate) const BUF_INBOX: &str = "serve_inbox";
 pub(crate) const FLAGS_PARTIAL: &str = "serve_ready";
 pub(crate) const FLAGS_REQ_DONE: &str = "serve_req_done";
+/// Stage-boundary activation hand-off of the TP×PP serve path: one
+/// `slot_rows * tp_seg_max` slot per source local index, double-buffered
+/// by microbatch parity. A producer rank ships its own reduced tp-segment
+/// of the `[rows, d_model]` activation to its counterpart (same local
+/// index) on the next stage as one M-row tile push + one signal — the
+/// fused exchange's flag discipline, crossing the NIC exactly once per
+/// (boundary, microbatch); the counterpart relays the segment to its
+/// stage-mates over the cheap intra-node tier. Declared only when
+/// `pp_stages > 1` ([`build_serve_heap`]).
+pub(crate) const BUF_STAGE_FWD: &str = "serve_stage_fwd";
+/// One monotone flag per segment source for [`BUF_STAGE_FWD`].
+pub(crate) const FLAGS_STAGE_FWD: &str = "serve_stage_fwd_ready";
+/// Loop-back delivery of the last stage's output to every earlier stage
+/// (all ranks return identical bits to the scheduler), same geometry and
+/// counterpart+relay schedule as [`BUF_STAGE_FWD`].
+pub(crate) const BUF_STAGE_OUT: &str = "serve_stage_out";
+/// One monotone flag per segment source for [`BUF_STAGE_OUT`].
+pub(crate) const FLAGS_STAGE_OUT: &str = "serve_stage_out_ready";
 /// The dynamic KV page region: [`TransformerConfig::kv_pages`] fixed-size
 /// pages per rank, shared by every paged [`KvShard`] on that rank (the
 /// continuous-batching scheduler's cache tier).
@@ -205,12 +223,15 @@ pub const MLP_EXCHANGE: ExchangeBufs = ExchangeBufs {
 /// entry points use.
 pub fn build_serve_heap(cfg: &TransformerConfig) -> Arc<SymmetricHeap> {
     let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
-    let seg_max = cfg.d_model.div_ceil(cfg.world);
+    // exchange segments are partitioned over the TP group — the whole
+    // world under TP-only, one stage's clique under TP×PP (the wider
+    // per-rank segment of the narrower group)
+    let seg_max = cfg.d_model.div_ceil(cfg.tp_width());
     // sized from the same expression the engines pass as `slot_rows`, so
     // the two can never diverge (`cfg` is expected validated:
     // prefill_chunk >= 1, decode_batch >= 1)
     let slot = cfg.exchange_slot_rows() * seg_max;
-    let widest = cfg.head_partition().iter().map(|(_, l)| *l).max().unwrap_or(0);
+    let widest = cfg.tp_head_partition().iter().map(|(_, l)| *l).max().unwrap_or(0);
     let page_region = cfg.kv_pages * cfg.kv_page_elems(widest);
     let topo = cfg.topology();
     let mut b = HeapBuilder::new(cfg.world)
@@ -226,10 +247,13 @@ pub fn build_serve_heap(cfg: &TransformerConfig) -> Arc<SymmetricHeap> {
             .flags(bufs.data_flags, cfg.world)
             .buffer(bufs.gather, 2 * cfg.world * slot)
             .flags(bufs.gather_flags, cfg.world);
-        if topo.nodes() > 1 {
+        if topo.nodes() > 1 && cfg.pp_stages == 1 {
             // the NIC-chain and total-delivery staging only the
             // hierarchical exchange uses — same double-buffered slot
-            // geometry, sized by node count instead of world
+            // geometry, sized by node count instead of world. Under
+            // TP×PP the exchanges are confined to the intra-node clique
+            // (the only cross-node traffic is the stage hand-off below),
+            // so the chain never runs and stays undeclared.
             b = crate::collectives::declare_hier_exchange(
                 b,
                 &topo,
@@ -238,6 +262,19 @@ pub fn build_serve_heap(cfg: &TransformerConfig) -> Arc<SymmetricHeap> {
                 bufs,
             );
         }
+    }
+    if cfg.pp_stages > 1 {
+        // stage-boundary activation hand-off plus the last stage's
+        // loop-back delivery: one slot per source local index,
+        // double-buffered by microbatch parity, one monotone flag per
+        // segment source — the same parity/flag discipline as the
+        // exchanges, at stage-boundary granularity
+        let g = cfg.tp_width();
+        b = b
+            .buffer(BUF_STAGE_FWD, 2 * g * slot)
+            .flags(FLAGS_STAGE_FWD, g)
+            .buffer(BUF_STAGE_OUT, 2 * g * slot)
+            .flags(FLAGS_STAGE_OUT, g);
     }
     Arc::new(b.build().expect("static serve heap layout"))
 }
@@ -253,7 +290,7 @@ pub fn make_kv_pools(
     heap: Arc<SymmetricHeap>,
     rank: usize,
 ) -> Result<(Rc<RefCell<KvPagePool>>, Rc<RefCell<KvPagePool>>), IrisError> {
-    let heads = cfg.head_partition()[rank].1;
+    let heads = cfg.tp_head_partition()[cfg.tp_local_index(rank)].1;
     let mk = |buf: &str| -> Result<Rc<RefCell<KvPagePool>>, IrisError> {
         Ok(Rc::new(RefCell::new(KvPagePool::new(
             Arc::clone(&heap),
@@ -397,7 +434,9 @@ pub(crate) fn make_shard<C: LocalCompute>(
     pool: Option<&Rc<RefCell<KvPagePool>>>,
 ) -> KvShard {
     if compute.attn_sharded() {
-        let heads = cfg.head_partition()[rank].1;
+        // heads are sharded over the rank's TP group — the whole world
+        // under TP-only, the stage's intra-node clique under TP×PP
+        let heads = cfg.tp_head_partition()[cfg.tp_local_index(rank)].1;
         match pool {
             Some(p) => KvShard::paged(cfg, heads, p),
             None => KvShard::for_heads(cfg, heads),
@@ -486,6 +525,17 @@ pub fn decode_step_fused<C: LocalCompute>(
         // one — the same M-row machinery the continuous-batching
         // scheduler fuses A sequences through (bitwise-equal per row)
         return decode_batch_fused(ctx, cfg, compute, &mut [shard], h, round);
+    }
+    if cfg.pp_stages > 1 {
+        // the sequence-parallel replicated protocol has no stage-local
+        // layer range (every rank walks every layer); pipeline stages
+        // need the head-sharded batch path
+        return Err(IrisError::InvalidLayout(
+            "pipeline-parallel serving (pp_stages > 1) needs a head-sharded \
+             backend; replicated sequence-parallel attention cannot split \
+             layers into stages"
+                .into(),
+        ));
     }
     let r = ctx.rank();
     let wire = PartialState::wire_len(cfg.n_heads, cfg.head_dim);
@@ -633,7 +683,6 @@ pub fn decode_batch_fused<C: LocalCompute>(
                 .into(),
         ));
     }
-    let d_parts = cfg.d_model_partition();
     let nh = shards[0].heads();
     let hd = cfg.head_dim;
     // real validation, like the exchange's: a shard with a different head
@@ -646,8 +695,39 @@ pub fn decode_batch_fused<C: LocalCompute>(
             bad.heads()
         )));
     }
-    let mut h = hs.clone();
-    for layer in 0..cfg.n_layers {
+    // TP×PP: this rank runs only its stage's contiguous layer range, with
+    // the exchanges confined to the stage's intra-node clique; `hb` is
+    // the stage-boundary microbatch ordinal — every serve path advances
+    // `round` once per *local* layer and only through the fused steps, so
+    // the call count is round / stage-layer-count
+    let stages = cfg.pp_stages;
+    let g = cfg.tp_width();
+    let stage = cfg.stage_of_rank(ctx.rank());
+    let (d_parts, layers, hb) = if stages > 1 {
+        let (lo, n_local) = cfg.stage_layers(stage);
+        (cfg.tp_d_model_partition(), lo..lo + n_local, *round / n_local as u64 + 1)
+    } else {
+        (cfg.d_model_partition(), 0..cfg.n_layers, 0)
+    };
+    let exchange = |contribution: &[f32], round: u64, bufs: &ExchangeBufs| {
+        if stages > 1 {
+            fused_allreduce_exchange_rows_stage(
+                ctx, stage * g, &d_parts, contribution, a, slot_rows, round, bufs,
+            )
+        } else {
+            fused_allreduce_exchange_rows(
+                ctx, &d_parts, contribution, a, slot_rows, round, bufs,
+            )
+        }
+    };
+    let mut h = if stages > 1 && stage > 0 {
+        // stages after the first take their input from the previous
+        // stage's hand-off, not the caller (whose rows seed stage 0)
+        stage_handoff_recv(ctx, cfg, stage - 1, a, hb, BUF_STAGE_FWD, FLAGS_STAGE_FWD)?
+    } else {
+        hs.clone()
+    };
+    for layer in layers {
         *round += 1;
         // 1) one batched column-parallel QKV GEMM over all A rows
         //    (position-major [A * nh, hd], row i*nh+h = sequence i, head h)
@@ -677,15 +757,7 @@ pub fn decode_batch_fused<C: LocalCompute>(
         //    round for the whole batch, residual added in place to the
         //    reduced projection
         let wo = compute.attn_out_partial_rows(layer, &attn_rows, a);
-        let proj = fused_allreduce_exchange_rows(
-            ctx,
-            &d_parts,
-            wo.data(),
-            a,
-            slot_rows,
-            *round,
-            &ATTN_EXCHANGE,
-        )?;
+        let proj = exchange(wo.data(), *round, &ATTN_EXCHANGE)?;
         for (x, b) in h.data_mut().iter_mut().zip(&proj) {
             *x += b;
         }
@@ -696,20 +768,26 @@ pub fn decode_batch_fused<C: LocalCompute>(
         let x_norm = rmsnorm_rows(&h);
         let p = compute.mlp_partial_rows(layer, &x_norm);
         let mlp = if compute.tp_sharded() {
-            fused_allreduce_exchange_rows(
-                ctx,
-                &d_parts,
-                p.data(),
-                a,
-                slot_rows,
-                *round,
-                &MLP_EXCHANGE,
-            )?
+            exchange(p.data(), *round, &MLP_EXCHANGE)?
         } else {
             p.data().to_vec()
         };
         for (x, b) in h.data_mut().iter_mut().zip(&mlp) {
             *x += b;
+        }
+    }
+    if stages > 1 {
+        let li = cfg.tp_local_index(ctx.rank());
+        if stage + 1 < stages {
+            // ship the stage output across the boundary, then take the
+            // step's final output from the last stage's loop-back so every
+            // rank hands the scheduler identical bits
+            stage_segment_push(ctx, cfg, (stage + 1) * g + li, &h, a, hb, BUF_STAGE_FWD, FLAGS_STAGE_FWD)?;
+            h = stage_handoff_recv(ctx, cfg, stages - 1, a, hb, BUF_STAGE_OUT, FLAGS_STAGE_OUT)?;
+        } else {
+            for t in 0..stages - 1 {
+                stage_segment_push(ctx, cfg, t * g + li, &h, a, hb, BUF_STAGE_OUT, FLAGS_STAGE_OUT)?;
+            }
         }
     }
     Ok(h)
@@ -764,11 +842,39 @@ pub fn prefill_step_fused<C: LocalCompute>(
                 .into(),
         ));
     }
-    let d_parts = cfg.d_model_partition();
     let slot_rows = cfg.exchange_slot_rows();
     let nh = shard.heads();
-    let mut h = hs.clone();
-    for layer in 0..cfg.n_layers {
+    // TP×PP: only this rank's stage-local layer range runs here, with the
+    // exchanges confined to the stage's intra-node clique (see
+    // [`decode_batch_fused`] — identical stage machinery)
+    let stages = cfg.pp_stages;
+    let g = cfg.tp_width();
+    let stage = cfg.stage_of_rank(ctx.rank());
+    let (d_parts, layers, hb) = if stages > 1 {
+        let (lo, n_local) = cfg.stage_layers(stage);
+        (cfg.tp_d_model_partition(), lo..lo + n_local, *round / n_local as u64 + 1)
+    } else {
+        (cfg.d_model_partition(), 0..cfg.n_layers, 0)
+    };
+    let exchange = |contribution: &[f32], round: u64, bufs: &ExchangeBufs| {
+        if stages > 1 {
+            fused_allreduce_exchange_rows_stage(
+                ctx, stage * g, &d_parts, contribution, m, slot_rows, round, bufs,
+            )
+        } else {
+            fused_allreduce_exchange_rows(
+                ctx, &d_parts, contribution, m, slot_rows, round, bufs,
+            )
+        }
+    };
+    let mut h = if stages > 1 && stage > 0 {
+        // stages after the first take their chunk from the previous
+        // stage's hand-off, not the caller (whose rows seed stage 0)
+        stage_handoff_recv(ctx, cfg, stage - 1, m, hb, BUF_STAGE_FWD, FLAGS_STAGE_FWD)?
+    } else {
+        hs.clone()
+    };
+    for layer in layers {
         *round += 1;
         let (q, k_new, v_new) = compute.qkv_rows(layer, &h);
         for i in 0..m {
@@ -780,15 +886,7 @@ pub fn prefill_step_fused<C: LocalCompute>(
         }
         let attn = shard.prefill_attention(layer, &q, m)?;
         let wo_partial = compute.attn_out_partial_rows(layer, &attn, m);
-        let proj = fused_allreduce_exchange_rows(
-            ctx,
-            &d_parts,
-            wo_partial.data(),
-            m,
-            slot_rows,
-            *round,
-            &ATTN_EXCHANGE,
-        )?;
+        let proj = exchange(wo_partial.data(), *round, &ATTN_EXCHANGE)?;
         // both residuals fold into the live residual stream in place —
         // the hot loop allocates no per-layer clone of it
         for (a, b) in h.data_mut().iter_mut().zip(&proj) {
@@ -797,20 +895,26 @@ pub fn prefill_step_fused<C: LocalCompute>(
         let x = rmsnorm_rows(&h);
         let p = compute.mlp_partial_rows(layer, &x);
         let mlp = if compute.tp_sharded() {
-            fused_allreduce_exchange_rows(
-                ctx,
-                &d_parts,
-                p.data(),
-                m,
-                slot_rows,
-                *round,
-                &MLP_EXCHANGE,
-            )?
+            exchange(p.data(), *round, &MLP_EXCHANGE)?
         } else {
             p.data().to_vec()
         };
         for (a, b) in h.data_mut().iter_mut().zip(&mlp) {
             *a += b;
+        }
+    }
+    if stages > 1 {
+        let li = cfg.tp_local_index(ctx.rank());
+        if stage + 1 < stages {
+            // ship the chunk across the boundary, then take the chunk's
+            // final output from the last stage's loop-back so every rank
+            // seeds the decode loop with identical bits
+            stage_segment_push(ctx, cfg, (stage + 1) * g + li, &h, m, hb, BUF_STAGE_FWD, FLAGS_STAGE_FWD)?;
+            h = stage_handoff_recv(ctx, cfg, stages - 1, m, hb, BUF_STAGE_OUT, FLAGS_STAGE_OUT)?;
+        } else {
+            for t in 0..stages - 1 {
+                stage_segment_push(ctx, cfg, t * g + li, &h, m, hb, BUF_STAGE_OUT, FLAGS_STAGE_OUT)?;
+            }
         }
     }
     Ok(h)
@@ -1134,6 +1238,206 @@ pub fn fused_allreduce_exchange_rows_flat(
         let seg = ctx.load_local_vec(bufs.gather, base + src * stride, rows * len)?;
         for row in 0..rows {
             out[row * n + off..row * n + off + len]
+                .copy_from_slice(&seg[row * len..(row + 1) * len]);
+        }
+    }
+    Ok(out)
+}
+
+/// The stage-confined variant of the flat fused exchange: the identical
+/// push/flag/reduce/gather schedule, run over one pipeline stage's
+/// contiguous rank group (the intra-node clique, `group_start ..
+/// group_start + parts.len()`) instead of the whole world. Data slots and
+/// flags stay indexed by **global** rank, so the stages' concurrent
+/// exchanges on the shared buffer names are disjoint by construction —
+/// no flag is ever signalled across a stage boundary. The fold runs in
+/// ascending group order, which is exactly the flat fold's canonical
+/// source order at `world = parts.len()`: a TP×PP stage reduces
+/// bitwise-identically to a TP-only node of the same width.
+pub(crate) fn fused_allreduce_exchange_rows_stage(
+    ctx: &RankCtx,
+    group_start: usize,
+    parts: &[(usize, usize)],
+    contribution: &[f32],
+    rows: usize,
+    slot_rows: usize,
+    round: u64,
+    bufs: &ExchangeBufs,
+) -> Result<Vec<f32>, IrisError> {
+    let r = ctx.rank();
+    let g = parts.len();
+    let n = validate_exchange_rows(g, parts, contribution.len(), rows, slot_rows)?;
+    let seg_max = n.div_ceil(g);
+    let stride = slot_rows * seg_max;
+    // parity base spans the whole world's slots — the heap sizes the
+    // exchange buffers `2 * world * stride` with `stride` derived from
+    // the TP group width, and each stage touches only its own ranks'
+    // slots within each parity half
+    let base = ((round % 2) as usize) * ctx.world() * stride;
+    let li = r - group_start;
+    let mut scratch = Vec::new();
+    let store = |scratch: &mut Vec<f32>,
+                 dst: Option<usize>,
+                 off: usize,
+                 len: usize|
+     -> Result<(), IrisError> {
+        let block: &[f32] = if rows == 1 {
+            &contribution[off..off + len]
+        } else {
+            scratch.clear();
+            for row in 0..rows {
+                scratch.extend_from_slice(&contribution[row * n + off..row * n + off + len]);
+            }
+            scratch
+        };
+        match dst {
+            Some(d) => ctx.remote_store(d, bufs.data, base + r * stride, block),
+            None => ctx.store_local(bufs.data, base + r * stride, block),
+        }
+    };
+
+    // reduce-scatter within the stage group
+    for d in (group_start..group_start + g).filter(|&d| d != r) {
+        let (off, len) = parts[d - group_start];
+        store(&mut scratch, Some(d), off, len)?;
+        ctx.signal(d, bufs.data_flags, r)?;
+    }
+    let (my_off, my_len) = parts[li];
+    store(&mut scratch, None, my_off, my_len)?;
+    ctx.signal(r, bufs.data_flags, r)?;
+    let mut acc = vec![0.0f32; rows * my_len];
+    for src in group_start..group_start + g {
+        ctx.wait_flag_ge(bufs.data_flags, src, round)?;
+        let contrib = ctx.load_local_vec(bufs.data, base + src * stride, rows * my_len)?;
+        for (a, c) in acc.iter_mut().zip(&contrib) {
+            *a += c;
+        }
+    }
+
+    // all-gather the reduced blocks within the stage group
+    for d in (group_start..group_start + g).filter(|&d| d != r) {
+        ctx.remote_store(d, bufs.gather, base + r * stride, &acc)?;
+        ctx.signal(d, bufs.gather_flags, r)?;
+    }
+    ctx.store_local(bufs.gather, base + r * stride, &acc)?;
+    ctx.signal(r, bufs.gather_flags, r)?;
+    let mut out = vec![0.0f32; rows * n];
+    for src in group_start..group_start + g {
+        ctx.wait_flag_ge(bufs.gather_flags, src, round)?;
+        let (off, len) = parts[src - group_start];
+        let seg = ctx.load_local_vec(bufs.gather, base + src * stride, rows * len)?;
+        for row in 0..rows {
+            out[row * n + off..row * n + off + len]
+                .copy_from_slice(&seg[row * len..(row + 1) * len]);
+        }
+    }
+    Ok(out)
+}
+
+/// Translate a consumer-side wait timeout on a stage hand-off flag into
+/// the typed root cause naming the rank that owed the push (the mirror of
+/// the hierarchical exchange's [`IrisError::ChainStarved`] mapping) —
+/// node-outcome collection then surfaces the dead producer instead of the
+/// cascade of downstream peer timeouts it causes.
+fn stage_starved(e: IrisError, producer: usize, stage: usize) -> IrisError {
+    match e {
+        IrisError::Timeout(timeout) => IrisError::StageStarved { producer, stage, timeout },
+        other => other,
+    }
+}
+
+/// Producer half of one stage hand-off: pack this rank's own tp-segment
+/// of the `[rows, d_model]` activation `h` and ship it to `dst`'s slot
+/// for that segment — one M-row tile push + one signal, the fused
+/// exchange's flag discipline. `dst` is the counterpart (same local
+/// index) on the receiving stage, so each (boundary, microbatch) crosses
+/// the NIC exactly once per segment; [`stage_handoff_recv`] relays the
+/// segment to the stage-mates over the cheap intra-node tier. `hb` is the
+/// microbatch ordinal: monotone flags, data slots alternating by its
+/// parity — the loop-back at the end of every fused step keeps any
+/// producer within one microbatch of every consumer, so a parity slot is
+/// never overwritten while still unread.
+fn stage_segment_push(
+    ctx: &RankCtx,
+    cfg: &TransformerConfig,
+    dst: usize,
+    h: &Tensor,
+    rows: usize,
+    hb: u64,
+    buf: &'static str,
+    flags: &'static str,
+) -> Result<(), IrisError> {
+    let g = cfg.tp_width();
+    let li = cfg.tp_local_index(ctx.rank());
+    let (off, len) = cfg.tp_d_model_partition()[li];
+    let n = cfg.d_model;
+    let stride = cfg.exchange_slot_rows() * n.div_ceil(g);
+    let data = h.data();
+    let mut block = Vec::with_capacity(rows * len);
+    for row in 0..rows {
+        block.extend_from_slice(&data[row * n + off..row * n + off + len]);
+    }
+    let slot = ((hb % 2) as usize) * g * stride + li * stride;
+    ctx.remote_store(dst, buf, slot, &block)?;
+    ctx.signal(dst, flags, li)
+}
+
+/// Consumer half of one stage hand-off: wait for this rank's direct
+/// segment from its counterpart on `src_stage`, relay it to the
+/// stage-mates over the intra-node tier, then assemble the full
+/// `[rows, d_model]` activation as the remaining segments' flags land —
+/// no BSP barrier; consumption starts the moment the first segment
+/// arrives, while the producing stage may still be pushing the others.
+/// A starved wait surfaces as the typed [`IrisError::StageStarved`] root
+/// cause naming the rank that owed the push.
+fn stage_handoff_recv(
+    ctx: &RankCtx,
+    cfg: &TransformerConfig,
+    src_stage: usize,
+    rows: usize,
+    hb: u64,
+    buf: &'static str,
+    flags: &'static str,
+) -> Result<Tensor, IrisError> {
+    let r = ctx.rank();
+    let g = cfg.tp_width();
+    let li = cfg.tp_local_index(r);
+    let group_start = (r / g) * g;
+    let parts = cfg.tp_d_model_partition();
+    let n = cfg.d_model;
+    let stride = cfg.exchange_slot_rows() * n.div_ceil(g);
+    let parity = ((hb % 2) as usize) * g * stride;
+    // the direct NIC push from the counterpart producer — a missing
+    // signal here is the boundary's root cause, not a generic timeout
+    let producer = src_stage * g + li;
+    ctx.wait_flag_ge(flags, li, hb).map_err(|e| stage_starved(e, producer, src_stage))?;
+    let my_len = parts[li].1;
+    let mine = ctx.load_local_vec(buf, parity + li * stride, rows * my_len)?;
+    // relay this segment to the stage-mates over the cheap intra-node
+    // tier: the activation crosses the NIC once per boundary, not g times
+    for mate in (group_start..group_start + g).filter(|&m| m != r) {
+        ctx.remote_store(mate, buf, parity + li * stride, &mine)?;
+        ctx.signal(mate, flags, li)?;
+    }
+    // assemble [rows, d_model] as the segment flags land
+    let mut out = Tensor::zeros(&[rows, n]);
+    let data = out.data_mut();
+    for i in 0..g {
+        let (off, len) = parts[i];
+        let loaded;
+        let seg: &[f32] = if i == li {
+            &mine
+        } else {
+            // relayed by the stage-mate at local index i (who itself
+            // surfaces the producing counterpart as root cause if the
+            // producer died before pushing)
+            ctx.wait_flag_ge(flags, i, hb)
+                .map_err(|e| stage_starved(e, group_start + i, src_stage))?;
+            loaded = ctx.load_local_vec(buf, parity + i * stride, rows * len)?;
+            &loaded
+        };
+        for row in 0..rows {
+            data[row * n + off..row * n + off + len]
                 .copy_from_slice(&seg[row * len..(row + 1) * len]);
         }
     }
@@ -1638,6 +1942,96 @@ mod tests {
         });
         for rank in 0..cfg.world {
             assert_eq!(heap.flag_read(rank, FLAGS_PARTIAL, rank).unwrap(), 0);
+        }
+    }
+
+    /// A TP×PP config: `stages` pipeline stages of `g`-wide TP cliques
+    /// over the given base preset.
+    fn pp_cfg(
+        base: fn(usize) -> TransformerConfig,
+        stages: usize,
+        g: usize,
+    ) -> TransformerConfig {
+        let mut cfg = base(stages * g).on_nodes(stages);
+        cfg.pp_stages = stages;
+        cfg.validate().expect("valid TP x PP config");
+        cfg
+    }
+
+    /// The TP×PP engine factory: each rank holds the TP shard of its
+    /// *local* clique index, cut at the stage width — the same shards a
+    /// TP-only node of width `tp_width` would hold.
+    fn pp_factory(
+        cfg: &TransformerConfig,
+        seed: u64,
+    ) -> impl Fn(usize) -> NativeCompute + Send + Sync + 'static {
+        let cfg = cfg.clone();
+        move |rank| {
+            let w = TransformerWeights::random(&cfg, seed);
+            NativeCompute::new_tp(cfg.tp_view(), w, cfg.tp_local_index(rank))
+        }
+    }
+
+    #[test]
+    fn pp_serve_heap_declares_stage_handoff_buffers() {
+        let cfg = pp_cfg(TransformerConfig::tiny, 2, 2);
+        let heap = build_serve_heap(&cfg);
+        for rank in 0..cfg.world {
+            assert_eq!(heap.flag_read(rank, FLAGS_STAGE_FWD, 0).unwrap(), 0);
+            assert_eq!(heap.flag_read(rank, FLAGS_STAGE_OUT, 0).unwrap(), 0);
+        }
+        // a TP-only heap carries no stage hand-off (and no NIC chain is
+        // declared under PP — the exchanges never leave the clique)
+        let tp = build_serve_heap(&TransformerConfig::tiny(2));
+        assert!(tp.flag_read(0, FLAGS_STAGE_FWD, 0).is_err());
+        assert!(heap.flag_read(0, ATTN_EXCHANGE.chain_flags, 0).is_err());
+    }
+
+    #[test]
+    fn pp_request_matches_tp_only_bitwise() {
+        // the tentpole invariant at node scope: a 2-stage x 2-wide
+        // pipeline must hand every rank the exact bits a TP-only node of
+        // the same stage width produces — prefill chunks (ragged: 7 over
+        // 4/3), decode steps, and the loop-back broadcast included
+        let seed = 93;
+        for base in [
+            TransformerConfig::tiny as fn(usize) -> TransformerConfig,
+            TransformerConfig::tiny_ragged,
+        ] {
+            let pp = pp_cfg(base, 2, 2);
+            let tp = base(2);
+            let req = Request { id: 3, prompt_len: 7, gen_len: 3 };
+            let pp_outs = drive_request(&pp, req.clone(), pp_factory(&pp, seed));
+            let tp_outs = drive_request(&tp, req, tp_factory(&tp, seed));
+            for out in &pp_outs {
+                assert_eq!(out, &tp_outs[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn pp_serve_completes_requests_end_to_end() {
+        let cfg = pp_cfg(TransformerConfig::tiny, 2, 2);
+        let reqs = vec![
+            Request { id: 0, prompt_len: 5, gen_len: 2 },
+            Request { id: 1, prompt_len: 2, gen_len: 3 },
+        ];
+        let report = serve(&cfg, reqs, pp_factory(&cfg, 94)).expect("pp serve");
+        assert_eq!(report.results.len(), 2);
+        assert_eq!(report.total_tokens, 7 + 5);
+    }
+
+    #[test]
+    fn pp_rejects_replicated_backend() {
+        // the sequence-parallel protocol walks every layer on every rank
+        // — it cannot split into stages, so the guard must be typed
+        let cfg = pp_cfg(TransformerConfig::tiny, 2, 2);
+        let reqs = vec![Request { id: 0, prompt_len: 2, gen_len: 1 }];
+        match serve(&cfg, reqs, native_factory(&cfg, 9)) {
+            Err(IrisError::InvalidLayout(msg)) => {
+                assert!(msg.contains("pipeline-parallel"), "{msg}")
+            }
+            other => panic!("expected InvalidLayout, got {other:?}"),
         }
     }
 }

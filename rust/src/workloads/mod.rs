@@ -23,6 +23,12 @@
 //!   NIC-bridged `nodes × gpus_per_node` world, the flat single-clique
 //!   push order vs the hierarchical intra-node-gather / accumulator-chain
 //!   / relay schedule (NIC bytes fall ~`gpus_per_node`×);
+//! * [`pipeline`] — the TP×PP hybrid twin: all layers tensor-parallel
+//!   over the full world (two hierarchical NIC exchanges per layer,
+//!   `O(m · d_model · n_layers)` NIC bytes) vs layers sharded into
+//!   per-node pipeline stages with intra-clique TP and streamed
+//!   microbatch hand-offs (`O(m · d_model)` NIC bytes plus an honestly
+//!   priced fill/drain bubble);
 //! * [`transformer`] — a tiny tensor-parallel transformer model (batched
 //!   prefill + decode) built from the same pieces, used by the
 //!   end-to-end serving example;
@@ -40,6 +46,7 @@ pub mod flash_decode;
 pub mod gemm_rs;
 pub mod kv_page;
 pub mod multinode;
+pub mod pipeline;
 pub mod prefill;
 pub mod serve_slo;
 pub mod tp_attention;
@@ -47,6 +54,7 @@ pub mod transformer;
 
 pub use batch_decode::BatchDecodeStrategy;
 pub use multinode::MultinodeStrategy;
+pub use pipeline::PipelineStrategy;
 pub use prefill::PrefillStrategy;
 pub use serve_slo::ServeSloStrategy;
 pub use tp_attention::TpAttnStrategy;

@@ -1,0 +1,740 @@
+//! Timing twin of the TP×PP layer-sharded serving stack: one M-row
+//! prompt chunk through all `n_layers` of a `nodes × gpus_per_node`
+//! world, two ways, with every transfer routed over its tier
+//! ([`crate::sim::Sim::with_topology`]) and NIC bytes attributed
+//! separately. The functional twin — real data movement, bitwise-checked
+//! against TP-only — is the `pp_stages > 1` path of
+//! [`crate::serve::prefill_step_fused`] / stage hand-off protocol.
+//!
+//! Two strategies:
+//!
+//! * **TpOnly** — every rank runs every layer at TP width
+//!   `nodes × gpus_per_node`; each layer pays two hierarchical partial-sum
+//!   exchanges (attention Wo + MLP down-projection) whose accumulator
+//!   chain and gather cross the node-pair NICs. The NIC bill is
+//!   `O(m · d_model · n_layers)`: the full activation crosses the NICs
+//!   ~`2.5·(nodes-1)` times **per layer**.
+//! * **TpPp** — layers shard into contiguous per-node pipeline stages
+//!   (stage = node, exactly [`crate::workloads::transformer::TransformerConfig::stage_layers`]'s
+//!   mapping); TP exchanges confine to the stage's intra-node clique
+//!   (Infinity-Fabric tier, zero NIC bytes), and only the microbatch
+//!   activations cross a NIC: one `rows × d_model` fp16 hand-off per
+//!   stage boundary per microbatch (counterpart push + intra-node relay),
+//!   plus the last stage's loop-back broadcast that makes every rank's
+//!   output identical. The NIC bill is `O(m · d_model)` — independent of
+//!   depth — but the pipeline pays the fill/drain bubble: the last stage
+//!   idles for `(nodes - 1)` stage-times before its first microbatch
+//!   arrives. Microbatches stream: stage `s+1` consumes microbatch `q`
+//!   while stage `s` produces `q+1`.
+//!
+//! On one node (`nodes = 1`) both strategies move zero NIC bytes and
+//! TP×PP degenerates to TP-only with extra microbatch latency floors —
+//! the chooser ([`choose`]) never picks it there.
+
+use crate::config::{HwConfig, PipelineConfig};
+use crate::fabric::Topology;
+use crate::sim::cost;
+use crate::sim::{Sim, SimResult, TaskId};
+use crate::util::partition;
+
+/// Execution strategy of the pipelined serving point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineStrategy {
+    /// TP over the full world; per-layer hierarchical NIC exchanges.
+    TpOnly,
+    /// TP×PP: per-node stages, intra-clique TP, microbatch hand-offs.
+    TpPp,
+}
+
+impl PipelineStrategy {
+    /// Both strategies, TP-only first.
+    pub const ALL: [PipelineStrategy; 2] = [PipelineStrategy::TpOnly, PipelineStrategy::TpPp];
+
+    /// Short name used in tables and trace labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipelineStrategy::TpOnly => "tp_only",
+            PipelineStrategy::TpPp => "tp_pp",
+        }
+    }
+}
+
+/// Build and run the DES program for one M-row chunk through all layers.
+pub fn simulate(
+    cfg: &PipelineConfig,
+    hw: &HwConfig,
+    strategy: PipelineStrategy,
+    seed: u64,
+) -> SimResult {
+    cfg.validate().expect("invalid PipelineConfig");
+    let mut sim = Sim::with_topology(hw, cfg.topology(), seed);
+    match strategy {
+        PipelineStrategy::TpOnly => build_tp_only(&mut sim, cfg, hw),
+        PipelineStrategy::TpPp => build_tp_pp(&mut sim, cfg, hw),
+    }
+    sim.run()
+}
+
+/// Mean makespan over `iters` simulated iterations (jitter seeds differ
+/// per iteration), plus the **first** iteration's full [`SimResult`] —
+/// traffic ledgers are seed-independent, so callers that want
+/// `nic_bytes` alongside the mean need no extra simulation.
+pub fn mean_latency_with_ledger(
+    cfg: &PipelineConfig,
+    hw: &HwConfig,
+    strategy: PipelineStrategy,
+    seed: u64,
+    iters: usize,
+) -> (f64, SimResult) {
+    assert!(iters > 0);
+    let first = simulate(cfg, hw, strategy, seed);
+    // identical accumulation to a fold from 0.0: the first add is exact
+    let mut sum = first.makespan_s;
+    for i in 1..iters {
+        sum += simulate(cfg, hw, strategy, seed.wrapping_add(i as u64)).makespan_s;
+    }
+    (sum / iters as f64, first)
+}
+
+/// Mean makespan over `iters` simulated iterations.
+pub fn mean_latency_s(
+    cfg: &PipelineConfig,
+    hw: &HwConfig,
+    strategy: PipelineStrategy,
+    seed: u64,
+    iters: usize,
+) -> f64 {
+    mean_latency_with_ledger(cfg, hw, strategy, seed, iters).0
+}
+
+/// Per-rank compute of one transformer layer's projection GEMMs at TP
+/// width `width`: QKV and MLP-up column-parallel, Wo and MLP-down
+/// row-parallel, `ffn = 4·d_model`. Attention itself is omitted on
+/// purpose: its per-rank FLOPs scale with `1/width` exactly like the
+/// GEMMs and it moves no lanes, so it cancels between TP-only (all
+/// layers at width `world`) and TP×PP (a stage's layers at width
+/// `gpus_per_node`) and only thins the bubble slightly.
+fn layer_compute_s(hw: &HwConfig, rows: usize, d: usize, width: usize) -> f64 {
+    let dw = d.div_ceil(width);
+    let fw = (4 * d).div_ceil(width);
+    cost::gemm_time(hw, rows, 3 * dw, d, cost::GemmImpl::Tile)
+        + cost::gemm_time(hw, rows, d, dw, cost::GemmImpl::Tile)
+        + cost::gemm_time(hw, rows, fw, d, cost::GemmImpl::Tile)
+        + cost::gemm_time(hw, rows, d, fw, cost::GemmImpl::Tile)
+}
+
+/// TP-only: every layer on the full world, two hierarchical exchanges
+/// per layer (attention Wo + MLP down-projection).
+fn build_tp_only(sim: &mut Sim, cfg: &PipelineConfig, hw: &HwConfig) {
+    let topo = cfg.topology();
+    let w = cfg.world();
+    let seg_elems: Vec<usize> =
+        partition(cfg.d_model, w).iter().map(|&(_, len)| cfg.m * len).collect();
+    let entry: Vec<TaskId> = (0..w).map(|r| sim.launch(r, "pl_launch", &[])).collect();
+    let mut prev = entry;
+    let t = layer_compute_s(hw, cfg.m, cfg.d_model, w);
+    for _layer in 0..cfg.n_layers {
+        let comp: Vec<TaskId> = (0..w)
+            .map(|r| {
+                let dur = sim.jittered(t);
+                sim.compute(r, "pl_layer", dur, &[prev[r]])
+            })
+            .collect();
+        let after_attn = hier_exchange(sim, hw, &topo, &seg_elems, &comp);
+        prev = hier_exchange(sim, hw, &topo, &seg_elems, &after_attn);
+    }
+    for r in 0..w {
+        sim.compute(r, "pl_out", 0.0, &[prev[r]]);
+    }
+}
+
+/// One hierarchical partial-sum exchange of per-rank `seg_elems` f32
+/// segments (mirrors [`crate::workloads::multinode`]'s hierarchical
+/// schedule task for task, which itself mirrors
+/// [`crate::collectives::all_reduce_hierarchical`]): intra-node gather of
+/// raw contributions, the association-preserving accumulator chain across
+/// nodes, then the reduced segment crossing each NIC once per remote node
+/// with an intra-node relay. Returns the per-rank task after which the
+/// full reduced row block is resident.
+fn hier_exchange(
+    sim: &mut Sim,
+    hw: &HwConfig,
+    topo: &Topology,
+    seg_elems: &[usize],
+    ready: &[TaskId],
+) -> Vec<TaskId> {
+    let w = topo.world();
+    let (g, nn) = (topo.gpus_per_node(), topo.nodes());
+
+    // ---- tier 1: intra-node gather of raw contributions ----
+    // stage_a[rep][m * g + j]: source j's slice of represented segment
+    // group m arrived on rep (None for the rep's own slice)
+    let mut stage_a: Vec<Vec<Option<TaskId>>> = vec![vec![None; w]; w];
+    for r in 0..w {
+        let (nd, li) = (topo.node_of(r), topo.local_index(r));
+        let mut prev = ready[r];
+        for s in 0..w {
+            let rep = nd * g + s % g;
+            if rep == r {
+                continue; // local slice, no transfer
+            }
+            let bytes = (seg_elems[s] * 2) as u64;
+            let p = sim.push_on(r, 1, rep, bytes, &[prev]);
+            stage_a[rep][(s / g) * g + li] = Some(p);
+            prev = p;
+        }
+    }
+
+    // ---- tier 2: cross-node accumulator chain in node order ----
+    let mut totals: Vec<Option<TaskId>> = vec![None; w];
+    for li in 0..g {
+        for m in 0..nn {
+            let s = m * g + li;
+            let len = seg_elems[s];
+            let bytes = (len * 2) as u64;
+            let mut carry: Option<TaskId> = None;
+            for nd in 0..nn {
+                let rep = nd * g + li;
+                let mut deps = vec![ready[rep]];
+                if let Some(c) = carry {
+                    deps.push(c);
+                }
+                for j in 0..g {
+                    if let Some(p) = stage_a[rep][m * g + j] {
+                        deps.push(p);
+                    }
+                }
+                let dur = sim.jittered(cost::reduce_accum_time(hw, len, g));
+                let fold = sim.compute(rep, "pl_chain_fold", dur, &deps);
+                if nd + 1 < nn {
+                    carry = Some(sim.push_on(rep, 1, (nd + 1) * g + li, bytes, &[fold]));
+                } else if s == rep {
+                    totals[s] = Some(fold);
+                } else {
+                    totals[s] = Some(sim.push_on(rep, 1, s, bytes, &[fold]));
+                }
+            }
+        }
+    }
+
+    // ---- tier 3: owner → node-mates + one NIC push per remote node,
+    //      remote representative relays to its mates ----
+    let mut delivered: Vec<Vec<Option<TaskId>>> = vec![vec![None; w]; w];
+    for r in 0..w {
+        delivered[r][r] = Some(totals[r].expect("every segment has a total"));
+    }
+    for r in 0..w {
+        let (nd, li) = (topo.node_of(r), topo.local_index(r));
+        let bytes = (seg_elems[r] * 2) as u64;
+        let mut prev = delivered[r][r].unwrap();
+        for j in 0..g {
+            let mate = nd * g + j;
+            if mate != r {
+                let p = sim.push_on(r, 1, mate, bytes, &[prev]);
+                delivered[mate][r] = Some(p);
+                prev = p;
+            }
+        }
+        for dn in 1..nn {
+            let rep = ((nd + dn) % nn) * g + li;
+            let p = sim.push_on(r, 1, rep, bytes, &[prev]);
+            delivered[rep][r] = Some(p);
+            prev = p;
+        }
+    }
+    for x in 0..w {
+        let (nd, li) = (topo.node_of(x), topo.local_index(x));
+        let mut prev: Option<TaskId> = None;
+        for m in 0..nn {
+            if m == nd {
+                continue;
+            }
+            let s = m * g + li;
+            let bytes = (seg_elems[s] * 2) as u64;
+            let arrival = delivered[x][s].expect("owner pushed to the representative");
+            for j in 0..g {
+                let mate = nd * g + j;
+                if mate != x {
+                    let mut deps = vec![arrival];
+                    if let Some(p) = prev {
+                        deps.push(p);
+                    }
+                    let p = sim.push_on(x, 1, mate, bytes, &deps);
+                    delivered[mate][s] = Some(p);
+                    prev = Some(p);
+                }
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(w);
+    for r in 0..w {
+        let mut deps = vec![ready[r]];
+        for s in 0..w {
+            deps.push(delivered[r][s].expect("every segment reaches every rank"));
+        }
+        out.push(sim.compute(r, "pl_exchanged", 0.0, &deps));
+    }
+    out
+}
+
+/// TP×PP: layers shard into per-node stages; microbatches stream through
+/// the stage boundaries while TP exchanges stay on the intra-node clique.
+fn build_tp_pp(sim: &mut Sim, cfg: &PipelineConfig, hw: &HwConfig) {
+    let (nn, g) = (cfg.nodes, cfg.gpus_per_node);
+    let w = cfg.world();
+    let stage_layers = cfg.stage_layers();
+    let d_parts = partition(cfg.d_model, g);
+    let entry: Vec<TaskId> = (0..w).map(|r| sim.launch(r, "pl_launch", &[])).collect();
+    let mut prev = entry;
+    // FIFO tail of each rank's communication stream, so hand-off pushes
+    // of successive microbatches keep their issue order
+    let mut comm_tail: Vec<Option<TaskId>> = vec![None; w];
+    // loop-back arrivals per rank: they gate only the final output (the
+    // streamed schedule never stalls an upstream stage on them)
+    let mut loopback: Vec<Vec<TaskId>> = vec![Vec::new(); w];
+    for q in 0..cfg.microbatches() {
+        let rows = cfg.microbatch_rows(q);
+        let seg_elems: Vec<usize> = d_parts.iter().map(|&(_, len)| rows * len).collect();
+        let t = layer_compute_s(hw, rows, cfg.d_model, g);
+        // boundary arrival per rank of the consuming stage
+        let mut handoff: Vec<Option<TaskId>> = vec![None; w];
+        for s in 0..nn {
+            let base = s * g;
+            let mut cur: Vec<TaskId> = (0..g)
+                .map(|li| {
+                    let r = base + li;
+                    let mut deps = vec![prev[r]];
+                    if let Some(a) = handoff[r] {
+                        deps.push(a);
+                    }
+                    sim.compute(r, "pl_stage_in", 0.0, &deps)
+                })
+                .collect();
+            for _layer in 0..stage_layers[s].1 {
+                for li in 0..g {
+                    let dur = sim.jittered(t);
+                    cur[li] = sim.compute(base + li, "pl_layer", dur, &[cur[li]]);
+                }
+                // attention Wo + MLP down-projection exchanges, confined
+                // to the stage's intra-node clique: zero NIC bytes
+                cur = clique_exchange(sim, hw, base, &seg_elems, &cur);
+                cur = clique_exchange(sim, hw, base, &seg_elems, &cur);
+            }
+            for li in 0..g {
+                prev[base + li] = cur[li];
+            }
+            if s + 1 < nn {
+                // stage boundary: each rank pushes its own d_model
+                // segment to its counterpart (the only NIC crossing),
+                // which relays it to its stage-mates
+                let arrivals =
+                    stage_handoff(sim, base, base + g, &seg_elems, &cur, &mut comm_tail);
+                for (li, a) in arrivals.into_iter().enumerate() {
+                    handoff[base + g + li] = Some(a);
+                }
+            }
+        }
+        // loop-back: the last stage broadcasts the microbatch's final
+        // hidden state to every earlier stage so all ranks return
+        // identical bits
+        let lbase = (nn - 1) * g;
+        let last: Vec<TaskId> = (0..g).map(|li| prev[lbase + li]).collect();
+        for t_stage in 0..nn - 1 {
+            let arrivals =
+                stage_handoff(sim, lbase, t_stage * g, &seg_elems, &last, &mut comm_tail);
+            for (li, a) in arrivals.into_iter().enumerate() {
+                loopback[t_stage * g + li].push(a);
+            }
+        }
+    }
+    for r in 0..w {
+        let mut deps = vec![prev[r]];
+        deps.extend(loopback[r].iter().copied());
+        sim.compute(r, "pl_out", 0.0, &deps);
+    }
+}
+
+/// One flat partial-sum exchange confined to the `g`-wide clique starting
+/// at rank `base` (the single-node fused push order: scatter to owners,
+/// fold, gather back). Every transfer stays on the Infinity-Fabric tier.
+fn clique_exchange(
+    sim: &mut Sim,
+    hw: &HwConfig,
+    base: usize,
+    seg_elems: &[usize],
+    ready: &[TaskId],
+) -> Vec<TaskId> {
+    let g = seg_elems.len();
+    if g == 1 {
+        return ready.to_vec();
+    }
+    // scatter: every rank ships each remote segment straight to its owner
+    let mut scatter: Vec<Vec<Option<TaskId>>> = vec![vec![None; g]; g];
+    for li in 0..g {
+        let mut prev = ready[li];
+        for off in 1..g {
+            let dst = (li + off) % g;
+            let bytes = (seg_elems[dst] * 2) as u64;
+            let p = sim.push_on(base + li, 1, base + dst, bytes, &[prev]);
+            scatter[li][dst] = Some(p);
+            prev = p;
+        }
+    }
+    // reduce: fold g contributions behind their arrivals
+    let mut reduced = Vec::with_capacity(g);
+    for li in 0..g {
+        let mut deps = vec![ready[li]];
+        for row in &scatter {
+            if let Some(p) = row[li] {
+                deps.push(p);
+            }
+        }
+        let dur = sim.jittered(cost::reduce_accum_time(hw, seg_elems[li], g));
+        reduced.push(sim.compute(base + li, "pl_reduce", dur, &deps));
+    }
+    // gather: the owner multicasts its reduced segment
+    let mut gather: Vec<Vec<Option<TaskId>>> = vec![vec![None; g]; g];
+    for li in 0..g {
+        let mut prev = reduced[li];
+        for off in 1..g {
+            let dst = (li + off) % g;
+            let bytes = (seg_elems[li] * 2) as u64;
+            let p = sim.push_on(base + li, 1, base + dst, bytes, &[prev]);
+            gather[li][dst] = Some(p);
+            prev = p;
+        }
+    }
+    (0..g)
+        .map(|li| {
+            let mut deps = vec![reduced[li]];
+            for row in gather.iter() {
+                if let Some(p) = row[li] {
+                    deps.push(p);
+                }
+            }
+            sim.compute(base + li, "pl_gathered", 0.0, &deps)
+        })
+        .collect()
+}
+
+/// One stage hand-off of a microbatch: rank `src_base + li` pushes its
+/// own `seg_elems[li]` segment to counterpart `dst_base + li` (the only
+/// transfer that crosses a NIC when the bases sit on different nodes);
+/// the counterpart relays the segment to its stage-mates. Returns the
+/// per-local-index task after which the full row block is resident on
+/// the destination stage.
+fn stage_handoff(
+    sim: &mut Sim,
+    src_base: usize,
+    dst_base: usize,
+    seg_elems: &[usize],
+    produced: &[TaskId],
+    comm_tail: &mut [Option<TaskId>],
+) -> Vec<TaskId> {
+    let g = seg_elems.len();
+    // seg_done[dst_li][src_li]: segment src_li resident on dst_base+dst_li
+    let mut seg_done: Vec<Vec<Option<TaskId>>> = vec![vec![None; g]; g];
+    for li in 0..g {
+        let bytes = (seg_elems[li] * 2) as u64;
+        let mut deps = vec![produced[li]];
+        if let Some(tail) = comm_tail[src_base + li] {
+            deps.push(tail);
+        }
+        let p = sim.push_on(src_base + li, 1, dst_base + li, bytes, &deps);
+        comm_tail[src_base + li] = Some(p);
+        seg_done[li][li] = Some(p);
+        // intra-node relay of the received segment to the stage mates
+        let mut rdeps = vec![p];
+        if let Some(tail) = comm_tail[dst_base + li] {
+            rdeps.push(tail);
+        }
+        let mut prev: Option<TaskId> = None;
+        for j in 0..g {
+            if j == li {
+                continue;
+            }
+            let mut d = rdeps.clone();
+            if let Some(pp) = prev {
+                d.push(pp);
+            }
+            let rp = sim.push_on(dst_base + li, 1, dst_base + j, bytes, &d);
+            seg_done[j][li] = Some(rp);
+            prev = Some(rp);
+        }
+        if let Some(pp) = prev {
+            comm_tail[dst_base + li] = Some(pp);
+        }
+    }
+    (0..g)
+        .map(|li| {
+            let deps: Vec<TaskId> =
+                (0..g).map(|j| seg_done[li][j].expect("every segment relayed")).collect();
+            sim.compute(dst_base + li, "pl_handoff", 0.0, &deps)
+        })
+        .collect()
+}
+
+/// Cross-node bytes ONE hierarchical exchange of `m × d_model` fp16
+/// lanes moves (mirrors [`hier_exchange`] push for push): the chain
+/// crosses `nodes-1` NICs per segment, the total takes one more hop when
+/// the owner is not on the last node, and the gather crosses each NIC
+/// once per (owner, remote node).
+fn hier_exchange_nic_bytes(cfg: &PipelineConfig) -> u64 {
+    let (nn, g) = (cfg.nodes, cfg.gpus_per_node);
+    let parts = partition(cfg.d_model, cfg.world());
+    let mut bytes = 0u64;
+    for (s, &(_, len)) in parts.iter().enumerate() {
+        let seg = (cfg.m * len * 2) as u64;
+        let owner_node = s / g;
+        bytes += seg * (nn as u64 - 1); // accumulator chain hops
+        if owner_node != nn - 1 {
+            bytes += seg; // total delivered to the owner
+        }
+        bytes += seg * (nn as u64 - 1); // gather to the remote reps
+    }
+    bytes
+}
+
+/// Analytic NIC bytes of the TP-only schedule (fp16): two hierarchical
+/// exchanges (attention Wo + MLP down-projection) per layer —
+/// `O(m · d_model · n_layers)`.
+pub fn tp_only_nic_bytes(cfg: &PipelineConfig) -> u64 {
+    2 * cfg.n_layers as u64 * hier_exchange_nic_bytes(cfg)
+}
+
+/// Analytic NIC bytes of the TP×PP schedule (fp16): per microbatch, the
+/// `rows × d_model` activation crosses each of the `nodes-1` forward
+/// stage boundaries once, and the loop-back broadcast crosses the same
+/// `nodes-1` NICs once — `O(m · d_model)`, independent of depth.
+pub fn tp_pp_nic_bytes(cfg: &PipelineConfig) -> u64 {
+    if cfg.nodes == 1 {
+        return 0;
+    }
+    let mut bytes = 0u64;
+    for q in 0..cfg.microbatches() {
+        let hand = (cfg.microbatch_rows(q) * cfg.d_model * 2) as u64;
+        // (nodes-1) forward boundaries + the (nodes-1)-way loop-back
+        bytes += 2 * (cfg.nodes as u64 - 1) * hand;
+    }
+    bytes
+}
+
+/// Jitter-free closed-form estimate of the TP-only makespan: every layer
+/// runs on the full world and pays two hierarchical exchanges whose
+/// accumulator chain serializes `nodes-1` NIC hops on top of the
+/// topology-routed all-reduce cost.
+pub fn tp_only_estimate_s(cfg: &PipelineConfig, hw: &HwConfig) -> f64 {
+    let topo = cfg.topology();
+    let exch = cost::allreduce_time_topo(hw, &topo, cfg.m * cfg.d_model)
+        + (cfg.nodes - 1) as f64 * hw.nic_latency_s;
+    cfg.n_layers as f64 * (layer_compute_s(hw, cfg.m, cfg.d_model, cfg.world()) + 2.0 * exch)
+}
+
+/// One stage's per-microbatch service time: its layers at TP width
+/// `gpus_per_node` (compute + two intra-clique exchanges) plus the NIC
+/// hand-off of the microbatch activations to the next stage (each rank
+/// ships its own `d_model / g` segment in parallel; the consumer relays
+/// it intra-node).
+fn stage_time_s(cfg: &PipelineConfig, hw: &HwConfig, stage: usize, rows: usize) -> f64 {
+    let g = cfg.gpus_per_node;
+    let layers = cfg.stage_layers()[stage].1 as f64;
+    let per_layer = layer_compute_s(hw, rows, cfg.d_model, g)
+        + 2.0 * cost::allreduce_time(hw, rows * cfg.d_model, g);
+    let boundary = if stage + 1 < cfg.nodes {
+        let seg_bytes = (rows * cfg.d_model.div_ceil(g) * 2) as u64;
+        cost::nic_transfer_time(hw, seg_bytes)
+            + cost::multipush_time(hw, seg_bytes, g, hw.rma_store_eff)
+    } else {
+        0.0
+    };
+    layers * per_layer + boundary
+}
+
+/// The fill bubble the TP×PP schedule pays before its last stage sees
+/// the first microbatch: the sum of every earlier stage's per-microbatch
+/// service time — the "(nodes - 1) stage-times" of pipeline-parallel
+/// folklore, priced with this config's actual ragged layer split.
+pub fn tp_pp_bubble_s(cfg: &PipelineConfig, hw: &HwConfig) -> f64 {
+    (0..cfg.nodes.saturating_sub(1))
+        .map(|s| stage_time_s(cfg, hw, s, cfg.microbatch_rows(0)))
+        .sum()
+}
+
+/// Jitter-free closed-form estimate of the TP×PP makespan: the fill
+/// bubble, one bottleneck-stage slot per microbatch, then the last
+/// microbatch's loop-back broadcast (earlier loop-backs overlap with
+/// later microbatches).
+pub fn tp_pp_estimate_s(cfg: &PipelineConfig, hw: &HwConfig) -> f64 {
+    let steady: f64 = (0..cfg.microbatches())
+        .map(|q| {
+            let rows = cfg.microbatch_rows(q);
+            (0..cfg.nodes).map(|s| stage_time_s(cfg, hw, s, rows)).fold(0.0f64, f64::max)
+        })
+        .sum();
+    let loopback = if cfg.nodes > 1 {
+        let rows = cfg.microbatch_rows(cfg.microbatches() - 1);
+        (cfg.nodes - 1) as f64
+            * cost::nic_transfer_time(
+                hw,
+                (rows * cfg.d_model.div_ceil(cfg.gpus_per_node) * 2) as u64,
+            )
+    } else {
+        0.0
+    };
+    tp_pp_bubble_s(cfg, hw) + steady + loopback
+}
+
+/// Choose TP-only vs TP×PP for this (nodes, gpus_per_node, M) point from
+/// the closed-form estimates. On one node TP×PP is TP-only with extra
+/// steps (no NIC either way; microbatching only adds latency floors), so
+/// the chooser never picks it there.
+pub fn choose(cfg: &PipelineConfig, hw: &HwConfig) -> PipelineStrategy {
+    if cfg.nodes == 1 {
+        return PipelineStrategy::TpOnly;
+    }
+    if tp_pp_estimate_s(cfg, hw) <= tp_only_estimate_s(cfg, hw) {
+        PipelineStrategy::TpPp
+    } else {
+        PipelineStrategy::TpOnly
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn ledgers_match_the_analytic_nic_accounting() {
+        // the acceptance criterion: on every grid shape the simulated
+        // ledger agrees with the closed-form wire accounting exactly, and
+        // TP×PP moves strictly fewer NIC bytes on every multi-node shape
+        let hw = presets::mi300x();
+        for (nn, g) in [(1usize, 4usize), (2, 2), (2, 4), (4, 2), (4, 4)] {
+            let cfg = PipelineConfig::tiny(nn, g);
+            let tp = simulate(&cfg, &hw, PipelineStrategy::TpOnly, 7);
+            let pp = simulate(&cfg, &hw, PipelineStrategy::TpPp, 7);
+            assert_eq!(tp.ledger.nic_bytes, tp_only_nic_bytes(&cfg), "({nn},{g}) tp_only");
+            assert_eq!(pp.ledger.nic_bytes, tp_pp_nic_bytes(&cfg), "({nn},{g}) tp_pp");
+            if nn == 1 {
+                assert_eq!(tp.ledger.nic_bytes, 0, "g={g}");
+                assert_eq!(pp.ledger.nic_bytes, 0, "g={g}");
+            } else {
+                assert!(
+                    pp.ledger.nic_bytes < tp.ledger.nic_bytes,
+                    "({nn},{g}): TP x PP {} must move fewer NIC bytes than TP-only {}",
+                    pp.ledger.nic_bytes,
+                    tp.ledger.nic_bytes
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tp_pp_traffic_is_o_activation_not_o_layers() {
+        // doubling the depth doubles TP-only's NIC bill (two exchanges
+        // per layer) and leaves TP x PP's untouched: activations cross a
+        // boundary once per microbatch, regardless of depth
+        let cfg = PipelineConfig::tiny(2, 4);
+        let deep = PipelineConfig { n_layers: 2 * cfg.n_layers, ..cfg.clone() };
+        assert_eq!(tp_only_nic_bytes(&deep), 2 * tp_only_nic_bytes(&cfg));
+        assert_eq!(tp_pp_nic_bytes(&deep), tp_pp_nic_bytes(&cfg));
+        // and the per-microbatch bill is exactly the activation payload:
+        // rows x d_model fp16 per boundary, forward + loop-back
+        let per_direction: u64 = (0..cfg.microbatches())
+            .map(|q| (cfg.microbatch_rows(q) * cfg.d_model * 2) as u64)
+            .sum();
+        assert_eq!(tp_pp_nic_bytes(&cfg), 2 * (cfg.nodes as u64 - 1) * per_direction);
+    }
+
+    #[test]
+    fn the_fill_bubble_is_priced() {
+        // the first microbatch must traverse nodes-1 NIC boundaries
+        // before the last stage can start at all: the makespan is floored
+        // by the serialized boundary latencies (transfers are never
+        // jittered, so the floor is structural)
+        let hw = presets::mi300x();
+        let cfg = PipelineConfig::tiny(4, 2);
+        let r = simulate(&cfg, &hw, PipelineStrategy::TpPp, 13);
+        assert!(r.makespan_s >= (cfg.nodes - 1) as f64 * hw.nic_latency_s);
+        // the closed form prices the same ramp: a positive bubble that
+        // the full estimate strictly contains
+        assert!(tp_pp_bubble_s(&cfg, &hw) > 0.0);
+        assert!(tp_pp_bubble_s(&cfg, &hw) < tp_pp_estimate_s(&cfg, &hw));
+        // one node has no boundary to fill
+        assert_eq!(tp_pp_bubble_s(&PipelineConfig::tiny(1, 4), &hw), 0.0);
+    }
+
+    #[test]
+    fn tp_pp_wins_the_fat_prefill_chunk() {
+        // a Llama-70B-class 512-row prefill chunk on two 8-GPU nodes:
+        // TP-only drags ~2.5 x m x d_model fp16 over the node-pair NIC
+        // per layer (all of it serializing on one link), TP x PP four
+        // activation payloads in total — the traffic win must turn into
+        // simulated wall-clock, and the closed-form chooser must agree
+        let hw = presets::mi300x();
+        let cfg = PipelineConfig {
+            m: 512,
+            d_model: 8192,
+            n_layers: 80,
+            nodes: 2,
+            gpus_per_node: 8,
+            microbatch: 256,
+        };
+        let tp = mean_latency_s(&cfg, &hw, PipelineStrategy::TpOnly, 2026, 3);
+        let pp = mean_latency_s(&cfg, &hw, PipelineStrategy::TpPp, 2026, 3);
+        assert!(pp < tp, "TP x PP {pp} must beat TP-only {tp} on the NIC-bound chunk");
+        assert_eq!(choose(&cfg, &hw), PipelineStrategy::TpPp);
+        assert!(tp_pp_estimate_s(&cfg, &hw) < tp_only_estimate_s(&cfg, &hw));
+    }
+
+    #[test]
+    fn chooser_never_pipelines_one_node() {
+        let hw = presets::mi300x();
+        for g in [2usize, 4, 8] {
+            let cfg = PipelineConfig::tiny(1, g);
+            assert_eq!(choose(&cfg, &hw), PipelineStrategy::TpOnly, "g={g}");
+        }
+    }
+
+    #[test]
+    fn ragged_shapes_simulate_and_stay_deterministic() {
+        // ragged everything at once: d_model not divisible by the world,
+        // layers not divisible by stages, m not divisible by microbatch
+        let hw = presets::mi300x();
+        for (nn, g) in [(2usize, 3usize), (3, 2)] {
+            let cfg = PipelineConfig {
+                m: 7,
+                d_model: 26,
+                n_layers: 5,
+                nodes: nn,
+                gpus_per_node: g,
+                microbatch: 3,
+            };
+            for s in PipelineStrategy::ALL {
+                let a = simulate(&cfg, &hw, s, 11);
+                let b = simulate(&cfg, &hw, s, 11);
+                assert!(
+                    a.makespan_s > 0.0 && a.makespan_s.is_finite(),
+                    "({nn},{g}) {}",
+                    s.name()
+                );
+                assert_eq!(a.makespan_s, b.makespan_s);
+                let expect = match s {
+                    PipelineStrategy::TpOnly => tp_only_nic_bytes(&cfg),
+                    PipelineStrategy::TpPp => tp_pp_nic_bytes(&cfg),
+                };
+                assert_eq!(a.ledger.nic_bytes, expect, "({nn},{g}) {}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn strategy_names_are_stable() {
+        // the names land in BENCH_pipeline.json; renaming them breaks the
+        // perf-trajectory diff
+        assert_eq!(PipelineStrategy::TpOnly.name(), "tp_only");
+        assert_eq!(PipelineStrategy::TpPp.name(), "tp_pp");
+        assert_eq!(PipelineStrategy::ALL.len(), 2);
+    }
+}

@@ -85,6 +85,17 @@ pub struct TransformerConfig {
     /// hierarchical protocol (bitwise-identical results, ~`gpus_per_node`x
     /// fewer NIC bytes).
     pub nodes: usize,
+    /// Pipeline stages the layer stack is sharded into (TP×PP hybrid).
+    /// `1` (every preset) is today's TP-only layout: every rank runs all
+    /// `n_layers` and the fused exchange spans the whole world — that
+    /// path is bitwise-unchanged. At `pp_stages > 1` the stages map
+    /// one-to-one onto nodes (`pp_stages == nodes`, validated): node `s`
+    /// runs only the contiguous [`TransformerConfig::stage_layers`] range,
+    /// TP exchanges are confined to the intra-node clique of
+    /// [`TransformerConfig::tp_width`] ranks, and only `M·d_model`
+    /// activation rows cross the NIC per stage boundary per microbatch
+    /// (vs TP-only's per-layer `O(d_model)` hierarchical exchange).
+    pub pp_stages: usize,
     /// KV block the attention kernel iterates in.
     pub kv_block: usize,
     /// Maximum sequence length (shard capacity is `max_seq / world`,
@@ -138,6 +149,7 @@ impl TransformerConfig {
             ffn_hidden: 64,
             world,
             nodes: 1,
+            pp_stages: 1,
             kv_block: 4,
             max_seq: 64,
             prefill_chunk: 4,
@@ -162,6 +174,7 @@ impl TransformerConfig {
             ffn_hidden: 50,
             world,
             nodes: 1,
+            pp_stages: 1,
             kv_block: 4,
             max_seq: 48,
             prefill_chunk: 3,
@@ -184,6 +197,7 @@ impl TransformerConfig {
             ffn_hidden: 1024,
             world,
             nodes: 1,
+            pp_stages: 1,
             kv_block: 32,
             max_seq: 512,
             prefill_chunk: 16,
@@ -218,6 +232,32 @@ impl TransformerConfig {
         }
         if self.n_heads == 0 || self.head_dim == 0 {
             return Err("n_heads and head_dim must be positive".into());
+        }
+        if self.pp_stages == 0 {
+            return Err("pp_stages must be positive (1 = TP-only)".into());
+        }
+        if self.pp_stages > self.n_layers {
+            return Err(format!(
+                "pp_stages ({}) must not exceed n_layers ({}): every pipeline \
+                 stage must own at least one layer",
+                self.pp_stages, self.n_layers
+            ));
+        }
+        if self.pp_stages > 1 && self.pp_stages != self.nodes {
+            return Err(format!(
+                "pp_stages ({}) must equal nodes ({}) when > 1: stages map \
+                 one-to-one onto nodes so TP exchanges stay on the intra-node \
+                 clique and only stage boundaries cross the NIC",
+                self.pp_stages, self.nodes
+            ));
+        }
+        if self.pp_stages > 1 && self.world / self.pp_stages < 2 {
+            return Err(format!(
+                "pp_stages ({}) over world ({}) leaves a TP width below 2: \
+                 pipeline stages run the head-sharded TP protocol, which \
+                 needs at least two ranks per stage clique",
+                self.pp_stages, self.world
+            ));
         }
         if self.kv_block == 0 {
             return Err("kv_block must be positive".into());
@@ -319,6 +359,78 @@ impl TransformerConfig {
     /// including `world > n_heads`, which gives some ranks an empty shard.
     pub fn head_partition(&self) -> Vec<(usize, usize)> {
         partition(self.n_heads, self.world)
+    }
+
+    /// Tensor-parallel width of one pipeline stage: the whole world at
+    /// `pp_stages == 1`, one node's clique (`world / pp_stages ==
+    /// gpus_per_node`) otherwise. Every TP partition under PP —
+    /// [`TransformerConfig::tp_head_partition`],
+    /// [`TransformerConfig::tp_ffn_partition`],
+    /// [`TransformerConfig::tp_d_model_partition`] — is cut at this width,
+    /// which is exactly why TP×PP at stage width `g` is bitwise-equal to
+    /// TP-only at `world == g`: the partial-sum association never changes.
+    pub fn tp_width(&self) -> usize {
+        self.world / self.pp_stages
+    }
+
+    /// The pipeline stage a rank belongs to (its node, since stages map
+    /// one-to-one onto nodes; always 0 at `pp_stages == 1`).
+    pub fn stage_of_rank(&self, rank: usize) -> usize {
+        if self.pp_stages == 1 {
+            0
+        } else {
+            rank / self.tp_width()
+        }
+    }
+
+    /// This rank's index within its stage's TP clique (`rank` itself at
+    /// `pp_stages == 1`, where the clique is the whole world). TP shard
+    /// assignment — head slice, exchange segment, hand-off counterpart —
+    /// is by local index, never by global rank, under PP.
+    pub fn tp_local_index(&self, rank: usize) -> usize {
+        rank % self.tp_width()
+    }
+
+    /// Contiguous layer range `[start, start + len)` pipeline stage `s`
+    /// owns — the ragged [`crate::util::partition`] of `n_layers` over
+    /// `pp_stages`, so `n_layers % pp_stages != 0` is fine (early stages
+    /// get the extra layer).
+    pub fn stage_layers(&self, stage: usize) -> (usize, usize) {
+        partition(self.n_layers, self.pp_stages)[stage]
+    }
+
+    /// Partition of the attention heads across one stage's TP clique
+    /// (width [`TransformerConfig::tp_width`]). Identical to
+    /// [`TransformerConfig::head_partition`] at `pp_stages == 1`.
+    pub fn tp_head_partition(&self) -> Vec<(usize, usize)> {
+        partition(self.n_heads, self.tp_width())
+    }
+
+    /// Partition of `ffn_hidden` across one stage's TP clique.
+    pub fn tp_ffn_partition(&self) -> Vec<(usize, usize)> {
+        partition(self.ffn_hidden, self.tp_width())
+    }
+
+    /// Partition of `d_model` across one stage's TP clique (the
+    /// reduce-scatter segments of the stage-local fused exchange, and the
+    /// per-producer segment width of the stage-boundary hand-off).
+    pub fn tp_d_model_partition(&self) -> Vec<(usize, usize)> {
+        partition(self.d_model, self.tp_width())
+    }
+
+    /// A TP-only view of this config at one stage's width: `world` becomes
+    /// [`TransformerConfig::tp_width`], single node, `pp_stages == 1`.
+    /// [`NativeCompute::new_tp`] under PP is built against this view at
+    /// the rank's *local* node index, so its weight shards (all layers —
+    /// it touches only the stage-local range) and partial-sum association
+    /// match TP-only at world `tp_width` exactly.
+    pub fn tp_view(&self) -> TransformerConfig {
+        TransformerConfig {
+            world: self.tp_width(),
+            nodes: 1,
+            pp_stages: 1,
+            ..self.clone()
+        }
     }
 }
 

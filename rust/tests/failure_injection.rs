@@ -594,6 +594,62 @@ fn rank_dying_mid_nic_chain_surfaces_chain_starved_root_cause() {
 }
 
 #[test]
+fn rank_dying_mid_stage_boundary_push_surfaces_stage_starved_root_cause() {
+    // TP×PP (2 stages × 2 GPUs): rank 0 on stage 0 dies before pushing
+    // anything. Its stage-mate (rank 1) starves inside the stage-local TP
+    // exchange — a generic secondary Timeout. The stage-1 consumers
+    // (ranks 2 and 3), stuck on the stage boundary's hand-off flags,
+    // must get the typed StageStarved root cause NAMING THE COUNTERPART
+    // PRODUCER that owed the activation push — and node-outcome
+    // collection must surface the starved hand-off over the peer timeout.
+    let mut cfg = TransformerConfig::tiny(4).on_nodes(2);
+    cfg.pp_stages = 2;
+    cfg.validate().expect("tiny 2x2 TPxPP config");
+    let heap = build_serve_heap(&cfg);
+    let cfg2 = cfg.clone();
+    let outcomes = run_node_with_timeout(heap, Duration::from_millis(150), move |ctx| {
+        let rank = ctx.rank();
+        if rank == 0 {
+            return Ok(()); // dead rank: contributes nothing
+        }
+        let li = cfg2.tp_local_index(rank);
+        let compute =
+            NativeCompute::new_tp(cfg2.tp_view(), TransformerWeights::random(&cfg2, 21), li);
+        let mut shard = KvShard::for_heads(&cfg2, cfg2.tp_head_partition()[li].1);
+        let mut round = 0u64;
+        let rows = prompt_embeddings(&cfg2, 0, 0, 3);
+        prefill_step_fused(&ctx, &cfg2, &compute, &mut shard, &rows, &mut round).map(|_| ())
+    });
+    assert!(outcomes[0].is_ok(), "the dead rank itself reported nothing");
+    // rank 1 (alive, stage 0) is stuck in the intra-stage TP exchange
+    // waiting on its dead clique-mate: a generic secondary timeout
+    match &outcomes[1] {
+        Err(IrisError::Timeout(t)) => assert_eq!(t.idx, 0, "rank 1 waits on the dead rank"),
+        other => panic!("expected a secondary Timeout on rank 1, got {other:?}"),
+    }
+    // the stage-1 consumers starve on the boundary hand-off: the typed
+    // root cause names the stage-0 counterpart that owed each segment
+    for (rank, producer) in [(2usize, 0usize), (3, 1)] {
+        match &outcomes[rank] {
+            Err(IrisError::StageStarved { producer: p, stage, timeout }) => {
+                assert_eq!(*p, producer, "rank {rank} names its counterpart producer");
+                assert_eq!(*stage, 0, "rank {rank} names the producing stage");
+                assert_eq!(timeout.seen, 0, "rank {rank}: the hand-off never arrived");
+            }
+            other => panic!("expected StageStarved on rank {rank}, got {other:?}"),
+        }
+        let msg = outcomes[rank].as_ref().unwrap_err().to_string();
+        assert!(msg.contains("stage hand-off starved"), "{msg}");
+        assert!(msg.contains(&format!("rank {producer} (stage 0)")), "{msg}");
+    }
+    // the node-level policy surfaces the starved hand-off, not the cascade
+    match collect_node_outcomes(outcomes) {
+        Err(IrisError::StageStarved { producer: 0, stage: 0, .. }) => {}
+        other => panic!("node outcome must be the StageStarved root cause, got {other:?}"),
+    }
+}
+
+#[test]
 fn hierarchical_allreduce_on_mismatched_heap_shape_reports_invalid_layout() {
     // regression (satellite fix): a heap whose hierarchical staging was
     // declared for a DIFFERENT node shape (same world!) used to starve

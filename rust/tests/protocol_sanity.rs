@@ -24,7 +24,7 @@ use std::time::Duration;
 
 use taxfree::analysis::drivers::{
     sanitize_ag_gemm, sanitize_flash_decode, sanitize_gemm_rs, sanitize_hier_allreduce,
-    sanitize_kv_swap, sanitize_serve_exchange,
+    sanitize_kv_swap, sanitize_serve_exchange, sanitize_stage_pipeline,
 };
 use taxfree::analysis::{hb, FindingClass, Report};
 use taxfree::coordinator::ag_gemm::AgGemmStrategy;
@@ -118,6 +118,20 @@ fn serve_fused_exchange_rows_is_race_free() {
         );
         let r = sanitize_serve_exchange(&topo, 11, rows, 5);
         assert_clean(&name, &r);
+    }
+}
+
+#[test]
+fn stage_pipeline_is_race_free() {
+    // the TP×PP serving path under the checker: stage-confined fused
+    // exchanges, counterpart+relay forward hand-offs, and the last
+    // stage's loop-back broadcast over {2, 4}-stage fabrics. Three fused
+    // microbatches (a ragged prefill chunk, then decode steps) with no
+    // barrier, so the boundary slots' parity reuse across microbatches
+    // must be ordered by real happens-before edges to replay clean.
+    for (stages, g) in [(2usize, 2usize), (2, 4), (4, 2)] {
+        let r = sanitize_stage_pipeline(stages, g, 3);
+        assert_clean(&format!("stage_pipeline/{stages}x{g}"), &r);
     }
 }
 
@@ -454,7 +468,59 @@ fn mutation_dropped_chain_signal_is_flagged_as_unsatisfied_wait() {
     assert!(msg.contains("nobody signaled"), "{msg}");
 }
 
-/// Mutation 8 — **premature relay read**: the remote node's
+/// Mutation 8 — **dropped stage hand-off signal**: the stage-0 producer
+/// pushes its activation segment into its stage-1 counterpart's forward
+/// slot but the publishing boundary signal is deleted, so the consumer's
+/// hand-off wait starves — the TP×PP stage-boundary bug. The starvation
+/// must surface as a typed timeout naming the hand-off cell *and* as an
+/// unsatisfied-wait finding.
+#[test]
+fn mutation_dropped_stage_handoff_signal_is_flagged_as_unsatisfied_wait() {
+    // two single-GPU stages: rank 0 is stage 0's producer, rank 1 the
+    // stage-1 consumer of its forwarded activation segment
+    let heap = Arc::new(
+        HeapBuilder::new(2)
+            .topology(Topology::hierarchical(2, 1))
+            .buffer("stage_fwd", 8)
+            .flags("stage_fwd_ready", 1)
+            .build()
+            .expect("heap"),
+    );
+    heap.enable_sanitizer();
+    let outs = run_node_with_timeout(
+        Arc::clone(&heap),
+        Duration::from_millis(150),
+        move |ctx| -> Result<(), IrisError> {
+            if ctx.rank() == 0 {
+                // stage 0 finishes its layer range and ships the microbatch
+                ctx.remote_store(1, "stage_fwd", 0, &[2.5; 8])?;
+                // MUTATION: `ctx.signal(1, "stage_fwd_ready", 0)` is deleted
+                Ok(())
+            } else {
+                ctx.wait_flag_ge("stage_fwd_ready", 0, 1)?; // starves
+                let _ = ctx.load_local_vec("stage_fwd", 0, 8)?;
+                Ok(())
+            }
+        },
+    );
+    assert!(outs[0].is_ok());
+    match outs[1].as_ref().expect_err("the starved hand-off wait must time out") {
+        IrisError::Timeout(t) => {
+            assert_eq!(t.flags, "stage_fwd_ready");
+            assert_eq!(t.idx, 0);
+            assert_eq!(t.target, 1);
+            assert_eq!(t.seen, 0);
+        }
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    let r = report_of(&heap);
+    assert_eq!(classes(&r), [FindingClass::UnsatisfiedWait], "{:?}", r.findings);
+    let msg = &r.findings[0].message;
+    assert!(msg.contains("stage_fwd_ready[0] >= 1"), "{msg}");
+    assert!(msg.contains("nobody signaled"), "{msg}");
+}
+
+/// Mutation 9 — **premature relay read**: the remote node's
 /// representative relays the owner's reduced segment to its node-mates
 /// without acquiring the owner's gather signal first. Real-time order
 /// (barrier-sequenced after the owner's NIC push, so the bytes are

@@ -868,3 +868,132 @@ fn hierarchical_serve_exchange_moves_fewer_nic_bytes_in_the_hot_loop() {
         assert_eq!(flat % rounds, 0, "({nn},{g}): flat NIC bytes not round-uniform");
     }
 }
+
+// ---- TP×PP: layers sharded into per-node pipeline stages ----
+
+/// A TP×PP config over `stages` per-node stages of `g`-wide TP cliques,
+/// with the depth raised to `n_layers` so the deep grids stay valid
+/// (every stage must own at least one layer).
+fn pp_grid_cfg(
+    base: fn(usize) -> TransformerConfig,
+    stages: usize,
+    g: usize,
+    n_layers: usize,
+) -> TransformerConfig {
+    let mut cfg = base(stages * g).on_nodes(stages);
+    cfg.pp_stages = stages;
+    cfg.n_layers = n_layers;
+    cfg.validate().expect("valid TP x PP config");
+    cfg
+}
+
+/// Drive one request — chunked batched prefill (ragged tail chunk
+/// included) followed by fused decode steps — through the serving
+/// protocols and return every rank's final hidden state. Shard and
+/// compute follow the TP×PP engine layout: each rank holds the TP shard
+/// of its stage-local clique index (`tp_view` / `tp_local_index`), which
+/// at `pp_stages == 1` is exactly the TP-only layout.
+fn drive_request_all_ranks(cfg: &TransformerConfig, req: Request, seed: u64) -> Vec<Tensor> {
+    let heap = build_serve_heap(cfg);
+    let cfg2 = cfg.clone();
+    run_node(heap, move |ctx| {
+        let rank = ctx.rank();
+        let w = TransformerWeights::random(&cfg2, seed);
+        let compute = NativeCompute::new_tp(cfg2.tp_view(), w, cfg2.tp_local_index(rank));
+        let mut shard =
+            KvShard::for_heads(&cfg2, cfg2.tp_head_partition()[cfg2.tp_local_index(rank)].1);
+        let mut round = 0u64;
+        let mut h: Option<Tensor> = None;
+        let mut p0 = 0;
+        while p0 < req.prompt_len {
+            let m = (req.prompt_len - p0).min(cfg2.prefill_chunk);
+            let rows = prompt_embeddings(&cfg2, req.id as u64, p0, m);
+            let out = prefill_step_fused(&ctx, &cfg2, &compute, &mut shard, &rows, &mut round)
+                .expect("prefill chunk");
+            h = Some(out.rows(m - 1, m));
+            p0 += m;
+        }
+        let mut h = h.expect("non-empty prompt");
+        for t in 0..req.gen_len {
+            let owner = (req.prompt_len + t) % cfg2.world;
+            h = decode_step_fused(&ctx, &cfg2, &compute, &mut shard, &h, owner, &mut round)
+                .expect("decode step");
+        }
+        h
+    })
+}
+
+#[test]
+fn tp_pp_pipeline_bitwise_equals_tp_only() {
+    // the tentpole acceptance criterion: for (nodes, gpus_per_node,
+    // stages) grids — stages mapping one-to-one onto nodes — and ragged
+    // prompt lengths, the layer-sharded TP×PP pipeline (stage-local TP
+    // exchanges, microbatch hand-offs across the stage boundaries, final
+    // loop-back broadcast) must hand EVERY rank the exact bits a TP-only
+    // clique of the stage width produces: same per-stage exchange
+    // association, same f32 fold order, boundary hand-offs moving rows
+    // untouched
+    let seed = 9300;
+    let n_layers = 5; // deepest grid has 4 stages; partition(5, 4) is ragged
+    for (stages, g) in [(2usize, 2usize), (2, 4), (4, 2)] {
+        for base in [
+            TransformerConfig::tiny as fn(usize) -> TransformerConfig,
+            TransformerConfig::tiny_ragged,
+        ] {
+            let pp = pp_grid_cfg(base, stages, g, n_layers);
+            let mut tp = base(g);
+            tp.n_layers = n_layers;
+            tp.validate().expect("valid TP reference");
+            for (prompt_len, gen_len) in [(1usize, 3usize), (7, 3)] {
+                let req = Request { id: 2, prompt_len, gen_len };
+                let pp_outs = drive_request_all_ranks(&pp, req.clone(), seed);
+                let tp_outs = drive_request_all_ranks(&tp, req, seed);
+                for (r, t) in tp_outs.iter().enumerate() {
+                    assert_eq!(t, &tp_outs[0], "TP-only ranks disagree at rank {r}");
+                }
+                for (rank, out) in pp_outs.iter().enumerate() {
+                    assert_eq!(
+                        out, &tp_outs[0],
+                        "({stages} stages x {g}-wide) M {prompt_len} rank {rank}: TP x PP \
+                         must be bitwise-equal to TP-only at the stage width"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tp_pp_pipeline_matches_token_by_token_oracle() {
+    // semantic anchor for the bitwise grid above: the pipelined request
+    // must also track the single-process token-by-token decoder within
+    // float tolerance (ties the stage hand-off plumbing to the model)
+    let seed = 9301;
+    let pp = pp_grid_cfg(TransformerConfig::tiny_ragged, 2, 2, 5);
+    let req = Request { id: 4, prompt_len: 7, gen_len: 3 };
+    let outs = drive_request_all_ranks(&pp, req.clone(), seed);
+    let mut cfg_ref = TransformerConfig::tiny_ragged(2);
+    cfg_ref.n_layers = 5;
+    let mut dec = ReferenceDecoder::new(
+        cfg_ref.clone(),
+        NativeCompute::new(cfg_ref.clone(), TransformerWeights::random(&cfg_ref, seed)),
+    );
+    let expect = dec.run_request(req.id as u64, req.prompt_len, req.gen_len);
+    for out in &outs {
+        out.assert_allclose(&expect, 1e-3, 1e-3);
+    }
+}
+
+#[test]
+fn tp_only_default_is_unchanged_by_the_pp_fields() {
+    // pp_stages = 1 regression guard: a config that never opts into
+    // pipelining must produce the exact bits of the pre-PP layout — the
+    // TP view IS the config and the local index IS the rank
+    let cfg = TransformerConfig::tiny(2);
+    assert_eq!(cfg.tp_view().world, cfg.world);
+    assert_eq!(cfg.tp_local_index(1), 1);
+    let req = Request { id: 5, prompt_len: 5, gen_len: 2 };
+    let a = drive_request_all_ranks(&cfg, req.clone(), 9302);
+    let b = drive_request_all_ranks(&cfg, req, 9302);
+    assert_eq!(a, b, "TP-only serving must stay deterministic");
+}

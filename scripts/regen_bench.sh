@@ -13,5 +13,7 @@ cargo run --release --quiet -- experiments batch_decode \
     --iters 1 --seed 7 --set hw.skew_sigma=0 --json BENCH_batch_decode.json
 cargo run --release --quiet -- experiments multinode \
     --iters 1 --seed 7 --set hw.skew_sigma=0 --json BENCH_multinode.json
+cargo run --release --quiet -- experiments pipeline \
+    --iters 1 --seed 7 --set hw.skew_sigma=0 --json BENCH_pipeline.json
 cargo run --release --quiet -- experiments serve_slo \
     --iters 1 --seed 7 --set hw.skew_sigma=0 --json BENCH_serve_slo.json
